@@ -1,0 +1,44 @@
+//! Bench/repro target for **Fig. 1**: pedestrian dataset, τ vs number
+//! of edge nodes K for T = 30 and 60 s, all four schemes.
+//!
+//! Prints the figure's series (the reproduction) and then times the
+//! underlying solve for each K (the bench).
+//!
+//! ```bash
+//! cargo bench --bench fig1_pedestrian_vs_k
+//! ```
+
+use mel::alloc::Policy;
+use mel::benchkit::{group, Bencher};
+use mel::experiments;
+use mel::scenario::{CloudletConfig, Scenario};
+
+fn main() {
+    let seed = 42;
+    group("Fig. 1 — pedestrian: tau vs K (T = 30, 60 s)");
+    let data = experiments::fig1(seed);
+    print!("{}", data.table().render());
+
+    // paper-vs-ours anchors
+    let ana30 = data.series_by_prefix("UB-Analytical T=30").unwrap();
+    let eta30 = data.series_by_prefix("ETA T=30").unwrap();
+    println!(
+        "anchor K=50 T=30s: ETA {} vs adaptive {} (paper: 36 vs 162) → gain {:.1}x (paper 4.5x)\n",
+        eta30[9],
+        ana30[9],
+        ana30[9] as f64 / eta30[9] as f64
+    );
+
+    group("solve-time per (K, policy) point");
+    let b = Bencher::default();
+    for &k in &[5usize, 20, 50] {
+        let scenario = Scenario::random_cloudlet(&CloudletConfig::pedestrian(k), seed);
+        let problem = scenario.problem(30.0);
+        for policy in Policy::all() {
+            let alloc = policy.allocator();
+            b.run(&format!("fig1 K={k} {}", policy.label()), || {
+                alloc.allocate(&problem).unwrap().tau
+            });
+        }
+    }
+}

@@ -1,0 +1,47 @@
+//! Bench/repro target for **Fig. 2**: pedestrian dataset, τ vs global
+//! cycle clock T for K = 5, 10, 20.
+//!
+//! ```bash
+//! cargo bench --bench fig2_pedestrian_vs_t
+//! ```
+
+use mel::alloc::Policy;
+use mel::benchkit::{group, Bencher};
+use mel::experiments;
+use mel::scenario::{CloudletConfig, Scenario};
+
+fn main() {
+    let seed = 42;
+    group("Fig. 2 — pedestrian: tau vs T (K = 5, 10, 20)");
+    let data = experiments::fig2(seed);
+    print!("{}", data.table().render());
+
+    let ana = data.series_by_prefix("UB-Analytical K=20").unwrap();
+    let eta = data.series_by_prefix("ETA K=20").unwrap();
+    // paper: at T=20s adaptive ≈ 4.2x ETA; at T=60s adaptive@20s ≥ ETA@60s
+    let i20 = data.x.iter().position(|&t| t == 20.0).unwrap();
+    let i60 = data.x.iter().position(|&t| t == 60.0).unwrap();
+    println!(
+        "anchor K=20: T=20s ETA {} vs adaptive {} (gain {:.1}x, paper ~4.2x); \
+         adaptive@20s {} ≥ ETA@60s {} → {}\n",
+        eta[i20],
+        ana[i20],
+        ana[i20] as f64 / eta[i20].max(1) as f64,
+        ana[i20],
+        eta[i60],
+        ana[i20] >= eta[i60]
+    );
+
+    group("solve-time per (T, policy) point, K=20");
+    let b = Bencher::default();
+    let scenario = Scenario::random_cloudlet(&CloudletConfig::pedestrian(20), seed);
+    for &t in &[20.0f64, 60.0, 120.0] {
+        let problem = scenario.problem(t);
+        for policy in Policy::all() {
+            let alloc = policy.allocator();
+            b.run(&format!("fig2 T={t} {}", policy.label()), || {
+                alloc.allocate(&problem).unwrap().tau
+            });
+        }
+    }
+}

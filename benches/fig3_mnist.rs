@@ -1,0 +1,40 @@
+//! Bench/repro target for **Fig. 3**: MNIST DNN [784,300,124,60,10].
+//! (a) τ vs K for T = 30, 60 s; (b) τ vs T for K = 10, 20 — plus the
+//! §V-C headline anchor (K=10, T=120 s: ETA 3 vs adaptive 12).
+//!
+//! ```bash
+//! cargo bench --bench fig3_mnist
+//! ```
+
+use mel::alloc::Policy;
+use mel::benchkit::{group, Bencher};
+use mel::experiments;
+use mel::scenario::{CloudletConfig, Scenario};
+
+fn main() {
+    let seed = 42;
+    group("Fig. 3a — MNIST: tau vs K (T = 30, 60 s)");
+    print!("{}", experiments::fig3a(seed).table().render());
+
+    group("Fig. 3b — MNIST: tau vs T (K = 10, 20)");
+    let data = experiments::fig3b(seed);
+    print!("{}", data.table().render());
+
+    let eta = experiments::solve_point("mnist", 10, 120.0, Policy::Eta, seed);
+    let ada = experiments::solve_point("mnist", 10, 120.0, Policy::Numerical, seed);
+    println!(
+        "anchor K=10 T=120s: ETA {eta} vs adaptive {ada} (paper: 3 vs 12) → gain {:.1}x (paper 4.0x)\n",
+        ada as f64 / eta.max(1) as f64
+    );
+
+    group("solve-time per policy, MNIST K=20 T=60s");
+    let b = Bencher::default();
+    let scenario = Scenario::random_cloudlet(&CloudletConfig::mnist(20), seed);
+    let problem = scenario.problem(60.0);
+    for policy in Policy::all() {
+        let alloc = policy.allocator();
+        b.run(&format!("fig3 {}", policy.label()), || {
+            alloc.allocate(&problem).unwrap().tau
+        });
+    }
+}

@@ -1,0 +1,82 @@
+//! Solver scaling bench (our S1 experiment): how each allocation
+//! solver's latency grows with K — the empirical backing for the
+//! paper's "solving a K-th order polynomial may be computationally
+//! expensive for large K" motivation of UB-SAI.
+//!
+//! Fits a power law time ≈ c·K^p per solver and reports p.
+//!
+//! ```bash
+//! cargo bench --bench solvers
+//! ```
+
+use mel::alloc::analytical::{AnalyticalAllocator, RootMethod};
+use mel::alloc::exact::ExactAllocator;
+use mel::alloc::heuristic::UbSaiAllocator;
+use mel::alloc::numerical::{Method, NumericalAllocator};
+use mel::alloc::TaskAllocator;
+use mel::benchkit::{group, Bencher};
+use mel::scenario::{CloudletConfig, Scenario};
+use mel::util::stats::power_fit;
+
+fn main() {
+    let b = Bencher::default();
+    let seed = 42;
+
+    let solvers: Vec<(&str, Box<dyn TaskAllocator>)> = vec![
+        ("eq.21 polynomial (Durand-Kerner)",
+            Box::new(AnalyticalAllocator::with_method(RootMethod::Polynomial))),
+        ("rational form (Newton)",
+            Box::new(AnalyticalAllocator::with_method(RootMethod::Newton))),
+        ("UB-SAI (eq.32 + suggest-and-improve)", Box::new(UbSaiAllocator)),
+        ("numerical bisection", Box::new(NumericalAllocator::with_method(Method::Bisection))),
+        ("numerical alternating",
+            Box::new(NumericalAllocator::with_method(Method::AlternatingFixedPoint))),
+        ("exact integer (binary search)", Box::new(ExactAllocator)),
+    ];
+
+    let ks = [5usize, 10, 20, 40, 80];
+    let mut times: Vec<Vec<f64>> = vec![Vec::new(); solvers.len()];
+
+    for &k in &ks {
+        group(&format!("K = {k} (pedestrian, T = 30 s)"));
+        // scale d with K so the problem stays feasible and comparable
+        let mut cfg = CloudletConfig::pedestrian(k);
+        cfg.dataset.total_samples = 180 * k;
+        let scenario = Scenario::random_cloudlet(&cfg, seed);
+        let problem = scenario.problem(30.0);
+        for (i, (name, solver)) in solvers.iter().enumerate() {
+            // polynomial path overflows beyond K ≈ 100; skip gracefully
+            if *name == "eq.21 polynomial (Durand-Kerner)" && k > 80 {
+                continue;
+            }
+            let r = b.run(&format!("{name} K={k}"), || solver.allocate(&problem).unwrap().tau);
+            times[i].push(r.median);
+        }
+    }
+
+    group("scaling exponents (time ~ c*K^p)");
+    let kf: Vec<f64> = ks.iter().map(|&k| k as f64).collect();
+    for (i, (name, _)) in solvers.iter().enumerate() {
+        if times[i].len() == ks.len() {
+            let (_, p, r2) = power_fit(&kf, &times[i]);
+            println!("{name:<42} p = {p:.2}  (r² = {r2:.3})");
+        }
+    }
+    println!(
+        "\nexpected: polynomial ≳ 2 (O(K²) expansion + O(K²)/iter roots), \
+         Newton/SAI/bisection ≈ 1 (O(K) per evaluation)"
+    );
+
+    // consistency: all solvers must produce the same τ at every K
+    group("cross-solver agreement");
+    for &k in &ks {
+        let mut cfg = CloudletConfig::pedestrian(k);
+        cfg.dataset.total_samples = 180 * k;
+        let scenario = Scenario::random_cloudlet(&cfg, seed);
+        let problem = scenario.problem(30.0);
+        let taus: Vec<u64> =
+            solvers.iter().map(|(_, s)| s.allocate(&problem).unwrap().tau).collect();
+        assert!(taus.windows(2).all(|w| w[0] == w[1]), "K={k}: {taus:?}");
+        println!("K={k}: all 6 solvers agree at tau = {}", taus[0]);
+    }
+}

@@ -1,0 +1,124 @@
+//! End-to-end MEL training driver — the full three-layer stack on a
+//! real workload:
+//!
+//! * **L3** Rust orchestrator: adaptive allocation, simulated wireless
+//!   cloudlet, thread fan-out, eq. (5) aggregation, metrics.
+//! * **L2/L1** real compute: every local SGD iteration executes the
+//!   JAX+Pallas `grad_step` artifact through PJRT.
+//!
+//! Trains the pedestrian classifier on a synthetic pedestrian-shaped
+//! dataset under **the same simulated time budget** for the adaptive
+//! (UB-Analytical) and ETA policies, and writes both loss curves —
+//! the learning-accuracy-within-deadline story of the paper, measured
+//! rather than argued.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example e2e_train
+//! # options: -- --cycles 40 --k 4 --d 1024 --t 4 --lr 0.3 --out results/
+//! ```
+
+use mel::alloc::Policy;
+use mel::coordinator::{Orchestrator, TrainConfig};
+use mel::scenario::{CloudletConfig, Scenario};
+use mel::util::cli::Args;
+use mel::util::table::{fnum, Table};
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::parse();
+    let k = args.get_usize("k", 4);
+    let d = args.get_usize("d", 1024);
+    let t_total = args.get_f64("t", 4.0);
+    let cycles = args.get_usize("cycles", 30);
+    let lr = args.get_f64("lr", 0.05) as f32;
+    let seed = args.get_u64("seed", 42);
+    let out_dir = args.get_str("out", "results").to_string();
+
+    println!(
+        "e2e MEL training: K={k} learners, d={d} samples/cycle, T={t_total}s, \
+         {cycles} global cycles, lr={lr}\n"
+    );
+
+    let mut curves = Vec::new();
+    let mut summary = Table::new(&[
+        "policy", "tau", "final loss", "final acc", "cycles", "sim time", "wall compute",
+    ]);
+
+    for policy in [Policy::Analytical, Policy::Eta] {
+        let mut scenario = Scenario::random_cloudlet(&CloudletConfig::pedestrian(k), seed);
+        scenario.dataset.total_samples = d;
+        let cfg = TrainConfig {
+            policy,
+            t_total,
+            cycles,
+            lr,
+            seed,
+            eval_samples: 512,
+            artifact_dir: args.get_str("artifacts", "artifacts").to_string(),
+            reallocate_each_cycle: false,
+            dispatch_threads: k,
+        shadow_sigma_db: 0.0,
+        rayleigh: false,
+        drop_stragglers: false,
+        };
+        let mut orch = Orchestrator::new(scenario, cfg)?;
+        let (loss0, acc0) = orch.evaluate()?;
+        println!("[{}] initial loss {:.4}, accuracy {:.3}", policy.label(), loss0, acc0);
+        let outcomes = orch.train()?;
+        let last = outcomes.last().unwrap();
+        let wall: f64 = outcomes.iter().map(|o| o.wall_compute_s).sum();
+        println!(
+            "[{}] τ={} per cycle → final loss {:.4}, accuracy {:.3} \
+             (simulated {:.0}s, wall compute {:.1}s)\n",
+            policy.label(),
+            last.tau,
+            last.loss,
+            last.accuracy,
+            orch.sim_time(),
+            wall
+        );
+        summary.row(vec![
+            policy.label().into(),
+            last.tau.to_string(),
+            fnum(last.loss, 4),
+            fnum(last.accuracy, 3),
+            outcomes.len().to_string(),
+            format!("{:.0}s", orch.sim_time()),
+            format!("{wall:.1}s"),
+        ]);
+        curves.push((policy.label(), orch.metrics.series("loss_vs_simtime")));
+    }
+
+    print!("{}", summary.render());
+
+    // side-by-side loss curve table (same simulated-time grid)
+    let mut curve_table = Table::new(&["sim time (s)", "loss (adaptive)", "loss (ETA)"])
+        .title("\nloss vs simulated time — adaptive vs ETA under the same deadline budget");
+    let (a, e) = (&curves[0].1, &curves[1].1);
+    for i in 0..a.len().min(e.len()) {
+        curve_table.row(vec![
+            fnum(a[i].0, 0),
+            fnum(a[i].1, 4),
+            fnum(e[i].1, 4),
+        ]);
+    }
+    print!("{}", curve_table.render());
+
+    // verdict + persistence
+    let (fa, fe) = (a.last().unwrap().1, e.last().unwrap().1);
+    println!(
+        "\nWithin the same simulated budget the adaptive policy reaches loss {:.4} \
+         vs ETA {:.4} ({}).",
+        fa,
+        fe,
+        if fa < fe { "adaptive wins — more local iterations per cycle" } else { "tie" }
+    );
+    std::fs::create_dir_all(&out_dir)?;
+    let mut csv = String::from("sim_s,loss_adaptive,loss_eta\n");
+    for i in 0..a.len().min(e.len()) {
+        csv.push_str(&format!("{},{},{}\n", a[i].0, a[i].1, e[i].1));
+    }
+    let path = format!("{out_dir}/e2e_loss_curves.csv");
+    std::fs::write(&path, csv)?;
+    println!("wrote {path}");
+    Ok(())
+}

@@ -1,0 +1,88 @@
+//! Heterogeneous-pool study — the paper's future-work axes exercised
+//! together: **node selection** and **energy**.
+//!
+//! A cloudlet accumulates progressively worse stragglers (far-away,
+//! underclocked IoT nodes). For each pool size we compare:
+//! * naive all-in ETA (what [12]/[13] would do),
+//! * ETA with greedy node triage (`alloc::selection::best_eta_subset`),
+//! * adaptive allocation on the full pool (no triage needed — τ is
+//!   monotone in enrolment),
+//! and report τ, per-cycle energy, and energy per unit of learning work.
+//!
+//! ```bash
+//! cargo run --release --example heterogeneous_pool [-- --seed 7]
+//! ```
+
+use mel::alloc::selection::{adaptive_full_pool, best_eta_subset, subproblem};
+use mel::alloc::{eta::EtaAllocator, Policy, TaskAllocator as _};
+use mel::channel::Link;
+use mel::compute::ComputeProfile;
+use mel::energy::{cycle_energy, DEFAULT_KAPPA};
+use mel::learner::Learner;
+use mel::scenario::{CloudletConfig, Scenario};
+use mel::util::cli::Args;
+use mel::util::table::{fnum, Table};
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::parse();
+    let seed = args.get_u64("seed", 42);
+    let t_total = args.get_f64("t", 30.0);
+
+    // base cloudlet: 8 healthy nodes
+    let mut scenario = Scenario::random_cloudlet(&CloudletConfig::pedestrian(8), seed);
+
+    let mut table = Table::new(&[
+        "stragglers",
+        "ETA all-in tau",
+        "ETA triaged tau (kept)",
+        "adaptive tau",
+        "adaptive J/cycle",
+        "adaptive mJ/work",
+    ]);
+
+    for stragglers in 0..=4usize {
+        if stragglers > 0 {
+            // append one far, slow IoT node (100 m out, 200 MHz @ 0.25 fpc)
+            let id = scenario.learners.len();
+            scenario.learners.push(Learner::new(
+                id,
+                "iot-straggler",
+                ComputeProfile::custom(200e6, 0.25),
+                Link::at_distance(100.0),
+            ));
+        }
+        let problem = scenario.problem(t_total);
+
+        let eta_all = EtaAllocator.allocate(&problem).map(|a| a.tau).unwrap_or(0);
+        let triage = best_eta_subset(&problem)?;
+        let ada = adaptive_full_pool(&problem)?;
+        let alloc = Policy::Analytical.allocator().allocate(&problem)?;
+        let energy = cycle_energy(&scenario.learners, &scenario.model, &alloc, DEFAULT_KAPPA);
+
+        table.row(vec![
+            stragglers.to_string(),
+            if eta_all == 0 { "infeasible".into() } else { eta_all.to_string() },
+            format!("{} ({}/{})", triage.tau, triage.enrolled.len(), problem.k()),
+            ada.tau.to_string(),
+            fnum(energy.grand_total(), 1),
+            fnum(1e3 * energy.joules_per_sample_iteration(&alloc), 3),
+        ]);
+
+        // invariant the module proves: triage never helps the adaptive policy
+        let sub = subproblem(&problem, &triage.enrolled);
+        let ada_triaged = Policy::Analytical.allocator().allocate(&sub)?;
+        assert!(ada.tau >= ada_triaged.tau);
+    }
+
+    println!(
+        "pool study: pedestrian task, T={t_total}s, 8 healthy nodes + N stragglers \
+         (200 MHz IoT @ 100 m)\n"
+    );
+    print!("{}", table.render());
+    println!(
+        "\nETA needs node triage to survive stragglers; the adaptive allocator \
+         absorbs them (monotone in enrolment) and even extracts a few extra \
+         iterations from each straggler's spare capacity."
+    );
+    Ok(())
+}

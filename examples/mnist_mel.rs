@@ -1,0 +1,79 @@
+//! MNIST MEL study (the paper's §V-C workload): the deep model
+//! [784,300,124,60,10] over a 60,000-sample dataset.
+//!
+//! Reproduces the Fig-3 series, then runs the paper's K=10, T=120 s
+//! headline point (ETA τ=3 vs adaptive τ=12) through the *discrete-event
+//! simulator*, printing the cycle timeline that explains the difference.
+//!
+//! ```bash
+//! cargo run --release --example mnist_mel [-- --seed 7]
+//! ```
+
+use mel::alloc::Policy;
+use mel::experiments;
+use mel::scenario::{CloudletConfig, Scenario};
+use mel::sim::{CycleSim, Phase};
+use mel::util::cli::Args;
+use mel::util::table::{fnum, Table};
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::parse();
+    let seed = args.get_u64("seed", 42);
+
+    // ---- Fig 3a / 3b series ----------------------------------------------
+    println!("{}", experiments::fig3a(seed).table().render());
+    println!("{}", experiments::fig3b(seed).table().render());
+
+    // ---- the §V-C headline point -----------------------------------------
+    let scenario = Scenario::random_cloudlet(&CloudletConfig::mnist(10), seed);
+    let problem = scenario.problem(120.0);
+    println!("\nheadline point: MNIST, K=10, T=120s (paper: ETA 3 vs adaptive 12)\n");
+
+    for policy in [Policy::Eta, Policy::Numerical] {
+        let alloc = policy.allocator().allocate(&problem)?;
+        let sim = CycleSim::from_problem(&problem);
+        let report = sim.run_cycle(&alloc, true);
+
+        println!(
+            "{}: τ = {}, makespan = {:.1}s / {}s",
+            policy.label(),
+            alloc.tau,
+            report.makespan,
+            problem.t_total
+        );
+        // compress the timeline into per-learner phase summaries
+        let mut t = Table::new(&["learner", "d_k", "send end", "last iter", "receive end", "idle s"]);
+        for k in 0..scenario.k() {
+            let send_end = report
+                .timeline
+                .iter()
+                .find(|e| e.1 == k && e.2 == Phase::SendEnd)
+                .map(|e| e.0)
+                .unwrap_or(0.0);
+            let last_iter = report
+                .timeline
+                .iter()
+                .filter(|e| e.1 == k && matches!(e.2, Phase::IterationDone(_)))
+                .map(|e| e.0)
+                .fold(0.0, f64::max);
+            let recv = report.completion[k];
+            t.row(vec![
+                k.to_string(),
+                alloc.batches[k].to_string(),
+                fnum(send_end, 1),
+                fnum(last_iter, 1),
+                fnum(recv, 1),
+                fnum(problem.t_total - recv, 1),
+            ]);
+        }
+        print!("{}", t.render());
+        println!();
+    }
+
+    println!(
+        "ETA parks the laptop-class nodes after ~1/7 of the cycle; the adaptive \
+         allocation shifts ~6x more samples onto them so every learner finishes \
+         within seconds of the deadline."
+    );
+    Ok(())
+}

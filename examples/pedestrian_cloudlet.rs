@@ -1,0 +1,88 @@
+//! Pedestrian-detection cloudlet study (the paper's §V-B workload):
+//! sweep the cloudlet size and clock, print Fig-1/Fig-2-style series,
+//! and drill into *why* adaptive wins — per-learner batch shares and
+//! utilization for one representative scenario, plus channel-fading
+//! robustness (an extension beyond the paper's static channels).
+//!
+//! ```bash
+//! cargo run --release --example pedestrian_cloudlet [-- --seed 7]
+//! ```
+
+use mel::alloc::Policy;
+use mel::experiments;
+use mel::scenario::{CloudletConfig, Scenario};
+use mel::sim::CycleSim;
+use mel::util::cli::Args;
+use mel::util::rng::Pcg64;
+use mel::util::table::{fnum, Table};
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::parse();
+    let seed = args.get_u64("seed", 42);
+
+    // ---- Fig 1 / Fig 2 series ------------------------------------------
+    println!("{}", experiments::fig1(seed).table().render());
+    println!("{}", experiments::fig2(seed).table().render());
+
+    // ---- anatomy of one decision ----------------------------------------
+    let scenario = Scenario::random_cloudlet(&CloudletConfig::pedestrian(8), seed);
+    let problem = scenario.problem(30.0);
+    let ada = Policy::Analytical.allocator().allocate(&problem)?;
+    let eta = Policy::Eta.allocator().allocate(&problem)?;
+    let sim = CycleSim::from_problem(&problem);
+    let (u_ada, u_eta) = (sim.compute_utilization(&ada), sim.compute_utilization(&eta));
+
+    let mut t = Table::new(&[
+        "learner", "class", "dist(m)", "d_k (ETA)", "util% (ETA)", "d_k (adaptive)",
+        "util% (adaptive)",
+    ])
+    .title("\nWhy adaptive wins: per-learner anatomy (K=8, T=30s)");
+    for (k, l) in scenario.learners.iter().enumerate() {
+        t.row(vec![
+            k.to_string(),
+            l.class.clone(),
+            fnum(l.link.distance_m, 0),
+            eta.batches[k].to_string(),
+            fnum(100.0 * u_eta[k], 0),
+            ada.batches[k].to_string(),
+            fnum(100.0 * u_ada[k], 0),
+        ]);
+    }
+    print!("{}", t.render());
+    println!(
+        "ETA leaves the laptops idle {}% of the cycle; adaptive fills them → τ {} vs {}.\n",
+        fnum(100.0 * (1.0 - u_eta.iter().cloned().fold(1.0f64, f64::min)), 0),
+        ada.tau,
+        eta.tau
+    );
+
+    // ---- fading robustness (extension) -----------------------------------
+    // Redraw Rayleigh fading each cycle and re-solve: how stable is τ?
+    let mut cfg = CloudletConfig::pedestrian(10);
+    cfg.channel.rayleigh = true;
+    cfg.channel.shadow_sigma_db = 3.0;
+    let mut s = Scenario::random_cloudlet(&cfg, seed);
+    let mut rng = Pcg64::seeded(seed ^ 0xFAD);
+    let mut taus = Vec::new();
+    for _ in 0..30 {
+        s.redraw_fading(&cfg.channel, &mut rng);
+        let p = s.problem(30.0);
+        taus.push(
+            Policy::UbSai.allocator().allocate(&p).map(|a| a.tau).unwrap_or(0) as f64,
+        );
+    }
+    let mut w = mel::util::stats::Welford::new();
+    for &t in &taus {
+        w.push(t);
+    }
+    println!(
+        "Per-cycle re-allocation under Rayleigh+shadowing (30 cycles): \
+         τ mean {:.1}, std {:.1}, min {:.0}, max {:.0}",
+        w.mean(),
+        w.std(),
+        w.min(),
+        w.max()
+    );
+    println!("(re-solving each cycle keeps every cycle feasible despite fading)");
+    Ok(())
+}

@@ -1,0 +1,132 @@
+"""AOT lowering: JAX/Pallas → HLO text artifacts for the Rust runtime.
+
+Lowers ``grad_step`` and ``eval_batch`` for every (architecture × batch
+bucket) to ``artifacts/<name>.hlo.txt`` plus a ``manifest.json`` the Rust
+``runtime::ArtifactStore`` consumes (tensor order, shapes, dtypes).
+
+Interchange is HLO **text**, not serialized HloModuleProto: jax ≥ 0.5
+emits protos with 64-bit instruction ids that the crate-side XLA
+(xla_extension 0.5.1) rejects; the text parser reassigns ids and
+round-trips cleanly. Lowered with ``return_tuple=True`` — the Rust side
+unwraps the tuple.
+
+Run via ``make artifacts``:  ``cd python && python -m compile.aot --out-dir ../artifacts``
+"""
+
+import argparse
+import hashlib
+import json
+import os
+from typing import List
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+# Batch buckets lowered per architecture. The runtime picks the smallest
+# bucket ≥ remaining chunk and pads with mask=0 rows; 64→256 keeps padding
+# waste < 50% for any d_k ≥ 64 while bounding artifact count.
+BUCKETS = (64, 128, 256)
+FUNCTIONS = ("grad_step", "eval_batch")
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO MLIR → XlaComputation → HLO text (see module docstring)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _tensor_meta(shapes_dtypes) -> List[dict]:
+    return [
+        {"shape": list(map(int, s)), "dtype": str(d)} for (s, d) in shapes_dtypes
+    ]
+
+
+def _param_specs(layers):
+    specs = []
+    for (wshape, bshape) in model.layer_shapes(layers):
+        specs.append(jax.ShapeDtypeStruct(wshape, jnp.float32))
+        specs.append(jax.ShapeDtypeStruct(bshape, jnp.float32))
+    return specs
+
+
+def lower_artifact(arch: str, layers, fn_name: str, bucket: int):
+    """Lower one (arch, fn, bucket) to HLO text; returns (text, meta)."""
+    params = _param_specs(layers)
+    x = jax.ShapeDtypeStruct((bucket, layers[0]), jnp.float32)
+    y = jax.ShapeDtypeStruct((bucket,), jnp.int32)
+    mask = jax.ShapeDtypeStruct((bucket,), jnp.float32)
+
+    if fn_name == "grad_step":
+        def fn(*args):
+            p, (xx, yy, mm) = list(args[:-3]), args[-3:]
+            return model.grad_step(p, xx, yy, mm)
+        out_meta = [(p.shape, p.dtype) for p in params] + [((), "float32"), ((), "float32")]
+    elif fn_name == "eval_batch":
+        def fn(*args):
+            p, (xx, yy, mm) = list(args[:-3]), args[-3:]
+            return model.eval_batch(p, xx, yy, mm)
+        out_meta = [((), "float32"), ((), "float32"), ((), "float32")]
+    else:
+        raise ValueError(fn_name)
+
+    lowered = jax.jit(fn).lower(*params, x, y, mask)
+    text = to_hlo_text(lowered)
+    meta = {
+        "arch": arch,
+        "layers": list(layers),
+        "function": fn_name,
+        "bucket": bucket,
+        "inputs": _tensor_meta(
+            [(p.shape, p.dtype) for p in params]
+            + [(x.shape, x.dtype), (y.shape, y.dtype), (mask.shape, mask.dtype)]
+        ),
+        "outputs": _tensor_meta(out_meta),
+        "param_tensors": len(params),
+        "hidden_activation": model.HIDDEN_ACT,
+    }
+    return text, meta
+
+
+def build(out_dir: str, archs=None, buckets=BUCKETS, functions=FUNCTIONS) -> dict:
+    os.makedirs(out_dir, exist_ok=True)
+    archs = archs or list(model.ARCHS)
+    manifest = {"format": 1, "artifacts": []}
+    for arch in archs:
+        layers = model.ARCHS[arch]
+        for fn_name in functions:
+            for bucket in buckets:
+                name = f"{arch}_{fn_name}_b{bucket}"
+                path = os.path.join(out_dir, f"{name}.hlo.txt")
+                text, meta = lower_artifact(arch, layers, fn_name, bucket)
+                with open(path, "w") as f:
+                    f.write(text)
+                meta["name"] = name
+                meta["file"] = f"{name}.hlo.txt"
+                meta["sha256"] = hashlib.sha256(text.encode()).hexdigest()
+                manifest["artifacts"].append(meta)
+                print(f"  wrote {path}  ({len(text) / 1e6:.2f} MB)")
+    mpath = os.path.join(out_dir, "manifest.json")
+    with open(mpath, "w") as f:
+        json.dump(manifest, f, indent=1, sort_keys=True)
+    print(f"  wrote {mpath} ({len(manifest['artifacts'])} artifacts)")
+    return manifest
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--arch", action="append", help="subset of archs to build")
+    ap.add_argument("--buckets", default=",".join(map(str, BUCKETS)))
+    args = ap.parse_args()
+    buckets = tuple(int(b) for b in args.buckets.split(","))
+    build(args.out_dir, archs=args.arch, buckets=buckets)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,214 @@
+"""L1 — Pallas kernels for the MEL learner hot path.
+
+The compute hot-spot of a MEL local iteration is the dense fwd/bwd of the
+paper's MLPs (pedestrian 648-300-2, MNIST 784-300-124-60-10). We express
+it as tiled Pallas kernels:
+
+* ``fused_dense`` — ``activate(x @ w + b)`` with the bias-add and
+  activation fused into the matmul epilogue.
+* ``matmul`` — plain tiled matmul, used by the custom backward pass
+  (dx = gz @ w.T, dw = x.T @ gz).
+
+Tiling / hardware adaptation (see DESIGN.md §Hardware-Adaptation): the
+grid is (M/bm, N/bn); each grid step keeps an (bm, K) LHS tile, a (K, bn)
+RHS tile and an (bm, bn) accumulator resident in VMEM. K is not tiled —
+the paper's reduction dims (≤ 784) fit comfortably: worst-case VMEM
+footprint at bm=bn=128, K=784 is (128·784 + 784·128 + 128·128)·4 B ≈
+0.83 MiB, far below the ~16 MiB VMEM budget. Tiles are MXU-shaped
+(multiples of 128 where the problem allows). On CPU we must lower with
+``interpret=True`` (real TPU lowering emits Mosaic custom-calls the CPU
+PJRT plugin cannot execute), so these kernels are *structurally* TPU
+kernels validated numerically on CPU.
+
+Autodiff: ``pallas_call`` has no VJP in interpret mode, so
+``fused_dense`` carries a ``jax.custom_vjp`` whose backward pass is itself
+built from the Pallas ``matmul`` kernel — the whole fwd/bwd path lowers to
+Pallas, and the L2 model can just ``jax.grad`` through it.
+"""
+
+import functools
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import ref
+
+__all__ = ["fused_dense", "matmul", "dense", "DEFAULT_BLOCK_M", "DEFAULT_BLOCK_N"]
+
+# MXU-shaped default tiles (multiples of the 128×128 systolic array).
+#
+# Perf note (EXPERIMENTS.md §Perf/L1): 128×128 tiles keep VMEM minimal
+# but serialize the interpret-mode grid loop (e.g. the 648×256·256×300
+# dW matmul becomes an 18-step sequential grid). 512×512 tiles still fit
+# the VMEM budget with slack — worst case here is
+# (512·784 + 784·512 + 512·512)·4 B ≈ 3.3 MiB of the ~16 MiB budget —
+# while collapsing most grids to a single step: measured 1.9× faster
+# grad_step at bucket 256 on the CPU-interpret path, and structurally
+# better MXU occupancy (fewer, larger systolic passes) on real TPU.
+DEFAULT_BLOCK_M = 512
+DEFAULT_BLOCK_N = 512
+
+
+def _round_up(x: int, m: int) -> int:
+    return ((x + m - 1) // m) * m
+
+
+def _pad2(a, rows: int, cols: int):
+    """Zero-pad a 2-D array up to (rows, cols)."""
+    pr, pc = rows - a.shape[0], cols - a.shape[1]
+    if pr == 0 and pc == 0:
+        return a
+    return jnp.pad(a, ((0, pr), (0, pc)))
+
+
+# ---------------------------------------------------------------------------
+# fused dense: activate(x @ w + b)
+# ---------------------------------------------------------------------------
+
+
+def _fused_dense_kernel(x_ref, w_ref, b_ref, o_ref, *, activation: str):
+    """One (bm, bn) output tile: full-K contraction + bias + activation.
+
+    x_ref: (bm, K) VMEM tile, w_ref: (K, bn), b_ref: (1, bn), o_ref: (bm, bn).
+    The contraction accumulates in f32 regardless of input dtype (MXU
+    accumulates in f32 for bf16 inputs; we mirror that numerically).
+    """
+    acc = jnp.dot(
+        x_ref[...].astype(jnp.float32),
+        w_ref[...].astype(jnp.float32),
+        preferred_element_type=jnp.float32,
+    )
+    acc = acc + b_ref[...].astype(jnp.float32)
+    o_ref[...] = ref.activate(acc, activation).astype(o_ref.dtype)
+
+
+@partial(jax.jit, static_argnames=("activation", "block_m", "block_n", "interpret"))
+def fused_dense(
+    x,
+    w,
+    b,
+    activation: str = "linear",
+    *,
+    block_m: int = DEFAULT_BLOCK_M,
+    block_n: int = DEFAULT_BLOCK_N,
+    interpret: bool = True,
+):
+    """Fused dense layer ``activate(x @ w + b)`` as a tiled Pallas kernel.
+
+    Inputs of any (M, K) x (K, N) shape are zero-padded up to the tile
+    grid and the (M, N) result is sliced back out; zero-padding is exact
+    for the matmul+bias (padded rows/cols produce garbage only in padded
+    output slots that are discarded).
+    """
+    m, k = x.shape
+    k2, n = w.shape
+    assert k == k2, f"contraction mismatch {x.shape} @ {w.shape}"
+    assert b.shape == (n,), f"bias shape {b.shape} != ({n},)"
+    out_dtype = jnp.result_type(x.dtype, w.dtype)
+
+    bm = min(block_m, _round_up(m, 8))
+    bn = min(block_n, _round_up(n, 8))
+    mp, np_ = _round_up(m, bm), _round_up(n, bn)
+
+    xp = _pad2(x, mp, k)
+    wp = _pad2(w, k, np_)
+    bp = jnp.pad(b, (0, np_ - n)).reshape(1, np_)
+
+    grid = (mp // bm, np_ // bn)
+    out = pl.pallas_call(
+        functools.partial(_fused_dense_kernel, activation=activation),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, k), lambda i, j: (i, 0)),
+            pl.BlockSpec((k, bn), lambda i, j: (0, j)),
+            pl.BlockSpec((1, bn), lambda i, j: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mp, np_), out_dtype),
+        interpret=interpret,
+    )(xp, wp, bp)
+    return out[:m, :n]
+
+
+# ---------------------------------------------------------------------------
+# plain matmul (backward-pass building block)
+# ---------------------------------------------------------------------------
+
+
+def _matmul_kernel(a_ref, b_ref, o_ref):
+    o_ref[...] = jnp.dot(
+        a_ref[...].astype(jnp.float32),
+        b_ref[...].astype(jnp.float32),
+        preferred_element_type=jnp.float32,
+    ).astype(o_ref.dtype)
+
+
+@partial(jax.jit, static_argnames=("block_m", "block_n", "interpret"))
+def matmul(
+    a,
+    bmat,
+    *,
+    block_m: int = DEFAULT_BLOCK_M,
+    block_n: int = DEFAULT_BLOCK_N,
+    interpret: bool = True,
+):
+    """Tiled Pallas matmul ``a @ bmat`` with the same padding scheme."""
+    m, k = a.shape
+    k2, n = bmat.shape
+    assert k == k2, f"contraction mismatch {a.shape} @ {bmat.shape}"
+    out_dtype = jnp.result_type(a.dtype, bmat.dtype)
+
+    bm = min(block_m, _round_up(m, 8))
+    bn = min(block_n, _round_up(n, 8))
+    mp, np_ = _round_up(m, bm), _round_up(n, bn)
+
+    ap = _pad2(a, mp, k)
+    bp = _pad2(bmat, k, np_)
+
+    grid = (mp // bm, np_ // bn)
+    out = pl.pallas_call(
+        _matmul_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, k), lambda i, j: (i, 0)),
+            pl.BlockSpec((k, bn), lambda i, j: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mp, np_), out_dtype),
+        interpret=interpret,
+    )(ap, bp)
+    return out[:m, :n]
+
+
+# ---------------------------------------------------------------------------
+# differentiable fused dense (custom VJP whose bwd is also Pallas)
+# ---------------------------------------------------------------------------
+
+
+@partial(jax.custom_vjp, nondiff_argnums=(3,))
+def dense(x, w, b, activation: str = "linear"):
+    """Differentiable fused dense layer; fwd and bwd both run Pallas."""
+    return fused_dense(x, w, b, activation)
+
+
+def _dense_fwd(x, w, b, activation):
+    # Recompute z in bwd from residuals (x, w, b): rematerialization keeps
+    # the residual footprint at the inputs only — the same trade the paper's
+    # memory-constrained edge devices would make.
+    return fused_dense(x, w, b, activation), (x, w, b)
+
+
+def _dense_bwd(activation, res, g):
+    x, w, b = res
+    # gz = g * act'(z); z recomputed with the fused kernel (linear epilogue).
+    z = fused_dense(x, w, b, "linear")
+    gz = (g * ref.activate_grad(z, activation)).astype(g.dtype)
+    dx = matmul(gz, w.T)
+    dw = matmul(x.T, gz)
+    db = jnp.sum(gz, axis=0)
+    return dx, dw.astype(w.dtype), db.astype(b.dtype)
+
+
+dense.defvjp(_dense_fwd, _dense_bwd)

@@ -1,0 +1,181 @@
+"""L1 correctness: Pallas kernels vs pure-jnp oracles.
+
+Hypothesis sweeps shapes/dtypes/activations; assert_allclose against
+``ref.py``. This is the CORE correctness signal for the kernel layer.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import assume, given, settings, strategies as st
+
+from compile.kernels import dense as K
+from compile.kernels import ref
+
+ACTS = ["linear", "relu", "sigmoid", "tanh"]
+
+
+def _rand(rng, shape, dtype=np.float32):
+    return jnp.asarray(rng.normal(size=shape).astype(dtype))
+
+
+# ---------------------------------------------------------------------------
+# fused_dense vs ref — hypothesis shape sweep
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=40, deadline=None)
+@given(
+    m=st.integers(1, 150),
+    k=st.integers(1, 96),
+    n=st.integers(1, 150),
+    act=st.sampled_from(ACTS),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_fused_dense_matches_ref(m, k, n, act, seed):
+    rng = np.random.default_rng(seed)
+    x, w, b = _rand(rng, (m, k)), _rand(rng, (k, n)), _rand(rng, (n,))
+    out = K.fused_dense(x, w, b, act)
+    expect = ref.dense_ref(x, w, b, act)
+    assert out.shape == (m, n)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(expect), rtol=2e-5, atol=2e-5)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    m=st.integers(1, 200),
+    k=st.integers(1, 64),
+    n=st.integers(1, 200),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_matmul_matches_ref(m, k, n, seed):
+    rng = np.random.default_rng(seed)
+    a, b = _rand(rng, (m, k)), _rand(rng, (k, n))
+    np.testing.assert_allclose(
+        np.asarray(K.matmul(a, b)), np.asarray(ref.matmul_ref(a, b)), rtol=2e-5, atol=2e-5
+    )
+
+
+# ---------------------------------------------------------------------------
+# tile-boundary / padding edge cases
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize(
+    "m,n",
+    [
+        (128, 128),   # exactly one default tile
+        (129, 127),   # one-off around the tile edge
+        (256, 256),   # multi-tile grid
+        (1, 1),       # degenerate
+        (127, 257),   # mixed remainders
+    ],
+)
+def test_fused_dense_tile_boundaries(m, n):
+    rng = np.random.default_rng(m * 1000 + n)
+    k = 33
+    x, w, b = _rand(rng, (m, k)), _rand(rng, (k, n)), _rand(rng, (n,))
+    out = K.fused_dense(x, w, b, "relu")
+    np.testing.assert_allclose(
+        np.asarray(out), np.asarray(ref.dense_ref(x, w, b, "relu")), rtol=2e-5, atol=2e-5
+    )
+
+
+@pytest.mark.parametrize("bm,bn", [(8, 8), (16, 128), (128, 16), (64, 64)])
+def test_fused_dense_block_shape_invariance(bm, bn):
+    """Output must not depend on the chosen tiling."""
+    rng = np.random.default_rng(7)
+    x, w, b = _rand(rng, (70, 30)), _rand(rng, (30, 50)), _rand(rng, (50,))
+    base = ref.dense_ref(x, w, b, "tanh")
+    out = K.fused_dense(x, w, b, "tanh", block_m=bm, block_n=bn)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(base), rtol=2e-5, atol=2e-5)
+
+
+def test_fused_dense_paper_shapes():
+    """The exact layer shapes the paper's two models use."""
+    rng = np.random.default_rng(42)
+    for (m, k, n) in [(64, 648, 300), (64, 300, 2), (256, 784, 300), (256, 60, 10)]:
+        x, w, b = _rand(rng, (m, k)), _rand(rng, (k, n)), _rand(rng, (n,))
+        # Long contractions (K up to 784) accumulate order-dependent f32
+        # noise ~ sqrt(K)·eps·|x||w|; tolerance scales accordingly.
+        np.testing.assert_allclose(
+            np.asarray(K.fused_dense(x, w, b, "relu")),
+            np.asarray(ref.dense_ref(x, w, b, "relu")),
+            rtol=1e-4,
+            atol=1e-3,
+        )
+
+
+# ---------------------------------------------------------------------------
+# dtype handling
+# ---------------------------------------------------------------------------
+
+
+def test_fused_dense_bfloat16_accumulates_in_f32():
+    rng = np.random.default_rng(3)
+    x = jnp.asarray(rng.normal(size=(32, 128)), jnp.bfloat16)
+    w = jnp.asarray(rng.normal(size=(128, 16)), jnp.bfloat16)
+    b = jnp.asarray(rng.normal(size=(16,)), jnp.bfloat16)
+    out = K.fused_dense(x, w, b, "linear")
+    assert out.dtype == jnp.bfloat16
+    expect = jnp.dot(x.astype(jnp.float32), w.astype(jnp.float32)) + b.astype(jnp.float32)
+    # bf16 storage: compare at bf16 resolution.
+    np.testing.assert_allclose(
+        np.asarray(out, np.float32), np.asarray(expect, np.float32), rtol=2e-2, atol=2e-2
+    )
+
+
+# ---------------------------------------------------------------------------
+# custom-VJP gradients vs reference gradients
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    m=st.integers(1, 40),
+    k=st.integers(1, 32),
+    n=st.integers(1, 24),
+    act=st.sampled_from(ACTS),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_dense_vjp_matches_ref(m, k, n, act, seed):
+    rng = np.random.default_rng(seed)
+    x, w, b = _rand(rng, (m, k)), _rand(rng, (k, n)), _rand(rng, (n,))
+    if act == "relu":
+        # relu's subgradient at 0 is ambiguous: a kernel-vs-ref z that
+        # differs by 1 ulp flips the gate and produces an O(1) gradient
+        # difference that is *correct* for both. Only compare away from
+        # the kink.
+        z = np.asarray(jnp.dot(x, w) + b[None, :])
+        assume(np.abs(z).min() > 1e-3)
+    # Smooth scalar head so grads are informative for every activation.
+    def head(o):
+        return jnp.sum(jnp.tanh(o) * 0.5)
+
+    gp = jax.grad(lambda args: head(K.dense(*args, act)), argnums=0)((x, w, b))
+    gr = jax.grad(lambda args: head(ref.dense_ref(*args, act)), argnums=0)((x, w, b))
+    for a, e, name in zip(gp, gr, ["dx", "dw", "db"]):
+        np.testing.assert_allclose(
+            np.asarray(a), np.asarray(e), rtol=5e-4, atol=5e-5, err_msg=name
+        )
+
+
+def test_dense_bwd_ref_consistency():
+    """ref.dense_bwd_ref agrees with jax.grad of the ref forward."""
+    rng = np.random.default_rng(11)
+    x, w, b = _rand(rng, (9, 7)), _rand(rng, (7, 5)), _rand(rng, (5,))
+    g = _rand(rng, (9, 5))
+    dx, dw, db = ref.dense_bwd_ref(x, w, b, g, "sigmoid")
+    f = lambda x_, w_, b_: jnp.sum(ref.dense_ref(x_, w_, b_, "sigmoid") * g)
+    ex = jax.grad(f, argnums=(0, 1, 2))(x, w, b)
+    for a, e in zip((dx, dw, db), ex):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(e), rtol=1e-5, atol=1e-6)
+
+
+def test_contraction_mismatch_raises():
+    x = jnp.zeros((4, 5))
+    w = jnp.zeros((6, 3))
+    b = jnp.zeros((3,))
+    with pytest.raises(AssertionError):
+        K.fused_dense(x, w, b)

@@ -1,0 +1,210 @@
+//! UB-Analytical (§IV-B, Theorem 1): derive the relaxed optimum from the
+//! KKT system — τ* is the positive root of the degree-K polynomial (21),
+//! and the batch bounds (20) hold with equality at τ* — then run
+//! suggest-and-improve to integrality.
+//!
+//! Two root back-ends, selectable and cross-validated:
+//! * [`RootMethod::Polynomial`] — expand eq. (21) and run Durand-Kerner
+//!   (the paper-faithful construction). O(K²) expansion + O(K²) per
+//!   iteration; numerically safe up to K ≈ 100 for Table-I-scale
+//!   coefficients (coefficients reach ~10³⁰⁰ beyond that).
+//! * [`RootMethod::Newton`] — solve the partial-fraction form (29)
+//!   directly by damped Newton (identical root, O(K) per iteration).
+//!   This is what the paper's "computationally expensive for large K"
+//!   remark about the polynomial motivates.
+//!
+//! Default: polynomial for K ≤ 48, Newton beyond.
+
+use super::{relax, sai, Allocation, AllocError, Problem, TaskAllocator};
+use crate::math::poly;
+
+/// Root-finding back-end for eq. (21).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RootMethod {
+    /// Expand the polynomial and run Durand-Kerner.
+    Polynomial,
+    /// Newton on the rational form (29).
+    Newton,
+    /// Polynomial up to the given K, Newton beyond.
+    Auto(usize),
+}
+
+#[derive(Debug, Clone, Copy)]
+pub struct AnalyticalAllocator {
+    pub method: RootMethod,
+}
+
+impl Default for AnalyticalAllocator {
+    fn default() -> Self {
+        Self { method: RootMethod::Auto(48) }
+    }
+}
+
+impl AnalyticalAllocator {
+    pub fn with_method(method: RootMethod) -> Self {
+        Self { method }
+    }
+
+    /// τ* via the eq. (21) polynomial root (Durand-Kerner), picking the
+    /// unique root that satisfies the rational equation on τ ≥ 0.
+    fn tau_from_polynomial(p: &Problem) -> Result<f64, AllocError> {
+        let (a, b) = relax::ab(p)?;
+        let d = p.total_samples as f64;
+        if relax::g(&a, &b, d, 0.0) < 0.0 {
+            return Err(AllocError::Infeasible {
+                reason: "capacity below d at τ = 0".into(),
+            });
+        }
+        let pol = poly::tau_polynomial(d, &a, &b);
+        if pol.c.iter().any(|c| !c.is_finite()) {
+            return Err(AllocError::NoConvergence {
+                reason: format!("eq.21 polynomial overflowed at K = {}", p.k()),
+            });
+        }
+        let candidates = pol.real_roots(1e-6);
+        // Theorem 1: the feasible solution is the non-negative root; the
+        // other K−1 real roots sit at τ < 0 interlaced with the −b_k poles.
+        let tau = candidates
+            .into_iter()
+            .filter(|&t| t >= 0.0)
+            .filter(|&t| relax::g(&a, &b, d, t).abs() < 1e-5 * d.max(1.0))
+            .fold(f64::NAN, f64::max);
+        if tau.is_nan() {
+            return Err(AllocError::NoConvergence {
+                reason: "no feasible positive root of eq. 21".into(),
+            });
+        }
+        Ok(tau)
+    }
+}
+
+impl TaskAllocator for AnalyticalAllocator {
+    fn allocate(&self, p: &Problem) -> Result<Allocation, AllocError> {
+        let use_poly = match self.method {
+            RootMethod::Polynomial => true,
+            RootMethod::Newton => false,
+            RootMethod::Auto(kmax) => p.k() <= kmax,
+        };
+        let (tau_star, batches_star) = if use_poly {
+            match Self::tau_from_polynomial(p) {
+                Ok(tau) => {
+                    let (a, b) = relax::ab(p)?;
+                    let batches =
+                        a.iter().zip(&b).map(|(&ai, &bi)| ai / (tau + bi)).collect();
+                    (tau, batches)
+                }
+                Err(AllocError::Infeasible { reason }) => {
+                    return Err(AllocError::Infeasible { reason })
+                }
+                Err(AllocError::NoConvergence { reason }) => {
+                    // Durand-Kerner can stall on ill-conditioned expansions
+                    // (clustered −b_k poles at larger K); the rational form
+                    // (29) is the same root — fall back to Newton.
+                    log::debug!("eq.21 polynomial path failed ({reason}); Newton fallback");
+                    let sol = relax::solve(p)?;
+                    (sol.tau, sol.batches)
+                }
+            }
+        } else {
+            let sol = relax::solve(p)?;
+            (sol.tau, sol.batches)
+        };
+        // Paper finding (§IV-B): "these expressions were always already
+        // feasible" — the relaxed batches satisfy the constraints exactly;
+        // integrality still needs SAI's rounding pass.
+        sai::improve(p, tau_star, tau_star, batches_star, "ub-analytical")
+    }
+
+    fn name(&self) -> &'static str {
+        "ub-analytical"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::alloc::testutil::{random_problem, two_class_problem};
+    use crate::util::rng::Pcg64;
+
+    #[test]
+    fn polynomial_and_newton_agree() {
+        for k in [2usize, 5, 10, 25, 40] {
+            let p = two_class_problem(k, 9000, 30.0);
+            let a_poly = AnalyticalAllocator::with_method(RootMethod::Polynomial)
+                .allocate(&p)
+                .unwrap();
+            let a_newt = AnalyticalAllocator::with_method(RootMethod::Newton)
+                .allocate(&p)
+                .unwrap();
+            assert!(
+                (a_poly.relaxed_tau - a_newt.relaxed_tau).abs()
+                    < 1e-6 * (1.0 + a_poly.relaxed_tau),
+                "K={k}: poly {} vs newton {}",
+                a_poly.relaxed_tau,
+                a_newt.relaxed_tau
+            );
+            assert_eq!(a_poly.tau, a_newt.tau, "K={k}");
+        }
+    }
+
+    #[test]
+    fn polynomial_agree_on_random_problems() {
+        let mut rng = Pcg64::seeded(17);
+        let mut checked = 0;
+        for trial in 0..60 {
+            let k = 2 + trial % 12;
+            let p = random_problem(&mut rng, k, 2000, 50.0);
+            let poly = AnalyticalAllocator::with_method(RootMethod::Polynomial).allocate(&p);
+            let newt = AnalyticalAllocator::with_method(RootMethod::Newton).allocate(&p);
+            match (poly, newt) {
+                (Ok(a), Ok(b)) => {
+                    assert!(
+                        (a.relaxed_tau - b.relaxed_tau).abs() < 1e-5 * (1.0 + b.relaxed_tau)
+                    );
+                    checked += 1;
+                }
+                (Err(_), Err(_)) => {}
+                (x, y) => panic!("disagree on feasibility: {x:?} vs {y:?}"),
+            }
+        }
+        assert!(checked > 20, "too few feasible random draws ({checked})");
+    }
+
+    #[test]
+    fn integer_solution_feasible_and_tau_maximal() {
+        let p = two_class_problem(20, 9000, 60.0);
+        let a = AnalyticalAllocator::default().allocate(&p).unwrap();
+        assert!(a.is_feasible(&p));
+        assert!(p.capacity(a.tau + 1) < 9000);
+        // integer τ within 1 of the relaxed bound
+        assert!(a.tau as f64 <= a.relaxed_tau + 1e-9);
+        assert!(a.relaxed_tau - a.tau as f64 <= 2.0, "gap {}", a.relaxed_tau - a.tau as f64);
+    }
+
+    #[test]
+    fn relaxed_batches_make_constraints_tight() {
+        let p = two_class_problem(6, 3000, 30.0);
+        let a = AnalyticalAllocator::default().allocate(&p).unwrap();
+        for (c, &dk) in p.coeffs.iter().zip(&a.relaxed_batches) {
+            assert!((c.time(a.relaxed_tau, dk) - 30.0).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn auto_switches_to_newton_for_large_k() {
+        // K = 400 would overflow the polynomial; Auto must still solve.
+        let p = two_class_problem(400, 60_000, 30.0);
+        let a = AnalyticalAllocator::default().allocate(&p).unwrap();
+        assert!(a.is_feasible(&p));
+        assert!(a.tau >= 1);
+    }
+
+    #[test]
+    fn infeasible_propagates() {
+        let p = two_class_problem(2, 50_000_000, 2.0);
+        assert!(matches!(
+            AnalyticalAllocator::default().allocate(&p),
+            Err(AllocError::Infeasible { .. })
+        ));
+    }
+}

@@ -1,0 +1,115 @@
+//! Equal Task Allocation (ETA) — the baseline of Wang et al. / Tuor et
+//! al. ([12], [13]): every learner receives `d/K` samples regardless of
+//! its capacities; τ is then bounded by the *slowest* learner
+//! (`τ = ⌊min_k τ_max_k(d/K)⌋`), which is exactly the heterogeneity
+//! penalty the paper's adaptive allocation removes.
+
+use super::{Allocation, AllocError, Problem, TaskAllocator};
+
+#[derive(Debug, Clone, Copy, Default)]
+pub struct EtaAllocator;
+
+impl TaskAllocator for EtaAllocator {
+    fn allocate(&self, p: &Problem) -> Result<Allocation, AllocError> {
+        let k = p.k();
+        if k == 0 {
+            return Err(AllocError::Infeasible { reason: "no learners".into() });
+        }
+        let d = p.total_samples;
+        // equal split; the first (d mod K) learners absorb the remainder
+        let base = d / k;
+        let rem = d % k;
+        let batches: Vec<usize> =
+            (0..k).map(|i| base + usize::from(i < rem)).collect();
+
+        // τ = floor(min_k τ_max)
+        let mut tau_f = f64::INFINITY;
+        for (c, &dk) in p.coeffs.iter().zip(&batches) {
+            if dk > 0 {
+                tau_f = tau_f.min(c.tau_max(dk as f64, p.t_total));
+            }
+        }
+        if !tau_f.is_finite() || tau_f < 1.0 {
+            return Err(AllocError::Infeasible {
+                reason: format!(
+                    "ETA cannot complete one local iteration within T = {} \
+                     (slowest learner's τ_max = {tau_f:.3})",
+                    p.t_total
+                ),
+            });
+        }
+        let tau = tau_f.floor() as u64;
+        let alloc = Allocation {
+            tau,
+            batches: batches.clone(),
+            relaxed_tau: tau_f,
+            relaxed_batches: batches.iter().map(|&b| b as f64).collect(),
+            policy: "eta",
+            sai_steps: 0,
+        };
+        debug_assert!(alloc.is_feasible(p));
+        Ok(alloc)
+    }
+
+    fn name(&self) -> &'static str {
+        "eta"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::alloc::testutil::two_class_problem;
+
+    #[test]
+    fn equal_split_with_remainder() {
+        let p = two_class_problem(7, 100, 300.0);
+        let a = EtaAllocator.allocate(&p).unwrap();
+        assert_eq!(a.batches.iter().sum::<usize>(), 100);
+        assert_eq!(a.batches, vec![15, 15, 14, 14, 14, 14, 14]);
+        assert!(a.is_feasible(&p));
+    }
+
+    #[test]
+    fn tau_bounded_by_slowest() {
+        let p = two_class_problem(10, 9000, 30.0);
+        let a = EtaAllocator.allocate(&p).unwrap();
+        // slowest (odd index) coefficient dominates
+        let slow_tau = p.coeffs[1].tau_max(900.0, 30.0).floor() as u64;
+        assert_eq!(a.tau, slow_tau);
+        // fast learners have big slack under ETA — the paper's waste
+        let slacks = a.slacks(&p);
+        assert!(slacks[0] > 0.5 * 30.0, "fast slack {}", slacks[0]);
+        // slow learner's slack is less than one more of its iterations
+        assert!(
+            slacks[1] < p.coeffs[1].c2 * 900.0,
+            "slow slack {} (one iter = {})",
+            slacks[1],
+            p.coeffs[1].c2 * 900.0
+        );
+    }
+
+    #[test]
+    fn paper_anchor_k50_t30_pedestrian() {
+        // calibrated fixture reproduces paper's ETA τ ≈ 36 (we get 37,
+        // the paper's published 36; within one iteration)
+        let p = two_class_problem(50, 9000, 30.0);
+        let a = EtaAllocator.allocate(&p).unwrap();
+        assert!((34..=38).contains(&a.tau), "tau {}", a.tau);
+    }
+
+    #[test]
+    fn infeasible_when_t_too_small() {
+        let p = two_class_problem(4, 9000, 0.1);
+        assert!(matches!(
+            EtaAllocator.allocate(&p),
+            Err(AllocError::Infeasible { .. })
+        ));
+    }
+
+    #[test]
+    fn zero_learners_rejected() {
+        let p = Problem { coeffs: vec![], total_samples: 10, t_total: 1.0 };
+        assert!(EtaAllocator.allocate(&p).is_err());
+    }
+}

@@ -1,0 +1,127 @@
+//! Exact integer reference solver.
+//!
+//! Observation: for the ILPQC (17), an integer `(τ, {d_k})` is feasible
+//! iff `d_k ≤ ⌊d_max_k(τ)⌋ ∀k` and `Σ d_k = d`, which is possible iff
+//! `capacity(τ) = Σ_k ⌊d_max_k(τ)⌋ ≥ d`. Since `capacity` is monotone
+//! non-increasing in τ, the *optimal integer τ* is exactly
+//!
+//! ```text
+//! τ_opt = max { τ ∈ Z₊ : capacity(τ) ≥ d }
+//! ```
+//!
+//! found here by exponential search + binary search — O(K log τ_opt).
+//! This is a provably optimal solution of the NP-hard-in-general
+//! formulation (the structure of (17b) makes this instance family easy),
+//! used as the ground-truth oracle in tests and ablation benches.
+
+use super::{sai, Allocation, AllocError, Problem, TaskAllocator};
+
+#[derive(Debug, Clone, Copy, Default)]
+pub struct ExactAllocator;
+
+impl ExactAllocator {
+    /// The provably optimal integer τ, or None if even τ=1 is infeasible.
+    pub fn optimal_tau(p: &Problem) -> Option<u64> {
+        let d = p.total_samples as u64;
+        if p.capacity(1) < d {
+            return None;
+        }
+        // exponential search for an infeasible upper end
+        let mut hi = 2u64;
+        while p.capacity(hi) >= d {
+            hi *= 2;
+            if hi > 1 << 40 {
+                // τ effectively unbounded (paper's "K−1 nodes take one
+                // sample" extreme) — cap to keep arithmetic sane
+                return Some(hi);
+            }
+        }
+        let mut lo = hi / 2; // feasible
+        // invariant: capacity(lo) ≥ d > capacity(hi)
+        while hi - lo > 1 {
+            let mid = lo + (hi - lo) / 2;
+            if p.capacity(mid) >= d {
+                lo = mid;
+            } else {
+                hi = mid;
+            }
+        }
+        Some(lo)
+    }
+}
+
+impl TaskAllocator for ExactAllocator {
+    fn allocate(&self, p: &Problem) -> Result<Allocation, AllocError> {
+        let tau = Self::optimal_tau(p).ok_or_else(|| AllocError::Infeasible {
+            reason: format!("capacity({}) < d = {}", 1, p.total_samples),
+        })?;
+        // fill batches via the shared engine (start exactly at optimum;
+        // its ascent loop will terminate immediately)
+        sai::improve(p, tau as f64, tau as f64, vec![], "exact")
+    }
+
+    fn name(&self) -> &'static str {
+        "exact"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::alloc::analytical::AnalyticalAllocator;
+    use crate::alloc::eta::EtaAllocator;
+    use crate::alloc::testutil::{random_problem, two_class_problem};
+    use crate::util::rng::Pcg64;
+
+    #[test]
+    fn optimal_tau_is_boundary() {
+        let p = two_class_problem(10, 9000, 30.0);
+        let tau = ExactAllocator::optimal_tau(&p).unwrap();
+        assert!(p.capacity(tau) >= 9000);
+        assert!(p.capacity(tau + 1) < 9000);
+    }
+
+    #[test]
+    fn analytical_achieves_exact_optimum() {
+        // the headline correctness claim: UB-Analytical + SAI is optimal
+        let mut rng = Pcg64::seeded(21);
+        for trial in 0..100 {
+            let p = random_problem(&mut rng, 2 + trial % 25, 1000 + trial * 13, 35.0);
+            match (ExactAllocator.allocate(&p), AnalyticalAllocator::default().allocate(&p)) {
+                (Ok(e), Ok(a)) => assert_eq!(e.tau, a.tau, "trial {trial}"),
+                (Err(_), Err(_)) => {}
+                (x, y) => panic!("trial {trial}: {x:?} vs {y:?}"),
+            }
+        }
+    }
+
+    #[test]
+    fn eta_never_beats_exact() {
+        let mut rng = Pcg64::seeded(22);
+        for trial in 0..60 {
+            let p = random_problem(&mut rng, 2 + trial % 15, 2000, 30.0);
+            if let (Ok(e), Ok(eta)) = (ExactAllocator.allocate(&p), EtaAllocator.allocate(&p)) {
+                assert!(eta.tau <= e.tau, "trial {trial}: ETA {} > exact {}", eta.tau, e.tau);
+            }
+        }
+    }
+
+    #[test]
+    fn unbounded_tau_capped() {
+        // d = K: one sample each, compute time per iter ~ c2 → τ huge
+        let mut p = two_class_problem(4, 4, 1e7);
+        for c in &mut p.coeffs {
+            c.c0 = 0.0;
+            c.c1 = 1e-9;
+        }
+        let tau = ExactAllocator::optimal_tau(&p).unwrap();
+        assert!(tau > 1 << 30);
+    }
+
+    #[test]
+    fn infeasible_none() {
+        let p = two_class_problem(2, 10_000_000, 2.0);
+        assert!(ExactAllocator::optimal_tau(&p).is_none());
+        assert!(ExactAllocator.allocate(&p).is_err());
+    }
+}

@@ -1,0 +1,128 @@
+//! UB-SAI (§IV-C): the heuristic for large K. Instead of solving the
+//! K-th order polynomial, start from the *equal-batch* iteration count
+//! of eq. (32),
+//!
+//! ```text
+//! τ₀ = ( K²/d − Σ_k C¹_k/r⁰_k ) / ( Σ_k C²_k/r⁰_k ),   r⁰_k = C⁰_k − T
+//! ```
+//!
+//! and run suggest-and-improve steps to a feasible integer allocation.
+//! O(K) per evaluation, no polynomial expansion — the production choice
+//! when K reaches hundreds of nodes.
+
+use super::{relax, sai, Allocation, AllocError, Problem, TaskAllocator};
+
+#[derive(Debug, Clone, Copy, Default)]
+pub struct UbSaiAllocator;
+
+impl UbSaiAllocator {
+    /// The eq. (32) starting point.
+    ///
+    /// **Erratum**: as printed, eq. (32) uses `r⁰_k = C⁰_k − T`, which
+    /// makes both sums negative and τ₀ < 0 for every feasible instance.
+    /// Re-deriving from the equal-batch condition `Σ 1/d_k = K²/d` with
+    /// the eq. (20) equality gives the same expression with `T − C⁰_k`
+    /// (i.e. `−r⁰_k`); for homogeneous learners it then reduces exactly
+    /// to `τ_max(d/K)` as the paper's case-2 discussion intends. We
+    /// implement the corrected sign (see DESIGN.md §Errata).
+    pub fn tau_start(p: &Problem) -> Result<f64, AllocError> {
+        // validate a_k > 0 (same screen as the analytical path)
+        relax::ab(p)?;
+        let k = p.k() as f64;
+        let d = p.total_samples as f64;
+        let mut sum_c1 = 0.0;
+        let mut sum_c2 = 0.0;
+        for c in &p.coeffs {
+            let tmc0 = p.t_total - c.c0; // −r⁰_k > 0 when feasible
+            sum_c1 += c.c1 / tmc0;
+            sum_c2 += c.c2 / tmc0;
+        }
+        Ok((k * k / d - sum_c1) / sum_c2)
+    }
+}
+
+impl TaskAllocator for UbSaiAllocator {
+    fn allocate(&self, p: &Problem) -> Result<Allocation, AllocError> {
+        let tau0 = Self::tau_start(p)?;
+        // No relaxed solve here (that's the point of the heuristic);
+        // report the eq.32 start as the "relaxed" diagnostic.
+        let mut alloc = sai::improve(p, tau0, tau0, vec![], "ub-sai")?;
+        alloc.relaxed_batches = vec![p.total_samples as f64 / p.k() as f64; p.k()];
+        Ok(alloc)
+    }
+
+    fn name(&self) -> &'static str {
+        "ub-sai"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::alloc::analytical::AnalyticalAllocator;
+    use crate::alloc::testutil::{random_problem, two_class_problem};
+    use crate::alloc::TaskAllocator;
+    use crate::util::rng::Pcg64;
+
+    #[test]
+    fn eq32_start_matches_hand_computation() {
+        // homogeneous learners: eq.32 reduces to the exact equal-batch τ:
+        // τ = ((T−C0) − C1·d/K) / (C2·d/K)  [tau_max at d/K]
+        let mut p = two_class_problem(4, 1000, 30.0);
+        let first = p.coeffs[0];
+        for c in &mut p.coeffs {
+            *c = first;
+        }
+        let c = p.coeffs[0];
+        let tau0 = UbSaiAllocator::tau_start(&p).unwrap();
+        let expect = c.tau_max(250.0, 30.0);
+        assert!((tau0 - expect).abs() < 1e-9, "{tau0} vs {expect}");
+    }
+
+    #[test]
+    fn matches_analytical_tau_on_paper_scenarios() {
+        // §V: "the OPTI-based, UB-Analytical, and UB-SAI solutions are
+        // identical for all simulated numbers of edge nodes".
+        for (k, d, t) in [(10, 9000, 30.0), (20, 9000, 60.0), (50, 9000, 30.0), (20, 60000, 120.0)]
+        {
+            let p = two_class_problem(k, d, t);
+            let sai_a = UbSaiAllocator.allocate(&p).unwrap();
+            let ana = AnalyticalAllocator::default().allocate(&p).unwrap();
+            assert_eq!(sai_a.tau, ana.tau, "K={k} d={d} T={t}");
+            assert!(sai_a.is_feasible(&p));
+        }
+    }
+
+    #[test]
+    fn matches_analytical_on_random_problems() {
+        let mut rng = Pcg64::seeded(5);
+        let mut agreements = 0;
+        for trial in 0..150 {
+            let k = 2 + trial % 50;
+            let p = random_problem(&mut rng, k, 4000, 45.0);
+            match (UbSaiAllocator.allocate(&p), AnalyticalAllocator::default().allocate(&p)) {
+                (Ok(a), Ok(b)) => {
+                    assert_eq!(a.tau, b.tau, "trial {trial} K={k}");
+                    agreements += 1;
+                }
+                (Err(_), Err(_)) => {}
+                (x, y) => panic!("trial {trial}: feasibility disagreement {x:?} vs {y:?}"),
+            }
+        }
+        assert!(agreements > 50, "{agreements}");
+    }
+
+    #[test]
+    fn scales_to_large_k() {
+        let p = two_class_problem(2000, 600_000, 60.0);
+        let a = UbSaiAllocator.allocate(&p).unwrap();
+        assert!(a.is_feasible(&p));
+        assert!(a.sai_steps < 200, "SAI took {} steps", a.sai_steps);
+    }
+
+    #[test]
+    fn infeasible_detected() {
+        let p = two_class_problem(3, 10_000_000, 3.0);
+        assert!(UbSaiAllocator.allocate(&p).is_err());
+    }
+}

@@ -1,0 +1,288 @@
+//! Adaptive task allocation — the paper's core contribution.
+//!
+//! Problem (17): `max τ` s.t. `C2_k·τ·d_k + C1_k·d_k + C0_k ≤ T ∀k`,
+//! `Σ d_k = d`, `τ, d_k ∈ Z₊` — an ILPQC (NP-hard). Four solvers, all
+//! behind the [`TaskAllocator`] trait so the coordinator treats them as
+//! interchangeable policies:
+//!
+//! | Policy | Module | Paper section |
+//! |---|---|---|
+//! | [`Policy::Eta`] (baseline) | [`eta`] | §V (Wang/Tuor et al.) |
+//! | [`Policy::Analytical`] (UB-Analytical) | [`analytical`] | §IV-B, Thm 1 |
+//! | [`Policy::UbSai`] (UB-SAI heuristic) | [`heuristic`] | §IV-C, eq. 32 |
+//! | [`Policy::Numerical`] (OPTI-like) | [`numerical`] | §V (OPTI) |
+//!
+//! plus [`exact`]: a provably-optimal integer reference used by tests
+//! (binary search over the integer capacity function), and [`sai`]: the
+//! shared suggest-and-improve engine that turns relaxed solutions into
+//! feasible integer allocations.
+
+pub mod analytical;
+pub mod eta;
+pub mod exact;
+pub mod heuristic;
+pub mod numerical;
+pub mod relax;
+pub mod sai;
+pub mod selection;
+
+use crate::learner::Coeffs;
+
+/// Feasibility slack used when validating `t_k ≤ T` under floating
+/// point: allocations may sit exactly on the boundary.
+pub const TIME_EPS: f64 = 1e-6;
+
+/// One allocation problem instance: per-learner coefficients, the total
+/// dataset size `d`, and the global-cycle clock `T`.
+#[derive(Debug, Clone)]
+pub struct Problem {
+    pub coeffs: Vec<Coeffs>,
+    pub total_samples: usize,
+    pub t_total: f64,
+}
+
+impl Problem {
+    pub fn k(&self) -> usize {
+        self.coeffs.len()
+    }
+
+    /// `a_k` of Theorem 1 for every learner.
+    pub fn a(&self) -> Vec<f64> {
+        self.coeffs.iter().map(|c| c.a(self.t_total)).collect()
+    }
+
+    /// `b_k` of Theorem 1 for every learner.
+    pub fn b(&self) -> Vec<f64> {
+        self.coeffs.iter().map(|c| c.b()).collect()
+    }
+
+    /// Integer batch capacity at iteration count `tau`:
+    /// `Σ_k ⌊d_max_k(τ)⌋` — how many samples the cloudlet can absorb.
+    /// Monotone non-increasing in τ.
+    pub fn capacity(&self, tau: u64) -> u64 {
+        self.coeffs
+            .iter()
+            .map(|c| {
+                let dm = c.d_max(tau as f64, self.t_total);
+                if dm <= 0.0 {
+                    0
+                } else {
+                    dm.floor() as u64
+                }
+            })
+            .sum()
+    }
+
+    /// Quick infeasibility screen: can the cloudlet hold `d` samples for
+    /// at least one iteration?
+    pub fn is_feasible_at(&self, tau: u64) -> bool {
+        self.capacity(tau) >= self.total_samples as u64
+    }
+}
+
+/// An allocation decision: the integer solution the orchestrator
+/// enacts, plus the relaxed (real) solution it was derived from.
+#[derive(Debug, Clone)]
+pub struct Allocation {
+    /// Local iterations per global cycle (the maximized objective).
+    pub tau: u64,
+    /// Batch size `d_k` per learner; sums to `d`.
+    pub batches: Vec<usize>,
+    /// Relaxed-problem optimum τ* (upper bound on `tau`).
+    pub relaxed_tau: f64,
+    /// Relaxed-problem batch sizes `d_k*` (eq. 20 at τ*).
+    pub relaxed_batches: Vec<f64>,
+    /// Which solver produced it.
+    pub policy: &'static str,
+    /// Suggest-and-improve iterations spent (diagnostics).
+    pub sai_steps: usize,
+}
+
+impl Allocation {
+    /// Validate the paper's constraints (17b)–(17e) against `p`.
+    pub fn is_feasible(&self, p: &Problem) -> bool {
+        self.batches.len() == p.k()
+            && self.batches.iter().sum::<usize>() == p.total_samples
+            && self.batches.iter().zip(&p.coeffs).all(|(&d, c)| {
+                d == 0 || c.time(self.tau as f64, d as f64) <= p.t_total + TIME_EPS
+            })
+    }
+
+    /// Worst-case round-trip time across learners (≤ T when feasible).
+    pub fn makespan(&self, p: &Problem) -> f64 {
+        self.batches
+            .iter()
+            .zip(&p.coeffs)
+            .filter(|(&d, _)| d > 0)
+            .map(|(&d, c)| c.time(self.tau as f64, d as f64))
+            .fold(0.0, f64::max)
+    }
+
+    /// Per-learner slack `T − t_k` (diagnostics/straggler analysis).
+    pub fn slacks(&self, p: &Problem) -> Vec<f64> {
+        self.batches
+            .iter()
+            .zip(&p.coeffs)
+            .map(|(&d, c)| p.t_total - c.time(self.tau as f64, d as f64))
+            .collect()
+    }
+}
+
+/// Allocation failure modes.
+#[derive(Debug, Clone, thiserror::Error, PartialEq)]
+pub enum AllocError {
+    /// Not even τ=1 fits: the orchestrator should offload to edge/cloud
+    /// (the paper's ν₁=ν₂=0 case).
+    #[error("MEL infeasible: {reason}")]
+    Infeasible { reason: String },
+    /// Solver failed to converge (numerical pathology).
+    #[error("solver did not converge: {reason}")]
+    NoConvergence { reason: String },
+}
+
+/// A task-allocation policy.
+pub trait TaskAllocator: Send + Sync {
+    /// Solve the problem, returning a feasible integer allocation.
+    fn allocate(&self, p: &Problem) -> Result<Allocation, AllocError>;
+
+    /// Short policy name for tables/metrics.
+    fn name(&self) -> &'static str;
+}
+
+/// Enum front-end over the four policies (CLI/config selection).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Policy {
+    /// Equal task allocation (baseline of [12], [13]).
+    Eta,
+    /// UB-Analytical: Theorem 1 bounds + eq. (21) root.
+    Analytical,
+    /// UB-SAI: eq. (32) start + suggest-and-improve.
+    UbSai,
+    /// Numerical solver on the relaxed problem (OPTI stand-in).
+    Numerical,
+}
+
+impl Policy {
+    pub fn allocator(&self) -> Box<dyn TaskAllocator> {
+        match self {
+            Policy::Eta => Box::new(eta::EtaAllocator),
+            Policy::Analytical => Box::new(analytical::AnalyticalAllocator::default()),
+            Policy::UbSai => Box::new(heuristic::UbSaiAllocator::default()),
+            Policy::Numerical => Box::new(numerical::NumericalAllocator::default()),
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Policy> {
+        match s.to_ascii_lowercase().as_str() {
+            "eta" | "equal" => Some(Policy::Eta),
+            "analytical" | "ub-analytical" | "ub" => Some(Policy::Analytical),
+            "ubsai" | "ub-sai" | "sai" | "heuristic" => Some(Policy::UbSai),
+            "numerical" | "opti" | "solver" => Some(Policy::Numerical),
+            _ => None,
+        }
+    }
+
+    pub fn all() -> [Policy; 4] {
+        [Policy::Eta, Policy::Analytical, Policy::UbSai, Policy::Numerical]
+    }
+
+    pub fn label(&self) -> &'static str {
+        match self {
+            Policy::Eta => "ETA",
+            Policy::Analytical => "UB-Analytical",
+            Policy::UbSai => "UB-SAI",
+            Policy::Numerical => "Numerical",
+        }
+    }
+}
+
+#[cfg(test)]
+pub(crate) mod testutil {
+    use super::*;
+
+    /// Hand-built two-class problem with known-good structure.
+    pub fn two_class_problem(k: usize, d: usize, t: f64) -> Problem {
+        let mut coeffs = Vec::new();
+        for i in 0..k {
+            let fast = i % 2 == 0;
+            coeffs.push(Coeffs {
+                c2: if fast { 651e-6 } else { 4464e-6 },
+                c1: 36e-6,
+                c0: 0.086,
+            });
+        }
+        Problem { coeffs, total_samples: d, t_total: t }
+    }
+
+    /// Random heterogeneous problem for property tests.
+    pub fn random_problem(rng: &mut crate::util::rng::Pcg64, k: usize, d: usize, t: f64) -> Problem {
+        use crate::util::rng::Rng;
+        let coeffs = (0..k)
+            .map(|_| Coeffs {
+                c2: rng.uniform(1e-5, 1e-2),
+                c1: rng.uniform(1e-6, 1e-3),
+                c0: rng.uniform(0.001, t * 0.2),
+            })
+            .collect();
+        Problem { coeffs, total_samples: d, t_total: t }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn capacity_is_monotone_nonincreasing() {
+        let p = testutil::two_class_problem(10, 9000, 30.0);
+        let caps: Vec<u64> = (1..200).step_by(7).map(|t| p.capacity(t)).collect();
+        assert!(caps.windows(2).all(|w| w[0] >= w[1]), "{caps:?}");
+    }
+
+    #[test]
+    fn allocation_feasibility_checks() {
+        let p = testutil::two_class_problem(2, 100, 30.0);
+        let good = Allocation {
+            tau: 10,
+            batches: vec![80, 20],
+            relaxed_tau: 10.5,
+            relaxed_batches: vec![80.3, 19.7],
+            policy: "test",
+            sai_steps: 0,
+        };
+        assert!(good.is_feasible(&p));
+        assert!(good.makespan(&p) <= 30.0 + TIME_EPS);
+        assert_eq!(good.slacks(&p).len(), 2);
+
+        let wrong_sum = Allocation { batches: vec![80, 21], ..good.clone() };
+        assert!(!wrong_sum.is_feasible(&p));
+
+        let too_slow = Allocation { tau: 100_000, ..good.clone() };
+        assert!(!too_slow.is_feasible(&p));
+    }
+
+    #[test]
+    fn policy_parsing() {
+        assert_eq!(Policy::parse("eta"), Some(Policy::Eta));
+        assert_eq!(Policy::parse("UB-Analytical"), Some(Policy::Analytical));
+        assert_eq!(Policy::parse("sai"), Some(Policy::UbSai));
+        assert_eq!(Policy::parse("OPTI"), Some(Policy::Numerical));
+        assert_eq!(Policy::parse("wat"), None);
+        for p in Policy::all() {
+            assert!(!p.label().is_empty());
+            assert!(!p.allocator().name().is_empty());
+        }
+    }
+
+    #[test]
+    fn problem_a_b_vectors() {
+        let p = testutil::two_class_problem(4, 1000, 30.0);
+        let a = p.a();
+        let b = p.b();
+        assert_eq!(a.len(), 4);
+        assert!(a.iter().all(|&x| x > 0.0));
+        assert!(b.iter().all(|&x| x > 0.0));
+        // fast learners (even idx) have larger a and larger b
+        assert!(a[0] > a[1]);
+    }
+}

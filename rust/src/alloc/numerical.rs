@@ -1,0 +1,175 @@
+//! Numerical solver for the relaxed problem (18) — the stand-in for the
+//! paper's OPTI/MATLAB solver (unavailable substrate; DESIGN.md §2).
+//!
+//! Two independent numerical methods, cross-validated against each other
+//! and against the analytical bound in tests:
+//!
+//! * **Bisection** on the monotone capacity function `g(τ)` with
+//!   bracket expansion — a derivative-free method a generic NLP solver
+//!   would effectively reduce to on this problem.
+//! * **Alternating fixed point** (block-coordinate, the flavor of
+//!   suggest-and-improve a QCQP solver's feasibility phase performs):
+//!   alternate `d_k ← d·d_max_k(τ)/Σ d_max(τ)` (water-fill at fixed τ)
+//!   and `τ ← min_k τ_max_k(d_k)` (tighten at fixed batches) until the
+//!   objective stalls.
+//!
+//! Both converge to the same KKT point because the relaxed problem,
+//! though non-convex, has a unique constrained maximum on the
+//! `Σd_k = d` slice (g is strictly monotone).
+
+use super::{relax, sai, Allocation, AllocError, Problem, TaskAllocator};
+use crate::math::roots;
+
+/// Numerical back-end choice.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Method {
+    Bisection,
+    AlternatingFixedPoint,
+}
+
+#[derive(Debug, Clone, Copy)]
+pub struct NumericalAllocator {
+    pub method: Method,
+    pub max_iter: usize,
+    pub tol: f64,
+}
+
+impl Default for NumericalAllocator {
+    fn default() -> Self {
+        Self { method: Method::Bisection, max_iter: 500, tol: 1e-10 }
+    }
+}
+
+impl NumericalAllocator {
+    pub fn with_method(method: Method) -> Self {
+        Self { method, ..Self::default() }
+    }
+
+    fn solve_bisection(&self, p: &Problem) -> Result<f64, AllocError> {
+        let (a, b) = relax::ab(p)?;
+        let d = p.total_samples as f64;
+        if relax::g(&a, &b, d, 0.0) < 0.0 {
+            return Err(AllocError::Infeasible { reason: "capacity below d at τ = 0".into() });
+        }
+        let (lo, hi) = roots::bracket_upward(|t| relax::g(&a, &b, d, t), 0.0, 1.0, 80)
+            .ok_or_else(|| AllocError::NoConvergence { reason: "bracketing failed".into() })?;
+        let root = roots::bisect(|t| relax::g(&a, &b, d, t), lo, hi, self.tol, self.max_iter)
+            .ok_or_else(|| AllocError::NoConvergence { reason: "bisection failed".into() })?;
+        Ok(root.x)
+    }
+
+    fn solve_alternating(&self, p: &Problem) -> Result<f64, AllocError> {
+        let (a, b) = relax::ab(p)?;
+        let d = p.total_samples as f64;
+        if relax::g(&a, &b, d, 0.0) < 0.0 {
+            return Err(AllocError::Infeasible { reason: "capacity below d at τ = 0".into() });
+        }
+        let k = p.k();
+        // start from equal batches
+        let mut batches = vec![d / k as f64; k];
+        let mut tau = 0.0f64;
+        for _ in 0..self.max_iter {
+            // tighten τ at fixed batches
+            let new_tau = batches
+                .iter()
+                .zip(&p.coeffs)
+                .map(|(&dk, c)| c.tau_max(dk, p.t_total))
+                .fold(f64::INFINITY, f64::min)
+                .max(0.0);
+            // water-fill batches at fixed τ
+            let caps: Vec<f64> =
+                p.coeffs.iter().map(|c| c.d_max(new_tau, p.t_total).max(0.0)).collect();
+            let total: f64 = caps.iter().sum();
+            if total <= 0.0 {
+                return Err(AllocError::NoConvergence { reason: "vanishing capacity".into() });
+            }
+            for (dk, &cap) in batches.iter_mut().zip(&caps) {
+                *dk = d * cap / total;
+            }
+            if (new_tau - tau).abs() <= self.tol * (1.0 + new_tau) {
+                tau = new_tau;
+                break;
+            }
+            tau = new_tau;
+        }
+        Ok(tau)
+    }
+}
+
+impl TaskAllocator for NumericalAllocator {
+    fn allocate(&self, p: &Problem) -> Result<Allocation, AllocError> {
+        let tau_star = match self.method {
+            Method::Bisection => self.solve_bisection(p)?,
+            Method::AlternatingFixedPoint => self.solve_alternating(p)?,
+        };
+        let (a, b) = relax::ab(p)?;
+        let batches_star: Vec<f64> =
+            a.iter().zip(&b).map(|(&ai, &bi)| ai / (tau_star + bi)).collect();
+        sai::improve(p, tau_star, tau_star, batches_star, "numerical")
+    }
+
+    fn name(&self) -> &'static str {
+        "numerical"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::alloc::testutil::{random_problem, two_class_problem};
+    use crate::util::rng::Pcg64;
+
+    #[test]
+    fn bisection_and_alternating_agree_with_newton() {
+        for (k, d, t) in [(5, 9000, 30.0), (20, 9000, 60.0), (10, 60_000, 120.0)] {
+            let p = two_class_problem(k, d, t);
+            let newton = relax::solve(&p).unwrap().tau;
+            let bis = NumericalAllocator::with_method(Method::Bisection)
+                .solve_bisection(&p)
+                .unwrap();
+            let alt = NumericalAllocator::with_method(Method::AlternatingFixedPoint)
+                .solve_alternating(&p)
+                .unwrap();
+            assert!((bis - newton).abs() < 1e-6 * (1.0 + newton), "bis {bis} vs {newton}");
+            assert!((alt - newton).abs() < 1e-5 * (1.0 + newton), "alt {alt} vs {newton}");
+        }
+    }
+
+    #[test]
+    fn integer_result_matches_analytical_policy() {
+        use crate::alloc::analytical::AnalyticalAllocator;
+        use crate::alloc::TaskAllocator as _;
+        let mut rng = Pcg64::seeded(8);
+        for trial in 0..80 {
+            let p = random_problem(&mut rng, 3 + trial % 20, 3000, 40.0);
+            match (
+                NumericalAllocator::default().allocate(&p),
+                AnalyticalAllocator::default().allocate(&p),
+            ) {
+                (Ok(a), Ok(b)) => {
+                    assert_eq!(a.tau, b.tau, "trial {trial}");
+                    assert!(a.is_feasible(&p));
+                }
+                (Err(_), Err(_)) => {}
+                (x, y) => panic!("trial {trial}: {x:?} vs {y:?}"),
+            }
+        }
+    }
+
+    #[test]
+    fn alternating_converges_quickly() {
+        let p = two_class_problem(50, 9000, 30.0);
+        let solver = NumericalAllocator::with_method(Method::AlternatingFixedPoint);
+        let tau = solver.solve_alternating(&p).unwrap();
+        let newton = relax::solve(&p).unwrap().tau;
+        assert!((tau - newton).abs() < 1e-4 * newton);
+    }
+
+    #[test]
+    fn infeasible_cases_error() {
+        let p = two_class_problem(2, 100_000_000, 1.0);
+        assert!(NumericalAllocator::default().allocate(&p).is_err());
+        let alt = NumericalAllocator::with_method(Method::AlternatingFixedPoint);
+        assert!(alt.allocate(&p).is_err());
+    }
+}

@@ -1,0 +1,167 @@
+//! Shared machinery for the relaxed problem (18):
+//! computing `(a_k, b_k)`, the monotone function
+//! `g(τ) = Σ_k a_k/(τ + b_k) − d`, and its unique non-negative root.
+//!
+//! For `T > C⁰_k ∀k` every `a_k > 0`, so `g` is strictly decreasing and
+//! strictly convex on `τ ≥ 0`; if `g(0) ≥ 0` the relaxed optimum τ* is
+//! the unique root (Theorem 1 / eq. 29), otherwise the problem is
+//! infeasible (the cloudlet cannot absorb `d` samples inside `T` even
+//! without any compute).
+
+use super::{AllocError, Problem};
+use crate::math::roots;
+
+/// The relaxed-optimal point: τ* and the eq. (20) batch bounds at τ*.
+#[derive(Debug, Clone)]
+pub struct RelaxedSolution {
+    pub tau: f64,
+    pub batches: Vec<f64>,
+    pub newton_iterations: usize,
+}
+
+/// Validate `a_k > 0 ∀k` and return `(a, b)`.
+pub fn ab(p: &Problem) -> Result<(Vec<f64>, Vec<f64>), AllocError> {
+    let a = p.a();
+    let b = p.b();
+    if let Some((k, &ak)) = a.iter().enumerate().find(|(_, &ak)| ak <= 0.0) {
+        return Err(AllocError::Infeasible {
+            reason: format!(
+                "learner {k} cannot complete the model exchange within T \
+                 (a_k = {ak:.3} ≤ 0; C0 ≥ T)"
+            ),
+        });
+    }
+    Ok((a, b))
+}
+
+/// `g(τ) = Σ a_k/(τ+b_k) − d`.
+pub fn g(a: &[f64], b: &[f64], d: f64, tau: f64) -> f64 {
+    a.iter().zip(b).map(|(&ai, &bi)| ai / (tau + bi)).sum::<f64>() - d
+}
+
+/// `g'(τ) = −Σ a_k/(τ+b_k)²` (strictly negative).
+pub fn dg(a: &[f64], b: &[f64], tau: f64) -> f64 {
+    -a.iter()
+        .zip(b)
+        .map(|(&ai, &bi)| ai / ((tau + bi) * (tau + bi)))
+        .sum::<f64>()
+}
+
+/// Solve the relaxed problem by damped Newton on `g` (fast path;
+/// quadratic convergence from τ=0 because `g` is convex decreasing).
+pub fn solve(p: &Problem) -> Result<RelaxedSolution, AllocError> {
+    let (a, b) = ab(p)?;
+    let d = p.total_samples as f64;
+    let g0 = g(&a, &b, d, 0.0);
+    if g0 < 0.0 {
+        return Err(AllocError::Infeasible {
+            reason: format!(
+                "cloudlet cannot hold d = {} samples within T even at τ = 0 \
+                 (max capacity {:.1})",
+                p.total_samples,
+                g0 + d
+            ),
+        });
+    }
+    let root = roots::newton(
+        |t| g(&a, &b, d, t),
+        |t| dg(&a, &b, t),
+        0.0,
+        0.0,
+        1e-12,
+        200,
+    )
+    .ok_or_else(|| AllocError::NoConvergence { reason: "newton on g(τ)".into() })?;
+    // Residual sanity: |g| should be ≪ d.
+    if root.fx.abs() > 1e-6 * d.max(1.0) {
+        return Err(AllocError::NoConvergence {
+            reason: format!("residual g(τ*) = {} too large", root.fx),
+        });
+    }
+    let tau = root.x;
+    let batches = a.iter().zip(&b).map(|(&ai, &bi)| ai / (tau + bi)).collect();
+    Ok(RelaxedSolution { tau, batches, newton_iterations: root.iterations })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::alloc::testutil::{random_problem, two_class_problem};
+    use crate::util::rng::Pcg64;
+
+    #[test]
+    fn solve_satisfies_kkt_identities() {
+        let p = two_class_problem(10, 9000, 30.0);
+        let sol = solve(&p).unwrap();
+        assert!(sol.tau > 0.0);
+        // Σ d_k* = d (eq. 29)
+        let sum: f64 = sol.batches.iter().sum();
+        assert!((sum - 9000.0).abs() < 1e-6, "sum {sum}");
+        // every constraint tight: t_k(τ*, d_k*) = T
+        for (c, &dk) in p.coeffs.iter().zip(&sol.batches) {
+            assert!((c.time(sol.tau, dk) - 30.0).abs() < 1e-8);
+        }
+    }
+
+    #[test]
+    fn calibration_anchor_pedestrian_k50() {
+        // DESIGN §2: at (K=50, T=30, pedestrian) τ* ≈ 146 with the
+        // two-class coefficients.
+        let p = two_class_problem(50, 9000, 30.0);
+        let sol = solve(&p).unwrap();
+        assert!((130.0..165.0).contains(&sol.tau), "tau {}", sol.tau);
+    }
+
+    #[test]
+    fn infeasible_when_c0_exceeds_t() {
+        let mut p = two_class_problem(4, 100, 30.0);
+        p.coeffs[2].c0 = 31.0;
+        match solve(&p) {
+            Err(AllocError::Infeasible { reason }) => assert!(reason.contains("learner 2")),
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn infeasible_when_dataset_too_large() {
+        // huge d with tiny T: even τ=0 can't ship the data
+        let mut p = two_class_problem(2, 100_000_000, 1.0);
+        for c in &mut p.coeffs {
+            c.c0 = 0.5;
+        }
+        assert!(matches!(solve(&p), Err(AllocError::Infeasible { .. })));
+    }
+
+    #[test]
+    fn newton_converges_fast_on_random_problems() {
+        let mut rng = Pcg64::seeded(1);
+        for trial in 0..100 {
+            let k = 2 + (trial % 30);
+            let p = random_problem(&mut rng, k, 5_000, 60.0);
+            match solve(&p) {
+                Ok(sol) => {
+                    assert!(sol.newton_iterations < 60, "iters {}", sol.newton_iterations);
+                    assert!(sol.tau >= 0.0);
+                    let sum: f64 = sol.batches.iter().sum();
+                    assert!((sum - 5000.0).abs() < 1e-5);
+                }
+                Err(AllocError::Infeasible { .. }) => {} // fine for random draws
+                Err(e) => panic!("{e}"),
+            }
+        }
+    }
+
+    #[test]
+    fn g_monotone_decreasing() {
+        let p = two_class_problem(6, 1000, 30.0);
+        let (a, b) = ab(&p).unwrap();
+        let mut prev = f64::INFINITY;
+        for i in 0..50 {
+            let t = i as f64 * 2.0;
+            let v = g(&a, &b, 1000.0, t);
+            assert!(v < prev);
+            prev = v;
+            assert!(dg(&a, &b, t) < 0.0);
+        }
+    }
+}

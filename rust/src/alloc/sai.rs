@@ -1,0 +1,237 @@
+//! Suggest-and-improve engine (§IV): turns a candidate (possibly
+//! fractional, possibly infeasible) solution into a feasible *integer*
+//! allocation, then pushes τ upward as far as integer capacity allows.
+//!
+//! Steps:
+//! 1. **Feasibility descent** — while `capacity(τ) < d`, decrease τ
+//!    (the "improve" direction when the suggestion was too optimistic).
+//! 2. **Greedy ascent** — while `capacity(τ+1) ≥ d`, increase τ (the
+//!    relaxation's floor can be off by one after rounding).
+//! 3. **Batch fill** — distribute `d` integer samples under the KKT
+//!    caps `u_k = ⌊d_max_k(τ)⌋` (eq. 20), proportionally to the caps
+//!    (largest-remainder rounding), then repair any residual ±1s
+//!    greedily toward the learners with the most slack.
+//!
+//! Because `capacity` is monotone in τ, step 2 terminates at the
+//! *provably optimal* integer τ whenever the start point is ≤ optimum —
+//! which the relaxed bound guarantees (τ* is an upper bound, so
+//! `⌊τ*⌋ ≥ τ_opt − 1`... step 1 handles the overshoot).
+
+use super::{Allocation, AllocError, Problem};
+
+/// Outcome of the batch-fill stage.
+fn fill_batches(p: &Problem, tau: u64) -> Option<Vec<usize>> {
+    let d = p.total_samples;
+    let caps: Vec<usize> = p
+        .coeffs
+        .iter()
+        .map(|c| {
+            let dm = c.d_max(tau as f64, p.t_total);
+            if dm <= 0.0 {
+                0
+            } else {
+                dm.floor() as usize
+            }
+        })
+        .collect();
+    let total_cap: usize = caps.iter().sum();
+    if total_cap < d {
+        return None;
+    }
+    // proportional share with largest-remainder rounding, capped
+    let mut batches: Vec<usize> = Vec::with_capacity(p.k());
+    let mut fracs: Vec<(f64, usize)> = Vec::with_capacity(p.k());
+    let mut assigned = 0usize;
+    for (k, &cap) in caps.iter().enumerate() {
+        let share = d as f64 * cap as f64 / total_cap as f64;
+        let base = (share.floor() as usize).min(cap);
+        batches.push(base);
+        assigned += base;
+        fracs.push((share - base as f64, k));
+    }
+    // hand out the remainder to the largest fractional parts with slack
+    let mut remainder = d - assigned;
+    fracs.sort_by(|a, b| b.0.partial_cmp(&a.0).unwrap());
+    let mut cursor = 0;
+    while remainder > 0 {
+        // cycle through learners by descending fraction, respecting caps
+        let (_, k) = fracs[cursor % fracs.len()];
+        if batches[k] < caps[k] {
+            batches[k] += 1;
+            remainder -= 1;
+        }
+        cursor += 1;
+        if cursor > 4 * p.k() + 16 {
+            // every learner is at cap (cannot happen when total_cap ≥ d,
+            // but guard against float pathologies)
+            let have: usize = batches.iter().sum();
+            if have < d {
+                return None;
+            }
+            break;
+        }
+    }
+    debug_assert_eq!(batches.iter().sum::<usize>(), d);
+    Some(batches)
+}
+
+/// Run suggest-and-improve from iteration-count suggestion `tau0`.
+///
+/// `relaxed` carries the relaxed solution for reporting (pass zeros for
+/// heuristics that never solved the relaxation).
+pub fn improve(
+    p: &Problem,
+    tau0: f64,
+    relaxed_tau: f64,
+    relaxed_batches: Vec<f64>,
+    policy: &'static str,
+) -> Result<Allocation, AllocError> {
+    let d = p.total_samples as u64;
+    let mut steps = 0usize;
+
+    // 1. clamp + descend to feasibility
+    let mut tau = tau0.max(1.0).floor() as u64;
+    while tau > 1 && p.capacity(tau) < d {
+        // geometric descent first (suggestion can be far off for bad
+        // starts), then linear close-in
+        let next = if p.capacity(tau / 2) >= d { tau - 1 } else { tau / 2 };
+        tau = next.max(1);
+        steps += 1;
+        if steps > 10_000 {
+            return Err(AllocError::NoConvergence { reason: "SAI descent stuck".into() });
+        }
+    }
+    if p.capacity(tau) < d {
+        return Err(AllocError::Infeasible {
+            reason: format!(
+                "no integer allocation fits d = {d} within T = {} (even τ = 1 gives \
+                 capacity {})",
+                p.t_total,
+                p.capacity(1)
+            ),
+        });
+    }
+
+    // 2. ascent while capacity permits. capacity(τ) is monotone
+    // non-increasing, so instead of +1 stepping (O(Δτ) evaluations —
+    // the naive SAI loop; see benches/solvers.rs for the before/after)
+    // we bracket exponentially and binary-search the boundary:
+    // O(log Δτ) capacity evaluations.
+    if p.capacity(tau + 1) >= d {
+        // find hi with capacity(hi) < d
+        let mut step = 1u64;
+        let mut lo = tau; // feasible
+        let mut hi;
+        loop {
+            hi = lo + step;
+            steps += 1;
+            if p.capacity(hi) < d {
+                break;
+            }
+            lo = hi;
+            step = step.saturating_mul(2);
+            if lo > 1 << 40 {
+                // effectively unbounded τ (degenerate tiny-d instances)
+                hi = lo;
+                break;
+            }
+        }
+        // invariant: capacity(lo) ≥ d > capacity(hi)
+        while hi - lo > 1 {
+            let mid = lo + (hi - lo) / 2;
+            steps += 1;
+            if p.capacity(mid) >= d {
+                lo = mid;
+            } else {
+                hi = mid;
+            }
+        }
+        tau = lo;
+    }
+
+    // 3. batch fill
+    let batches = fill_batches(p, tau).ok_or_else(|| AllocError::NoConvergence {
+        reason: "batch fill failed at feasible τ".into(),
+    })?;
+
+    let alloc = Allocation {
+        tau,
+        batches,
+        relaxed_tau,
+        relaxed_batches,
+        policy,
+        sai_steps: steps,
+    };
+    debug_assert!(alloc.is_feasible(p), "SAI produced infeasible allocation");
+    Ok(alloc)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::alloc::testutil::{random_problem, two_class_problem};
+    use crate::util::rng::Pcg64;
+
+    #[test]
+    fn improve_reaches_capacity_optimum_from_below_and_above() {
+        let p = two_class_problem(10, 9000, 30.0);
+        let from_below = improve(&p, 1.0, 0.0, vec![], "t").unwrap();
+        let from_above = improve(&p, 1e6, 0.0, vec![], "t").unwrap();
+        assert_eq!(from_below.tau, from_above.tau);
+        assert!(from_below.is_feasible(&p));
+        assert!(from_above.is_feasible(&p));
+        // optimality: τ+1 must not fit
+        assert!(p.capacity(from_below.tau + 1) < 9000);
+    }
+
+    #[test]
+    fn batches_respect_kkt_caps() {
+        let p = two_class_problem(8, 5000, 30.0);
+        let a = improve(&p, 10.0, 0.0, vec![], "t").unwrap();
+        for (k, (&dk, c)) in a.batches.iter().zip(&p.coeffs).enumerate() {
+            let cap = c.d_max(a.tau as f64, p.t_total).floor() as usize;
+            assert!(dk <= cap, "learner {k}: {dk} > cap {cap}");
+        }
+        assert_eq!(a.batches.iter().sum::<usize>(), 5000);
+    }
+
+    #[test]
+    fn proportional_fill_favors_fast_learners() {
+        let p = two_class_problem(10, 9000, 30.0);
+        let a = improve(&p, 50.0, 0.0, vec![], "t").unwrap();
+        // even indices are fast in the test fixture
+        let fast: usize = a.batches.iter().step_by(2).sum();
+        let slow: usize = a.batches.iter().skip(1).step_by(2).sum();
+        assert!(
+            fast > 3 * slow,
+            "fast learners should carry most samples: {fast} vs {slow}"
+        );
+    }
+
+    #[test]
+    fn infeasible_when_capacity_short() {
+        let p = two_class_problem(2, 10_000_000, 5.0);
+        assert!(matches!(
+            improve(&p, 3.0, 0.0, vec![], "t"),
+            Err(AllocError::Infeasible { .. })
+        ));
+    }
+
+    #[test]
+    fn random_problems_always_feasible_or_infeasible_error() {
+        let mut rng = Pcg64::seeded(3);
+        for trial in 0..200 {
+            let k = 2 + trial % 40;
+            let d = 100 + (trial * 37) % 20_000;
+            let p = random_problem(&mut rng, k, d, 40.0);
+            match improve(&p, 7.0, 0.0, vec![], "t") {
+                Ok(a) => {
+                    assert!(a.is_feasible(&p), "trial {trial}");
+                    assert!(p.capacity(a.tau + 1) < d as u64, "τ not maximal, trial {trial}");
+                }
+                Err(AllocError::Infeasible { .. }) => {}
+                Err(e) => panic!("trial {trial}: {e}"),
+            }
+        }
+    }
+}

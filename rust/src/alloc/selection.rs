@@ -1,0 +1,174 @@
+//! Learner **selection** — the paper's §I future-work axis ("node
+//! selection/arrangements"), built as an allocation pre-stage: given a
+//! candidate pool of edge nodes, choose which subset to enrol.
+//!
+//! Structure of the problem under each policy:
+//!
+//! * **Adaptive** (UB-Analytical & co.): enrolling another node can only
+//!   add capacity — the allocator may always hand it `d_k = 0`... except
+//!   every enrolled node pays its `C⁰` model exchange only if used, and
+//!   our allocators assign `d_k ≥ 0`. Hence adaptive τ is **monotone**
+//!   in the enrolled set, and "enrol everyone" is optimal
+//!   ([`adaptive_is_monotone`] is property-tested).
+//! * **ETA**: equal batches mean one slow/remote node drags τ for the
+//!   whole cloudlet — there is an *optimal subset size*, and the greedy
+//!   sweep ([`best_eta_subset`]) finds the best prefix by per-node
+//!   throughput score. This quantifies a second, structural advantage of
+//!   adaptive allocation: it never needs node triage.
+
+use super::eta::EtaAllocator;
+use super::{AllocError, Problem, TaskAllocator};
+use crate::learner::Coeffs;
+
+/// Score a learner for ETA triage: iterations/second it can sustain on
+/// an equal share (smaller time-per-(sample·iter) + lighter exchange is
+/// better). Lower score = keep first.
+fn eta_cost(c: &Coeffs, share: f64) -> f64 {
+    c.c2 * share + c.c1 * share + c.c0
+}
+
+/// Result of a subset search.
+#[derive(Debug, Clone)]
+pub struct Selection {
+    /// Indices of the enrolled learners (into the original problem).
+    pub enrolled: Vec<usize>,
+    /// τ achieved by the policy on the enrolled subset.
+    pub tau: u64,
+}
+
+/// Restrict a problem to a subset of learners.
+pub fn subproblem(p: &Problem, idx: &[usize]) -> Problem {
+    Problem {
+        coeffs: idx.iter().map(|&i| p.coeffs[i]).collect(),
+        total_samples: p.total_samples,
+        t_total: p.t_total,
+    }
+}
+
+/// Best ETA subset: sort candidates by their equal-share cost, sweep
+/// prefix sizes 1..=K, return the prefix that maximizes ETA's τ.
+/// O(K² ) ETA solves — fine for cloudlet scales.
+pub fn best_eta_subset(p: &Problem) -> Result<Selection, AllocError> {
+    let k = p.k();
+    if k == 0 {
+        return Err(AllocError::Infeasible { reason: "no candidates".into() });
+    }
+    let mut order: Vec<usize> = (0..k).collect();
+    // rank by cost on a K-way equal share (a neutral reference share)
+    let ref_share = p.total_samples as f64 / k as f64;
+    order.sort_by(|&a, &b| {
+        eta_cost(&p.coeffs[a], ref_share)
+            .partial_cmp(&eta_cost(&p.coeffs[b], ref_share))
+            .unwrap()
+    });
+    let mut best: Option<Selection> = None;
+    for take in 1..=k {
+        let subset = &order[..take];
+        let sub = subproblem(p, subset);
+        if let Ok(a) = EtaAllocator.allocate(&sub) {
+            if best.as_ref().map(|b| a.tau > b.tau).unwrap_or(true) {
+                best = Some(Selection { enrolled: subset.to_vec(), tau: a.tau });
+            }
+        }
+    }
+    best.ok_or(AllocError::Infeasible {
+        reason: "no feasible ETA subset (even the best single node fails)".into(),
+    })
+}
+
+/// τ of the adaptive policy on the full pool (the optimal adaptive
+/// "selection" — enrolment is free under adaptive allocation).
+pub fn adaptive_full_pool(p: &Problem) -> Result<Selection, AllocError> {
+    let a = super::analytical::AnalyticalAllocator::default().allocate(p)?;
+    Ok(Selection { enrolled: (0..p.k()).collect(), tau: a.tau })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::alloc::testutil::{random_problem, two_class_problem};
+    use crate::alloc::Policy;
+    use crate::util::rng::Pcg64;
+
+    /// Pool with one pathologically slow node appended.
+    fn pool_with_straggler(k: usize) -> Problem {
+        let mut p = two_class_problem(k, 5000, 30.0);
+        p.coeffs.push(Coeffs { c2: 0.5, c1: 1e-4, c0: 1.0 }); // ~40x slower
+        p
+    }
+
+    #[test]
+    fn eta_triage_excludes_the_straggler() {
+        let p = pool_with_straggler(10);
+        let sel = best_eta_subset(&p).unwrap();
+        assert!(
+            !sel.enrolled.contains(&10),
+            "straggler (index 10) should be triaged out: {:?}",
+            sel.enrolled
+        );
+        // and triage strictly beats naive all-in ETA — here the straggler
+        // makes all-in ETA outright infeasible (it cannot finish one
+        // iteration on its 1/11 share within T), while triage still
+        // achieves a healthy τ
+        match EtaAllocator.allocate(&p) {
+            Ok(naive) => assert!(sel.tau > naive.tau, "{} vs naive {}", sel.tau, naive.tau),
+            Err(AllocError::Infeasible { .. }) => {} // even stronger win
+            Err(e) => panic!("{e}"),
+        }
+        assert!(sel.tau >= 10, "triaged τ {}", sel.tau);
+    }
+
+    #[test]
+    fn adaptive_is_monotone_in_enrolment() {
+        let mut rng = Pcg64::seeded(31);
+        for trial in 0..40 {
+            let p = random_problem(&mut rng, 3 + trial % 10, 2000, 40.0);
+            let full = Policy::Analytical.allocator().allocate(&p);
+            // drop one learner
+            let idx: Vec<usize> = (1..p.k()).collect();
+            let sub = subproblem(&p, &idx);
+            let part = Policy::Analytical.allocator().allocate(&sub);
+            if let (Ok(f), Ok(s)) = (full, part) {
+                assert!(
+                    f.tau >= s.tau,
+                    "trial {trial}: removing a node improved adaptive τ ({} > {})",
+                    s.tau,
+                    f.tau
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn adaptive_full_pool_beats_best_eta_subset() {
+        let p = pool_with_straggler(10);
+        let ada = adaptive_full_pool(&p).unwrap();
+        let eta = best_eta_subset(&p).unwrap();
+        assert!(ada.tau > eta.tau);
+        assert_eq!(ada.enrolled.len(), 11); // adaptive keeps everyone
+    }
+
+    #[test]
+    fn subproblem_preserves_coeffs() {
+        let p = two_class_problem(5, 100, 10.0);
+        let sub = subproblem(&p, &[4, 1]);
+        assert_eq!(sub.k(), 2);
+        assert_eq!(sub.coeffs[0], p.coeffs[4]);
+        assert_eq!(sub.coeffs[1], p.coeffs[1]);
+        assert_eq!(sub.total_samples, 100);
+    }
+
+    #[test]
+    fn empty_pool_errors() {
+        let p = Problem { coeffs: vec![], total_samples: 10, t_total: 1.0 };
+        assert!(best_eta_subset(&p).is_err());
+    }
+
+    #[test]
+    fn single_node_pool_selected() {
+        let p = two_class_problem(1, 100, 300.0);
+        let sel = best_eta_subset(&p).unwrap();
+        assert_eq!(sel.enrolled, vec![0]);
+        assert!(sel.tau >= 1);
+    }
+}

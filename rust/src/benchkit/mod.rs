@@ -1,0 +1,198 @@
+//! Micro-benchmark harness (no criterion offline): adaptive warmup,
+//! batched timing to amortize clock overhead, robust statistics, and a
+//! criterion-style one-line report. Used by every target in `benches/`
+//! (which are `harness = false` binaries).
+
+use std::hint::black_box;
+use std::time::{Duration, Instant};
+
+use crate::util::stats::{percentile, Welford};
+use crate::util::table::fdur;
+
+/// Result of one benchmark.
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    /// Seconds per iteration.
+    pub mean: f64,
+    pub median: f64,
+    pub std: f64,
+    pub p05: f64,
+    pub p95: f64,
+    pub iters_total: u64,
+    pub samples: usize,
+}
+
+impl BenchResult {
+    pub fn report(&self) -> String {
+        format!(
+            "{:<44} {:>12}/iter  (median {:>10}, p95 {:>10}, ±{:>9}, n={})",
+            self.name,
+            fdur(self.mean),
+            fdur(self.median),
+            fdur(self.p95),
+            fdur(self.std),
+            self.iters_total,
+        )
+    }
+
+    /// Iterations per second.
+    pub fn throughput(&self) -> f64 {
+        1.0 / self.mean
+    }
+}
+
+/// Benchmark configuration.
+#[derive(Debug, Clone)]
+pub struct Bencher {
+    /// Target measurement time per benchmark.
+    pub measure_time: Duration,
+    /// Warmup time before sampling.
+    pub warmup_time: Duration,
+    /// Number of samples to split the measurement into.
+    pub samples: usize,
+}
+
+impl Default for Bencher {
+    fn default() -> Self {
+        // Keep defaults modest: the bench suite covers many cases.
+        Self {
+            measure_time: Duration::from_millis(600),
+            warmup_time: Duration::from_millis(150),
+            samples: 30,
+        }
+    }
+}
+
+impl Bencher {
+    pub fn quick() -> Self {
+        Self {
+            measure_time: Duration::from_millis(200),
+            warmup_time: Duration::from_millis(50),
+            samples: 15,
+        }
+    }
+
+    /// Benchmark `f`, returning per-iteration timing statistics.
+    /// The closure's return value is black-boxed so work isn't elided.
+    pub fn bench<T>(&self, name: &str, mut f: impl FnMut() -> T) -> BenchResult {
+        // 1. estimate cost with a single call
+        let t0 = Instant::now();
+        black_box(f());
+        let once = t0.elapsed().max(Duration::from_nanos(20));
+
+        // 2. warmup & calibrate iters per sample
+        let mut iters_per_sample =
+            (self.measure_time.as_secs_f64() / self.samples as f64 / once.as_secs_f64())
+                .ceil()
+                .max(1.0) as u64;
+        let warm_end = Instant::now() + self.warmup_time;
+        while Instant::now() < warm_end {
+            black_box(f());
+        }
+        // re-estimate after warmup (first call often pays cache misses)
+        let t1 = Instant::now();
+        black_box(f());
+        let once2 = t1.elapsed().max(Duration::from_nanos(20));
+        iters_per_sample = iters_per_sample.max(
+            (self.measure_time.as_secs_f64() / self.samples as f64 / once2.as_secs_f64()).ceil()
+                as u64,
+        );
+        iters_per_sample = iters_per_sample.clamp(1, 50_000_000);
+
+        // 3. sample
+        let mut per_iter = Vec::with_capacity(self.samples);
+        let mut w = Welford::new();
+        let mut total = 0u64;
+        for _ in 0..self.samples {
+            let t = Instant::now();
+            for _ in 0..iters_per_sample {
+                black_box(f());
+            }
+            let dt = t.elapsed().as_secs_f64() / iters_per_sample as f64;
+            per_iter.push(dt);
+            w.push(dt);
+            total += iters_per_sample;
+        }
+
+        BenchResult {
+            name: name.to_string(),
+            mean: w.mean(),
+            median: percentile(&per_iter, 50.0),
+            std: w.std(),
+            p05: percentile(&per_iter, 5.0),
+            p95: percentile(&per_iter, 95.0),
+            iters_total: total,
+            samples: self.samples,
+        }
+    }
+
+    /// Bench and print the report line; returns the result for tables.
+    pub fn run<T>(&self, name: &str, f: impl FnMut() -> T) -> BenchResult {
+        let r = self.bench(name, f);
+        println!("{}", r.report());
+        r
+    }
+}
+
+/// Group header for bench output.
+pub fn group(title: &str) {
+    println!("\n=== {title} ===");
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_measures_something() {
+        let b = Bencher::quick();
+        let r = b.bench("spin", || {
+            let mut acc = 0u64;
+            for i in 0..100u64 {
+                acc = acc.wrapping_add(i * i);
+            }
+            acc
+        });
+        assert!(r.mean > 0.0);
+        assert!(r.median > 0.0);
+        assert!(r.iters_total >= r.samples as u64);
+        assert!(r.p05 <= r.p95);
+        assert!(r.throughput() > 0.0);
+    }
+
+    #[test]
+    fn bench_orders_cheap_vs_expensive() {
+        let b = Bencher::quick();
+        let cheap = b.bench("cheap", || black_box(1u64) + 1);
+        let costly = b.bench("costly", || {
+            let mut acc = 0f64;
+            for i in 0..5000 {
+                acc += (i as f64).sqrt();
+            }
+            acc
+        });
+        assert!(
+            costly.mean > cheap.mean * 5.0,
+            "cheap {} vs costly {}",
+            cheap.mean,
+            costly.mean
+        );
+    }
+
+    #[test]
+    fn report_formats() {
+        let r = BenchResult {
+            name: "x".into(),
+            mean: 1e-6,
+            median: 1e-6,
+            std: 1e-8,
+            p05: 9e-7,
+            p95: 1.1e-6,
+            iters_total: 1000,
+            samples: 10,
+        };
+        let s = r.report();
+        assert!(s.contains("µs"), "{s}");
+    }
+}

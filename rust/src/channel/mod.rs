@@ -1,0 +1,218 @@
+//! Wireless channel substrate: the 802.11-type link model of Table I.
+//!
+//! The paper's orchestrator↔learner links use the empirical 2.4 GHz
+//! attenuation model of Cebula et al. (“7 + 2.1 log(R) dB”, i.e. a 7 dB
+//! intercept with path-loss exponent 2.1), transmit power 23 dBm, node
+//! bandwidth W = 5 MHz carved from a 100 MHz system band, and noise PSD
+//! −174 dBm/Hz. The achievable rate is the Shannon capacity
+//! `R_k = W log2(1 + P·h_k / (N0·W))` (eq. 9), and links are assumed
+//! reciprocal within a global cycle (eq. 11).
+//!
+//! Optional impairments beyond the paper's baseline: log-normal shadowing
+//! and Rayleigh small-scale fading (both off by default so the paper's
+//! figures reproduce deterministically), plus per-cycle redraw support
+//! for the dynamic-allocation experiments.
+
+use crate::util::rng::{Pcg64, Rng};
+
+pub mod spec;
+pub use spec::ChannelSpec;
+
+/// dBm → watts.
+pub fn dbm_to_watts(dbm: f64) -> f64 {
+    1e-3 * 10f64.powf(dbm / 10.0)
+}
+
+/// watts → dBm.
+pub fn watts_to_dbm(w: f64) -> f64 {
+    10.0 * (w / 1e-3).log10()
+}
+
+/// dB ratio → linear.
+pub fn db_to_lin(db: f64) -> f64 {
+    10f64.powf(db / 10.0)
+}
+
+/// linear ratio → dB.
+pub fn lin_to_db(lin: f64) -> f64 {
+    10.0 * lin.log10()
+}
+
+/// Log-distance path loss `PL(d) = intercept + 10·n·log10(d)` dB.
+///
+/// Table I's "7 + 2.1 log(R) dB" is this model with intercept 7 dB and
+/// exponent n = 2.1 (the cited Cebula et al. 802.11 measurements).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct PathLoss {
+    /// Intercept at 1 m, in dB.
+    pub intercept_db: f64,
+    /// Path-loss exponent n.
+    pub exponent: f64,
+}
+
+impl Default for PathLoss {
+    fn default() -> Self {
+        Self { intercept_db: 7.0, exponent: 2.1 }
+    }
+}
+
+impl PathLoss {
+    pub fn new(intercept_db: f64, exponent: f64) -> Self {
+        Self { intercept_db, exponent }
+    }
+
+    /// Attenuation in dB at distance `d` meters (≥ 1 m is enforced so the
+    /// near-field doesn't produce gain).
+    pub fn loss_db(&self, d_m: f64) -> f64 {
+        let d = d_m.max(1.0);
+        self.intercept_db + 10.0 * self.exponent * d.log10()
+    }
+
+    /// Linear power gain |h|² at distance `d` (≤ 1).
+    pub fn gain(&self, d_m: f64) -> f64 {
+        db_to_lin(-self.loss_db(d_m))
+    }
+}
+
+/// One orchestrator↔learner link with everything needed for eq. (9).
+#[derive(Debug, Clone)]
+pub struct Link {
+    /// Distance to the orchestrator, meters.
+    pub distance_m: f64,
+    /// Allocated node bandwidth W, Hz.
+    pub bandwidth_hz: f64,
+    /// Transmit power, dBm (both directions; the paper uses the same P).
+    pub tx_power_dbm: f64,
+    /// Noise power spectral density, dBm/Hz.
+    pub noise_psd_dbm_hz: f64,
+    /// Path loss model.
+    pub pathloss: PathLoss,
+    /// Extra channel gain factor from shadowing/fading (linear, 1 = none).
+    pub fading_gain: f64,
+}
+
+impl Link {
+    /// Deterministic link (no fading), Table I defaults except distance.
+    pub fn at_distance(distance_m: f64) -> Self {
+        Self {
+            distance_m,
+            bandwidth_hz: 5e6,
+            tx_power_dbm: 23.0,
+            noise_psd_dbm_hz: -174.0,
+            pathloss: PathLoss::default(),
+            fading_gain: 1.0,
+        }
+    }
+
+    /// Received SNR (linear).
+    pub fn snr(&self) -> f64 {
+        let p_rx = dbm_to_watts(self.tx_power_dbm) * self.pathloss.gain(self.distance_m)
+            * self.fading_gain;
+        let noise = dbm_to_watts(self.noise_psd_dbm_hz) * self.bandwidth_hz;
+        p_rx / noise
+    }
+
+    /// Shannon rate `W·log2(1 + SNR)` in bits/s — the `R_k` of eq. (9).
+    pub fn rate_bps(&self) -> f64 {
+        self.bandwidth_hz * (1.0 + self.snr()).log2()
+    }
+
+    /// Time to move `bits` over this link, seconds.
+    pub fn tx_time(&self, bits: f64) -> f64 {
+        bits / self.rate_bps()
+    }
+
+    /// Redraw small-scale fading: Rayleigh power gain (exponential with
+    /// unit mean) combined with log-normal shadowing of `shadow_sigma_db`.
+    /// Paper baseline: call with (0.0, false) → deterministic.
+    pub fn redraw_fading(&mut self, rng: &mut Pcg64, shadow_sigma_db: f64, rayleigh: bool) {
+        let mut g = 1.0;
+        if shadow_sigma_db > 0.0 {
+            g *= db_to_lin(rng.normal_ms(0.0, shadow_sigma_db));
+        }
+        if rayleigh {
+            let amp = rng.rayleigh(1.0 / (2.0f64).sqrt()); // E[amp²]=1
+            g *= amp * amp;
+        }
+        self.fading_gain = g;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn unit_conversions_round_trip() {
+        for dbm in [-100.0, 0.0, 23.0] {
+            assert!((watts_to_dbm(dbm_to_watts(dbm)) - dbm).abs() < 1e-9);
+        }
+        assert!((dbm_to_watts(23.0) - 0.1995).abs() < 1e-3);
+        assert!((db_to_lin(3.0103) - 2.0).abs() < 1e-3);
+        assert!((lin_to_db(100.0) - 20.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn pathloss_matches_table1_form() {
+        let pl = PathLoss::default();
+        // 7 + 2.1·10·log10(50) ≈ 42.68 dB at the 50 m proximity of Table I
+        assert!((pl.loss_db(50.0) - (7.0 + 21.0 * 50f64.log10())).abs() < 1e-9);
+        assert!((pl.loss_db(50.0) - 42.68).abs() < 0.01);
+        // monotone in distance, clamped below 1 m
+        assert!(pl.loss_db(100.0) > pl.loss_db(50.0));
+        assert_eq!(pl.loss_db(0.5), pl.loss_db(1.0));
+        // gain is the inverse mapping
+        assert!((lin_to_db(pl.gain(50.0)) + pl.loss_db(50.0)).abs() < 1e-9);
+    }
+
+    #[test]
+    fn link_snr_and_rate_at_50m() {
+        let link = Link::at_distance(50.0);
+        // noise floor: −174 dBm/Hz + 10log10(5 MHz) ≈ −107 dBm
+        let noise_dbm = watts_to_dbm(dbm_to_watts(link.noise_psd_dbm_hz) * link.bandwidth_hz);
+        assert!((noise_dbm + 107.0).abs() < 0.1);
+        // SNR ≈ 23 − 42.68 + 107 ≈ 87.3 dB
+        assert!((lin_to_db(link.snr()) - 87.3).abs() < 0.2);
+        // rate = 5e6 · log2(1+SNR) ≈ 145 Mbps
+        let r = link.rate_bps();
+        assert!((140e6..150e6).contains(&r), "rate {r}");
+    }
+
+    #[test]
+    fn rate_decreases_with_distance() {
+        let rates: Vec<f64> = [5.0, 20.0, 50.0, 200.0]
+            .iter()
+            .map(|&d| Link::at_distance(d).rate_bps())
+            .collect();
+        assert!(rates.windows(2).all(|w| w[0] > w[1]), "{rates:?}");
+    }
+
+    #[test]
+    fn tx_time_linear_in_bits() {
+        let link = Link::at_distance(50.0);
+        let t1 = link.tx_time(1e6);
+        let t2 = link.tx_time(2e6);
+        assert!((t2 - 2.0 * t1).abs() < 1e-12);
+        // MNIST batch of the paper: 376.32 Mbit at ~145 Mbps ≈ 2.6 s
+        let t = link.tx_time(376.32e6);
+        assert!((2.0..3.5).contains(&t), "t={t}");
+    }
+
+    #[test]
+    fn fading_redraw_statistics() {
+        let mut rng = Pcg64::seeded(1);
+        let mut link = Link::at_distance(50.0);
+        let mut mean = 0.0;
+        let n = 20_000;
+        for _ in 0..n {
+            link.redraw_fading(&mut rng, 0.0, true);
+            mean += link.fading_gain;
+        }
+        mean /= n as f64;
+        // Rayleigh power gain has unit mean
+        assert!((mean - 1.0).abs() < 0.03, "mean {mean}");
+        // deterministic when disabled
+        link.redraw_fading(&mut rng, 0.0, false);
+        assert_eq!(link.fading_gain, 1.0);
+    }
+}

@@ -1,0 +1,123 @@
+//! JSON-loadable channel parameterization (the Table I block of a
+//! scenario config file).
+
+use crate::channel::{Link, PathLoss};
+use crate::util::json::{Json, JsonError};
+
+/// Channel parameters shared by all links of a cloudlet.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ChannelSpec {
+    pub bandwidth_hz: f64,
+    pub tx_power_dbm: f64,
+    pub noise_psd_dbm_hz: f64,
+    pub pathloss_intercept_db: f64,
+    pub pathloss_exponent: f64,
+    /// Log-normal shadowing sigma in dB (0 disables).
+    pub shadow_sigma_db: f64,
+    /// Rayleigh small-scale fading on/off.
+    pub rayleigh: bool,
+}
+
+impl Default for ChannelSpec {
+    /// Table I values.
+    fn default() -> Self {
+        Self {
+            bandwidth_hz: 5e6,
+            tx_power_dbm: 23.0,
+            noise_psd_dbm_hz: -174.0,
+            pathloss_intercept_db: 7.0,
+            pathloss_exponent: 2.1,
+            shadow_sigma_db: 0.0,
+            rayleigh: false,
+        }
+    }
+}
+
+impl ChannelSpec {
+    /// Instantiate a deterministic link at the given distance.
+    pub fn link(&self, distance_m: f64) -> Link {
+        Link {
+            distance_m,
+            bandwidth_hz: self.bandwidth_hz,
+            tx_power_dbm: self.tx_power_dbm,
+            noise_psd_dbm_hz: self.noise_psd_dbm_hz,
+            pathloss: PathLoss::new(self.pathloss_intercept_db, self.pathloss_exponent),
+            fading_gain: 1.0,
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("bandwidth_hz", Json::Num(self.bandwidth_hz)),
+            ("tx_power_dbm", Json::Num(self.tx_power_dbm)),
+            ("noise_psd_dbm_hz", Json::Num(self.noise_psd_dbm_hz)),
+            ("pathloss_intercept_db", Json::Num(self.pathloss_intercept_db)),
+            ("pathloss_exponent", Json::Num(self.pathloss_exponent)),
+            ("shadow_sigma_db", Json::Num(self.shadow_sigma_db)),
+            ("rayleigh", Json::Bool(self.rayleigh)),
+        ])
+    }
+
+    pub fn from_json(v: &Json) -> Result<Self, JsonError> {
+        let d = Self::default();
+        let f = |key: &str, dflt: f64| -> Result<f64, JsonError> {
+            v.opt(key).map(|x| x.as_f64()).transpose().map(|o| o.unwrap_or(dflt))
+        };
+        Ok(Self {
+            bandwidth_hz: f("bandwidth_hz", d.bandwidth_hz)?,
+            tx_power_dbm: f("tx_power_dbm", d.tx_power_dbm)?,
+            noise_psd_dbm_hz: f("noise_psd_dbm_hz", d.noise_psd_dbm_hz)?,
+            pathloss_intercept_db: f("pathloss_intercept_db", d.pathloss_intercept_db)?,
+            pathloss_exponent: f("pathloss_exponent", d.pathloss_exponent)?,
+            shadow_sigma_db: f("shadow_sigma_db", d.shadow_sigma_db)?,
+            rayleigh: v
+                .opt("rayleigh")
+                .map(|x| x.as_bool())
+                .transpose()?
+                .unwrap_or(d.rayleigh),
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_are_table1() {
+        let s = ChannelSpec::default();
+        assert_eq!(s.bandwidth_hz, 5e6);
+        assert_eq!(s.tx_power_dbm, 23.0);
+        assert_eq!(s.noise_psd_dbm_hz, -174.0);
+        assert_eq!(s.pathloss_exponent, 2.1);
+        assert!(!s.rayleigh);
+    }
+
+    #[test]
+    fn json_round_trip() {
+        let mut s = ChannelSpec::default();
+        s.shadow_sigma_db = 4.0;
+        s.rayleigh = true;
+        let j = s.to_json();
+        let back = ChannelSpec::from_json(&j).unwrap();
+        assert_eq!(s, back);
+    }
+
+    #[test]
+    fn from_json_partial_uses_defaults() {
+        let j = Json::parse(r#"{"tx_power_dbm": 10}"#).unwrap();
+        let s = ChannelSpec::from_json(&j).unwrap();
+        assert_eq!(s.tx_power_dbm, 10.0);
+        assert_eq!(s.bandwidth_hz, 5e6);
+    }
+
+    #[test]
+    fn link_inherits_spec() {
+        let mut s = ChannelSpec::default();
+        s.bandwidth_hz = 10e6;
+        let l = s.link(25.0);
+        assert_eq!(l.bandwidth_hz, 10e6);
+        assert_eq!(l.distance_m, 25.0);
+        assert!(l.rate_bps() > 0.0);
+    }
+}

@@ -1,0 +1,102 @@
+//! Learner compute-capability substrate.
+//!
+//! The paper abstracts each learner's processing as a frequency `f_k`
+//! (eq. 10: `t_k^C = d_k·C_m / f_k`). Real devices sustain only a
+//! fraction of nominal clock×IPC on dense fwd/bwd, so we model
+//! `effective_flops = freq_hz × flops_per_cycle` and calibrate the two
+//! device classes of Section V-A against the paper's own reported τ
+//! values (see EXPERIMENTS.md §Calibration):
+//!
+//! * **laptop-class** (fixed/portable devices, 2.4 GHz): 0.5 flop/cycle
+//!   → 1.2 GFLOP/s sustained.
+//! * **rpi-class** (micro-controllers, 700 MHz): 0.25 flop/cycle
+//!   → 175 MFLOP/s sustained.
+//!
+//! With these, the MNIST (K=10, T=120 s) point reproduces the paper's
+//! ETA τ=3 / adaptive τ=12 exactly.
+
+use crate::util::json::{Json, JsonError};
+
+/// A learner's compute capability.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ComputeProfile {
+    /// Nominal processor frequency dedicated to the learning task, Hz.
+    pub freq_hz: f64,
+    /// Sustained floating point ops per cycle on the MLP workload.
+    pub flops_per_cycle: f64,
+}
+
+impl ComputeProfile {
+    /// Laptop/tablet/road-side-unit class of Section V-A.
+    pub fn laptop() -> Self {
+        Self { freq_hz: 2.4e9, flops_per_cycle: 0.5 }
+    }
+
+    /// Raspberry-Pi/micro-controller class of Section V-A.
+    pub fn rpi() -> Self {
+        Self { freq_hz: 700e6, flops_per_cycle: 0.25 }
+    }
+
+    pub fn custom(freq_hz: f64, flops_per_cycle: f64) -> Self {
+        Self { freq_hz, flops_per_cycle }
+    }
+
+    /// Effective sustained FLOP/s — the `f_k` used in eq. (10).
+    pub fn effective_flops(&self) -> f64 {
+        self.freq_hz * self.flops_per_cycle
+    }
+
+    /// Seconds for `flops` floating point operations.
+    pub fn time_for(&self, flops: f64) -> f64 {
+        flops / self.effective_flops()
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("freq_hz", Json::Num(self.freq_hz)),
+            ("flops_per_cycle", Json::Num(self.flops_per_cycle)),
+        ])
+    }
+
+    pub fn from_json(v: &Json) -> Result<Self, JsonError> {
+        Ok(Self {
+            freq_hz: v.get("freq_hz")?.as_f64()?,
+            flops_per_cycle: v
+                .opt("flops_per_cycle")
+                .map(|x| x.as_f64())
+                .transpose()?
+                .unwrap_or(1.0),
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn class_profiles_match_calibration() {
+        assert_eq!(ComputeProfile::laptop().effective_flops(), 1.2e9);
+        assert_eq!(ComputeProfile::rpi().effective_flops(), 175e6);
+        // heterogeneity ratio the allocator exploits
+        let ratio =
+            ComputeProfile::laptop().effective_flops() / ComputeProfile::rpi().effective_flops();
+        assert!((ratio - 48.0 / 7.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn time_for_is_linear() {
+        let p = ComputeProfile::rpi();
+        assert!((p.time_for(175e6) - 1.0).abs() < 1e-12);
+        assert!((p.time_for(350e6) - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn json_round_trip_and_default_fpc() {
+        let p = ComputeProfile::custom(1e9, 0.75);
+        let back = ComputeProfile::from_json(&p.to_json()).unwrap();
+        assert_eq!(p, back);
+        let j = Json::parse(r#"{"freq_hz": 2e9}"#).unwrap();
+        assert_eq!(ComputeProfile::from_json(&j).unwrap().flops_per_cycle, 1.0);
+    }
+}

@@ -1,0 +1,522 @@
+//! The MEL **orchestrator** — the paper's L3 coordination loop made
+//! executable. Per global cycle (§II-B):
+//!
+//! 1. **Allocate** — run the configured [`Policy`] on the current
+//!    channel/compute state → `(τ, {d_k})`.
+//! 2. **Dispatch** — draw each learner's random batch (footnote 1) and
+//!    account the send time `t_k^S` on the simulated clock.
+//! 3. **Local learning** — every learner runs τ local full-batch SGD
+//!    iterations on its batch, executed for real through the PJRT
+//!    runtime (bucketed, mask-padded gradient accumulation). Learner
+//!    compute fans out over an OS thread pool; the engine serializes
+//!    PJRT submissions (CPU backend parallelizes internally).
+//! 4. **Aggregate** — weighted parameter averaging, eq. (5).
+//! 5. **Evaluate** — global loss/accuracy on a held-out set; metrics
+//!    record the loss curve against *simulated wall time* (cycles × T),
+//!    which is how the paper's accuracy-within-deadline story is told.
+
+pub mod params;
+
+use std::sync::Arc;
+
+use crate::alloc::{Allocation, Policy};
+use crate::dataset::SyntheticDataset;
+use crate::metrics::Metrics;
+use crate::runtime::{Engine, EngineHandle, Manifest, Tensor};
+use crate::scenario::Scenario;
+use crate::sim::CycleSim;
+use crate::util::rng::Pcg64;
+
+pub use params::ParamSet;
+
+/// Training-run configuration.
+#[derive(Debug, Clone)]
+pub struct TrainConfig {
+    /// Allocation policy under test.
+    pub policy: Policy,
+    /// Global-cycle clock T (seconds, simulated).
+    pub t_total: f64,
+    /// Number of global cycles to run.
+    pub cycles: usize,
+    /// SGD learning rate.
+    pub lr: f32,
+    /// Master seed (scenario fading, batch draws, init).
+    pub seed: u64,
+    /// Held-out evaluation set size.
+    pub eval_samples: usize,
+    /// Artifact directory (`artifacts/` by default).
+    pub artifact_dir: String,
+    /// Re-solve the allocation every cycle (true) or once (false).
+    /// Matters only when fading is enabled — with static channels the
+    /// solution is identical each cycle.
+    pub reallocate_each_cycle: bool,
+    /// Learner threads for the dispatch fan-out.
+    pub dispatch_threads: usize,
+    /// Per-cycle log-normal shadowing sigma (dB); 0 = static channels.
+    pub shadow_sigma_db: f64,
+    /// Per-cycle Rayleigh fading redraws.
+    pub rayleigh: bool,
+    /// When a learner misses the deadline (stale allocation + fading),
+    /// drop its update from aggregation (true) instead of failing the
+    /// cycle (false) — the deadline-enforcement behaviour a real
+    /// orchestrator needs.
+    pub drop_stragglers: bool,
+}
+
+impl Default for TrainConfig {
+    fn default() -> Self {
+        Self {
+            policy: Policy::Analytical,
+            t_total: 30.0,
+            cycles: 20,
+            lr: 0.05,
+            seed: 1,
+            eval_samples: 512,
+            artifact_dir: "artifacts".into(),
+            reallocate_each_cycle: false,
+            dispatch_threads: 4,
+            shadow_sigma_db: 0.0,
+            rayleigh: false,
+            drop_stragglers: false,
+        }
+    }
+}
+
+/// Per-cycle outcome.
+#[derive(Debug, Clone)]
+pub struct CycleOutcome {
+    pub cycle: usize,
+    pub tau: u64,
+    pub batches: Vec<usize>,
+    /// Simulated makespan of the cycle (≤ T when feasible).
+    pub makespan: f64,
+    /// Global loss/accuracy after aggregation.
+    pub loss: f64,
+    pub accuracy: f64,
+    /// Wall-clock seconds spent executing the learners' compute.
+    pub wall_compute_s: f64,
+}
+
+/// The orchestrator.
+pub struct Orchestrator {
+    pub scenario: Scenario,
+    pub cfg: TrainConfig,
+    pub metrics: Arc<Metrics>,
+    engine: Engine,
+    global: ParamSet,
+    train_set: SyntheticDataset,
+    eval_set: SyntheticDataset,
+    rng: Pcg64,
+    sim_time: f64,
+    cached_alloc: Option<Allocation>,
+}
+
+impl Orchestrator {
+    /// Build an orchestrator: starts the PJRT engine, synthesizes the
+    /// datasets, initializes **w**.
+    pub fn new(scenario: Scenario, cfg: TrainConfig) -> anyhow::Result<Self> {
+        let engine = Engine::start(&cfg.artifact_dir)?;
+        // validate the artifacts cover this model
+        let man = Manifest::load(&cfg.artifact_dir)?;
+        anyhow::ensure!(
+            man.buckets(&scenario.model.name, "grad_step").iter().any(|_| true),
+            "artifacts missing grad_step for arch {:?}; run `make artifacts`",
+            scenario.model.name
+        );
+        let train_set = SyntheticDataset::full(&scenario.dataset, cfg.seed ^ 0xDA7A);
+        let mut eval_spec = scenario.dataset.clone();
+        eval_spec.total_samples = cfg.eval_samples;
+        let eval_set = SyntheticDataset::generate(&eval_spec, cfg.eval_samples, cfg.seed ^ 0xE7A1);
+        let global = ParamSet::init(&scenario.model.layers, cfg.seed ^ 0x1417);
+        let rng = Pcg64::new(cfg.seed, 0x06C);
+        Ok(Self {
+            scenario,
+            metrics: Arc::new(Metrics::new()),
+            engine,
+            global,
+            train_set,
+            eval_set,
+            rng,
+            sim_time: 0.0,
+            cached_alloc: None,
+            cfg,
+        })
+    }
+
+    pub fn params(&self) -> &ParamSet {
+        &self.global
+    }
+
+    pub fn sim_time(&self) -> f64 {
+        self.sim_time
+    }
+
+    fn allocation(&mut self) -> anyhow::Result<Allocation> {
+        if let (false, Some(a)) = (self.cfg.reallocate_each_cycle, &self.cached_alloc) {
+            return Ok(a.clone());
+        }
+        let problem = self.scenario.problem(self.cfg.t_total);
+        let t0 = std::time::Instant::now();
+        let alloc = self
+            .cfg
+            .policy
+            .allocator()
+            .allocate(&problem)
+            .map_err(|e| anyhow::anyhow!("allocation failed: {e}"))?;
+        self.metrics.observe("solver_seconds", t0.elapsed().as_secs_f64());
+        self.cached_alloc = Some(alloc.clone());
+        Ok(alloc)
+    }
+
+    /// Number of learner updates dropped for missing deadlines so far.
+    pub fn stragglers_dropped(&self) -> u64 {
+        self.metrics.counter("stragglers_dropped")
+    }
+
+    /// Run one global cycle; returns its outcome.
+    pub fn run_cycle(&mut self, cycle: usize) -> anyhow::Result<CycleOutcome> {
+        // dynamic channels: redraw fading before this cycle's (re-)solve
+        if self.cfg.shadow_sigma_db > 0.0 || self.cfg.rayleigh {
+            let mut spec = crate::channel::ChannelSpec::default();
+            spec.shadow_sigma_db = self.cfg.shadow_sigma_db;
+            spec.rayleigh = self.cfg.rayleigh;
+            let mut frng = self.rng.child(0xFAD ^ cycle as u64);
+            self.scenario.redraw_fading(&spec, &mut frng);
+        }
+        let alloc = self.allocation()?;
+        let problem = self.scenario.problem(self.cfg.t_total);
+
+        // ---- dispatch: draw disjoint random batches (footnote 1)
+        let sizes: Vec<usize> = alloc.batches.clone();
+        let capped: Vec<usize> = {
+            // synthetic train set is full-size; batches always fit
+            let total: usize = sizes.iter().sum();
+            debug_assert!(total <= self.train_set.len());
+            sizes
+        };
+        let batches = self.train_set.draw_batches(&capped, &mut self.rng);
+
+        // ---- deadline accounting (simulated clock) BEFORE compute: a
+        // stale allocation under fading can miss deadlines; those
+        // learners' updates never reach the orchestrator in time, so we
+        // skip their (discarded) compute entirely.
+        let sim = CycleSim::from_problem(&problem);
+        let report = sim.run_cycle(&alloc, false);
+        if !report.deadline_misses.is_empty() {
+            anyhow::ensure!(
+                self.cfg.drop_stragglers,
+                "allocation missed deadlines for learners {:?} (enable drop_stragglers \
+                 or reallocate_each_cycle)",
+                report.deadline_misses
+            );
+            self.metrics.inc("stragglers_dropped", report.deadline_misses.len() as u64);
+            log::warn!(
+                "cycle {cycle}: dropping {} straggler update(s): {:?}",
+                report.deadline_misses.len(),
+                report.deadline_misses
+            );
+        }
+        let dropped: std::collections::HashSet<usize> =
+            report.deadline_misses.iter().copied().collect();
+
+        // ---- local learning (real compute, fanned out over threads)
+        let wall0 = std::time::Instant::now();
+        let handle = self.engine.handle();
+        let arch = self.scenario.model.name.clone();
+        let lr = self.cfg.lr;
+        let tau = alloc.tau;
+        let global = &self.global;
+        let train_set = &self.train_set;
+        let artifact_dir = self.cfg.artifact_dir.clone();
+        let man = Manifest::load(&artifact_dir)?;
+
+        let results: Vec<anyhow::Result<(f64, ParamSet)>> = std::thread::scope(|s| {
+            let mut joins = Vec::new();
+            for (k, idx) in batches.iter().enumerate() {
+                if idx.is_empty() || dropped.contains(&k) {
+                    continue;
+                }
+                let handle = handle.clone();
+                let man = &man;
+                let arch = arch.as_str();
+                joins.push(s.spawn(move || {
+                    let mut local = global.clone();
+                    local_training(
+                        &handle, man, arch, &mut local, train_set, idx, tau, lr,
+                    )?;
+                    Ok((idx.len() as f64, local))
+                }));
+            }
+            joins.into_iter().map(|j| j.join().expect("learner thread panicked")).collect()
+        });
+        let mut weighted = Vec::new();
+        for r in results {
+            weighted.push(r?);
+        }
+        let wall_compute_s = wall0.elapsed().as_secs_f64();
+
+        // ---- aggregate (eq. 5) over the updates that made the deadline
+        if !weighted.is_empty() {
+            self.global = ParamSet::weighted_average(&weighted);
+        } else {
+            log::warn!("cycle {cycle}: every learner missed the deadline; w unchanged");
+        }
+        self.sim_time += self.cfg.t_total;
+
+        // ---- evaluate
+        let (loss, accuracy) = self.evaluate()?;
+        self.metrics.inc("cycles", 1);
+        self.metrics.gauge("tau", alloc.tau as f64);
+        self.metrics.observe("makespan", report.makespan);
+        self.metrics.observe("wall_compute_s", wall_compute_s);
+        self.metrics.record("loss_vs_simtime", self.sim_time, loss);
+        self.metrics.record("acc_vs_simtime", self.sim_time, accuracy);
+
+        Ok(CycleOutcome {
+            cycle,
+            tau: alloc.tau,
+            batches: alloc.batches.clone(),
+            makespan: report.makespan,
+            loss,
+            accuracy,
+            wall_compute_s,
+        })
+    }
+
+    /// Run the configured number of cycles.
+    pub fn train(&mut self) -> anyhow::Result<Vec<CycleOutcome>> {
+        let mut out = Vec::with_capacity(self.cfg.cycles);
+        for c in 0..self.cfg.cycles {
+            let o = self.run_cycle(c)?;
+            log::info!(
+                "cycle {:3}  tau={:4}  loss={:.4}  acc={:.3}  makespan={:.2}s (T={})",
+                c,
+                o.tau,
+                o.loss,
+                o.accuracy,
+                o.makespan,
+                self.cfg.t_total
+            );
+            out.push(o);
+        }
+        Ok(out)
+    }
+
+    /// Global loss/accuracy on the held-out set.
+    pub fn evaluate(&self) -> anyhow::Result<(f64, f64)> {
+        let man = Manifest::load(&self.cfg.artifact_dir)?;
+        let handle = self.engine.handle();
+        let idx: Vec<usize> = (0..self.eval_set.len()).collect();
+        let (loss_sum, correct, weight) = eval_batches(
+            &handle,
+            &man,
+            &self.scenario.model.name,
+            &self.global,
+            &self.eval_set,
+            &idx,
+        )?;
+        Ok((loss_sum / weight, correct / weight))
+    }
+}
+
+// ---------------------------------------------------------------------
+// learner-side compute (free functions so threads can borrow immutably)
+// ---------------------------------------------------------------------
+
+/// Pad `idx[lo..hi]` features/labels into a `bucket`-row tensor triple.
+fn padded_chunk(
+    ds: &SyntheticDataset,
+    idx: &[usize],
+    bucket: usize,
+) -> (Tensor, Tensor, Tensor) {
+    let f = ds.spec.features;
+    let n = idx.len();
+    let (mut x, mut y) = ds.gather_f32(idx);
+    x.resize(bucket * f, 0.0);
+    y.resize(bucket, 0);
+    let mut mask = vec![1.0f32; n];
+    mask.resize(bucket, 0.0);
+    (
+        Tensor::f32(vec![bucket, f], x),
+        Tensor::i32(vec![bucket], y),
+        Tensor::f32(vec![bucket], mask),
+    )
+}
+
+/// One learner's τ local iterations of full-batch SGD over its batch,
+/// accumulating masked gradient chunks through the bucketed artifacts.
+#[allow(clippy::too_many_arguments)]
+fn local_training(
+    handle: &EngineHandle,
+    man: &Manifest,
+    arch: &str,
+    local: &mut ParamSet,
+    ds: &SyntheticDataset,
+    idx: &[usize],
+    tau: u64,
+    lr: f32,
+) -> anyhow::Result<()> {
+    for _ in 0..tau {
+        let mut grad_acc = local.zeros_like();
+        let mut weight = 0.0f32;
+        for chunk in chunk_plan(man, arch, "grad_step", idx.len()) {
+            let (lo, hi, bucket) = chunk;
+            let meta = man
+                .find(arch, "grad_step", bucket)
+                .ok_or_else(|| anyhow::anyhow!("no grad_step bucket {bucket} for {arch}"))?;
+            let (x, y, mask) = padded_chunk(ds, &idx[lo..hi], bucket);
+            let mut inputs = local.tensors.clone();
+            inputs.push(x);
+            inputs.push(y);
+            inputs.push(mask);
+            let out = handle.execute(&meta.name, inputs)?;
+            anyhow::ensure!(
+                out.len() == local.tensors.len() + 2,
+                "grad_step returned {} tensors",
+                out.len()
+            );
+            for (acc, g) in grad_acc.iter_mut().zip(&out[..local.tensors.len()]) {
+                acc.axpy(1.0, g);
+            }
+            weight += out[local.tensors.len() + 1].scalar();
+        }
+        local.sgd_apply(&grad_acc, lr, weight);
+    }
+    Ok(())
+}
+
+/// Evaluate loss/accuracy sums over an index set.
+fn eval_batches(
+    handle: &EngineHandle,
+    man: &Manifest,
+    arch: &str,
+    params: &ParamSet,
+    ds: &SyntheticDataset,
+    idx: &[usize],
+) -> anyhow::Result<(f64, f64, f64)> {
+    let mut loss_sum = 0.0f64;
+    let mut correct = 0.0f64;
+    let mut weight = 0.0f64;
+    for (lo, hi, bucket) in chunk_plan(man, arch, "eval_batch", idx.len()) {
+        let meta = man
+            .find(arch, "eval_batch", bucket)
+            .ok_or_else(|| anyhow::anyhow!("no eval_batch bucket {bucket} for {arch}"))?;
+        let (x, y, mask) = padded_chunk(ds, &idx[lo..hi], bucket);
+        let mut inputs = params.tensors.clone();
+        inputs.push(x);
+        inputs.push(y);
+        inputs.push(mask);
+        let out = handle.execute(&meta.name, inputs)?;
+        anyhow::ensure!(out.len() == 3, "eval_batch returned {} tensors", out.len());
+        loss_sum += out[0].scalar() as f64;
+        correct += out[1].scalar() as f64;
+        weight += out[2].scalar() as f64;
+    }
+    Ok((loss_sum, correct, weight))
+}
+
+/// Split `n` samples into (lo, hi, bucket) chunks using the available
+/// buckets: big chunks use the largest bucket; the tail uses the
+/// smallest bucket that fits (minimizing padding waste).
+pub fn chunk_plan(man: &Manifest, arch: &str, function: &str, n: usize) -> Vec<(usize, usize, usize)> {
+    let buckets = man.buckets(arch, function);
+    assert!(!buckets.is_empty(), "no buckets for {arch}/{function}");
+    let largest = *buckets.last().unwrap();
+    let mut plan = Vec::new();
+    let mut lo = 0;
+    while lo < n {
+        let remaining = n - lo;
+        let bucket = if remaining >= largest {
+            largest
+        } else {
+            buckets.iter().copied().find(|&b| b >= remaining).unwrap_or(largest)
+        };
+        let take = remaining.min(bucket);
+        plan.push((lo, lo + take, bucket));
+        lo += take;
+    }
+    plan
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // Engine-backed coordinator tests live in rust/tests/ (need
+    // artifacts). Pure logic tests here.
+
+    fn fake_man() -> Manifest {
+        // hand-construct a manifest with buckets {8, 32}
+        Manifest {
+            dir: "/tmp".into(),
+            artifacts: [8usize, 32]
+                .iter()
+                .map(|&b| crate::runtime::ArtifactMeta {
+                    name: format!("toy_grad_step_b{b}"),
+                    file: "/dev/null".into(),
+                    arch: "toy".into(),
+                    function: "grad_step".into(),
+                    bucket: b,
+                    layers: vec![4, 2],
+                    param_tensors: 2,
+                    inputs: vec![],
+                    outputs: vec![],
+                    sha256: String::new(),
+                })
+                .collect(),
+        }
+    }
+
+    #[test]
+    fn chunk_plan_covers_exactly_once() {
+        let man = fake_man();
+        for n in [1usize, 7, 8, 9, 31, 32, 33, 100, 257] {
+            let plan = chunk_plan(&man, "toy", "grad_step", n);
+            let mut covered = 0;
+            let mut prev_hi = 0;
+            for (lo, hi, bucket) in &plan {
+                assert_eq!(*lo, prev_hi);
+                assert!(hi - lo <= *bucket);
+                covered += hi - lo;
+                prev_hi = *hi;
+            }
+            assert_eq!(covered, n, "n={n} plan={plan:?}");
+        }
+    }
+
+    #[test]
+    fn chunk_plan_minimizes_tail_padding() {
+        let man = fake_man();
+        // 40 = 32 + 8: the 8-tail must use the small bucket
+        let plan = chunk_plan(&man, "toy", "grad_step", 40);
+        assert_eq!(plan, vec![(0, 32, 32), (32, 40, 8)]);
+        // 5 → single small bucket
+        assert_eq!(chunk_plan(&man, "toy", "grad_step", 5), vec![(0, 5, 8)]);
+    }
+
+    #[test]
+    fn padded_chunk_masks_tail() {
+        let spec = crate::dataset::DatasetSpec {
+            name: "t".into(),
+            total_samples: 10,
+            features: 4,
+            classes: 2,
+            precision_bits: 8,
+        };
+        let ds = SyntheticDataset::generate(&spec, 10, 1);
+        let (x, y, m) = padded_chunk(&ds, &[0, 1, 2], 8);
+        assert_eq!(x.dims, vec![8, 4]);
+        assert_eq!(y.dims, vec![8]);
+        assert_eq!(m.as_f32(), &[1., 1., 1., 0., 0., 0., 0., 0.]);
+        // padded feature rows are zero
+        assert!(x.as_f32()[3 * 4..].iter().all(|&v| v == 0.0));
+    }
+
+    #[test]
+    fn train_config_defaults_sane() {
+        let c = TrainConfig::default();
+        assert!(c.t_total > 0.0);
+        assert!(c.lr > 0.0);
+        assert_eq!(c.policy, Policy::Analytical);
+    }
+}

@@ -1,0 +1,155 @@
+//! Parameter-matrix state owned by the orchestrator (and per-learner
+//! local copies), mirroring the layout the AOT artifacts expect:
+//! `[w0, b0, w1, b1, …]` row-major f32 tensors.
+//!
+//! Initialization matches `python/compile/model.py::init_params`
+//! (Glorot-uniform weights, zero biases) so python-side sanity numbers
+//! carry over, though bit-exactness is not required — the orchestrator
+//! is the single source of truth for **w** at runtime (paper §II-B).
+
+use crate::runtime::Tensor;
+use crate::util::rng::{Pcg64, Rng};
+
+/// The full parameter set of an MLP.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ParamSet {
+    pub tensors: Vec<Tensor>,
+    pub layers: Vec<usize>,
+}
+
+impl ParamSet {
+    /// Glorot-uniform init for the given layer widths.
+    pub fn init(layers: &[usize], seed: u64) -> Self {
+        assert!(layers.len() >= 2);
+        let mut rng = Pcg64::new(seed, 0x9A7A);
+        let mut tensors = Vec::new();
+        for w in layers.windows(2) {
+            let (fan_in, fan_out) = (w[0], w[1]);
+            let limit = (6.0 / (fan_in + fan_out) as f64).sqrt();
+            let weights: Vec<f32> = (0..fan_in * fan_out)
+                .map(|_| rng.uniform(-limit, limit) as f32)
+                .collect();
+            tensors.push(Tensor::f32(vec![fan_in, fan_out], weights));
+            tensors.push(Tensor::zeros_f32(vec![fan_out]));
+        }
+        Self { tensors, layers: layers.to_vec() }
+    }
+
+    /// All-zero gradients accumulator with matching shapes.
+    pub fn zeros_like(&self) -> Vec<Tensor> {
+        self.tensors
+            .iter()
+            .map(|t| Tensor::zeros_f32(t.dims.clone()))
+            .collect()
+    }
+
+    pub fn num_scalars(&self) -> usize {
+        self.tensors.iter().map(Tensor::len).sum()
+    }
+
+    /// SGD step: `w ← w − (lr/weight) · grad` (matches model.sgd_apply).
+    pub fn sgd_apply(&mut self, grads: &[Tensor], lr: f32, weight: f32) {
+        assert_eq!(grads.len(), self.tensors.len());
+        let scale = -lr / weight.max(1.0);
+        for (p, g) in self.tensors.iter_mut().zip(grads) {
+            p.axpy(scale, g);
+        }
+    }
+
+    /// Weighted average of learner parameter sets — eq. (5):
+    /// `w = Σ_k (d_k/d)·w̃_k`.
+    pub fn weighted_average(sets: &[(f64, ParamSet)]) -> ParamSet {
+        assert!(!sets.is_empty());
+        let total: f64 = sets.iter().map(|(w, _)| *w).sum();
+        assert!(total > 0.0, "all aggregation weights are zero");
+        let mut out = sets[0].1.clone();
+        for t in &mut out.tensors {
+            t.scale(0.0);
+        }
+        for (w, ps) in sets {
+            let frac = (*w / total) as f32;
+            for (dst, src) in out.tensors.iter_mut().zip(&ps.tensors) {
+                dst.axpy(frac, src);
+            }
+        }
+        out
+    }
+
+    /// Squared L2 distance to another set (convergence diagnostics).
+    pub fn distance2(&self, other: &ParamSet) -> f64 {
+        self.tensors
+            .iter()
+            .zip(&other.tensors)
+            .map(|(a, b)| {
+                a.as_f32()
+                    .iter()
+                    .zip(b.as_f32())
+                    .map(|(&x, &y)| ((x - y) as f64).powi(2))
+                    .sum::<f64>()
+            })
+            .sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn init_shapes_and_bounds() {
+        let p = ParamSet::init(&[648, 300, 2], 7);
+        assert_eq!(p.tensors.len(), 4);
+        assert_eq!(p.tensors[0].dims, vec![648, 300]);
+        assert_eq!(p.tensors[1].dims, vec![300]);
+        assert_eq!(p.tensors[3].dims, vec![2]);
+        assert_eq!(p.num_scalars(), 648 * 300 + 300 + 300 * 2 + 2);
+        let limit = (6.0f64 / 948.0).sqrt() as f32;
+        assert!(p.tensors[0].as_f32().iter().all(|&v| v.abs() <= limit));
+        assert!(p.tensors[1].as_f32().iter().all(|&v| v == 0.0));
+        // deterministic by seed
+        assert_eq!(p, ParamSet::init(&[648, 300, 2], 7));
+        assert_ne!(p, ParamSet::init(&[648, 300, 2], 8));
+    }
+
+    #[test]
+    fn sgd_apply_moves_against_gradient() {
+        let mut p = ParamSet::init(&[2, 2], 1);
+        let before = p.tensors[0].as_f32().to_vec();
+        let mut grads = p.zeros_like();
+        for g in grads[0].as_f32_mut() {
+            *g = 1.0;
+        }
+        p.sgd_apply(&grads, 0.5, 10.0);
+        for (a, b) in p.tensors[0].as_f32().iter().zip(&before) {
+            assert!((a - (b - 0.05)).abs() < 1e-7);
+        }
+    }
+
+    #[test]
+    fn weighted_average_is_eq5() {
+        let mut a = ParamSet::init(&[2, 2], 1);
+        let mut b = a.clone();
+        a.tensors[0] = Tensor::f32(vec![2, 2], vec![1.0; 4]);
+        b.tensors[0] = Tensor::f32(vec![2, 2], vec![4.0; 4]);
+        // d_1 = 3, d_2 = 1 → w = (3·1 + 1·4)/4 = 1.75
+        let avg = ParamSet::weighted_average(&[(3.0, a), (1.0, b)]);
+        for &v in avg.tensors[0].as_f32() {
+            assert!((v - 1.75).abs() < 1e-7);
+        }
+    }
+
+    #[test]
+    fn average_of_identical_is_identity() {
+        let p = ParamSet::init(&[5, 3, 2], 3);
+        let avg =
+            ParamSet::weighted_average(&[(2.0, p.clone()), (5.0, p.clone()), (1.0, p.clone())]);
+        assert!(avg.distance2(&p) < 1e-10);
+    }
+
+    #[test]
+    #[should_panic(expected = "weights are zero")]
+    fn zero_weights_panic() {
+        let p = ParamSet::init(&[2, 2], 1);
+        ParamSet::weighted_average(&[(0.0, p)]);
+    }
+}

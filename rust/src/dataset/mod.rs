@@ -1,0 +1,275 @@
+//! Dataset substrate.
+//!
+//! The paper evaluates on the pedestrian (Munder–Gavrila, 9,000 × 18×36
+//! u8 images, 2 classes) and MNIST (60,000 × 28×28 u8, 10 classes)
+//! datasets. Neither is redistributable/fetchable offline, so this module
+//! generates **synthetic equivalents with identical shape and precision**
+//! (documented substitution, DESIGN.md §2): class-prototype images plus
+//! noise, quantized to u8. The allocation optimization consumes only
+//! `(d, F, P_d)` — unchanged — while the end-to-end training path gets
+//! genuinely learnable data so loss curves are real.
+
+use crate::util::rng::{Pcg64, Rng};
+
+/// Static description of a dataset (the numbers entering eqs. 6–9).
+#[derive(Debug, Clone, PartialEq)]
+pub struct DatasetSpec {
+    pub name: String,
+    /// Total samples `d` the orchestrator must distribute per cycle.
+    pub total_samples: usize,
+    /// Features per sample `F`.
+    pub features: usize,
+    /// Number of classes.
+    pub classes: usize,
+    /// Storage precision `P_d`, bits.
+    pub precision_bits: u32,
+}
+
+impl DatasetSpec {
+    /// Pedestrian dataset of Table I: 9,000 images, 648 features.
+    pub fn pedestrian() -> Self {
+        Self {
+            name: "pedestrian".into(),
+            total_samples: 9_000,
+            features: 648,
+            classes: 2,
+            precision_bits: 8,
+        }
+    }
+
+    /// MNIST of Table I: 60,000 images, 784 features.
+    pub fn mnist() -> Self {
+        Self {
+            name: "mnist".into(),
+            total_samples: 60_000,
+            features: 784,
+            classes: 10,
+            precision_bits: 8,
+        }
+    }
+
+    pub fn by_name(name: &str) -> Option<Self> {
+        match name {
+            "pedestrian" => Some(Self::pedestrian()),
+            "mnist" => Some(Self::mnist()),
+            _ => None,
+        }
+    }
+
+    /// Bits of one sample.
+    pub fn bits_per_sample(&self) -> f64 {
+        self.features as f64 * self.precision_bits as f64
+    }
+}
+
+/// In-memory synthetic dataset: u8 features + labels, deterministic.
+#[derive(Debug, Clone)]
+pub struct SyntheticDataset {
+    pub spec: DatasetSpec,
+    /// Row-major `n × features` u8 pixels.
+    pub pixels: Vec<u8>,
+    /// Class labels, one per sample.
+    pub labels: Vec<u8>,
+}
+
+impl SyntheticDataset {
+    /// Generate `n` samples for `spec` from class prototypes + noise.
+    ///
+    /// Each class gets a smooth random prototype image; a sample is
+    /// `clip(prototype + N(0, 28))` quantized to u8, which a one-hidden-
+    /// layer MLP separates well above chance after a few SGD steps.
+    pub fn generate(spec: &DatasetSpec, n: usize, seed: u64) -> Self {
+        let mut rng = Pcg64::new(seed, 0x5EED);
+        let f = spec.features;
+        // smooth prototypes: random low-frequency mixture per class
+        let mut prototypes = vec![0f64; spec.classes * f];
+        for c in 0..spec.classes {
+            let phase = rng.uniform(0.0, std::f64::consts::TAU);
+            let freq1 = rng.uniform(1.0, 4.0);
+            let freq2 = rng.uniform(4.0, 9.0);
+            let amp = rng.uniform(35.0, 70.0);
+            for j in 0..f {
+                let x = j as f64 / f as f64 * std::f64::consts::TAU;
+                prototypes[c * f + j] = 128.0
+                    + amp * (freq1 * x + phase).sin()
+                    + 0.5 * amp * (freq2 * x + 2.0 * phase).cos();
+            }
+        }
+        let mut pixels = Vec::with_capacity(n * f);
+        let mut labels = Vec::with_capacity(n);
+        for _ in 0..n {
+            let c = rng.below(spec.classes as u64) as usize;
+            labels.push(c as u8);
+            for j in 0..f {
+                let v = prototypes[c * f + j] + rng.normal_ms(0.0, 28.0);
+                pixels.push(v.clamp(0.0, 255.0) as u8);
+            }
+        }
+        Self { spec: spec.clone(), pixels, labels }
+    }
+
+    /// Full-size dataset for the spec (`spec.total_samples` rows).
+    pub fn full(spec: &DatasetSpec, seed: u64) -> Self {
+        Self::generate(spec, spec.total_samples, seed)
+    }
+
+    pub fn len(&self) -> usize {
+        self.labels.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.labels.is_empty()
+    }
+
+    /// One sample's pixels.
+    pub fn sample(&self, i: usize) -> &[u8] {
+        let f = self.spec.features;
+        &self.pixels[i * f..(i + 1) * f]
+    }
+
+    /// Gather rows `idx` into an f32 feature matrix normalized to [0,1]
+    /// plus i32 labels — the exact tensors the PJRT grad-step consumes.
+    pub fn gather_f32(&self, idx: &[usize]) -> (Vec<f32>, Vec<i32>) {
+        let f = self.spec.features;
+        let mut x = Vec::with_capacity(idx.len() * f);
+        let mut y = Vec::with_capacity(idx.len());
+        for &i in idx {
+            debug_assert!(i < self.len());
+            x.extend(self.sample(i).iter().map(|&p| p as f32 / 255.0));
+            y.push(self.labels[i] as i32);
+        }
+        (x, y)
+    }
+
+    /// Draw a random batch-index assignment for `sizes` learners: each
+    /// learner gets `sizes[k]` *distinct* random samples (the paper's
+    /// randomized batch allocation per global cycle, footnote 1).
+    pub fn draw_batches(&self, sizes: &[usize], rng: &mut Pcg64) -> Vec<Vec<usize>> {
+        let total: usize = sizes.iter().sum();
+        assert!(
+            total <= self.len(),
+            "requested {total} samples from dataset of {}",
+            self.len()
+        );
+        let perm = rng.sample_indices(self.len(), total);
+        let mut out = Vec::with_capacity(sizes.len());
+        let mut off = 0;
+        for &s in sizes {
+            out.push(perm[off..off + s].to_vec());
+            off += s;
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn specs_match_table1() {
+        let p = DatasetSpec::pedestrian();
+        assert_eq!((p.total_samples, p.features, p.classes), (9000, 648, 2));
+        assert_eq!(p.bits_per_sample(), 648.0 * 8.0);
+        let m = DatasetSpec::mnist();
+        assert_eq!((m.total_samples, m.features, m.classes), (60000, 784, 10));
+        assert!(DatasetSpec::by_name("pedestrian").is_some());
+        assert!(DatasetSpec::by_name("cifar").is_none());
+    }
+
+    #[test]
+    fn generation_is_deterministic() {
+        let spec = DatasetSpec { total_samples: 50, ..DatasetSpec::pedestrian() };
+        let a = SyntheticDataset::generate(&spec, 50, 7);
+        let b = SyntheticDataset::generate(&spec, 50, 7);
+        assert_eq!(a.pixels, b.pixels);
+        assert_eq!(a.labels, b.labels);
+        let c = SyntheticDataset::generate(&spec, 50, 8);
+        assert_ne!(a.pixels, c.pixels);
+    }
+
+    #[test]
+    fn shapes_and_label_range() {
+        let spec = DatasetSpec::mnist();
+        let ds = SyntheticDataset::generate(&spec, 100, 1);
+        assert_eq!(ds.len(), 100);
+        assert_eq!(ds.pixels.len(), 100 * 784);
+        assert!(ds.labels.iter().all(|&l| (l as usize) < 10));
+        assert_eq!(ds.sample(5).len(), 784);
+    }
+
+    #[test]
+    fn classes_are_separable_by_mean_pixel_distance() {
+        // Same-class samples must be closer to their class prototype than
+        // to the other class's — the property that makes training work.
+        let spec = DatasetSpec { total_samples: 200, ..DatasetSpec::pedestrian() };
+        let ds = SyntheticDataset::generate(&spec, 200, 3);
+        let f = spec.features;
+        let mut means = vec![vec![0f64; f]; 2];
+        let mut counts = [0usize; 2];
+        for i in 0..ds.len() {
+            let c = ds.labels[i] as usize;
+            counts[c] += 1;
+            for j in 0..f {
+                means[c][j] += ds.sample(i)[j] as f64;
+            }
+        }
+        for c in 0..2 {
+            for j in 0..f {
+                means[c][j] /= counts[c] as f64;
+            }
+        }
+        let mut correct = 0;
+        for i in 0..ds.len() {
+            let d: Vec<f64> = (0..2)
+                .map(|c| {
+                    ds.sample(i)
+                        .iter()
+                        .zip(&means[c])
+                        .map(|(&p, &m)| (p as f64 - m).powi(2))
+                        .sum()
+                })
+                .collect();
+            let pred = if d[0] < d[1] { 0 } else { 1 };
+            if pred == ds.labels[i] as usize {
+                correct += 1;
+            }
+        }
+        assert!(correct as f64 / ds.len() as f64 > 0.9, "separability {correct}/200");
+    }
+
+    #[test]
+    fn gather_f32_normalizes() {
+        let spec = DatasetSpec { total_samples: 10, ..DatasetSpec::pedestrian() };
+        let ds = SyntheticDataset::generate(&spec, 10, 2);
+        let (x, y) = ds.gather_f32(&[0, 3, 7]);
+        assert_eq!(x.len(), 3 * 648);
+        assert_eq!(y.len(), 3);
+        assert!(x.iter().all(|&v| (0.0..=1.0).contains(&v)));
+        assert_eq!(y[1], ds.labels[3] as i32);
+    }
+
+    #[test]
+    fn draw_batches_disjoint_and_sized() {
+        let spec = DatasetSpec { total_samples: 100, ..DatasetSpec::pedestrian() };
+        let ds = SyntheticDataset::generate(&spec, 100, 4);
+        let mut rng = Pcg64::seeded(11);
+        let batches = ds.draw_batches(&[10, 30, 25], &mut rng);
+        assert_eq!(batches.iter().map(Vec::len).collect::<Vec<_>>(), vec![10, 30, 25]);
+        let mut all: Vec<usize> = batches.concat();
+        all.sort();
+        let before = all.len();
+        all.dedup();
+        assert_eq!(all.len(), before, "batches overlap");
+        assert!(all.iter().all(|&i| i < 100));
+    }
+
+    #[test]
+    #[should_panic(expected = "requested")]
+    fn draw_batches_overflow_panics() {
+        let spec = DatasetSpec { total_samples: 10, ..DatasetSpec::pedestrian() };
+        let ds = SyntheticDataset::generate(&spec, 10, 4);
+        let mut rng = Pcg64::seeded(1);
+        ds.draw_batches(&[6, 6], &mut rng);
+    }
+}

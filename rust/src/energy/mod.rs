@@ -1,0 +1,205 @@
+//! Energy accounting — the paper's §I/§VI future-work axis
+//! ("minimizing energy consumption"), built out as a first-class
+//! extension: per-learner transmission + computation energy for a
+//! global cycle, plus an energy-budgeted allocation wrapper.
+//!
+//! Models (standard MEC costs, e.g. Mao et al. survey [3]):
+//! * **Transmission**: `E_tx = P_tx · t_tx` with the Table-I transmit
+//!   power over the uplink/downlink times of eqs. (9)/(11). The
+//!   orchestrator pays the downlink (batch+model), the learner pays the
+//!   uplink (model).
+//! * **Computation**: `E_cmp = κ · f_eff² · (cycles) = κ·f²·C/f = κ·f·C`
+//!   per the classic CMOS dynamic-power model `P = κ·f³` at frequency f
+//!   (κ: effective switched capacitance, default 1e-28 as in the MEC
+//!   literature for cycle-denominated work).
+
+use crate::alloc::{Allocation, Problem};
+use crate::channel::dbm_to_watts;
+use crate::learner::Learner;
+use crate::models::ModelSpec;
+
+/// Effective switched capacitance κ (J·s²/cycle³ scale).
+pub const DEFAULT_KAPPA: f64 = 1e-28;
+
+/// Energy of one learner in one global cycle, joules.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct LearnerEnergy {
+    /// Uplink transmission energy (learner side), J.
+    pub tx_j: f64,
+    /// Local computation energy over τ iterations, J.
+    pub compute_j: f64,
+}
+
+impl LearnerEnergy {
+    pub fn total(&self) -> f64 {
+        self.tx_j + self.compute_j
+    }
+}
+
+/// Per-cycle energy report for a whole cloudlet.
+#[derive(Debug, Clone)]
+pub struct EnergyReport {
+    pub per_learner: Vec<LearnerEnergy>,
+    /// Orchestrator downlink energy, J.
+    pub orchestrator_tx_j: f64,
+}
+
+impl EnergyReport {
+    pub fn learner_total(&self) -> f64 {
+        self.per_learner.iter().map(LearnerEnergy::total).sum()
+    }
+
+    pub fn grand_total(&self) -> f64 {
+        self.learner_total() + self.orchestrator_tx_j
+    }
+
+    /// Energy per local iteration-sample — the efficiency figure of
+    /// merit (J per unit of learning work).
+    pub fn joules_per_sample_iteration(&self, alloc: &Allocation) -> f64 {
+        let work: f64 = alloc.batches.iter().map(|&d| d as f64).sum::<f64>() * alloc.tau as f64;
+        if work == 0.0 {
+            return 0.0;
+        }
+        self.grand_total() / work
+    }
+}
+
+/// Compute the energy report for an allocation on a concrete cloudlet.
+pub fn cycle_energy(
+    learners: &[Learner],
+    model: &ModelSpec,
+    alloc: &Allocation,
+    kappa: f64,
+) -> EnergyReport {
+    assert_eq!(learners.len(), alloc.batches.len());
+    let mut per_learner = Vec::with_capacity(learners.len());
+    let mut orch_tx = 0.0;
+    for (l, &dk) in learners.iter().zip(&alloc.batches) {
+        if dk == 0 {
+            per_learner.push(LearnerEnergy { tx_j: 0.0, compute_j: 0.0 });
+            continue;
+        }
+        let p_tx = dbm_to_watts(l.link.tx_power_dbm);
+        // downlink: batch + model (orchestrator pays)
+        orch_tx += p_tx * l.t_send(model, dk);
+        // uplink: model back (learner pays)
+        let tx_j = p_tx * l.t_receive(model, dk);
+        // compute: κ·f_eff·(total flops) with flops ≈ cycles·fpc folded in
+        let flops = alloc.tau as f64 * model.iteration_flops(dk);
+        let cycles = flops / l.compute.flops_per_cycle;
+        let compute_j = kappa * l.compute.freq_hz * l.compute.freq_hz * cycles;
+        per_learner.push(LearnerEnergy { tx_j, compute_j });
+    }
+    EnergyReport { per_learner, orchestrator_tx_j: orch_tx }
+}
+
+/// Find the largest τ ≤ `alloc.tau` whose cycle energy fits a learner-
+/// side budget (J per cycle), shrinking iterations — the simplest
+/// energy-aware post-processing of an allocation (extension experiment).
+pub fn cap_tau_to_energy_budget(
+    learners: &[Learner],
+    model: &ModelSpec,
+    problem: &Problem,
+    alloc: &Allocation,
+    budget_j: f64,
+    kappa: f64,
+) -> Allocation {
+    let mut out = alloc.clone();
+    while out.tau > 1 {
+        let e = cycle_energy(learners, model, &out, kappa);
+        if e.learner_total() <= budget_j {
+            break;
+        }
+        out.tau -= 1;
+    }
+    debug_assert!(out.is_feasible(problem));
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::alloc::Policy;
+    use crate::scenario::{CloudletConfig, Scenario};
+
+    fn setup(k: usize, t: f64) -> (Scenario, Allocation, Problem) {
+        let s = Scenario::random_cloudlet(&CloudletConfig::pedestrian(k), 1);
+        let p = s.problem(t);
+        let a = Policy::Analytical.allocator().allocate(&p).unwrap();
+        (s, a, p)
+    }
+
+    #[test]
+    fn energy_components_positive_and_scale_with_tau() {
+        let (s, a, _) = setup(6, 30.0);
+        let e1 = cycle_energy(&s.learners, &s.model, &a, DEFAULT_KAPPA);
+        assert!(e1.grand_total() > 0.0);
+        assert!(e1.orchestrator_tx_j > 0.0);
+        let mut a2 = a.clone();
+        a2.tau *= 2;
+        let e2 = cycle_energy(&s.learners, &s.model, &a2, DEFAULT_KAPPA);
+        // compute energy doubles with τ; tx unchanged
+        for (x, y) in e1.per_learner.iter().zip(&e2.per_learner) {
+            assert!((y.compute_j - 2.0 * x.compute_j).abs() < 1e-12 * y.compute_j.max(1e-12));
+            assert!((y.tx_j - x.tx_j).abs() < 1e-15);
+        }
+    }
+
+    #[test]
+    fn zero_batch_learner_zero_energy() {
+        let (s, mut a, _) = setup(3, 30.0);
+        a.batches[0] += a.batches[2];
+        a.batches[2] = 0;
+        let e = cycle_energy(&s.learners, &s.model, &a, DEFAULT_KAPPA);
+        assert_eq!(e.per_learner[2].total(), 0.0);
+    }
+
+    #[test]
+    fn adaptive_trades_energy_for_iterations() {
+        // The accuracy/energy trade-off that motivates the paper's
+        // future work: adaptive allocation shifts samples onto the
+        // high-frequency laptops, whose κ·f² per-flop cost dominates —
+        // so it burns more total energy AND more J per (sample×iter)
+        // than ETA, in exchange for ~4x the iterations per deadline.
+        let (s, ada, p) = setup(10, 30.0);
+        let eta = Policy::Eta.allocator().allocate(&p).unwrap();
+        let e_ada = cycle_energy(&s.learners, &s.model, &ada, DEFAULT_KAPPA);
+        let e_eta = cycle_energy(&s.learners, &s.model, &eta, DEFAULT_KAPPA);
+        assert!(e_ada.grand_total() > e_eta.grand_total());
+        let jpsi_ada = e_ada.joules_per_sample_iteration(&ada);
+        let jpsi_eta = e_eta.joules_per_sample_iteration(&eta);
+        assert!(jpsi_ada > jpsi_eta, "{jpsi_ada} vs {jpsi_eta}");
+        // but within the same deadline it does ≥3x the learning work
+        let work = |a: &Allocation| {
+            a.tau as f64 * a.batches.iter().sum::<usize>() as f64
+        };
+        assert!(work(&ada) > 3.0 * work(&eta));
+        // and the premium per work unit is bounded (< 2x here)
+        assert!(jpsi_ada < 2.0 * jpsi_eta);
+    }
+
+    #[test]
+    fn energy_budget_caps_tau_feasibly() {
+        let (s, a, p) = setup(8, 30.0);
+        let unbounded = cycle_energy(&s.learners, &s.model, &a, DEFAULT_KAPPA).learner_total();
+        let budget = unbounded / 3.0;
+        let capped = cap_tau_to_energy_budget(&s.learners, &s.model, &p, &a, budget, DEFAULT_KAPPA);
+        assert!(capped.tau < a.tau);
+        assert!(capped.is_feasible(&p));
+        let e = cycle_energy(&s.learners, &s.model, &capped, DEFAULT_KAPPA);
+        assert!(e.learner_total() <= budget * 1.001 || capped.tau == 1);
+    }
+
+    #[test]
+    fn rpi_burns_less_compute_power_than_laptop() {
+        let (s, a, _) = setup(2, 30.0);
+        // learner 0 laptop, learner 1 rpi in the half/half split
+        let e = cycle_energy(&s.learners, &s.model, &a, DEFAULT_KAPPA);
+        // per-flop energy κ·f² / fpc higher on laptop (f² dominates)
+        let per_flop = |i: usize| {
+            e.per_learner[i].compute_j
+                / (a.tau as f64 * s.model.iteration_flops(a.batches[i]))
+        };
+        assert!(per_flop(0) > per_flop(1));
+    }
+}

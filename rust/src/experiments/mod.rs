@@ -1,0 +1,332 @@
+//! Figure/table reproduction harnesses — one function per paper
+//! artifact, each returning the series data and rendering the same
+//! rows the paper plots. Used by `mel figure …` and by the bench
+//! targets under `benches/`.
+//!
+//! | id | paper artifact | function |
+//! |----|----------------|----------|
+//! | fig1 | τ vs K, T∈{30,60}, pedestrian | [`fig1`] |
+//! | fig2 | τ vs T, K∈{5,10,20}, pedestrian | [`fig2`] |
+//! | fig3a | τ vs K, T∈{30,60}, MNIST | [`fig3a`] |
+//! | fig3b | τ vs T, K∈{10,20}, MNIST | [`fig3b`] |
+//! | gains | §V headline gain claims | [`gains`] |
+
+use crate::alloc::Policy;
+use crate::scenario::{CloudletConfig, Scenario};
+use crate::util::table::Table;
+
+/// τ for one (task, K, T, policy) point; 0 when infeasible.
+pub fn solve_point(task: &str, k: usize, t: f64, policy: Policy, seed: u64) -> u64 {
+    let cfg = CloudletConfig::by_task(task, k).expect("unknown task");
+    let scenario = Scenario::random_cloudlet(&cfg, seed);
+    let problem = scenario.problem(t);
+    policy.allocator().allocate(&problem).map(|a| a.tau).unwrap_or(0)
+}
+
+/// One figure's data: a set of named series over an x axis.
+#[derive(Debug, Clone)]
+pub struct FigureData {
+    pub id: &'static str,
+    pub title: String,
+    pub xlabel: &'static str,
+    pub x: Vec<f64>,
+    /// (series label, τ values).
+    pub series: Vec<(String, Vec<u64>)>,
+}
+
+impl FigureData {
+    /// Render the paper-style table of rows.
+    pub fn table(&self) -> Table {
+        let mut headers: Vec<&str> = vec![self.xlabel];
+        let labels: Vec<String> = self.series.iter().map(|(l, _)| l.clone()).collect();
+        for l in &labels {
+            headers.push(l);
+        }
+        let mut t = Table::new(&headers).title(format!("{} — {}", self.id, self.title));
+        for (i, &x) in self.x.iter().enumerate() {
+            let mut row = vec![format!("{x}")];
+            for (_, ys) in &self.series {
+                row.push(format!("{}", ys[i]));
+            }
+            t.row(row);
+        }
+        t
+    }
+
+    pub fn csv(&self) -> String {
+        self.table().to_csv()
+    }
+
+    /// Look up a series by label prefix.
+    pub fn series_by_prefix(&self, prefix: &str) -> Option<&Vec<u64>> {
+        self.series.iter().find(|(l, _)| l.starts_with(prefix)).map(|(_, v)| v)
+    }
+}
+
+fn policies() -> [(Policy, &'static str); 4] {
+    [
+        (Policy::Numerical, "Numerical"),
+        (Policy::Analytical, "UB-Analytical"),
+        (Policy::UbSai, "UB-SAI"),
+        (Policy::Eta, "ETA"),
+    ]
+}
+
+/// Generic sweep over K for fixed T values.
+fn sweep_k(id: &'static str, task: &str, ks: &[usize], ts: &[f64], seed: u64) -> FigureData {
+    let mut series = Vec::new();
+    for &t in ts {
+        for (policy, label) in policies() {
+            let ys: Vec<u64> =
+                ks.iter().map(|&k| solve_point(task, k, t, policy, seed)).collect();
+            series.push((format!("{label} T={t}"), ys));
+        }
+    }
+    FigureData {
+        id,
+        title: format!("{task}: local iterations τ vs number of edge nodes K"),
+        xlabel: "K",
+        x: ks.iter().map(|&k| k as f64).collect(),
+        series,
+    }
+}
+
+/// Generic sweep over T for fixed K values.
+fn sweep_t(id: &'static str, task: &str, ts: &[f64], ks: &[usize], seed: u64) -> FigureData {
+    let mut series = Vec::new();
+    for &k in ks {
+        for (policy, label) in policies() {
+            let ys: Vec<u64> =
+                ts.iter().map(|&t| solve_point(task, k, t, policy, seed)).collect();
+            series.push((format!("{label} K={k}"), ys));
+        }
+    }
+    FigureData {
+        id,
+        title: format!("{task}: local iterations τ vs global cycle clock T"),
+        xlabel: "T",
+        x: ts.to_vec(),
+        series,
+    }
+}
+
+/// Fig. 1 — pedestrian, τ vs K for T = 30, 60 s.
+pub fn fig1(seed: u64) -> FigureData {
+    let ks: Vec<usize> = (5..=50).step_by(5).collect();
+    sweep_k("fig1", "pedestrian", &ks, &[30.0, 60.0], seed)
+}
+
+/// Fig. 2 — pedestrian, τ vs T for K = 5, 10, 20.
+pub fn fig2(seed: u64) -> FigureData {
+    let ts: Vec<f64> = (2..=12).map(|i| i as f64 * 10.0).collect();
+    sweep_t("fig2", "pedestrian", &ts, &[5, 10, 20], seed)
+}
+
+/// Fig. 3a — MNIST, τ vs K for T = 30, 60 s.
+pub fn fig3a(seed: u64) -> FigureData {
+    let ks: Vec<usize> = (5..=50).step_by(5).collect();
+    sweep_k("fig3a", "mnist", &ks, &[30.0, 60.0], seed)
+}
+
+/// Fig. 3b — MNIST, τ vs T for K = 10, 20.
+pub fn fig3b(seed: u64) -> FigureData {
+    let ts: Vec<f64> = (2..=12).map(|i| i as f64 * 10.0).collect();
+    sweep_t("fig3b", "mnist", &ts, &[10, 20], seed)
+}
+
+/// The §V headline comparisons, paper value vs ours.
+pub struct GainRow {
+    pub claim: &'static str,
+    pub paper: String,
+    pub measured: String,
+    pub holds: bool,
+}
+
+/// Reproduce the three headline claims of §V-B/§V-C.
+pub fn gains(seed: u64) -> Vec<GainRow> {
+    let mut rows = Vec::new();
+
+    // 1. pedestrian K=50 T=30: ETA 36 vs adaptive 162 ("gain of 450%")
+    let eta = solve_point("pedestrian", 50, 30.0, Policy::Eta, seed);
+    let ada = solve_point("pedestrian", 50, 30.0, Policy::Analytical, seed);
+    rows.push(GainRow {
+        claim: "pedestrian K=50 T=30s: adaptive ≫ ETA (paper 162 vs 36, 4.5x)",
+        paper: "36 → 162 (4.5x)".into(),
+        measured: format!("{eta} → {ada} ({:.1}x)", ada as f64 / eta.max(1) as f64),
+        holds: ada as f64 / eta.max(1) as f64 > 3.0,
+    });
+
+    // 2. adaptive@T=30 beats ETA@T=60 (half-the-time claim), pedestrian vs K
+    let mut holds2 = true;
+    for k in (5..=50).step_by(5) {
+        let ada30 = solve_point("pedestrian", k, 30.0, Policy::Analytical, seed);
+        let eta60 = solve_point("pedestrian", k, 60.0, Policy::Eta, seed);
+        if ada30 <= eta60 {
+            holds2 = false;
+        }
+    }
+    rows.push(GainRow {
+        claim: "pedestrian: adaptive at T=30s outperforms ETA at T=60s for all K",
+        paper: "holds for all K".into(),
+        measured: if holds2 { "holds for all K ∈ {5..50}".into() } else { "violated".into() },
+        holds: holds2,
+    });
+
+    // 3. MNIST K=10 T=120: ETA 3 vs adaptive 12 ("gain of 400%")
+    let eta3 = solve_point("mnist", 10, 120.0, Policy::Eta, seed);
+    let ada3 = solve_point("mnist", 10, 120.0, Policy::Numerical, seed);
+    rows.push(GainRow {
+        claim: "MNIST K=10 T=120s: adaptive vs ETA (paper 12 vs 3, 4x)",
+        paper: "3 → 12 (4.0x)".into(),
+        measured: format!("{eta3} → {ada3} ({:.1}x)", ada3 as f64 / eta3.max(1) as f64),
+        holds: ada3 as f64 / eta3.max(1) as f64 > 3.0,
+    });
+
+    rows
+}
+
+/// Render the gains table.
+pub fn gains_table(rows: &[GainRow]) -> Table {
+    let mut t = Table::new(&["claim", "paper", "measured", "holds"])
+        .title("§V headline claims — paper vs MELkit")
+        .align(0, crate::util::table::Align::Left);
+    for r in rows {
+        t.row(vec![
+            r.claim.into(),
+            r.paper.clone(),
+            r.measured.clone(),
+            if r.holds { "yes".into() } else { "NO".into() },
+        ]);
+    }
+    t
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fig1_shape_claims() {
+        let f = fig1(42);
+        assert_eq!(f.x.len(), 10);
+        assert_eq!(f.series.len(), 8); // 4 policies × 2 T values
+        let ana30 = f.series_by_prefix("UB-Analytical T=30").unwrap();
+        let eta30 = f.series_by_prefix("ETA T=30").unwrap();
+        let ana60 = f.series_by_prefix("UB-Analytical T=60").unwrap();
+        let num30 = f.series_by_prefix("Numerical T=30").unwrap();
+        let sai30 = f.series_by_prefix("UB-SAI T=30").unwrap();
+        // paper: all three adaptive solvers identical
+        assert_eq!(ana30, num30);
+        assert_eq!(ana30, sai30);
+        // adaptive dominates ETA everywhere
+        for (a, e) in ana30.iter().zip(eta30) {
+            assert!(a >= e);
+        }
+        // τ grows with K (more nodes → smaller batches) and with T
+        assert!(ana30.windows(2).all(|w| w[1] >= w[0]), "{ana30:?}");
+        for (a60, a30) in ana60.iter().zip(ana30) {
+            assert!(a60 >= a30);
+        }
+        // headline magnitude: ≥3x at K=50 T=30
+        let gain = ana30[9] as f64 / eta30[9].max(1) as f64;
+        assert!(gain > 3.0, "gain {gain}");
+    }
+
+    #[test]
+    fn fig2_shape_claims() {
+        let f = fig2(42);
+        let ana_k20 = f.series_by_prefix("UB-Analytical K=20").unwrap();
+        let eta_k20 = f.series_by_prefix("ETA K=20").unwrap();
+        // τ grows with T
+        assert!(ana_k20.windows(2).all(|w| w[1] >= w[0]));
+        // adaptive ≥ ETA pointwise
+        for (a, e) in ana_k20.iter().zip(eta_k20) {
+            assert!(a >= e);
+        }
+    }
+
+    #[test]
+    fn fig3_mnist_smaller_tau_than_pedestrian() {
+        // §V-C: "In general, less updates are possible compared to the
+        // smaller pedestrian dataset and model."
+        let ped = fig1(42);
+        let mni = fig3a(42);
+        let p30 = ped.series_by_prefix("UB-Analytical T=30").unwrap();
+        let m30 = mni.series_by_prefix("UB-Analytical T=30").unwrap();
+        for (p, m) in p30.iter().zip(m30) {
+            assert!(m < p, "mnist τ {m} should be < pedestrian τ {p}");
+        }
+    }
+
+    #[test]
+    fn gains_hold() {
+        for row in gains(42) {
+            assert!(row.holds, "claim failed: {} ({})", row.claim, row.measured);
+        }
+    }
+
+    #[test]
+    fn table_and_csv_render() {
+        let f = fig2(1);
+        let t = f.table();
+        assert_eq!(t.num_rows(), f.x.len());
+        assert!(f.csv().lines().count() == f.x.len() + 1);
+        assert!(!gains_table(&gains(1)).render().is_empty());
+    }
+}
+
+// ---------------------------------------------------------------------
+// Extension figure E: accuracy-within-deadline at paper scale
+// ---------------------------------------------------------------------
+
+/// Fig E (ours): predicted global loss vs simulated time for adaptive vs
+/// ETA at paper scale (K=20, pedestrian, T=30 s), using the analytic
+/// convergence model of `sim::training` (calibrated against the e2e
+/// runs). This is the "learning accuracy within a deadline" story the
+/// paper argues from τ; here it is rendered as loss curves.
+pub fn fig_e(seed: u64) -> FigureData {
+    use crate::sim::training::ConvergenceModel;
+    let cfg = CloudletConfig::pedestrian(20);
+    let scenario = Scenario::random_cloudlet(&cfg, seed);
+    let problem = scenario.problem(30.0);
+    let model = ConvergenceModel::pedestrian();
+    let cycles = 40;
+    let mut series = Vec::new();
+    for (policy, label) in [(Policy::Analytical, "adaptive"), (Policy::Eta, "ETA")] {
+        let alloc = policy.allocator().allocate(&problem).expect("feasible at K=20/T=30");
+        // store milli-loss as integers to reuse the integer series plumbing
+        let ys: Vec<u64> = model
+            .loss_curve(&alloc, &problem, cycles)
+            .into_iter()
+            .map(|(_, l)| (l * 1000.0).round() as u64)
+            .collect();
+        series.push((format!("loss_milli {label} (tau={})", alloc.tau), ys));
+    }
+    FigureData {
+        id: "figE",
+        title: "predicted loss (x1e-3) vs global cycle, K=20 T=30s pedestrian".into(),
+        xlabel: "cycle",
+        x: (1..=cycles).map(|j| j as f64).collect(),
+        series,
+    }
+}
+
+#[cfg(test)]
+mod fig_e_tests {
+    use super::*;
+
+    #[test]
+    fn adaptive_curve_dominates_eta() {
+        let f = fig_e(42);
+        let ada = &f.series[0].1;
+        let eta = &f.series[1].1;
+        assert_eq!(ada.len(), 40);
+        // adaptive loss strictly below ETA at every cycle
+        for (a, e) in ada.iter().zip(eta) {
+            assert!(a < e, "adaptive {a} vs eta {e}");
+        }
+        // both decrease monotonically
+        assert!(ada.windows(2).all(|w| w[1] <= w[0]));
+        assert!(eta.windows(2).all(|w| w[1] <= w[0]));
+    }
+}

@@ -1,0 +1,194 @@
+//! A **learner** = compute profile × wireless link, with the paper's
+//! per-learner timing model (eqs. 9–16).
+//!
+//! For a given `(ModelSpec, DatasetSpec)` task, learner `k` exposes the
+//! three phase times and the coefficients
+//! `t_k = C2_k·τ·d_k + C1_k·d_k + C0_k` (eq. 13) that every allocation
+//! solver consumes.
+
+use crate::channel::Link;
+use crate::compute::ComputeProfile;
+use crate::models::ModelSpec;
+
+/// Per-learner coefficients of eq. (13)–(16), plus derived a/b forms.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Coeffs {
+    /// `C²_k = C_m / f_k` — seconds per (sample × iteration).
+    pub c2: f64,
+    /// `C¹_k = (F·P_d + 2·P_m·S_d) / R_k` — seconds per sample shipped.
+    pub c1: f64,
+    /// `C⁰_k = 2·P_m·S_m / R_k` — model round-trip seconds.
+    pub c0: f64,
+}
+
+impl Coeffs {
+    /// Round-trip time `t_k(τ, d_k)` of eq. (13).
+    pub fn time(&self, tau: f64, d_k: f64) -> f64 {
+        self.c2 * tau * d_k + self.c1 * d_k + self.c0
+    }
+
+    /// `a_k = (T − C⁰_k)/C²_k` of Theorem 1 (eq. 21). Negative ⇒ the
+    /// learner cannot even complete the model exchange within `T`.
+    pub fn a(&self, t_total: f64) -> f64 {
+        (t_total - self.c0) / self.c2
+    }
+
+    /// `b_k = C¹_k / C²_k` of Theorem 1.
+    pub fn b(&self) -> f64 {
+        self.c1 / self.c2
+    }
+
+    /// KKT bound (20): max batch learner k can finish in `T` at given τ.
+    pub fn d_max(&self, tau: f64, t_total: f64) -> f64 {
+        (t_total - self.c0) / (tau * self.c2 + self.c1)
+    }
+
+    /// Max integer iterations for a *fixed* batch within `T` — the ETA
+    /// inner step: `τ ≤ (T − C⁰ − C¹·d)/(C²·d)`.
+    pub fn tau_max(&self, d_k: f64, t_total: f64) -> f64 {
+        if d_k <= 0.0 {
+            return f64::INFINITY;
+        }
+        (t_total - self.c0 - self.c1 * d_k) / (self.c2 * d_k)
+    }
+}
+
+/// One wireless edge learner.
+#[derive(Debug, Clone)]
+pub struct Learner {
+    pub id: usize,
+    /// Human class tag ("laptop" / "rpi" / custom).
+    pub class: String,
+    pub compute: ComputeProfile,
+    pub link: Link,
+}
+
+impl Learner {
+    pub fn new(id: usize, class: &str, compute: ComputeProfile, link: Link) -> Self {
+        Self { id, class: class.into(), compute, link }
+    }
+
+    /// Time to *send* batch + model to this learner — eq. (9).
+    pub fn t_send(&self, model: &ModelSpec, d_k: usize) -> f64 {
+        self.link.tx_time(model.batch_bits(d_k) + model.model_bits(d_k))
+    }
+
+    /// Time of one local iteration — eq. (10).
+    pub fn t_compute(&self, model: &ModelSpec, d_k: usize) -> f64 {
+        self.compute.time_for(model.iteration_flops(d_k))
+    }
+
+    /// Time to *receive* the updated parameters back — eq. (11)
+    /// (reciprocal channel).
+    pub fn t_receive(&self, model: &ModelSpec, d_k: usize) -> f64 {
+        self.link.tx_time(model.model_bits(d_k))
+    }
+
+    /// Full round-trip `t_k = t^S + τ·t^C + t^R` — eq. (12).
+    pub fn round_trip(&self, model: &ModelSpec, tau: usize, d_k: usize) -> f64 {
+        self.t_send(model, d_k) + tau as f64 * self.t_compute(model, d_k)
+            + self.t_receive(model, d_k)
+    }
+
+    /// The eq. (13)–(16) coefficients for `model`.
+    pub fn coeffs(&self, model: &ModelSpec) -> Coeffs {
+        let rate = self.link.rate_bps();
+        let pm = model.model_precision_bits as f64;
+        Coeffs {
+            c2: model.flops_per_sample / self.compute.effective_flops(),
+            c1: (model.features as f64 * model.data_precision_bits as f64
+                + 2.0 * pm * model.coeffs_per_sample as f64)
+                / rate,
+            c0: 2.0 * pm * model.coeffs_const as f64 / rate,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn laptop_at(d: f64) -> Learner {
+        Learner::new(0, "laptop", ComputeProfile::laptop(), Link::at_distance(d))
+    }
+
+    fn rpi_at(d: f64) -> Learner {
+        Learner::new(1, "rpi", ComputeProfile::rpi(), Link::at_distance(d))
+    }
+
+    #[test]
+    fn coeffs_match_closed_forms() {
+        let l = rpi_at(50.0);
+        let m = ModelSpec::pedestrian();
+        let c = l.coeffs(&m);
+        let rate = l.link.rate_bps();
+        assert!((c.c2 - 781_208.0 / 175e6).abs() < 1e-12);
+        assert!((c.c1 - 648.0 * 8.0 / rate).abs() < 1e-15);
+        assert!((c.c0 - 2.0 * 32.0 * 195_000.0 / rate).abs() < 1e-12);
+    }
+
+    #[test]
+    fn round_trip_equals_coeff_polynomial() {
+        // eq. (12) computed from phase times == eq. (13) from coefficients
+        let m = ModelSpec::pedestrian();
+        for l in [laptop_at(30.0), rpi_at(45.0)] {
+            let c = l.coeffs(&m);
+            for (tau, d) in [(1usize, 100usize), (20, 180), (150, 37)] {
+                let direct = l.round_trip(&m, tau, d);
+                let poly = c.time(tau as f64, d as f64);
+                assert!(
+                    (direct - poly).abs() < 1e-9 * direct,
+                    "tau={tau} d={d}: {direct} vs {poly}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn phase_times_are_sane_at_table1_point() {
+        // MNIST full set to one learner at 50 m: batch 376.32 Mbit ≈ 2.6 s;
+        // model 2·8.97 Mbit ≈ 0.12 s round trip.
+        let l = rpi_at(50.0);
+        let m = ModelSpec::mnist();
+        let ts = l.t_send(&m, 60_000);
+        let tr = l.t_receive(&m, 60_000);
+        assert!((2.5..3.0).contains(&ts), "t_send {ts}");
+        assert!((0.05..0.1).contains(&tr), "t_recv {tr}");
+        // rpi one iteration over 6,000 samples ≈ 38.5 s (the ETA K=10 point)
+        let tc = l.t_compute(&m, 6_000);
+        assert!((36.0..41.0).contains(&tc), "t_compute {tc}");
+    }
+
+    #[test]
+    fn d_max_and_tau_max_are_inverses() {
+        let l = laptop_at(20.0);
+        let m = ModelSpec::pedestrian();
+        let c = l.coeffs(&m);
+        let t_total = 30.0;
+        let tau = 42.0;
+        let d = c.d_max(tau, t_total);
+        // at (tau, d_max(tau)) the constraint is tight
+        assert!((c.time(tau, d) - t_total).abs() < 1e-9);
+        // and tau_max at that batch recovers tau
+        assert!((c.tau_max(d, t_total) - tau).abs() < 1e-9);
+    }
+
+    #[test]
+    fn a_and_b_definitions() {
+        let l = rpi_at(50.0);
+        let c = l.coeffs(&ModelSpec::pedestrian());
+        let t = 30.0;
+        assert!((c.a(t) - (t - c.c0) / c.c2).abs() < 1e-12);
+        assert!((c.b() - c.c1 / c.c2).abs() < 1e-15);
+        // calibration anchor: a_slow ≈ 6.7k, a_fast ≈ 46k (DESIGN §2)
+        assert!((6_000.0..7_500.0).contains(&c.a(t)), "a_slow {}", c.a(t));
+        let f = laptop_at(50.0).coeffs(&ModelSpec::pedestrian());
+        assert!((42_000.0..50_000.0).contains(&f.a(t)), "a_fast {}", f.a(t));
+    }
+
+    #[test]
+    fn heterogeneity_orders_compute_times() {
+        let m = ModelSpec::pedestrian();
+        assert!(rpi_at(50.0).t_compute(&m, 100) > laptop_at(50.0).t_compute(&m, 100) * 5.0);
+    }
+}

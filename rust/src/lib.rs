@@ -1,0 +1,61 @@
+//! # MELkit — Mobile Edge Learning in Rust + JAX + Pallas
+//!
+//! Production-quality reproduction of *“Adaptive Task Allocation for
+//! Mobile Edge Learning”* (Mohammad & Sorour, 2018). An **orchestrator**
+//! distributes one learning task (dataset batches + model parameters)
+//! over `K` heterogeneous wireless edge **learners**; each learner runs
+//! `τ` local SGD iterations per **global cycle**, then the orchestrator
+//! aggregates parameter matrices (eq. 5 of the paper). The paper's
+//! contribution — adaptive batch allocation maximizing `τ` under the
+//! global-cycle clock `T` — is a pluggable [`alloc::TaskAllocator`]
+//! policy of the coordinator.
+//!
+//! Layering (see `DESIGN.md`):
+//! * **L3 (this crate)** — coordinator, allocation solvers, wireless
+//!   channel + compute substrates, discrete-event simulator, PJRT
+//!   runtime, metrics, CLI.
+//! * **L2/L1 (build-time Python)** — JAX MLP fwd/bwd over Pallas fused
+//!   dense kernels, AOT-lowered to `artifacts/*.hlo.txt`; never on the
+//!   request path.
+//!
+//! Quick taste (solve one scenario with every policy):
+//! ```no_run
+//! use mel::prelude::*;
+//! let scenario = Scenario::random_cloudlet(&CloudletConfig::pedestrian(10), 42);
+//! let problem = scenario.problem(30.0);
+//! for policy in [Policy::Eta, Policy::Analytical, Policy::UbSai, Policy::Numerical] {
+//!     let a = policy.allocator().allocate(&problem).unwrap();
+//!     println!("{policy:?}: tau={}", a.tau);
+//! }
+//! ```
+
+pub mod util;
+pub mod testkit;
+pub mod benchkit;
+pub mod math;
+pub mod channel;
+pub mod compute;
+pub mod models;
+pub mod dataset;
+pub mod learner;
+pub mod scenario;
+pub mod alloc;
+pub mod energy;
+pub mod sim;
+pub mod runtime;
+pub mod coordinator;
+pub mod metrics;
+pub mod experiments;
+
+/// Convenience re-exports for downstream users and the examples.
+pub mod prelude {
+    pub use crate::alloc::{Allocation, AllocError, Policy, Problem, TaskAllocator};
+    pub use crate::channel::{Link, PathLoss};
+    pub use crate::compute::ComputeProfile;
+    pub use crate::coordinator::{Orchestrator, TrainConfig};
+    pub use crate::dataset::DatasetSpec;
+    pub use crate::learner::Learner;
+    pub use crate::models::ModelSpec;
+    pub use crate::scenario::{CloudletConfig, Scenario};
+    pub use crate::util::rng::Pcg64;
+}

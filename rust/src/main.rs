@@ -1,0 +1,394 @@
+//! `mel` — the MELkit launcher.
+//!
+//! ```text
+//! mel solve    --task pedestrian --k 10 --t 30 [--policy all|eta|analytical|sai|opti] [--seed N]
+//! mel figure   <fig1|fig2|fig3a|fig3b|gains|all> [--out results/] [--seed N]
+//! mel train    --task pedestrian --k 4 --t 30 --cycles 20 [--policy ...] [--lr 0.5] [--d 2048]
+//! mel scenario --task mnist --k 10 [--seed N] [--describe]
+//! mel info
+//! ```
+
+use mel::alloc::Policy;
+use mel::coordinator::{Orchestrator, TrainConfig};
+use mel::experiments;
+use mel::scenario::{CloudletConfig, Scenario};
+use mel::util::cli::{render_help, Args, Command};
+use mel::util::logging;
+use mel::util::table::{fnum, Table};
+
+fn main() {
+    let args = Args::parse();
+    logging::init(args.opt_str("log"));
+    let code = match args.positional(0) {
+        Some("solve") => cmd_solve(&args),
+        Some("figure") => cmd_figure(&args),
+        Some("train") => cmd_train(&args),
+        Some("scenario") => cmd_scenario(&args),
+        Some("energy") => cmd_energy(&args),
+        Some("sweep") => cmd_sweep(&args),
+        Some("info") => cmd_info(),
+        _ => {
+            print_help();
+            if args.positional(0).is_none() { 0 } else { 2 }
+        }
+    };
+    std::process::exit(code);
+}
+
+fn print_help() {
+    let cmds = [
+        Command {
+            name: "solve",
+            about: "solve one allocation problem with one or all policies",
+            usage: "--task pedestrian --k 10 --t 30 --policy all",
+        },
+        Command {
+            name: "figure",
+            about: "reproduce a paper figure (fig1 fig2 fig3a fig3b gains all)",
+            usage: "fig1 --out results/ --seed 42",
+        },
+        Command {
+            name: "train",
+            about: "run real MEL training through the PJRT runtime",
+            usage: "--task pedestrian --k 4 --t 30 --cycles 20 --d 2048",
+        },
+        Command {
+            name: "scenario",
+            about: "generate & print a random cloudlet scenario (JSON)",
+            usage: "--task mnist --k 10 --seed 7",
+        },
+        Command {
+            name: "sweep",
+            about: "custom (K x T) sweep of any policy to a CSV",
+            usage: "--task mnist --ks 5,10,20 --ts 30,60,120 --policy sai --out results/sweep.csv",
+        },
+        Command {
+            name: "energy",
+            about: "per-cycle energy report for every policy (extension)",
+            usage: "--task pedestrian --k 10 --t 30",
+        },
+        Command { name: "info", about: "build/runtime information", usage: "" },
+    ];
+    print!("{}", render_help("mel", "Mobile Edge Learning toolkit", &cmds));
+}
+
+fn build_scenario(args: &Args) -> Scenario {
+    let task = args.get_str("task", "pedestrian");
+    let k = args.get_usize("k", 10);
+    let seed = args.get_u64("seed", 42);
+    let mut cfg = CloudletConfig::by_task(task, k)
+        .unwrap_or_else(|| panic!("unknown task {task:?} (pedestrian|mnist)"));
+    cfg.radius_m = args.get_f64("radius", cfg.radius_m);
+    cfg.laptop_fraction = args.get_f64("laptop-fraction", cfg.laptop_fraction);
+    cfg.channel.shadow_sigma_db = args.get_f64("shadow-db", 0.0);
+    if args.has_flag("rayleigh") {
+        cfg.channel.rayleigh = true;
+    }
+    Scenario::random_cloudlet(&cfg, seed)
+}
+
+fn cmd_solve(args: &Args) -> i32 {
+    let scenario = build_scenario(args);
+    let t = args.get_f64("t", 30.0);
+    let problem = scenario.problem(t);
+    let which = args.get_str("policy", "all");
+    let policies: Vec<Policy> = if which == "all" {
+        Policy::all().to_vec()
+    } else {
+        match Policy::parse(which) {
+            Some(p) => vec![p],
+            None => {
+                eprintln!("unknown policy {which:?}");
+                return 2;
+            }
+        }
+    };
+    let mut table = Table::new(&[
+        "policy",
+        "tau",
+        "relaxed tau*",
+        "makespan(s)",
+        "min d_k",
+        "max d_k",
+        "solve",
+    ])
+    .align(0, mel::util::table::Align::Left);
+    for policy in policies {
+        let t0 = std::time::Instant::now();
+        match policy.allocator().allocate(&problem) {
+            Ok(a) => {
+                table.row(vec![
+                    policy.label().into(),
+                    a.tau.to_string(),
+                    fnum(a.relaxed_tau, 2),
+                    fnum(a.makespan(&problem), 3),
+                    a.batches.iter().min().unwrap().to_string(),
+                    a.batches.iter().max().unwrap().to_string(),
+                    mel::util::table::fdur(t0.elapsed().as_secs_f64()),
+                ]);
+            }
+            Err(e) => {
+                table.row(vec![
+                    policy.label().into(),
+                    "-".into(),
+                    "-".into(),
+                    "-".into(),
+                    "-".into(),
+                    "-".into(),
+                    format!("{e}"),
+                ]);
+            }
+        }
+    }
+    println!(
+        "task={} K={} T={}s d={} seed={}",
+        scenario.model.name,
+        scenario.k(),
+        t,
+        scenario.dataset.total_samples,
+        scenario.seed
+    );
+    print!("{}", table.render());
+    0
+}
+
+fn cmd_figure(args: &Args) -> i32 {
+    let which = args.positional(1).unwrap_or("all");
+    let seed = args.get_u64("seed", 42);
+    let out = args.opt_str("out").map(str::to_string);
+    let figs: Vec<&str> = if which == "all" {
+        vec!["fig1", "fig2", "fig3a", "fig3b", "figE", "gains"]
+    } else {
+        vec![which]
+    };
+    for f in figs {
+        match f {
+            "gains" => {
+                let rows = experiments::gains(seed);
+                print!("{}", experiments::gains_table(&rows).render());
+                if rows.iter().any(|r| !r.holds) {
+                    eprintln!("WARNING: a headline claim did not hold");
+                }
+            }
+            "fig1" | "fig2" | "fig3a" | "fig3b" | "figE" => {
+                let data = match f {
+                    "fig1" => experiments::fig1(seed),
+                    "fig2" => experiments::fig2(seed),
+                    "fig3a" => experiments::fig3a(seed),
+                    "figE" => experiments::fig_e(seed),
+                    _ => experiments::fig3b(seed),
+                };
+                print!("{}", data.table().render());
+                if let Some(dir) = &out {
+                    std::fs::create_dir_all(dir).expect("create out dir");
+                    let path = format!("{dir}/{}.csv", data.id);
+                    std::fs::write(&path, data.csv()).expect("write csv");
+                    println!("wrote {path}");
+                }
+            }
+            other => {
+                eprintln!("unknown figure {other:?}");
+                return 2;
+            }
+        }
+        println!();
+    }
+    0
+}
+
+fn cmd_train(args: &Args) -> i32 {
+    let mut scenario = build_scenario(args);
+    // Allow shrinking the per-cycle dataset so CPU e2e runs stay fast;
+    // the timing model still uses the paper's full-rate coefficients.
+    let d = args.get_usize("d", scenario.dataset.total_samples.min(2048));
+    scenario.dataset.total_samples = d;
+    let cfg = TrainConfig {
+        policy: Policy::parse(args.get_str("policy", "analytical")).expect("bad policy"),
+        t_total: args.get_f64("t", 30.0),
+        cycles: args.get_usize("cycles", 10),
+        lr: args.get_f64("lr", 0.05) as f32,
+        seed: args.get_u64("seed", 42),
+        eval_samples: args.get_usize("eval-samples", 512),
+        artifact_dir: args.get_str("artifacts", "artifacts").to_string(),
+        reallocate_each_cycle: args.has_flag("reallocate"),
+        dispatch_threads: args.get_usize("threads", 4),
+        shadow_sigma_db: args.get_f64("shadow-db", 0.0),
+        rayleigh: args.has_flag("rayleigh"),
+        drop_stragglers: args.has_flag("drop-stragglers"),
+    };
+    println!(
+        "MEL training: task={} K={} d={} T={}s policy={} cycles={}",
+        scenario.model.name,
+        scenario.k(),
+        d,
+        cfg.t_total,
+        cfg.policy.label(),
+        cfg.cycles
+    );
+    let mut orch = match Orchestrator::new(scenario, cfg) {
+        Ok(o) => o,
+        Err(e) => {
+            eprintln!("orchestrator init failed: {e}");
+            return 1;
+        }
+    };
+    match orch.train() {
+        Ok(outcomes) => {
+            let last = outcomes.last().unwrap();
+            println!(
+                "done: {} cycles, final loss {:.4}, accuracy {:.3}, simulated time {:.0}s",
+                outcomes.len(),
+                last.loss,
+                last.accuracy,
+                orch.sim_time()
+            );
+            if let Some(dir) = args.opt_str("out") {
+                std::fs::create_dir_all(dir).expect("create out dir");
+                let path = format!("{dir}/loss_curve_{}.csv", orch.cfg.policy.label());
+                std::fs::write(
+                    &path,
+                    orch.metrics.series_csv("loss_vs_simtime", "sim_s", "loss"),
+                )
+                .expect("write csv");
+                println!("wrote {path}");
+            }
+            0
+        }
+        Err(e) => {
+            eprintln!("training failed: {e}");
+            1
+        }
+    }
+}
+
+fn cmd_scenario(args: &Args) -> i32 {
+    let s = build_scenario(args);
+    if args.has_flag("describe") {
+        let mut t = Table::new(&["id", "class", "dist(m)", "rate(Mbps)", "eff GFLOP/s"])
+            .title("cloudlet");
+        for l in &s.learners {
+            t.row(vec![
+                l.id.to_string(),
+                l.class.clone(),
+                fnum(l.link.distance_m, 1),
+                fnum(l.link.rate_bps() / 1e6, 1),
+                fnum(l.compute.effective_flops() / 1e9, 3),
+            ]);
+        }
+        print!("{}", t.render());
+    } else {
+        println!("{}", s.to_json().to_pretty());
+    }
+    0
+}
+
+fn cmd_info() -> i32 {
+    println!("mel {} — Mobile Edge Learning toolkit", env!("CARGO_PKG_VERSION"));
+    println!(
+        "paper: Mohammad & Sorour, “Adaptive Task Allocation for Mobile Edge Learning” (2018)"
+    );
+    println!("policies: {:?}", Policy::all().map(|p| p.label()));
+    match mel::runtime::Manifest::load("artifacts") {
+        Ok(m) => println!(
+            "artifacts: {} compiled functions for archs {:?}",
+            m.artifacts.len(),
+            m.archs()
+        ),
+        Err(e) => println!("artifacts: not built ({e})"),
+    }
+    0
+}
+
+// ---------------------------------------------------------------------
+// energy report (extension; see rust/src/energy/)
+// ---------------------------------------------------------------------
+
+fn cmd_energy(args: &Args) -> i32 {
+    use mel::energy;
+    let scenario = build_scenario(args);
+    let t = args.get_f64("t", 30.0);
+    let problem = scenario.problem(t);
+    let mut table = Table::new(&[
+        "policy", "tau", "learner TX (J)", "learner compute (J)", "orch TX (J)",
+        "total (J)", "mJ per sample-iter",
+    ])
+    .align(0, mel::util::table::Align::Left);
+    for policy in Policy::all() {
+        match policy.allocator().allocate(&problem) {
+            Ok(a) => {
+                let e = energy::cycle_energy(
+                    &scenario.learners,
+                    &scenario.model,
+                    &a,
+                    energy::DEFAULT_KAPPA,
+                );
+                let tx: f64 = e.per_learner.iter().map(|l| l.tx_j).sum();
+                let cmp: f64 = e.per_learner.iter().map(|l| l.compute_j).sum();
+                table.row(vec![
+                    policy.label().into(),
+                    a.tau.to_string(),
+                    fnum(tx, 3),
+                    fnum(cmp, 3),
+                    fnum(e.orchestrator_tx_j, 3),
+                    fnum(e.grand_total(), 3),
+                    fnum(1e3 * e.joules_per_sample_iteration(&a), 4),
+                ]);
+            }
+            Err(err) => {
+                table.row(vec![
+                    policy.label().into(),
+                    "-".into(),
+                    "-".into(),
+                    "-".into(),
+                    "-".into(),
+                    "-".into(),
+                    format!("{err}"),
+                ]);
+            }
+        }
+    }
+    println!("per-cycle energy, task={} K={} T={t}s", scenario.model.name, scenario.k());
+    print!("{}", table.render());
+    0
+}
+
+
+// ---------------------------------------------------------------------
+// generic sweep (custom grids to CSV)
+// ---------------------------------------------------------------------
+
+fn cmd_sweep(args: &Args) -> i32 {
+    let task = args.get_str("task", "pedestrian").to_string();
+    let ks = args.get_usize_list("ks", &[5, 10, 20, 50]);
+    let ts = args.get_f64_list("ts", &[30.0, 60.0]);
+    let seed = args.get_u64("seed", 42);
+    let policy = match Policy::parse(args.get_str("policy", "analytical")) {
+        Some(p) => p,
+        None => {
+            eprintln!("unknown policy");
+            return 2;
+        }
+    };
+    let mut table = Table::new(&["K", "T", "tau", "gain_vs_eta"]);
+    for &k in &ks {
+        for &t in &ts {
+            let tau = experiments::solve_point(&task, k, t, policy, seed);
+            let eta = experiments::solve_point(&task, k, t, Policy::Eta, seed);
+            table.row(vec![
+                k.to_string(),
+                format!("{t}"),
+                tau.to_string(),
+                if eta > 0 { fnum(tau as f64 / eta as f64, 2) } else { "inf".into() },
+            ]);
+        }
+    }
+    print!("{}", table.render());
+    if let Some(path) = args.opt_str("out") {
+        if let Some(dir) = std::path::Path::new(path).parent() {
+            let _ = std::fs::create_dir_all(dir);
+        }
+        std::fs::write(path, table.to_csv()).expect("write sweep csv");
+        println!("wrote {path}");
+    }
+    0
+}

@@ -1,0 +1,7 @@
+//! Numerical substrates for the allocation solvers: complex arithmetic,
+//! polynomial manipulation + root finding (Durand-Kerner), and scalar
+//! root finding (bisection / Newton / Brent) on monotone functions.
+
+pub mod complex;
+pub mod poly;
+pub mod roots;

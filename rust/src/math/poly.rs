@@ -1,0 +1,316 @@
+//! Real-coefficient polynomials and root finding.
+//!
+//! The UB-Analytical solver needs the feasible root of eq. (21):
+//!
+//! ```text
+//! d·Π_k (τ + b_k) − Σ_k a_k·Π_{l≠k} (τ + b_l) = 0
+//! ```
+//!
+//! We build that degree-K polynomial by explicit expansion
+//! ([`tau_polynomial`]) and solve it with the Durand-Kerner simultaneous
+//! iteration ([`Poly::roots`]) — the paper-faithful path. (The fast path
+//! in `alloc::analytical` exploits monotonicity instead; both agree to
+//! high precision, which is asserted by property tests.)
+
+use crate::math::complex::C64;
+
+/// Dense univariate polynomial, coefficients in ascending power order:
+/// `c[0] + c[1]·x + … + c[n]·x^n`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Poly {
+    pub c: Vec<f64>,
+}
+
+impl Poly {
+    pub fn new(coeffs: Vec<f64>) -> Self {
+        let mut p = Self { c: coeffs };
+        p.trim();
+        p
+    }
+
+    pub fn zero() -> Self {
+        Self { c: vec![0.0] }
+    }
+
+    pub fn constant(v: f64) -> Self {
+        Self { c: vec![v] }
+    }
+
+    /// The monomial `x + b` (building block for eq. 21 products).
+    pub fn linear(b: f64) -> Self {
+        Self { c: vec![b, 1.0] }
+    }
+
+    fn trim(&mut self) {
+        while self.c.len() > 1 && *self.c.last().unwrap() == 0.0 {
+            self.c.pop();
+        }
+    }
+
+    pub fn degree(&self) -> usize {
+        self.c.len() - 1
+    }
+
+    /// Horner evaluation.
+    pub fn eval(&self, x: f64) -> f64 {
+        self.c.iter().rev().fold(0.0, |acc, &ci| acc * x + ci)
+    }
+
+    /// Horner evaluation at a complex point.
+    pub fn eval_c(&self, z: C64) -> C64 {
+        self.c
+            .iter()
+            .rev()
+            .fold(C64::ZERO, |acc, &ci| acc * z + C64::real(ci))
+    }
+
+    /// Derivative polynomial.
+    pub fn derivative(&self) -> Poly {
+        if self.c.len() <= 1 {
+            return Poly::zero();
+        }
+        Poly::new(
+            self.c[1..]
+                .iter()
+                .enumerate()
+                .map(|(i, &ci)| ci * (i + 1) as f64)
+                .collect(),
+        )
+    }
+
+    pub fn add(&self, other: &Poly) -> Poly {
+        let n = self.c.len().max(other.c.len());
+        let mut c = vec![0.0; n];
+        for (i, v) in c.iter_mut().enumerate() {
+            *v = self.c.get(i).copied().unwrap_or(0.0) + other.c.get(i).copied().unwrap_or(0.0);
+        }
+        Poly::new(c)
+    }
+
+    pub fn scale(&self, s: f64) -> Poly {
+        Poly::new(self.c.iter().map(|&ci| ci * s).collect())
+    }
+
+    pub fn mul(&self, other: &Poly) -> Poly {
+        let mut c = vec![0.0; self.c.len() + other.c.len() - 1];
+        for (i, &a) in self.c.iter().enumerate() {
+            for (j, &b) in other.c.iter().enumerate() {
+                c[i + j] += a * b;
+            }
+        }
+        Poly::new(c)
+    }
+
+    /// Product `Π_k (x + b_k)` via incremental convolution — O(K²).
+    pub fn product_of_linears(bs: &[f64]) -> Poly {
+        let mut p = Poly::constant(1.0);
+        for &b in bs {
+            p = p.mul(&Poly::linear(b));
+        }
+        p
+    }
+
+    /// All complex roots via the Durand-Kerner (Weierstrass) iteration.
+    ///
+    /// Converges simultaneously to all roots for polynomials without
+    /// pathological multiplicities; we run with distinct non-real seeds
+    /// on a circle of the Cauchy root-bound radius.
+    pub fn roots(&self, max_iter: usize, tol: f64) -> Vec<C64> {
+        let n = self.degree();
+        if n == 0 {
+            return vec![];
+        }
+        // normalize to monic
+        let lead = *self.c.last().unwrap();
+        assert!(lead != 0.0);
+        let monic: Vec<f64> = self.c.iter().map(|&ci| ci / lead).collect();
+        let poly = Poly { c: monic };
+
+        // Cauchy bound: 1 + max |c_i| (monic)
+        let bound = 1.0
+            + poly.c[..n]
+                .iter()
+                .fold(0.0f64, |m, &ci| m.max(ci.abs()));
+
+        // distinct seeds: radius slightly inside the bound, non-real angle offset
+        let mut z: Vec<C64> = (0..n)
+            .map(|i| {
+                C64::cis(2.0 * std::f64::consts::PI * i as f64 / n as f64 + 0.4) * (bound * 0.8 + 0.1)
+            })
+            .collect();
+
+        for _ in 0..max_iter {
+            let mut max_step = 0.0f64;
+            for i in 0..n {
+                let mut denom = C64::ONE;
+                for j in 0..n {
+                    if i != j {
+                        denom = denom * (z[i] - z[j]);
+                    }
+                }
+                let step = poly.eval_c(z[i]) / denom;
+                z[i] = z[i] - step;
+                max_step = max_step.max(step.abs());
+            }
+            if max_step < tol {
+                break;
+            }
+        }
+        z
+    }
+
+    /// Real roots only (imaginary part below `imag_tol`), deduplicated
+    /// and sorted ascending.
+    pub fn real_roots(&self, imag_tol: f64) -> Vec<f64> {
+        let mut rs: Vec<f64> = self
+            .roots(500, 1e-13)
+            .into_iter()
+            .filter(|z| z.im.abs() < imag_tol * (1.0 + z.re.abs()))
+            .map(|z| z.re)
+            .collect();
+        rs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        rs.dedup_by(|a, b| (*a - *b).abs() < 1e-9 * (1.0 + a.abs()));
+        rs
+    }
+}
+
+/// Build the eq. (21) polynomial
+/// `P(τ) = d·Π_k (τ + b_k) − Σ_k a_k·Π_{l≠k} (τ + b_l)`
+/// whose positive real root is the relaxed-optimal τ*.
+///
+/// O(K²) expansion: the Π_{l≠k} factors are produced from prefix/suffix
+/// products so the whole build is a single quadratic pass, not K separate
+/// K-term products (which would be O(K³)).
+pub fn tau_polynomial(d: f64, a: &[f64], b: &[f64]) -> Poly {
+    assert_eq!(a.len(), b.len());
+    let k = a.len();
+    assert!(k >= 1);
+
+    // prefix[i] = Π_{l<i} (x+b_l), suffix[i] = Π_{l>=i} (x+b_l)
+    let mut prefix: Vec<Poly> = Vec::with_capacity(k + 1);
+    prefix.push(Poly::constant(1.0));
+    for i in 0..k {
+        let next = prefix[i].mul(&Poly::linear(b[i]));
+        prefix.push(next);
+    }
+    let mut suffix: Vec<Poly> = vec![Poly::constant(1.0); k + 1];
+    for i in (0..k).rev() {
+        suffix[i] = suffix[i + 1].mul(&Poly::linear(b[i]));
+    }
+
+    let mut p = prefix[k].scale(d); // d · Π_k (x + b_k)
+    for i in 0..k {
+        let pi = prefix[i].mul(&suffix[i + 1]); // Π_{l≠i}
+        p = p.add(&pi.scale(-a[i]));
+    }
+    p
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn eval_and_derivative() {
+        // p(x) = 1 + 2x + 3x^2
+        let p = Poly::new(vec![1.0, 2.0, 3.0]);
+        assert_eq!(p.degree(), 2);
+        assert_eq!(p.eval(2.0), 17.0);
+        let dp = p.derivative();
+        assert_eq!(dp.c, vec![2.0, 6.0]);
+        assert_eq!(Poly::constant(5.0).derivative(), Poly::zero());
+    }
+
+    #[test]
+    fn mul_add_scale() {
+        let p = Poly::new(vec![1.0, 1.0]); // 1+x
+        let q = Poly::new(vec![-1.0, 1.0]); // -1+x
+        assert_eq!(p.mul(&q).c, vec![-1.0, 0.0, 1.0]); // x^2-1
+        assert_eq!(p.add(&q).c, vec![0.0, 2.0]);
+        assert_eq!(p.scale(3.0).c, vec![3.0, 3.0]);
+    }
+
+    #[test]
+    fn trim_removes_leading_zeros() {
+        let p = Poly::new(vec![1.0, 2.0, 0.0, 0.0]);
+        assert_eq!(p.degree(), 1);
+    }
+
+    #[test]
+    fn product_of_linears_expands() {
+        // (x+1)(x+2)(x+3) = x^3 + 6x^2 + 11x + 6
+        let p = Poly::product_of_linears(&[1.0, 2.0, 3.0]);
+        assert_eq!(p.c, vec![6.0, 11.0, 6.0, 1.0]);
+    }
+
+    #[test]
+    fn roots_of_quadratic() {
+        // (x-3)(x+5) = x^2 + 2x - 15
+        let p = Poly::new(vec![-15.0, 2.0, 1.0]);
+        let rs = p.real_roots(1e-8);
+        assert_eq!(rs.len(), 2);
+        assert!((rs[0] + 5.0).abs() < 1e-9);
+        assert!((rs[1] - 3.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn roots_complex_pair() {
+        // x^2 + 1 → ±i
+        let p = Poly::new(vec![1.0, 0.0, 1.0]);
+        let rs = p.roots(200, 1e-13);
+        assert_eq!(rs.len(), 2);
+        for z in rs {
+            assert!(z.re.abs() < 1e-9);
+            assert!((z.im.abs() - 1.0).abs() < 1e-9);
+        }
+        assert!(p.real_roots(1e-8).is_empty());
+    }
+
+    #[test]
+    fn roots_of_degree_10_known() {
+        // Π_{k=1..10} (x - k)
+        let p = Poly::product_of_linears(&(1..=10).map(|k| -(k as f64)).collect::<Vec<_>>());
+        let rs = p.real_roots(1e-6);
+        assert_eq!(rs.len(), 10);
+        for (i, r) in rs.iter().enumerate() {
+            assert!((r - (i + 1) as f64).abs() < 1e-6, "root {i}: {r}");
+        }
+    }
+
+    #[test]
+    fn tau_polynomial_matches_partial_fractions() {
+        // With a=(6,6), b=(1,2), d=5: Σ a_k/(τ+b_k) = d
+        // ⇔ 5(τ+1)(τ+2) − 6(τ+2) − 6(τ+1) = 5τ²+3τ−8 → root τ=1 (and −1.6)
+        let p = tau_polynomial(5.0, &[6.0, 6.0], &[1.0, 2.0]);
+        assert_eq!(p.degree(), 2);
+        assert!((p.eval(1.0)).abs() < 1e-12);
+        let rs = p.real_roots(1e-8);
+        assert!(rs.iter().any(|r| (r - 1.0).abs() < 1e-9));
+    }
+
+    #[test]
+    fn tau_polynomial_root_satisfies_rational_eq() {
+        // random-ish instance: verify the positive root of P solves Σ a/(τ+b) = d
+        let a = [120.0, 45.0, 300.0, 80.0];
+        let b = [0.5, 2.0, 1.1, 3.3];
+        let d = 100.0;
+        let p = tau_polynomial(d, &a, &b);
+        let rs = p.real_roots(1e-8);
+        let tau = rs
+            .into_iter()
+            .filter(|&t| t > 0.0)
+            .min_by(|x, y| x.partial_cmp(y).unwrap())
+            .expect("positive root exists");
+        let g: f64 = a.iter().zip(&b).map(|(&ai, &bi)| ai / (tau + bi)).sum();
+        assert!((g - d).abs() < 1e-6 * d, "g={g}");
+    }
+
+    #[test]
+    fn tau_polynomial_k1() {
+        // K=1: d(τ+b) − a = 0 → τ = a/d − b
+        let p = tau_polynomial(10.0, &[50.0], &[2.0]);
+        let rs = p.real_roots(1e-8);
+        assert_eq!(rs.len(), 1);
+        assert!((rs[0] - 3.0).abs() < 1e-9);
+    }
+}

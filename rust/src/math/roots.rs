@@ -1,0 +1,184 @@
+//! Scalar root finding on well-behaved functions: bisection (guaranteed),
+//! damped Newton (fast), and a Brent-style hybrid. The allocation fast
+//! path solves `g(τ) = Σ a_k/(τ+b_k) − d = 0`, which is strictly
+//! decreasing and convex for `τ ≥ 0` — Newton from the left converges
+//! monotonically and quadratically; bisection is the cross-check.
+
+/// Outcome of a root search.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Root {
+    pub x: f64,
+    pub fx: f64,
+    pub iterations: usize,
+}
+
+/// Bisection on `[lo, hi]`; requires a sign change. Tolerances are on
+/// the interval width (xtol) and residual (ftol).
+pub fn bisect<F: FnMut(f64) -> f64>(
+    mut f: F,
+    mut lo: f64,
+    mut hi: f64,
+    xtol: f64,
+    max_iter: usize,
+) -> Option<Root> {
+    let mut flo = f(lo);
+    if flo == 0.0 {
+        return Some(Root { x: lo, fx: 0.0, iterations: 0 });
+    }
+    let fhi = f(hi);
+    if fhi == 0.0 {
+        return Some(Root { x: hi, fx: 0.0, iterations: 0 });
+    }
+    if flo.signum() == fhi.signum() {
+        return None;
+    }
+    for it in 0..max_iter {
+        let mid = 0.5 * (lo + hi);
+        let fm = f(mid);
+        if fm == 0.0 || (hi - lo) < xtol {
+            return Some(Root { x: mid, fx: fm, iterations: it + 1 });
+        }
+        if fm.signum() == flo.signum() {
+            lo = mid;
+            flo = fm;
+        } else {
+            hi = mid;
+        }
+    }
+    Some(Root { x: 0.5 * (lo + hi), fx: f(0.5 * (lo + hi)), iterations: max_iter })
+}
+
+/// Damped Newton iteration with numeric fallback; `df` is the analytic
+/// derivative. Falls back on halving steps that leave the domain
+/// (`x < domain_min`) or increase |f|.
+pub fn newton<F, D>(
+    mut f: F,
+    mut df: D,
+    x0: f64,
+    domain_min: f64,
+    xtol: f64,
+    max_iter: usize,
+) -> Option<Root>
+where
+    F: FnMut(f64) -> f64,
+    D: FnMut(f64) -> f64,
+{
+    let mut x = x0;
+    let mut fx = f(x);
+    for it in 0..max_iter {
+        if fx.abs() < 1e-14 {
+            return Some(Root { x, fx, iterations: it });
+        }
+        let d = df(x);
+        if d == 0.0 || !d.is_finite() {
+            return None;
+        }
+        let mut step = fx / d;
+        // damping: keep inside domain, require |f| decrease
+        let mut tries = 0;
+        loop {
+            let xn = x - step;
+            if xn >= domain_min {
+                let fn_ = f(xn);
+                if fn_.abs() <= fx.abs() || tries >= 40 {
+                    if (x - xn).abs() < xtol * (1.0 + x.abs()) {
+                        return Some(Root { x: xn, fx: fn_, iterations: it + 1 });
+                    }
+                    x = xn;
+                    fx = fn_;
+                    break;
+                }
+            }
+            step *= 0.5;
+            tries += 1;
+            if tries > 60 {
+                return Some(Root { x, fx, iterations: it + 1 });
+            }
+        }
+    }
+    Some(Root { x, fx, iterations: max_iter })
+}
+
+/// Expand `hi` geometrically until `f(hi)` changes sign vs `f(lo)`
+/// (for monotone f with known root above `lo`). Returns the bracket.
+pub fn bracket_upward<F: FnMut(f64) -> f64>(
+    mut f: F,
+    lo: f64,
+    mut hi: f64,
+    max_doublings: usize,
+) -> Option<(f64, f64)> {
+    let flo = f(lo);
+    if flo == 0.0 {
+        return Some((lo, lo));
+    }
+    for _ in 0..max_doublings {
+        if f(hi).signum() != flo.signum() {
+            return Some((lo, hi));
+        }
+        hi *= 2.0;
+    }
+    None
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bisect_finds_sqrt2() {
+        let r = bisect(|x| x * x - 2.0, 0.0, 2.0, 1e-12, 200).unwrap();
+        assert!((r.x - std::f64::consts::SQRT_2).abs() < 1e-10);
+    }
+
+    #[test]
+    fn bisect_rejects_no_sign_change() {
+        assert!(bisect(|x| x * x + 1.0, -1.0, 1.0, 1e-12, 100).is_none());
+    }
+
+    #[test]
+    fn bisect_exact_endpoint() {
+        let r = bisect(|x| x - 1.0, 1.0, 2.0, 1e-12, 10).unwrap();
+        assert_eq!(r.x, 1.0);
+        assert_eq!(r.iterations, 0);
+    }
+
+    #[test]
+    fn newton_quadratic_convergence() {
+        let r = newton(|x| x * x - 2.0, |x| 2.0 * x, 1.0, 0.0, 1e-14, 100).unwrap();
+        assert!((r.x - std::f64::consts::SQRT_2).abs() < 1e-12);
+        assert!(r.iterations < 10, "took {}", r.iterations);
+    }
+
+    #[test]
+    fn newton_respects_domain() {
+        // root of ln(x) − 1 at e; domain_min keeps iterates positive
+        let r = newton(|x: f64| x.ln() - 1.0, |x| 1.0 / x, 0.5, 1e-12, 1e-14, 200).unwrap();
+        assert!((r.x - std::f64::consts::E).abs() < 1e-10);
+    }
+
+    #[test]
+    fn newton_on_allocation_shape() {
+        // g(τ) = Σ a/(τ+b) − d: decreasing convex; Newton from 0 converges
+        let a = [500.0, 120.0, 80.0];
+        let b = [0.3, 1.0, 2.5];
+        let d = 50.0;
+        let g = |t: f64| a.iter().zip(&b).map(|(&ai, &bi)| ai / (t + bi)).sum::<f64>() - d;
+        let dg = |t: f64| -a.iter().zip(&b).map(|(&ai, &bi)| ai / ((t + bi) * (t + bi))).sum::<f64>();
+        let r = newton(g, dg, 0.0, 0.0, 1e-13, 200).unwrap();
+        assert!(r.fx.abs() < 1e-9);
+        let check = bisect(g, 0.0, 1e6, 1e-10, 500).unwrap();
+        assert!((r.x - check.x).abs() < 1e-6);
+    }
+
+    #[test]
+    fn bracket_upward_doubles_until_sign_change() {
+        let (lo, hi) = bracket_upward(|x| 100.0 - x, 0.0, 1.0, 64).unwrap();
+        assert_eq!(lo, 0.0);
+        assert!(hi >= 100.0);
+    }
+
+    #[test]
+    fn bracket_upward_gives_up() {
+        assert!(bracket_upward(|_| 1.0, 0.0, 1.0, 8).is_none());
+    }
+}

@@ -1,0 +1,221 @@
+//! Metrics substrate: counters, gauges and histograms behind a
+//! registry, plus time-series recording (loss curves) and CSV/JSON
+//! export. The coordinator publishes here; examples and benches read
+//! back or dump to `results/`.
+
+use std::collections::BTreeMap;
+use std::sync::Mutex;
+
+use crate::util::json::Json;
+use crate::util::stats::{percentile, Welford};
+
+/// A histogram/summary over pushed samples.
+#[derive(Debug, Clone, Default)]
+pub struct Summary {
+    w: Welford,
+    samples: Vec<f64>,
+}
+
+impl Summary {
+    pub fn push(&mut self, x: f64) {
+        self.w.push(x);
+        self.samples.push(x);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.w.count()
+    }
+
+    pub fn mean(&self) -> f64 {
+        self.w.mean()
+    }
+
+    pub fn p(&self, q: f64) -> f64 {
+        percentile(&self.samples, q)
+    }
+
+    pub fn max(&self) -> f64 {
+        self.w.max()
+    }
+
+    pub fn to_json(&self) -> Json {
+        if self.samples.is_empty() {
+            return Json::obj(vec![("count", Json::Num(0.0))]);
+        }
+        Json::obj(vec![
+            ("count", Json::Num(self.count() as f64)),
+            ("mean", Json::Num(self.mean())),
+            ("p50", Json::Num(self.p(50.0))),
+            ("p95", Json::Num(self.p(95.0))),
+            ("max", Json::Num(self.max())),
+        ])
+    }
+}
+
+/// Thread-safe metrics registry.
+#[derive(Debug, Default)]
+pub struct Metrics {
+    inner: Mutex<Inner>,
+}
+
+#[derive(Debug, Default)]
+struct Inner {
+    counters: BTreeMap<String, u64>,
+    gauges: BTreeMap<String, f64>,
+    summaries: BTreeMap<String, Summary>,
+    /// Named time series of (x, y) points — loss curves etc.
+    series: BTreeMap<String, Vec<(f64, f64)>>,
+}
+
+impl Metrics {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn inc(&self, name: &str, by: u64) {
+        let mut g = self.inner.lock().unwrap();
+        *g.counters.entry(name.into()).or_default() += by;
+    }
+
+    pub fn gauge(&self, name: &str, v: f64) {
+        self.inner.lock().unwrap().gauges.insert(name.into(), v);
+    }
+
+    pub fn observe(&self, name: &str, v: f64) {
+        let mut g = self.inner.lock().unwrap();
+        g.summaries.entry(name.into()).or_default().push(v);
+    }
+
+    pub fn record(&self, series: &str, x: f64, y: f64) {
+        let mut g = self.inner.lock().unwrap();
+        g.series.entry(series.into()).or_default().push((x, y));
+    }
+
+    pub fn counter(&self, name: &str) -> u64 {
+        self.inner.lock().unwrap().counters.get(name).copied().unwrap_or(0)
+    }
+
+    pub fn gauge_value(&self, name: &str) -> Option<f64> {
+        self.inner.lock().unwrap().gauges.get(name).copied()
+    }
+
+    pub fn summary_mean(&self, name: &str) -> Option<f64> {
+        let g = self.inner.lock().unwrap();
+        g.summaries.get(name).filter(|s| s.count() > 0).map(|s| s.mean())
+    }
+
+    pub fn series(&self, name: &str) -> Vec<(f64, f64)> {
+        self.inner.lock().unwrap().series.get(name).cloned().unwrap_or_default()
+    }
+
+    /// Export everything as JSON (deterministic key order).
+    pub fn to_json(&self) -> Json {
+        let g = self.inner.lock().unwrap();
+        Json::obj(vec![
+            (
+                "counters",
+                Json::Obj(g.counters.iter().map(|(k, &v)| (k.clone(), Json::Num(v as f64))).collect()),
+            ),
+            (
+                "gauges",
+                Json::Obj(g.gauges.iter().map(|(k, &v)| (k.clone(), Json::Num(v))).collect()),
+            ),
+            (
+                "summaries",
+                Json::Obj(g.summaries.iter().map(|(k, s)| (k.clone(), s.to_json())).collect()),
+            ),
+            (
+                "series",
+                Json::Obj(
+                    g.series
+                        .iter()
+                        .map(|(k, pts)| {
+                            (
+                                k.clone(),
+                                Json::Arr(
+                                    pts.iter()
+                                        .map(|&(x, y)| {
+                                            Json::Arr(vec![Json::Num(x), Json::Num(y)])
+                                        })
+                                        .collect(),
+                                ),
+                            )
+                        })
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+
+    /// Export one series as a two-column CSV.
+    pub fn series_csv(&self, name: &str, xlabel: &str, ylabel: &str) -> String {
+        let mut out = format!("{xlabel},{ylabel}\n");
+        for (x, y) in self.series(name) {
+            out.push_str(&format!("{x},{y}\n"));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_gauges_summaries() {
+        let m = Metrics::new();
+        m.inc("cycles", 1);
+        m.inc("cycles", 2);
+        assert_eq!(m.counter("cycles"), 3);
+        assert_eq!(m.counter("absent"), 0);
+        m.gauge("tau", 42.0);
+        assert_eq!(m.gauge_value("tau"), Some(42.0));
+        for i in 0..10 {
+            m.observe("latency", i as f64);
+        }
+        assert_eq!(m.summary_mean("latency"), Some(4.5));
+    }
+
+    #[test]
+    fn series_and_csv() {
+        let m = Metrics::new();
+        m.record("loss", 0.0, 2.3);
+        m.record("loss", 1.0, 1.9);
+        assert_eq!(m.series("loss").len(), 2);
+        let csv = m.series_csv("loss", "cycle", "loss");
+        assert!(csv.starts_with("cycle,loss\n0,2.3\n"));
+    }
+
+    #[test]
+    fn json_export_parses() {
+        let m = Metrics::new();
+        m.inc("a", 1);
+        m.observe("s", 2.0);
+        m.record("curve", 1.0, 2.0);
+        let j = m.to_json();
+        let text = j.to_pretty();
+        let back = Json::parse(&text).unwrap();
+        assert_eq!(back.get("counters").unwrap().get("a").unwrap().as_u64().unwrap(), 1);
+    }
+
+    #[test]
+    fn thread_safety() {
+        use std::sync::Arc;
+        let m = Arc::new(Metrics::new());
+        let hs: Vec<_> = (0..8)
+            .map(|_| {
+                let m = m.clone();
+                std::thread::spawn(move || {
+                    for _ in 0..1000 {
+                        m.inc("n", 1);
+                        m.observe("x", 1.0);
+                    }
+                })
+            })
+            .collect();
+        for h in hs {
+            h.join().unwrap();
+        }
+        assert_eq!(m.counter("n"), 8000);
+    }
+}

@@ -1,0 +1,188 @@
+//! ML model descriptors — the `(F, P_d, P_m, S_d, S_m, C_m)` tuple that
+//! drives the paper's size/time equations (6)–(12).
+//!
+//! [`ModelSpec`] derives every coefficient from an MLP layer list plus
+//! dataset precision, and also carries the paper's exact published
+//! constants for the two evaluation models so figures reproduce without
+//! depending on our flop-counting convention.
+
+use crate::util::json::{Json, JsonError};
+
+/// Description of one distributed-learning model + dataset format.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ModelSpec {
+    /// Human name ("pedestrian", "mnist", ...).
+    pub name: String,
+    /// MLP layer widths, input → output.
+    pub layers: Vec<usize>,
+    /// Features per sample (input width), the paper's `F`.
+    pub features: usize,
+    /// Data bit precision `P_d` (u8 images → 8).
+    pub data_precision_bits: u32,
+    /// Model bit precision `P_m` (f32 → 32).
+    pub model_precision_bits: u32,
+    /// Per-sample model coefficients `S_d` (0 for the paper's MLPs —
+    /// nothing in the parameter matrix scales with batch size).
+    pub coeffs_per_sample: usize,
+    /// Constant model coefficients `S_m` (weight-matrix entries).
+    pub coeffs_const: usize,
+    /// Flops per sample per local iteration, `C_m` (fwd+bwd).
+    pub flops_per_sample: f64,
+}
+
+impl ModelSpec {
+    /// Build a spec from MLP layers with our counting conventions:
+    /// `S_m` = Σ nᵢ·nᵢ₊₁ (weights; the paper's pedestrian S_m counts no
+    /// biases) and `C_m` = 4·Σ nᵢ·nᵢ₊₁ + 2·Σ nᵢ.
+    pub fn mlp(name: &str, layers: &[usize], data_precision_bits: u32) -> Self {
+        assert!(layers.len() >= 2, "mlp needs at least input+output layers");
+        let mac: usize = layers.windows(2).map(|w| w[0] * w[1]).sum();
+        let act: usize = layers.iter().sum();
+        Self {
+            name: name.to_string(),
+            layers: layers.to_vec(),
+            features: layers[0],
+            data_precision_bits,
+            model_precision_bits: 32,
+            coeffs_per_sample: 0,
+            coeffs_const: mac,
+            flops_per_sample: (4 * mac + 2 * act) as f64,
+        }
+    }
+
+    /// The paper's pedestrian model: 18×36 images (648 features),
+    /// single 300-unit hidden layer, 2 classes. Uses the *published*
+    /// constants: S_m = 195,000 (6,240,000 bits at P_m=32) and
+    /// C_m = 781,208 flops.
+    pub fn pedestrian() -> Self {
+        let mut spec = Self::mlp("pedestrian", &[648, 300, 2], 8);
+        debug_assert_eq!(spec.coeffs_const, 195_000);
+        spec.flops_per_sample = 781_208.0; // published value, §V-A
+        spec
+    }
+
+    /// The paper's MNIST model: 28×28 images, layers [784,300,124,60,10].
+    pub fn mnist() -> Self {
+        Self::mlp("mnist", &[784, 300, 124, 60, 10], 8)
+    }
+
+    /// Look up a named builtin.
+    pub fn by_name(name: &str) -> Option<Self> {
+        match name {
+            "pedestrian" => Some(Self::pedestrian()),
+            "mnist" => Some(Self::mnist()),
+            _ => None,
+        }
+    }
+
+    /// Bits to ship a batch of `d_k` samples — eq. (6): `d_k·F·P_d`.
+    pub fn batch_bits(&self, d_k: usize) -> f64 {
+        d_k as f64 * self.features as f64 * self.data_precision_bits as f64
+    }
+
+    /// Bits of the parameter matrix for a `d_k`-sample batch — eq. (7):
+    /// `P_m·(d_k·S_d + S_m)`.
+    pub fn model_bits(&self, d_k: usize) -> f64 {
+        self.model_precision_bits as f64
+            * (d_k as f64 * self.coeffs_per_sample as f64 + self.coeffs_const as f64)
+    }
+
+    /// Flops for one local iteration over `d_k` samples — eq. (8).
+    pub fn iteration_flops(&self, d_k: usize) -> f64 {
+        d_k as f64 * self.flops_per_sample
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("name", Json::Str(self.name.clone())),
+            ("layers", Json::from_usize_slice(&self.layers)),
+            ("data_precision_bits", Json::Num(self.data_precision_bits as f64)),
+            ("model_precision_bits", Json::Num(self.model_precision_bits as f64)),
+            ("coeffs_per_sample", Json::Num(self.coeffs_per_sample as f64)),
+            ("coeffs_const", Json::Num(self.coeffs_const as f64)),
+            ("flops_per_sample", Json::Num(self.flops_per_sample)),
+        ])
+    }
+
+    pub fn from_json(v: &Json) -> Result<Self, JsonError> {
+        let layers: Result<Vec<usize>, _> =
+            v.get("layers")?.as_arr()?.iter().map(|x| x.as_usize()).collect();
+        let layers = layers?;
+        let mut spec = Self::mlp(
+            v.get("name")?.as_str()?,
+            &layers,
+            v.get("data_precision_bits")?.as_u64()? as u32,
+        );
+        if let Some(x) = v.opt("model_precision_bits") {
+            spec.model_precision_bits = x.as_u64()? as u32;
+        }
+        if let Some(x) = v.opt("coeffs_per_sample") {
+            spec.coeffs_per_sample = x.as_usize()?;
+        }
+        if let Some(x) = v.opt("coeffs_const") {
+            spec.coeffs_const = x.as_usize()?;
+        }
+        if let Some(x) = v.opt("flops_per_sample") {
+            spec.flops_per_sample = x.as_f64()?;
+        }
+        Ok(spec)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pedestrian_constants_match_paper() {
+        let m = ModelSpec::pedestrian();
+        assert_eq!(m.features, 648);
+        assert_eq!(m.coeffs_const, 195_000);
+        // "the size of the model is 6,240,000 bits"
+        assert_eq!(m.model_bits(123), 6_240_000.0); // S_d = 0 → batch-independent
+        assert_eq!(m.flops_per_sample, 781_208.0);
+        assert_eq!(m.data_precision_bits, 8);
+    }
+
+    #[test]
+    fn mnist_constants_match_paper() {
+        let m = ModelSpec::mnist();
+        assert_eq!(m.layers, vec![784, 300, 124, 60, 10]);
+        assert_eq!(m.coeffs_const, 280_440);
+        // flop convention lands within 0.5% of 4×MAC
+        assert!((m.flops_per_sample - 4.0 * 280_440.0).abs() / m.flops_per_sample < 5e-3);
+        // MNIST dataset: 60000 images of 784 u8 features = 376.32 Mbit (§II-B)
+        assert_eq!(m.batch_bits(60_000), 376_320_000.0);
+    }
+
+    #[test]
+    fn batch_and_model_bits_follow_eqs_6_7() {
+        let mut m = ModelSpec::mlp("custom", &[100, 10], 16);
+        m.coeffs_per_sample = 3; // exercise the S_d path
+        assert_eq!(m.batch_bits(50), 50.0 * 100.0 * 16.0);
+        assert_eq!(m.model_bits(50), 32.0 * (50.0 * 3.0 + 1000.0));
+        assert_eq!(m.iteration_flops(7), 7.0 * m.flops_per_sample);
+    }
+
+    #[test]
+    fn flops_convention_matches_pedestrian_within_0p1pct() {
+        let generic = ModelSpec::mlp("p", &[648, 300, 2], 8);
+        assert!((generic.flops_per_sample - 781_208.0).abs() / 781_208.0 < 1e-3);
+    }
+
+    #[test]
+    fn by_name_and_json_round_trip() {
+        for name in ["pedestrian", "mnist"] {
+            let m = ModelSpec::by_name(name).unwrap();
+            let back = ModelSpec::from_json(&m.to_json()).unwrap();
+            assert_eq!(m, back);
+        }
+        assert!(ModelSpec::by_name("nope").is_none());
+    }
+
+    #[test]
+    #[should_panic(expected = "at least input")]
+    fn mlp_requires_two_layers() {
+        ModelSpec::mlp("bad", &[5], 8);
+    }
+}

@@ -1,0 +1,222 @@
+//! Artifact manifest: the contract between `python/compile/aot.py` and
+//! the Rust runtime. Describes every lowered HLO module (architecture,
+//! function, batch bucket, tensor order/shapes/dtypes).
+
+use std::path::{Path, PathBuf};
+
+use crate::util::json::{Json, JsonError};
+
+/// Shape+dtype of one tensor in an artifact's signature.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TensorMeta {
+    pub shape: Vec<usize>,
+    pub dtype: String,
+}
+
+/// One AOT-compiled artifact.
+#[derive(Debug, Clone)]
+pub struct ArtifactMeta {
+    pub name: String,
+    pub file: PathBuf,
+    pub arch: String,
+    pub function: String,
+    pub bucket: usize,
+    pub layers: Vec<usize>,
+    pub param_tensors: usize,
+    pub inputs: Vec<TensorMeta>,
+    pub outputs: Vec<TensorMeta>,
+    pub sha256: String,
+}
+
+/// Parsed manifest.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub artifacts: Vec<ArtifactMeta>,
+}
+
+fn tensor_list(v: &Json) -> Result<Vec<TensorMeta>, JsonError> {
+    v.as_arr()?
+        .iter()
+        .map(|t| {
+            Ok(TensorMeta {
+                shape: t
+                    .get("shape")?
+                    .as_arr()?
+                    .iter()
+                    .map(|x| x.as_usize())
+                    .collect::<Result<_, _>>()?,
+                dtype: t.get("dtype")?.as_str()?.to_string(),
+            })
+        })
+        .collect()
+}
+
+impl Manifest {
+    /// Load `<dir>/manifest.json`.
+    pub fn load(dir: impl AsRef<Path>) -> anyhow::Result<Self> {
+        let dir = dir.as_ref().to_path_buf();
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .map_err(|e| anyhow::anyhow!("reading {path:?}: {e}. Run `make artifacts` first."))?;
+        let v = Json::parse(&text).map_err(|e| anyhow::anyhow!("parsing {path:?}: {e}"))?;
+        let format = v.get("format")?.as_u64()?;
+        anyhow::ensure!(format == 1, "unsupported manifest format {format}");
+        let mut artifacts = Vec::new();
+        for a in v.get("artifacts")?.as_arr()? {
+            artifacts.push(ArtifactMeta {
+                name: a.get("name")?.as_str()?.to_string(),
+                file: dir.join(a.get("file")?.as_str()?),
+                arch: a.get("arch")?.as_str()?.to_string(),
+                function: a.get("function")?.as_str()?.to_string(),
+                bucket: a.get("bucket")?.as_usize()?,
+                layers: a
+                    .get("layers")?
+                    .as_arr()?
+                    .iter()
+                    .map(|x| x.as_usize())
+                    .collect::<Result<_, _>>()?,
+                param_tensors: a.get("param_tensors")?.as_usize()?,
+                inputs: tensor_list(a.get("inputs")?)?,
+                outputs: tensor_list(a.get("outputs")?)?,
+                sha256: a.get("sha256")?.as_str()?.to_string(),
+            });
+        }
+        Ok(Self { dir, artifacts })
+    }
+
+    /// All buckets available for `(arch, function)`, ascending.
+    pub fn buckets(&self, arch: &str, function: &str) -> Vec<usize> {
+        let mut b: Vec<usize> = self
+            .artifacts
+            .iter()
+            .filter(|a| a.arch == arch && a.function == function)
+            .map(|a| a.bucket)
+            .collect();
+        b.sort_unstable();
+        b
+    }
+
+    /// Find the artifact for an exact `(arch, function, bucket)`.
+    pub fn find(&self, arch: &str, function: &str, bucket: usize) -> Option<&ArtifactMeta> {
+        self.artifacts
+            .iter()
+            .find(|a| a.arch == arch && a.function == function && a.bucket == bucket)
+    }
+
+    /// Pick the smallest bucket ≥ `n`, falling back to the largest
+    /// available (the runtime then chunks `n` across multiple calls).
+    pub fn pick_bucket(&self, arch: &str, function: &str, n: usize) -> Option<usize> {
+        let buckets = self.buckets(arch, function);
+        buckets.iter().copied().find(|&b| b >= n).or(buckets.last().copied())
+    }
+
+    pub fn archs(&self) -> Vec<String> {
+        let mut a: Vec<String> = self.artifacts.iter().map(|x| x.arch.clone()).collect();
+        a.sort();
+        a.dedup();
+        a
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fake_manifest_json() -> String {
+        r#"{
+          "format": 1,
+          "artifacts": [
+            {"name":"toy_grad_step_b8","file":"toy_grad_step_b8.hlo.txt",
+             "arch":"toy","function":"grad_step","bucket":8,
+             "layers":[4,3,2],"param_tensors":4,
+             "inputs":[{"shape":[4,3],"dtype":"float32"}],
+             "outputs":[{"shape":[4,3],"dtype":"float32"}],
+             "sha256":"x"},
+            {"name":"toy_grad_step_b32","file":"toy_grad_step_b32.hlo.txt",
+             "arch":"toy","function":"grad_step","bucket":32,
+             "layers":[4,3,2],"param_tensors":4,
+             "inputs":[],"outputs":[],"sha256":"y"}
+          ]
+        }"#
+        .to_string()
+    }
+
+    fn write_fake() -> tempdir::TempDir {
+        let d = tempdir::TempDir::new();
+        std::fs::write(d.path().join("manifest.json"), fake_manifest_json()).unwrap();
+        d
+    }
+
+    // minimal temp-dir helper (no tempfile crate offline)
+    mod tempdir {
+        use std::path::{Path, PathBuf};
+        use std::sync::atomic::{AtomicU64, Ordering};
+        static N: AtomicU64 = AtomicU64::new(0);
+
+        pub struct TempDir(PathBuf);
+        impl TempDir {
+            pub fn new() -> Self {
+                let p = std::env::temp_dir().join(format!(
+                    "mel-test-{}-{}",
+                    std::process::id(),
+                    N.fetch_add(1, Ordering::SeqCst)
+                ));
+                std::fs::create_dir_all(&p).unwrap();
+                Self(p)
+            }
+            pub fn path(&self) -> &Path {
+                &self.0
+            }
+        }
+        impl Drop for TempDir {
+            fn drop(&mut self) {
+                let _ = std::fs::remove_dir_all(&self.0);
+            }
+        }
+    }
+
+    #[test]
+    fn load_and_query() {
+        let d = write_fake();
+        let m = Manifest::load(d.path()).unwrap();
+        assert_eq!(m.artifacts.len(), 2);
+        assert_eq!(m.buckets("toy", "grad_step"), vec![8, 32]);
+        assert_eq!(m.archs(), vec!["toy"]);
+        let a = m.find("toy", "grad_step", 8).unwrap();
+        assert_eq!(a.layers, vec![4, 3, 2]);
+        assert_eq!(a.inputs[0].shape, vec![4, 3]);
+        assert!(m.find("toy", "eval_batch", 8).is_none());
+    }
+
+    #[test]
+    fn bucket_picking() {
+        let d = write_fake();
+        let m = Manifest::load(d.path()).unwrap();
+        assert_eq!(m.pick_bucket("toy", "grad_step", 5), Some(8));
+        assert_eq!(m.pick_bucket("toy", "grad_step", 8), Some(8));
+        assert_eq!(m.pick_bucket("toy", "grad_step", 9), Some(32));
+        // above the largest → largest (runtime chunks)
+        assert_eq!(m.pick_bucket("toy", "grad_step", 1000), Some(32));
+        assert_eq!(m.pick_bucket("toy", "nope", 1), None);
+    }
+
+    #[test]
+    fn missing_dir_errors_with_hint() {
+        let err = Manifest::load("/nonexistent-mel-path").unwrap_err();
+        assert!(err.to_string().contains("make artifacts"));
+    }
+
+    #[test]
+    fn real_manifest_loads_if_built() {
+        // integration-lite: if `make artifacts` has run, validate it.
+        if let Ok(m) = Manifest::load("artifacts") {
+            assert!(m.find("pedestrian", "grad_step", 64).is_some());
+            assert!(m.find("mnist", "eval_batch", 256).is_some());
+            let gs = m.find("pedestrian", "grad_step", 64).unwrap();
+            assert_eq!(gs.param_tensors, 4);
+            assert_eq!(gs.inputs.len(), 7);
+            assert_eq!(gs.outputs.len(), 6);
+        }
+    }
+}

@@ -1,0 +1,161 @@
+//! Plain-data tensor type crossing the coordinator ↔ PJRT boundary.
+//!
+//! `xla::Literal` is `!Send` (Rc-backed client internals), so the
+//! coordinator speaks in [`Tensor`]s — owned, `Send`, dtype-tagged
+//! buffers — and the runtime engine thread converts at the boundary.
+
+/// Tensor payload.
+#[derive(Debug, Clone, PartialEq)]
+pub enum TensorData {
+    F32(Vec<f32>),
+    I32(Vec<i32>),
+}
+
+/// An owned host tensor.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Tensor {
+    pub dims: Vec<usize>,
+    pub data: TensorData,
+}
+
+impl Tensor {
+    pub fn f32(dims: Vec<usize>, data: Vec<f32>) -> Self {
+        let t = Self { dims, data: TensorData::F32(data) };
+        t.check();
+        t
+    }
+
+    pub fn i32(dims: Vec<usize>, data: Vec<i32>) -> Self {
+        let t = Self { dims, data: TensorData::I32(data) };
+        t.check();
+        t
+    }
+
+    pub fn zeros_f32(dims: Vec<usize>) -> Self {
+        let n = dims.iter().product();
+        Self { dims, data: TensorData::F32(vec![0.0; n]) }
+    }
+
+    pub fn scalar_f32(v: f32) -> Self {
+        Self { dims: vec![], data: TensorData::F32(vec![v]) }
+    }
+
+    fn check(&self) {
+        let n: usize = self.dims.iter().product();
+        assert_eq!(n.max(1), self.len().max(1), "dims {:?} vs len {}", self.dims, self.len());
+    }
+
+    pub fn len(&self) -> usize {
+        match &self.data {
+            TensorData::F32(v) => v.len(),
+            TensorData::I32(v) => v.len(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn dtype(&self) -> &'static str {
+        match &self.data {
+            TensorData::F32(_) => "float32",
+            TensorData::I32(_) => "int32",
+        }
+    }
+
+    pub fn as_f32(&self) -> &[f32] {
+        match &self.data {
+            TensorData::F32(v) => v,
+            _ => panic!("tensor is {} not float32", self.dtype()),
+        }
+    }
+
+    pub fn as_f32_mut(&mut self) -> &mut [f32] {
+        match &mut self.data {
+            TensorData::F32(v) => v,
+            TensorData::I32(_) => panic!("tensor is int32 not float32"),
+        }
+    }
+
+    pub fn as_i32(&self) -> &[i32] {
+        match &self.data {
+            TensorData::I32(v) => v,
+            _ => panic!("tensor is {} not int32", self.dtype()),
+        }
+    }
+
+    /// Scalar read (accepts f32 scalars only).
+    pub fn scalar(&self) -> f32 {
+        assert!(self.len() == 1, "scalar() on {:?}", self.dims);
+        self.as_f32()[0]
+    }
+
+    /// In-place `self += alpha * other` (SGD accumulate/apply).
+    pub fn axpy(&mut self, alpha: f32, other: &Tensor) {
+        assert_eq!(self.dims, other.dims, "axpy shape mismatch");
+        let dst = self.as_f32_mut();
+        let src = other.as_f32();
+        for (d, &s) in dst.iter_mut().zip(src) {
+            *d += alpha * s;
+        }
+    }
+
+    /// In-place scale.
+    pub fn scale(&mut self, s: f32) {
+        for v in self.as_f32_mut() {
+            *v *= s;
+        }
+    }
+
+    /// Squared L2 norm (gradient diagnostics).
+    pub fn norm2(&self) -> f64 {
+        self.as_f32().iter().map(|&v| (v as f64) * (v as f64)).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn construction_and_accessors() {
+        let t = Tensor::f32(vec![2, 3], vec![1., 2., 3., 4., 5., 6.]);
+        assert_eq!(t.len(), 6);
+        assert_eq!(t.dtype(), "float32");
+        assert_eq!(t.as_f32()[4], 5.0);
+        let i = Tensor::i32(vec![3], vec![7, 8, 9]);
+        assert_eq!(i.as_i32(), &[7, 8, 9]);
+        assert_eq!(Tensor::scalar_f32(2.5).scalar(), 2.5);
+        assert_eq!(Tensor::zeros_f32(vec![4]).as_f32(), &[0.0; 4]);
+    }
+
+    #[test]
+    #[should_panic(expected = "dims")]
+    fn shape_mismatch_panics() {
+        Tensor::f32(vec![2, 2], vec![1.0]);
+    }
+
+    #[test]
+    #[should_panic(expected = "not int32")]
+    fn dtype_mismatch_panics() {
+        Tensor::f32(vec![1], vec![1.0]).as_i32();
+    }
+
+    #[test]
+    fn axpy_and_scale() {
+        let mut a = Tensor::f32(vec![3], vec![1., 2., 3.]);
+        let g = Tensor::f32(vec![3], vec![10., 10., 10.]);
+        a.axpy(-0.1, &g);
+        assert_eq!(a.as_f32(), &[0.0, 1.0, 2.0]);
+        a.scale(2.0);
+        assert_eq!(a.as_f32(), &[0.0, 2.0, 4.0]);
+        assert!((a.norm2() - 20.0).abs() < 1e-9);
+    }
+
+    #[test]
+    #[should_panic(expected = "axpy shape mismatch")]
+    fn axpy_shape_checked() {
+        let mut a = Tensor::zeros_f32(vec![2]);
+        a.axpy(1.0, &Tensor::zeros_f32(vec![3]));
+    }
+}

@@ -1,0 +1,268 @@
+//! Scenario substrate: a **cloudlet** of K heterogeneous learners plus
+//! the learning task, JSON-loadable and randomly generatable (seeded).
+//!
+//! Section V-A: nodes uniform in a 50 m-radius area; half laptop-class,
+//! half micro-controller-class; Table I channel; pedestrian or MNIST
+//! task. [`Scenario::problem`] packages the per-learner coefficients
+//! into the [`crate::alloc::Problem`] every solver consumes.
+
+use crate::alloc::Problem;
+use crate::channel::ChannelSpec;
+use crate::compute::ComputeProfile;
+use crate::dataset::DatasetSpec;
+use crate::learner::Learner;
+use crate::models::ModelSpec;
+use crate::util::json::{Json, JsonError};
+use crate::util::rng::{Pcg64, Rng};
+
+/// Generator configuration for a random cloudlet.
+#[derive(Debug, Clone)]
+pub struct CloudletConfig {
+    /// Number of learners K.
+    pub num_learners: usize,
+    /// Deployment radius, meters (Table I: 50).
+    pub radius_m: f64,
+    /// Fraction of laptop-class nodes (Section V-A: one half).
+    pub laptop_fraction: f64,
+    pub channel: ChannelSpec,
+    pub model: ModelSpec,
+    pub dataset: DatasetSpec,
+}
+
+impl CloudletConfig {
+    /// Paper §V-B setup: pedestrian task, 50 m, half/half classes.
+    pub fn pedestrian(num_learners: usize) -> Self {
+        Self {
+            num_learners,
+            radius_m: 50.0,
+            laptop_fraction: 0.5,
+            channel: ChannelSpec::default(),
+            model: ModelSpec::pedestrian(),
+            dataset: DatasetSpec::pedestrian(),
+        }
+    }
+
+    /// Paper §V-C setup: MNIST task.
+    pub fn mnist(num_learners: usize) -> Self {
+        Self {
+            num_learners,
+            radius_m: 50.0,
+            laptop_fraction: 0.5,
+            channel: ChannelSpec::default(),
+            model: ModelSpec::mnist(),
+            dataset: DatasetSpec::mnist(),
+        }
+    }
+
+    pub fn by_task(task: &str, num_learners: usize) -> Option<Self> {
+        match task {
+            "pedestrian" => Some(Self::pedestrian(num_learners)),
+            "mnist" => Some(Self::mnist(num_learners)),
+            _ => None,
+        }
+    }
+}
+
+/// A concrete MEL scenario: learners + task.
+#[derive(Debug, Clone)]
+pub struct Scenario {
+    pub learners: Vec<Learner>,
+    pub model: ModelSpec,
+    pub dataset: DatasetSpec,
+    /// Seed it was generated from (0 for hand-built).
+    pub seed: u64,
+}
+
+impl Scenario {
+    /// Draw a random cloudlet per §V-A: uniform positions in the disc
+    /// (uniform area ⇒ r = R·√u), alternating device classes up to the
+    /// configured fraction.
+    pub fn random_cloudlet(cfg: &CloudletConfig, seed: u64) -> Self {
+        let mut rng = Pcg64::new(seed, 0xC10D);
+        let k = cfg.num_learners;
+        let n_laptop = (k as f64 * cfg.laptop_fraction).round() as usize;
+        let mut learners = Vec::with_capacity(k);
+        for id in 0..k {
+            let r = cfg.radius_m * rng.next_f64().sqrt();
+            let mut link = cfg.channel.link(r);
+            if cfg.channel.shadow_sigma_db > 0.0 || cfg.channel.rayleigh {
+                link.redraw_fading(&mut rng, cfg.channel.shadow_sigma_db, cfg.channel.rayleigh);
+            }
+            let (class, compute) = if id < n_laptop {
+                ("laptop", ComputeProfile::laptop())
+            } else {
+                ("rpi", ComputeProfile::rpi())
+            };
+            learners.push(Learner::new(id, class, compute, link));
+        }
+        Self { learners, model: cfg.model.clone(), dataset: cfg.dataset.clone(), seed }
+    }
+
+    pub fn k(&self) -> usize {
+        self.learners.len()
+    }
+
+    /// Package into the allocation problem for global-cycle clock `T`.
+    pub fn problem(&self, t_total: f64) -> Problem {
+        Problem {
+            coeffs: self.learners.iter().map(|l| l.coeffs(&self.model)).collect(),
+            total_samples: self.dataset.total_samples,
+            t_total,
+        }
+    }
+
+    /// Redraw per-cycle fading on all links (dynamic channels).
+    pub fn redraw_fading(&mut self, spec: &ChannelSpec, rng: &mut Pcg64) {
+        for l in &mut self.learners {
+            l.link.redraw_fading(rng, spec.shadow_sigma_db, spec.rayleigh);
+        }
+    }
+
+    // ------------------------------------------------------------------
+    // JSON persistence
+    // ------------------------------------------------------------------
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("seed", Json::Num(self.seed as f64)),
+            ("model", self.model.to_json()),
+            (
+                "dataset",
+                Json::obj(vec![
+                    ("name", Json::Str(self.dataset.name.clone())),
+                    ("total_samples", Json::Num(self.dataset.total_samples as f64)),
+                    ("features", Json::Num(self.dataset.features as f64)),
+                    ("classes", Json::Num(self.dataset.classes as f64)),
+                    ("precision_bits", Json::Num(self.dataset.precision_bits as f64)),
+                ]),
+            ),
+            (
+                "learners",
+                Json::Arr(
+                    self.learners
+                        .iter()
+                        .map(|l| {
+                            Json::obj(vec![
+                                ("id", Json::Num(l.id as f64)),
+                                ("class", Json::Str(l.class.clone())),
+                                ("compute", l.compute.to_json()),
+                                ("distance_m", Json::Num(l.link.distance_m)),
+                                ("bandwidth_hz", Json::Num(l.link.bandwidth_hz)),
+                                ("tx_power_dbm", Json::Num(l.link.tx_power_dbm)),
+                                ("noise_psd_dbm_hz", Json::Num(l.link.noise_psd_dbm_hz)),
+                                ("fading_gain", Json::Num(l.link.fading_gain)),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+
+    pub fn from_json(v: &Json) -> Result<Self, JsonError> {
+        let model = ModelSpec::from_json(v.get("model")?)?;
+        let dj = v.get("dataset")?;
+        let dataset = DatasetSpec {
+            name: dj.get("name")?.as_str()?.to_string(),
+            total_samples: dj.get("total_samples")?.as_usize()?,
+            features: dj.get("features")?.as_usize()?,
+            classes: dj.get("classes")?.as_usize()?,
+            precision_bits: dj.get("precision_bits")?.as_u64()? as u32,
+        };
+        let mut learners = Vec::new();
+        for lj in v.get("learners")?.as_arr()? {
+            let mut link = crate::channel::Link::at_distance(lj.get("distance_m")?.as_f64()?);
+            link.bandwidth_hz = lj.get("bandwidth_hz")?.as_f64()?;
+            link.tx_power_dbm = lj.get("tx_power_dbm")?.as_f64()?;
+            link.noise_psd_dbm_hz = lj.get("noise_psd_dbm_hz")?.as_f64()?;
+            link.fading_gain =
+                lj.opt("fading_gain").map(|x| x.as_f64()).transpose()?.unwrap_or(1.0);
+            learners.push(Learner::new(
+                lj.get("id")?.as_usize()?,
+                lj.get("class")?.as_str()?,
+                ComputeProfile::from_json(lj.get("compute")?)?,
+                link,
+            ));
+        }
+        Ok(Self {
+            learners,
+            model,
+            dataset,
+            seed: v.opt("seed").map(|x| x.as_u64()).transpose()?.unwrap_or(0),
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn random_cloudlet_respects_config() {
+        let cfg = CloudletConfig::pedestrian(20);
+        let s = Scenario::random_cloudlet(&cfg, 1);
+        assert_eq!(s.k(), 20);
+        let laptops = s.learners.iter().filter(|l| l.class == "laptop").count();
+        assert_eq!(laptops, 10);
+        assert!(s.learners.iter().all(|l| l.link.distance_m <= 50.0));
+        // determinism
+        let s2 = Scenario::random_cloudlet(&cfg, 1);
+        assert_eq!(s.learners[7].link.distance_m, s2.learners[7].link.distance_m);
+        let s3 = Scenario::random_cloudlet(&cfg, 2);
+        assert_ne!(s.learners[7].link.distance_m, s3.learners[7].link.distance_m);
+    }
+
+    #[test]
+    fn positions_are_area_uniform() {
+        // With r = R√u the expected distance is 2R/3.
+        let cfg = CloudletConfig::pedestrian(4000);
+        let s = Scenario::random_cloudlet(&cfg, 9);
+        let mean: f64 =
+            s.learners.iter().map(|l| l.link.distance_m).sum::<f64>() / s.k() as f64;
+        assert!((mean - 2.0 * 50.0 / 3.0).abs() < 1.5, "mean {mean}");
+    }
+
+    #[test]
+    fn problem_packages_coeffs() {
+        let s = Scenario::random_cloudlet(&CloudletConfig::mnist(6), 3);
+        let p = s.problem(60.0);
+        assert_eq!(p.coeffs.len(), 6);
+        assert_eq!(p.total_samples, 60_000);
+        assert_eq!(p.t_total, 60.0);
+        assert!(p.coeffs.iter().all(|c| c.c2 > 0.0 && c.c1 > 0.0 && c.c0 > 0.0));
+    }
+
+    #[test]
+    fn json_round_trip_preserves_problem() {
+        let s = Scenario::random_cloudlet(&CloudletConfig::pedestrian(8), 4);
+        let text = s.to_json().to_pretty();
+        let back = Scenario::from_json(&Json::parse(&text).unwrap()).unwrap();
+        assert_eq!(back.k(), 8);
+        let p1 = s.problem(30.0);
+        let p2 = back.problem(30.0);
+        for (a, b) in p1.coeffs.iter().zip(&p2.coeffs) {
+            assert!((a.c2 - b.c2).abs() < 1e-15);
+            assert!((a.c1 - b.c1).abs() < 1e-18);
+            assert!((a.c0 - b.c0).abs() < 1e-15);
+        }
+    }
+
+    #[test]
+    fn by_task_builders() {
+        assert!(CloudletConfig::by_task("pedestrian", 5).is_some());
+        assert!(CloudletConfig::by_task("mnist", 5).is_some());
+        assert!(CloudletConfig::by_task("x", 5).is_none());
+    }
+
+    #[test]
+    fn fading_redraw_changes_rates_when_enabled() {
+        let mut cfg = CloudletConfig::pedestrian(5);
+        cfg.channel.rayleigh = true;
+        let mut s = Scenario::random_cloudlet(&cfg, 5);
+        let before: Vec<f64> = s.learners.iter().map(|l| l.link.rate_bps()).collect();
+        let mut rng = Pcg64::seeded(99);
+        s.redraw_fading(&cfg.channel.clone(), &mut rng);
+        let after: Vec<f64> = s.learners.iter().map(|l| l.link.rate_bps()).collect();
+        assert_ne!(before, after);
+    }
+}

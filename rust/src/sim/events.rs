@@ -1,0 +1,168 @@
+//! Generic discrete-event queue: a time-ordered priority queue with
+//! stable FIFO ordering for simultaneous events (deterministic replay).
+
+use std::cmp::Ordering;
+use std::collections::BinaryHeap;
+
+struct Entry<E> {
+    time: f64,
+    seq: u64,
+    event: E,
+}
+
+impl<E> PartialEq for Entry<E> {
+    fn eq(&self, other: &Self) -> bool {
+        self.time == other.time && self.seq == other.seq
+    }
+}
+
+impl<E> Eq for Entry<E> {}
+
+impl<E> PartialOrd for Entry<E> {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+impl<E> Ord for Entry<E> {
+    fn cmp(&self, other: &Self) -> Ordering {
+        // BinaryHeap is a max-heap; invert for earliest-first, then FIFO.
+        other
+            .time
+            .partial_cmp(&self.time)
+            .unwrap_or(Ordering::Equal)
+            .then(other.seq.cmp(&self.seq))
+    }
+}
+
+/// Time-ordered event queue.
+pub struct EventQueue<E> {
+    heap: BinaryHeap<Entry<E>>,
+    seq: u64,
+    now: f64,
+}
+
+impl<E> Default for EventQueue<E> {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl<E> EventQueue<E> {
+    pub fn new() -> Self {
+        Self { heap: BinaryHeap::new(), seq: 0, now: 0.0 }
+    }
+
+    /// Schedule `event` at absolute `time` (must not be in the past).
+    pub fn schedule(&mut self, time: f64, event: E) {
+        debug_assert!(time >= self.now, "scheduling into the past: {time} < {}", self.now);
+        debug_assert!(time.is_finite());
+        self.heap.push(Entry { time, seq: self.seq, event });
+        self.seq += 1;
+    }
+
+    /// Schedule relative to the current simulation time.
+    pub fn schedule_in(&mut self, delay: f64, event: E) {
+        self.schedule(self.now + delay, event);
+    }
+
+    /// Pop the earliest event, advancing the simulation clock.
+    pub fn pop(&mut self) -> Option<(f64, E)> {
+        self.heap.pop().map(|e| {
+            self.now = e.time;
+            (e.time, e.event)
+        })
+    }
+
+    /// Current simulation time (time of the last popped event).
+    pub fn now(&self) -> f64 {
+        self.now
+    }
+
+    pub fn len(&self) -> usize {
+        self.heap.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.heap.is_empty()
+    }
+
+    /// Drain all events through `handler`, which may schedule more.
+    pub fn run(&mut self, mut handler: impl FnMut(&mut Self, f64, E)) {
+        while let Some((t, e)) = self.pop() {
+            handler(self, t, e);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn earliest_first() {
+        let mut q = EventQueue::new();
+        q.schedule(3.0, "c");
+        q.schedule(1.0, "a");
+        q.schedule(2.0, "b");
+        assert_eq!(q.pop().unwrap(), (1.0, "a"));
+        assert_eq!(q.pop().unwrap(), (2.0, "b"));
+        assert_eq!(q.pop().unwrap(), (3.0, "c"));
+        assert!(q.pop().is_none());
+    }
+
+    #[test]
+    fn fifo_for_ties() {
+        let mut q = EventQueue::new();
+        for i in 0..10 {
+            q.schedule(5.0, i);
+        }
+        for i in 0..10 {
+            assert_eq!(q.pop().unwrap().1, i);
+        }
+    }
+
+    #[test]
+    fn clock_advances_and_relative_schedule() {
+        let mut q = EventQueue::new();
+        q.schedule(1.0, "x");
+        q.pop();
+        assert_eq!(q.now(), 1.0);
+        q.schedule_in(0.5, "y");
+        assert_eq!(q.pop().unwrap(), (1.5, "y"));
+    }
+
+    #[test]
+    fn run_with_cascading_events() {
+        // a chain: each event schedules the next until 5
+        let mut q = EventQueue::new();
+        q.schedule(0.0, 0u32);
+        let mut seen = Vec::new();
+        q.run(|q, t, n| {
+            seen.push((t, n));
+            if n < 5 {
+                q.schedule_in(1.0, n + 1);
+            }
+        });
+        assert_eq!(seen.len(), 6);
+        assert_eq!(seen[5], (5.0, 5));
+    }
+
+    #[test]
+    #[should_panic(expected = "past")]
+    #[cfg(debug_assertions)]
+    fn scheduling_past_panics_in_debug() {
+        let mut q = EventQueue::new();
+        q.schedule(2.0, ());
+        q.pop();
+        q.schedule(1.0, ());
+    }
+
+    #[test]
+    fn len_and_empty() {
+        let mut q: EventQueue<()> = EventQueue::new();
+        assert!(q.is_empty());
+        q.schedule(1.0, ());
+        assert_eq!(q.len(), 1);
+    }
+}

@@ -1,0 +1,197 @@
+//! Discrete-event simulation of MEL global cycles.
+//!
+//! [`events`] is a generic time-ordered event queue; this module builds
+//! the MEL-specific timeline on top: per-learner **send → τ×compute →
+//! receive** phases (eq. 12), orchestrator-side serialization effects,
+//! deadline validation against the global-cycle clock `T`, and
+//! multi-cycle runs with optional per-cycle fading redraws.
+//!
+//! The simulator is what the figure benches execute (the paper's own
+//! evaluation is timing-model-driven, §V); the [`crate::coordinator`]
+//! reuses the same timeline for *real* training where compute events are
+//! backed by actual PJRT executions.
+
+pub mod events;
+pub mod training;
+
+use crate::alloc::{Allocation, Problem};
+use crate::learner::Coeffs;
+
+/// Phases of one learner's round trip within a global cycle.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Phase {
+    SendStart,
+    SendEnd,
+    IterationDone(u32),
+    ReceiveEnd,
+}
+
+/// One timeline entry: (sim time, learner id, phase).
+pub type TimelineEvent = (f64, usize, Phase);
+
+/// Result of simulating one global cycle.
+#[derive(Debug, Clone)]
+pub struct CycleReport {
+    /// Per-learner completion times t_k.
+    pub completion: Vec<f64>,
+    /// max_k t_k — must be ≤ T for a feasible cycle.
+    pub makespan: f64,
+    /// Learners that missed the deadline (empty when feasible).
+    pub deadline_misses: Vec<usize>,
+    /// Full ordered event log (only when `trace` was requested).
+    pub timeline: Vec<TimelineEvent>,
+}
+
+/// Global-cycle simulator over the eq. (13) timing model.
+#[derive(Debug, Clone)]
+pub struct CycleSim {
+    pub coeffs: Vec<Coeffs>,
+    pub t_total: f64,
+}
+
+impl CycleSim {
+    pub fn from_problem(p: &Problem) -> Self {
+        Self { coeffs: p.coeffs.clone(), t_total: p.t_total }
+    }
+
+    /// Simulate one cycle for `alloc`. With `trace`, the report carries
+    /// the complete event log (O(K·τ) entries — use for small cases).
+    pub fn run_cycle(&self, alloc: &Allocation, trace: bool) -> CycleReport {
+        let mut q = events::EventQueue::new();
+        let tau = alloc.tau as u32;
+
+        // All sends start at t=0: learners are on orthogonal 5 MHz
+        // sub-channels of the 100 MHz system band (Table I), so the
+        // orchestrator transmits to all K in parallel.
+        for (k, (&dk, c)) in alloc.batches.iter().zip(&self.coeffs).enumerate() {
+            if dk == 0 {
+                continue;
+            }
+            q.schedule(0.0, (k, Phase::SendStart));
+            let send_end = c.c1 * dk as f64 + c.c0 / 2.0; // downlink half of C0
+            q.schedule(send_end, (k, Phase::SendEnd));
+            let iter_t = c.c2 * dk as f64;
+            for i in 1..=tau {
+                q.schedule(send_end + iter_t * i as f64, (k, Phase::IterationDone(i)));
+            }
+            let total = c.time(alloc.tau as f64, dk as f64);
+            q.schedule(total, (k, Phase::ReceiveEnd));
+        }
+
+        let mut completion = vec![0.0f64; self.coeffs.len()];
+        let mut timeline = Vec::new();
+        while let Some((t, (k, phase))) = q.pop() {
+            if phase == Phase::ReceiveEnd {
+                completion[k] = t;
+            }
+            if trace {
+                timeline.push((t, k, phase));
+            }
+        }
+        let makespan = completion.iter().copied().fold(0.0, f64::max);
+        let deadline_misses = completion
+            .iter()
+            .enumerate()
+            .filter(|(_, &t)| t > self.t_total + crate::alloc::TIME_EPS)
+            .map(|(k, _)| k)
+            .collect();
+        CycleReport { completion, makespan, deadline_misses, timeline }
+    }
+
+    /// Utilization: fraction of the cycle each learner spends computing
+    /// (vs waiting for the deadline) — the efficiency the adaptive
+    /// allocation maximizes.
+    pub fn compute_utilization(&self, alloc: &Allocation) -> Vec<f64> {
+        alloc
+            .batches
+            .iter()
+            .zip(&self.coeffs)
+            .map(|(&dk, c)| {
+                if dk == 0 {
+                    0.0
+                } else {
+                    (alloc.tau as f64 * c.c2 * dk as f64) / self.t_total
+                }
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::alloc::testutil::two_class_problem;
+    use crate::alloc::Policy;
+
+    fn setup() -> (Problem, Allocation) {
+        let p = two_class_problem(6, 3000, 30.0);
+        let a = Policy::Analytical.allocator().allocate(&p).unwrap();
+        (p, a)
+    }
+
+    #[test]
+    fn cycle_completion_matches_eq13() {
+        let (p, a) = setup();
+        let sim = CycleSim::from_problem(&p);
+        let rep = sim.run_cycle(&a, false);
+        for (k, (&dk, c)) in a.batches.iter().zip(&p.coeffs).enumerate() {
+            if dk > 0 {
+                let expect = c.time(a.tau as f64, dk as f64);
+                assert!((rep.completion[k] - expect).abs() < 1e-9, "learner {k}");
+            }
+        }
+        assert!(rep.deadline_misses.is_empty());
+        assert!(rep.makespan <= 30.0 + 1e-6);
+    }
+
+    #[test]
+    fn timeline_is_time_ordered_and_complete() {
+        let (p, a) = setup();
+        let sim = CycleSim::from_problem(&p);
+        let rep = sim.run_cycle(&a, true);
+        assert!(rep.timeline.windows(2).all(|w| w[0].0 <= w[1].0));
+        // per learner: 1 SendStart, 1 SendEnd, τ iterations, 1 ReceiveEnd
+        let k0: Vec<&TimelineEvent> = rep.timeline.iter().filter(|e| e.1 == 0).collect();
+        assert_eq!(k0.len() as u64, 3 + a.tau);
+    }
+
+    #[test]
+    fn deadline_misses_flagged_for_infeasible_alloc() {
+        let (p, mut a) = setup();
+        a.tau *= 3; // force violation
+        let sim = CycleSim::from_problem(&p);
+        let rep = sim.run_cycle(&a, false);
+        assert!(!rep.deadline_misses.is_empty());
+        assert!(rep.makespan > 30.0);
+    }
+
+    #[test]
+    fn adaptive_utilization_beats_eta() {
+        let p = two_class_problem(10, 9000, 30.0);
+        let adaptive = Policy::Analytical.allocator().allocate(&p).unwrap();
+        let eta = Policy::Eta.allocator().allocate(&p).unwrap();
+        let sim = CycleSim::from_problem(&p);
+        let mean = |v: Vec<f64>| v.iter().sum::<f64>() / v.len() as f64;
+        let u_adaptive = mean(sim.compute_utilization(&adaptive));
+        let u_eta = mean(sim.compute_utilization(&eta));
+        assert!(
+            u_adaptive > 1.5 * u_eta,
+            "adaptive {u_adaptive:.3} vs eta {u_eta:.3}"
+        );
+        // adaptive keeps everyone busy ≥ 90% of the cycle
+        assert!(sim.compute_utilization(&adaptive).iter().all(|&u| u > 0.9));
+    }
+
+    #[test]
+    fn zero_batch_learners_skip_cycle() {
+        let p = two_class_problem(3, 10, 30.0);
+        let mut a = Policy::Analytical.allocator().allocate(&p).unwrap();
+        // force learner 2 to zero samples, give them to learner 0
+        a.batches[0] += a.batches[2];
+        a.batches[2] = 0;
+        let sim = CycleSim::from_problem(&p);
+        let rep = sim.run_cycle(&a, true);
+        assert_eq!(rep.completion[2], 0.0);
+        assert!(rep.timeline.iter().all(|e| e.1 != 2));
+    }
+}

@@ -1,0 +1,167 @@
+//! Analytic multi-cycle training simulator.
+//!
+//! The real coordinator trains through PJRT; that's exact but CPU-bound,
+//! so paper-scale sweeps (K = 50, hundreds of cycles) use this analytic
+//! convergence model instead: distributed SGD loss after `j` global
+//! cycles of `τ` local iterations follows the classic O(1/(τ·j))
+//! envelope (Dean et al. [15], Wang et al. [12])
+//!
+//! ```text
+//! L(j) = L∞ + (L0 − L∞) / (1 + γ·τ_eff·j)
+//! τ_eff = τ · (1 − β·max(0, τ − τ_coh)/τ)   — divergence discount:
+//! ```
+//!
+//! iterations beyond a coherence horizon `τ_coh` contribute less because
+//! local models drift apart before averaging (the "deviating gradients"
+//! effect of [13], which our e2e runs reproduce empirically). Defaults
+//! are fit to the pedestrian e2e runs in EXPERIMENTS.md.
+
+use crate::alloc::{Allocation, Problem};
+
+/// Convergence-model parameters.
+#[derive(Debug, Clone, Copy)]
+pub struct ConvergenceModel {
+    /// Initial loss L0 (ln C for a C-class softmax at init).
+    pub l0: f64,
+    /// Asymptotic loss floor L∞.
+    pub l_inf: f64,
+    /// Convergence rate γ per effective iteration.
+    pub gamma: f64,
+    /// Coherence horizon: local iterations per cycle beyond which
+    /// averaging efficiency decays.
+    pub tau_coherence: f64,
+    /// Decay strength β ∈ [0, 1] past the horizon.
+    pub beta: f64,
+}
+
+impl ConvergenceModel {
+    /// Defaults fit to the pedestrian e2e measurement (see
+    /// EXPERIMENTS.md §E2E): 2-class task, floor near 0.05.
+    pub fn pedestrian() -> Self {
+        Self { l0: (2f64).ln(), l_inf: 0.05, gamma: 0.02, tau_coherence: 64.0, beta: 0.5 }
+    }
+
+    /// MNIST-shaped model: 10-class init loss, slower per-iteration gain.
+    pub fn mnist() -> Self {
+        Self { l0: (10f64).ln(), l_inf: 0.15, gamma: 0.008, tau_coherence: 48.0, beta: 0.5 }
+    }
+
+    /// Effective iterations per cycle after the divergence discount.
+    pub fn tau_effective(&self, tau: f64) -> f64 {
+        if tau <= self.tau_coherence {
+            tau
+        } else {
+            self.tau_coherence + (1.0 - self.beta) * (tau - self.tau_coherence)
+        }
+    }
+
+    /// Predicted global loss after `cycles` cycles of `tau` iterations.
+    pub fn loss_after(&self, tau: f64, cycles: f64) -> f64 {
+        let te = self.tau_effective(tau);
+        self.l_inf + (self.l0 - self.l_inf) / (1.0 + self.gamma * te * cycles)
+    }
+
+    /// Simulated loss curve over `n` cycles for an allocation: the
+    /// "accuracy within deadline" series of the paper's motivation,
+    /// indexed by simulated seconds (j·T).
+    pub fn loss_curve(&self, alloc: &Allocation, problem: &Problem, n: usize) -> Vec<(f64, f64)> {
+        (1..=n)
+            .map(|j| (j as f64 * problem.t_total, self.loss_after(alloc.tau as f64, j as f64)))
+            .collect()
+    }
+
+    /// Simulated time (seconds) to reach `target` loss, or None.
+    pub fn time_to_loss(
+        &self,
+        alloc: &Allocation,
+        problem: &Problem,
+        target: f64,
+        max_cycles: usize,
+    ) -> Option<f64> {
+        if target <= self.l_inf {
+            return None;
+        }
+        let te = self.tau_effective(alloc.tau as f64);
+        // invert: cycles = ((L0−L∞)/(target−L∞) − 1)/(γ·τe)
+        let j = ((self.l0 - self.l_inf) / (target - self.l_inf) - 1.0) / (self.gamma * te);
+        let j = j.ceil().max(1.0);
+        if j as usize > max_cycles {
+            None
+        } else {
+            Some(j * problem.t_total)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::alloc::Policy;
+    use crate::scenario::{CloudletConfig, Scenario};
+
+    fn allocs() -> (Problem, Allocation, Allocation) {
+        let s = Scenario::random_cloudlet(&CloudletConfig::pedestrian(20), 1);
+        let p = s.problem(30.0);
+        let ada = Policy::Analytical.allocator().allocate(&p).unwrap();
+        let eta = Policy::Eta.allocator().allocate(&p).unwrap();
+        (p, ada, eta)
+    }
+
+    #[test]
+    fn loss_decreases_monotonically_to_floor() {
+        let m = ConvergenceModel::pedestrian();
+        let mut prev = m.l0;
+        for j in 1..200 {
+            let l = m.loss_after(30.0, j as f64);
+            assert!(l < prev);
+            assert!(l > m.l_inf);
+            prev = l;
+        }
+    }
+
+    #[test]
+    fn more_tau_converges_faster_with_diminishing_returns() {
+        let m = ConvergenceModel::pedestrian();
+        let l_small = m.loss_after(10.0, 10.0);
+        let l_med = m.loss_after(60.0, 10.0);
+        let l_big = m.loss_after(200.0, 10.0);
+        assert!(l_med < l_small);
+        assert!(l_big < l_med);
+        // diminishing: the 60→200 gain is smaller than 10→60 gain
+        assert!((l_med - l_big) < (l_small - l_med));
+        // and τ_eff grows sublinearly past the horizon
+        assert!(m.tau_effective(200.0) < 200.0);
+        assert_eq!(m.tau_effective(30.0), 30.0);
+    }
+
+    #[test]
+    fn adaptive_reaches_target_loss_sooner() {
+        let (p, ada, eta) = allocs();
+        let m = ConvergenceModel::pedestrian();
+        let t_ada = m.time_to_loss(&ada, &p, 0.2, 10_000).unwrap();
+        let t_eta = m.time_to_loss(&eta, &p, 0.2, 10_000).unwrap();
+        assert!(
+            t_ada < t_eta,
+            "adaptive {t_ada}s should beat ETA {t_eta}s to loss 0.2"
+        );
+    }
+
+    #[test]
+    fn curve_is_indexed_by_simulated_time() {
+        let (p, ada, _) = allocs();
+        let m = ConvergenceModel::pedestrian();
+        let curve = m.loss_curve(&ada, &p, 5);
+        assert_eq!(curve.len(), 5);
+        assert_eq!(curve[0].0, 30.0);
+        assert_eq!(curve[4].0, 150.0);
+        assert!(curve.windows(2).all(|w| w[1].1 < w[0].1));
+    }
+
+    #[test]
+    fn unreachable_target_is_none() {
+        let (p, ada, _) = allocs();
+        let m = ConvergenceModel::pedestrian();
+        assert!(m.time_to_loss(&ada, &p, 0.01, 10_000).is_none()); // below floor
+        assert!(m.time_to_loss(&ada, &p, 0.0501, 3).is_none()); // too few cycles
+    }
+}

@@ -1,0 +1,225 @@
+//! Declarative command-line parsing substrate (no clap offline).
+//!
+//! Supports subcommands, `--flag`, `--key value` / `--key=value`
+//! options, typed accessors with defaults, positional args, and
+//! auto-generated `--help` text.
+//!
+//! ```no_run
+//! use mel::util::cli::Args;
+//! let args = Args::parse_from(vec!["figure".into(), "fig1".into(), "--seed=7".into()]);
+//! assert_eq!(args.positional(0), Some("figure"));
+//! assert_eq!(args.get_u64("seed", 1), 7);
+//! ```
+
+use std::collections::BTreeMap;
+
+/// Parsed command line: positionals + key/value options + boolean flags.
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    positionals: Vec<String>,
+    options: BTreeMap<String, String>,
+    flags: Vec<String>,
+}
+
+impl Args {
+    /// Parse from `std::env::args()` (skipping argv[0]).
+    pub fn parse() -> Self {
+        Self::parse_from(std::env::args().skip(1).collect())
+    }
+
+    /// Parse from an explicit vector (tests, nested commands).
+    pub fn parse_from(argv: Vec<String>) -> Self {
+        let mut out = Args::default();
+        let mut it = argv.into_iter().peekable();
+        while let Some(arg) = it.next() {
+            if let Some(body) = arg.strip_prefix("--") {
+                if body.is_empty() {
+                    // `--` ends option parsing; rest are positionals
+                    out.positionals.extend(it.by_ref());
+                    break;
+                }
+                if let Some((k, v)) = body.split_once('=') {
+                    out.options.insert(k.to_string(), v.to_string());
+                } else if it
+                    .peek()
+                    .map(|n| !n.starts_with("--"))
+                    .unwrap_or(false)
+                {
+                    let v = it.next().unwrap();
+                    out.options.insert(body.to_string(), v);
+                } else {
+                    out.flags.push(body.to_string());
+                }
+            } else {
+                out.positionals.push(arg);
+            }
+        }
+        out
+    }
+
+    /// n-th positional argument.
+    pub fn positional(&self, n: usize) -> Option<&str> {
+        self.positionals.get(n).map(|s| s.as_str())
+    }
+
+    pub fn positionals(&self) -> &[String] {
+        &self.positionals
+    }
+
+    /// Was `--name` given as a bare flag?
+    pub fn has_flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn get_str<'a>(&'a self, key: &str, default: &'a str) -> &'a str {
+        self.options.get(key).map(|s| s.as_str()).unwrap_or(default)
+    }
+
+    pub fn opt_str(&self, key: &str) -> Option<&str> {
+        self.options.get(key).map(|s| s.as_str())
+    }
+
+    pub fn get_u64(&self, key: &str, default: u64) -> u64 {
+        self.options
+            .get(key)
+            .map(|s| {
+                s.parse()
+                    .unwrap_or_else(|_| panic!("--{key} expects an integer, got {s:?}"))
+            })
+            .unwrap_or(default)
+    }
+
+    pub fn get_usize(&self, key: &str, default: usize) -> usize {
+        self.get_u64(key, default as u64) as usize
+    }
+
+    pub fn get_f64(&self, key: &str, default: f64) -> f64 {
+        self.options
+            .get(key)
+            .map(|s| {
+                s.parse()
+                    .unwrap_or_else(|_| panic!("--{key} expects a number, got {s:?}"))
+            })
+            .unwrap_or(default)
+    }
+
+    /// Comma-separated list of f64 (`--ts 30,60,90`).
+    pub fn get_f64_list(&self, key: &str, default: &[f64]) -> Vec<f64> {
+        match self.options.get(key) {
+            None => default.to_vec(),
+            Some(s) => s
+                .split(',')
+                .map(|x| {
+                    x.trim()
+                        .parse()
+                        .unwrap_or_else(|_| panic!("--{key}: bad number {x:?}"))
+                })
+                .collect(),
+        }
+    }
+
+    /// Comma-separated list of usize (`--ks 5,10,20`).
+    pub fn get_usize_list(&self, key: &str, default: &[usize]) -> Vec<usize> {
+        match self.options.get(key) {
+            None => default.to_vec(),
+            Some(s) => s
+                .split(',')
+                .map(|x| {
+                    x.trim()
+                        .parse()
+                        .unwrap_or_else(|_| panic!("--{key}: bad integer {x:?}"))
+                })
+                .collect(),
+        }
+    }
+}
+
+/// A subcommand spec for help rendering.
+pub struct Command {
+    pub name: &'static str,
+    pub about: &'static str,
+    pub usage: &'static str,
+}
+
+/// Render a help screen for a command set.
+pub fn render_help(bin: &str, about: &str, commands: &[Command]) -> String {
+    let mut s = format!("{bin} — {about}\n\nUSAGE:\n  {bin} <command> [options]\n\nCOMMANDS:\n");
+    let w = commands.iter().map(|c| c.name.len()).max().unwrap_or(0);
+    for c in commands {
+        s.push_str(&format!("  {:w$}  {}\n", c.name, c.about, w = w));
+    }
+    s.push_str("\nRun with a command for details; common options:\n");
+    for c in commands {
+        if !c.usage.is_empty() {
+            s.push_str(&format!("  {} {}\n", c.name, c.usage));
+        }
+    }
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse_from(s.split_whitespace().map(String::from).collect())
+    }
+
+    #[test]
+    fn positionals_options_flags() {
+        let a = parse("figure fig1 --seed 7 --out=results --verbose");
+        assert_eq!(a.positional(0), Some("figure"));
+        assert_eq!(a.positional(1), Some("fig1"));
+        assert_eq!(a.get_u64("seed", 0), 7);
+        assert_eq!(a.get_str("out", ""), "results");
+        assert!(a.has_flag("verbose"));
+        assert!(!a.has_flag("quiet"));
+    }
+
+    #[test]
+    fn defaults_kick_in() {
+        let a = parse("solve");
+        assert_eq!(a.get_u64("k", 10), 10);
+        assert_eq!(a.get_f64("t", 30.0), 30.0);
+        assert_eq!(a.get_str("policy", "analytical"), "analytical");
+        assert!(a.opt_str("x").is_none());
+    }
+
+    #[test]
+    fn lists_parse() {
+        let a = parse("x --ts 30,60 --ks 5,10,20");
+        assert_eq!(a.get_f64_list("ts", &[]), vec![30.0, 60.0]);
+        assert_eq!(a.get_usize_list("ks", &[]), vec![5, 10, 20]);
+        assert_eq!(a.get_f64_list("absent", &[1.0]), vec![1.0]);
+    }
+
+    #[test]
+    fn double_dash_ends_options() {
+        let a = parse("run -- --not-a-flag positional");
+        assert_eq!(a.positional(0), Some("run"));
+        assert_eq!(a.positional(1), Some("--not-a-flag"));
+        assert!(!a.has_flag("not-a-flag"));
+    }
+
+    #[test]
+    fn negative_numbers_as_values() {
+        let a = parse("x --db -107");
+        assert_eq!(a.get_f64("db", 0.0), -107.0);
+    }
+
+    #[test]
+    fn help_renders_all_commands() {
+        let cmds = [
+            Command { name: "solve", about: "solve one scenario", usage: "--k 10" },
+            Command { name: "figure", about: "reproduce a figure", usage: "" },
+        ];
+        let h = render_help("mel", "MEL toolkit", &cmds);
+        assert!(h.contains("solve") && h.contains("figure") && h.contains("USAGE"));
+    }
+
+    #[test]
+    #[should_panic(expected = "expects an integer")]
+    fn bad_integer_panics() {
+        parse("x --k notanint").get_u64("k", 0);
+    }
+}

@@ -1,0 +1,69 @@
+//! Tiny leveled logger behind the `log` facade: timestamps + level tags
+//! to stderr, level from `MEL_LOG` (error|warn|info|debug|trace).
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::time::Instant;
+
+use once_cell::sync::Lazy;
+
+static START: Lazy<Instant> = Lazy::new(Instant::now);
+static INSTALLED: AtomicBool = AtomicBool::new(false);
+
+struct StderrLogger {
+    level: log::LevelFilter,
+}
+
+impl log::Log for StderrLogger {
+    fn enabled(&self, metadata: &log::Metadata) -> bool {
+        metadata.level() <= self.level
+    }
+
+    fn log(&self, record: &log::Record) {
+        if !self.enabled(record.metadata()) {
+            return;
+        }
+        let t = START.elapsed().as_secs_f64();
+        eprintln!(
+            "[{t:10.4}s {:5} {}] {}",
+            record.level(),
+            record.target().split("::").last().unwrap_or(""),
+            record.args()
+        );
+    }
+
+    fn flush(&self) {}
+}
+
+/// Install the logger once; later calls are no-ops. Level resolution:
+/// explicit argument > `MEL_LOG` env > `info`.
+pub fn init(level: Option<&str>) {
+    if INSTALLED.swap(true, Ordering::SeqCst) {
+        return;
+    }
+    let env = std::env::var("MEL_LOG").ok();
+    let name = level.map(str::to_string).or(env).unwrap_or_else(|| "info".into());
+    let filter = match name.to_ascii_lowercase().as_str() {
+        "off" => log::LevelFilter::Off,
+        "error" => log::LevelFilter::Error,
+        "warn" => log::LevelFilter::Warn,
+        "debug" => log::LevelFilter::Debug,
+        "trace" => log::LevelFilter::Trace,
+        _ => log::LevelFilter::Info,
+    };
+    Lazy::force(&START);
+    let _ = log::set_boxed_logger(Box::new(StderrLogger { level: filter }));
+    log::set_max_level(filter);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn init_is_idempotent() {
+        init(Some("debug"));
+        init(Some("trace")); // ignored
+        log::info!("logging smoke");
+        assert!(log::max_level() >= log::LevelFilter::Debug);
+    }
+}

@@ -1,0 +1,10 @@
+//! Self-contained utility substrates (no external crates available
+//! offline, so these are built from scratch and tested here):
+//! RNG, JSON codec, CLI parsing, statistics, ASCII tables, logging.
+
+pub mod cli;
+pub mod json;
+pub mod logging;
+pub mod rng;
+pub mod stats;
+pub mod table;

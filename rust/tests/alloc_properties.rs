@@ -1,0 +1,232 @@
+//! Property tests over the full scenario → problem → allocation chain,
+//! using the in-crate testkit (generators + shrinking). These are the
+//! paper's structural guarantees, checked on random cloudlets rather
+//! than the hand-built fixtures of the unit tests.
+
+use mel::alloc::exact::ExactAllocator;
+use mel::alloc::Policy;
+use mel::scenario::{CloudletConfig, Scenario};
+use mel::testkit::*;
+
+/// Generator: (task index, K, T-seconds, seed).
+fn scenario_gen() -> impl Gen<(usize, usize, f64, u64)> {
+    struct G;
+    impl Gen<(usize, usize, f64, u64)> for G {
+        fn gen(&self, rng: &mut mel::util::rng::Pcg64) -> (usize, usize, f64, u64) {
+            use mel::util::rng::Rng;
+            (
+                rng.below(2) as usize,
+                rng.range_u64(2, 40) as usize,
+                rng.uniform(15.0, 150.0),
+                rng.next_u64(),
+            )
+        }
+        fn shrink(&self, v: &(usize, usize, f64, u64)) -> Vec<(usize, usize, f64, u64)> {
+            let mut out = Vec::new();
+            if v.1 > 2 {
+                out.push((v.0, v.1 / 2, v.2, v.3));
+                out.push((v.0, v.1 - 1, v.2, v.3));
+            }
+            out
+        }
+    }
+    G
+}
+
+fn build(task_i: usize, k: usize, seed: u64) -> Scenario {
+    let task = if task_i == 0 { "pedestrian" } else { "mnist" };
+    Scenario::random_cloudlet(&CloudletConfig::by_task(task, k).unwrap(), seed)
+}
+
+#[test]
+fn every_policy_returns_feasible_allocations() {
+    forall("feasible allocations", &scenario_gen(), |&(ti, k, t, seed)| {
+        let p = build(ti, k, seed).problem(t);
+        Policy::all().iter().all(|policy| match policy.allocator().allocate(&p) {
+            Ok(a) => {
+                a.is_feasible(&p)
+                    && a.batches.iter().sum::<usize>() == p.total_samples
+                    && a.makespan(&p) <= t + 1e-6
+            }
+            Err(_) => true, // infeasible scenarios may error
+        })
+    });
+}
+
+#[test]
+fn adaptive_policies_agree_and_are_optimal() {
+    forall("adaptive == exact optimum", &scenario_gen(), |&(ti, k, t, seed)| {
+        let p = build(ti, k, seed).problem(t);
+        let exact = ExactAllocator::optimal_tau(&p);
+        [Policy::Analytical, Policy::UbSai, Policy::Numerical].iter().all(|policy| {
+            match (policy.allocator().allocate(&p), exact) {
+                (Ok(a), Some(opt)) => a.tau == opt,
+                (Err(_), None) => true,
+                // relaxed-feasible but τ<1, or vice versa — must not happen
+                _ => false,
+            }
+        })
+    });
+}
+
+#[test]
+fn eta_never_exceeds_adaptive() {
+    forall("ETA ≤ adaptive", &scenario_gen(), |&(ti, k, t, seed)| {
+        let p = build(ti, k, seed).problem(t);
+        match (
+            Policy::Eta.allocator().allocate(&p),
+            Policy::Analytical.allocator().allocate(&p),
+        ) {
+            (Ok(e), Ok(a)) => e.tau <= a.tau,
+            (Ok(_), Err(_)) => false, // ETA feasible ⇒ adaptive feasible
+            _ => true,
+        }
+    });
+}
+
+#[test]
+fn tau_monotone_in_t() {
+    forall("τ monotone in T", &scenario_gen(), |&(ti, k, t, seed)| {
+        let s = build(ti, k, seed);
+        let solve = |tt: f64| {
+            Policy::Analytical
+                .allocator()
+                .allocate(&s.problem(tt))
+                .map(|a| a.tau)
+                .unwrap_or(0)
+        };
+        solve(t) <= solve(t * 1.5)
+    });
+}
+
+#[test]
+fn relaxed_tau_upper_bounds_integer_tau() {
+    forall("τ* ≥ τ_int", &scenario_gen(), |&(ti, k, t, seed)| {
+        let p = build(ti, k, seed).problem(t);
+        match Policy::Analytical.allocator().allocate(&p) {
+            Ok(a) => a.tau as f64 <= a.relaxed_tau + 1e-9,
+            Err(_) => true,
+        }
+    });
+}
+
+#[test]
+fn batches_inversely_ordered_by_compute_cost() {
+    // slower learners (larger C2) must never get more samples than a
+    // uniformly faster learner under the adaptive policy
+    forall("slow ⇒ smaller batch", &scenario_gen(), |&(ti, k, t, seed)| {
+        let p = build(ti, k, seed).problem(t);
+        match Policy::Analytical.allocator().allocate(&p) {
+            Ok(a) => {
+                for i in 0..p.k() {
+                    for j in 0..p.k() {
+                        let ci = &p.coeffs[i];
+                        let cj = &p.coeffs[j];
+                        // i strictly dominated by j in every coefficient
+                        if ci.c2 > cj.c2 * 1.001 && ci.c1 >= cj.c1 && ci.c0 >= cj.c0
+                            && a.batches[i] > a.batches[j] + 1
+                        {
+                            return false;
+                        }
+                    }
+                }
+                true
+            }
+            Err(_) => true,
+        }
+    });
+}
+
+#[test]
+fn scenario_json_round_trip_preserves_allocation() {
+    forall("JSON round trip", &scenario_gen(), |&(ti, k, t, seed)| {
+        let s = build(ti, k, seed);
+        let text = s.to_json().to_string();
+        let back =
+            Scenario::from_json(&mel::util::json::Json::parse(&text).unwrap()).unwrap();
+        let a1 = Policy::Analytical.allocator().allocate(&s.problem(t));
+        let a2 = Policy::Analytical.allocator().allocate(&back.problem(t));
+        match (a1, a2) {
+            (Ok(x), Ok(y)) => x.tau == y.tau && x.batches == y.batches,
+            (Err(_), Err(_)) => true,
+            _ => false,
+        }
+    });
+}
+
+#[test]
+fn cycle_sim_completion_equals_eq13_everywhere() {
+    use mel::sim::CycleSim;
+    forall("sim == eq.13", &scenario_gen(), |&(ti, k, t, seed)| {
+        let p = build(ti, k, seed).problem(t);
+        match Policy::Analytical.allocator().allocate(&p) {
+            Ok(a) => {
+                let rep = CycleSim::from_problem(&p).run_cycle(&a, false);
+                rep.deadline_misses.is_empty()
+                    && a.batches.iter().zip(&p.coeffs).enumerate().all(|(i, (&d, c))| {
+                        d == 0
+                            || (rep.completion[i] - c.time(a.tau as f64, d as f64)).abs()
+                                < 1e-9 * t
+                    })
+            }
+            Err(_) => true,
+        }
+    });
+}
+
+#[test]
+fn energy_is_positive_and_tau_linear() {
+    use mel::energy::{cycle_energy, DEFAULT_KAPPA};
+    forall("energy sane", &scenario_gen(), |&(ti, k, t, seed)| {
+        let s = build(ti, k, seed);
+        let p = s.problem(t);
+        match Policy::Analytical.allocator().allocate(&p) {
+            Ok(a) => {
+                let e = cycle_energy(&s.learners, &s.model, &a, DEFAULT_KAPPA);
+                if e.grand_total() <= 0.0 {
+                    return false;
+                }
+                // compute term linear in τ
+                let mut a2 = a.clone();
+                a2.tau *= 3;
+                let e2 = cycle_energy(&s.learners, &s.model, &a2, DEFAULT_KAPPA);
+                e.per_learner.iter().zip(&e2.per_learner).all(|(x, y)| {
+                    (y.compute_j - 3.0 * x.compute_j).abs() <= 1e-9 * (1.0 + y.compute_j)
+                })
+            }
+            Err(_) => true,
+        }
+    });
+}
+
+#[test]
+fn adaptive_enrolment_monotone_on_random_pools() {
+    use mel::alloc::selection::subproblem;
+    forall("enrolment monotone", &scenario_gen(), |&(ti, k, t, seed)| {
+        if k < 3 {
+            return true;
+        }
+        let p = build(ti, k, seed).problem(t);
+        let full = Policy::Analytical.allocator().allocate(&p);
+        let idx: Vec<usize> = (0..p.k() - 1).collect();
+        let part = Policy::Analytical.allocator().allocate(&subproblem(&p, &idx));
+        match (full, part) {
+            (Ok(f), Ok(s)) => f.tau >= s.tau,
+            (Err(_), Ok(_)) => false, // removing a node cannot create feasibility
+            _ => true,
+        }
+    });
+}
+
+#[test]
+fn ub_sai_start_point_bounded_by_relaxed_optimum() {
+    use mel::alloc::heuristic::UbSaiAllocator;
+    // eq.(32) is the equal-batch τ — never above the adaptive relaxed τ*
+    forall("eq.32 ≤ τ*", &scenario_gen(), |&(ti, k, t, seed)| {
+        let p = build(ti, k, seed).problem(t);
+        match (UbSaiAllocator::tau_start(&p), mel::alloc::relax::solve(&p)) {
+            (Ok(t0), Ok(sol)) => t0 <= sol.tau + 1e-6 * (1.0 + sol.tau),
+            _ => true,
+        }
+    });
+}

@@ -1,0 +1,114 @@
+//! CLI smoke tests: run the built `mel` binary end to end.
+
+use std::process::Command;
+
+fn mel(args: &[&str]) -> (String, String, bool) {
+    let out = Command::new(env!("CARGO_BIN_EXE_mel"))
+        .args(args)
+        .current_dir(env!("CARGO_MANIFEST_DIR"))
+        .output()
+        .expect("spawn mel");
+    (
+        String::from_utf8_lossy(&out.stdout).into_owned(),
+        String::from_utf8_lossy(&out.stderr).into_owned(),
+        out.status.success(),
+    )
+}
+
+#[test]
+fn help_lists_commands() {
+    let (stdout, _, ok) = mel(&[]);
+    assert!(ok);
+    for cmd in ["solve", "figure", "train", "scenario", "info"] {
+        assert!(stdout.contains(cmd), "missing {cmd} in help:\n{stdout}");
+    }
+}
+
+#[test]
+fn solve_all_policies_table() {
+    let (stdout, stderr, ok) = mel(&["solve", "--task", "pedestrian", "--k", "10", "--t", "30"]);
+    assert!(ok, "stderr: {stderr}");
+    for label in ["ETA", "UB-Analytical", "UB-SAI", "Numerical"] {
+        assert!(stdout.contains(label), "{stdout}");
+    }
+    assert!(stdout.contains("K=10"));
+}
+
+#[test]
+fn solve_single_policy_and_bad_policy() {
+    let (stdout, _, ok) = mel(&["solve", "--policy", "eta", "--k", "4"]);
+    assert!(ok);
+    assert!(stdout.contains("ETA") && !stdout.contains("UB-SAI"));
+    let (_, stderr, ok) = mel(&["solve", "--policy", "nonsense"]);
+    assert!(!ok);
+    assert!(stderr.contains("unknown policy"));
+}
+
+#[test]
+fn figure_gains_pass() {
+    let (stdout, stderr, ok) = mel(&["figure", "gains", "--seed", "42"]);
+    assert!(ok, "stderr: {stderr}");
+    assert!(stdout.contains("headline"));
+    assert!(!stderr.contains("WARNING"), "claims should hold: {stdout}");
+    // every row holds
+    assert!(!stdout.contains("| NO"), "{stdout}");
+}
+
+#[test]
+fn figure_fig2_renders_series() {
+    let (stdout, _, ok) = mel(&["figure", "fig2", "--seed", "1"]);
+    assert!(ok);
+    assert!(stdout.contains("UB-Analytical K=20"));
+    assert!(stdout.contains("ETA K=5"));
+}
+
+#[test]
+fn scenario_json_and_describe() {
+    let (stdout, _, ok) = mel(&["scenario", "--task", "mnist", "--k", "4", "--seed", "9"]);
+    assert!(ok);
+    let v = mel::util::json::Json::parse(&stdout).expect("valid JSON");
+    assert_eq!(v.get("learners").unwrap().as_arr().unwrap().len(), 4);
+    let (stdout, _, ok) = mel(&["scenario", "--k", "4", "--describe"]);
+    assert!(ok);
+    assert!(stdout.contains("rate(Mbps)"));
+}
+
+#[test]
+fn info_runs() {
+    let (stdout, _, ok) = mel(&["info"]);
+    assert!(ok);
+    assert!(stdout.contains("Mobile Edge Learning"));
+}
+
+#[test]
+fn unknown_command_exits_nonzero() {
+    let (_, _, ok) = mel(&["frobnicate"]);
+    assert!(!ok);
+}
+
+#[test]
+fn energy_table_renders() {
+    let (stdout, stderr, ok) = mel(&["energy", "--k", "6", "--t", "30"]);
+    assert!(ok, "stderr: {stderr}");
+    assert!(stdout.contains("mJ per sample-iter"));
+    assert!(stdout.contains("UB-Analytical"));
+}
+
+#[test]
+fn figure_fig_e_renders() {
+    let (stdout, stderr, ok) = mel(&["figure", "figE"]);
+    assert!(ok, "stderr: {stderr}");
+    assert!(stdout.contains("loss_milli adaptive"));
+    assert!(stdout.contains("loss_milli ETA"));
+}
+
+#[test]
+fn sweep_renders_and_writes_csv() {
+    let (stdout, stderr, ok) = mel(&[
+        "sweep", "--task", "mnist", "--ks", "5,10", "--ts", "60,120", "--policy", "sai",
+    ]);
+    assert!(ok, "stderr: {stderr}");
+    assert!(stdout.contains("gain_vs_eta"));
+    // 2 x 2 grid rows plus borders/header
+    assert!(stdout.matches('\n').count() >= 8);
+}
