@@ -11,7 +11,7 @@
 //! ```
 
 use mel::alloc::Policy;
-use mel::benchkit::{group, Bencher};
+use mel::benchkit::{group, Bencher, Suite};
 use mel::coordinator::{Orchestrator, TrainConfig};
 use mel::dataset::SyntheticDataset;
 use mel::scenario::{CloudletConfig, Scenario};
@@ -21,6 +21,7 @@ use mel::util::rng::Pcg64;
 fn main() {
     let b = Bencher::quick();
     let seed = 42;
+    let mut suite = Suite::new("e2e_cycle");
 
     group("coordination-only path (no PJRT compute)");
     let scenario = Scenario::random_cloudlet(&CloudletConfig::pedestrian(20), seed);
@@ -28,24 +29,59 @@ fn main() {
     let alloc = Policy::Analytical.allocator().allocate(&problem).unwrap();
     // 1. the allocation decision
     let solver = Policy::Analytical.allocator();
-    b.run("allocate (UB-Analytical, K=20)", || solver.allocate(&problem).unwrap().tau);
+    suite.run(&b, "allocate (UB-Analytical, K=20)", || solver.allocate(&problem).unwrap().tau);
     // 2. batch draw over the full 9,000-sample dataset
     let ds = SyntheticDataset::full(&scenario.dataset, 1);
     let mut rng = Pcg64::seeded(2);
-    b.run("draw_batches (9,000 samples → 20 learners)", || {
+    suite.run(&b, "draw_batches (9,000 samples → 20 learners)", || {
         ds.draw_batches(&alloc.batches, &mut rng).len()
     });
     // 3. the discrete-event timeline
     let sim = CycleSim::from_problem(&problem);
-    b.run("cycle timeline simulation (no trace)", || sim.run_cycle(&alloc, false).makespan);
+    suite.run(&b, "cycle timeline simulation (no trace)", || sim.run_cycle(&alloc, false).makespan);
     // 4. aggregation at pedestrian scale (4 tensors, ~195k params × 20)
     let params = mel::coordinator::ParamSet::init(&[648, 300, 2], 1);
     let sets: Vec<(f64, mel::coordinator::ParamSet)> =
         (0..20).map(|i| ((i + 1) as f64, params.clone())).collect();
-    b.run("aggregate eq.(5) (20 learners x 195k params)", || {
+    suite.run(&b, "aggregate eq.(5) (20 learners x 195k params)", || {
         mel::coordinator::ParamSet::weighted_average(&sets).num_scalars()
     });
 
+    // 5. the event-driven orchestration core: one barrier cycle through
+    // the event queue (cached allocation) and a full async horizon
+    group("event-driven orchestration core");
+    {
+        use mel::orchestrator::{Mode, Orchestrator as Core, OrchestratorConfig};
+        let mut core = Core::new(
+            Scenario::random_cloudlet(&CloudletConfig::pedestrian(20), seed),
+            OrchestratorConfig { cycles: 1, ..OrchestratorConfig::default() },
+        );
+        let mut c = 0usize;
+        suite.run(&b, "event core: sync cycle (K=20, cached alloc)", || {
+            c += 1;
+            core.step_cycle(c).unwrap().makespan
+        });
+        // scenario + core hoisted out of the closure so the number
+        // tracks the event loop, not cloudlet generation
+        let mut async_core = Core::new(
+            Scenario::random_cloudlet(&CloudletConfig::pedestrian(10), seed),
+            OrchestratorConfig {
+                mode: Mode::Async,
+                policy: Policy::Eta,
+                cycles: 8,
+                ..OrchestratorConfig::default()
+            },
+        );
+        suite.run(&b, "event core: async horizon (K=10, 8 leases/learner)", || {
+            async_core.run().unwrap().updates_applied
+        });
+    }
+
+    if !mel::runtime::artifacts_available() {
+        println!("\nskipping real-compute section: requires `make artifacts` and --features pjrt");
+        suite.write_and_report();
+        return;
+    }
     group("full cycle with real compute (K=3, d=384, T=2s)");
     let mut s = Scenario::random_cloudlet(&CloudletConfig::pedestrian(3), seed);
     s.dataset.total_samples = 384;
@@ -82,4 +118,5 @@ fn main() {
         "coordination overhead (allocate+draw+timeline+aggregate) is ~1e-3 of the \
          compute path → L3 is not the bottleneck"
     );
+    suite.write_and_report();
 }

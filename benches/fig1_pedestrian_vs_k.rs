@@ -9,7 +9,7 @@
 //! ```
 
 use mel::alloc::Policy;
-use mel::benchkit::{group, Bencher};
+use mel::benchkit::{group, Bencher, Suite};
 use mel::experiments;
 use mel::scenario::{CloudletConfig, Scenario};
 
@@ -31,14 +31,16 @@ fn main() {
 
     group("solve-time per (K, policy) point");
     let b = Bencher::default();
+    let mut suite = Suite::new("fig1_pedestrian_vs_k");
     for &k in &[5usize, 20, 50] {
         let scenario = Scenario::random_cloudlet(&CloudletConfig::pedestrian(k), seed);
         let problem = scenario.problem(30.0);
         for policy in Policy::all() {
             let alloc = policy.allocator();
-            b.run(&format!("fig1 K={k} {}", policy.label()), || {
+            suite.run(&b, &format!("fig1 K={k} {}", policy.label()), || {
                 alloc.allocate(&problem).unwrap().tau
             });
         }
     }
+    suite.write_and_report();
 }

@@ -6,7 +6,7 @@
 //! ```
 
 use mel::alloc::Policy;
-use mel::benchkit::{group, Bencher};
+use mel::benchkit::{group, Bencher, Suite};
 use mel::experiments;
 use mel::scenario::{CloudletConfig, Scenario};
 
@@ -34,14 +34,16 @@ fn main() {
 
     group("solve-time per (T, policy) point, K=20");
     let b = Bencher::default();
+    let mut suite = Suite::new("fig2_pedestrian_vs_t");
     let scenario = Scenario::random_cloudlet(&CloudletConfig::pedestrian(20), seed);
     for &t in &[20.0f64, 60.0, 120.0] {
         let problem = scenario.problem(t);
         for policy in Policy::all() {
             let alloc = policy.allocator();
-            b.run(&format!("fig2 T={t} {}", policy.label()), || {
+            suite.run(&b, &format!("fig2 T={t} {}", policy.label()), || {
                 alloc.allocate(&problem).unwrap().tau
             });
         }
     }
+    suite.write_and_report();
 }

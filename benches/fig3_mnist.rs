@@ -7,7 +7,7 @@
 //! ```
 
 use mel::alloc::Policy;
-use mel::benchkit::{group, Bencher};
+use mel::benchkit::{group, Bencher, Suite};
 use mel::experiments;
 use mel::scenario::{CloudletConfig, Scenario};
 
@@ -29,12 +29,14 @@ fn main() {
 
     group("solve-time per policy, MNIST K=20 T=60s");
     let b = Bencher::default();
+    let mut suite = Suite::new("fig3_mnist");
     let scenario = Scenario::random_cloudlet(&CloudletConfig::mnist(20), seed);
     let problem = scenario.problem(60.0);
     for policy in Policy::all() {
         let alloc = policy.allocator();
-        b.run(&format!("fig3 {}", policy.label()), || {
+        suite.run(&b, &format!("fig3 {}", policy.label()), || {
             alloc.allocate(&problem).unwrap().tau
         });
     }
+    suite.write_and_report();
 }

@@ -9,7 +9,7 @@
 //! cargo bench --bench runtime
 //! ```
 
-use mel::benchkit::{group, Bencher};
+use mel::benchkit::{group, Bencher, Suite};
 use mel::runtime::{Engine, Tensor};
 
 fn ped_inputs(bucket: usize) -> Vec<Tensor> {
@@ -32,6 +32,11 @@ fn ped_inputs(bucket: usize) -> Vec<Tensor> {
 }
 
 fn main() {
+    if !mel::runtime::artifacts_available() {
+        println!("skipping runtime bench: requires `make artifacts` and --features pjrt");
+        return;
+    }
+    let mut suite = Suite::new("runtime");
     let engine = Engine::start("artifacts").expect("run `make artifacts` first");
     let h = engine.handle();
     let b = Bencher::default();
@@ -41,7 +46,7 @@ fn main() {
         let name = format!("pedestrian_grad_step_b{bucket}");
         h.warm(&name).unwrap();
         let inputs = ped_inputs(bucket);
-        let r = b.run(&format!("{name}"), || {
+        let r = suite.run(&b, &format!("{name}"), || {
             h.execute(&name, inputs.clone()).unwrap()[5].scalar()
         });
         let flops = bucket as f64 * 781_208.0;
@@ -58,14 +63,14 @@ fn main() {
         let name = format!("pedestrian_eval_batch_b{bucket}");
         h.warm(&name).unwrap();
         let inputs = ped_inputs(bucket);
-        b.run(&name, || h.execute(&name, inputs.clone()).unwrap()[0].scalar());
+        suite.run(&b, &name, || h.execute(&name, inputs.clone()).unwrap()[0].scalar());
     }
 
     group("engine dispatch overhead (tensor codec + channel round trip)");
     // smallest artifact, smallest payload → overhead-dominated
     let name = "pedestrian_eval_batch_b64";
     let inputs = ped_inputs(64);
-    let r = b.run("eval_b64 total", || h.execute(name, inputs.clone()).unwrap().len());
+    let r = suite.run(&b, "eval_b64 total", || h.execute(name, inputs.clone()).unwrap().len());
     println!(
         "    → dispatch+codec budget is bounded by this end-to-end time ({:.2} ms); \
          the engine thread adds one mpsc round trip per call",
@@ -92,4 +97,6 @@ fn main() {
     let t4 = t0.elapsed().as_secs_f64() / reps as f64;
     println!("1-thread {:.2} ms/exec vs 4-thread {:.2} ms/exec (engine serializes submissions; XLA parallelizes internally)",
         r1.mean * 1e3, t4 * 1e3);
+    suite.push(r1);
+    suite.write_and_report();
 }

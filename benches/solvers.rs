@@ -14,7 +14,7 @@ use mel::alloc::exact::ExactAllocator;
 use mel::alloc::heuristic::UbSaiAllocator;
 use mel::alloc::numerical::{Method, NumericalAllocator};
 use mel::alloc::TaskAllocator;
-use mel::benchkit::{group, Bencher};
+use mel::benchkit::{group, Bencher, Suite};
 use mel::scenario::{CloudletConfig, Scenario};
 use mel::util::stats::power_fit;
 
@@ -36,6 +36,7 @@ fn main() {
 
     let ks = [5usize, 10, 20, 40, 80];
     let mut times: Vec<Vec<f64>> = vec![Vec::new(); solvers.len()];
+    let mut suite = Suite::new("solvers");
 
     for &k in &ks {
         group(&format!("K = {k} (pedestrian, T = 30 s)"));
@@ -49,7 +50,9 @@ fn main() {
             if *name == "eq.21 polynomial (Durand-Kerner)" && k > 80 {
                 continue;
             }
-            let r = b.run(&format!("{name} K={k}"), || solver.allocate(&problem).unwrap().tau);
+            let r = suite.run(&b, &format!("{name} K={k}"), || {
+                solver.allocate(&problem).unwrap().tau
+            });
             times[i].push(r.median);
         }
     }
@@ -79,4 +82,5 @@ fn main() {
         assert!(taus.windows(2).all(|w| w[0] == w[1]), "K={k}: {taus:?}");
         println!("K={k}: all 6 solvers agree at tau = {}", taus[0]);
     }
+    suite.write_and_report();
 }

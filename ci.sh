@@ -1,0 +1,54 @@
+#!/usr/bin/env bash
+# CI driver: lint → build → test → (optionally) bench.
+#
+#   ./ci.sh              # fmt-check + clippy (advisory), build, test
+#   STRICT_LINT=1 ./ci.sh  # fail on fmt/clippy findings too
+#   CI_BENCH=1 ./ci.sh   # additionally run the bench targets, which
+#                        # emit results/BENCH_*.json via benchkit::Suite
+#
+# Tier-1 gate: `cargo build --release && cargo test -q` must be green.
+set -euo pipefail
+cd "$(dirname "$0")"
+
+STRICT_LINT="${STRICT_LINT:-0}"
+CI_BENCH="${CI_BENCH:-0}"
+
+lint_status=0
+
+echo "==> cargo fmt --check"
+if ! cargo fmt --check; then
+    lint_status=1
+    echo "fmt: formatting differences found"
+fi
+
+echo "==> cargo clippy --all-targets -- -D warnings"
+if ! cargo clippy --all-targets -- -D warnings; then
+    lint_status=1
+    echo "clippy: lints found"
+fi
+
+if [ "$lint_status" -ne 0 ]; then
+    if [ "$STRICT_LINT" = "1" ]; then
+        echo "FAIL: lint stage (STRICT_LINT=1)"
+        exit 1
+    fi
+    echo "WARN: lint findings (advisory; set STRICT_LINT=1 to enforce)"
+fi
+
+echo "==> cargo build --release"
+cargo build --release
+
+echo "==> cargo test -q"
+cargo test -q
+
+if [ "$CI_BENCH" = "1" ]; then
+    mkdir -p results
+    for bench in solvers fig1_pedestrian_vs_k fig2_pedestrian_vs_t fig3_mnist e2e_cycle runtime ablations; do
+        echo "==> cargo bench --bench $bench"
+        cargo bench --bench "$bench"
+    done
+    echo "bench JSON artifacts:"
+    ls -l results/BENCH_*.json 2>/dev/null || echo "  (none written)"
+fi
+
+echo "CI OK"

@@ -1,0 +1,146 @@
+//! Asynchronous ETA — the per-learner-τ allocation of the follow-up
+//! async MEL work (Mohammad & Sorour, arXiv:1905.01656; Mohammad,
+//! Sorour & Hefeida, arXiv:2012.00143).
+//!
+//! The batch split stays equal (`d/K`, the async baseline keeps data
+//! placement static so shards never migrate between leases), but the
+//! barrier is gone: learner `k`'s lease clock is its *own* deadline `T`,
+//! so it runs `τ_k = ⌊τ_max_k(d/K)⌋` local iterations — fast learners no
+//! longer idle while the slowest finishes its update. The returned
+//! [`Allocation`] carries the per-learner counts in `tau_k` and the
+//! conservative minimum in `tau`, which is exactly the synchronous ETA τ
+//! (so sync-era consumers see the old value).
+
+use super::{Allocation, AllocError, Problem, TaskAllocator};
+
+#[derive(Debug, Clone, Copy, Default)]
+pub struct AsyncEtaAllocator;
+
+impl AsyncEtaAllocator {
+    /// Per-learner τ_k at an equal `d/K` split, or an infeasibility
+    /// error when some learner cannot finish one iteration within `T`.
+    pub fn tau_per_learner(p: &Problem) -> Result<(Vec<usize>, Vec<u64>), AllocError> {
+        let k = p.k();
+        if k == 0 {
+            return Err(AllocError::Infeasible { reason: "no learners".into() });
+        }
+        let d = p.total_samples;
+        let base = d / k;
+        let rem = d % k;
+        let batches: Vec<usize> = (0..k).map(|i| base + usize::from(i < rem)).collect();
+        let mut tau_k = Vec::with_capacity(k);
+        for (c, &dk) in p.coeffs.iter().zip(&batches) {
+            if dk == 0 {
+                tau_k.push(0);
+                continue;
+            }
+            let t = c.tau_max(dk as f64, p.t_total);
+            if !t.is_finite() || t < 1.0 {
+                return Err(AllocError::Infeasible {
+                    reason: format!(
+                        "async ETA: a learner cannot complete one local iteration \
+                         within its lease T = {} (τ_max = {t:.3})",
+                        p.t_total
+                    ),
+                });
+            }
+            tau_k.push(t.floor() as u64);
+        }
+        Ok((batches, tau_k))
+    }
+}
+
+impl TaskAllocator for AsyncEtaAllocator {
+    fn allocate(&self, p: &Problem) -> Result<Allocation, AllocError> {
+        let (batches, tau_k) = Self::tau_per_learner(p)?;
+        let tau = tau_k
+            .iter()
+            .zip(&batches)
+            .filter(|(_, &d)| d > 0)
+            .map(|(&t, _)| t)
+            .min()
+            .unwrap_or(0);
+        if tau == 0 {
+            return Err(AllocError::Infeasible {
+                reason: "async ETA: empty problem".into(),
+            });
+        }
+        let relaxed_batches: Vec<f64> = batches.iter().map(|&b| b as f64).collect();
+        let alloc = Allocation {
+            tau,
+            tau_k,
+            batches,
+            relaxed_tau: tau as f64,
+            relaxed_batches,
+            policy: "async-eta",
+            sai_steps: 0,
+        };
+        debug_assert!(alloc.is_feasible(p), "async ETA produced infeasible allocation");
+        Ok(alloc)
+    }
+
+    fn name(&self) -> &'static str {
+        "async-eta"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::alloc::eta::EtaAllocator;
+    use crate::alloc::testutil::two_class_problem;
+    use crate::alloc::Policy;
+
+    #[test]
+    fn per_learner_tau_dominates_sync_eta() {
+        let p = two_class_problem(10, 9000, 30.0);
+        let sync = EtaAllocator.allocate(&p).unwrap();
+        let asy = AsyncEtaAllocator.allocate(&p).unwrap();
+        // same batch split
+        assert_eq!(sync.batches, asy.batches);
+        // min τ_k equals the barrier τ (the slowest learner is the barrier)
+        assert_eq!(asy.tau, sync.tau);
+        // every learner's lease count is at least the barrier count, and
+        // the fast class strictly exceeds it
+        for k in 0..p.k() {
+            assert!(asy.tau_for(k) >= sync.tau, "learner {k}");
+        }
+        assert!(asy.max_tau() > sync.tau, "fast learners should exceed the barrier τ");
+        assert!(!asy.is_uniform_tau());
+        assert!(asy.is_feasible(&p));
+    }
+
+    #[test]
+    fn policy_enum_integration() {
+        assert_eq!(Policy::parse("async-eta"), Some(Policy::AsyncEta));
+        assert_eq!(Policy::parse("async"), Some(Policy::AsyncEta));
+        assert_eq!(Policy::AsyncEta.label(), "Async-ETA");
+        let p = two_class_problem(4, 1000, 30.0);
+        let a = Policy::AsyncEta.allocator().allocate(&p).unwrap();
+        assert_eq!(a.tau_k.len(), 4);
+        // Policy::all() stays the paper's four sync policies
+        assert!(!Policy::all().contains(&Policy::AsyncEta));
+    }
+
+    #[test]
+    fn infeasible_when_t_too_small() {
+        let p = two_class_problem(4, 9000, 0.1);
+        assert!(matches!(
+            AsyncEtaAllocator.allocate(&p),
+            Err(AllocError::Infeasible { .. })
+        ));
+    }
+
+    #[test]
+    fn uniform_when_learners_identical() {
+        // all-identical coefficients ⇒ τ_k all equal (barrier-free buys
+        // nothing on a homogeneous pool, eq. (13) symmetric case)
+        let mut p = two_class_problem(4, 1000, 30.0);
+        let c0 = p.coeffs[0];
+        for c in &mut p.coeffs {
+            *c = c0;
+        }
+        let a = AsyncEtaAllocator.allocate(&p).unwrap();
+        assert!(a.is_uniform_tau());
+    }
+}

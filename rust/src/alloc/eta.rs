@@ -41,6 +41,7 @@ impl TaskAllocator for EtaAllocator {
         let tau = tau_f.floor() as u64;
         let alloc = Allocation {
             tau,
+            tau_k: Vec::new(),
             batches: batches.clone(),
             relaxed_tau: tau_f,
             relaxed_batches: batches.iter().map(|&b| b as f64).collect(),

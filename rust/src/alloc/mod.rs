@@ -18,6 +18,7 @@
 //! feasible integer allocations.
 
 pub mod analytical;
+pub mod async_eta;
 pub mod eta;
 pub mod exact;
 pub mod heuristic;
@@ -82,10 +83,21 @@ impl Problem {
 
 /// An allocation decision: the integer solution the orchestrator
 /// enacts, plus the relaxed (real) solution it was derived from.
+///
+/// Synchronous (barrier) policies give every learner the same iteration
+/// count `tau` and leave `tau_k` empty. Asynchronous planners fill
+/// `tau_k` with per-learner counts (each learner runs as many local
+/// iterations as *its own* lease clock permits); `tau` then holds the
+/// minimum, so all sync-era consumers remain conservative and every
+/// paper result is preserved bit-for-bit.
 #[derive(Debug, Clone)]
 pub struct Allocation {
-    /// Local iterations per global cycle (the maximized objective).
+    /// Local iterations per global cycle (the maximized objective). For
+    /// async allocations this is `min_k τ_k`.
     pub tau: u64,
+    /// Per-learner iteration counts τ_k. Empty ⇒ uniform (`tau` for
+    /// every learner) — the synchronous case.
+    pub tau_k: Vec<u64>,
     /// Batch size `d_k` per learner; sums to `d`.
     pub batches: Vec<usize>,
     /// Relaxed-problem optimum τ* (upper bound on `tau`).
@@ -99,12 +111,30 @@ pub struct Allocation {
 }
 
 impl Allocation {
-    /// Validate the paper's constraints (17b)–(17e) against `p`.
+    /// Iteration count for learner `k`: `tau_k[k]` when per-learner
+    /// counts were emitted, else the uniform `tau`.
+    pub fn tau_for(&self, k: usize) -> u64 {
+        self.tau_k.get(k).copied().unwrap_or(self.tau)
+    }
+
+    /// True when every learner runs the same iteration count (the
+    /// barrier-synchronous case).
+    pub fn is_uniform_tau(&self) -> bool {
+        self.tau_k.is_empty() || self.tau_k.iter().all(|&t| t == self.tau)
+    }
+
+    /// Largest per-learner iteration count.
+    pub fn max_tau(&self) -> u64 {
+        self.tau_k.iter().copied().max().unwrap_or(self.tau)
+    }
+
+    /// Validate the paper's constraints (17b)–(17e) against `p`,
+    /// per-learner τ_k aware.
     pub fn is_feasible(&self, p: &Problem) -> bool {
         self.batches.len() == p.k()
             && self.batches.iter().sum::<usize>() == p.total_samples
-            && self.batches.iter().zip(&p.coeffs).all(|(&d, c)| {
-                d == 0 || c.time(self.tau as f64, d as f64) <= p.t_total + TIME_EPS
+            && self.batches.iter().zip(&p.coeffs).enumerate().all(|(k, (&d, c))| {
+                d == 0 || c.time(self.tau_for(k) as f64, d as f64) <= p.t_total + TIME_EPS
             })
     }
 
@@ -113,8 +143,9 @@ impl Allocation {
         self.batches
             .iter()
             .zip(&p.coeffs)
-            .filter(|(&d, _)| d > 0)
-            .map(|(&d, c)| c.time(self.tau as f64, d as f64))
+            .enumerate()
+            .filter(|(_, (&d, _))| d > 0)
+            .map(|(k, (&d, c))| c.time(self.tau_for(k) as f64, d as f64))
             .fold(0.0, f64::max)
     }
 
@@ -123,22 +154,34 @@ impl Allocation {
         self.batches
             .iter()
             .zip(&p.coeffs)
-            .map(|(&d, c)| p.t_total - c.time(self.tau as f64, d as f64))
+            .enumerate()
+            .map(|(k, (&d, c))| p.t_total - c.time(self.tau_for(k) as f64, d as f64))
             .collect()
     }
 }
 
 /// Allocation failure modes.
-#[derive(Debug, Clone, thiserror::Error, PartialEq)]
+#[derive(Debug, Clone, PartialEq)]
 pub enum AllocError {
     /// Not even τ=1 fits: the orchestrator should offload to edge/cloud
     /// (the paper's ν₁=ν₂=0 case).
-    #[error("MEL infeasible: {reason}")]
     Infeasible { reason: String },
     /// Solver failed to converge (numerical pathology).
-    #[error("solver did not converge: {reason}")]
     NoConvergence { reason: String },
 }
+
+impl std::fmt::Display for AllocError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            AllocError::Infeasible { reason } => write!(f, "MEL infeasible: {reason}"),
+            AllocError::NoConvergence { reason } => {
+                write!(f, "solver did not converge: {reason}")
+            }
+        }
+    }
+}
+
+impl std::error::Error for AllocError {}
 
 /// A task-allocation policy.
 pub trait TaskAllocator: Send + Sync {
@@ -149,7 +192,7 @@ pub trait TaskAllocator: Send + Sync {
     fn name(&self) -> &'static str;
 }
 
-/// Enum front-end over the four policies (CLI/config selection).
+/// Enum front-end over the policies (CLI/config selection).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum Policy {
     /// Equal task allocation (baseline of [12], [13]).
@@ -160,6 +203,12 @@ pub enum Policy {
     UbSai,
     /// Numerical solver on the relaxed problem (OPTI stand-in).
     Numerical,
+    /// Asynchronous ETA (arXiv:1905.01656 §III): equal batch split, but
+    /// each learner gets its *own* iteration count
+    /// `τ_k = ⌊τ_max_k(d/K)⌋` for its staggered lease clock — the
+    /// per-learner τ_k generalization the event-driven orchestrator
+    /// dispatches without a barrier.
+    AsyncEta,
 }
 
 impl Policy {
@@ -169,6 +218,7 @@ impl Policy {
             Policy::Analytical => Box::new(analytical::AnalyticalAllocator::default()),
             Policy::UbSai => Box::new(heuristic::UbSaiAllocator::default()),
             Policy::Numerical => Box::new(numerical::NumericalAllocator::default()),
+            Policy::AsyncEta => Box::new(async_eta::AsyncEtaAllocator),
         }
     }
 
@@ -178,10 +228,15 @@ impl Policy {
             "analytical" | "ub-analytical" | "ub" => Some(Policy::Analytical),
             "ubsai" | "ub-sai" | "sai" | "heuristic" => Some(Policy::UbSai),
             "numerical" | "opti" | "solver" => Some(Policy::Numerical),
+            "async-eta" | "asynceta" | "async" => Some(Policy::AsyncEta),
             _ => None,
         }
     }
 
+    /// The paper's four barrier-synchronous policies (figure sweeps,
+    /// `mel solve --policy all`). [`Policy::AsyncEta`] is excluded: it
+    /// is a dispatch-mode policy for the event-driven orchestrator, not
+    /// a point in the paper's sync comparison.
     pub fn all() -> [Policy; 4] {
         [Policy::Eta, Policy::Analytical, Policy::UbSai, Policy::Numerical]
     }
@@ -192,6 +247,7 @@ impl Policy {
             Policy::Analytical => "UB-Analytical",
             Policy::UbSai => "UB-SAI",
             Policy::Numerical => "Numerical",
+            Policy::AsyncEta => "Async-ETA",
         }
     }
 }
@@ -244,6 +300,7 @@ mod tests {
         let p = testutil::two_class_problem(2, 100, 30.0);
         let good = Allocation {
             tau: 10,
+            tau_k: Vec::new(),
             batches: vec![80, 20],
             relaxed_tau: 10.5,
             relaxed_batches: vec![80.3, 19.7],

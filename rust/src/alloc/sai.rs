@@ -156,6 +156,7 @@ pub fn improve(
 
     let alloc = Allocation {
         tau,
+        tau_k: Vec::new(),
         batches,
         relaxed_tau,
         relaxed_batches,

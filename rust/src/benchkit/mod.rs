@@ -2,10 +2,15 @@
 //! batched timing to amortize clock overhead, robust statistics, and a
 //! criterion-style one-line report. Used by every target in `benches/`
 //! (which are `harness = false` binaries).
+//!
+//! [`Suite`] collects a target's results and exports them as
+//! `BENCH_<name>.json` (machine-readable perf trajectory; `ci.sh` runs
+//! the bench targets so the files accumulate under `results/`).
 
 use std::hint::black_box;
 use std::time::{Duration, Instant};
 
+use crate::util::json::Json;
 use crate::util::stats::{percentile, Welford};
 use crate::util::table::fdur;
 
@@ -39,6 +44,20 @@ impl BenchResult {
     /// Iterations per second.
     pub fn throughput(&self) -> f64 {
         1.0 / self.mean
+    }
+
+    /// Machine-readable form (seconds per iteration throughout).
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("name", Json::Str(self.name.clone())),
+            ("mean_s", Json::Num(self.mean)),
+            ("median_s", Json::Num(self.median)),
+            ("std_s", Json::Num(self.std)),
+            ("p05_s", Json::Num(self.p05)),
+            ("p95_s", Json::Num(self.p95)),
+            ("iters_total", Json::Num(self.iters_total as f64)),
+            ("samples", Json::Num(self.samples as f64)),
+        ])
     }
 }
 
@@ -140,6 +159,58 @@ pub fn group(title: &str) {
     println!("\n=== {title} ===");
 }
 
+/// One bench target's collected results, exportable as
+/// `BENCH_<name>.json` for the perf trajectory.
+#[derive(Debug, Clone)]
+pub struct Suite {
+    pub name: String,
+    pub results: Vec<BenchResult>,
+}
+
+impl Suite {
+    pub fn new(name: &str) -> Self {
+        Self { name: name.to_string(), results: Vec::new() }
+    }
+
+    pub fn push(&mut self, r: BenchResult) {
+        self.results.push(r);
+    }
+
+    /// Bench through `b`, print the report line, and collect the result.
+    pub fn run<T>(&mut self, b: &Bencher, name: &str, f: impl FnMut() -> T) -> BenchResult {
+        let r = b.run(name, f);
+        self.results.push(r.clone());
+        r
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("suite", Json::Str(self.name.clone())),
+            ("unit", Json::Str("seconds/iter".into())),
+            ("results", Json::Arr(self.results.iter().map(BenchResult::to_json).collect())),
+        ])
+    }
+
+    /// Write `BENCH_<name>.json` into `$BENCH_OUT` (default `results/`);
+    /// returns the path written.
+    pub fn write(&self) -> std::io::Result<String> {
+        let dir = std::env::var("BENCH_OUT").unwrap_or_else(|_| "results".into());
+        std::fs::create_dir_all(&dir)?;
+        let path = format!("{dir}/BENCH_{}.json", self.name);
+        std::fs::write(&path, self.to_json().to_pretty())?;
+        Ok(path)
+    }
+
+    /// Write and report on stdout, swallowing IO errors into a warning
+    /// (benches must not fail because `results/` is read-only).
+    pub fn write_and_report(&self) {
+        match self.write() {
+            Ok(path) => println!("\nwrote {path} ({} results)", self.results.len()),
+            Err(e) => eprintln!("warning: could not write BENCH_{}.json: {e}", self.name),
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -178,6 +249,23 @@ mod tests {
             cheap.mean,
             costly.mean
         );
+    }
+
+    #[test]
+    fn suite_collects_and_serializes() {
+        let b = Bencher::quick();
+        let mut suite = Suite::new("unit-test");
+        suite.run(&b, "noop", || black_box(1u64));
+        suite.run(&b, "noop2", || black_box(2u64));
+        assert_eq!(suite.results.len(), 2);
+        let j = suite.to_json();
+        assert_eq!(j.get("suite").unwrap().as_str().unwrap(), "unit-test");
+        let arr = j.get("results").unwrap().as_arr().unwrap();
+        assert_eq!(arr.len(), 2);
+        assert!(arr[0].get("mean_s").unwrap().as_f64().unwrap() > 0.0);
+        // round-trips through the codec
+        let back = Json::parse(&j.to_pretty()).unwrap();
+        assert_eq!(back.get("unit").unwrap().as_str().unwrap(), "seconds/iter");
     }
 
     #[test]

@@ -1,30 +1,42 @@
-//! The MEL **orchestrator** — the paper's L3 coordination loop made
-//! executable. Per global cycle (§II-B):
+//! The MEL **trainer** — real PJRT training driven by the event-driven
+//! orchestration core ([`crate::orchestrator`]).
 //!
-//! 1. **Allocate** — run the configured [`Policy`] on the current
-//!    channel/compute state → `(τ, {d_k})`.
-//! 2. **Dispatch** — draw each learner's random batch (footnote 1) and
-//!    account the send time `t_k^S` on the simulated clock.
-//! 3. **Local learning** — every learner runs τ local full-batch SGD
-//!    iterations on its batch, executed for real through the PJRT
+//! Since the event-driven refactor this module no longer owns the
+//! timing loop: every cycle's fading redraw, allocation (re-)solve, and
+//! deadline accounting happen in [`crate::orchestrator::Orchestrator`]
+//! (`step_cycle`, barrier mode), so the simulator benches and the real
+//! trainer exercise one code path. What remains here is the *compute*
+//! half of a global cycle (§II-B):
+//!
+//! 1. **Plan** — `core.step_cycle` consumes the learner lifecycle
+//!    events of the round and returns the enacted [`Allocation`]
+//!    (per-learner `τ_k` aware), completion times, and deadline misses.
+//! 2. **Dispatch** — draw each learner's random batch (footnote 1).
+//! 3. **Local learning** — every learner runs its `τ_k` local
+//!    full-batch SGD iterations, executed for real through the PJRT
 //!    runtime (bucketed, mask-padded gradient accumulation). Learner
 //!    compute fans out over an OS thread pool; the engine serializes
 //!    PJRT submissions (CPU backend parallelizes internally).
-//! 4. **Aggregate** — weighted parameter averaging, eq. (5).
+//! 4. **Aggregate** — weighted parameter averaging, eq. (5), over the
+//!    updates that made their deadline.
 //! 5. **Evaluate** — global loss/accuracy on a held-out set; metrics
 //!    record the loss curve against *simulated wall time* (cycles × T),
 //!    which is how the paper's accuracy-within-deadline story is told.
+//!
+//! `Trainer` is the renamed seed `Orchestrator` (a type alias keeps the
+//! old name working); the orchestrator name now belongs to the shared
+//! event-driven core.
 
 pub mod params;
 
 use std::sync::Arc;
 
-use crate::alloc::{Allocation, Policy};
+use crate::alloc::Policy;
 use crate::dataset::SyntheticDataset;
 use crate::metrics::Metrics;
+use crate::orchestrator::{Mode, Orchestrator as OrchCore, OrchestratorConfig};
 use crate::runtime::{Engine, EngineHandle, Manifest, Tensor};
 use crate::scenario::Scenario;
-use crate::sim::CycleSim;
 use crate::util::rng::Pcg64;
 
 pub use params::ParamSet;
@@ -97,23 +109,25 @@ pub struct CycleOutcome {
     pub wall_compute_s: f64,
 }
 
-/// The orchestrator.
-pub struct Orchestrator {
-    pub scenario: Scenario,
+/// The real-training coordinator (seed name: `Orchestrator`).
+pub struct Trainer {
     pub cfg: TrainConfig,
     pub metrics: Arc<Metrics>,
+    core: OrchCore,
     engine: Engine,
     global: ParamSet,
     train_set: SyntheticDataset,
     eval_set: SyntheticDataset,
     rng: Pcg64,
-    sim_time: f64,
-    cached_alloc: Option<Allocation>,
 }
 
-impl Orchestrator {
-    /// Build an orchestrator: starts the PJRT engine, synthesizes the
-    /// datasets, initializes **w**.
+/// Back-compat alias for the seed API.
+pub type Orchestrator = Trainer;
+
+impl Trainer {
+    /// Build a trainer: starts the PJRT engine, synthesizes the
+    /// datasets, initializes **w**, and stands up the event-driven
+    /// orchestration core in barrier mode.
     pub fn new(scenario: Scenario, cfg: TrainConfig) -> anyhow::Result<Self> {
         let engine = Engine::start(&cfg.artifact_dir)?;
         // validate the artifacts cover this model
@@ -129,43 +143,34 @@ impl Orchestrator {
         let eval_set = SyntheticDataset::generate(&eval_spec, cfg.eval_samples, cfg.seed ^ 0xE7A1);
         let global = ParamSet::init(&scenario.model.layers, cfg.seed ^ 0x1417);
         let rng = Pcg64::new(cfg.seed, 0x06C);
-        Ok(Self {
-            scenario,
-            metrics: Arc::new(Metrics::new()),
-            engine,
-            global,
-            train_set,
-            eval_set,
-            rng,
-            sim_time: 0.0,
-            cached_alloc: None,
-            cfg,
-        })
+        let metrics = Arc::new(Metrics::new());
+        let core_cfg = OrchestratorConfig {
+            mode: Mode::Sync,
+            policy: cfg.policy,
+            t_total: cfg.t_total,
+            cycles: cfg.cycles,
+            reallocate_each_cycle: cfg.reallocate_each_cycle,
+            drop_stragglers: cfg.drop_stragglers,
+            shadow_sigma_db: cfg.shadow_sigma_db,
+            rayleigh: cfg.rayleigh,
+            seed: cfg.seed,
+            trace: false,
+        };
+        let core = OrchCore::new(scenario, core_cfg).with_metrics(metrics.clone());
+        Ok(Self { metrics, core, engine, global, train_set, eval_set, rng, cfg })
     }
 
     pub fn params(&self) -> &ParamSet {
         &self.global
     }
 
-    pub fn sim_time(&self) -> f64 {
-        self.sim_time
+    /// The cloudlet scenario (owned by the orchestration core).
+    pub fn scenario(&self) -> &Scenario {
+        &self.core.scenario
     }
 
-    fn allocation(&mut self) -> anyhow::Result<Allocation> {
-        if let (false, Some(a)) = (self.cfg.reallocate_each_cycle, &self.cached_alloc) {
-            return Ok(a.clone());
-        }
-        let problem = self.scenario.problem(self.cfg.t_total);
-        let t0 = std::time::Instant::now();
-        let alloc = self
-            .cfg
-            .policy
-            .allocator()
-            .allocate(&problem)
-            .map_err(|e| anyhow::anyhow!("allocation failed: {e}"))?;
-        self.metrics.observe("solver_seconds", t0.elapsed().as_secs_f64());
-        self.cached_alloc = Some(alloc.clone());
-        Ok(alloc)
+    pub fn sim_time(&self) -> f64 {
+        self.core.sim_time()
     }
 
     /// Number of learner updates dropped for missing deadlines so far.
@@ -173,58 +178,43 @@ impl Orchestrator {
         self.metrics.counter("stragglers_dropped")
     }
 
-    /// Run one global cycle; returns its outcome.
+    /// Run one global cycle; returns its outcome. Timing (fading,
+    /// allocation, deadline events) comes from the shared event-driven
+    /// core; this method executes the planned leases for real.
     pub fn run_cycle(&mut self, cycle: usize) -> anyhow::Result<CycleOutcome> {
-        // dynamic channels: redraw fading before this cycle's (re-)solve
-        if self.cfg.shadow_sigma_db > 0.0 || self.cfg.rayleigh {
-            let mut spec = crate::channel::ChannelSpec::default();
-            spec.shadow_sigma_db = self.cfg.shadow_sigma_db;
-            spec.rayleigh = self.cfg.rayleigh;
-            let mut frng = self.rng.child(0xFAD ^ cycle as u64);
-            self.scenario.redraw_fading(&spec, &mut frng);
-        }
-        let alloc = self.allocation()?;
-        let problem = self.scenario.problem(self.cfg.t_total);
-
-        // ---- dispatch: draw disjoint random batches (footnote 1)
-        let sizes: Vec<usize> = alloc.batches.clone();
-        let capped: Vec<usize> = {
-            // synthetic train set is full-size; batches always fit
-            let total: usize = sizes.iter().sum();
-            debug_assert!(total <= self.train_set.len());
-            sizes
-        };
-        let batches = self.train_set.draw_batches(&capped, &mut self.rng);
-
-        // ---- deadline accounting (simulated clock) BEFORE compute: a
-        // stale allocation under fading can miss deadlines; those
-        // learners' updates never reach the orchestrator in time, so we
-        // skip their (discarded) compute entirely.
-        let sim = CycleSim::from_problem(&problem);
-        let report = sim.run_cycle(&alloc, false);
-        if !report.deadline_misses.is_empty() {
+        let round = self
+            .core
+            .step_cycle(cycle)
+            .map_err(|e| anyhow::anyhow!("allocation failed: {e}"))?;
+        if !round.deadline_misses.is_empty() {
             anyhow::ensure!(
                 self.cfg.drop_stragglers,
                 "allocation missed deadlines for learners {:?} (enable drop_stragglers \
                  or reallocate_each_cycle)",
-                report.deadline_misses
+                round.deadline_misses
             );
-            self.metrics.inc("stragglers_dropped", report.deadline_misses.len() as u64);
+            self.metrics.inc("stragglers_dropped", round.deadline_misses.len() as u64);
             log::warn!(
                 "cycle {cycle}: dropping {} straggler update(s): {:?}",
-                report.deadline_misses.len(),
-                report.deadline_misses
+                round.deadline_misses.len(),
+                round.deadline_misses
             );
         }
         let dropped: std::collections::HashSet<usize> =
-            report.deadline_misses.iter().copied().collect();
+            round.deadline_misses.iter().copied().collect();
+        let alloc = &round.alloc;
 
-        // ---- local learning (real compute, fanned out over threads)
+        // ---- dispatch: draw disjoint random batches (footnote 1)
+        debug_assert!(alloc.batches.iter().sum::<usize>() <= self.train_set.len());
+        let batches = self.train_set.draw_batches(&alloc.batches, &mut self.rng);
+
+        // ---- local learning (real compute, fanned out over threads);
+        // each learner runs its own lease count τ_k (uniform in barrier
+        // mode, per-learner under an async-capable planner)
         let wall0 = std::time::Instant::now();
         let handle = self.engine.handle();
-        let arch = self.scenario.model.name.clone();
+        let arch = self.core.scenario.model.name.clone();
         let lr = self.cfg.lr;
-        let tau = alloc.tau;
         let global = &self.global;
         let train_set = &self.train_set;
         let artifact_dir = self.cfg.artifact_dir.clone();
@@ -239,10 +229,11 @@ impl Orchestrator {
                 let handle = handle.clone();
                 let man = &man;
                 let arch = arch.as_str();
+                let tau_k = alloc.tau_for(k);
                 joins.push(s.spawn(move || {
                     let mut local = global.clone();
                     local_training(
-                        &handle, man, arch, &mut local, train_set, idx, tau, lr,
+                        &handle, man, arch, &mut local, train_set, idx, tau_k, lr,
                     )?;
                     Ok((idx.len() as f64, local))
                 }));
@@ -261,22 +252,21 @@ impl Orchestrator {
         } else {
             log::warn!("cycle {cycle}: every learner missed the deadline; w unchanged");
         }
-        self.sim_time += self.cfg.t_total;
 
-        // ---- evaluate
+        // ---- evaluate (the core already advanced the simulated clock
+        // and recorded tau/makespan/updates-vs-simtime)
         let (loss, accuracy) = self.evaluate()?;
+        let sim_time = self.core.sim_time();
         self.metrics.inc("cycles", 1);
-        self.metrics.gauge("tau", alloc.tau as f64);
-        self.metrics.observe("makespan", report.makespan);
         self.metrics.observe("wall_compute_s", wall_compute_s);
-        self.metrics.record("loss_vs_simtime", self.sim_time, loss);
-        self.metrics.record("acc_vs_simtime", self.sim_time, accuracy);
+        self.metrics.record("loss_vs_simtime", sim_time, loss);
+        self.metrics.record("acc_vs_simtime", sim_time, accuracy);
 
         Ok(CycleOutcome {
             cycle,
             tau: alloc.tau,
             batches: alloc.batches.clone(),
-            makespan: report.makespan,
+            makespan: round.makespan,
             loss,
             accuracy,
             wall_compute_s,
@@ -310,7 +300,7 @@ impl Orchestrator {
         let (loss_sum, correct, weight) = eval_batches(
             &handle,
             &man,
-            &self.scenario.model.name,
+            &self.core.scenario.model.name,
             &self.global,
             &self.eval_set,
             &idx,

@@ -74,7 +74,7 @@ pub fn cycle_energy(
     assert_eq!(learners.len(), alloc.batches.len());
     let mut per_learner = Vec::with_capacity(learners.len());
     let mut orch_tx = 0.0;
-    for (l, &dk) in learners.iter().zip(&alloc.batches) {
+    for (k, (l, &dk)) in learners.iter().zip(&alloc.batches).enumerate() {
         if dk == 0 {
             per_learner.push(LearnerEnergy { tx_j: 0.0, compute_j: 0.0 });
             continue;
@@ -84,8 +84,9 @@ pub fn cycle_energy(
         orch_tx += p_tx * l.t_send(model, dk);
         // uplink: model back (learner pays)
         let tx_j = p_tx * l.t_receive(model, dk);
-        // compute: κ·f_eff·(total flops) with flops ≈ cycles·fpc folded in
-        let flops = alloc.tau as f64 * model.iteration_flops(dk);
+        // compute: κ·f_eff·(total flops) over this learner's own τ_k
+        // (uniform τ in the synchronous case)
+        let flops = alloc.tau_for(k) as f64 * model.iteration_flops(dk);
         let cycles = flops / l.compute.flops_per_cycle;
         let compute_j = kappa * l.compute.freq_hz * l.compute.freq_hz * cycles;
         per_learner.push(LearnerEnergy { tx_j, compute_j });
@@ -93,9 +94,12 @@ pub fn cycle_energy(
     EnergyReport { per_learner, orchestrator_tx_j: orch_tx }
 }
 
-/// Find the largest τ ≤ `alloc.tau` whose cycle energy fits a learner-
-/// side budget (J per cycle), shrinking iterations — the simplest
-/// energy-aware post-processing of an allocation (extension experiment).
+/// Shrink iteration counts until the learner-side cycle energy fits a
+/// budget (J per cycle) — the simplest energy-aware post-processing of
+/// an allocation (extension experiment). Per-learner `τ_k` aware: async
+/// allocations shrink every learner's lease count in lockstep (keeping
+/// `tau = min_k τ_k` consistent); synchronous allocations shrink the
+/// shared τ as before.
 pub fn cap_tau_to_energy_budget(
     learners: &[Learner],
     model: &ModelSpec,
@@ -105,12 +109,36 @@ pub fn cap_tau_to_energy_budget(
     kappa: f64,
 ) -> Allocation {
     let mut out = alloc.clone();
-    while out.tau > 1 {
+    loop {
         let e = cycle_energy(learners, model, &out, kappa);
         if e.learner_total() <= budget_j {
             break;
         }
-        out.tau -= 1;
+        if out.tau_k.is_empty() {
+            if out.tau <= 1 {
+                break;
+            }
+            out.tau -= 1;
+        } else {
+            let mut reduced = false;
+            for t in &mut out.tau_k {
+                if *t > 1 {
+                    *t -= 1;
+                    reduced = true;
+                }
+            }
+            if !reduced {
+                break;
+            }
+            out.tau = out
+                .tau_k
+                .iter()
+                .zip(&out.batches)
+                .filter(|(_, &d)| d > 0)
+                .map(|(&t, _)| t)
+                .min()
+                .unwrap_or(out.tau);
+        }
     }
     debug_assert!(out.is_feasible(problem));
     out
@@ -188,6 +216,36 @@ mod tests {
         assert!(capped.is_feasible(&p));
         let e = cycle_energy(&s.learners, &s.model, &capped, DEFAULT_KAPPA);
         assert!(e.learner_total() <= budget * 1.001 || capped.tau == 1);
+    }
+
+    #[test]
+    fn energy_budget_caps_per_learner_tau_k() {
+        // async allocations shrink every lease count, not the ignored
+        // uniform τ
+        let (s, _, p) = setup(8, 30.0);
+        let a = Policy::AsyncEta.allocator().allocate(&p).unwrap();
+        assert!(!a.tau_k.is_empty());
+        let unbounded = cycle_energy(&s.learners, &s.model, &a, DEFAULT_KAPPA).learner_total();
+        let budget = unbounded / 3.0;
+        let capped = cap_tau_to_energy_budget(&s.learners, &s.model, &p, &a, budget, DEFAULT_KAPPA);
+        let e = cycle_energy(&s.learners, &s.model, &capped, DEFAULT_KAPPA);
+        assert!(e.learner_total() < unbounded);
+        assert!(capped.is_feasible(&p));
+        // tau stays the min of the shrunken per-learner counts
+        let min_tau = capped
+            .tau_k
+            .iter()
+            .zip(&capped.batches)
+            .filter(|(_, &d)| d > 0)
+            .map(|(&t, _)| t)
+            .min()
+            .unwrap();
+        assert_eq!(capped.tau, min_tau);
+        assert!(
+            e.learner_total() <= budget * 1.001 || capped.tau_k.iter().all(|&t| t <= 1),
+            "energy {} budget {budget}",
+            e.learner_total()
+        );
     }
 
     #[test]

@@ -1,17 +1,21 @@
 //! # MELkit — Mobile Edge Learning in Rust + JAX + Pallas
 //!
 //! Production-quality reproduction of *“Adaptive Task Allocation for
-//! Mobile Edge Learning”* (Mohammad & Sorour, 2018). An **orchestrator**
-//! distributes one learning task (dataset batches + model parameters)
-//! over `K` heterogeneous wireless edge **learners**; each learner runs
-//! `τ` local SGD iterations per **global cycle**, then the orchestrator
-//! aggregates parameter matrices (eq. 5 of the paper). The paper's
-//! contribution — adaptive batch allocation maximizing `τ` under the
-//! global-cycle clock `T` — is a pluggable [`alloc::TaskAllocator`]
-//! policy of the coordinator.
+//! Mobile Edge Learning”* (Mohammad & Sorour, 2018), grown toward the
+//! asynchronous follow-up line (arXiv:1905.01656, arXiv:2012.00143). An
+//! **orchestrator** distributes one learning task (dataset batches +
+//! model parameters) over `K` heterogeneous wireless edge **learners**;
+//! each learner runs `τ_k` local SGD iterations per cycle, then the
+//! orchestrator aggregates parameter matrices (eq. 5 of the paper). The
+//! paper's contribution — adaptive batch allocation maximizing `τ`
+//! under the global-cycle clock `T` — is a pluggable
+//! [`alloc::TaskAllocator`] policy.
 //!
 //! Layering (see `DESIGN.md`):
-//! * **L3 (this crate)** — coordinator, allocation solvers, wireless
+//! * **L3 (this crate)** — the [`orchestrator`] event-driven core
+//!   (learner lifecycle state machine + [`orchestrator::CyclePlanner`]
+//!   policies, barrier-sync and staggered-async), the [`coordinator`]
+//!   real-training `Trainer` on top of it, allocation solvers, wireless
 //!   channel + compute substrates, discrete-event simulator, PJRT
 //!   runtime, metrics, CLI.
 //! * **L2/L1 (build-time Python)** — JAX MLP fwd/bwd over Pallas fused
@@ -28,6 +32,16 @@
 //!     println!("{policy:?}: tau={}", a.tau);
 //! }
 //! ```
+//!
+//! Event-driven async orchestration (staggered per-learner cycles):
+//! ```no_run
+//! use mel::orchestrator::{Mode, Orchestrator, OrchestratorConfig};
+//! use mel::prelude::*;
+//! let scenario = Scenario::random_cloudlet(&CloudletConfig::pedestrian(10), 42);
+//! let cfg = OrchestratorConfig { mode: Mode::Async, cycles: 8, ..Default::default() };
+//! let report = Orchestrator::new(scenario, cfg).run().unwrap();
+//! println!("{} updates applied in {}s", report.updates_applied, report.horizon);
+//! ```
 
 pub mod util;
 pub mod testkit;
@@ -42,6 +56,7 @@ pub mod scenario;
 pub mod alloc;
 pub mod energy;
 pub mod sim;
+pub mod orchestrator;
 pub mod runtime;
 pub mod coordinator;
 pub mod metrics;
@@ -52,10 +67,11 @@ pub mod prelude {
     pub use crate::alloc::{Allocation, AllocError, Policy, Problem, TaskAllocator};
     pub use crate::channel::{Link, PathLoss};
     pub use crate::compute::ComputeProfile;
-    pub use crate::coordinator::{Orchestrator, TrainConfig};
+    pub use crate::coordinator::{Orchestrator, TrainConfig, Trainer};
     pub use crate::dataset::DatasetSpec;
     pub use crate::learner::Learner;
     pub use crate::models::ModelSpec;
+    pub use crate::orchestrator::{CyclePlanner, Mode, OrchestratorConfig};
     pub use crate::scenario::{CloudletConfig, Scenario};
     pub use crate::util::rng::Pcg64;
 }

@@ -91,6 +91,19 @@ impl Metrics {
         g.series.entry(series.into()).or_default().push((x, y));
     }
 
+    /// Increment `counter` by `by` and record the running total against
+    /// simulated time `t` in `series` — the index that stays meaningful
+    /// for event-driven (staggered, per-learner) orchestration, where
+    /// "cycle number" is no longer a shared clock. Returns the new total.
+    pub fn inc_series(&self, counter: &str, series: &str, t: f64, by: u64) -> u64 {
+        let mut g = self.inner.lock().unwrap();
+        let c = g.counters.entry(counter.into()).or_default();
+        *c += by;
+        let total = *c;
+        g.series.entry(series.into()).or_default().push((t, total as f64));
+        total
+    }
+
     pub fn counter(&self, name: &str) -> u64 {
         self.inner.lock().unwrap().counters.get(name).copied().unwrap_or(0)
     }
@@ -174,6 +187,15 @@ mod tests {
             m.observe("latency", i as f64);
         }
         assert_eq!(m.summary_mean("latency"), Some(4.5));
+    }
+
+    #[test]
+    fn inc_series_accumulates_against_sim_time() {
+        let m = Metrics::new();
+        assert_eq!(m.inc_series("updates", "updates_vs_t", 1.5, 2), 2);
+        assert_eq!(m.inc_series("updates", "updates_vs_t", 3.0, 1), 3);
+        assert_eq!(m.counter("updates"), 3);
+        assert_eq!(m.series("updates_vs_t"), vec![(1.5, 2.0), (3.0, 3.0)]);
     }
 
     #[test]

@@ -1,0 +1,701 @@
+//! Event-driven orchestration core — the state machine shared by the
+//! discrete-event simulator and the real-training coordinator.
+//!
+//! The seed reproduced the paper's barrier-synchronous loop by iterating
+//! learners in lockstep. This module replaces that with a lifecycle
+//! state machine driven by [`crate::sim::events::EventQueue`]: every
+//! learner round trip is a sequence of [`LearnerEvent`]s
+//! (`Dispatched → SendComplete → IterationDone* → Uploaded`, or
+//! `DeadlineMissed`), and a pluggable [`CyclePlanner`] decides — on each
+//! completion event — whether the learner waits for the barrier
+//! (synchronous mode, bit-for-bit the paper's eq. (12)/(13) timeline) or
+//! is re-dispatched immediately with its own `τ_k` and staggered
+//! deadline (asynchronous mode, arXiv:1905.01656 / arXiv:2012.00143).
+//!
+//! Two entry points:
+//! * [`Orchestrator::step_cycle`] — one synchronous global cycle on a
+//!   cycle-local clock; the coordinator ([`crate::coordinator::Trainer`])
+//!   drives its real PJRT training through this, so simulation and real
+//!   training share one timing/allocation code path.
+//! * [`Orchestrator::run`] — a full horizon in either mode, returning
+//!   the per-round outcomes, every [`UpdateRecord`] (with staleness),
+//!   and the event timeline.
+//!
+//! Metrics are keyed by **simulated time**, not cycle index:
+//! `updates_vs_simtime` and `staleness_vs_simtime` series accumulate at
+//! event timestamps, which is the only index that stays meaningful once
+//! cycles are staggered per learner.
+
+pub mod planner;
+
+pub use planner::{
+    leases_from_alloc, AsyncEtaPlanner, CyclePlanner, Lease, Redispatch, RoundPlan, SyncPlanner,
+};
+
+use std::sync::Arc;
+
+use crate::alloc::{Allocation, AllocError, Policy, Problem, TIME_EPS};
+use crate::channel::ChannelSpec;
+use crate::metrics::Metrics;
+use crate::scenario::Scenario;
+use crate::sim::events::EventQueue;
+use crate::util::rng::Pcg64;
+
+/// Learner lifecycle events the orchestrator consumes.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum LearnerEvent {
+    /// Model + batch handed to the learner's downlink.
+    Dispatched { learner: usize },
+    /// Downlink transfer done (eq. 9); local SGD starts.
+    SendComplete { learner: usize },
+    /// One local iteration finished (1-based; traced runs only).
+    IterationDone { learner: usize, iter: u32 },
+    /// Updated parameters received by the orchestrator (eq. 11/13).
+    Uploaded { learner: usize },
+    /// The learner's lease deadline passed before its upload landed.
+    DeadlineMissed { learner: usize },
+}
+
+impl LearnerEvent {
+    pub fn learner(&self) -> usize {
+        match *self {
+            LearnerEvent::Dispatched { learner }
+            | LearnerEvent::SendComplete { learner }
+            | LearnerEvent::IterationDone { learner, .. }
+            | LearnerEvent::Uploaded { learner }
+            | LearnerEvent::DeadlineMissed { learner } => learner,
+        }
+    }
+}
+
+/// Dispatch mode of the orchestration core.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Mode {
+    /// Global barrier every `T` seconds — the paper's loop.
+    Sync,
+    /// Per-learner staggered leases, immediate re-dispatch on upload.
+    Async,
+}
+
+/// Orchestration-core configuration (the timing/planning half of the
+/// coordinator's `TrainConfig`).
+#[derive(Debug, Clone)]
+pub struct OrchestratorConfig {
+    pub mode: Mode,
+    /// Allocation policy (sync: the barrier solve; async: the batch
+    /// split the planner staggers).
+    pub policy: Policy,
+    /// Global-cycle clock `T` (sync) / per-lease clock (async), seconds.
+    pub t_total: f64,
+    /// Number of global cycles (sync); the async horizon is
+    /// `cycles × t_total` simulated seconds.
+    pub cycles: usize,
+    /// Re-solve the allocation every barrier (sync mode).
+    pub reallocate_each_cycle: bool,
+    /// Count deadline-missing uploads as dropped (not applied).
+    pub drop_stragglers: bool,
+    /// Per-redraw log-normal shadowing sigma (dB); 0 = static channels.
+    pub shadow_sigma_db: f64,
+    /// Rayleigh fading redraws.
+    pub rayleigh: bool,
+    /// Seed for the fading process.
+    pub seed: u64,
+    /// Record the full event timeline (adds O(K·τ) iteration events).
+    pub trace: bool,
+}
+
+impl Default for OrchestratorConfig {
+    fn default() -> Self {
+        Self {
+            mode: Mode::Sync,
+            policy: Policy::Analytical,
+            t_total: 30.0,
+            cycles: 20,
+            reallocate_each_cycle: false,
+            drop_stragglers: false,
+            shadow_sigma_db: 0.0,
+            rayleigh: false,
+            seed: 1,
+            trace: false,
+        }
+    }
+}
+
+impl OrchestratorConfig {
+    /// Derive dispatch mode, lease clock, straggler handling, and fading
+    /// knobs from a scenario's [`crate::scenario::CloudletConfig`]
+    /// (including its JSON-loadable `async` block). `seed` drives the
+    /// fading process and must match the run's scenario seed — defaulting
+    /// it silently would correlate "different-seed" runs.
+    pub fn from_cloudlet(
+        c: &crate::scenario::CloudletConfig,
+        policy: Policy,
+        t_total: f64,
+        cycles: usize,
+        seed: u64,
+    ) -> Self {
+        let asy = &c.async_mode;
+        Self {
+            mode: if asy.enabled { Mode::Async } else { Mode::Sync },
+            policy,
+            t_total: if asy.enabled && asy.lease_s > 0.0 { asy.lease_s } else { t_total },
+            cycles,
+            // the AsyncSpec default (drop=true) only applies to async
+            // dispatch; barrier mode keeps the core's sync default
+            drop_stragglers: asy.enabled && asy.drop_stragglers,
+            shadow_sigma_db: c.channel.shadow_sigma_db,
+            rayleigh: c.channel.rayleigh,
+            seed,
+            ..Self::default()
+        }
+    }
+}
+
+/// Outcome of one synchronous global cycle (the timing half of the
+/// coordinator's `CycleOutcome`).
+#[derive(Debug, Clone)]
+pub struct RoundOutcome {
+    pub cycle: usize,
+    /// The enacted allocation (carries `tau`, per-learner `tau_k`, and
+    /// `batches`).
+    pub alloc: Allocation,
+    /// Cycle-local completion times `t_k` (0 for zero-batch learners) —
+    /// identical floats to the eq. (13) closed form.
+    pub completion: Vec<f64>,
+    /// `max_k t_k`, including deadline-missing learners.
+    pub makespan: f64,
+    pub deadline_misses: Vec<usize>,
+    /// Absolute-time event log (empty unless `trace`).
+    pub timeline: Vec<(f64, LearnerEvent)>,
+}
+
+/// One completed (or missed) learner round trip.
+#[derive(Debug, Clone)]
+pub struct UpdateRecord {
+    pub learner: usize,
+    pub dispatched_at: f64,
+    pub uploaded_at: f64,
+    pub tau: u64,
+    pub batch: usize,
+    /// Updates from other learners applied to the global model between
+    /// this learner's dispatch and its upload (0 in barrier mode).
+    pub staleness: u64,
+    pub missed_deadline: bool,
+}
+
+/// Full-run report of the event-driven core.
+#[derive(Debug, Clone)]
+pub struct OrchestratorReport {
+    /// Per-barrier outcomes (sync mode; empty in async mode).
+    pub rounds: Vec<RoundOutcome>,
+    /// Every learner round trip, in upload order.
+    pub updates: Vec<UpdateRecord>,
+    /// Absolute-time event log (iteration events only when `trace`).
+    pub timeline: Vec<(f64, LearnerEvent)>,
+    /// Simulated horizon covered, seconds.
+    pub horizon: f64,
+    /// Updates applied to the global model (excludes dropped stragglers).
+    pub updates_applied: u64,
+}
+
+/// The event-driven orchestrator state machine.
+pub struct Orchestrator {
+    pub scenario: Scenario,
+    pub cfg: OrchestratorConfig,
+    pub metrics: Arc<Metrics>,
+    planner: Box<dyn CyclePlanner>,
+    fade_rng: Pcg64,
+    cached: Option<Allocation>,
+    sim_time: f64,
+}
+
+impl Orchestrator {
+    /// Build with the mode's default planner: [`SyncPlanner`] for
+    /// [`Mode::Sync`], [`AsyncEtaPlanner`] for [`Mode::Async`].
+    pub fn new(scenario: Scenario, cfg: OrchestratorConfig) -> Self {
+        let planner: Box<dyn CyclePlanner> = match cfg.mode {
+            Mode::Sync => Box::new(SyncPlanner::new(cfg.policy)),
+            Mode::Async => Box::new(AsyncEtaPlanner::new(cfg.policy)),
+        };
+        Self::with_planner(scenario, cfg, planner)
+    }
+
+    /// Build with a custom planner.
+    pub fn with_planner(
+        scenario: Scenario,
+        cfg: OrchestratorConfig,
+        planner: Box<dyn CyclePlanner>,
+    ) -> Self {
+        let fade_rng = Pcg64::new(cfg.seed, 0xFAD);
+        Self {
+            scenario,
+            metrics: Arc::new(Metrics::new()),
+            planner,
+            fade_rng,
+            cached: None,
+            sim_time: 0.0,
+            cfg,
+        }
+    }
+
+    /// Share a metrics registry (e.g. the coordinator's).
+    pub fn with_metrics(mut self, metrics: Arc<Metrics>) -> Self {
+        self.metrics = metrics;
+        self
+    }
+
+    /// Simulated clock: sum of completed cycles × T (sync) or the run
+    /// horizon (async).
+    pub fn sim_time(&self) -> f64 {
+        self.sim_time
+    }
+
+    /// Simulated horizon of a full [`Orchestrator::run`].
+    pub fn horizon(&self) -> f64 {
+        self.cfg.cycles as f64 * self.cfg.t_total
+    }
+
+    /// Redraw fading on every link when dynamic channels are enabled.
+    fn maybe_refade(&mut self) {
+        if self.cfg.shadow_sigma_db > 0.0 || self.cfg.rayleigh {
+            let mut spec = ChannelSpec::default();
+            spec.shadow_sigma_db = self.cfg.shadow_sigma_db;
+            spec.rayleigh = self.cfg.rayleigh;
+            self.scenario.redraw_fading(&spec, &mut self.fade_rng);
+        }
+    }
+
+    /// Solve (or reuse) the round's allocation and leases.
+    fn round_plan(&mut self, problem: &Problem) -> Result<(Allocation, Vec<Lease>), AllocError> {
+        if !self.cfg.reallocate_each_cycle {
+            if let Some(a) = &self.cached {
+                let leases = leases_from_alloc(a, 0.0, problem.t_total);
+                return Ok((a.clone(), leases));
+            }
+        }
+        let t0 = std::time::Instant::now();
+        let plan = self.planner.plan_round(problem, 0.0)?;
+        self.metrics.observe("solver_seconds", t0.elapsed().as_secs_f64());
+        self.cached = Some(plan.alloc.clone());
+        Ok((plan.alloc, plan.leases))
+    }
+
+    /// Run one synchronous global cycle through the event queue on a
+    /// cycle-local clock. Fading (when enabled) is redrawn before the
+    /// (re-)solve, as the seed coordinator did.
+    pub fn step_cycle(&mut self, cycle: usize) -> Result<RoundOutcome, AllocError> {
+        self.maybe_refade();
+        let problem = self.scenario.problem(self.cfg.t_total);
+        let (alloc, leases) = self.round_plan(&problem)?;
+        let round_start = self.sim_time;
+
+        let mut q: EventQueue<LearnerEvent> = EventQueue::new();
+        let mut timeline = Vec::new();
+        for lease in &leases {
+            schedule_lease(&mut q, &problem, lease, 0.0, self.cfg.trace);
+            if self.cfg.trace {
+                timeline.push((round_start, LearnerEvent::Dispatched { learner: lease.learner }));
+            }
+        }
+
+        let mut completion = vec![0.0f64; problem.k()];
+        while let Some((t, ev)) = q.pop() {
+            if let LearnerEvent::Uploaded { learner } = ev {
+                completion[learner] = t;
+            }
+            if self.cfg.trace {
+                timeline.push((round_start + t, ev));
+            }
+        }
+        let makespan = completion.iter().copied().fold(0.0, f64::max);
+        let deadline_misses: Vec<usize> = completion
+            .iter()
+            .enumerate()
+            .filter(|(_, &t)| t > self.cfg.t_total + TIME_EPS)
+            .map(|(k, _)| k)
+            .collect();
+        if self.cfg.trace {
+            for &k in &deadline_misses {
+                timeline.push((round_start + completion[k], LearnerEvent::DeadlineMissed {
+                    learner: k,
+                }));
+            }
+        }
+
+        self.sim_time = round_start + self.cfg.t_total;
+        // mirror run_sync's accounting: misses are only *dropped* (not
+        // applied) when drop_stragglers is on
+        let applied = if self.cfg.drop_stragglers {
+            (leases.len() - deadline_misses.len()) as u64
+        } else {
+            leases.len() as u64
+        };
+        self.metrics.gauge("tau", alloc.tau as f64);
+        self.metrics.observe("makespan", makespan);
+        if !deadline_misses.is_empty() {
+            self.metrics.inc("deadline_misses", deadline_misses.len() as u64);
+        }
+        self.metrics.inc_series("updates_applied", "updates_vs_simtime", self.sim_time, applied);
+
+        Ok(RoundOutcome { cycle, alloc, completion, makespan, deadline_misses, timeline })
+    }
+
+    /// Run the configured horizon in the configured mode.
+    pub fn run(&mut self) -> Result<OrchestratorReport, AllocError> {
+        match self.cfg.mode {
+            Mode::Sync => self.run_sync(),
+            Mode::Async => self.run_async(),
+        }
+    }
+
+    fn run_sync(&mut self) -> Result<OrchestratorReport, AllocError> {
+        let mut rounds = Vec::with_capacity(self.cfg.cycles);
+        let mut updates = Vec::new();
+        let mut timeline = Vec::new();
+        let mut applied = 0u64;
+        for cycle in 0..self.cfg.cycles {
+            let start = self.sim_time;
+            let out = self.step_cycle(cycle)?;
+            for (k, &d) in out.alloc.batches.iter().enumerate() {
+                if d == 0 {
+                    continue;
+                }
+                let missed = out.deadline_misses.contains(&k);
+                if !missed || !self.cfg.drop_stragglers {
+                    applied += 1;
+                }
+                updates.push(UpdateRecord {
+                    learner: k,
+                    dispatched_at: start,
+                    uploaded_at: start + out.completion[k],
+                    tau: out.alloc.tau_for(k),
+                    batch: d,
+                    staleness: 0,
+                    missed_deadline: missed,
+                });
+            }
+            timeline.extend(out.timeline.iter().cloned());
+            rounds.push(out);
+        }
+        Ok(OrchestratorReport {
+            rounds,
+            updates,
+            timeline,
+            horizon: self.sim_time,
+            updates_applied: applied,
+        })
+    }
+
+    fn run_async(&mut self) -> Result<OrchestratorReport, AllocError> {
+        let horizon = self.horizon();
+        let k_n = self.scenario.k();
+        self.maybe_refade();
+        let mut problem = self.scenario.problem(self.cfg.t_total);
+        let plan = self.planner.plan_round(&problem, 0.0)?;
+
+        let mut q: EventQueue<LearnerEvent> = EventQueue::new();
+        let mut active: Vec<Option<Lease>> = vec![None; k_n];
+        let mut dispatched_at = vec![0.0f64; k_n];
+        let mut snapshot = vec![0u64; k_n];
+        let mut applied = 0u64;
+        let mut updates = Vec::new();
+        let mut timeline = Vec::new();
+
+        for lease in plan.leases {
+            schedule_lease(&mut q, &problem, &lease, 0.0, self.cfg.trace);
+            timeline.push((0.0, LearnerEvent::Dispatched { learner: lease.learner }));
+            active[lease.learner] = Some(lease);
+        }
+
+        let fading = self.cfg.shadow_sigma_db > 0.0 || self.cfg.rayleigh;
+        while let Some((t, ev)) = q.pop() {
+            // the run's accounting window closes at the horizon: work in
+            // flight past it is not "delivered within the horizon" (keeps
+            // the sync-vs-async comparison honest)
+            if t > horizon + TIME_EPS {
+                break;
+            }
+            match ev {
+                LearnerEvent::Uploaded { learner } => {
+                    let lease = match active[learner].take() {
+                        Some(l) => l,
+                        None => continue,
+                    };
+                    let missed = t > lease.deadline + TIME_EPS;
+                    let staleness = applied - snapshot[learner];
+                    if missed {
+                        timeline.push((t, LearnerEvent::DeadlineMissed { learner }));
+                        self.metrics.inc("deadline_misses", 1);
+                    } else {
+                        timeline.push((t, ev));
+                    }
+                    if !missed || !self.cfg.drop_stragglers {
+                        applied += 1;
+                        self.metrics.observe("staleness", staleness as f64);
+                        self.metrics.record("staleness_vs_simtime", t, staleness as f64);
+                        self.metrics.inc_series(
+                            "updates_applied",
+                            "updates_vs_simtime",
+                            t,
+                            1,
+                        );
+                        self.metrics.inc(&format!("updates_l{learner}"), 1);
+                    }
+                    updates.push(UpdateRecord {
+                        learner,
+                        dispatched_at: dispatched_at[learner],
+                        uploaded_at: t,
+                        tau: lease.tau,
+                        batch: lease.batch,
+                        staleness,
+                        missed_deadline: missed,
+                    });
+
+                    if t < horizon {
+                        // channel state moves between leases, not within;
+                        // with static channels the problem cannot change
+                        if fading {
+                            self.maybe_refade();
+                            problem = self.scenario.problem(self.cfg.t_total);
+                        }
+                        match self.planner.on_upload(learner, &problem, t) {
+                            Redispatch::Immediate(lease) => {
+                                schedule_lease(&mut q, &problem, &lease, t, self.cfg.trace);
+                                timeline.push((t, LearnerEvent::Dispatched { learner }));
+                                snapshot[learner] = applied;
+                                dispatched_at[learner] = t;
+                                active[learner] = Some(lease);
+                            }
+                            Redispatch::AwaitBarrier => {}
+                        }
+                    }
+                }
+                LearnerEvent::SendComplete { .. } | LearnerEvent::IterationDone { .. } => {
+                    if self.cfg.trace {
+                        timeline.push((t, ev));
+                    }
+                }
+                // Dispatched / DeadlineMissed are emitted by the
+                // orchestrator itself, never scheduled.
+                _ => {}
+            }
+        }
+
+        self.sim_time = horizon;
+        Ok(OrchestratorReport {
+            rounds: Vec::new(),
+            updates,
+            timeline,
+            horizon,
+            updates_applied: applied,
+        })
+    }
+}
+
+/// Schedule one lease's lifecycle events at `start` (eq. 12/13 phase
+/// times from the *current* channel coefficients). Iteration events are
+/// only scheduled when tracing — they never move the completion time.
+fn schedule_lease(
+    q: &mut EventQueue<LearnerEvent>,
+    problem: &Problem,
+    lease: &Lease,
+    start: f64,
+    trace: bool,
+) {
+    let c = &problem.coeffs[lease.learner];
+    let d = lease.batch as f64;
+    let learner = lease.learner;
+    let send_end = c.c1 * d + c.c0 / 2.0; // downlink half of C0
+    q.schedule(start + send_end, LearnerEvent::SendComplete { learner });
+    if trace && lease.tau <= 100_000 {
+        let iter_t = c.c2 * d;
+        for i in 1..=lease.tau as u32 {
+            q.schedule(
+                start + send_end + iter_t * i as f64,
+                LearnerEvent::IterationDone { learner, iter: i },
+            );
+        }
+    }
+    q.schedule(start + c.time(lease.tau as f64, d), LearnerEvent::Uploaded { learner });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::scenario::CloudletConfig;
+    use crate::sim::CycleSim;
+
+    fn scenario(k: usize, seed: u64) -> Scenario {
+        Scenario::random_cloudlet(&CloudletConfig::pedestrian(k), seed)
+    }
+
+    fn sync_cfg(cycles: usize) -> OrchestratorConfig {
+        OrchestratorConfig {
+            mode: Mode::Sync,
+            policy: Policy::Analytical,
+            t_total: 30.0,
+            cycles,
+            ..OrchestratorConfig::default()
+        }
+    }
+
+    #[test]
+    fn sync_step_matches_closed_form_cycle_sim() {
+        let s = scenario(8, 1);
+        let problem = s.problem(30.0);
+        let alloc = Policy::Analytical.allocator().allocate(&problem).unwrap();
+        let reference = CycleSim::from_problem(&problem).run_cycle(&alloc, false);
+
+        let mut orch = Orchestrator::new(s, sync_cfg(1));
+        let out = orch.step_cycle(0).unwrap();
+        assert_eq!(out.alloc.tau, alloc.tau);
+        assert_eq!(out.alloc.batches, alloc.batches);
+        // bit-for-bit: same float expressions on both paths
+        assert_eq!(out.makespan, reference.makespan);
+        assert_eq!(out.completion, reference.completion);
+        assert_eq!(out.deadline_misses, reference.deadline_misses);
+    }
+
+    #[test]
+    fn sync_run_advances_simtime_and_counts_updates() {
+        let mut orch = Orchestrator::new(scenario(5, 2), sync_cfg(4));
+        let report = orch.run().unwrap();
+        assert_eq!(report.rounds.len(), 4);
+        assert_eq!(orch.sim_time(), 4.0 * 30.0);
+        // every learner uploads once per cycle, staleness 0 at a barrier
+        assert_eq!(report.updates.len(), 4 * 5);
+        assert!(report.updates.iter().all(|u| u.staleness == 0 && !u.missed_deadline));
+        assert_eq!(report.updates_applied, 20);
+        assert_eq!(orch.metrics.counter("updates_applied"), 20);
+        // updates are keyed by simulated time
+        let series = orch.metrics.series("updates_vs_simtime");
+        assert_eq!(series.len(), 4);
+        assert_eq!(series[0], (30.0, 5.0));
+        assert_eq!(series[3], (120.0, 20.0));
+    }
+
+    #[test]
+    fn sync_trace_timeline_orders_lifecycle() {
+        let mut cfg = sync_cfg(1);
+        cfg.trace = true;
+        let mut orch = Orchestrator::new(scenario(3, 3), cfg);
+        let out = orch.step_cycle(0).unwrap();
+        assert!(!out.timeline.is_empty());
+        // time-ordered (deadline-miss annotations append at the end)
+        let uploads: Vec<f64> = out
+            .timeline
+            .iter()
+            .filter(|(_, e)| matches!(e, LearnerEvent::Uploaded { .. }))
+            .map(|(t, _)| *t)
+            .collect();
+        assert_eq!(uploads.len(), 3);
+        // per learner: Dispatched, SendComplete, τ iterations, upload
+        let k0: Vec<&(f64, LearnerEvent)> =
+            out.timeline.iter().filter(|(_, e)| e.learner() == 0).collect();
+        assert!(matches!(k0[0].1, LearnerEvent::Dispatched { .. }));
+        assert!(matches!(k0[1].1, LearnerEvent::SendComplete { .. }));
+        assert_eq!(k0.len() as u64, 3 + out.alloc.tau_for(0));
+    }
+
+    #[test]
+    fn async_run_staggers_and_tracks_staleness() {
+        let s = scenario(6, 4);
+        let cfg = OrchestratorConfig {
+            mode: Mode::Async,
+            policy: Policy::Eta,
+            t_total: 30.0,
+            cycles: 4,
+            ..OrchestratorConfig::default()
+        };
+        let mut orch = Orchestrator::new(s, cfg);
+        let report = orch.run().unwrap();
+        assert_eq!(report.horizon, 120.0);
+        // no barrier: each learner cycles at its own cadence ⇒ at least
+        // one update per learner per lease window
+        assert!(report.updates_applied >= 4 * 6, "{}", report.updates_applied);
+        // staggered deadlines: upload times are not clustered on the
+        // barrier grid — some learner uploads strictly inside a window
+        assert!(report
+            .updates
+            .iter()
+            .any(|u| u.uploaded_at % 30.0 > 1e-6 && u.uploaded_at % 30.0 < 30.0 - 1e-6));
+        // staleness observed: with heterogeneous cadences someone must
+        // have applied another learner's update mid-flight
+        assert!(report.updates.iter().any(|u| u.staleness > 0));
+        // per-learner τ_k really differ across the pool
+        let mut taus: Vec<u64> = report.updates.iter().map(|u| u.tau).collect();
+        taus.dedup();
+        assert!(taus.len() > 1, "expected heterogeneous per-learner τ_k");
+        // metrics keyed by sim time, monotone in both axes
+        let series = orch.metrics.series("updates_vs_simtime");
+        assert_eq!(series.len() as u64, report.updates_applied);
+        assert!(series.windows(2).all(|w| w[0].0 <= w[1].0 && w[0].1 < w[1].1));
+    }
+
+    #[test]
+    fn async_sync_same_allocation_when_pool_homogeneous_split() {
+        // async with an adaptive split keeps the sync batches
+        let s = scenario(6, 5);
+        let p = s.problem(30.0);
+        let sync_alloc = Policy::Analytical.allocator().allocate(&p).unwrap();
+        let cfg = OrchestratorConfig {
+            mode: Mode::Async,
+            policy: Policy::Analytical,
+            cycles: 2,
+            ..OrchestratorConfig::default()
+        };
+        let mut orch = Orchestrator::new(s, cfg);
+        let report = orch.run().unwrap();
+        for u in &report.updates {
+            assert_eq!(u.batch, sync_alloc.batches[u.learner]);
+            assert!(u.tau >= sync_alloc.tau);
+        }
+    }
+
+    #[test]
+    fn config_from_cloudlet_honors_async_block() {
+        let mut c = CloudletConfig::pedestrian(4);
+        c.async_mode.enabled = true;
+        c.async_mode.lease_s = 12.0;
+        c.async_mode.drop_stragglers = false;
+        c.channel.rayleigh = true;
+        let cfg = OrchestratorConfig::from_cloudlet(&c, Policy::Eta, 30.0, 5, 99);
+        assert_eq!(cfg.mode, Mode::Async);
+        assert_eq!(cfg.t_total, 12.0);
+        assert!(!cfg.drop_stragglers);
+        assert!(cfg.rayleigh);
+        assert_eq!(cfg.seed, 99);
+        // sync default when the block is absent/disabled
+        let cfg2 = OrchestratorConfig::from_cloudlet(
+            &CloudletConfig::pedestrian(4),
+            Policy::Eta,
+            30.0,
+            5,
+            1,
+        );
+        assert_eq!(cfg2.mode, Mode::Sync);
+        assert_eq!(cfg2.t_total, 30.0);
+    }
+
+    #[test]
+    fn reallocation_cache_semantics() {
+        // static channels + no reallocation ⇒ one solve across cycles
+        let mut orch = Orchestrator::new(scenario(4, 6), sync_cfg(3));
+        orch.run().unwrap();
+        assert_eq!(
+            orch.metrics.to_json().get("summaries").unwrap().get("solver_seconds").unwrap()
+                .get("count").unwrap().as_u64().unwrap(),
+            1
+        );
+        // with reallocation: one solve per cycle
+        let mut cfg = sync_cfg(3);
+        cfg.reallocate_each_cycle = true;
+        let mut orch2 = Orchestrator::new(scenario(4, 6), cfg);
+        orch2.run().unwrap();
+        assert_eq!(
+            orch2.metrics.to_json().get("summaries").unwrap().get("solver_seconds").unwrap()
+                .get("count").unwrap().as_u64().unwrap(),
+            3
+        );
+    }
+}

@@ -1,0 +1,255 @@
+//! Cycle planning — the policy layer of the event-driven orchestrator.
+//!
+//! A [`CyclePlanner`] makes the two decisions the orchestrator core
+//! refuses to hard-code:
+//!
+//! 1. **`plan_round`** — given the current [`Problem`], what work order
+//!    ([`Lease`]) does each learner get (batch `d_k`, iterations `τ_k`,
+//!    deadline)?
+//! 2. **`on_upload`** — when a learner's update arrives, is it handed a
+//!    fresh lease *immediately* (asynchronous, staggered cycles) or does
+//!    it *wait for the barrier* (the paper's synchronous global cycle)?
+//!
+//! [`SyncPlanner`] reproduces the paper bit-for-bit: one shared τ from
+//! any [`Policy`], all leases share the `now + T` deadline, and every
+//! completion waits for the barrier. [`AsyncEtaPlanner`] implements the
+//! staggered follow-up (arXiv:1905.01656): per-learner `τ_k` against a
+//! per-lease clock, with immediate re-dispatch on upload.
+
+use crate::alloc::{Allocation, AllocError, Policy, Problem};
+
+/// One learner's work order: what to compute and by when.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Lease {
+    pub learner: usize,
+    /// Batch size `d_k` for this lease.
+    pub batch: usize,
+    /// Local iterations `τ_k` for this lease.
+    pub tau: u64,
+    /// Absolute (round-local for sync planning) deadline for the
+    /// learner's upload.
+    pub deadline: f64,
+}
+
+/// A full-pool dispatch: the allocation it was derived from plus one
+/// lease per enrolled learner (zero-batch learners get no lease).
+#[derive(Debug, Clone)]
+pub struct RoundPlan {
+    pub alloc: Allocation,
+    pub leases: Vec<Lease>,
+}
+
+/// The planner's decision on a learner-completion event.
+#[derive(Debug, Clone)]
+pub enum Redispatch {
+    /// Synchronous semantics: hold the learner idle until the barrier.
+    AwaitBarrier,
+    /// Event-driven semantics: hand the learner a fresh lease now.
+    Immediate(Lease),
+}
+
+/// A cycle-planning policy for the event-driven orchestrator.
+pub trait CyclePlanner: Send {
+    /// Short name for metrics/tables.
+    fn name(&self) -> &'static str;
+
+    /// Plan a full-pool dispatch at time `now` (sync: every barrier;
+    /// async: once at t = 0).
+    fn plan_round(&mut self, p: &Problem, now: f64) -> Result<RoundPlan, AllocError>;
+
+    /// Decide what happens when `learner` uploads its update at `now`.
+    /// `p` reflects the channel state at decision time (fading may have
+    /// been redrawn since the lease was issued).
+    fn on_upload(&mut self, learner: usize, p: &Problem, now: f64) -> Redispatch;
+}
+
+/// Build the per-learner leases of an allocation: batch `d_k`,
+/// iterations `τ_k` (per-learner aware via [`Allocation::tau_for`]),
+/// deadline `now + T`. Zero-batch learners are skipped.
+pub fn leases_from_alloc(alloc: &Allocation, now: f64, t_total: f64) -> Vec<Lease> {
+    alloc
+        .batches
+        .iter()
+        .enumerate()
+        .filter(|(_, &d)| d > 0)
+        .map(|(k, &d)| Lease {
+            learner: k,
+            batch: d,
+            tau: alloc.tau_for(k),
+            deadline: now + t_total,
+        })
+        .collect()
+}
+
+/// Barrier-synchronous planning: the seed coordinator's behaviour,
+/// expressed as a planner. One [`Policy`] solve per round, a shared τ,
+/// and `AwaitBarrier` on every completion.
+#[derive(Debug, Clone)]
+pub struct SyncPlanner {
+    pub policy: Policy,
+}
+
+impl SyncPlanner {
+    pub fn new(policy: Policy) -> Self {
+        Self { policy }
+    }
+}
+
+impl CyclePlanner for SyncPlanner {
+    fn name(&self) -> &'static str {
+        "sync"
+    }
+
+    fn plan_round(&mut self, p: &Problem, now: f64) -> Result<RoundPlan, AllocError> {
+        let alloc = self.policy.allocator().allocate(p)?;
+        let leases = leases_from_alloc(&alloc, now, p.t_total);
+        Ok(RoundPlan { alloc, leases })
+    }
+
+    fn on_upload(&mut self, _learner: usize, _p: &Problem, _now: f64) -> Redispatch {
+        Redispatch::AwaitBarrier
+    }
+}
+
+/// Asynchronous planning with per-learner iteration counts.
+///
+/// The batch split comes from `split` ([`Policy::Eta`] for the async-ETA
+/// baseline of arXiv:1905.01656; an adaptive policy also works — its
+/// split is kept and only the barrier is removed). Each learner's lease
+/// runs `τ_k = ⌊τ_max_k(d_k)⌋` iterations — the most *its* channel and
+/// compute profile fit into one lease clock `T` — and is re-dispatched
+/// the moment its upload lands, re-reading the current channel state.
+#[derive(Debug, Clone)]
+pub struct AsyncEtaPlanner {
+    pub split: Policy,
+    /// Fixed batch split captured at the initial dispatch (data shards
+    /// do not migrate between leases).
+    batches: Vec<usize>,
+}
+
+impl AsyncEtaPlanner {
+    pub fn new(split: Policy) -> Self {
+        Self { split, batches: Vec::new() }
+    }
+
+    /// Per-learner lease iteration count under the current channel
+    /// state; at least 1 so a deeply faded learner still cycles (its
+    /// upload will be flagged as a deadline miss instead of stalling the
+    /// state machine forever).
+    fn lease_tau(p: &Problem, k: usize, batch: usize) -> u64 {
+        let t = p.coeffs[k].tau_max(batch as f64, p.t_total);
+        if t.is_finite() && t >= 1.0 {
+            t.floor() as u64
+        } else {
+            1
+        }
+    }
+}
+
+impl CyclePlanner for AsyncEtaPlanner {
+    fn name(&self) -> &'static str {
+        "async-eta"
+    }
+
+    fn plan_round(&mut self, p: &Problem, now: f64) -> Result<RoundPlan, AllocError> {
+        // The split policy fixes {d_k}; per-learner τ_k then maximizes
+        // each learner's own lease. For Policy::AsyncEta the allocator
+        // already emits τ_k; for any sync policy we lift its uniform τ
+        // to per-learner counts here.
+        let split = if self.split == Policy::Eta { Policy::AsyncEta } else { self.split };
+        let mut alloc = split.allocator().allocate(p)?;
+        if alloc.tau_k.is_empty() {
+            alloc.tau_k = alloc
+                .batches
+                .iter()
+                .enumerate()
+                .map(|(k, &d)| if d == 0 { 0 } else { Self::lease_tau(p, k, d) })
+                .collect();
+            // keep the documented invariant: async `tau` is min_k τ_k
+            alloc.tau = alloc
+                .tau_k
+                .iter()
+                .zip(&alloc.batches)
+                .filter(|(_, &d)| d > 0)
+                .map(|(&t, _)| t)
+                .min()
+                .unwrap_or(alloc.tau);
+            alloc.policy = "async-lifted";
+        }
+        self.batches = alloc.batches.clone();
+        let leases = leases_from_alloc(&alloc, now, p.t_total);
+        Ok(RoundPlan { alloc, leases })
+    }
+
+    fn on_upload(&mut self, learner: usize, p: &Problem, now: f64) -> Redispatch {
+        let batch = self.batches.get(learner).copied().unwrap_or(0);
+        if batch == 0 {
+            return Redispatch::AwaitBarrier;
+        }
+        Redispatch::Immediate(Lease {
+            learner,
+            batch,
+            tau: Self::lease_tau(p, learner, batch),
+            deadline: now + p.t_total,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::alloc::testutil::two_class_problem;
+
+    #[test]
+    fn sync_planner_matches_policy_solve() {
+        let p = two_class_problem(6, 3000, 30.0);
+        let mut planner = SyncPlanner::new(Policy::Analytical);
+        let plan = planner.plan_round(&p, 0.0).unwrap();
+        let direct = Policy::Analytical.allocator().allocate(&p).unwrap();
+        assert_eq!(plan.alloc.tau, direct.tau);
+        assert_eq!(plan.alloc.batches, direct.batches);
+        assert_eq!(plan.leases.len(), 6);
+        for l in &plan.leases {
+            assert_eq!(l.tau, direct.tau);
+            assert_eq!(l.deadline, 30.0);
+        }
+        assert!(matches!(planner.on_upload(0, &p, 12.0), Redispatch::AwaitBarrier));
+    }
+
+    #[test]
+    fn async_planner_staggers_taus_and_redispatches() {
+        let p = two_class_problem(10, 9000, 30.0);
+        let mut planner = AsyncEtaPlanner::new(Policy::Eta);
+        let plan = planner.plan_round(&p, 0.0).unwrap();
+        assert!(!plan.alloc.tau_k.is_empty());
+        // fast (even) learners get strictly more iterations per lease
+        let fast = plan.leases.iter().find(|l| l.learner == 0).unwrap();
+        let slow = plan.leases.iter().find(|l| l.learner == 1).unwrap();
+        assert!(fast.tau > slow.tau, "fast {} vs slow {}", fast.tau, slow.tau);
+        // completion triggers an immediate fresh lease with a staggered deadline
+        match planner.on_upload(0, &p, 7.5) {
+            Redispatch::Immediate(l) => {
+                assert_eq!(l.learner, 0);
+                assert_eq!(l.batch, fast.batch);
+                assert_eq!(l.deadline, 7.5 + 30.0);
+            }
+            other => panic!("expected immediate redispatch, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn async_planner_lifts_adaptive_split() {
+        let p = two_class_problem(6, 3000, 30.0);
+        let mut planner = AsyncEtaPlanner::new(Policy::Analytical);
+        let plan = planner.plan_round(&p, 0.0).unwrap();
+        let sync = Policy::Analytical.allocator().allocate(&p).unwrap();
+        assert_eq!(plan.alloc.batches, sync.batches);
+        // every per-learner count at least matches the barrier τ
+        for (k, &d) in plan.alloc.batches.iter().enumerate() {
+            if d > 0 {
+                assert!(plan.alloc.tau_for(k) >= sync.tau, "learner {k}");
+            }
+        }
+        assert!(plan.alloc.is_feasible(&p));
+    }
+}

@@ -8,11 +8,17 @@
 //! the system talks to it through the cloneable [`EngineHandle`]
 //! (mpsc request/reply). PJRT's CPU backend parallelizes each execution
 //! internally, so serializing *submissions* does not serialize compute.
+//!
+//! The XLA dependency is feature-gated (`pjrt`): without it the engine
+//! starts (manifest validation still works) but every execute/warm
+//! request fails with a descriptive error. This keeps the allocation
+//! solvers, the event-driven orchestrator, and the discrete-event
+//! simulator — none of which touch PJRT — buildable with zero external
+//! native dependencies.
 
 pub mod manifest;
 pub mod tensor;
 
-use std::collections::HashMap;
 use std::path::PathBuf;
 use std::sync::mpsc;
 
@@ -30,6 +36,14 @@ enum Request {
     /// Ensure an artifact is compiled (warmup); reply when done.
     Warm { artifact: String, reply: mpsc::Sender<Result<(), String>> },
     Shutdown,
+}
+
+/// True when artifacts can actually be executed: the `pjrt` feature is
+/// compiled in **and** `artifacts/manifest.json` exists in the working
+/// directory. Tests and benches use this single predicate to skip
+/// gracefully instead of failing on boxes without `make artifacts`.
+pub fn artifacts_available() -> bool {
+    cfg!(feature = "pjrt") && std::path::Path::new("artifacts/manifest.json").exists()
 }
 
 /// Cloneable, `Send` handle to the engine thread.
@@ -101,110 +115,145 @@ impl EngineHandle {
 // ---------------------------------------------------------------------
 
 fn engine_main(man: Manifest, rx: mpsc::Receiver<Request>) {
-    let client = match xla::PjRtClient::cpu() {
-        Ok(c) => c,
-        Err(e) => {
-            // Fail every request with the construction error.
-            let msg = format!("PjRtClient::cpu failed: {e}");
-            for req in rx {
-                match req {
-                    Request::Execute { reply, .. } => {
-                        let _ = reply.send(Err(msg.clone()));
-                    }
-                    Request::Warm { reply, .. } => {
-                        let _ = reply.send(Err(msg.clone()));
-                    }
-                    Request::Shutdown => break,
-                }
-            }
-            return;
-        }
-    };
-    let mut cache: HashMap<String, xla::PjRtLoadedExecutable> = HashMap::new();
+    backend::serve(man, rx);
+}
 
+/// Drain every request with a constant error message.
+fn fail_all(rx: mpsc::Receiver<Request>, msg: &str) {
     for req in rx {
         match req {
+            Request::Execute { reply, .. } => {
+                let _ = reply.send(Err(msg.to_string()));
+            }
+            Request::Warm { reply, .. } => {
+                let _ = reply.send(Err(msg.to_string()));
+            }
             Request::Shutdown => break,
-            Request::Warm { artifact, reply } => {
-                let r = ensure_compiled(&client, &man, &mut cache, &artifact).map(|_| ());
-                let _ = reply.send(r);
+        }
+    }
+}
+
+#[cfg(not(feature = "pjrt"))]
+mod backend {
+    //! Stub backend: the engine thread answers every request with a
+    //! build-configuration error. Everything that does not execute
+    //! artifacts (manifest validation, handle plumbing, shutdown) keeps
+    //! working.
+    use super::{fail_all, Manifest, Request};
+    use std::sync::mpsc;
+
+    pub fn serve(_man: Manifest, rx: mpsc::Receiver<Request>) {
+        fail_all(
+            rx,
+            "built without the `pjrt` feature: add the `xla` dependency in Cargo.toml \
+             and rebuild with `--features pjrt` to execute artifacts",
+        );
+    }
+}
+
+#[cfg(feature = "pjrt")]
+mod backend {
+    //! Real PJRT backend: owns the `!Send` XLA client and the compiled
+    //! executable cache on the engine thread.
+    use super::{fail_all, Manifest, Request, Tensor, TensorData};
+    use std::collections::HashMap;
+    use std::sync::mpsc;
+
+    pub fn serve(man: Manifest, rx: mpsc::Receiver<Request>) {
+        let client = match xla::PjRtClient::cpu() {
+            Ok(c) => c,
+            Err(e) => {
+                // Fail every request with the construction error.
+                fail_all(rx, &format!("PjRtClient::cpu failed: {e}"));
+                return;
             }
-            Request::Execute { artifact, inputs, reply } => {
-                let r = ensure_compiled(&client, &man, &mut cache, &artifact)
-                    .and_then(|_| run(&cache[&artifact], inputs));
-                let _ = reply.send(r);
+        };
+        let mut cache: HashMap<String, xla::PjRtLoadedExecutable> = HashMap::new();
+
+        for req in rx {
+            match req {
+                Request::Shutdown => break,
+                Request::Warm { artifact, reply } => {
+                    let r = ensure_compiled(&client, &man, &mut cache, &artifact).map(|_| ());
+                    let _ = reply.send(r);
+                }
+                Request::Execute { artifact, inputs, reply } => {
+                    let r = ensure_compiled(&client, &man, &mut cache, &artifact)
+                        .and_then(|_| run(&cache[&artifact], inputs));
+                    let _ = reply.send(r);
+                }
             }
         }
     }
-}
 
-fn ensure_compiled<'a>(
-    client: &xla::PjRtClient,
-    man: &Manifest,
-    cache: &'a mut HashMap<String, xla::PjRtLoadedExecutable>,
-    name: &str,
-) -> Result<(), String> {
-    if cache.contains_key(name) {
-        return Ok(());
-    }
-    let meta = man
-        .artifacts
-        .iter()
-        .find(|a| a.name == name)
-        .ok_or_else(|| format!("unknown artifact {name:?}"))?;
-    let proto = xla::HloModuleProto::from_text_file(&meta.file)
-        .map_err(|e| format!("parse {:?}: {e}", meta.file))?;
-    let comp = xla::XlaComputation::from_proto(&proto);
-    let exe = client.compile(&comp).map_err(|e| format!("compile {name}: {e}"))?;
-    log::debug!("compiled artifact {name}");
-    cache.insert(name.to_string(), exe);
-    Ok(())
-}
-
-fn to_literal(t: &Tensor) -> Result<xla::Literal, String> {
-    let dims: Vec<i64> = t.dims.iter().map(|&d| d as i64).collect();
-    let lit = match &t.data {
-        TensorData::F32(v) => xla::Literal::vec1(v),
-        TensorData::I32(v) => xla::Literal::vec1(v),
-    };
-    if t.dims.len() == 1 {
-        Ok(lit)
-    } else {
-        lit.reshape(&dims).map_err(|e| format!("reshape to {dims:?}: {e}"))
-    }
-}
-
-fn from_literal(lit: &xla::Literal) -> Result<Tensor, String> {
-    let shape = lit.array_shape().map_err(|e| format!("shape: {e}"))?;
-    let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
-    match shape.primitive_type() {
-        xla::PrimitiveType::F32 => {
-            let v = lit.to_vec::<f32>().map_err(|e| format!("to_vec f32: {e}"))?;
-            Ok(Tensor { dims, data: TensorData::F32(v) })
+    fn ensure_compiled(
+        client: &xla::PjRtClient,
+        man: &Manifest,
+        cache: &mut HashMap<String, xla::PjRtLoadedExecutable>,
+        name: &str,
+    ) -> Result<(), String> {
+        if cache.contains_key(name) {
+            return Ok(());
         }
-        xla::PrimitiveType::S32 => {
-            let v = lit.to_vec::<i32>().map_err(|e| format!("to_vec i32: {e}"))?;
-            Ok(Tensor { dims, data: TensorData::I32(v) })
-        }
-        other => Err(format!("unsupported output dtype {other:?}")),
+        let meta = man
+            .artifacts
+            .iter()
+            .find(|a| a.name == name)
+            .ok_or_else(|| format!("unknown artifact {name:?}"))?;
+        let proto = xla::HloModuleProto::from_text_file(&meta.file)
+            .map_err(|e| format!("parse {:?}: {e}", meta.file))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = client.compile(&comp).map_err(|e| format!("compile {name}: {e}"))?;
+        log::debug!("compiled artifact {name}");
+        cache.insert(name.to_string(), exe);
+        Ok(())
     }
-}
 
-fn run(exe: &xla::PjRtLoadedExecutable, inputs: Vec<Tensor>) -> Result<Vec<Tensor>, String> {
-    let literals: Result<Vec<xla::Literal>, String> = inputs.iter().map(to_literal).collect();
-    let literals = literals?;
-    let out = exe
-        .execute::<xla::Literal>(&literals)
-        .map_err(|e| format!("execute: {e}"))?;
-    let first = out
-        .first()
-        .and_then(|d| d.first())
-        .ok_or("empty result")?
-        .to_literal_sync()
-        .map_err(|e| format!("to_literal_sync: {e}"))?;
-    // aot.py lowers with return_tuple=True: unpack the tuple.
-    let parts = first.to_tuple().map_err(|e| format!("to_tuple: {e}"))?;
-    parts.iter().map(from_literal).collect()
+    fn to_literal(t: &Tensor) -> Result<xla::Literal, String> {
+        let dims: Vec<i64> = t.dims.iter().map(|&d| d as i64).collect();
+        let lit = match &t.data {
+            TensorData::F32(v) => xla::Literal::vec1(v),
+            TensorData::I32(v) => xla::Literal::vec1(v),
+        };
+        if t.dims.len() == 1 {
+            Ok(lit)
+        } else {
+            lit.reshape(&dims).map_err(|e| format!("reshape to {dims:?}: {e}"))
+        }
+    }
+
+    fn from_literal(lit: &xla::Literal) -> Result<Tensor, String> {
+        let shape = lit.array_shape().map_err(|e| format!("shape: {e}"))?;
+        let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
+        match shape.primitive_type() {
+            xla::PrimitiveType::F32 => {
+                let v = lit.to_vec::<f32>().map_err(|e| format!("to_vec f32: {e}"))?;
+                Ok(Tensor { dims, data: TensorData::F32(v) })
+            }
+            xla::PrimitiveType::S32 => {
+                let v = lit.to_vec::<i32>().map_err(|e| format!("to_vec i32: {e}"))?;
+                Ok(Tensor { dims, data: TensorData::I32(v) })
+            }
+            other => Err(format!("unsupported output dtype {other:?}")),
+        }
+    }
+
+    fn run(exe: &xla::PjRtLoadedExecutable, inputs: Vec<Tensor>) -> Result<Vec<Tensor>, String> {
+        let literals: Result<Vec<xla::Literal>, String> = inputs.iter().map(to_literal).collect();
+        let literals = literals?;
+        let out = exe
+            .execute::<xla::Literal>(&literals)
+            .map_err(|e| format!("execute: {e}"))?;
+        let first = out
+            .first()
+            .and_then(|d| d.first())
+            .ok_or("empty result")?
+            .to_literal_sync()
+            .map_err(|e| format!("to_literal_sync: {e}"))?;
+        // aot.py lowers with return_tuple=True: unpack the tuple.
+        let parts = first.to_tuple().map_err(|e| format!("to_tuple: {e}"))?;
+        parts.iter().map(from_literal).collect()
+    }
 }
 
 #[cfg(test)]

@@ -15,6 +15,49 @@ use crate::models::ModelSpec;
 use crate::util::json::{Json, JsonError};
 use crate::util::rng::{Pcg64, Rng};
 
+/// Asynchronous-dispatch knobs of a scenario — how the event-driven
+/// orchestrator staggers learner cycles (arXiv:1905.01656 semantics).
+/// Serialized inside the [`CloudletConfig`] JSON so scenario files fully
+/// determine a run.
+#[derive(Debug, Clone, PartialEq)]
+pub struct AsyncSpec {
+    /// Staggered per-learner leases (true) vs the paper's global barrier.
+    pub enabled: bool,
+    /// Per-lease clock in seconds; 0 ⇒ inherit the global-cycle `T`.
+    pub lease_s: f64,
+    /// Drop updates whose upload misses the lease deadline.
+    pub drop_stragglers: bool,
+}
+
+impl Default for AsyncSpec {
+    fn default() -> Self {
+        Self { enabled: false, lease_s: 0.0, drop_stragglers: true }
+    }
+}
+
+impl AsyncSpec {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("enabled", Json::Bool(self.enabled)),
+            ("lease_s", Json::Num(self.lease_s)),
+            ("drop_stragglers", Json::Bool(self.drop_stragglers)),
+        ])
+    }
+
+    pub fn from_json(v: &Json) -> Result<Self, JsonError> {
+        let d = Self::default();
+        Ok(Self {
+            enabled: v.opt("enabled").map(|x| x.as_bool()).transpose()?.unwrap_or(d.enabled),
+            lease_s: v.opt("lease_s").map(|x| x.as_f64()).transpose()?.unwrap_or(d.lease_s),
+            drop_stragglers: v
+                .opt("drop_stragglers")
+                .map(|x| x.as_bool())
+                .transpose()?
+                .unwrap_or(d.drop_stragglers),
+        })
+    }
+}
+
 /// Generator configuration for a random cloudlet.
 #[derive(Debug, Clone)]
 pub struct CloudletConfig {
@@ -27,6 +70,8 @@ pub struct CloudletConfig {
     pub channel: ChannelSpec,
     pub model: ModelSpec,
     pub dataset: DatasetSpec,
+    /// Asynchronous-dispatch knobs (default: barrier-synchronous).
+    pub async_mode: AsyncSpec,
 }
 
 impl CloudletConfig {
@@ -39,6 +84,7 @@ impl CloudletConfig {
             channel: ChannelSpec::default(),
             model: ModelSpec::pedestrian(),
             dataset: DatasetSpec::pedestrian(),
+            async_mode: AsyncSpec::default(),
         }
     }
 
@@ -51,6 +97,7 @@ impl CloudletConfig {
             channel: ChannelSpec::default(),
             model: ModelSpec::mnist(),
             dataset: DatasetSpec::mnist(),
+            async_mode: AsyncSpec::default(),
         }
     }
 
@@ -60,6 +107,49 @@ impl CloudletConfig {
             "mnist" => Some(Self::mnist(num_learners)),
             _ => None,
         }
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("num_learners", Json::Num(self.num_learners as f64)),
+            ("radius_m", Json::Num(self.radius_m)),
+            ("laptop_fraction", Json::Num(self.laptop_fraction)),
+            ("channel", self.channel.to_json()),
+            ("model", self.model.to_json()),
+            (
+                "dataset",
+                Json::obj(vec![
+                    ("name", Json::Str(self.dataset.name.clone())),
+                    ("total_samples", Json::Num(self.dataset.total_samples as f64)),
+                    ("features", Json::Num(self.dataset.features as f64)),
+                    ("classes", Json::Num(self.dataset.classes as f64)),
+                    ("precision_bits", Json::Num(self.dataset.precision_bits as f64)),
+                ]),
+            ),
+            ("async", self.async_mode.to_json()),
+        ])
+    }
+
+    pub fn from_json(v: &Json) -> Result<Self, JsonError> {
+        let dj = v.get("dataset")?;
+        Ok(Self {
+            num_learners: v.get("num_learners")?.as_usize()?,
+            radius_m: v.get("radius_m")?.as_f64()?,
+            laptop_fraction: v.get("laptop_fraction")?.as_f64()?,
+            channel: ChannelSpec::from_json(v.get("channel")?)?,
+            model: ModelSpec::from_json(v.get("model")?)?,
+            dataset: DatasetSpec {
+                name: dj.get("name")?.as_str()?.to_string(),
+                total_samples: dj.get("total_samples")?.as_usize()?,
+                features: dj.get("features")?.as_usize()?,
+                classes: dj.get("classes")?.as_usize()?,
+                precision_bits: dj.get("precision_bits")?.as_u64()? as u32,
+            },
+            async_mode: match v.opt("async") {
+                Some(a) => AsyncSpec::from_json(a)?,
+                None => AsyncSpec::default(),
+            },
+        })
     }
 }
 
@@ -252,6 +342,29 @@ mod tests {
         assert!(CloudletConfig::by_task("pedestrian", 5).is_some());
         assert!(CloudletConfig::by_task("mnist", 5).is_some());
         assert!(CloudletConfig::by_task("x", 5).is_none());
+    }
+
+    #[test]
+    fn cloudlet_config_json_round_trip_with_async_knobs() {
+        let mut cfg = CloudletConfig::pedestrian(12);
+        cfg.async_mode = AsyncSpec { enabled: true, lease_s: 15.0, drop_stragglers: false };
+        cfg.channel.rayleigh = true;
+        let text = cfg.to_json().to_pretty();
+        let back = CloudletConfig::from_json(&Json::parse(&text).unwrap()).unwrap();
+        assert_eq!(back.num_learners, 12);
+        assert_eq!(back.async_mode, cfg.async_mode);
+        assert_eq!(back.channel, cfg.channel);
+        assert_eq!(back.dataset.total_samples, cfg.dataset.total_samples);
+        // legacy configs without the async block default to barrier mode
+        let legacy = {
+            let mut j = cfg.to_json();
+            if let Json::Obj(o) = &mut j {
+                o.remove("async");
+            }
+            j
+        };
+        let back2 = CloudletConfig::from_json(&legacy).unwrap();
+        assert!(!back2.async_mode.enabled);
     }
 
     #[test]

@@ -1,15 +1,22 @@
-//! Discrete-event simulation of MEL global cycles.
+//! Discrete-event simulation substrate for MEL.
 //!
-//! [`events`] is a generic time-ordered event queue; this module builds
-//! the MEL-specific timeline on top: per-learner **send → τ×compute →
-//! receive** phases (eq. 12), orchestrator-side serialization effects,
-//! deadline validation against the global-cycle clock `T`, and
-//! multi-cycle runs with optional per-cycle fading redraws.
+//! [`events`] is the generic time-ordered event queue that powers the
+//! whole event-driven stack: the
+//! [`crate::orchestrator::Orchestrator`] state machine consumes learner
+//! lifecycle events (dispatched / send-complete / iteration-done /
+//! uploaded / missed-deadline) from it, in both barrier-synchronous and
+//! staggered-async dispatch modes.
 //!
-//! The simulator is what the figure benches execute (the paper's own
-//! evaluation is timing-model-driven, §V); the [`crate::coordinator`]
-//! reuses the same timeline for *real* training where compute events are
-//! backed by actual PJRT executions.
+//! [`CycleSim`] is the *closed-form reference* for one synchronous
+//! global cycle: it schedules the per-learner **send → τ×compute →
+//! receive** phases (eq. 12) directly from the eq. (13) polynomial and
+//! validates deadlines against the global-cycle clock `T`. The
+//! event-driven orchestrator must reproduce its completion times
+//! bit-for-bit in sync mode — that equivalence is enforced by
+//! `rust/tests/orchestrator_equivalence.rs` and by the orchestrator's
+//! own unit tests, which is what licenses every async extension to
+//! reuse the same timing model. [`training`] layers an analytic
+//! convergence model on top for paper-scale sweeps.
 
 pub mod events;
 pub mod training;

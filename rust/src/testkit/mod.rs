@@ -14,6 +14,22 @@
 
 use crate::util::rng::{Pcg64, Rng};
 
+/// Skip a PJRT-backed test or bench body when artifacts cannot execute
+/// (no `make artifacts` output, or built without the `pjrt` feature).
+/// Expands to an early `return`, so it must be the first statement.
+#[macro_export]
+macro_rules! require_artifacts {
+    () => {
+        if !$crate::runtime::artifacts_available() {
+            eprintln!(
+                "skipping {}: requires `make artifacts` and --features pjrt",
+                module_path!()
+            );
+            return;
+        }
+    };
+}
+
 /// Number of cases per property (override with MEL_PROPTEST_CASES).
 fn num_cases() -> usize {
     std::env::var("MEL_PROPTEST_CASES")

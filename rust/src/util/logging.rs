@@ -2,12 +2,15 @@
 //! to stderr, level from `MEL_LOG` (error|warn|info|debug|trace).
 
 use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::OnceLock;
 use std::time::Instant;
 
-use once_cell::sync::Lazy;
-
-static START: Lazy<Instant> = Lazy::new(Instant::now);
+static START: OnceLock<Instant> = OnceLock::new();
 static INSTALLED: AtomicBool = AtomicBool::new(false);
+
+fn start() -> Instant {
+    *START.get_or_init(Instant::now)
+}
 
 struct StderrLogger {
     level: log::LevelFilter,
@@ -22,7 +25,7 @@ impl log::Log for StderrLogger {
         if !self.enabled(record.metadata()) {
             return;
         }
-        let t = START.elapsed().as_secs_f64();
+        let t = start().elapsed().as_secs_f64();
         eprintln!(
             "[{t:10.4}s {:5} {}] {}",
             record.level(),
@@ -50,7 +53,7 @@ pub fn init(level: Option<&str>) {
         "trace" => log::LevelFilter::Trace,
         _ => log::LevelFilter::Info,
     };
-    Lazy::force(&START);
+    let _ = start();
     let _ = log::set_boxed_logger(Box::new(StderrLogger { level: filter }));
     log::set_max_level(filter);
 }

@@ -70,6 +70,61 @@ fn adaptive_policies_agree_and_are_optimal() {
 }
 
 #[test]
+fn exact_tau_upper_bounds_heuristics_and_constraints_hold() {
+    // ISSUE satellite: for random feasible problems, the exact integer
+    // optimum τ* dominates what analytical and UB-SAI return, and every
+    // returned allocation satisfies the eq. (13) deadline constraint
+    // C2·τ_k·d_k + C1·d_k + C0 ≤ T + TIME_EPS per learner.
+    use mel::alloc::TIME_EPS;
+    forall("exact τ* ≥ heuristic τ; constraints", &scenario_gen(), |&(ti, k, t, seed)| {
+        let p = build(ti, k, seed).problem(t);
+        let exact = ExactAllocator::optimal_tau(&p);
+        [Policy::Analytical, Policy::UbSai].iter().all(|policy| {
+            match policy.allocator().allocate(&p) {
+                Ok(a) => {
+                    let bounded = match exact {
+                        Some(opt) => opt >= a.tau,
+                        None => false, // solver feasible ⇒ exact feasible
+                    };
+                    bounded
+                        && a.batches.iter().zip(&p.coeffs).enumerate().all(|(i, (&d, c))| {
+                            d == 0
+                                || c.c2 * a.tau_for(i) as f64 * d as f64
+                                    + c.c1 * d as f64
+                                    + c.c0
+                                    <= t + TIME_EPS
+                        })
+                }
+                Err(_) => true, // infeasible scenarios may error
+            }
+        })
+    });
+}
+
+#[test]
+fn async_eta_per_learner_taus_dominate_sync_eta() {
+    // per-learner τ_k generalization: each learner's async lease count
+    // is ≥ the barrier τ, feasible under its own deadline
+    forall("async τ_k ≥ sync τ", &scenario_gen(), |&(ti, k, t, seed)| {
+        let p = build(ti, k, seed).problem(t);
+        match (
+            Policy::Eta.allocator().allocate(&p),
+            Policy::AsyncEta.allocator().allocate(&p),
+        ) {
+            (Ok(sync), Ok(asy)) => {
+                asy.is_feasible(&p)
+                    && asy.batches == sync.batches
+                    && (0..p.k()).all(|i| asy.tau_for(i) >= sync.tau)
+                    && asy.tau == sync.tau
+            }
+            (Err(_), Err(_)) => true,
+            // same equal split ⇒ identical feasibility condition
+            _ => false,
+        }
+    });
+}
+
+#[test]
 fn eta_never_exceeds_adaptive() {
     forall("ETA ≤ adaptive", &scenario_gen(), |&(ti, k, t, seed)| {
         let p = build(ti, k, seed).problem(t);

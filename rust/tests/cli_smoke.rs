@@ -95,6 +95,22 @@ fn energy_table_renders() {
 }
 
 #[test]
+fn figure_fig_async_renders() {
+    let (stdout, stderr, ok) = mel(&["figure", "figAsync", "--seed", "42"]);
+    assert!(ok, "stderr: {stderr}");
+    assert!(stdout.contains("updates sync ETA"));
+    assert!(stdout.contains("iters async ETA"));
+}
+
+#[test]
+fn solve_async_eta_policy() {
+    let (stdout, stderr, ok) =
+        mel(&["solve", "--policy", "async-eta", "--k", "6", "--t", "30"]);
+    assert!(ok, "stderr: {stderr}");
+    assert!(stdout.contains("Async-ETA"), "{stdout}");
+}
+
+#[test]
 fn figure_fig_e_renders() {
     let (stdout, stderr, ok) = mel(&["figure", "figE"]);
     assert!(ok, "stderr: {stderr}");

@@ -5,6 +5,7 @@
 use mel::alloc::Policy;
 use mel::coordinator::{Orchestrator, TrainConfig};
 use mel::scenario::{CloudletConfig, Scenario};
+use mel::require_artifacts;
 
 fn tiny_scenario(k: usize, d: usize, seed: u64) -> Scenario {
     let mut s = Scenario::random_cloudlet(&CloudletConfig::pedestrian(k), seed);
@@ -36,6 +37,7 @@ fn cfg(policy: Policy, cycles: usize) -> TrainConfig {
 
 #[test]
 fn orchestrator_trains_and_loss_decreases() {
+    require_artifacts!();
     let mut orch = Orchestrator::new(tiny_scenario(3, 384, 1), cfg(Policy::Analytical, 5))
         .expect("orchestrator init (did you run `make artifacts`?)");
     let (loss0, _acc0) = orch.evaluate().unwrap();
@@ -63,6 +65,7 @@ fn orchestrator_trains_and_loss_decreases() {
 
 #[test]
 fn adaptive_gets_more_iterations_than_eta_same_clock() {
+    require_artifacts!();
     let s = tiny_scenario(4, 512, 3);
     let mut o_ada =
         Orchestrator::new(s.clone(), cfg(Policy::Analytical, 1)).expect("init adaptive");
@@ -79,6 +82,7 @@ fn adaptive_gets_more_iterations_than_eta_same_clock() {
 
 #[test]
 fn aggregation_weights_match_batches() {
+    require_artifacts!();
     // single cycle with wildly heterogeneous batches: the global params
     // must move (aggregation happened) and stay finite
     let mut orch =
@@ -95,6 +99,7 @@ fn aggregation_weights_match_batches() {
 
 #[test]
 fn mnist_arch_trains_one_cycle() {
+    require_artifacts!();
     let mut s = Scenario::random_cloudlet(&CloudletConfig::mnist(2), 2);
     s.dataset.total_samples = 256;
     let mut c = cfg(Policy::UbSai, 1);
@@ -107,6 +112,7 @@ fn mnist_arch_trains_one_cycle() {
 
 #[test]
 fn stragglers_dropped_under_fading_with_stale_allocation() {
+    require_artifacts!();
     // Stale allocation (solved once) + heavy per-cycle fading ⇒ some
     // cycles miss deadlines; drop_stragglers keeps training alive.
     let mut c = cfg(Policy::Analytical, 6);
@@ -125,6 +131,7 @@ fn stragglers_dropped_under_fading_with_stale_allocation() {
 
 #[test]
 fn reallocation_each_cycle_avoids_straggler_drops() {
+    require_artifacts!();
     // Re-solving per cycle adapts batches to the faded channels, so no
     // deadline misses even without drop_stragglers.
     let mut c = cfg(Policy::UbSai, 4);

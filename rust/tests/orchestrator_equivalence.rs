@@ -1,0 +1,133 @@
+//! Sync-mode equivalence regression: the event-driven orchestrator in
+//! barrier mode must reproduce the seed coordinator's per-cycle numbers
+//! — τ, batches, makespan — **exactly** (bit-for-bit f64), for fixed
+//! seeds. The seed path is replicated here as the closed-form reference
+//! it was: a `Policy` solve plus the eq. (13) `CycleSim` timeline. This
+//! is the contract that lets every async extension share the sync
+//! timing model without re-validating the paper's figures.
+
+use mel::alloc::Policy;
+use mel::orchestrator::{Mode, Orchestrator, OrchestratorConfig};
+use mel::scenario::{CloudletConfig, Scenario};
+use mel::sim::CycleSim;
+use mel::util::rng::Pcg64;
+
+fn sync_cfg(policy: Policy, t: f64, cycles: usize, seed: u64) -> OrchestratorConfig {
+    OrchestratorConfig {
+        mode: Mode::Sync,
+        policy,
+        t_total: t,
+        cycles,
+        seed,
+        ..OrchestratorConfig::default()
+    }
+}
+
+#[test]
+fn static_channels_match_seed_coordinator_exactly() {
+    for seed in [1u64, 2, 3] {
+        for policy in [Policy::Analytical, Policy::Eta, Policy::UbSai] {
+            let scenario = Scenario::random_cloudlet(&CloudletConfig::pedestrian(8), seed);
+            // --- seed reference: one solve (static channels cache), then
+            // the closed-form eq. (13) timeline each cycle
+            let problem = scenario.problem(30.0);
+            let ref_alloc = policy.allocator().allocate(&problem).unwrap();
+            let ref_report = CycleSim::from_problem(&problem).run_cycle(&ref_alloc, false);
+
+            // --- event-driven orchestrator, barrier mode
+            let mut orch = Orchestrator::new(scenario, sync_cfg(policy, 30.0, 4, seed));
+            let run = orch.run().unwrap();
+            assert_eq!(run.rounds.len(), 4);
+            for round in &run.rounds {
+                assert_eq!(round.alloc.tau, ref_alloc.tau, "seed {seed} {policy:?}");
+                assert_eq!(round.alloc.batches, ref_alloc.batches, "seed {seed} {policy:?}");
+                // bit-for-bit: same float expressions on both paths
+                assert_eq!(round.makespan, ref_report.makespan, "seed {seed} {policy:?}");
+                assert_eq!(round.completion, ref_report.completion, "seed {seed} {policy:?}");
+                assert!(round.deadline_misses.is_empty());
+            }
+        }
+    }
+}
+
+#[test]
+fn fading_channels_match_closed_form_replica() {
+    // Under per-cycle Rayleigh + shadowing with re-solve, the orchestrator
+    // must still agree with a hand-rolled seed-style loop that uses the
+    // core's documented fading convention (Pcg64 stream 0xFAD, one
+    // redraw per cycle before the solve).
+    for seed in [1u64, 2, 3] {
+        let cloudlet = {
+            let mut c = CloudletConfig::pedestrian(6);
+            c.channel.rayleigh = true;
+            c.channel.shadow_sigma_db = 3.0;
+            c
+        };
+        let cycles = 5;
+
+        // --- replica loop (closed form)
+        let mut replica = Scenario::random_cloudlet(&cloudlet, seed);
+        let mut fade_rng = Pcg64::new(seed, 0xFAD);
+        let mut spec = mel::channel::ChannelSpec::default();
+        spec.rayleigh = true;
+        spec.shadow_sigma_db = 3.0;
+        let mut expected = Vec::new();
+        for _ in 0..cycles {
+            replica.redraw_fading(&spec, &mut fade_rng);
+            let p = replica.problem(30.0);
+            let a = Policy::UbSai.allocator().allocate(&p).unwrap();
+            let rep = CycleSim::from_problem(&p).run_cycle(&a, false);
+            expected.push((a.tau, a.batches.clone(), rep.makespan));
+        }
+
+        // --- event-driven orchestrator
+        let scenario = Scenario::random_cloudlet(&cloudlet, seed);
+        let mut cfg = sync_cfg(Policy::UbSai, 30.0, cycles, seed);
+        cfg.rayleigh = true;
+        cfg.shadow_sigma_db = 3.0;
+        cfg.reallocate_each_cycle = true;
+        let mut orch = Orchestrator::new(scenario, cfg);
+        let run = orch.run().unwrap();
+        for (round, (tau, batches, makespan)) in run.rounds.iter().zip(&expected) {
+            assert_eq!(round.alloc.tau, *tau, "seed {seed} cycle {}", round.cycle);
+            assert_eq!(&round.alloc.batches, batches, "seed {seed} cycle {}", round.cycle);
+            assert_eq!(round.makespan, *makespan, "seed {seed} cycle {}", round.cycle);
+        }
+    }
+}
+
+#[test]
+fn async_mode_runs_end_to_end_with_staggered_timeline() {
+    // Acceptance check: async mode produces per-learner τ_k and visibly
+    // staggered re-dispatch in the event timeline.
+    let mut cloudlet = CloudletConfig::pedestrian(6);
+    cloudlet.channel.rayleigh = true;
+    let scenario = Scenario::random_cloudlet(&cloudlet, 1);
+    let mut cfg = sync_cfg(Policy::Eta, 30.0, 5, 1);
+    cfg.mode = Mode::Async;
+    cfg.rayleigh = true;
+    cfg.trace = true;
+    cfg.drop_stragglers = true;
+    let mut orch = Orchestrator::new(scenario, cfg);
+    let run = orch.run().unwrap();
+
+    assert!(run.updates_applied > 0);
+    // per-learner τ_k heterogeneity
+    let taus: std::collections::BTreeSet<u64> =
+        run.updates.iter().map(|u| u.tau).collect();
+    assert!(taus.len() > 1, "expected heterogeneous τ_k, got {taus:?}");
+    // staggered re-dispatch: dispatches at strictly increasing,
+    // non-barrier times for some learner
+    let dispatches: Vec<f64> = run
+        .timeline
+        .iter()
+        .filter(|(_, e)| matches!(e, mel::orchestrator::LearnerEvent::Dispatched { .. }))
+        .map(|(t, _)| *t)
+        .collect();
+    assert!(
+        dispatches.iter().any(|&t| t > 0.0 && (t % 30.0) > 1e-9 && (t % 30.0) < 30.0 - 1e-9),
+        "re-dispatch should land off the barrier grid: {dispatches:?}"
+    );
+    // the timeline is time-ordered
+    assert!(run.timeline.windows(2).all(|w| w[0].0 <= w[1].0));
+}

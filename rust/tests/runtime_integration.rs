@@ -7,6 +7,7 @@
 
 use mel::coordinator::ParamSet;
 use mel::runtime::{Engine, Manifest, Tensor};
+use mel::require_artifacts;
 
 fn engine() -> Engine {
     Engine::start("artifacts").expect("run `make artifacts` before `cargo test`")
@@ -36,6 +37,7 @@ fn zero_param_inputs(n_real: usize) -> Vec<Tensor> {
 
 #[test]
 fn grad_step_zero_params_gives_ln2_loss() {
+    require_artifacts!();
     let eng = engine();
     let h = eng.handle();
     let out = h
@@ -57,6 +59,7 @@ fn grad_step_zero_params_gives_ln2_loss() {
 
 #[test]
 fn masking_is_neutral_through_pjrt() {
+    require_artifacts!();
     let eng = engine();
     let h = eng.handle();
     let full = h.execute("pedestrian_grad_step_b64", zero_param_inputs(64)).unwrap();
@@ -72,6 +75,7 @@ fn masking_is_neutral_through_pjrt() {
 
 #[test]
 fn eval_batch_counts_and_loss() {
+    require_artifacts!();
     let eng = engine();
     let h = eng.handle();
     let mut inputs = zero_param_inputs(64);
@@ -87,6 +91,7 @@ fn eval_batch_counts_and_loss() {
 
 #[test]
 fn sgd_descends_through_real_artifacts() {
+    require_artifacts!();
     let eng = engine();
     let h = eng.handle();
     let layers = [648usize, 300, 2];
@@ -130,6 +135,7 @@ fn sgd_descends_through_real_artifacts() {
 
 #[test]
 fn chunked_accumulation_equals_single_batch() {
+    require_artifacts!();
     // grad(sum over 64) == grad(sum over first 40) + grad(sum over last 24)
     let eng = engine();
     let h = eng.handle();
@@ -164,6 +170,7 @@ fn chunked_accumulation_equals_single_batch() {
 
 #[test]
 fn mnist_artifacts_execute() {
+    require_artifacts!();
     let eng = engine();
     let h = eng.handle();
     let man = Manifest::load("artifacts").unwrap();
@@ -185,6 +192,7 @@ fn mnist_artifacts_execute() {
 
 #[test]
 fn warm_compiles_ahead() {
+    require_artifacts!();
     let eng = engine();
     let h = eng.handle();
     h.warm("pedestrian_eval_batch_b128").unwrap();
@@ -193,6 +201,7 @@ fn warm_compiles_ahead() {
 
 #[test]
 fn parallel_submissions_from_many_threads() {
+    require_artifacts!();
     let eng = engine();
     let h = eng.handle();
     h.warm("pedestrian_grad_step_b64").unwrap();

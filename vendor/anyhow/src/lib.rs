@@ -1,0 +1,152 @@
+//! Vendored, API-compatible subset of the `anyhow` crate so the
+//! workspace builds with no registry access. Covers exactly what MELkit
+//! uses: [`Error`], [`Result`], the [`anyhow!`] / [`ensure!`] / [`bail!`]
+//! macros, `?`-conversion from any `std::error::Error`, and `Context`.
+//!
+//! The real crate keeps the source error chain alive; this subset
+//! flattens it to the rendered message at conversion time, which is all
+//! the MELkit call sites observe (they only `Display`/`Debug` errors).
+
+use std::fmt;
+
+/// A flattened dynamic error: the rendered message of whatever was
+/// thrown. Deliberately does **not** implement `std::error::Error` so
+/// the blanket `From<E: Error>` below never conflicts with the
+/// reflexive `From<Error> for Error` the standard library provides.
+pub struct Error {
+    msg: String,
+}
+
+impl Error {
+    /// Build an error from a printable message.
+    pub fn msg(msg: impl fmt::Display) -> Self {
+        Self { msg: msg.to_string() }
+    }
+
+    /// The rendered message (parity helper with `anyhow::Error::root_cause`
+    /// style interrogation — everything is flattened here).
+    pub fn to_msg(&self) -> &str {
+        &self.msg
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        // `fn main() -> anyhow::Result<()>` prints the Debug form on
+        // failure; render the message, as the real crate does.
+        f.write_str(&self.msg)
+    }
+}
+
+impl<E: std::error::Error + Send + Sync + 'static> From<E> for Error {
+    fn from(e: E) -> Self {
+        Error { msg: e.to_string() }
+    }
+}
+
+/// `anyhow::Result<T>` — `std::result::Result` with a flattened error.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Attach context to an error (subset: context is prepended to the
+/// rendered message).
+pub trait Context<T> {
+    fn context(self, ctx: impl fmt::Display) -> Result<T>;
+    fn with_context<C: fmt::Display>(self, f: impl FnOnce() -> C) -> Result<T>;
+}
+
+impl<T, E: fmt::Display> Context<T> for std::result::Result<T, E> {
+    fn context(self, ctx: impl fmt::Display) -> Result<T> {
+        self.map_err(|e| Error::msg(format!("{ctx}: {e}")))
+    }
+
+    fn with_context<C: fmt::Display>(self, f: impl FnOnce() -> C) -> Result<T> {
+        self.map_err(|e| Error::msg(format!("{}: {e}", f())))
+    }
+}
+
+/// Construct an [`Error`] from a format string or any displayable value.
+#[macro_export]
+macro_rules! anyhow {
+    ($fmt:literal $(, $($arg:tt)*)?) => {
+        $crate::Error::msg(format!($fmt $(, $($arg)*)?))
+    };
+    ($err:expr $(,)?) => {
+        $crate::Error::msg(&$err)
+    };
+}
+
+/// Return early with an error built like [`anyhow!`].
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::anyhow!($($arg)*).into())
+    };
+}
+
+/// Return early with an error unless the condition holds.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr, $fmt:literal $(, $($arg:tt)*)?) => {
+        if !($cond) {
+            return Err($crate::anyhow!($fmt $(, $($arg)*)?).into());
+        }
+    };
+    ($cond:expr $(,)?) => {
+        if !($cond) {
+            return Err($crate::anyhow!("condition failed: `{}`", stringify!($cond)).into());
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_err() -> std::io::Error {
+        std::io::Error::new(std::io::ErrorKind::NotFound, "gone")
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        fn inner() -> Result<()> {
+            Err(io_err())?;
+            Ok(())
+        }
+        let e = inner().unwrap_err();
+        assert!(e.to_string().contains("gone"));
+    }
+
+    #[test]
+    fn macros_format() {
+        let x = 7;
+        let e = anyhow!("value {x} bad");
+        assert_eq!(e.to_string(), "value 7 bad");
+        let e2 = anyhow!("value {} bad", 9);
+        assert_eq!(e2.to_string(), "value 9 bad");
+
+        fn guarded(v: i32) -> Result<i32> {
+            ensure!(v > 0, "need positive, got {v}");
+            Ok(v)
+        }
+        assert!(guarded(1).is_ok());
+        assert!(guarded(-1).unwrap_err().to_string().contains("-1"));
+
+        fn bailer() -> Result<()> {
+            bail!("stop")
+        }
+        assert_eq!(bailer().unwrap_err().to_string(), "stop");
+    }
+
+    #[test]
+    fn context_prepends() {
+        let r: std::result::Result<(), std::io::Error> = Err(io_err());
+        let e = r.context("loading manifest").unwrap_err();
+        assert!(e.to_string().starts_with("loading manifest: "));
+    }
+}
