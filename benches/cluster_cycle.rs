@@ -1,0 +1,79 @@
+//! Sharded cluster bench: full cluster runs (thread-per-shard event
+//! queues + hierarchical aggregation) over a shards × learners sweep,
+//! plus the churn-aware paths (membership re-splits and straggler
+//! re-leasing under deadline pressure). Emits
+//! `results/BENCH_cluster_cycle.json` via `benchkit::Suite` so the
+//! perf trajectory tracks the cluster layer across PRs.
+//!
+//! ```bash
+//! cargo bench --bench cluster_cycle
+//! ```
+
+use mel::benchkit::{group, Bencher, Suite};
+use mel::cluster::{Cluster, ClusterConfig};
+use mel::orchestrator::Mode;
+use mel::prelude::*;
+
+fn main() {
+    let b = Bencher::quick();
+    let seed = 42;
+    let mut suite = Suite::new("cluster_cycle");
+
+    group("churn-free cluster horizons (sync barrier per shard, 4 cycles)");
+    for &(shards, k) in &[(1usize, 8usize), (2, 8), (4, 8), (4, 16), (8, 8)] {
+        let cluster = Cluster::new(
+            ClusterSpec::uniform("pedestrian", shards, k).expect("known task"),
+            ClusterConfig {
+                policy: Policy::Analytical,
+                mode: Mode::Sync,
+                t_total: 30.0,
+                cycles: 4,
+                seed,
+                ..ClusterConfig::default()
+            },
+        );
+        suite.run(&b, &format!("cluster sync: {shards} shard(s) x K={k}"), || {
+            cluster.run().expect("feasible").updates_applied
+        });
+    }
+
+    group("churn + straggler re-leasing (async, lease clock 24s of T=30s)");
+    for &(shards, k) in &[(2usize, 8usize), (4, 8)] {
+        let spec = ClusterSpec::uniform("pedestrian", shards, k)
+            .expect("known task")
+            .with_synthetic_churn(4.0 * 30.0, 2, seed);
+        let cluster = Cluster::new(
+            spec,
+            ClusterConfig {
+                policy: Policy::Analytical,
+                mode: Mode::Async,
+                t_total: 30.0,
+                lease_s: 24.0,
+                cycles: 4,
+                straggler_releasing: true,
+                seed,
+                ..ClusterConfig::default()
+            },
+        );
+        suite.run(&b, &format!("cluster churn+re-lease: {shards} shard(s) x K={k}"), || {
+            cluster.run().expect("feasible").updates_applied
+        });
+    }
+
+    group("churn-aware planner in isolation (K=16 re-split)");
+    {
+        use mel::cluster::ChurnAwarePlanner;
+        let scenario = Scenario::random_cloudlet(&CloudletConfig::pedestrian(16), seed);
+        let problem = scenario.problem(30.0);
+        let mut flip = false;
+        let mut planner = ChurnAwarePlanner::new(Policy::Analytical, vec![true; 16]);
+        planner.plan_round(&problem, 0.0).expect("feasible");
+        suite.run(&b, "membership toggle + full re-split (K=16)", || {
+            flip = !flip;
+            planner.on_membership(7, flip, &problem, 1.0);
+            planner.planned_batches().iter().sum::<usize>()
+        });
+    }
+
+    suite.write_and_report();
+}

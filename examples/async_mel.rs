@@ -76,6 +76,8 @@ fn main() -> anyhow::Result<()> {
             LearnerEvent::DeadlineMissed { learner } => {
                 format!("MISSED    <- learner {learner}")
             }
+            LearnerEvent::Joined { learner } => format!("JOINED    -> learner {learner}"),
+            LearnerEvent::Departed { learner } => format!("DEPARTED  <- learner {learner}"),
         };
         println!("  t={t:>9.3}s  {tag}");
     }

@@ -1,0 +1,105 @@
+//! Sharded multi-cloudlet MEL with node churn and straggler-aware
+//! re-leasing.
+//!
+//! Runs one cluster of identical pedestrian cloudlets twice on the same
+//! seeds — once with straggler re-leasing (late updates applied,
+//! stragglers re-leased with geometrically shrunken batches) and once
+//! with the drop-on-miss baseline — under *deadline pressure*: the
+//! batch split is solved for the clock `T`, but lease deadlines use a
+//! shorter clock, so planned leases straggle deterministically. Each
+//! shard also follows a synthetic churn trace (mid-run departures +
+//! rejoins, late joiners), which triggers a full re-split of the
+//! dataset across the surviving members on every membership change.
+//!
+//! ```bash
+//! cargo run --release --example cluster_mel
+//! # options: -- --shards 4 --k 6 --t 30 --lease 24 --cycles 8 --churners 2 --seed 42
+//! ```
+
+use mel::cluster::{Cluster, ClusterConfig};
+use mel::orchestrator::Mode;
+use mel::prelude::*;
+use mel::util::cli::Args;
+use mel::util::table::{fnum, Table};
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::parse();
+    let shards = args.get_usize("shards", 4);
+    let k = args.get_usize("k", 6);
+    let t_total = args.get_f64("t", 30.0);
+    let lease_s = args.get_f64("lease", 0.8 * t_total);
+    let cycles = args.get_usize("cycles", 8);
+    let churners = args.get_usize("churners", 2);
+    let seed = args.get_u64("seed", 42);
+    let horizon = cycles as f64 * t_total;
+
+    println!(
+        "cluster MEL: {shards} shard(s) x K={k} pedestrian, solve clock T={t_total}s, \
+         lease clock {lease_s}s, horizon {horizon}s, {churners} churning node(s)/shard\n"
+    );
+
+    let spec = || {
+        ClusterSpec::uniform("pedestrian", shards, k)
+            .expect("known task")
+            .with_synthetic_churn(horizon, churners, seed)
+    };
+    let cfg = |releasing: bool| ClusterConfig {
+        policy: Policy::Analytical,
+        mode: Mode::Async,
+        t_total,
+        lease_s,
+        cycles,
+        straggler_releasing: releasing,
+        seed,
+        ..ClusterConfig::default()
+    };
+
+    let releasing = Cluster::new(spec(), cfg(true));
+    let report = releasing.run()?;
+
+    let mut table = Table::new(&[
+        "shard", "updates", "misses", "re-leases", "joins", "departs", "re-splits",
+    ]);
+    for sr in &report.shards {
+        table.row(vec![
+            sr.shard.to_string(),
+            sr.report.updates_applied.to_string(),
+            sr.misses.to_string(),
+            sr.releases.to_string(),
+            sr.joins.to_string(),
+            sr.departs.to_string(),
+            sr.resplits.to_string(),
+        ]);
+    }
+    print!("{}", table.render());
+
+    println!(
+        "\nre-leasing: {} updates applied cluster-wide ({} deadline misses absorbed, \
+         {} shrunken re-leases)",
+        report.updates_applied, report.deadline_misses, report.releases
+    );
+    let merged = releasing.metrics.series("updates_vs_simtime");
+    if let (Some(first), Some(last)) = (merged.first(), merged.last()) {
+        println!(
+            "merged updates_vs_simtime: {} points, first at t={}s, total {} by t={}s",
+            merged.len(),
+            fnum(first.0, 1),
+            last.1,
+            fnum(last.0, 1)
+        );
+    }
+
+    // ---- drop-on-miss baseline on the same seeds
+    let baseline = Cluster::new(spec(), cfg(false)).run()?;
+    println!(
+        "\ndrop-on-miss baseline: {} updates applied ({} dropped at the deadline)",
+        baseline.updates_applied, baseline.deadline_misses
+    );
+    let gain = report.updates_applied as f64 / baseline.updates_applied.max(1) as f64;
+    println!(
+        "straggler-aware re-leasing delivers {}x the applied updates under identical \
+         churn and deadline pressure",
+        fnum(gain, 2)
+    );
+    Ok(())
+}

@@ -1,0 +1,474 @@
+//! Churn-aware cycle planning: dynamic membership + straggler
+//! re-leasing on top of the event-driven orchestrator's
+//! [`CyclePlanner`] trait surface.
+//!
+//! Three behaviours distinguish [`ChurnAwarePlanner`] from the fixed
+//! pool planners:
+//!
+//! 1. **Re-split on membership change** — every `Joined`/`Departed`
+//!    event triggers a fresh allocation of the *full* dataset across
+//!    the currently active members, via
+//!    [`crate::alloc::selection::subproblem`] + the configured split
+//!    policy. In-flight leases finish with their old batches; every
+//!    lease issued after the change uses the new split (data shards
+//!    migrate between leases, not within one).
+//! 2. **Straggler re-leasing** — when a lease deadline is missed, the
+//!    learner is re-leased with a **geometrically shrunken** batch
+//!    (`⌊shrink·d⌋`, default halving) and a fresh `τ` sized to its
+//!    *current* channel and the lease clock, instead of being dropped.
+//!    Consecutive misses keep shrinking until `min_batch`, then the
+//!    learner is parked (AIMD-style multiplicative decrease). With
+//!    `shrink ≥ 1` the planner degrades to the drop-on-miss baseline:
+//!    the planned lease is re-dispatched unchanged.
+//! 3. **Recovery growth** — a punctual upload doubles the lease batch
+//!    back toward the planned share (multiplicative increase), so a
+//!    transient fade does not permanently strand a learner on a
+//!    sliver of data.
+//!
+//! Deadline pressure is a first-class knob: the split is solved for
+//! the shard's solve clock `T` (`Problem::t_total`), but lease
+//! deadlines use `lease_s` when set — a `lease_s < T` regime
+//! deterministically manufactures stragglers, which is how the
+//! re-lease-vs-drop comparison (`experiments::fig_cluster`) is driven
+//! without relying on fading luck.
+
+use crate::alloc::selection::subproblem;
+use crate::alloc::{AllocError, Allocation, Policy, Problem};
+use crate::orchestrator::{CyclePlanner, Lease, Redispatch, RoundPlan};
+
+/// Membership-aware planner with geometric straggler re-leasing.
+#[derive(Debug, Clone)]
+pub struct ChurnAwarePlanner {
+    /// Split policy re-solved on every membership change.
+    pub split: Policy,
+    /// Multiplicative batch decrease per consecutive deadline miss;
+    /// `≥ 1.0` disables shrinking (drop-on-miss baseline semantics).
+    pub shrink: f64,
+    /// Floor below which a straggler is parked instead of re-leased.
+    pub min_batch: usize,
+    /// Lease deadline clock in seconds; 0 ⇒ the problem's `t_total`.
+    pub lease_s: f64,
+    active: Vec<bool>,
+    /// Current split over the full learner index space (inactive ⇒ 0).
+    planned: Vec<usize>,
+    /// Per-learner `τ_k` fixed at re-split time (solve-clock fill).
+    planned_tau: Vec<u64>,
+    /// Current per-learner lease batch (≤ planned while recovering
+    /// from misses).
+    lease_batch: Vec<usize>,
+    resplits: u64,
+    resplit_failures: u64,
+}
+
+impl ChurnAwarePlanner {
+    /// `initial_active` is the t = 0 membership (see
+    /// [`crate::scenario::ChurnTrace::initial_membership`]).
+    pub fn new(split: Policy, initial_active: Vec<bool>) -> Self {
+        let k = initial_active.len();
+        Self {
+            split,
+            shrink: 0.5,
+            min_batch: 1,
+            lease_s: 0.0,
+            active: initial_active,
+            planned: vec![0; k],
+            planned_tau: vec![0; k],
+            lease_batch: vec![0; k],
+            resplits: 0,
+            resplit_failures: 0,
+        }
+    }
+
+    /// Override the lease deadline clock (deadline pressure when
+    /// shorter than the solve clock).
+    pub fn with_lease_clock(mut self, lease_s: f64) -> Self {
+        self.lease_s = lease_s;
+        self
+    }
+
+    /// Override the geometric shrink factor (`≥ 1.0` = drop-on-miss
+    /// baseline: planned leases are re-dispatched unchanged).
+    pub fn with_shrink(mut self, shrink: f64) -> Self {
+        self.shrink = shrink;
+        self
+    }
+
+    pub fn is_active(&self, k: usize) -> bool {
+        self.active.get(k).copied().unwrap_or(false)
+    }
+
+    /// Current split (full index space; inactive learners hold 0).
+    pub fn planned_batches(&self) -> &[usize] {
+        &self.planned
+    }
+
+    /// Current per-learner lease batches (shrunken under misses).
+    pub fn lease_batches(&self) -> &[usize] {
+        &self.lease_batch
+    }
+
+    pub fn resplits(&self) -> u64 {
+        self.resplits
+    }
+
+    pub fn resplit_failures(&self) -> u64 {
+        self.resplit_failures
+    }
+
+    fn lease_clock(&self, p: &Problem) -> f64 {
+        if self.lease_s > 0.0 {
+            self.lease_s
+        } else {
+            p.t_total
+        }
+    }
+
+    /// Fresh per-lease iteration count for `batch` under the *current*
+    /// channel coefficients and the lease clock (see
+    /// [`crate::learner::Coeffs::tau_fill`]).
+    fn fresh_tau(&self, p: &Problem, k: usize, batch: usize) -> u64 {
+        p.coeffs[k].tau_fill(batch as f64, self.lease_clock(p))
+    }
+
+    /// Re-solve the full-dataset split across the active members.
+    /// Sample conservation (`Σ_k d_k = d`) holds after every successful
+    /// re-split — the allocator solves the same total on the
+    /// active-subset [`subproblem`]. On failure the previous split is
+    /// kept untouched.
+    pub fn resplit(&mut self, p: &Problem) -> Result<(), AllocError> {
+        let k = p.k();
+        if self.active.len() != k {
+            self.active.resize(k, true);
+        }
+        let idx: Vec<usize> = (0..k).filter(|&i| self.active[i]).collect();
+        if idx.is_empty() {
+            return Err(AllocError::Infeasible { reason: "no active learners in shard".into() });
+        }
+        let sub = subproblem(p, &idx);
+        // ETA lifts to per-learner τ_k exactly as the async planner does
+        let split = if self.split == Policy::Eta { Policy::AsyncEta } else { self.split };
+        let alloc = split.allocator().allocate(&sub)?;
+
+        let mut planned = vec![0usize; k];
+        let mut planned_tau = vec![0u64; k];
+        for (j, &i) in idx.iter().enumerate() {
+            let d = alloc.batches[j];
+            planned[i] = d;
+            if d > 0 {
+                // fill the learner's lease against the solve clock
+                planned_tau[i] = p.coeffs[i].tau_fill(d as f64, p.t_total);
+            }
+        }
+        // carry AIMD shrink state through the re-split: a straggler mid
+        // recovery keeps its shrunken lease (capped by its new planned
+        // share) instead of being reset to full size — which would
+        // deterministically miss again under sustained pressure
+        let lease_batch = (0..k)
+            .map(|i| {
+                let old_planned = self.planned.get(i).copied().unwrap_or(0);
+                let old_lease = self.lease_batch.get(i).copied().unwrap_or(0);
+                let recovering = old_planned > 0 && old_lease < old_planned;
+                if planned[i] > 0 && recovering {
+                    planned[i].min(old_lease).max(self.min_batch)
+                } else {
+                    planned[i]
+                }
+            })
+            .collect();
+        self.planned = planned;
+        self.lease_batch = lease_batch;
+        self.planned_tau = planned_tau;
+        self.resplits += 1;
+        Ok(())
+    }
+
+    /// Shrink `k`'s next re-lease batch geometrically; `None` parks the
+    /// straggler (batch floor reached). `shrink ≥ 1` never shrinks.
+    fn shrunken(&mut self, k: usize) -> Option<usize> {
+        let b = self.lease_batch[k];
+        if b == 0 {
+            return None;
+        }
+        if self.shrink >= 1.0 {
+            return Some(b);
+        }
+        if b <= self.min_batch {
+            return None;
+        }
+        let next = ((b as f64) * self.shrink).floor() as usize;
+        let next = next.clamp(self.min_batch, b - 1);
+        self.lease_batch[k] = next;
+        Some(next)
+    }
+}
+
+impl CyclePlanner for ChurnAwarePlanner {
+    fn name(&self) -> &'static str {
+        "churn-aware"
+    }
+
+    fn plan_round(&mut self, p: &Problem, now: f64) -> Result<RoundPlan, AllocError> {
+        self.resplit(p)?;
+        let clock = self.lease_clock(p);
+        let tau = self
+            .planned_tau
+            .iter()
+            .zip(&self.planned)
+            .filter(|(_, &d)| d > 0)
+            .map(|(&t, _)| t)
+            .min()
+            .unwrap_or(1);
+        let alloc = Allocation {
+            tau,
+            tau_k: self.planned_tau.clone(),
+            batches: self.planned.clone(),
+            relaxed_tau: tau as f64,
+            relaxed_batches: self.planned.iter().map(|&b| b as f64).collect(),
+            policy: "churn-aware",
+            sai_steps: 0,
+        };
+        let leases = (0..p.k())
+            .filter(|&k| self.active[k] && self.planned[k] > 0)
+            .map(|k| Lease {
+                learner: k,
+                batch: self.planned[k],
+                tau: self.planned_tau[k],
+                deadline: now + clock,
+            })
+            .collect();
+        Ok(RoundPlan { alloc, leases })
+    }
+
+    fn on_upload(&mut self, learner: usize, p: &Problem, now: f64) -> Redispatch {
+        if !self.is_active(learner) || self.planned[learner] == 0 {
+            return Redispatch::AwaitBarrier;
+        }
+        // punctual upload: grow the batch back toward the planned share
+        let b = self.lease_batch[learner];
+        let next = if b >= self.planned[learner] {
+            self.planned[learner]
+        } else {
+            b.saturating_mul(2).clamp(1, self.planned[learner])
+        };
+        self.lease_batch[learner] = next;
+        let tau = if next == self.planned[learner] {
+            self.planned_tau[learner]
+        } else {
+            self.fresh_tau(p, learner, next)
+        };
+        Redispatch::Immediate(Lease {
+            learner,
+            batch: next,
+            tau,
+            deadline: now + self.lease_clock(p),
+        })
+    }
+
+    fn on_membership(&mut self, learner: usize, joined: bool, p: &Problem, _now: f64) {
+        if learner < self.active.len() {
+            self.active[learner] = joined;
+        }
+        if self.resplit(p).is_err() {
+            // keep the surviving split; the departed learner's share is
+            // parked until the next successful re-split
+            self.resplit_failures += 1;
+            if !joined && learner < self.planned.len() {
+                self.planned[learner] = 0;
+                self.lease_batch[learner] = 0;
+                self.planned_tau[learner] = 0;
+            }
+        }
+    }
+
+    fn on_deadline_miss(&mut self, learner: usize, p: &Problem, now: f64) -> Redispatch {
+        if !self.is_active(learner) || self.planned[learner] == 0 {
+            return Redispatch::AwaitBarrier;
+        }
+        if self.shrink >= 1.0 {
+            // drop-on-miss baseline: re-dispatch the planned lease as-is
+            return Redispatch::Immediate(Lease {
+                learner,
+                batch: self.planned[learner],
+                tau: self.planned_tau[learner],
+                deadline: now + self.lease_clock(p),
+            });
+        }
+        match self.shrunken(learner) {
+            None => Redispatch::AwaitBarrier, // parked
+            Some(batch) => Redispatch::Immediate(Lease {
+                learner,
+                batch,
+                tau: self.fresh_tau(p, learner, batch),
+                deadline: now + self.lease_clock(p),
+            }),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::alloc::testutil::two_class_problem;
+
+    fn planner(p: &Problem) -> ChurnAwarePlanner {
+        ChurnAwarePlanner::new(Policy::Analytical, vec![true; p.k()])
+    }
+
+    #[test]
+    fn plan_round_conserves_samples_and_leases_active_only() {
+        let p = two_class_problem(6, 3000, 30.0);
+        let mut pl = ChurnAwarePlanner::new(Policy::Analytical, {
+            let mut m = vec![true; 6];
+            m[2] = false; // late joiner
+            m
+        });
+        let plan = pl.plan_round(&p, 0.0).unwrap();
+        assert_eq!(plan.alloc.batches.iter().sum::<usize>(), 3000);
+        assert_eq!(plan.alloc.batches[2], 0);
+        assert!(plan.leases.iter().all(|l| l.learner != 2));
+        assert!(plan.leases.iter().all(|l| l.deadline == 30.0));
+        assert!(plan.alloc.is_feasible(&p) || plan.alloc.batches.iter().sum::<usize>() == 3000);
+    }
+
+    #[test]
+    fn membership_changes_resplit_and_conserve() {
+        let p = two_class_problem(6, 3000, 60.0);
+        let mut pl = planner(&p);
+        pl.plan_round(&p, 0.0).unwrap();
+        let before = pl.planned_batches().to_vec();
+
+        pl.on_membership(3, false, &p, 10.0);
+        assert!(!pl.is_active(3));
+        assert_eq!(pl.planned_batches()[3], 0);
+        assert_eq!(pl.planned_batches().iter().sum::<usize>(), 3000);
+        assert_ne!(pl.planned_batches(), &before[..]);
+
+        pl.on_membership(3, true, &p, 20.0);
+        assert!(pl.is_active(3));
+        assert_eq!(pl.planned_batches().iter().sum::<usize>(), 3000);
+        assert!(pl.planned_batches()[3] > 0);
+        assert_eq!(pl.resplits(), 3); // initial + depart + rejoin
+    }
+
+    #[test]
+    fn miss_sequence_shrinks_geometrically_and_parks() {
+        let p = two_class_problem(4, 2000, 30.0);
+        let mut pl = planner(&p);
+        pl.plan_round(&p, 0.0).unwrap();
+        let k = 0;
+        let mut seq = vec![pl.lease_batches()[k]];
+        let mut steps = 0;
+        loop {
+            match pl.on_deadline_miss(k, &p, 1.0) {
+                Redispatch::Immediate(lease) => {
+                    assert_eq!(lease.learner, k);
+                    assert!(lease.tau >= 1);
+                    seq.push(lease.batch);
+                }
+                Redispatch::AwaitBarrier => break,
+            }
+            steps += 1;
+            assert!(steps < 64, "shrink sequence must terminate: {seq:?}");
+        }
+        // strictly decreasing down to the floor, then parked
+        assert!(seq.windows(2).all(|w| w[1] < w[0]), "{seq:?}");
+        assert_eq!(*seq.last().unwrap(), 1);
+    }
+
+    #[test]
+    fn punctual_upload_grows_batch_back() {
+        let p = two_class_problem(4, 2000, 30.0);
+        let mut pl = planner(&p);
+        pl.plan_round(&p, 0.0).unwrap();
+        let k = 1;
+        let planned = pl.planned_batches()[k];
+        // two misses shrink to ~planned/4
+        for _ in 0..2 {
+            assert!(matches!(pl.on_deadline_miss(k, &p, 1.0), Redispatch::Immediate(_)));
+        }
+        let shrunk = pl.lease_batches()[k];
+        assert!(shrunk < planned / 2 + 1);
+        // hits double back up and cap at the planned share
+        let mut last = shrunk;
+        for _ in 0..8 {
+            match pl.on_upload(k, &p, 2.0) {
+                Redispatch::Immediate(lease) => {
+                    assert!(lease.batch >= last);
+                    assert!(lease.batch <= planned);
+                    last = lease.batch;
+                }
+                other => panic!("expected redispatch, got {other:?}"),
+            }
+        }
+        assert_eq!(last, planned);
+    }
+
+    #[test]
+    fn resplit_preserves_straggler_shrink_state() {
+        // a membership change must not hand a mid-recovery straggler its
+        // full share back — under sustained pressure that would
+        // deterministically miss again
+        let p = two_class_problem(6, 3000, 60.0);
+        let mut pl = planner(&p);
+        pl.plan_round(&p, 0.0).unwrap();
+        let k = 0;
+        for _ in 0..2 {
+            assert!(matches!(pl.on_deadline_miss(k, &p, 1.0), Redispatch::Immediate(_)));
+        }
+        let shrunk = pl.lease_batches()[k];
+        assert!(shrunk < pl.planned_batches()[k]);
+
+        pl.on_membership(3, false, &p, 5.0); // unrelated departure
+        assert!(
+            pl.lease_batches()[k] <= shrunk.max(1),
+            "re-split reset the shrink state: {} > {}",
+            pl.lease_batches()[k],
+            shrunk
+        );
+        // learners that were not straggling get their full new share
+        for i in [1usize, 2, 4, 5] {
+            assert_eq!(pl.lease_batches()[i], pl.planned_batches()[i]);
+        }
+    }
+
+    #[test]
+    fn baseline_shrink_one_redispatches_planned_lease() {
+        let p = two_class_problem(4, 2000, 30.0);
+        let mut pl = planner(&p).with_shrink(1.0);
+        pl.plan_round(&p, 0.0).unwrap();
+        let planned = pl.planned_batches()[0];
+        for _ in 0..3 {
+            match pl.on_deadline_miss(0, &p, 1.0) {
+                Redispatch::Immediate(lease) => assert_eq!(lease.batch, planned),
+                other => panic!("baseline must keep re-dispatching, got {other:?}"),
+            }
+        }
+    }
+
+    #[test]
+    fn lease_clock_pressure_sets_deadlines() {
+        let p = two_class_problem(4, 2000, 30.0);
+        let mut pl = planner(&p).with_lease_clock(24.0);
+        let plan = pl.plan_round(&p, 10.0).unwrap();
+        assert!(plan.leases.iter().all(|l| l.deadline == 34.0));
+        // but the split and τ_k are solved against the full T = 30
+        assert!(plan.alloc.is_feasible(&p));
+    }
+
+    #[test]
+    fn departed_and_inactive_learners_are_not_redispatched() {
+        let p = two_class_problem(4, 2000, 30.0);
+        let mut pl = planner(&p);
+        pl.plan_round(&p, 0.0).unwrap();
+        pl.on_membership(2, false, &p, 5.0);
+        assert!(matches!(pl.on_upload(2, &p, 6.0), Redispatch::AwaitBarrier));
+        assert!(matches!(pl.on_deadline_miss(2, &p, 6.0), Redispatch::AwaitBarrier));
+    }
+
+    #[test]
+    fn all_departed_is_an_error() {
+        let p = two_class_problem(2, 100, 30.0);
+        let mut pl = ChurnAwarePlanner::new(Policy::Analytical, vec![false, false]);
+        assert!(pl.plan_round(&p, 0.0).is_err());
+    }
+}

@@ -1,0 +1,666 @@
+//! Sharded multi-cloudlet cluster layer.
+//!
+//! One paper-scale cloudlet is a single [`crate::orchestrator::Orchestrator`]
+//! event queue. A production fleet is many cloudlets — **shards** —
+//! each with its own learner pool, its own event queue, and its own
+//! membership schedule (nodes join, leave, and straggle mid-run). This
+//! module runs a [`crate::scenario::ClusterSpec`] end to end:
+//!
+//! * **Thread-per-shard execution** — every shard runs independently
+//!   (its own scenario seed, fading stream, and planner state) on its
+//!   own OS thread; shard clocks are simulated, so the merge is
+//!   deterministic regardless of host scheduling.
+//! * **Churn** — shards with a non-empty [`crate::scenario::ChurnTrace`]
+//!   run an event loop that feeds `Joined`/`Departed` events into a
+//!   [`ChurnAwarePlanner`], which re-splits the full dataset across the
+//!   surviving members on every membership change (via
+//!   `alloc::selection::subproblem`) and re-leases stragglers with
+//!   geometrically shrunken batches instead of dropping their updates.
+//! * **Hierarchical aggregation** — per-shard [`UpdateRecord`] streams
+//!   are merged by upload time, and the per-shard `updates_vs_simtime`
+//!   / `staleness_vs_simtime` series compose into cluster-level series
+//!   through [`crate::metrics::merge_cumulative`] /
+//!   [`crate::metrics::merge_sorted`].
+//!
+//! A **single-shard, zero-churn** cluster delegates straight to the
+//! orchestrator core, so it reproduces the `SyncPlanner` timeline
+//! bit-for-bit (regression-tested in
+//! `rust/tests/orchestrator_equivalence.rs`).
+
+pub mod churn_planner;
+
+pub use churn_planner::ChurnAwarePlanner;
+
+use std::sync::Arc;
+use std::thread;
+
+use crate::alloc::{AllocError, Policy, TIME_EPS};
+use crate::channel::ChannelSpec;
+use crate::metrics::{merge_cumulative, merge_sorted, Metrics};
+use crate::orchestrator::{
+    schedule_lease, CyclePlanner, Lease, LearnerEvent, Mode, Orchestrator, OrchestratorConfig,
+    OrchestratorReport, Redispatch, UpdateRecord,
+};
+use crate::scenario::{ClusterSpec, Scenario, ShardSpec};
+use crate::sim::events::EventQueue;
+use crate::util::rng::Pcg64;
+
+/// Cluster-wide run configuration, applied to every shard.
+#[derive(Debug, Clone)]
+pub struct ClusterConfig {
+    /// Split policy (re-solved per shard on every membership change).
+    pub policy: Policy,
+    /// Dispatch mode for churn-free shards (churn shards always run
+    /// event-driven, staggered dispatch).
+    pub mode: Mode,
+    /// Solve clock `T`, seconds — the allocation is sized to this.
+    pub t_total: f64,
+    /// Lease deadline clock, seconds; 0 ⇒ `t_total`. Setting it below
+    /// `t_total` applies *deadline pressure*: planned leases become
+    /// deterministic stragglers, exercising the re-lease machinery.
+    pub lease_s: f64,
+    /// Simulated horizon is `cycles × t_total` seconds per shard.
+    pub cycles: usize,
+    /// `true`: a missed deadline still applies the late update and the
+    /// straggler is re-leased with a geometrically shrunken batch.
+    /// `false`: the drop-on-miss baseline — late updates are discarded
+    /// and the planned lease is re-dispatched unchanged.
+    pub straggler_releasing: bool,
+    /// Geometric shrink factor for straggler re-leases.
+    pub lease_shrink: f64,
+    /// Per-redraw log-normal shadowing sigma (dB); 0 = static channels.
+    pub shadow_sigma_db: f64,
+    /// Rayleigh fading redraws between leases.
+    pub rayleigh: bool,
+    /// Base seed; shard `i` draws from `seed + shards[i].seed_offset`.
+    pub seed: u64,
+    /// Record full per-shard event timelines.
+    pub trace: bool,
+}
+
+impl Default for ClusterConfig {
+    fn default() -> Self {
+        Self {
+            policy: Policy::Analytical,
+            mode: Mode::Sync,
+            t_total: 30.0,
+            lease_s: 0.0,
+            cycles: 8,
+            straggler_releasing: false,
+            lease_shrink: 0.5,
+            shadow_sigma_db: 0.0,
+            rayleigh: false,
+            seed: 1,
+            trace: false,
+        }
+    }
+}
+
+/// One shard's full-run report plus its churn/straggler accounting.
+#[derive(Debug, Clone)]
+pub struct ShardReport {
+    pub shard: usize,
+    /// The shard's orchestration report (updates, timeline, horizon).
+    pub report: OrchestratorReport,
+    /// The shard-local metrics registry (event-core series included).
+    pub metrics: Arc<Metrics>,
+    pub joins: u64,
+    pub departs: u64,
+    /// Membership-change re-splits performed (incl. the initial plan).
+    pub resplits: u64,
+    /// Straggler re-leases issued (shrunken-batch re-dispatches).
+    pub releases: u64,
+    pub misses: u64,
+}
+
+/// Cluster-level aggregate of every shard run.
+#[derive(Debug, Clone)]
+pub struct ClusterReport {
+    pub shards: Vec<ShardReport>,
+    /// Every learner round trip across shards, merged by upload time;
+    /// tagged with the originating shard index.
+    pub updates: Vec<(usize, UpdateRecord)>,
+    /// Updates applied cluster-wide (excludes dropped stragglers).
+    pub updates_applied: u64,
+    pub deadline_misses: u64,
+    pub releases: u64,
+    /// Longest shard horizon, seconds.
+    pub horizon: f64,
+}
+
+/// The sharded multi-cloudlet runner.
+pub struct Cluster {
+    pub spec: ClusterSpec,
+    pub cfg: ClusterConfig,
+    /// Cluster-level registry: summed counters plus the hierarchically
+    /// merged `updates_vs_simtime` / `staleness_vs_simtime` series.
+    pub metrics: Arc<Metrics>,
+}
+
+impl Cluster {
+    pub fn new(spec: ClusterSpec, cfg: ClusterConfig) -> Self {
+        Self { spec, cfg, metrics: Arc::new(Metrics::new()) }
+    }
+
+    /// Run every shard (one thread each) and aggregate. Shard clocks
+    /// are simulated, so results are deterministic in the seeds no
+    /// matter how the host schedules the threads. The cluster registry
+    /// is rebuilt from scratch on every call, so repeated runs (e.g.
+    /// bench iterations) do not accumulate stale totals.
+    pub fn run(&self) -> Result<ClusterReport, AllocError> {
+        self.metrics.clear();
+        let handles: Vec<_> = self
+            .spec
+            .shards
+            .iter()
+            .enumerate()
+            .map(|(i, s)| {
+                let spec = s.clone();
+                let cfg = self.cfg.clone();
+                thread::spawn(move || run_shard(i, &spec, &cfg))
+            })
+            .collect();
+        let mut shards = Vec::with_capacity(handles.len());
+        for h in handles {
+            shards.push(h.join().expect("shard thread panicked")?);
+        }
+
+        // ---- hierarchical aggregation ----
+        let mut updates: Vec<(usize, UpdateRecord)> = Vec::new();
+        let mut updates_applied = 0u64;
+        let mut deadline_misses = 0u64;
+        let mut releases = 0u64;
+        let mut horizon = 0.0f64;
+        for sr in &shards {
+            for u in &sr.report.updates {
+                updates.push((sr.shard, u.clone()));
+            }
+            updates_applied += sr.report.updates_applied;
+            deadline_misses += sr.misses;
+            releases += sr.releases;
+            horizon = horizon.max(sr.report.horizon);
+            self.metrics.inc("joins", sr.joins);
+            self.metrics.inc("departs", sr.departs);
+            self.metrics.inc("resplits", sr.resplits);
+        }
+        updates.sort_by(|a, b| a.1.uploaded_at.partial_cmp(&b.1.uploaded_at).unwrap());
+
+        let shard_updates: Vec<Vec<(f64, f64)>> =
+            shards.iter().map(|s| s.metrics.series("updates_vs_simtime")).collect();
+        self.metrics.import_series("updates_vs_simtime", &merge_cumulative(&shard_updates));
+        let shard_stale: Vec<Vec<(f64, f64)>> =
+            shards.iter().map(|s| s.metrics.series("staleness_vs_simtime")).collect();
+        self.metrics.import_series("staleness_vs_simtime", &merge_sorted(&shard_stale));
+        self.metrics.inc("updates_applied", updates_applied);
+        self.metrics.inc("deadline_misses", deadline_misses);
+        self.metrics.inc("releases", releases);
+
+        Ok(ClusterReport {
+            shards,
+            updates,
+            updates_applied,
+            deadline_misses,
+            releases,
+            horizon,
+        })
+    }
+}
+
+/// Run one shard. Churn-free shards without deadline pressure or
+/// re-leasing delegate to the orchestrator core unchanged (this is the
+/// bit-for-bit equivalence path); everything else runs the churn-aware
+/// event loop.
+fn run_shard(shard: usize, spec: &ShardSpec, cfg: &ClusterConfig) -> Result<ShardReport, AllocError> {
+    let shard_seed = cfg.seed + spec.seed_offset;
+    let scenario = Scenario::random_cloudlet(&spec.cloudlet, shard_seed);
+    let pressure = cfg.lease_s > 0.0 && (cfg.lease_s - cfg.t_total).abs() > TIME_EPS;
+    if spec.churn.is_empty() && !cfg.straggler_releasing && !pressure {
+        let metrics = Arc::new(Metrics::new());
+        let ocfg = OrchestratorConfig {
+            mode: cfg.mode,
+            policy: cfg.policy,
+            t_total: cfg.t_total,
+            cycles: cfg.cycles,
+            shadow_sigma_db: cfg.shadow_sigma_db,
+            rayleigh: cfg.rayleigh,
+            seed: shard_seed,
+            trace: cfg.trace,
+            ..OrchestratorConfig::default()
+        };
+        let mut orch = Orchestrator::new(scenario, ocfg).with_metrics(metrics.clone());
+        let report = orch.run()?;
+        let misses = metrics.counter("deadline_misses");
+        return Ok(ShardReport {
+            shard,
+            report,
+            metrics,
+            joins: 0,
+            departs: 0,
+            resplits: 0,
+            releases: 0,
+            misses,
+        });
+    }
+    run_churn_shard(shard, scenario, spec, cfg, shard_seed)
+}
+
+/// The churn-aware per-shard event loop: staggered dispatch (as the
+/// orchestrator's async mode) plus membership events and straggler
+/// re-leasing.
+fn run_churn_shard(
+    shard: usize,
+    mut scenario: Scenario,
+    spec: &ShardSpec,
+    cfg: &ClusterConfig,
+    seed: u64,
+) -> Result<ShardReport, AllocError> {
+    let metrics = Arc::new(Metrics::new());
+    let k_n = scenario.k();
+    let horizon = cfg.cycles as f64 * cfg.t_total;
+    let drop_stragglers = !cfg.straggler_releasing;
+    let shrink = if cfg.straggler_releasing { cfg.lease_shrink } else { 1.0 };
+
+    let mut member = spec.churn.initial_membership(k_n);
+    let mut planner = ChurnAwarePlanner::new(cfg.policy, member.clone())
+        .with_lease_clock(cfg.lease_s)
+        .with_shrink(shrink);
+
+    let fading = cfg.shadow_sigma_db > 0.0 || cfg.rayleigh;
+    let mut fade_rng = Pcg64::new(seed, 0xFAD);
+    let mut fade_spec = ChannelSpec::default();
+    fade_spec.shadow_sigma_db = cfg.shadow_sigma_db;
+    fade_spec.rayleigh = cfg.rayleigh;
+    if fading {
+        scenario.redraw_fading(&fade_spec, &mut fade_rng);
+    }
+    let mut problem = scenario.problem(cfg.t_total);
+
+    let mut q: EventQueue<LearnerEvent> = EventQueue::new();
+    for ev in &spec.churn.events {
+        // out-of-range indices (hand-written JSON traces) are rejected
+        // here rather than panicking a shard thread mid-run
+        if ev.learner >= k_n {
+            return Err(AllocError::Infeasible {
+                reason: format!(
+                    "churn trace references learner {} but the shard has {} learners",
+                    ev.learner, k_n
+                ),
+            });
+        }
+        if ev.at_s <= horizon {
+            let event = if ev.join {
+                LearnerEvent::Joined { learner: ev.learner }
+            } else {
+                LearnerEvent::Departed { learner: ev.learner }
+            };
+            q.schedule(ev.at_s, event);
+        }
+    }
+
+    let mut active: Vec<Option<Lease>> = vec![None; k_n];
+    // upload time each in-flight lease was scheduled for — a lease
+    // cancelled by a departure must not be completed by its stale
+    // Uploaded event after the learner rejoins
+    let mut expected_upload = vec![f64::NAN; k_n];
+    let mut dispatched_at = vec![0.0f64; k_n];
+    let mut snapshot = vec![0u64; k_n];
+    let mut applied = 0u64;
+    let mut misses = 0u64;
+    let mut releases = 0u64;
+    let (mut joins, mut departs) = (0u64, 0u64);
+    let mut updates = Vec::new();
+    let mut timeline = Vec::new();
+
+    let plan = planner.plan_round(&problem, 0.0)?;
+    for lease in plan.leases {
+        let learner = lease.learner;
+        expected_upload[learner] =
+            problem.coeffs[learner].time(lease.tau as f64, lease.batch as f64);
+        schedule_lease(&mut q, &problem, &lease, 0.0, cfg.trace);
+        timeline.push((0.0, LearnerEvent::Dispatched { learner }));
+        active[learner] = Some(lease);
+    }
+
+    while let Some((t, ev)) = q.pop() {
+        if t > horizon + TIME_EPS {
+            break;
+        }
+        match ev {
+            LearnerEvent::Joined { learner } | LearnerEvent::Departed { learner } => {
+                let joined = matches!(ev, LearnerEvent::Joined { .. });
+                member[learner] = joined;
+                if joined {
+                    joins += 1;
+                } else {
+                    departs += 1;
+                    // cancel the in-flight lease: the node is gone
+                    active[learner] = None;
+                }
+                timeline.push((t, ev));
+                if fading {
+                    scenario.redraw_fading(&fade_spec, &mut fade_rng);
+                    problem = scenario.problem(cfg.t_total);
+                }
+                planner.on_membership(learner, joined, &problem, t);
+                // hand a lease (under the new split) to every active
+                // learner that is idle: the joiner itself, and any
+                // learner parked by exhausted re-leases
+                for k in 0..k_n {
+                    if member[k] && active[k].is_none() && t < horizon {
+                        if let Redispatch::Immediate(lease) = planner.on_upload(k, &problem, t) {
+                            expected_upload[k] =
+                                t + problem.coeffs[k].time(lease.tau as f64, lease.batch as f64);
+                            schedule_lease(&mut q, &problem, &lease, t, cfg.trace);
+                            timeline.push((t, LearnerEvent::Dispatched { learner: k }));
+                            snapshot[k] = applied;
+                            dispatched_at[k] = t;
+                            active[k] = Some(lease);
+                        }
+                    }
+                }
+            }
+            LearnerEvent::Uploaded { learner } => {
+                // ignore stale uploads of cancelled leases
+                if active[learner].is_none() || t != expected_upload[learner] {
+                    continue;
+                }
+                let lease = active[learner].take().expect("checked above");
+                let missed = t > lease.deadline + TIME_EPS;
+                let staleness = applied - snapshot[learner];
+                if missed {
+                    misses += 1;
+                    metrics.inc("deadline_misses", 1);
+                    timeline.push((t, LearnerEvent::DeadlineMissed { learner }));
+                } else {
+                    timeline.push((t, ev));
+                }
+                if !missed || !drop_stragglers {
+                    applied += 1;
+                    metrics.observe("staleness", staleness as f64);
+                    metrics.record("staleness_vs_simtime", t, staleness as f64);
+                    metrics.inc_series("updates_applied", "updates_vs_simtime", t, 1);
+                }
+                updates.push(UpdateRecord {
+                    learner,
+                    dispatched_at: dispatched_at[learner],
+                    uploaded_at: t,
+                    tau: lease.tau,
+                    batch: lease.batch,
+                    staleness,
+                    missed_deadline: missed,
+                });
+                if t < horizon && member[learner] {
+                    if fading {
+                        scenario.redraw_fading(&fade_spec, &mut fade_rng);
+                        problem = scenario.problem(cfg.t_total);
+                    }
+                    let decision = if missed {
+                        planner.on_deadline_miss(learner, &problem, t)
+                    } else {
+                        planner.on_upload(learner, &problem, t)
+                    };
+                    if let Redispatch::Immediate(lease) = decision {
+                        if missed && cfg.straggler_releasing {
+                            releases += 1;
+                            metrics.inc("releases", 1);
+                        }
+                        expected_upload[learner] =
+                            t + problem.coeffs[learner].time(lease.tau as f64, lease.batch as f64);
+                        schedule_lease(&mut q, &problem, &lease, t, cfg.trace);
+                        timeline.push((t, LearnerEvent::Dispatched { learner }));
+                        snapshot[learner] = applied;
+                        dispatched_at[learner] = t;
+                        active[learner] = Some(lease);
+                    }
+                }
+            }
+            LearnerEvent::SendComplete { .. } | LearnerEvent::IterationDone { .. } => {
+                if cfg.trace {
+                    timeline.push((t, ev));
+                }
+            }
+            // Dispatched / DeadlineMissed are emitted by this loop
+            // itself, never scheduled.
+            _ => {}
+        }
+    }
+
+    metrics.inc("joins", joins);
+    metrics.inc("departs", departs);
+    metrics.inc("resplits", planner.resplits());
+    Ok(ShardReport {
+        shard,
+        report: OrchestratorReport {
+            rounds: Vec::new(),
+            updates,
+            timeline,
+            horizon,
+            updates_applied: applied,
+        },
+        metrics,
+        joins,
+        departs,
+        resplits: planner.resplits(),
+        releases,
+        misses,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::scenario::{ChurnEvent, ChurnTrace};
+
+    fn cluster(shards: usize, k: usize, cfg: ClusterConfig) -> Cluster {
+        Cluster::new(ClusterSpec::uniform("pedestrian", shards, k).unwrap(), cfg)
+    }
+
+    #[test]
+    fn multi_shard_sync_aggregates_per_shard_updates() {
+        let cfg = ClusterConfig { cycles: 4, ..ClusterConfig::default() };
+        let report = cluster(3, 5, cfg).run().unwrap();
+        assert_eq!(report.shards.len(), 3);
+        // every shard: 5 learners × 4 cycles
+        for sr in &report.shards {
+            assert_eq!(sr.report.updates_applied, 20);
+            assert_eq!(sr.misses, 0);
+        }
+        assert_eq!(report.updates_applied, 60);
+        assert_eq!(report.updates.len(), 60);
+        // merged update stream is upload-time ordered
+        assert!(report
+            .updates
+            .windows(2)
+            .all(|w| w[0].1.uploaded_at <= w[1].1.uploaded_at));
+        assert_eq!(report.horizon, 120.0);
+    }
+
+    #[test]
+    fn cluster_metrics_compose_across_shards() {
+        let c = cluster(4, 4, ClusterConfig { cycles: 3, ..ClusterConfig::default() });
+        let report = c.run().unwrap();
+        assert_eq!(c.metrics.counter("updates_applied"), report.updates_applied);
+        let merged = c.metrics.series("updates_vs_simtime");
+        // 4 shards × 3 barriers each contribute one point
+        assert_eq!(merged.len(), 12);
+        // cumulative: monotone in both axes, final = cluster total
+        assert!(merged.windows(2).all(|w| w[0].0 <= w[1].0 && w[0].1 <= w[1].1));
+        assert_eq!(merged.last().unwrap().1, report.updates_applied as f64);
+    }
+
+    #[test]
+    fn shards_differ_by_seed_offset() {
+        let report =
+            cluster(2, 6, ClusterConfig { cycles: 2, ..ClusterConfig::default() }).run().unwrap();
+        let t0: Vec<f64> =
+            report.shards[0].report.updates.iter().map(|u| u.uploaded_at).collect();
+        let t1: Vec<f64> =
+            report.shards[1].report.updates.iter().map(|u| u.uploaded_at).collect();
+        assert_ne!(t0, t1, "shards must draw distinct scenarios");
+    }
+
+    #[test]
+    fn cluster_runs_are_deterministic() {
+        let mk = || {
+            let spec = ClusterSpec::uniform("pedestrian", 3, 5)
+                .unwrap()
+                .with_synthetic_churn(240.0, 2, 9);
+            let cfg = ClusterConfig {
+                mode: Mode::Async,
+                straggler_releasing: true,
+                lease_s: 25.0,
+                rayleigh: true,
+                ..ClusterConfig::default()
+            };
+            Cluster::new(spec, cfg).run().unwrap()
+        };
+        let a = mk();
+        let b = mk();
+        assert_eq!(a.updates_applied, b.updates_applied);
+        assert_eq!(a.deadline_misses, b.deadline_misses);
+        assert_eq!(a.updates.len(), b.updates.len());
+        for (x, y) in a.updates.iter().zip(&b.updates) {
+            assert_eq!(x.0, y.0);
+            assert_eq!(x.1.uploaded_at, y.1.uploaded_at);
+            assert_eq!(x.1.batch, y.1.batch);
+        }
+    }
+
+    #[test]
+    fn churn_trace_drives_membership_and_resplits() {
+        let mut spec = ClusterSpec::uniform("pedestrian", 1, 6).unwrap();
+        spec.shards[0].churn = ChurnTrace::new(vec![
+            ChurnEvent { at_s: 50.0, learner: 2, join: false },
+            ChurnEvent { at_s: 120.0, learner: 2, join: true },
+            ChurnEvent { at_s: 80.0, learner: 4, join: true }, // late joiner
+        ]);
+        let cfg = ClusterConfig { cycles: 8, ..ClusterConfig::default() };
+        let report = Cluster::new(spec, cfg).run().unwrap();
+        let sr = &report.shards[0];
+        assert_eq!(sr.joins, 2);
+        assert_eq!(sr.departs, 1);
+        // initial plan + three membership changes
+        assert_eq!(sr.resplits, 4);
+        // learner 4 starts inactive: no upload before its join
+        assert!(sr
+            .report
+            .updates
+            .iter()
+            .all(|u| u.learner != 4 || u.uploaded_at > 80.0));
+        // learner 2 is silent while departed (its cancelled lease's
+        // stale upload must not be counted)
+        assert!(sr.report.updates.iter().all(|u| {
+            u.learner != 2 || u.dispatched_at < 50.0 - TIME_EPS || u.dispatched_at >= 120.0
+        }));
+        // membership events are in the timeline
+        let churn_events = sr
+            .report
+            .timeline
+            .iter()
+            .filter(|(_, e)| matches!(e, LearnerEvent::Joined { .. } | LearnerEvent::Departed { .. }))
+            .count();
+        assert_eq!(churn_events, 3);
+    }
+
+    #[test]
+    fn out_of_range_churn_index_is_an_error_not_a_panic() {
+        let mut spec = ClusterSpec::uniform("pedestrian", 1, 4).unwrap();
+        spec.shards[0].churn =
+            ChurnTrace::new(vec![ChurnEvent { at_s: 10.0, learner: 9, join: false }]);
+        let err = Cluster::new(spec, ClusterConfig::default()).run().unwrap_err();
+        assert!(format!("{err}").contains("learner 9"), "{err}");
+    }
+
+    #[test]
+    fn repeated_runs_do_not_accumulate_metrics() {
+        let c = cluster(2, 4, ClusterConfig { cycles: 3, ..ClusterConfig::default() });
+        let first = c.run().unwrap();
+        let second = c.run().unwrap();
+        assert_eq!(first.updates_applied, second.updates_applied);
+        assert_eq!(c.metrics.counter("updates_applied"), second.updates_applied);
+        let series = c.metrics.series("updates_vs_simtime");
+        assert_eq!(series.last().unwrap().1, second.updates_applied as f64);
+        assert!(series.windows(2).all(|w| w[0].1 <= w[1].1), "stale points survived clear()");
+    }
+
+    #[test]
+    fn deadline_pressure_releases_beat_drop_baseline() {
+        // lease deadlines at 80% of the solve clock: planned leases are
+        // deterministic stragglers. Re-leasing applies the late updates
+        // and recovers with shrunken batches; the baseline drops them.
+        let spec = || {
+            ClusterSpec::uniform("pedestrian", 4, 6)
+                .unwrap()
+                .with_synthetic_churn(240.0, 2, 31)
+        };
+        let base_cfg = ClusterConfig {
+            mode: Mode::Async,
+            t_total: 30.0,
+            lease_s: 24.0,
+            cycles: 8,
+            ..ClusterConfig::default()
+        };
+        let releasing = Cluster::new(
+            spec(),
+            ClusterConfig { straggler_releasing: true, ..base_cfg.clone() },
+        )
+        .run()
+        .unwrap();
+        let dropping = Cluster::new(
+            spec(),
+            ClusterConfig { straggler_releasing: false, ..base_cfg },
+        )
+        .run()
+        .unwrap();
+        assert!(dropping.deadline_misses > 0, "pressure must manufacture stragglers");
+        assert!(releasing.releases > 0, "stragglers must be re-leased");
+        assert!(
+            releasing.updates_applied > dropping.updates_applied,
+            "re-leasing {} must beat drop-on-miss {}",
+            releasing.updates_applied,
+            dropping.updates_applied
+        );
+        // dropped updates are recorded but not applied
+        let dropped = dropping
+            .updates
+            .iter()
+            .filter(|(_, u)| u.missed_deadline)
+            .count() as u64;
+        assert_eq!(dropped, dropping.deadline_misses);
+        // every upload is either applied or dropped, never both
+        assert_eq!(dropping.updates.len() as u64, dropping.updates_applied + dropped);
+    }
+
+    #[test]
+    fn releases_shrink_batches_monotonically_per_straggler_run() {
+        // under sustained pressure every straggler's consecutive-miss
+        // re-leases carry strictly shrinking batches
+        let spec = ClusterSpec::uniform("pedestrian", 1, 6).unwrap();
+        let cfg = ClusterConfig {
+            mode: Mode::Async,
+            lease_s: 24.0,
+            cycles: 6,
+            straggler_releasing: true,
+            ..ClusterConfig::default()
+        };
+        let report = Cluster::new(spec, cfg).run().unwrap();
+        let sr = &report.shards[0];
+        assert!(sr.misses > 0);
+        for learner in 0..6 {
+            let mut prev: Option<(bool, usize)> = None;
+            for u in sr.report.updates.iter().filter(|u| u.learner == learner) {
+                if let Some((was_missed, prev_batch)) = prev {
+                    if was_missed {
+                        assert!(
+                            u.batch < prev_batch,
+                            "learner {learner}: re-lease after a miss must shrink \
+                             ({prev_batch} -> {})",
+                            u.batch
+                        );
+                    }
+                }
+                prev = Some((u.missed_deadline, u.batch));
+            }
+        }
+    }
+}

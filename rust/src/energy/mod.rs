@@ -144,6 +144,49 @@ pub fn cap_tau_to_energy_budget(
     out
 }
 
+/// Clamp one **lease**'s iteration count so its learner-side energy
+/// (uplink transmission + `τ` local iterations over `batch` samples)
+/// fits a per-lease battery budget `budget_j`. Built on
+/// [`cap_tau_to_energy_budget`] over a single-learner sub-allocation —
+/// this is the per-lease form the event-driven orchestrator's
+/// `EnergyCapPlanner` applies on every (re-)dispatch
+/// (arXiv:2012.00143's energy-constrained async allocation). A
+/// non-positive budget or a zero batch leaves `tau` untouched; the
+/// result never drops below one iteration (a lease must do *some*
+/// work — the deadline machinery handles the fallout).
+pub fn cap_lease_tau(
+    l: &Learner,
+    model: &ModelSpec,
+    batch: usize,
+    tau: u64,
+    budget_j: f64,
+    kappa: f64,
+) -> u64 {
+    if budget_j <= 0.0 || batch == 0 {
+        return tau;
+    }
+    // Single-lease sub-problem. The lease's deadline feasibility is the
+    // caller's concern (under fading a τ=1 lease may already be late),
+    // so the validation clock here is unbounded.
+    let p = Problem {
+        coeffs: vec![l.coeffs(model)],
+        total_samples: batch,
+        t_total: f64::INFINITY,
+    };
+    let alloc = Allocation {
+        tau,
+        tau_k: vec![tau],
+        batches: vec![batch],
+        relaxed_tau: tau as f64,
+        relaxed_batches: vec![batch as f64],
+        policy: "lease",
+        sai_steps: 0,
+    };
+    let capped =
+        cap_tau_to_energy_budget(std::slice::from_ref(l), model, &p, &alloc, budget_j, kappa);
+    capped.tau_for(0).max(1)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -246,6 +289,37 @@ mod tests {
             "energy {} budget {budget}",
             e.learner_total()
         );
+    }
+
+    #[test]
+    fn cap_lease_tau_fits_budget_and_respects_disabled() {
+        let (s, _, p) = setup(4, 30.0);
+        let a = Policy::AsyncEta.allocator().allocate(&p).unwrap();
+        let l = &s.learners[0];
+        let (batch, tau) = (a.batches[0], a.tau_for(0));
+        assert!(tau > 4, "need headroom for the cap to bite, got τ={tau}");
+        let lease_energy = |t: u64| {
+            let one = Allocation {
+                tau: t,
+                tau_k: vec![t],
+                batches: vec![batch],
+                relaxed_tau: t as f64,
+                relaxed_batches: vec![batch as f64],
+                policy: "test",
+                sai_steps: 0,
+            };
+            cycle_energy(std::slice::from_ref(l), &s.model, &one, DEFAULT_KAPPA).learner_total()
+        };
+        let unbounded = lease_energy(tau);
+        // generous or disabled budgets leave the lease untouched
+        assert_eq!(cap_lease_tau(l, &s.model, batch, tau, unbounded * 2.0, DEFAULT_KAPPA), tau);
+        assert_eq!(cap_lease_tau(l, &s.model, batch, tau, 0.0, DEFAULT_KAPPA), tau);
+        assert_eq!(cap_lease_tau(l, &s.model, 0, tau, 1e-9, DEFAULT_KAPPA), tau);
+        // a binding budget shrinks τ but never below one iteration
+        let budget = unbounded / 2.0;
+        let capped = cap_lease_tau(l, &s.model, batch, tau, budget, DEFAULT_KAPPA);
+        assert!(capped < tau && capped >= 1, "capped {capped} vs τ {tau}");
+        assert!(lease_energy(capped) <= budget * 1.001 || capped == 1);
     }
 
     #[test]

@@ -51,6 +51,20 @@ impl Coeffs {
         }
         (t_total - self.c0 - self.c1 * d_k) / (self.c2 * d_k)
     }
+
+    /// Integer lease fill `⌊τ_max⌋` clamped to ≥ 1 — the "as many local
+    /// iterations as this lease clock fits" rule shared by every async
+    /// planner. A deeply faded learner still runs one iteration (its
+    /// upload gets flagged as a deadline miss instead of stalling the
+    /// state machine forever).
+    pub fn tau_fill(&self, d_k: f64, t_total: f64) -> u64 {
+        let t = self.tau_max(d_k, t_total);
+        if t.is_finite() && t >= 1.0 {
+            t.floor() as u64
+        } else {
+            1
+        }
+    }
 }
 
 /// One wireless edge learner.

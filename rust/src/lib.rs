@@ -14,8 +14,11 @@
 //! Layering (see `DESIGN.md`):
 //! * **L3 (this crate)** — the [`orchestrator`] event-driven core
 //!   (learner lifecycle state machine + [`orchestrator::CyclePlanner`]
-//!   policies, barrier-sync and staggered-async), the [`coordinator`]
-//!   real-training `Trainer` on top of it, allocation solvers, wireless
+//!   policies, barrier-sync and staggered-async), the [`cluster`]
+//!   sharded multi-cloudlet layer on top of it (thread-per-shard event
+//!   queues, churn-aware re-splitting, straggler re-leasing,
+//!   hierarchical metric aggregation), the [`coordinator`]
+//!   real-training `Trainer`, allocation solvers, wireless
 //!   channel + compute substrates, discrete-event simulator, PJRT
 //!   runtime, metrics, CLI.
 //! * **L2/L1 (build-time Python)** — JAX MLP fwd/bwd over Pallas fused
@@ -57,6 +60,7 @@ pub mod alloc;
 pub mod energy;
 pub mod sim;
 pub mod orchestrator;
+pub mod cluster;
 pub mod runtime;
 pub mod coordinator;
 pub mod metrics;
@@ -66,12 +70,13 @@ pub mod experiments;
 pub mod prelude {
     pub use crate::alloc::{Allocation, AllocError, Policy, Problem, TaskAllocator};
     pub use crate::channel::{Link, PathLoss};
+    pub use crate::cluster::{Cluster, ClusterConfig, ClusterReport, ShardReport};
     pub use crate::compute::ComputeProfile;
     pub use crate::coordinator::{Orchestrator, TrainConfig, Trainer};
     pub use crate::dataset::DatasetSpec;
     pub use crate::learner::Learner;
     pub use crate::models::ModelSpec;
     pub use crate::orchestrator::{CyclePlanner, Mode, OrchestratorConfig};
-    pub use crate::scenario::{CloudletConfig, Scenario};
+    pub use crate::scenario::{ChurnTrace, CloudletConfig, ClusterSpec, Scenario};
     pub use crate::util::rng::Pcg64;
 }

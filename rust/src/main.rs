@@ -2,7 +2,7 @@
 //!
 //! ```text
 //! mel solve    --task pedestrian --k 10 --t 30 [--policy all|eta|analytical|sai|opti] [--seed N]
-//! mel figure   <fig1|fig2|fig3a|fig3b|gains|all> [--out results/] [--seed N]
+//! mel figure   <fig1|fig2|fig3a|fig3b|figE|figAsync|figCluster|gains|all> [--out results/] [--seed N]
 //! mel train    --task pedestrian --k 4 --t 30 --cycles 20 [--policy ...] [--lr 0.5] [--d 2048]
 //! mel scenario --task mnist --k 10 [--seed N] [--describe]
 //! mel info
@@ -44,7 +44,7 @@ fn print_help() {
         },
         Command {
             name: "figure",
-            about: "reproduce a paper figure (fig1 fig2 fig3a fig3b figE figAsync gains all)",
+            about: "reproduce a paper figure (fig1 fig2 fig3a fig3b figE figAsync figCluster gains all)",
             usage: "fig1 --out results/ --seed 42",
         },
         Command {
@@ -157,7 +157,7 @@ fn cmd_figure(args: &Args) -> i32 {
     let seed = args.get_u64("seed", 42);
     let out = args.opt_str("out").map(str::to_string);
     let figs: Vec<&str> = if which == "all" {
-        vec!["fig1", "fig2", "fig3a", "fig3b", "figE", "figAsync", "gains"]
+        vec!["fig1", "fig2", "fig3a", "fig3b", "figE", "figAsync", "figCluster", "gains"]
     } else {
         vec![which]
     };
@@ -170,13 +170,14 @@ fn cmd_figure(args: &Args) -> i32 {
                     eprintln!("WARNING: a headline claim did not hold");
                 }
             }
-            "fig1" | "fig2" | "fig3a" | "fig3b" | "figE" | "figAsync" => {
+            "fig1" | "fig2" | "fig3a" | "fig3b" | "figE" | "figAsync" | "figCluster" => {
                 let data = match f {
                     "fig1" => experiments::fig1(seed),
                     "fig2" => experiments::fig2(seed),
                     "fig3a" => experiments::fig3a(seed),
                     "figE" => experiments::fig_e(seed),
                     "figAsync" => experiments::fig_async(seed),
+                    "figCluster" => experiments::fig_cluster(seed),
                     _ => experiments::fig3b(seed),
                 };
                 print!("{}", data.table().render());

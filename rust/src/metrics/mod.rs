@@ -168,6 +168,59 @@ impl Metrics {
         }
         out
     }
+
+    /// Install an externally built series (e.g. a cross-shard merge)
+    /// into this registry, appending after any existing points.
+    pub fn import_series(&self, name: &str, pts: &[(f64, f64)]) {
+        let mut g = self.inner.lock().unwrap();
+        g.series.entry(name.into()).or_default().extend_from_slice(pts);
+    }
+
+    /// Drop every counter, gauge, summary, and series. Aggregators that
+    /// rebuild the registry per run (e.g. `cluster::Cluster::run`) call
+    /// this so repeated runs do not accumulate stale totals.
+    pub fn clear(&self) {
+        let mut g = self.inner.lock().unwrap();
+        g.counters.clear();
+        g.gauges.clear();
+        g.summaries.clear();
+        g.series.clear();
+    }
+}
+
+/// Merge **cumulative** per-source series (each monotone in both axes,
+/// like `updates_vs_simtime`) into one cluster-level cumulative series:
+/// at every event time the merged value is the sum of every source's
+/// running total. This is how the sharded cluster layer composes the
+/// event-core metrics hierarchically — each shard counts on its own
+/// clock, and the merge re-accumulates the union of their deltas in
+/// global time order.
+pub fn merge_cumulative(series: &[Vec<(f64, f64)>]) -> Vec<(f64, f64)> {
+    let mut deltas: Vec<(f64, f64)> = Vec::new();
+    for s in series {
+        let mut prev = 0.0;
+        for &(t, total) in s {
+            deltas.push((t, total - prev));
+            prev = total;
+        }
+    }
+    deltas.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+    let mut total = 0.0;
+    deltas
+        .into_iter()
+        .map(|(t, d)| {
+            total += d;
+            (t, total)
+        })
+        .collect()
+}
+
+/// Merge **point** per-source series (independent samples keyed by
+/// time, like `staleness_vs_simtime`) into one time-ordered series.
+pub fn merge_sorted(series: &[Vec<(f64, f64)>]) -> Vec<(f64, f64)> {
+    let mut out: Vec<(f64, f64)> = series.iter().flatten().copied().collect();
+    out.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+    out
 }
 
 #[cfg(test)]
@@ -218,6 +271,49 @@ mod tests {
         let text = j.to_pretty();
         let back = Json::parse(&text).unwrap();
         assert_eq!(back.get("counters").unwrap().get("a").unwrap().as_u64().unwrap(), 1);
+    }
+
+    #[test]
+    fn merge_cumulative_sums_running_totals() {
+        // two shards counting on their own clocks
+        let a = vec![(1.0, 1.0), (4.0, 2.0), (9.0, 5.0)];
+        let b = vec![(2.0, 3.0), (4.5, 4.0)];
+        let merged = merge_cumulative(&[a, b]);
+        assert_eq!(
+            merged,
+            vec![(1.0, 1.0), (2.0, 4.0), (4.0, 5.0), (4.5, 6.0), (9.0, 9.0)]
+        );
+        // monotone in both axes, final total is the sum of finals
+        assert!(merged.windows(2).all(|w| w[0].0 <= w[1].0 && w[0].1 <= w[1].1));
+        assert_eq!(merged.last().unwrap().1, 9.0);
+        assert!(merge_cumulative(&[]).is_empty());
+    }
+
+    #[test]
+    fn merge_sorted_orders_points() {
+        let merged = merge_sorted(&[vec![(3.0, 7.0), (5.0, 1.0)], vec![(1.0, 2.0), (4.0, 0.0)]]);
+        assert_eq!(merged.iter().map(|p| p.0).collect::<Vec<_>>(), vec![1.0, 3.0, 4.0, 5.0]);
+    }
+
+    #[test]
+    fn import_series_installs_points() {
+        let m = Metrics::new();
+        m.import_series("merged", &[(1.0, 2.0), (3.0, 4.0)]);
+        assert_eq!(m.series("merged"), vec![(1.0, 2.0), (3.0, 4.0)]);
+    }
+
+    #[test]
+    fn clear_empties_the_registry() {
+        let m = Metrics::new();
+        m.inc("a", 3);
+        m.gauge("g", 1.0);
+        m.observe("s", 2.0);
+        m.record("curve", 1.0, 2.0);
+        m.clear();
+        assert_eq!(m.counter("a"), 0);
+        assert_eq!(m.gauge_value("g"), None);
+        assert_eq!(m.summary_mean("s"), None);
+        assert!(m.series("curve").is_empty());
     }
 
     #[test]

@@ -1,0 +1,206 @@
+//! Energy-capped asynchronous planning (arXiv:2012.00143).
+//!
+//! [`EnergyCapPlanner`] wraps [`AsyncEtaPlanner`]: the batch split and
+//! the staggered per-learner `τ_k` come from the inner planner, but
+//! every lease — initial dispatch and every re-dispatch — has its `τ_k`
+//! clamped via [`crate::energy::cap_lease_tau`] (built on
+//! `energy::cap_tau_to_energy_budget`) so the learner-side energy of
+//! the lease fits a per-lease battery budget. The trade is explicit:
+//! tighter budgets mean fewer local iterations per lease, which lowers
+//! per-update learning work but *also* shortens round trips — staleness
+//! drops while battery life stretches.
+//!
+//! Selected by the orchestrator for [`crate::alloc::Policy::AsyncEtaEnergy`]
+//! or whenever `OrchestratorConfig::energy_budget_j > 0` (the
+//! JSON-loadable `CloudletConfig` knob `async.energy_budget_j`).
+
+use crate::alloc::{AllocError, Policy, Problem};
+use crate::energy::{self, DEFAULT_KAPPA};
+use crate::learner::Learner;
+use crate::models::ModelSpec;
+use crate::scenario::Scenario;
+
+use super::planner::{AsyncEtaPlanner, CyclePlanner, Lease, Redispatch, RoundPlan};
+
+/// [`AsyncEtaPlanner`] with per-lease `τ_k` clamped to an energy budget.
+#[derive(Debug, Clone)]
+pub struct EnergyCapPlanner {
+    inner: AsyncEtaPlanner,
+    learners: Vec<Learner>,
+    model: ModelSpec,
+    /// Per-lease per-learner budget, joules; ≤ 0 disables the cap.
+    pub budget_j: f64,
+    /// Effective switched capacitance κ of the compute-energy model.
+    pub kappa: f64,
+}
+
+impl EnergyCapPlanner {
+    /// Capture the concrete learner pool and model from `scenario` —
+    /// energy is a property of devices, not of the abstract
+    /// [`Problem`] coefficients the planner trait traffics in.
+    pub fn new(split: Policy, scenario: &Scenario, budget_j: f64) -> Self {
+        Self {
+            inner: AsyncEtaPlanner::new(split),
+            learners: scenario.learners.clone(),
+            model: scenario.model.clone(),
+            budget_j,
+            kappa: DEFAULT_KAPPA,
+        }
+    }
+
+    fn cap(&self, lease: &mut Lease) {
+        lease.tau = energy::cap_lease_tau(
+            &self.learners[lease.learner],
+            &self.model,
+            lease.batch,
+            lease.tau,
+            self.budget_j,
+            self.kappa,
+        );
+    }
+}
+
+impl CyclePlanner for EnergyCapPlanner {
+    fn name(&self) -> &'static str {
+        "async-eta-energy"
+    }
+
+    fn plan_round(&mut self, p: &Problem, now: f64) -> Result<RoundPlan, AllocError> {
+        let mut plan = self.inner.plan_round(p, now)?;
+        for lease in &mut plan.leases {
+            self.cap(lease);
+            // keep the reported allocation consistent with what is
+            // actually dispatched
+            if lease.learner < plan.alloc.tau_k.len() {
+                plan.alloc.tau_k[lease.learner] = lease.tau;
+            }
+        }
+        if !plan.alloc.tau_k.is_empty() {
+            plan.alloc.tau = plan
+                .alloc
+                .tau_k
+                .iter()
+                .zip(&plan.alloc.batches)
+                .filter(|(_, &d)| d > 0)
+                .map(|(&t, _)| t)
+                .min()
+                .unwrap_or(plan.alloc.tau);
+        }
+        Ok(plan)
+    }
+
+    fn on_upload(&mut self, learner: usize, p: &Problem, now: f64) -> Redispatch {
+        match self.inner.on_upload(learner, p, now) {
+            Redispatch::Immediate(mut lease) => {
+                self.cap(&mut lease);
+                Redispatch::Immediate(lease)
+            }
+            other => other,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::energy::cycle_energy;
+    use crate::scenario::CloudletConfig;
+
+    fn scenario(k: usize, seed: u64) -> Scenario {
+        Scenario::random_cloudlet(&CloudletConfig::pedestrian(k), seed)
+    }
+
+    /// Learner-side energy of one lease.
+    fn lease_energy(s: &Scenario, lease: &Lease) -> f64 {
+        let mut batches = vec![0usize; s.k()];
+        let mut tau_k = vec![0u64; s.k()];
+        batches[lease.learner] = lease.batch;
+        tau_k[lease.learner] = lease.tau;
+        let alloc = crate::alloc::Allocation {
+            tau: lease.tau,
+            tau_k,
+            batches,
+            relaxed_tau: lease.tau as f64,
+            relaxed_batches: vec![0.0; s.k()],
+            policy: "test",
+            sai_steps: 0,
+        };
+        cycle_energy(&s.learners, &s.model, &alloc, DEFAULT_KAPPA).learner_total()
+    }
+
+    #[test]
+    fn capped_plan_leases_fit_budget() {
+        let s = scenario(6, 1);
+        let p = s.problem(30.0);
+        // measure the uncapped plan, then re-plan with half that energy
+        let mut free = AsyncEtaPlanner::new(Policy::Eta);
+        let free_plan = free.plan_round(&p, 0.0).unwrap();
+        let max_lease_j =
+            free_plan.leases.iter().map(|l| lease_energy(&s, l)).fold(0.0, f64::max);
+        assert!(max_lease_j > 0.0);
+
+        let budget = max_lease_j / 2.0;
+        let mut capped = EnergyCapPlanner::new(Policy::Eta, &s, budget);
+        let plan = capped.plan_round(&p, 0.0).unwrap();
+        assert_eq!(plan.leases.len(), free_plan.leases.len());
+        for (lease, free_lease) in plan.leases.iter().zip(&free_plan.leases) {
+            assert_eq!(lease.batch, free_lease.batch, "the cap must not touch the split");
+            assert!(lease.tau <= free_lease.tau);
+            assert!(
+                lease_energy(&s, lease) <= budget * 1.001 || lease.tau == 1,
+                "learner {} lease blows the budget",
+                lease.learner
+            );
+        }
+        // at least one lease was actually clamped
+        assert!(plan.leases.iter().zip(&free_plan.leases).any(|(a, b)| a.tau < b.tau));
+        // the reported allocation reflects the clamped counts
+        for lease in &plan.leases {
+            assert_eq!(plan.alloc.tau_for(lease.learner), lease.tau);
+        }
+    }
+
+    #[test]
+    fn redispatch_is_capped_too() {
+        let s = scenario(6, 2);
+        let p = s.problem(30.0);
+        let mut free = AsyncEtaPlanner::new(Policy::Eta);
+        let free_plan = free.plan_round(&p, 0.0).unwrap();
+        let max_lease_j =
+            free_plan.leases.iter().map(|l| lease_energy(&s, l)).fold(0.0, f64::max);
+
+        let budget = max_lease_j / 3.0;
+        let mut planner = EnergyCapPlanner::new(Policy::Eta, &s, budget);
+        planner.plan_round(&p, 0.0).unwrap();
+        let mut saw_clamp = false;
+        for learner in 0..s.k() {
+            match planner.on_upload(learner, &p, 10.0) {
+                Redispatch::Immediate(lease) => {
+                    assert!(
+                        lease_energy(&s, &lease) <= budget * 1.001 || lease.tau == 1,
+                        "learner {learner}"
+                    );
+                    let uncapped = match free.on_upload(learner, &p, 10.0) {
+                        Redispatch::Immediate(l) => l.tau,
+                        _ => unreachable!("async planner always redispatches enrolled learners"),
+                    };
+                    saw_clamp |= lease.tau < uncapped;
+                }
+                Redispatch::AwaitBarrier => {}
+            }
+        }
+        assert!(saw_clamp, "a third of the max lease energy must clamp someone");
+    }
+
+    #[test]
+    fn zero_budget_is_transparent() {
+        let s = scenario(5, 3);
+        let p = s.problem(30.0);
+        let mut capped = EnergyCapPlanner::new(Policy::Eta, &s, 0.0);
+        let mut free = AsyncEtaPlanner::new(Policy::Eta);
+        let a = capped.plan_round(&p, 0.0).unwrap();
+        let b = free.plan_round(&p, 0.0).unwrap();
+        assert_eq!(a.leases, b.leases);
+        assert_eq!(a.alloc.tau, b.alloc.tau);
+    }
+}

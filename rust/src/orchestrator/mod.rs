@@ -26,8 +26,10 @@
 //! event timestamps, which is the only index that stays meaningful once
 //! cycles are staggered per learner.
 
+pub mod energy;
 pub mod planner;
 
+pub use energy::EnergyCapPlanner;
 pub use planner::{
     leases_from_alloc, AsyncEtaPlanner, CyclePlanner, Lease, Redispatch, RoundPlan, SyncPlanner,
 };
@@ -54,6 +56,11 @@ pub enum LearnerEvent {
     Uploaded { learner: usize },
     /// The learner's lease deadline passed before its upload landed.
     DeadlineMissed { learner: usize },
+    /// The learner joined the pool mid-run (scenario churn trace).
+    Joined { learner: usize },
+    /// The learner departed the pool mid-run; its in-flight lease (if
+    /// any) is cancelled.
+    Departed { learner: usize },
 }
 
 impl LearnerEvent {
@@ -63,7 +70,9 @@ impl LearnerEvent {
             | LearnerEvent::SendComplete { learner }
             | LearnerEvent::IterationDone { learner, .. }
             | LearnerEvent::Uploaded { learner }
-            | LearnerEvent::DeadlineMissed { learner } => learner,
+            | LearnerEvent::DeadlineMissed { learner }
+            | LearnerEvent::Joined { learner }
+            | LearnerEvent::Departed { learner } => learner,
         }
     }
 }
@@ -102,6 +111,11 @@ pub struct OrchestratorConfig {
     pub seed: u64,
     /// Record the full event timeline (adds O(K·τ) iteration events).
     pub trace: bool,
+    /// Per-lease per-learner energy budget in joules (async mode only);
+    /// 0 ⇒ uncapped. Positive values (or `Policy::AsyncEtaEnergy`)
+    /// select the [`EnergyCapPlanner`], which clamps each lease's `τ_k`
+    /// via [`crate::energy::cap_tau_to_energy_budget`].
+    pub energy_budget_j: f64,
 }
 
 impl Default for OrchestratorConfig {
@@ -117,6 +131,7 @@ impl Default for OrchestratorConfig {
             rayleigh: false,
             seed: 1,
             trace: false,
+            energy_budget_j: 0.0,
         }
     }
 }
@@ -146,6 +161,7 @@ impl OrchestratorConfig {
             shadow_sigma_db: c.channel.shadow_sigma_db,
             rayleigh: c.channel.rayleigh,
             seed,
+            energy_budget_j: asy.energy_budget_j,
             ..Self::default()
         }
     }
@@ -211,11 +227,23 @@ pub struct Orchestrator {
 
 impl Orchestrator {
     /// Build with the mode's default planner: [`SyncPlanner`] for
-    /// [`Mode::Sync`], [`AsyncEtaPlanner`] for [`Mode::Async`].
+    /// [`Mode::Sync`], [`AsyncEtaPlanner`] for [`Mode::Async`] — or the
+    /// [`EnergyCapPlanner`] wrapper when the policy is
+    /// [`Policy::AsyncEtaEnergy`] or `energy_budget_j` is positive.
     pub fn new(scenario: Scenario, cfg: OrchestratorConfig) -> Self {
         let planner: Box<dyn CyclePlanner> = match cfg.mode {
             Mode::Sync => Box::new(SyncPlanner::new(cfg.policy)),
-            Mode::Async => Box::new(AsyncEtaPlanner::new(cfg.policy)),
+            Mode::Async => {
+                if cfg.policy == Policy::AsyncEtaEnergy || cfg.energy_budget_j > 0.0 {
+                    // AsyncEtaEnergy is the equal split (the allocator is
+                    // AsyncEta's); the cap itself is planner-level.
+                    let split =
+                        if cfg.policy == Policy::AsyncEtaEnergy { Policy::Eta } else { cfg.policy };
+                    Box::new(EnergyCapPlanner::new(split, &scenario, cfg.energy_budget_j))
+                } else {
+                    Box::new(AsyncEtaPlanner::new(cfg.policy))
+                }
+            }
         };
         Self::with_planner(scenario, cfg, planner)
     }
@@ -458,7 +486,14 @@ impl Orchestrator {
                             self.maybe_refade();
                             problem = self.scenario.problem(self.cfg.t_total);
                         }
-                        match self.planner.on_upload(learner, &problem, t) {
+                        let decision = if missed {
+                            // straggler-aware planners shrink the next
+                            // lease; the default re-dispatches as usual
+                            self.planner.on_deadline_miss(learner, &problem, t)
+                        } else {
+                            self.planner.on_upload(learner, &problem, t)
+                        };
+                        match decision {
                             Redispatch::Immediate(lease) => {
                                 schedule_lease(&mut q, &problem, &lease, t, self.cfg.trace);
                                 timeline.push((t, LearnerEvent::Dispatched { learner }));
@@ -495,7 +530,8 @@ impl Orchestrator {
 /// Schedule one lease's lifecycle events at `start` (eq. 12/13 phase
 /// times from the *current* channel coefficients). Iteration events are
 /// only scheduled when tracing — they never move the completion time.
-fn schedule_lease(
+/// Shared with the cluster layer's per-shard churn runner.
+pub(crate) fn schedule_lease(
     q: &mut EventQueue<LearnerEvent>,
     problem: &Problem,
     lease: &Lease,
@@ -675,6 +711,49 @@ mod tests {
         );
         assert_eq!(cfg2.mode, Mode::Sync);
         assert_eq!(cfg2.t_total, 30.0);
+    }
+
+    #[test]
+    fn async_energy_policy_caps_iteration_counts() {
+        use crate::energy::{cycle_energy, DEFAULT_KAPPA};
+        let s = scenario(6, 7);
+        let p = s.problem(30.0);
+        // per-lease learner energies of the uncapped async-ETA plan
+        let a = Policy::AsyncEta.allocator().allocate(&p).unwrap();
+        let e = cycle_energy(&s.learners, &s.model, &a, DEFAULT_KAPPA);
+        let max_lease_j = e.per_learner.iter().map(|l| l.total()).fold(0.0, f64::max);
+        assert!(max_lease_j > 0.0);
+
+        let mut cfg = OrchestratorConfig {
+            mode: Mode::Async,
+            policy: Policy::AsyncEtaEnergy,
+            cycles: 2,
+            ..OrchestratorConfig::default()
+        };
+        cfg.energy_budget_j = max_lease_j / 2.0;
+        let mut capped_orch = Orchestrator::new(s.clone(), cfg);
+        let capped = capped_orch.run().unwrap();
+
+        let free_cfg = OrchestratorConfig {
+            mode: Mode::Async,
+            policy: Policy::Eta,
+            cycles: 2,
+            ..OrchestratorConfig::default()
+        };
+        let mut free_orch = Orchestrator::new(s, free_cfg);
+        let free = free_orch.run().unwrap();
+
+        let max_tau = |r: &OrchestratorReport| r.updates.iter().map(|u| u.tau).max().unwrap();
+        // the cap bites: the hungriest lease runs fewer local iterations
+        assert!(
+            max_tau(&capped) < max_tau(&free),
+            "capped {} vs free {}",
+            max_tau(&capped),
+            max_tau(&free)
+        );
+        // shorter leases still cycle and apply updates
+        assert!(capped.updates_applied >= free.updates_applied);
+        assert!(capped.updates.iter().all(|u| !u.missed_deadline));
     }
 
     #[test]

@@ -61,6 +61,23 @@ pub trait CyclePlanner: Send {
     /// `p` reflects the channel state at decision time (fading may have
     /// been redrawn since the lease was issued).
     fn on_upload(&mut self, learner: usize, p: &Problem, now: f64) -> Redispatch;
+
+    /// Membership change at `now`: `learner` joined (`true`) or departed
+    /// (`false`) the pool. Planners with a fixed pool ignore this; the
+    /// churn-aware planner (`crate::cluster::ChurnAwarePlanner`)
+    /// re-splits the batch allocation across the surviving members.
+    fn on_membership(&mut self, _learner: usize, _joined: bool, _p: &Problem, _now: f64) {}
+
+    /// Decide what happens when `learner`'s upload lands *after* its
+    /// lease deadline. The default keeps the historical orchestrator
+    /// behaviour — re-dispatch exactly as a punctual upload would (the
+    /// drop-vs-apply accounting stays with the orchestrator's
+    /// `drop_stragglers`). Straggler-aware planners override this to
+    /// re-lease with a shrunken batch, or to park the learner
+    /// ([`Redispatch::AwaitBarrier`]).
+    fn on_deadline_miss(&mut self, learner: usize, p: &Problem, now: f64) -> Redispatch {
+        self.on_upload(learner, p, now)
+    }
 }
 
 /// Build the per-learner leases of an allocation: batch `d_k`,
@@ -133,16 +150,9 @@ impl AsyncEtaPlanner {
     }
 
     /// Per-learner lease iteration count under the current channel
-    /// state; at least 1 so a deeply faded learner still cycles (its
-    /// upload will be flagged as a deadline miss instead of stalling the
-    /// state machine forever).
+    /// state (see [`crate::learner::Coeffs::tau_fill`]).
     fn lease_tau(p: &Problem, k: usize, batch: usize) -> u64 {
-        let t = p.coeffs[k].tau_max(batch as f64, p.t_total);
-        if t.is_finite() && t >= 1.0 {
-            t.floor() as u64
-        } else {
-            1
-        }
+        p.coeffs[k].tau_fill(batch as f64, p.t_total)
     }
 }
 

@@ -1,0 +1,301 @@
+//! Node-churn traces and the multi-cloudlet [`ClusterSpec`] — the
+//! scenario-side substrate of the sharded cluster layer
+//! (`crate::cluster`).
+//!
+//! The paper's §I future work ("node selection/arrangements") and the
+//! async follow-ups (arXiv:1905.01656, arXiv:2012.00143) assume fleets
+//! whose membership is *not* fixed: nodes join, leave, and straggle
+//! mid-run. A [`ChurnTrace`] makes that scenario-defined and
+//! JSON-loadable: a time-ordered list of [`ChurnEvent`]s referencing
+//! learner indices of the shard's cloudlet. A learner whose *first*
+//! event is a join starts the run **inactive** (a late joiner); every
+//! other learner starts active.
+//!
+//! JSON schema (one shard):
+//!
+//! ```json
+//! {
+//!   "cloudlet": { ... CloudletConfig ... },
+//!   "seed_offset": 1,
+//!   "churn": [
+//!     { "at_s": 45.0, "learner": 3, "action": "depart" },
+//!     { "at_s": 90.0, "learner": 3, "action": "join" },
+//!     { "at_s": 60.0, "learner": 5, "action": "join" }
+//!   ]
+//! }
+//! ```
+//!
+//! and a [`ClusterSpec`] is `{ "shards": [ <shard>, ... ] }`.
+
+use crate::util::json::{Json, JsonError};
+use crate::util::rng::{Pcg64, Rng};
+
+use super::CloudletConfig;
+
+/// One membership change: `learner` joins or departs at `at_s` seconds
+/// of simulated shard time.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ChurnEvent {
+    pub at_s: f64,
+    pub learner: usize,
+    /// `true` = join, `false` = depart.
+    pub join: bool,
+}
+
+impl ChurnEvent {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("at_s", Json::Num(self.at_s)),
+            ("learner", Json::Num(self.learner as f64)),
+            ("action", Json::Str(if self.join { "join" } else { "depart" }.into())),
+        ])
+    }
+
+    pub fn from_json(v: &Json) -> Result<Self, JsonError> {
+        let action = v.get("action")?.as_str()?;
+        let join = match action {
+            "join" => true,
+            "depart" => false,
+            other => {
+                return Err(JsonError::Access(format!(
+                    "churn action must be \"join\" or \"depart\", got {other:?}"
+                )))
+            }
+        };
+        Ok(Self { at_s: v.get("at_s")?.as_f64()?, learner: v.get("learner")?.as_usize()?, join })
+    }
+}
+
+/// A shard's membership schedule over the run.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct ChurnTrace {
+    pub events: Vec<ChurnEvent>,
+}
+
+impl ChurnTrace {
+    pub fn new(mut events: Vec<ChurnEvent>) -> Self {
+        events.sort_by(|a, b| a.at_s.partial_cmp(&b.at_s).unwrap());
+        Self { events }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.events.is_empty()
+    }
+
+    pub fn len(&self) -> usize {
+        self.events.len()
+    }
+
+    /// Initial membership for a `k`-learner shard: a learner starts
+    /// inactive iff its earliest trace event is a join (it arrives
+    /// later); everyone else is enrolled from t = 0.
+    pub fn initial_membership(&self, k: usize) -> Vec<bool> {
+        let mut member = vec![true; k];
+        for learner in 0..k {
+            let first = self
+                .events
+                .iter()
+                .filter(|e| e.learner == learner)
+                .min_by(|a, b| a.at_s.partial_cmp(&b.at_s).unwrap());
+            if let Some(ev) = first {
+                member[learner] = !ev.join;
+            }
+        }
+        member
+    }
+
+    /// Synthetic churn for sweeps/benches: `churners` distinct learners
+    /// drawn from `1..k` (learner 0 never churns, so the shard is never
+    /// empty). Even picks get a mid-run depart→rejoin pair; odd picks
+    /// are late joiners (first event is a join ⇒ they start inactive).
+    pub fn synthetic(k: usize, horizon: f64, churners: usize, seed: u64) -> Self {
+        let mut rng = Pcg64::new(seed, 0xC42); // churn stream
+        let mut pool: Vec<usize> = (1..k).collect();
+        let mut events = Vec::new();
+        for i in 0..churners.min(pool.len()) {
+            let pick = rng.below(pool.len() as u64) as usize;
+            let learner = pool.swap_remove(pick);
+            if i % 2 == 0 {
+                let depart = rng.uniform(0.15 * horizon, 0.5 * horizon);
+                let rejoin = depart + rng.uniform(0.1 * horizon, 0.3 * horizon);
+                events.push(ChurnEvent { at_s: depart, learner, join: false });
+                events.push(ChurnEvent { at_s: rejoin, learner, join: true });
+            } else {
+                let arrive = rng.uniform(0.2 * horizon, 0.6 * horizon);
+                events.push(ChurnEvent { at_s: arrive, learner, join: true });
+            }
+        }
+        Self::new(events)
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::Arr(self.events.iter().map(ChurnEvent::to_json).collect())
+    }
+
+    pub fn from_json(v: &Json) -> Result<Self, JsonError> {
+        let mut events = Vec::new();
+        for e in v.as_arr()? {
+            events.push(ChurnEvent::from_json(e)?);
+        }
+        Ok(Self::new(events))
+    }
+}
+
+/// One cloudlet shard of a cluster: its generator config, a seed offset
+/// (shard scenarios draw from `base_seed + seed_offset`), and a churn
+/// trace.
+#[derive(Debug, Clone)]
+pub struct ShardSpec {
+    pub cloudlet: CloudletConfig,
+    pub seed_offset: u64,
+    pub churn: ChurnTrace,
+}
+
+impl ShardSpec {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("cloudlet", self.cloudlet.to_json()),
+            ("seed_offset", Json::Num(self.seed_offset as f64)),
+            ("churn", self.churn.to_json()),
+        ])
+    }
+
+    pub fn from_json(v: &Json) -> Result<Self, JsonError> {
+        Ok(Self {
+            cloudlet: CloudletConfig::from_json(v.get("cloudlet")?)?,
+            seed_offset: v.opt("seed_offset").map(|x| x.as_u64()).transpose()?.unwrap_or(0),
+            churn: match v.opt("churn") {
+                Some(c) => ChurnTrace::from_json(c)?,
+                None => ChurnTrace::default(),
+            },
+        })
+    }
+}
+
+/// A multi-cloudlet cluster: one [`ShardSpec`] per cloudlet shard. Each
+/// shard runs its own event queue (`crate::cluster`); the cluster layer
+/// merges their update streams hierarchically.
+#[derive(Debug, Clone)]
+pub struct ClusterSpec {
+    pub shards: Vec<ShardSpec>,
+}
+
+impl ClusterSpec {
+    /// `shards` identical cloudlets (task × K), no churn, shard `i`
+    /// seeded at `base_seed + i`.
+    pub fn uniform(task: &str, shards: usize, k: usize) -> Option<Self> {
+        let cloudlet = CloudletConfig::by_task(task, k)?;
+        Some(Self {
+            shards: (0..shards)
+                .map(|i| ShardSpec {
+                    cloudlet: cloudlet.clone(),
+                    seed_offset: i as u64,
+                    churn: ChurnTrace::default(),
+                })
+                .collect(),
+        })
+    }
+
+    /// Attach a synthetic churn trace (`churners` per shard, distinct
+    /// per-shard streams) to every shard.
+    pub fn with_synthetic_churn(mut self, horizon: f64, churners: usize, seed: u64) -> Self {
+        for (i, shard) in self.shards.iter_mut().enumerate() {
+            let k = shard.cloudlet.num_learners;
+            shard.churn = ChurnTrace::synthetic(k, horizon, churners, seed ^ (0x5AD + i as u64));
+        }
+        self
+    }
+
+    pub fn num_shards(&self) -> usize {
+        self.shards.len()
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![("shards", Json::Arr(self.shards.iter().map(ShardSpec::to_json).collect()))])
+    }
+
+    pub fn from_json(v: &Json) -> Result<Self, JsonError> {
+        let mut shards = Vec::new();
+        for s in v.get("shards")?.as_arr()? {
+            shards.push(ShardSpec::from_json(s)?);
+        }
+        Ok(Self { shards })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn initial_membership_from_first_event() {
+        let trace = ChurnTrace::new(vec![
+            ChurnEvent { at_s: 50.0, learner: 1, join: false },
+            ChurnEvent { at_s: 90.0, learner: 1, join: true },
+            ChurnEvent { at_s: 60.0, learner: 2, join: true },
+        ]);
+        let member = trace.initial_membership(4);
+        // learner 1 departs first ⇒ starts active; learner 2's first
+        // event is a join ⇒ late joiner, starts inactive
+        assert_eq!(member, vec![true, true, false, true]);
+        // empty trace: everyone enrolled
+        assert_eq!(ChurnTrace::default().initial_membership(3), vec![true; 3]);
+    }
+
+    #[test]
+    fn trace_events_sorted_by_time() {
+        let trace = ChurnTrace::new(vec![
+            ChurnEvent { at_s: 9.0, learner: 0, join: true },
+            ChurnEvent { at_s: 1.0, learner: 1, join: false },
+        ]);
+        assert!(trace.events.windows(2).all(|w| w[0].at_s <= w[1].at_s));
+    }
+
+    #[test]
+    fn synthetic_trace_spares_learner_zero_and_fits_horizon() {
+        let trace = ChurnTrace::synthetic(8, 240.0, 4, 7);
+        assert!(!trace.is_empty());
+        assert!(trace.events.iter().all(|e| e.learner != 0 && e.learner < 8));
+        assert!(trace.events.iter().all(|e| e.at_s > 0.0 && e.at_s < 240.0));
+        // deterministic in the seed
+        assert_eq!(trace, ChurnTrace::synthetic(8, 240.0, 4, 7));
+        assert_ne!(trace, ChurnTrace::synthetic(8, 240.0, 4, 8));
+        // at least one late joiner (starts inactive) with ≥2 churners
+        let member = trace.initial_membership(8);
+        assert!(member.iter().any(|m| !m));
+        assert!(member[0]);
+    }
+
+    #[test]
+    fn cluster_spec_json_round_trip() {
+        let spec = ClusterSpec::uniform("pedestrian", 3, 5)
+            .unwrap()
+            .with_synthetic_churn(240.0, 2, 42);
+        let text = spec.to_json().to_pretty();
+        let back = ClusterSpec::from_json(&Json::parse(&text).unwrap()).unwrap();
+        assert_eq!(back.num_shards(), 3);
+        for (a, b) in spec.shards.iter().zip(&back.shards) {
+            assert_eq!(a.seed_offset, b.seed_offset);
+            assert_eq!(a.cloudlet.num_learners, b.cloudlet.num_learners);
+            assert_eq!(a.churn, b.churn);
+        }
+        // legacy shard without a churn block defaults to no churn
+        let legacy = Json::parse(
+            &Json::obj(vec![("cloudlet", CloudletConfig::mnist(4).to_json())]).to_pretty(),
+        )
+        .unwrap();
+        let shard = ShardSpec::from_json(&legacy).unwrap();
+        assert!(shard.churn.is_empty());
+        assert_eq!(shard.seed_offset, 0);
+    }
+
+    #[test]
+    fn churn_event_rejects_bad_action() {
+        let bad = Json::obj(vec![
+            ("at_s", Json::Num(1.0)),
+            ("learner", Json::Num(0.0)),
+            ("action", Json::Str("explode".into())),
+        ]);
+        assert!(ChurnEvent::from_json(&bad).is_err());
+    }
+}

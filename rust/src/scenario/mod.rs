@@ -6,6 +6,10 @@
 //! task. [`Scenario::problem`] packages the per-learner coefficients
 //! into the [`crate::alloc::Problem`] every solver consumes.
 
+pub mod churn;
+
+pub use churn::{ChurnEvent, ChurnTrace, ClusterSpec, ShardSpec};
+
 use crate::alloc::Problem;
 use crate::channel::ChannelSpec;
 use crate::compute::ComputeProfile;
@@ -27,11 +31,16 @@ pub struct AsyncSpec {
     pub lease_s: f64,
     /// Drop updates whose upload misses the lease deadline.
     pub drop_stragglers: bool,
+    /// Per-lease per-learner energy budget in joules (arXiv:2012.00143);
+    /// 0 ⇒ uncapped. When set (or when the policy is
+    /// `Policy::AsyncEtaEnergy`), the async planner clamps each lease's
+    /// `τ_k` via `energy::cap_tau_to_energy_budget`.
+    pub energy_budget_j: f64,
 }
 
 impl Default for AsyncSpec {
     fn default() -> Self {
-        Self { enabled: false, lease_s: 0.0, drop_stragglers: true }
+        Self { enabled: false, lease_s: 0.0, drop_stragglers: true, energy_budget_j: 0.0 }
     }
 }
 
@@ -41,6 +50,7 @@ impl AsyncSpec {
             ("enabled", Json::Bool(self.enabled)),
             ("lease_s", Json::Num(self.lease_s)),
             ("drop_stragglers", Json::Bool(self.drop_stragglers)),
+            ("energy_budget_j", Json::Num(self.energy_budget_j)),
         ])
     }
 
@@ -54,6 +64,11 @@ impl AsyncSpec {
                 .map(|x| x.as_bool())
                 .transpose()?
                 .unwrap_or(d.drop_stragglers),
+            energy_budget_j: v
+                .opt("energy_budget_j")
+                .map(|x| x.as_f64())
+                .transpose()?
+                .unwrap_or(d.energy_budget_j),
         })
     }
 }
@@ -347,7 +362,12 @@ mod tests {
     #[test]
     fn cloudlet_config_json_round_trip_with_async_knobs() {
         let mut cfg = CloudletConfig::pedestrian(12);
-        cfg.async_mode = AsyncSpec { enabled: true, lease_s: 15.0, drop_stragglers: false };
+        cfg.async_mode = AsyncSpec {
+            enabled: true,
+            lease_s: 15.0,
+            drop_stragglers: false,
+            energy_budget_j: 0.25,
+        };
         cfg.channel.rayleigh = true;
         let text = cfg.to_json().to_pretty();
         let back = CloudletConfig::from_json(&Json::parse(&text).unwrap()).unwrap();

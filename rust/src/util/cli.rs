@@ -12,6 +12,29 @@
 //! ```
 
 use std::collections::BTreeMap;
+use std::fmt;
+
+/// A malformed option value (`--k notanint`). The panicking accessors
+/// map this to a *usage error* — message on stderr and exit code 2 —
+/// never a panic/backtrace; the `try_*` accessors surface it for
+/// callers that want to recover.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ArgError(pub String);
+
+impl fmt::Display for ArgError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.0)
+    }
+}
+
+impl std::error::Error for ArgError {}
+
+/// Report a usage error and exit with the conventional code 2.
+fn usage_exit(e: &ArgError) -> ! {
+    eprintln!("mel: usage error: {e}");
+    eprintln!("(run with no arguments for usage)");
+    std::process::exit(2);
+}
 
 /// Parsed command line: positionals + key/value options + boolean flags.
 #[derive(Debug, Clone, Default)]
@@ -79,14 +102,61 @@ impl Args {
         self.options.get(key).map(|s| s.as_str())
     }
 
-    pub fn get_u64(&self, key: &str, default: u64) -> u64 {
+    /// `--key` as u64; `Ok(None)` when absent, `Err` when malformed.
+    pub fn try_get_u64(&self, key: &str) -> Result<Option<u64>, ArgError> {
         self.options
             .get(key)
             .map(|s| {
                 s.parse()
-                    .unwrap_or_else(|_| panic!("--{key} expects an integer, got {s:?}"))
+                    .map_err(|_| ArgError(format!("--{key} expects an integer, got {s:?}")))
             })
-            .unwrap_or(default)
+            .transpose()
+    }
+
+    /// `--key` as f64; `Ok(None)` when absent, `Err` when malformed.
+    pub fn try_get_f64(&self, key: &str) -> Result<Option<f64>, ArgError> {
+        self.options
+            .get(key)
+            .map(|s| {
+                s.parse().map_err(|_| ArgError(format!("--{key} expects a number, got {s:?}")))
+            })
+            .transpose()
+    }
+
+    /// Comma-separated u64 list; `Ok(None)` when absent.
+    pub fn try_get_u64_list(&self, key: &str) -> Result<Option<Vec<u64>>, ArgError> {
+        match self.options.get(key) {
+            None => Ok(None),
+            Some(s) => s
+                .split(',')
+                .map(|x| {
+                    x.trim()
+                        .parse()
+                        .map_err(|_| ArgError(format!("--{key}: bad integer {x:?}")))
+                })
+                .collect::<Result<Vec<u64>, ArgError>>()
+                .map(Some),
+        }
+    }
+
+    /// Comma-separated f64 list; `Ok(None)` when absent.
+    pub fn try_get_f64_list(&self, key: &str) -> Result<Option<Vec<f64>>, ArgError> {
+        match self.options.get(key) {
+            None => Ok(None),
+            Some(s) => s
+                .split(',')
+                .map(|x| {
+                    x.trim()
+                        .parse()
+                        .map_err(|_| ArgError(format!("--{key}: bad number {x:?}")))
+                })
+                .collect::<Result<Vec<f64>, ArgError>>()
+                .map(Some),
+        }
+    }
+
+    pub fn get_u64(&self, key: &str, default: u64) -> u64 {
+        self.try_get_u64(key).unwrap_or_else(|e| usage_exit(&e)).unwrap_or(default)
     }
 
     pub fn get_usize(&self, key: &str, default: usize) -> usize {
@@ -94,43 +164,22 @@ impl Args {
     }
 
     pub fn get_f64(&self, key: &str, default: f64) -> f64 {
-        self.options
-            .get(key)
-            .map(|s| {
-                s.parse()
-                    .unwrap_or_else(|_| panic!("--{key} expects a number, got {s:?}"))
-            })
-            .unwrap_or(default)
+        self.try_get_f64(key).unwrap_or_else(|e| usage_exit(&e)).unwrap_or(default)
     }
 
     /// Comma-separated list of f64 (`--ts 30,60,90`).
     pub fn get_f64_list(&self, key: &str, default: &[f64]) -> Vec<f64> {
-        match self.options.get(key) {
-            None => default.to_vec(),
-            Some(s) => s
-                .split(',')
-                .map(|x| {
-                    x.trim()
-                        .parse()
-                        .unwrap_or_else(|_| panic!("--{key}: bad number {x:?}"))
-                })
-                .collect(),
-        }
+        self.try_get_f64_list(key)
+            .unwrap_or_else(|e| usage_exit(&e))
+            .unwrap_or_else(|| default.to_vec())
     }
 
     /// Comma-separated list of usize (`--ks 5,10,20`).
     pub fn get_usize_list(&self, key: &str, default: &[usize]) -> Vec<usize> {
-        match self.options.get(key) {
-            None => default.to_vec(),
-            Some(s) => s
-                .split(',')
-                .map(|x| {
-                    x.trim()
-                        .parse()
-                        .unwrap_or_else(|_| panic!("--{key}: bad integer {x:?}"))
-                })
-                .collect(),
-        }
+        self.try_get_u64_list(key)
+            .unwrap_or_else(|e| usage_exit(&e))
+            .map(|v| v.into_iter().map(|x| x as usize).collect())
+            .unwrap_or_else(|| default.to_vec())
     }
 }
 
@@ -218,8 +267,19 @@ mod tests {
     }
 
     #[test]
-    #[should_panic(expected = "expects an integer")]
-    fn bad_integer_panics() {
-        parse("x --k notanint").get_u64("k", 0);
+    fn malformed_values_surface_as_errors_not_panics() {
+        let a = parse("x --k notanint --t 3.5.1 --ks 1,two --ts 1,z");
+        let e = a.try_get_u64("k").unwrap_err();
+        assert!(e.to_string().contains("--k expects an integer"), "{e}");
+        let e = a.try_get_f64("t").unwrap_err();
+        assert!(e.to_string().contains("--t expects a number"), "{e}");
+        assert!(a.try_get_u64_list("ks").is_err());
+        assert!(a.try_get_f64_list("ts").is_err());
+        // well-formed and absent keys keep working through try_*
+        let b = parse("x --k 7 --ts 1,2.5");
+        assert_eq!(b.try_get_u64("k").unwrap(), Some(7));
+        assert_eq!(b.try_get_u64("absent").unwrap(), None);
+        assert_eq!(b.try_get_f64_list("ts").unwrap(), Some(vec![1.0, 2.5]));
+        assert_eq!(b.try_get_u64_list("absent").unwrap(), None);
     }
 }

@@ -119,6 +119,32 @@ fn figure_fig_e_renders() {
 }
 
 #[test]
+fn malformed_numeric_flags_are_usage_errors_not_panics() {
+    // --k expects an integer: proper usage error, nonzero exit, no panic
+    let (_, stderr, ok) = mel(&["solve", "--k", "notanint"]);
+    assert!(!ok);
+    assert!(stderr.contains("--k expects an integer"), "stderr: {stderr}");
+    assert!(!stderr.contains("panicked"), "must not panic: {stderr}");
+    // float and list flags too
+    let (_, stderr, ok) = mel(&["solve", "--t", "3.5.1"]);
+    assert!(!ok);
+    assert!(stderr.contains("--t expects a number"), "stderr: {stderr}");
+    assert!(!stderr.contains("panicked"), "must not panic: {stderr}");
+    let (_, stderr, ok) = mel(&["sweep", "--ks", "5,ten"]);
+    assert!(!ok);
+    assert!(stderr.contains("bad integer"), "stderr: {stderr}");
+    assert!(!stderr.contains("panicked"), "must not panic: {stderr}");
+}
+
+#[test]
+fn figure_fig_cluster_renders() {
+    let (stdout, stderr, ok) = mel(&["figure", "figCluster", "--seed", "42"]);
+    assert!(ok, "stderr: {stderr}");
+    assert!(stdout.contains("updates churn re-lease"), "{stdout}");
+    assert!(stdout.contains("updates sync"), "{stdout}");
+}
+
+#[test]
 fn sweep_renders_and_writes_csv() {
     let (stdout, stderr, ok) = mel(&[
         "sweep", "--task", "mnist", "--ks", "5,10", "--ts", "60,120", "--policy", "sai",

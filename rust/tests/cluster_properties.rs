@@ -1,0 +1,156 @@
+//! Property tests for the churn-aware cluster layer:
+//!
+//! 1. **Sample conservation** — after every Join/Depart re-split the
+//!    planned batches sum to the full dataset (`Σ_k d_k = d`), with
+//!    departed learners holding exactly 0.
+//! 2. **Straggler re-lease geometry** — the consecutive-miss re-lease
+//!    batch sequence is strictly monotonically shrinking and
+//!    terminates (the learner is parked at the batch floor), for every
+//!    shrink factor in (0, 1).
+
+use mel::alloc::{Policy, Problem};
+use mel::cluster::ChurnAwarePlanner;
+use mel::learner::Coeffs;
+use mel::orchestrator::{CyclePlanner, Redispatch};
+use mel::util::rng::{Pcg64, Rng};
+
+/// Random heterogeneous problem in the calibrated two-class envelope —
+/// generous `T` so any non-empty subset of learners stays feasible
+/// (conservation is only claimed for successful re-splits).
+fn random_problem(rng: &mut Pcg64, k: usize, d: usize) -> Problem {
+    let coeffs = (0..k)
+        .map(|i| {
+            let fast = i % 2 == 0;
+            let base = if fast { 651e-6 } else { 4464e-6 };
+            Coeffs {
+                c2: base * rng.uniform(0.5, 2.0),
+                c1: 36e-6 * rng.uniform(0.5, 2.0),
+                c0: 0.086 * rng.uniform(0.5, 2.0),
+            }
+        })
+        .collect();
+    Problem { coeffs, total_samples: d, t_total: 200.0 }
+}
+
+#[test]
+fn resplit_conserves_samples_across_random_churn_sequences() {
+    let mut rng = Pcg64::seeded(2024);
+    for trial in 0..30 {
+        let k = 3 + (rng.below(9) as usize);
+        let d = 1000 + (rng.below(4000) as usize);
+        let p = random_problem(&mut rng, k, d);
+        let mut planner = ChurnAwarePlanner::new(Policy::Analytical, vec![true; k]);
+        let plan = planner.plan_round(&p, 0.0).unwrap();
+        assert_eq!(
+            plan.alloc.batches.iter().sum::<usize>(),
+            d,
+            "trial {trial}: initial split must place every sample"
+        );
+
+        let mut member = vec![true; k];
+        let mut t = 1.0;
+        for _step in 0..20 {
+            // random membership toggle, always keeping ≥ 2 active
+            let learner = rng.below(k as u64) as usize;
+            let joined = !member[learner];
+            if !joined && member.iter().filter(|&&m| m).count() <= 2 {
+                continue;
+            }
+            member[learner] = joined;
+            planner.on_membership(learner, joined, &p, t);
+            t += 1.0;
+
+            assert_eq!(planner.resplit_failures(), 0, "trial {trial}: generous T");
+            let planned = planner.planned_batches();
+            assert_eq!(
+                planned.iter().sum::<usize>(),
+                d,
+                "trial {trial}: conservation after {}",
+                if joined { "join" } else { "depart" }
+            );
+            for (idx, &b) in planned.iter().enumerate() {
+                if !member[idx] {
+                    assert_eq!(b, 0, "trial {trial}: departed learner {idx} holds samples");
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn straggler_release_sequence_shrinks_monotonically_and_terminates() {
+    let mut rng = Pcg64::seeded(77);
+    for trial in 0..30 {
+        let k = 2 + (rng.below(8) as usize);
+        let d = 500 + (rng.below(5000) as usize);
+        let p = random_problem(&mut rng, k, d);
+        let shrink = rng.uniform(0.2, 0.9);
+        let mut planner =
+            ChurnAwarePlanner::new(Policy::Analytical, vec![true; k]).with_shrink(shrink);
+        planner.plan_round(&p, 0.0).unwrap();
+
+        // straggle the most loaded learner (guaranteed a real batch)
+        let learner = planner
+            .lease_batches()
+            .iter()
+            .enumerate()
+            .max_by_key(|(_, &b)| b)
+            .map(|(i, _)| i)
+            .unwrap();
+        let start = planner.lease_batches()[learner];
+        assert!(start > 1, "trial {trial}: max share must exceed the floor");
+        let mut seq = vec![start];
+        for step in 0.. {
+            match planner.on_deadline_miss(learner, &p, step as f64) {
+                Redispatch::Immediate(lease) => {
+                    assert_eq!(lease.learner, learner);
+                    assert!(lease.tau >= 1, "a re-lease must still do work");
+                    seq.push(lease.batch);
+                }
+                Redispatch::AwaitBarrier => break, // parked: terminated
+            }
+            assert!(
+                step < 128,
+                "trial {trial}: shrink {shrink:.2} from {start} must terminate: {seq:?}"
+            );
+        }
+        assert!(
+            seq.windows(2).all(|w| w[1] < w[0]),
+            "trial {trial}: not strictly shrinking: {seq:?}"
+        );
+        // parked exactly at the batch floor
+        assert_eq!(*seq.last().unwrap(), 1, "trial {trial}: {seq:?}");
+    }
+}
+
+#[test]
+fn punctual_uploads_recover_toward_planned_share() {
+    // recovery growth is capped by the planned share and monotone
+    let mut rng = Pcg64::seeded(5);
+    let p = random_problem(&mut rng, 6, 3000);
+    let mut planner = ChurnAwarePlanner::new(Policy::Analytical, vec![true; 6]);
+    planner.plan_round(&p, 0.0).unwrap();
+    let learner = planner
+        .planned_batches()
+        .iter()
+        .enumerate()
+        .max_by_key(|(_, &b)| b)
+        .map(|(i, _)| i)
+        .unwrap();
+    let planned = planner.planned_batches()[learner];
+    for _ in 0..4 {
+        let _ = planner.on_deadline_miss(learner, &p, 1.0);
+    }
+    let mut last = planner.lease_batches()[learner];
+    assert!(last < planned);
+    for step in 0..12 {
+        match planner.on_upload(learner, &p, 2.0 + step as f64) {
+            Redispatch::Immediate(lease) => {
+                assert!(lease.batch >= last && lease.batch <= planned);
+                last = lease.batch;
+            }
+            Redispatch::AwaitBarrier => panic!("active learner must be re-dispatched"),
+        }
+    }
+    assert_eq!(last, planned, "growth must recover the full planned share");
+}

@@ -7,8 +7,9 @@
 //! timing model without re-validating the paper's figures.
 
 use mel::alloc::Policy;
+use mel::cluster::{Cluster, ClusterConfig};
 use mel::orchestrator::{Mode, Orchestrator, OrchestratorConfig};
-use mel::scenario::{CloudletConfig, Scenario};
+use mel::scenario::{CloudletConfig, ClusterSpec, Scenario};
 use mel::sim::CycleSim;
 use mel::util::rng::Pcg64;
 
@@ -93,6 +94,94 @@ fn fading_channels_match_closed_form_replica() {
             assert_eq!(&round.alloc.batches, batches, "seed {seed} cycle {}", round.cycle);
             assert_eq!(round.makespan, *makespan, "seed {seed} cycle {}", round.cycle);
         }
+    }
+}
+
+#[test]
+fn single_shard_zero_churn_cluster_matches_sync_planner_bit_for_bit() {
+    // The cluster layer must be a *transparent* wrapper at shard count
+    // one with no churn: same SyncPlanner timeline, identical floats.
+    for seed in [1u64, 5, 9] {
+        // --- reference: the event-driven orchestrator in barrier mode
+        let scenario = Scenario::random_cloudlet(&CloudletConfig::pedestrian(8), seed);
+        let mut orch = Orchestrator::new(scenario, sync_cfg(Policy::Analytical, 30.0, 4, seed));
+        let reference = orch.run().unwrap();
+
+        // --- one sync shard, no churn
+        let spec = ClusterSpec::uniform("pedestrian", 1, 8).unwrap();
+        let cfg = ClusterConfig {
+            policy: Policy::Analytical,
+            mode: Mode::Sync,
+            t_total: 30.0,
+            cycles: 4,
+            seed,
+            ..ClusterConfig::default()
+        };
+        let cluster = Cluster::new(spec, cfg).run().unwrap();
+        assert_eq!(cluster.shards.len(), 1);
+        let shard = &cluster.shards[0].report;
+
+        assert_eq!(shard.rounds.len(), reference.rounds.len());
+        for (a, b) in shard.rounds.iter().zip(&reference.rounds) {
+            assert_eq!(a.alloc.tau, b.alloc.tau, "seed {seed}");
+            assert_eq!(a.alloc.batches, b.alloc.batches, "seed {seed}");
+            // bit-for-bit: same float expressions on both paths
+            assert_eq!(a.makespan, b.makespan, "seed {seed}");
+            assert_eq!(a.completion, b.completion, "seed {seed}");
+            assert_eq!(a.deadline_misses, b.deadline_misses, "seed {seed}");
+        }
+        assert_eq!(cluster.updates_applied, reference.updates_applied);
+        assert_eq!(cluster.updates.len(), reference.updates.len());
+        // the cluster merges updates by upload time (stable); apply the
+        // same ordering to the reference stream before comparing
+        let mut ref_sorted: Vec<_> = reference.updates.clone();
+        ref_sorted.sort_by(|a, b| a.uploaded_at.partial_cmp(&b.uploaded_at).unwrap());
+        for ((_, a), b) in cluster.updates.iter().zip(&ref_sorted) {
+            assert_eq!(a.learner, b.learner);
+            assert_eq!(a.uploaded_at, b.uploaded_at, "seed {seed}");
+            assert_eq!(a.batch, b.batch);
+            assert_eq!(a.tau, b.tau);
+        }
+        assert_eq!(cluster.horizon, 120.0);
+    }
+}
+
+#[test]
+fn four_shard_churn_releasing_beats_drop_baseline() {
+    // Acceptance: a 4-shard churn scenario under deadline pressure
+    // completes with strictly more applied updates when stragglers are
+    // re-leased (shrunken batches, late updates applied) than under the
+    // drop-on-miss baseline.
+    let spec = || {
+        ClusterSpec::uniform("pedestrian", 4, 6)
+            .unwrap()
+            .with_synthetic_churn(240.0, 2, 42)
+    };
+    let cfg = |releasing: bool| ClusterConfig {
+        policy: Policy::Analytical,
+        mode: Mode::Async,
+        t_total: 30.0,
+        lease_s: 24.0, // deadline pressure manufactures stragglers
+        cycles: 8,
+        straggler_releasing: releasing,
+        seed: 42,
+        ..ClusterConfig::default()
+    };
+    let releasing = Cluster::new(spec(), cfg(true)).run().unwrap();
+    let dropping = Cluster::new(spec(), cfg(false)).run().unwrap();
+    assert_eq!(releasing.shards.len(), 4);
+    assert!(dropping.deadline_misses > 0);
+    assert!(releasing.releases > 0);
+    assert!(
+        releasing.updates_applied > dropping.updates_applied,
+        "re-leasing {} must strictly beat drop-on-miss {}",
+        releasing.updates_applied,
+        dropping.updates_applied
+    );
+    // churn actually happened on every shard
+    for sr in &releasing.shards {
+        assert!(sr.joins + sr.departs > 0, "shard {} saw no churn", sr.shard);
+        assert!(sr.resplits >= 2);
     }
 }
 
