@@ -110,7 +110,8 @@ fn main() {
     if let Ok(man) = Manifest::load("artifacts") {
         let mut t = Table::new(&["batch", "plan {64,128,256}", "pad", "plan {256}", "pad"]);
         for n in [40usize, 200, 500, 1000] {
-            let plan = mel::coordinator::chunk_plan(&man, "pedestrian", "grad_step", n);
+            let ped = mel::models::ModelSpec::pedestrian();
+            let plan = mel::coordinator::chunk_plan(&man, &ped.name, "grad_step", &ped.layers, n);
             let padded: usize = plan.iter().map(|(lo, hi, b)| b - (hi - lo)).sum();
             let only256 = (n + 255) / 256 * 256 - n;
             t.row(vec![

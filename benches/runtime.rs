@@ -32,8 +32,11 @@ fn ped_inputs(bucket: usize) -> Vec<Tensor> {
 }
 
 fn main() {
-    if !mel::runtime::artifacts_available() {
-        println!("skipping runtime bench: requires `make artifacts` and --features pjrt");
+    if !mel::runtime::pjrt_available() {
+        println!(
+            "skipping runtime bench: requires `make artifacts` and --features pjrt \
+             (the hermetic path is covered by `cargo bench --bench train_step`)"
+        );
         return;
     }
     let mut suite = Suite::new("runtime");

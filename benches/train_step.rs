@@ -1,0 +1,92 @@
+//! Native training-step bench: fwd+bwd+SGD latency of the hermetic
+//! pure-Rust executor over a (batch × hidden-width) sweep, plus the
+//! engine-thread dispatch overhead on top of a direct backend call.
+//! Prints the effective FLOP rate next to the paper's modeled learner
+//! rates so the simulated compute profiles stay honest. Emits
+//! `results/BENCH_train_step.json` via `benchkit::Suite`.
+//!
+//! Runs everywhere — no artifacts, no `pjrt` feature.
+//!
+//! ```bash
+//! cargo bench --bench train_step
+//! ```
+
+use mel::backend::{Backend, Call, Function, NativeBackend};
+use mel::benchkit::{group, Bencher, Suite};
+use mel::coordinator::ParamSet;
+use mel::runtime::{Engine, Tensor};
+
+/// Inputs for a pedestrian-shaped (648 → hidden → 2) grad step.
+fn inputs(hidden: usize, batch: usize) -> (Call, Vec<Tensor>) {
+    let layers = [648usize, hidden, 2];
+    let call = Call::new(Function::GradStep, "pedestrian", &layers);
+    let params = ParamSet::init(&layers, 1);
+    let mut v = params.tensors;
+    v.push(Tensor::f32(
+        vec![batch, 648],
+        (0..batch * 648).map(|i| (i % 255) as f32 / 255.0).collect(),
+    ));
+    v.push(Tensor::i32(vec![batch], (0..batch).map(|i| (i % 2) as i32).collect()));
+    v.push(Tensor::f32(vec![batch], vec![1.0; batch]));
+    (call, v)
+}
+
+/// fwd+bwd flops of one step under the 4·MAC convention.
+fn step_flops(hidden: usize, batch: usize) -> f64 {
+    (4 * (648 * hidden + hidden * 2) * batch) as f64
+}
+
+fn main() {
+    let b = Bencher::default();
+    let mut suite = Suite::new("train_step");
+    let mut be = NativeBackend::new();
+
+    group("native grad_step (fwd+bwd) by batch x hidden width");
+    for &hidden in &[32usize, 128, 300] {
+        for &batch in &[32usize, 128] {
+            let (call, ins) = inputs(hidden, batch);
+            let r = suite.run(&b, &format!("grad_step h={hidden} b={batch}"), || {
+                be.execute(&call, ins.clone()).unwrap()[5].scalar()
+            });
+            println!(
+                "    → {:.2} GFLOP/s effective vs paper learner rates 0.175 (rpi) / \
+                 1.2 (laptop) GFLOP/s",
+                step_flops(hidden, batch) / r.mean / 1e9
+            );
+        }
+    }
+
+    group("full SGD step (grad + apply) at paper shape h=300 b=64");
+    {
+        let (call, ins) = inputs(300, 64);
+        let mut params = ParamSet::init(&[648, 300, 2], 2);
+        suite.run(&b, "grad_step + sgd_apply h=300 b=64", || {
+            let mut v = params.tensors.clone();
+            v.extend(ins[ins.len() - 3..].iter().cloned());
+            let out = be.execute(&call, v).unwrap();
+            let grads: Vec<Tensor> = out[..4].to_vec();
+            params.sgd_apply(&grads, 0.05, out[5].scalar());
+            params.tensors[0].as_f32()[0]
+        });
+    }
+
+    group("engine dispatch overhead (mpsc round trip vs direct call)");
+    {
+        let (call, ins) = inputs(32, 32);
+        let direct = suite.run(&b, "direct backend call h=32 b=32", || {
+            be.execute(&call, ins.clone()).unwrap()[5].scalar()
+        });
+        let engine = Engine::start_native();
+        let h = engine.handle();
+        let via_engine = suite.run(&b, "through engine thread h=32 b=32", || {
+            h.call(&call, ins.clone()).unwrap()[5].scalar()
+        });
+        println!(
+            "    → engine thread adds {:.1} µs per call over the direct {:.1} µs",
+            (via_engine.mean - direct.mean).max(0.0) * 1e6,
+            direct.mean * 1e6
+        );
+    }
+
+    suite.write_and_report();
+}

@@ -43,7 +43,7 @@ cargo test -q
 
 if [ "$CI_BENCH" = "1" ]; then
     mkdir -p results
-    for bench in solvers fig1_pedestrian_vs_k fig2_pedestrian_vs_t fig3_mnist e2e_cycle cluster_cycle runtime ablations; do
+    for bench in solvers fig1_pedestrian_vs_k fig2_pedestrian_vs_t fig3_mnist e2e_cycle cluster_cycle train_step runtime ablations; do
         echo "==> cargo bench --bench $bench"
         cargo bench --bench "$bench"
     done

@@ -13,7 +13,8 @@
 //! rather than argued.
 //!
 //! ```bash
-//! make artifacts && cargo run --release --example e2e_train
+//! cargo run --release --example e2e_train   # hermetic native backend
+//! # (PJRT instead: make artifacts && rebuild with --features pjrt)
 //! # options: -- --cycles 40 --k 4 --d 1024 --t 4 --lr 0.3 --out results/
 //! ```
 
@@ -54,11 +55,8 @@ fn main() -> anyhow::Result<()> {
             seed,
             eval_samples: 512,
             artifact_dir: args.get_str("artifacts", "artifacts").to_string(),
-            reallocate_each_cycle: false,
             dispatch_threads: k,
-        shadow_sigma_db: 0.0,
-        rayleigh: false,
-        drop_stragglers: false,
+            ..TrainConfig::default()
         };
         let mut orch = Orchestrator::new(scenario, cfg)?;
         let (loss0, acc0) = orch.evaluate()?;

@@ -1,0 +1,163 @@
+//! Execution backends — the subsystem that turns a planned lease into
+//! real floating-point work.
+//!
+//! The engine thread ([`crate::runtime::Engine`]) owns exactly one
+//! `Box<dyn Backend>` and serializes requests to it over an mpsc
+//! channel. Two implementations exist:
+//!
+//! * [`NativeBackend`] — a hermetic, dependency-free Rust MLP executor
+//!   (dense forward/backward, ReLU hidden layers, masked sum-form
+//!   softmax-cross-entropy, SGD-ready gradients). It builds its graph
+//!   directly from [`crate::models::ModelSpec::layers`], needs no
+//!   `make artifacts`, and mirrors the semantics of
+//!   `python/compile/model.py` / `python/compile/kernels/ref.py` so the
+//!   two execution paths are drop-in interchangeable.
+//! * The PJRT backend (feature `pjrt`, in [`crate::runtime`]) — executes
+//!   the AOT-lowered HLO artifacts through an in-process XLA CPU client.
+//!
+//! Both speak the same tensor contract as the AOT artifacts:
+//!
+//! * `grad_step` inputs `[w0, b0, …, w_{L-1}, b_{L-1}, x, y, mask]` →
+//!   outputs `[dw0, db0, …, loss_sum, weight_sum]` (gradients of the
+//!   masked *sum* of per-sample losses, so chunk gradients accumulate
+//!   exactly and the caller normalizes once by the total weight).
+//! * `eval_batch` same inputs → `[loss_sum, correct_sum, weight_sum]`.
+
+pub mod native;
+
+pub use native::NativeBackend;
+
+use crate::runtime::Tensor;
+
+/// Which function of the model graph to execute.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Function {
+    /// Masked sum-loss gradients + `(loss_sum, weight_sum)`.
+    GradStep,
+    /// Masked `(loss_sum, correct_sum, weight_sum)`.
+    EvalBatch,
+}
+
+impl Function {
+    /// The manifest/artifact name of the function.
+    pub fn name(&self) -> &'static str {
+        match self {
+            Function::GradStep => "grad_step",
+            Function::EvalBatch => "eval_batch",
+        }
+    }
+}
+
+/// A backend-agnostic execution request: which [`Function`] over which
+/// MLP. `arch` is the model's name (the AOT manifest key); `layers` are
+/// the widths the native backend builds its graph from.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Call {
+    pub function: Function,
+    pub arch: String,
+    pub layers: Vec<usize>,
+}
+
+impl Call {
+    pub fn new(function: Function, arch: impl Into<String>, layers: &[usize]) -> Self {
+        assert!(layers.len() >= 2, "a call needs at least input+output layers");
+        Self { function, arch: arch.into(), layers: layers.to_vec() }
+    }
+
+    /// Grad-step call for a model spec.
+    pub fn grad_step(model: &crate::models::ModelSpec) -> Self {
+        Self::new(Function::GradStep, model.name.clone(), &model.layers)
+    }
+
+    /// Eval-batch call for a model spec.
+    pub fn eval_batch(model: &crate::models::ModelSpec) -> Self {
+        Self::new(Function::EvalBatch, model.name.clone(), &model.layers)
+    }
+
+    /// Number of parameter tensors the call's inputs start with.
+    pub fn param_tensors(&self) -> usize {
+        2 * (self.layers.len() - 1)
+    }
+}
+
+/// An execution backend. Owned (boxed) by the engine thread; `&mut self`
+/// lets implementations keep caches (compiled executables, scratch
+/// buffers) without locks. Deliberately **not** `Send`: the PJRT
+/// backend owns the Rc-backed `!Send` XLA client, so backends are
+/// constructed *on* the engine thread (the factory closure crosses
+/// threads, the backend never does).
+pub trait Backend {
+    /// Short backend name for logs/`mel info`.
+    fn name(&self) -> &'static str;
+
+    /// Execute a model call. `inputs` follow the artifact contract
+    /// (`[params…, x, y, mask]`); outputs mirror the AOT artifacts.
+    fn execute(&mut self, call: &Call, inputs: Vec<Tensor>) -> Result<Vec<Tensor>, String>;
+
+    /// Prepare a call ahead of the hot path (compile caches etc.).
+    fn warm(&mut self, call: &Call) -> Result<(), String> {
+        let _ = call;
+        Ok(())
+    }
+
+    /// Execute a *named* AOT artifact (PJRT only — the legacy protocol
+    /// of the bucketed HLO modules). Backends without artifacts reject.
+    fn execute_artifact(&mut self, name: &str, inputs: Vec<Tensor>) -> Result<Vec<Tensor>, String> {
+        let _ = inputs;
+        Err(format!(
+            "the {} backend has no AOT artifacts (requested {name:?}); \
+             use model calls, or rebuild with --features pjrt and run `make artifacts`",
+            self.name()
+        ))
+    }
+
+    /// Warm a named AOT artifact (PJRT only).
+    fn warm_artifact(&mut self, name: &str) -> Result<(), String> {
+        Err(format!(
+            "the {} backend has no AOT artifacts (requested {name:?})",
+            self.name()
+        ))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models::ModelSpec;
+
+    #[test]
+    fn call_builders_carry_model_shape() {
+        let m = ModelSpec::pedestrian();
+        let g = Call::grad_step(&m);
+        assert_eq!(g.function, Function::GradStep);
+        assert_eq!(g.arch, "pedestrian");
+        assert_eq!(g.layers, vec![648, 300, 2]);
+        assert_eq!(g.param_tensors(), 4);
+        let e = Call::eval_batch(&ModelSpec::mnist());
+        assert_eq!(e.function.name(), "eval_batch");
+        assert_eq!(e.param_tensors(), 8);
+    }
+
+    #[test]
+    #[should_panic(expected = "at least input")]
+    fn call_rejects_degenerate_layers() {
+        Call::new(Function::GradStep, "x", &[5]);
+    }
+
+    #[test]
+    fn default_artifact_path_is_rejected() {
+        struct Stub;
+        impl Backend for Stub {
+            fn name(&self) -> &'static str {
+                "stub"
+            }
+            fn execute(&mut self, _: &Call, _: Vec<Tensor>) -> Result<Vec<Tensor>, String> {
+                Ok(vec![])
+            }
+        }
+        let mut s = Stub;
+        let err = s.execute_artifact("ped_b64", vec![]).unwrap_err();
+        assert!(err.contains("no AOT artifacts"), "{err}");
+        assert!(s.warm_artifact("ped_b64").is_err());
+    }
+}

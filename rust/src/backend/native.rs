@@ -1,0 +1,434 @@
+//! The hermetic pure-Rust MLP executor.
+//!
+//! Mirrors `python/compile/model.py` exactly: hidden layers are
+//! `relu(x·W + b)`, the last layer is linear logits, the loss is the
+//! masked **sum** of per-sample softmax-cross-entropies (so chunk
+//! gradients accumulate exactly and padding rows with `mask = 0` are
+//! perfectly neutral), and `eval_batch` counts `argmax` correctness with
+//! first-index tie-breaking (XLA's convention). No allocation-solver or
+//! orchestrator code is involved — this is pure dense linear algebra on
+//! [`Tensor`]s, dependency-free so it builds and runs on every box.
+//!
+//! All inner loops run over contiguous row slices (iterator zips, no
+//! per-element bounds checks in the hot path), which keeps even debug
+//! builds fast enough for the integration tests.
+
+use super::{Backend, Call, Function};
+use crate::runtime::{Tensor, TensorData};
+
+/// The dependency-free executor. Stateless: every call re-derives the
+/// graph from `call.layers`, so one backend serves any mix of models.
+#[derive(Debug, Default)]
+pub struct NativeBackend;
+
+impl NativeBackend {
+    pub fn new() -> Self {
+        Self
+    }
+}
+
+impl Backend for NativeBackend {
+    fn name(&self) -> &'static str {
+        "native"
+    }
+
+    fn execute(&mut self, call: &Call, inputs: Vec<Tensor>) -> Result<Vec<Tensor>, String> {
+        let net = Network::unpack(call, &inputs)?;
+        match call.function {
+            Function::GradStep => net.grad_step(),
+            Function::EvalBatch => net.eval_batch(),
+        }
+    }
+}
+
+/// Validated view over one call's inputs.
+struct Network<'a> {
+    layers: &'a [usize],
+    /// `[(w, b)]` per layer, row-major `w: [n_i, n_{i+1}]`.
+    params: Vec<(&'a [f32], &'a [f32])>,
+    x: &'a [f32],
+    y: &'a [i32],
+    mask: &'a [f32],
+    batch: usize,
+}
+
+impl<'a> Network<'a> {
+    fn unpack(call: &'a Call, inputs: &'a [Tensor]) -> Result<Self, String> {
+        let layers = &call.layers[..];
+        let np = call.param_tensors();
+        if inputs.len() != np + 3 {
+            return Err(format!(
+                "{} over layers {layers:?} needs {} inputs (params + x,y,mask), got {}",
+                call.function.name(),
+                np + 3,
+                inputs.len()
+            ));
+        }
+        let mut params = Vec::with_capacity(np / 2);
+        for i in 0..np / 2 {
+            let (w, b) = (&inputs[2 * i], &inputs[2 * i + 1]);
+            let want_w = vec![layers[i], layers[i + 1]];
+            if w.dims != want_w {
+                return Err(format!("w{i} dims {:?}, expected {want_w:?}", w.dims));
+            }
+            if b.dims != vec![layers[i + 1]] {
+                return Err(format!("b{i} dims {:?}, expected [{}]", b.dims, layers[i + 1]));
+            }
+            params.push((as_f32(w, "weights")?, as_f32(b, "biases")?));
+        }
+        let x = &inputs[np];
+        let batch = *x.dims.first().ok_or("x must be 2-D")?;
+        if x.dims != vec![batch, layers[0]] {
+            return Err(format!("x dims {:?}, expected [{batch}, {}]", x.dims, layers[0]));
+        }
+        let y = &inputs[np + 1];
+        if y.dims != vec![batch] {
+            return Err(format!("y dims {:?}, expected [{batch}]", y.dims));
+        }
+        let mask = &inputs[np + 2];
+        if mask.dims != vec![batch] {
+            return Err(format!("mask dims {:?}, expected [{batch}]", mask.dims));
+        }
+        let classes = *layers.last().unwrap();
+        let y = match &y.data {
+            TensorData::I32(v) => v.as_slice(),
+            _ => return Err("labels must be int32".into()),
+        };
+        if let Some(&bad) = y.iter().find(|&&l| l < 0 || l as usize >= classes) {
+            return Err(format!("label {bad} out of range for {classes} classes"));
+        }
+        Ok(Self {
+            layers,
+            params,
+            x: as_f32(x, "x")?,
+            y,
+            mask: as_f32(mask, "mask")?,
+            batch,
+        })
+    }
+
+    /// Forward pass; returns every post-activation (`acts[i]` is the
+    /// input to layer `i`, `acts.last()` holds the logits).
+    fn forward(&self) -> Vec<Vec<f32>> {
+        let n_layers = self.layers.len() - 1;
+        let mut acts: Vec<Vec<f32>> = Vec::with_capacity(n_layers);
+        let mut cur: &[f32] = self.x;
+        for (i, (w, b)) in self.params.iter().enumerate() {
+            let (rows, cols) = (self.layers[i], self.layers[i + 1]);
+            let mut z = vec![0.0f32; self.batch * cols];
+            matmul(cur, w, self.batch, rows, cols, &mut z);
+            for row in z.chunks_exact_mut(cols) {
+                for (v, &bias) in row.iter_mut().zip(*b) {
+                    *v += bias;
+                }
+            }
+            if i + 1 < n_layers {
+                for v in &mut z {
+                    if *v < 0.0 {
+                        *v = 0.0; // relu (HIDDEN_ACT of model.py)
+                    }
+                }
+            }
+            acts.push(z);
+            cur = acts.last().unwrap();
+        }
+        acts
+    }
+
+    /// Masked sum softmax-CE over the logits plus d(loss)/d(logits).
+    /// Rows with `mask = 0` contribute exactly nothing.
+    fn loss_and_dlogits(&self, logits: &[f32]) -> (f64, Vec<f32>) {
+        let classes = *self.layers.last().unwrap();
+        let mut loss = 0.0f64;
+        let mut g = vec![0.0f32; self.batch * classes];
+        for r in 0..self.batch {
+            let m = self.mask[r];
+            if m == 0.0 {
+                continue;
+            }
+            let row = &logits[r * classes..(r + 1) * classes];
+            let lse = row_lse(row);
+            let label = self.y[r] as usize;
+            loss += (m as f64) * ((lse - row[label]) as f64);
+            let g_row = &mut g[r * classes..(r + 1) * classes];
+            for (j, (gv, &lv)) in g_row.iter_mut().zip(row).enumerate() {
+                let p = (lv - lse).exp();
+                *gv = m * (p - if j == label { 1.0 } else { 0.0 });
+            }
+        }
+        (loss, g)
+    }
+
+    /// Loss-only variant for the evaluation path — no gradient buffer,
+    /// no per-logit softmax exponentials.
+    fn masked_loss(&self, logits: &[f32]) -> f64 {
+        let classes = *self.layers.last().unwrap();
+        let mut loss = 0.0f64;
+        for r in 0..self.batch {
+            let m = self.mask[r];
+            if m == 0.0 {
+                continue;
+            }
+            let row = &logits[r * classes..(r + 1) * classes];
+            loss += (m as f64) * ((row_lse(row) - row[self.y[r] as usize]) as f64);
+        }
+        loss
+    }
+
+    fn weight_sum(&self) -> f32 {
+        self.mask.iter().sum()
+    }
+
+    /// `[dw0, db0, …, loss_sum, weight_sum]`.
+    fn grad_step(&self) -> Result<Vec<Tensor>, String> {
+        let acts = self.forward();
+        let n_layers = self.layers.len() - 1;
+        let (loss, mut g) = self.loss_and_dlogits(acts.last().unwrap());
+
+        let mut grads: Vec<(Tensor, Tensor)> = Vec::with_capacity(n_layers);
+        for i in (0..n_layers).rev() {
+            let (rows, cols) = (self.layers[i], self.layers[i + 1]);
+            let a_in: &[f32] = if i == 0 { self.x } else { &acts[i - 1] };
+            // dw = a_inᵀ · g
+            let mut dw = vec![0.0f32; rows * cols];
+            matmul_at_b(a_in, &g, self.batch, rows, cols, &mut dw);
+            // db = column sums of g
+            let mut db = vec![0.0f32; cols];
+            for g_row in g.chunks_exact(cols) {
+                for (d, &gv) in db.iter_mut().zip(g_row) {
+                    *d += gv;
+                }
+            }
+            if i > 0 {
+                // upstream cotangent: (g · wᵀ) ⊙ relu'(z); post-relu
+                // activations are > 0 exactly where z > 0.
+                let w = self.params[i].0;
+                let mut gp = vec![0.0f32; self.batch * rows];
+                matmul_a_bt(&g, w, self.batch, cols, rows, &mut gp);
+                for (gv, &av) in gp.iter_mut().zip(a_in) {
+                    if av <= 0.0 {
+                        *gv = 0.0;
+                    }
+                }
+                g = gp;
+            }
+            grads.push((
+                Tensor::f32(vec![rows, cols], dw),
+                Tensor::f32(vec![cols], db),
+            ));
+        }
+        let mut out = Vec::with_capacity(2 * n_layers + 2);
+        for (dw, db) in grads.into_iter().rev() {
+            out.push(dw);
+            out.push(db);
+        }
+        out.push(Tensor::scalar_f32(loss as f32));
+        out.push(Tensor::scalar_f32(self.weight_sum()));
+        Ok(out)
+    }
+
+    /// `[loss_sum, correct_sum, weight_sum]`.
+    fn eval_batch(&self) -> Result<Vec<Tensor>, String> {
+        let acts = self.forward();
+        let logits = acts.last().unwrap();
+        let classes = *self.layers.last().unwrap();
+        let loss = self.masked_loss(logits);
+        let mut correct = 0.0f64;
+        for r in 0..self.batch {
+            let m = self.mask[r];
+            if m == 0.0 {
+                continue;
+            }
+            let row = &logits[r * classes..(r + 1) * classes];
+            // first-max wins, matching XLA argmax
+            let mut pred = 0usize;
+            for (j, &v) in row.iter().enumerate() {
+                if v > row[pred] {
+                    pred = j;
+                }
+            }
+            if pred == self.y[r] as usize {
+                correct += m as f64;
+            }
+        }
+        Ok(vec![
+            Tensor::scalar_f32(loss as f32),
+            Tensor::scalar_f32(correct as f32),
+            Tensor::scalar_f32(self.weight_sum()),
+        ])
+    }
+}
+
+/// Numerically stable log-sum-exp of one logits row.
+fn row_lse(row: &[f32]) -> f32 {
+    let max = row.iter().copied().fold(f32::NEG_INFINITY, f32::max);
+    let sum: f32 = row.iter().map(|&v| (v - max).exp()).sum();
+    max + sum.ln()
+}
+
+fn as_f32<'a>(t: &'a Tensor, what: &str) -> Result<&'a [f32], String> {
+    match &t.data {
+        TensorData::F32(v) => Ok(v),
+        _ => Err(format!("{what} must be float32")),
+    }
+}
+
+/// `out(m×n) += a(m×k) · b(k×n)`, row-major; ikj order so the inner loop
+/// streams contiguous rows of both `b` and `out`.
+fn matmul(a: &[f32], b: &[f32], m: usize, k: usize, n: usize, out: &mut [f32]) {
+    for i in 0..m {
+        let a_row = &a[i * k..(i + 1) * k];
+        let out_row = &mut out[i * n..(i + 1) * n];
+        for (kk, &aik) in a_row.iter().enumerate() {
+            if aik == 0.0 {
+                continue; // relu activations are often sparse
+            }
+            let b_row = &b[kk * n..(kk + 1) * n];
+            for (o, &bv) in out_row.iter_mut().zip(b_row) {
+                *o += aik * bv;
+            }
+        }
+    }
+}
+
+/// `out(k×n) += aᵀ(k×m) · g(m×n)` for row-major `a(m×k)`, `g(m×n)` —
+/// the weight-gradient contraction, streamed row by row.
+fn matmul_at_b(a: &[f32], g: &[f32], m: usize, k: usize, n: usize, out: &mut [f32]) {
+    for r in 0..m {
+        let a_row = &a[r * k..(r + 1) * k];
+        let g_row = &g[r * n..(r + 1) * n];
+        for (c, &arc) in a_row.iter().enumerate() {
+            if arc == 0.0 {
+                continue;
+            }
+            let out_row = &mut out[c * n..(c + 1) * n];
+            for (o, &gv) in out_row.iter_mut().zip(g_row) {
+                *o += arc * gv;
+            }
+        }
+    }
+}
+
+/// `out(m×k) += g(m×n) · wᵀ(n×k)` for row-major `w(k×n)` — the input
+/// cotangent; each entry is a dot product of two contiguous rows.
+fn matmul_a_bt(g: &[f32], w: &[f32], m: usize, n: usize, k: usize, out: &mut [f32]) {
+    for r in 0..m {
+        let g_row = &g[r * n..(r + 1) * n];
+        let out_row = &mut out[r * k..(r + 1) * k];
+        for (c, o) in out_row.iter_mut().enumerate() {
+            let w_row = &w[c * n..(c + 1) * n];
+            let mut acc = 0.0f32;
+            for (&gv, &wv) in g_row.iter().zip(w_row) {
+                acc += gv * wv;
+            }
+            *o += acc;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    use crate::testkit::zero_param_mlp_inputs as zero_inputs;
+
+    fn call(function: Function, layers: &[usize]) -> Call {
+        Call::new(function, "toy", layers)
+    }
+
+    #[test]
+    fn zero_params_give_ln_c_loss_and_matching_shapes() {
+        let layers = [6usize, 5, 3];
+        let mut be = NativeBackend::new();
+        let out = be.execute(&call(Function::GradStep, &layers), zero_inputs(&layers, 8, 8)).unwrap();
+        assert_eq!(out.len(), 6);
+        assert_eq!(out[0].dims, vec![6, 5]);
+        assert_eq!(out[1].dims, vec![5]);
+        assert_eq!(out[2].dims, vec![5, 3]);
+        assert_eq!(out[3].dims, vec![3]);
+        let loss = out[4].scalar();
+        assert!((loss - 8.0 * 3f32.ln()).abs() < 1e-4, "loss {loss}");
+        assert_eq!(out[5].scalar(), 8.0);
+        // zero params → dead relu hidden layer → zero first-layer grads
+        assert!(out[0].as_f32().iter().all(|&v| v == 0.0));
+        assert!(out[3].as_f32().iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn masked_rows_are_exactly_neutral() {
+        let layers = [4usize, 3, 2];
+        let mut be = NativeBackend::new();
+        let full = be.execute(&call(Function::GradStep, &layers), zero_inputs(&layers, 8, 8)).unwrap();
+        let masked =
+            be.execute(&call(Function::GradStep, &layers), zero_inputs(&layers, 8, 5)).unwrap();
+        assert_eq!(masked[5].scalar(), 5.0);
+        let per_full = full[4].scalar() / 8.0;
+        let per_masked = masked[4].scalar() / 5.0;
+        assert!((per_full - per_masked).abs() < 1e-6);
+    }
+
+    #[test]
+    fn eval_batch_counts_argmax_with_first_tie_win() {
+        let layers = [4usize, 3, 2];
+        let mut be = NativeBackend::new();
+        let out = be.execute(&call(Function::EvalBatch, &layers), zero_inputs(&layers, 8, 8)).unwrap();
+        assert_eq!(out.len(), 3);
+        // uniform logits → argmax is class 0 → the 4 even rows correct
+        assert_eq!(out[1].scalar(), 4.0);
+        assert_eq!(out[2].scalar(), 8.0);
+        assert!((out[0].scalar() - 8.0 * 2f32.ln()).abs() < 1e-5);
+    }
+
+    #[test]
+    fn malformed_inputs_are_errors_not_panics() {
+        let layers = [4usize, 3, 2];
+        let mut be = NativeBackend::new();
+        let c = call(Function::GradStep, &layers);
+        // wrong arity
+        assert!(be.execute(&c, vec![]).is_err());
+        // out-of-range label
+        let mut inputs = zero_inputs(&layers, 4, 4);
+        inputs[5] = Tensor::i32(vec![4], vec![0, 1, 9, 0]);
+        let err = be.execute(&c, inputs).unwrap_err();
+        assert!(err.contains("out of range"), "{err}");
+        // wrong weight shape
+        let mut inputs = zero_inputs(&layers, 4, 4);
+        inputs[0] = Tensor::zeros_f32(vec![4, 4]);
+        assert!(be.execute(&c, inputs).unwrap_err().contains("w0"));
+    }
+
+    #[test]
+    fn matmul_kernels_agree_with_naive_reference() {
+        let (m, k, n) = (3usize, 4, 5);
+        let a: Vec<f32> = (0..m * k).map(|i| (i as f32) * 0.3 - 1.0).collect();
+        let b: Vec<f32> = (0..k * n).map(|i| 0.7 - (i as f32) * 0.2).collect();
+        let mut out = vec![0.0f32; m * n];
+        matmul(&a, &b, m, k, n, &mut out);
+        for i in 0..m {
+            for j in 0..n {
+                let want: f32 = (0..k).map(|kk| a[i * k + kk] * b[kk * n + j]).sum();
+                assert!((out[i * n + j] - want).abs() < 1e-5);
+            }
+        }
+        // aᵀ·g against the same naive contraction
+        let g: Vec<f32> = (0..m * n).map(|i| (i as f32) * 0.1).collect();
+        let mut dw = vec![0.0f32; k * n];
+        matmul_at_b(&a, &g, m, k, n, &mut dw);
+        for c in 0..k {
+            for j in 0..n {
+                let want: f32 = (0..m).map(|r| a[r * k + c] * g[r * n + j]).sum();
+                assert!((dw[c * n + j] - want).abs() < 1e-5);
+            }
+        }
+        // g·wᵀ
+        let w: Vec<f32> = (0..k * n).map(|i| (i as f32) * 0.05 - 0.3).collect();
+        let mut gp = vec![0.0f32; m * k];
+        matmul_a_bt(&g, &w, m, n, k, &mut gp);
+        for r in 0..m {
+            for c in 0..k {
+                let want: f32 = (0..n).map(|j| g[r * n + j] * w[c * n + j]).sum();
+                assert!((gp[r * k + c] - want).abs() < 1e-5);
+            }
+        }
+    }
+}

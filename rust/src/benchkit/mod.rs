@@ -211,6 +211,128 @@ impl Suite {
     }
 }
 
+// ---------------------------------------------------------------------
+// perf-trajectory diffing (`mel bench diff <old.json> <new.json>`)
+// ---------------------------------------------------------------------
+
+/// One benchmark's old-vs-new comparison (seconds per iteration).
+#[derive(Debug, Clone)]
+pub struct BenchDelta {
+    pub name: String,
+    pub old_mean_s: f64,
+    pub new_mean_s: f64,
+}
+
+impl BenchDelta {
+    /// `new / old` — > 1 means the benchmark got slower.
+    pub fn ratio(&self) -> f64 {
+        if self.old_mean_s > 0.0 {
+            self.new_mean_s / self.old_mean_s
+        } else {
+            f64::INFINITY
+        }
+    }
+
+    /// Signed percentage change (+ = slower).
+    pub fn pct(&self) -> f64 {
+        (self.ratio() - 1.0) * 100.0
+    }
+
+    /// Regression under `threshold` (fractional slowdown, e.g. 0.10).
+    pub fn is_regression(&self, threshold: f64) -> bool {
+        self.ratio() > 1.0 + threshold
+    }
+}
+
+/// Comparison of two `BENCH_*.json` files emitted by [`Suite::write`].
+#[derive(Debug, Clone)]
+pub struct SuiteDiff {
+    pub old_suite: String,
+    pub new_suite: String,
+    /// Benchmarks present in both files, in the new file's order.
+    pub deltas: Vec<BenchDelta>,
+    /// Present only in the old / only in the new file.
+    pub only_old: Vec<String>,
+    pub only_new: Vec<String>,
+}
+
+fn suite_means(v: &Json) -> Result<(String, Vec<(String, f64)>), crate::util::json::JsonError> {
+    let suite = v.get("suite")?.as_str()?.to_string();
+    let mut out = Vec::new();
+    for r in v.get("results")?.as_arr()? {
+        out.push((r.get("name")?.as_str()?.to_string(), r.get("mean_s")?.as_f64()?));
+    }
+    Ok((suite, out))
+}
+
+impl SuiteDiff {
+    /// Diff two parsed `BENCH_*.json` documents.
+    pub fn from_json(old: &Json, new: &Json) -> Result<Self, crate::util::json::JsonError> {
+        let (old_suite, old_means) = suite_means(old)?;
+        let (new_suite, new_means) = suite_means(new)?;
+        let mut deltas = Vec::new();
+        let mut only_new = Vec::new();
+        for (name, new_mean) in &new_means {
+            match old_means.iter().find(|(n, _)| n == name) {
+                Some((_, old_mean)) => deltas.push(BenchDelta {
+                    name: name.clone(),
+                    old_mean_s: *old_mean,
+                    new_mean_s: *new_mean,
+                }),
+                None => only_new.push(name.clone()),
+            }
+        }
+        let only_old = old_means
+            .iter()
+            .filter(|(n, _)| !new_means.iter().any(|(m, _)| m == n))
+            .map(|(n, _)| n.clone())
+            .collect();
+        Ok(Self { old_suite, new_suite, deltas, only_old, only_new })
+    }
+
+    /// Benchmarks slower than `1 + threshold` times the old mean.
+    pub fn regressions(&self, threshold: f64) -> Vec<&BenchDelta> {
+        self.deltas.iter().filter(|d| d.is_regression(threshold)).collect()
+    }
+
+    /// Render the per-bench delta table (`threshold` drives the flag
+    /// column: `REGRESS` past it, `improve` for ≥ equal speedups).
+    pub fn table(&self, threshold: f64) -> crate::util::table::Table {
+        use crate::util::table::{fdur, fnum, Align, Table};
+        let mut t = Table::new(&["bench", "old/iter", "new/iter", "delta %", "flag"])
+            .title(format!(
+                "bench diff: {} → {} (regression threshold {:.0}%)",
+                self.old_suite,
+                self.new_suite,
+                threshold * 100.0
+            ))
+            .align(0, Align::Left);
+        for d in &self.deltas {
+            let flag = if d.is_regression(threshold) {
+                "REGRESS"
+            } else if d.ratio() < 1.0 - threshold {
+                "improve"
+            } else {
+                ""
+            };
+            t.row(vec![
+                d.name.clone(),
+                fdur(d.old_mean_s),
+                fdur(d.new_mean_s),
+                format!("{}{}", if d.pct() >= 0.0 { "+" } else { "" }, fnum(d.pct(), 1)),
+                flag.into(),
+            ]);
+        }
+        for n in &self.only_old {
+            t.row(vec![n.clone(), "(removed)".into(), "-".into(), "-".into(), "".into()]);
+        }
+        for n in &self.only_new {
+            t.row(vec![n.clone(), "-".into(), "(new)".into(), "-".into(), "".into()]);
+        }
+        t
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -282,5 +404,70 @@ mod tests {
         };
         let s = r.report();
         assert!(s.contains("µs"), "{s}");
+    }
+
+    fn suite_json(suite: &str, results: &[(&str, f64)]) -> Json {
+        Json::obj(vec![
+            ("suite", Json::Str(suite.into())),
+            ("unit", Json::Str("seconds/iter".into())),
+            (
+                "results",
+                Json::Arr(
+                    results
+                        .iter()
+                        .map(|(n, m)| {
+                            Json::obj(vec![
+                                ("name", Json::Str((*n).into())),
+                                ("mean_s", Json::Num(*m)),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+
+    #[test]
+    fn suite_diff_flags_regressions_and_membership() {
+        let old = suite_json("solvers", &[("a", 1.0e-3), ("b", 2.0e-3), ("gone", 5.0e-3)]);
+        let new = suite_json("solvers", &[("a", 1.3e-3), ("b", 1.0e-3), ("fresh", 7.0e-3)]);
+        let diff = SuiteDiff::from_json(&old, &new).unwrap();
+        assert_eq!(diff.deltas.len(), 2);
+        assert_eq!(diff.only_old, vec!["gone".to_string()]);
+        assert_eq!(diff.only_new, vec!["fresh".to_string()]);
+        // a: +30% — a regression at the 10% threshold, not at 50%
+        let reg10 = diff.regressions(0.10);
+        assert_eq!(reg10.len(), 1);
+        assert_eq!(reg10[0].name, "a");
+        assert!((reg10[0].pct() - 30.0).abs() < 1e-6);
+        assert!(diff.regressions(0.50).is_empty());
+        // b halved: an improvement, never a regression
+        let b = diff.deltas.iter().find(|d| d.name == "b").unwrap();
+        assert!(b.ratio() < 0.6);
+        // table renders every row (2 common + removed + new)
+        let table = diff.table(0.10);
+        assert_eq!(table.num_rows(), 4);
+        let text = table.render();
+        assert!(text.contains("REGRESS"), "{text}");
+        assert!(text.contains("improve"), "{text}");
+    }
+
+    #[test]
+    fn suite_diff_round_trips_real_suite_output() {
+        // a Suite written by this harness must be diffable against itself
+        let b = Bencher::quick();
+        let mut suite = Suite::new("self");
+        suite.run(&b, "noop", || black_box(1u64));
+        let j = Json::parse(&suite.to_json().to_pretty()).unwrap();
+        let diff = SuiteDiff::from_json(&j, &j).unwrap();
+        assert_eq!(diff.deltas.len(), 1);
+        assert!((diff.deltas[0].ratio() - 1.0).abs() < 1e-12);
+        assert!(diff.regressions(0.01).is_empty());
+    }
+
+    #[test]
+    fn malformed_suite_json_is_an_error() {
+        let bad = Json::obj(vec![("nope", Json::Num(1.0))]);
+        assert!(SuiteDiff::from_json(&bad, &bad).is_err());
     }
 }

@@ -1,5 +1,6 @@
-//! The MEL **trainer** — real PJRT training driven by the event-driven
-//! orchestration core ([`crate::orchestrator`]).
+//! The MEL **trainer** — real training driven by the event-driven
+//! orchestration core ([`crate::orchestrator`]) through a pluggable
+//! execution backend ([`crate::backend`]).
 //!
 //! Since the event-driven refactor this module no longer owns the
 //! timing loop: every cycle's fading redraw, allocation (re-)solve, and
@@ -13,29 +14,32 @@
 //!    (per-learner `τ_k` aware), completion times, and deadline misses.
 //! 2. **Dispatch** — draw each learner's random batch (footnote 1).
 //! 3. **Local learning** — every learner runs its `τ_k` local
-//!    full-batch SGD iterations, executed for real through the PJRT
-//!    runtime (bucketed, mask-padded gradient accumulation). Learner
-//!    compute fans out over an OS thread pool; the engine serializes
-//!    PJRT submissions (CPU backend parallelizes internally).
+//!    full-batch SGD iterations, executed for real through the engine's
+//!    backend: the hermetic native MLP executor on every box, or the
+//!    bucketed mask-padded PJRT artifacts when `--features pjrt` +
+//!    `make artifacts` are present. Learner compute fans out over an OS
+//!    thread pool; the engine serializes submissions.
 //! 4. **Aggregate** — weighted parameter averaging, eq. (5), over the
 //!    updates that made their deadline.
 //! 5. **Evaluate** — global loss/accuracy on a held-out set; metrics
 //!    record the loss curve against *simulated wall time* (cycles × T),
 //!    which is how the paper's accuracy-within-deadline story is told.
 //!
-//! `Trainer` is the renamed seed `Orchestrator` (a type alias keeps the
-//! old name working); the orchestrator name now belongs to the shared
-//! event-driven core.
+//! The trainer is backend-agnostic: it speaks [`Call`]s, and only asks
+//! the engine's manifest (when one exists) how to pad batches into the
+//! AOT buckets. `Trainer` is the renamed seed `Orchestrator` (a type
+//! alias keeps the old name working).
 
 pub mod params;
 
 use std::sync::Arc;
 
 use crate::alloc::Policy;
+use crate::backend::{Call, Function};
 use crate::dataset::SyntheticDataset;
 use crate::metrics::Metrics;
 use crate::orchestrator::{Mode, Orchestrator as OrchCore, OrchestratorConfig};
-use crate::runtime::{Engine, EngineHandle, Manifest, Tensor};
+use crate::runtime::{BackendChoice, BackendKind, Engine, EngineHandle, Manifest, Tensor};
 use crate::scenario::Scenario;
 use crate::util::rng::Pcg64;
 
@@ -56,8 +60,12 @@ pub struct TrainConfig {
     pub seed: u64,
     /// Held-out evaluation set size.
     pub eval_samples: usize,
-    /// Artifact directory (`artifacts/` by default).
+    /// Artifact directory (`artifacts/` by default; only consulted by
+    /// the PJRT backend).
     pub artifact_dir: String,
+    /// Execution backend: `Auto` picks PJRT when compiled + artifacts
+    /// exist and the hermetic native executor otherwise.
+    pub backend: BackendChoice,
     /// Re-solve the allocation every cycle (true) or once (false).
     /// Matters only when fading is enabled — with static channels the
     /// solution is identical each cycle.
@@ -85,6 +93,7 @@ impl Default for TrainConfig {
             seed: 1,
             eval_samples: 512,
             artifact_dir: "artifacts".into(),
+            backend: BackendChoice::Auto,
             reallocate_each_cycle: false,
             dispatch_threads: 4,
             shadow_sigma_db: 0.0,
@@ -125,18 +134,35 @@ pub struct Trainer {
 pub type Orchestrator = Trainer;
 
 impl Trainer {
-    /// Build a trainer: starts the PJRT engine, synthesizes the
-    /// datasets, initializes **w**, and stands up the event-driven
-    /// orchestration core in barrier mode.
+    /// Build a trainer: starts the execution engine (native or PJRT),
+    /// synthesizes the datasets, initializes **w**, and stands up the
+    /// event-driven orchestration core in barrier mode.
     pub fn new(scenario: Scenario, cfg: TrainConfig) -> anyhow::Result<Self> {
-        let engine = Engine::start(&cfg.artifact_dir)?;
-        // validate the artifacts cover this model
-        let man = Manifest::load(&cfg.artifact_dir)?;
-        anyhow::ensure!(
-            man.buckets(&scenario.model.name, "grad_step").iter().any(|_| true),
-            "artifacts missing grad_step for arch {:?}; run `make artifacts`",
-            scenario.model.name
-        );
+        // The PJRT backend can only run graphs the artifacts were
+        // lowered for (exact arch + layer widths, both functions the
+        // trainer executes) — decide coverage *before* spawning an
+        // engine, so auto selection never constructs an XLA client it
+        // would immediately discard.
+        let covered = |man: &Manifest| {
+            ["grad_step", "eval_batch"].iter().all(|f| {
+                !man.buckets_for(&scenario.model.name, f, &scenario.model.layers).is_empty()
+            })
+        };
+        let engine = match cfg.backend {
+            BackendChoice::Auto => Engine::start_auto(&cfg.artifact_dir, &covered),
+            choice => Engine::start_with(choice, &cfg.artifact_dir)?,
+        };
+        if let Some(man) = engine.manifest() {
+            // only reachable on a forced --backend pjrt: error
+            // truthfully instead of asserting later in chunk planning
+            anyhow::ensure!(
+                covered(man),
+                "artifacts missing grad_step/eval_batch for arch {:?} with layers {:?}; \
+                 run `make artifacts` (or use the native backend)",
+                scenario.model.name,
+                scenario.model.layers
+            );
+        }
         let train_set = SyntheticDataset::full(&scenario.dataset, cfg.seed ^ 0xDA7A);
         let mut eval_spec = scenario.dataset.clone();
         eval_spec.total_samples = cfg.eval_samples;
@@ -168,6 +194,11 @@ impl Trainer {
     /// The cloudlet scenario (owned by the orchestration core).
     pub fn scenario(&self) -> &Scenario {
         &self.core.scenario
+    }
+
+    /// Which execution backend the engine thread is running.
+    pub fn backend_kind(&self) -> BackendKind {
+        self.engine.kind()
     }
 
     pub fn sim_time(&self) -> f64 {
@@ -214,12 +245,11 @@ impl Trainer {
         // mode, per-learner under an async-capable planner)
         let wall0 = std::time::Instant::now();
         let handle = self.engine.handle();
-        let arch = self.core.scenario.model.name.clone();
+        let grad_call = Call::grad_step(&self.core.scenario.model);
+        let man = self.engine.manifest();
         let lr = self.cfg.lr;
         let global = &self.global;
         let train_set = &self.train_set;
-        let artifact_dir = self.cfg.artifact_dir.clone();
-        let man = Manifest::load(&artifact_dir)?;
 
         let results: Vec<anyhow::Result<(f64, ParamSet)>> = std::thread::scope(|s| {
             let mut joins = Vec::new();
@@ -228,14 +258,11 @@ impl Trainer {
                     continue;
                 }
                 let handle = handle.clone();
-                let man = &man;
-                let arch = arch.as_str();
+                let grad_call = &grad_call;
                 let tau_k = alloc.tau_for(k);
                 joins.push(s.spawn(move || {
                     let mut local = global.clone();
-                    local_training(
-                        &handle, man, arch, &mut local, train_set, idx, tau_k, lr,
-                    )?;
+                    local_training(&handle, man, grad_call, &mut local, train_set, idx, tau_k, lr)?;
                     Ok((idx.len() as f64, local))
                 }));
             }
@@ -295,17 +322,11 @@ impl Trainer {
 
     /// Global loss/accuracy on the held-out set.
     pub fn evaluate(&self) -> anyhow::Result<(f64, f64)> {
-        let man = Manifest::load(&self.cfg.artifact_dir)?;
         let handle = self.engine.handle();
+        let call = Call::eval_batch(&self.core.scenario.model);
         let idx: Vec<usize> = (0..self.eval_set.len()).collect();
-        let (loss_sum, correct, weight) = eval_batches(
-            &handle,
-            &man,
-            &self.core.scenario.model.name,
-            &self.global,
-            &self.eval_set,
-            &idx,
-        )?;
+        let (loss_sum, correct, weight) =
+            eval_batches(&handle, self.engine.manifest(), &call, &self.global, &self.eval_set, &idx)?;
         Ok((loss_sum / weight, correct / weight))
     }
 }
@@ -315,6 +336,7 @@ impl Trainer {
 // ---------------------------------------------------------------------
 
 /// Pad `idx[lo..hi]` features/labels into a `bucket`-row tensor triple.
+/// With `bucket == idx.len()` (the native backend) no padding happens.
 fn padded_chunk(
     ds: &SyntheticDataset,
     idx: &[usize],
@@ -334,13 +356,23 @@ fn padded_chunk(
     )
 }
 
+/// Chunking strategy for `n` samples: the manifest's bucketed plan for
+/// PJRT engines (layer-exact, matching the backend's artifact
+/// resolution), a single exact-size chunk for the native backend.
+fn plan_chunks(man: Option<&Manifest>, call: &Call, n: usize) -> Vec<(usize, usize, usize)> {
+    match man {
+        Some(m) => chunk_plan(m, &call.arch, call.function.name(), &call.layers, n),
+        None => vec![(0, n, n)],
+    }
+}
+
 /// One learner's τ local iterations of full-batch SGD over its batch,
-/// accumulating masked gradient chunks through the bucketed artifacts.
+/// accumulating masked gradient chunks through the backend.
 #[allow(clippy::too_many_arguments)]
 fn local_training(
     handle: &EngineHandle,
-    man: &Manifest,
-    arch: &str,
+    man: Option<&Manifest>,
+    call: &Call,
     local: &mut ParamSet,
     ds: &SyntheticDataset,
     idx: &[usize],
@@ -350,17 +382,13 @@ fn local_training(
     for _ in 0..tau {
         let mut grad_acc = local.zeros_like();
         let mut weight = 0.0f32;
-        for chunk in chunk_plan(man, arch, "grad_step", idx.len()) {
-            let (lo, hi, bucket) = chunk;
-            let meta = man
-                .find(arch, "grad_step", bucket)
-                .ok_or_else(|| anyhow::anyhow!("no grad_step bucket {bucket} for {arch}"))?;
+        for (lo, hi, bucket) in plan_chunks(man, call, idx.len()) {
             let (x, y, mask) = padded_chunk(ds, &idx[lo..hi], bucket);
             let mut inputs = local.tensors.clone();
             inputs.push(x);
             inputs.push(y);
             inputs.push(mask);
-            let out = handle.execute(&meta.name, inputs)?;
+            let out = handle.call(call, inputs)?;
             anyhow::ensure!(
                 out.len() == local.tensors.len() + 2,
                 "grad_step returned {} tensors",
@@ -379,8 +407,8 @@ fn local_training(
 /// Evaluate loss/accuracy sums over an index set.
 fn eval_batches(
     handle: &EngineHandle,
-    man: &Manifest,
-    arch: &str,
+    man: Option<&Manifest>,
+    call: &Call,
     params: &ParamSet,
     ds: &SyntheticDataset,
     idx: &[usize],
@@ -388,16 +416,13 @@ fn eval_batches(
     let mut loss_sum = 0.0f64;
     let mut correct = 0.0f64;
     let mut weight = 0.0f64;
-    for (lo, hi, bucket) in chunk_plan(man, arch, "eval_batch", idx.len()) {
-        let meta = man
-            .find(arch, "eval_batch", bucket)
-            .ok_or_else(|| anyhow::anyhow!("no eval_batch bucket {bucket} for {arch}"))?;
+    for (lo, hi, bucket) in plan_chunks(man, call, idx.len()) {
         let (x, y, mask) = padded_chunk(ds, &idx[lo..hi], bucket);
         let mut inputs = params.tensors.clone();
         inputs.push(x);
         inputs.push(y);
         inputs.push(mask);
-        let out = handle.execute(&meta.name, inputs)?;
+        let out = handle.call(call, inputs)?;
         anyhow::ensure!(out.len() == 3, "eval_batch returned {} tensors", out.len());
         loss_sum += out[0].scalar() as f64;
         correct += out[1].scalar() as f64;
@@ -406,12 +431,18 @@ fn eval_batches(
     Ok((loss_sum, correct, weight))
 }
 
-/// Split `n` samples into (lo, hi, bucket) chunks using the available
-/// buckets: big chunks use the largest bucket; the tail uses the
-/// smallest bucket that fits (minimizing padding waste).
-pub fn chunk_plan(man: &Manifest, arch: &str, function: &str, n: usize) -> Vec<(usize, usize, usize)> {
-    let buckets = man.buckets(arch, function);
-    assert!(!buckets.is_empty(), "no buckets for {arch}/{function}");
+/// Split `n` samples into (lo, hi, bucket) chunks using the buckets
+/// lowered for exactly `layers`: big chunks use the largest bucket; the
+/// tail uses the smallest bucket that fits (minimizing padding waste).
+pub fn chunk_plan(
+    man: &Manifest,
+    arch: &str,
+    function: &str,
+    layers: &[usize],
+    n: usize,
+) -> Vec<(usize, usize, usize)> {
+    let buckets = man.buckets_for(arch, function, layers);
+    assert!(!buckets.is_empty(), "no buckets for {arch}/{function} with layers {layers:?}");
     let largest = *buckets.last().unwrap();
     let mut plan = Vec::new();
     let mut lo = 0;
@@ -433,8 +464,8 @@ pub fn chunk_plan(man: &Manifest, arch: &str, function: &str, n: usize) -> Vec<(
 mod tests {
     use super::*;
 
-    // Engine-backed coordinator tests live in rust/tests/ (need
-    // artifacts). Pure logic tests here.
+    // Engine-backed coordinator tests live in rust/tests/. Pure logic
+    // tests here.
 
     fn fake_man() -> Manifest {
         // hand-construct a manifest with buckets {8, 32}
@@ -462,7 +493,7 @@ mod tests {
     fn chunk_plan_covers_exactly_once() {
         let man = fake_man();
         for n in [1usize, 7, 8, 9, 31, 32, 33, 100, 257] {
-            let plan = chunk_plan(&man, "toy", "grad_step", n);
+            let plan = chunk_plan(&man, "toy", "grad_step", &[4, 2], n);
             let mut covered = 0;
             let mut prev_hi = 0;
             for (lo, hi, bucket) in &plan {
@@ -479,10 +510,23 @@ mod tests {
     fn chunk_plan_minimizes_tail_padding() {
         let man = fake_man();
         // 40 = 32 + 8: the 8-tail must use the small bucket
-        let plan = chunk_plan(&man, "toy", "grad_step", 40);
+        let plan = chunk_plan(&man, "toy", "grad_step", &[4, 2], 40);
         assert_eq!(plan, vec![(0, 32, 32), (32, 40, 8)]);
         // 5 → single small bucket
-        assert_eq!(chunk_plan(&man, "toy", "grad_step", 5), vec![(0, 5, 8)]);
+        assert_eq!(chunk_plan(&man, "toy", "grad_step", &[4, 2], 5), vec![(0, 5, 8)]);
+    }
+
+    #[test]
+    fn native_plan_is_one_exact_chunk() {
+        let call = Call::new(Function::GradStep, "toy", &[4, 2]);
+        // no manifest (native backend): a single chunk, no padding
+        assert_eq!(plan_chunks(None, &call, 37), vec![(0, 37, 37)]);
+        // with a manifest the bucketed plan applies, layer-exact
+        let man = fake_man();
+        assert_eq!(plan_chunks(Some(&man), &call, 40), vec![(0, 32, 32), (32, 40, 8)]);
+        // a call for different layers must not see those buckets
+        let other = Call::new(Function::GradStep, "toy", &[4, 3, 2]);
+        assert!(man.buckets_for("toy", "grad_step", &other.layers).is_empty());
     }
 
     #[test]
@@ -501,6 +545,10 @@ mod tests {
         assert_eq!(m.as_f32(), &[1., 1., 1., 0., 0., 0., 0., 0.]);
         // padded feature rows are zero
         assert!(x.as_f32()[3 * 4..].iter().all(|&v| v == 0.0));
+        // exact-size chunk (native path) needs no padding
+        let (x, _, m) = padded_chunk(&ds, &[0, 1, 2], 3);
+        assert_eq!(x.dims, vec![3, 4]);
+        assert_eq!(m.as_f32(), &[1., 1., 1.]);
     }
 
     #[test]
@@ -509,5 +557,6 @@ mod tests {
         assert!(c.t_total > 0.0);
         assert!(c.lr > 0.0);
         assert_eq!(c.policy, Policy::Analytical);
+        assert_eq!(c.backend, BackendChoice::Auto);
     }
 }

@@ -19,11 +19,14 @@
 //!   queues, churn-aware re-splitting, straggler re-leasing,
 //!   hierarchical metric aggregation), the [`coordinator`]
 //!   real-training `Trainer`, allocation solvers, wireless
-//!   channel + compute substrates, discrete-event simulator, PJRT
-//!   runtime, metrics, CLI.
+//!   channel + compute substrates, discrete-event simulator, the
+//!   [`backend`] execution subsystem (hermetic pure-Rust MLP executor,
+//!   PJRT behind the `pjrt` feature) under the [`runtime`] engine
+//!   thread, metrics, CLI.
 //! * **L2/L1 (build-time Python)** — JAX MLP fwd/bwd over Pallas fused
 //!   dense kernels, AOT-lowered to `artifacts/*.hlo.txt`; never on the
-//!   request path.
+//!   request path (and never required: the native backend trains for
+//!   real without them).
 //!
 //! Quick taste (solve one scenario with every policy):
 //! ```no_run
@@ -61,6 +64,7 @@ pub mod energy;
 pub mod sim;
 pub mod orchestrator;
 pub mod cluster;
+pub mod backend;
 pub mod runtime;
 pub mod coordinator;
 pub mod metrics;
@@ -69,6 +73,7 @@ pub mod experiments;
 /// Convenience re-exports for downstream users and the examples.
 pub mod prelude {
     pub use crate::alloc::{Allocation, AllocError, Policy, Problem, TaskAllocator};
+    pub use crate::backend::{Backend, Call, Function, NativeBackend};
     pub use crate::channel::{Link, PathLoss};
     pub use crate::cluster::{Cluster, ClusterConfig, ClusterReport, ShardReport};
     pub use crate::compute::ComputeProfile;

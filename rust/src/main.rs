@@ -2,17 +2,22 @@
 //!
 //! ```text
 //! mel solve    --task pedestrian --k 10 --t 30 [--policy all|eta|analytical|sai|opti] [--seed N]
-//! mel figure   <fig1|fig2|fig3a|fig3b|figE|figAsync|figCluster|gains|all> [--out results/] [--seed N]
+//! mel figure   <fig1|fig2|fig3a|fig3b|figE|figAsync|figCluster|figAccuracy|gains|all> [--out results/] [--seed N]
 //! mel train    --task pedestrian --k 4 --t 30 --cycles 20 [--policy ...] [--lr 0.5] [--d 2048]
+//!              [--backend auto|native|pjrt] [--hidden 16,8]
+//! mel bench    diff <old.json> <new.json> [--threshold 0.10] [--fail-on-regress]
 //! mel scenario --task mnist --k 10 [--seed N] [--describe]
 //! mel info
 //! ```
 
 use mel::alloc::Policy;
+use mel::benchkit::SuiteDiff;
 use mel::coordinator::{Orchestrator, TrainConfig};
 use mel::experiments;
+use mel::runtime::BackendChoice;
 use mel::scenario::{CloudletConfig, Scenario};
 use mel::util::cli::{render_help, Args, Command};
+use mel::util::json::Json;
 use mel::util::logging;
 use mel::util::table::{fnum, Table};
 
@@ -26,6 +31,7 @@ fn main() {
         Some("scenario") => cmd_scenario(&args),
         Some("energy") => cmd_energy(&args),
         Some("sweep") => cmd_sweep(&args),
+        Some("bench") => cmd_bench(&args),
         Some("info") => cmd_info(),
         _ => {
             print_help();
@@ -44,13 +50,18 @@ fn print_help() {
         },
         Command {
             name: "figure",
-            about: "reproduce a paper figure (fig1 fig2 fig3a fig3b figE figAsync figCluster gains all)",
+            about: "reproduce a paper figure (fig1 fig2 fig3a fig3b figE figAsync figCluster figAccuracy gains all)",
             usage: "fig1 --out results/ --seed 42",
         },
         Command {
             name: "train",
-            about: "run real MEL training through the PJRT runtime",
-            usage: "--task pedestrian --k 4 --t 30 --cycles 20 --d 2048",
+            about: "run real MEL training (hermetic native backend, or PJRT when available)",
+            usage: "--task pedestrian --k 4 --t 30 --cycles 20 --d 2048 --backend auto --hidden 16",
+        },
+        Command {
+            name: "bench",
+            about: "compare two benchkit BENCH_*.json files (perf trajectory)",
+            usage: "diff results/BENCH_old.json results/BENCH_new.json --threshold 0.10",
         },
         Command {
             name: "scenario",
@@ -70,6 +81,20 @@ fn print_help() {
         Command { name: "info", about: "build/runtime information", usage: "" },
     ];
     print!("{}", render_help("mel", "Mobile Edge Learning toolkit", &cmds));
+}
+
+/// Parse the shared `--hidden 16,8` flag: `Ok(None)` when absent,
+/// `Err` (a usage message) on zero widths — the one place that guards
+/// `ModelSpec::with_hidden`'s positive-width invariant for the CLI.
+fn parse_hidden_flag(args: &Args) -> Result<Option<Vec<usize>>, String> {
+    if args.opt_str("hidden").is_none() {
+        return Ok(None);
+    }
+    let hidden = args.get_usize_list("hidden", &[]);
+    if hidden.iter().any(|&w| w == 0) {
+        return Err(format!("--hidden widths must be positive, got {hidden:?}"));
+    }
+    Ok(Some(hidden))
 }
 
 fn build_scenario(args: &Args) -> Scenario {
@@ -157,12 +182,56 @@ fn cmd_figure(args: &Args) -> i32 {
     let seed = args.get_u64("seed", 42);
     let out = args.opt_str("out").map(str::to_string);
     let figs: Vec<&str> = if which == "all" {
-        vec!["fig1", "fig2", "fig3a", "fig3b", "figE", "figAsync", "figCluster", "gains"]
+        vec![
+            "fig1", "fig2", "fig3a", "fig3b", "figE", "figAsync", "figCluster", "figAccuracy",
+            "gains",
+        ]
     } else {
         vec![which]
     };
     for f in figs {
         match f {
+            "figAccuracy" => {
+                let defaults = experiments::AccuracyConfig::default();
+                let hidden = match parse_hidden_flag(args) {
+                    Ok(h) => h.unwrap_or(defaults.hidden.clone()),
+                    Err(e) => {
+                        eprintln!("mel: usage error: {e}");
+                        return 2;
+                    }
+                };
+                let acfg = experiments::AccuracyConfig {
+                    k: args.get_usize("k", defaults.k),
+                    d: args.get_usize("d", defaults.d),
+                    cycles: args.get_usize("cycles", defaults.cycles),
+                    t_ped: args.get_f64("t-ped", defaults.t_ped),
+                    t_mnist: args.get_f64("t-mnist", defaults.t_mnist),
+                    hidden,
+                    lr: args.get_f64("lr", defaults.lr as f64) as f32,
+                    eval_samples: args.get_usize("eval-samples", defaults.eval_samples),
+                };
+                let report = match experiments::fig_accuracy(&acfg, seed) {
+                    Ok(r) => r,
+                    Err(e) => {
+                        eprintln!("figAccuracy failed: {e}");
+                        return 1;
+                    }
+                };
+                print!("{}", report.data.table().render());
+                println!(
+                    "single-cloudlet vs 1-shard cluster update timelines: {}",
+                    if report.timelines_match { "identical" } else { "DIVERGED" }
+                );
+                if !report.timelines_match {
+                    eprintln!("WARNING: cluster-layer timeline diverged from the orchestrator");
+                }
+                if let Some(dir) = &out {
+                    std::fs::create_dir_all(dir).expect("create out dir");
+                    let path = format!("{dir}/{}.csv", report.data.id);
+                    std::fs::write(&path, report.data.csv()).expect("write csv");
+                    println!("wrote {path}");
+                }
+            }
             "gains" => {
                 let rows = experiments::gains(seed);
                 print!("{}", experiments::gains_table(&rows).render());
@@ -204,6 +273,25 @@ fn cmd_train(args: &Args) -> i32 {
     // the timing model still uses the paper's full-rate coefficients.
     let d = args.get_usize("d", scenario.dataset.total_samples.min(2048));
     scenario.dataset.total_samples = d;
+    // --hidden 16,8 swaps the executed graph's hidden widths (timing
+    // constants stay at the published values; see ModelSpec::with_hidden)
+    match parse_hidden_flag(args) {
+        Ok(Some(hidden)) => {
+            scenario.model = scenario.model.with_hidden(&hidden);
+        }
+        Ok(None) => {}
+        Err(e) => {
+            eprintln!("mel: usage error: {e}");
+            return 2;
+        }
+    }
+    let backend = match BackendChoice::parse(args.get_str("backend", "auto")) {
+        Some(b) => b,
+        None => {
+            eprintln!("unknown backend {:?} (auto|native|pjrt)", args.get_str("backend", ""));
+            return 2;
+        }
+    };
     let cfg = TrainConfig {
         policy: Policy::parse(args.get_str("policy", "analytical")).expect("bad policy"),
         t_total: args.get_f64("t", 30.0),
@@ -212,6 +300,7 @@ fn cmd_train(args: &Args) -> i32 {
         seed: args.get_u64("seed", 42),
         eval_samples: args.get_usize("eval-samples", 512),
         artifact_dir: args.get_str("artifacts", "artifacts").to_string(),
+        backend,
         reallocate_each_cycle: args.has_flag("reallocate"),
         dispatch_threads: args.get_usize("threads", 4),
         shadow_sigma_db: args.get_f64("shadow-db", 0.0),
@@ -219,8 +308,9 @@ fn cmd_train(args: &Args) -> i32 {
         drop_stragglers: args.has_flag("drop-stragglers"),
     };
     println!(
-        "MEL training: task={} K={} d={} T={}s policy={} cycles={}",
+        "MEL training: task={} layers={:?} K={} d={} T={}s policy={} cycles={}",
         scenario.model.name,
+        scenario.model.layers,
         scenario.k(),
         d,
         cfg.t_total,
@@ -230,10 +320,11 @@ fn cmd_train(args: &Args) -> i32 {
     let mut orch = match Orchestrator::new(scenario, cfg) {
         Ok(o) => o,
         Err(e) => {
-            eprintln!("orchestrator init failed: {e}");
+            eprintln!("engine init failed: {e}");
             return 1;
         }
     };
+    println!("execution backend: {}", orch.backend_kind().label());
     match orch.train() {
         Ok(outcomes) => {
             let last = outcomes.last().unwrap();
@@ -290,6 +381,16 @@ fn cmd_info() -> i32 {
         "paper: Mohammad & Sorour, “Adaptive Task Allocation for Mobile Edge Learning” (2018)"
     );
     println!("policies: {:?}", Policy::all().map(|p| p.label()));
+    println!(
+        "backends: native (always available), pjrt ({})",
+        if mel::runtime::pjrt_available() {
+            "available"
+        } else if cfg!(feature = "pjrt") {
+            "feature built, artifacts missing"
+        } else {
+            "not built; add --features pjrt"
+        }
+    );
     match mel::runtime::Manifest::load("artifacts") {
         Ok(m) => println!(
             "artifacts: {} compiled functions for archs {:?}",
@@ -297,6 +398,57 @@ fn cmd_info() -> i32 {
             m.archs()
         ),
         Err(e) => println!("artifacts: not built ({e})"),
+    }
+    0
+}
+
+// ---------------------------------------------------------------------
+// perf-trajectory comparison (`mel bench diff`)
+// ---------------------------------------------------------------------
+
+fn cmd_bench(args: &Args) -> i32 {
+    if args.positional(1) != Some("diff") {
+        eprintln!(
+            "usage: mel bench diff <old.json> <new.json> [--threshold 0.10] [--fail-on-regress]"
+        );
+        return 2;
+    }
+    let (old_path, new_path) = match (args.positional(2), args.positional(3)) {
+        (Some(a), Some(b)) => (a, b),
+        _ => {
+            eprintln!("mel bench diff needs two BENCH_*.json paths");
+            return 2;
+        }
+    };
+    let threshold = args.get_f64("threshold", 0.10);
+    let load = |path: &str| -> Result<Json, String> {
+        let text = std::fs::read_to_string(path).map_err(|e| format!("reading {path}: {e}"))?;
+        Json::parse(&text).map_err(|e| format!("parsing {path}: {e}"))
+    };
+    let (old, new) = match (load(old_path), load(new_path)) {
+        (Ok(o), Ok(n)) => (o, n),
+        (Err(e), _) | (_, Err(e)) => {
+            eprintln!("bench diff: {e}");
+            return 2;
+        }
+    };
+    let diff = match SuiteDiff::from_json(&old, &new) {
+        Ok(d) => d,
+        Err(e) => {
+            eprintln!("bench diff: not benchkit suite JSON: {e}");
+            return 2;
+        }
+    };
+    print!("{}", diff.table(threshold).render());
+    let regressions = diff.regressions(threshold);
+    println!(
+        "{} benchmark(s) compared, {} regression(s) beyond {:.0}%",
+        diff.deltas.len(),
+        regressions.len(),
+        threshold * 100.0
+    );
+    if !regressions.is_empty() && args.has_flag("fail-on-regress") {
+        return 1;
     }
     0
 }

@@ -66,6 +66,25 @@ impl ModelSpec {
         Self::mlp("mnist", &[784, 300, 124, 60, 10], 8)
     }
 
+    /// Same task with replaced hidden-layer widths: the executed graph
+    /// becomes `[features, hidden…, classes]` while every *timing*
+    /// constant (`S_m`, `C_m`, precisions) keeps the original model's
+    /// published values. This deliberately decouples the allocation
+    /// problem (paper-scale coefficients, so τ/batch splits stay
+    /// comparable) from the real compute cost — the knob tests, the
+    /// smoke CLI runs, and `figAccuracy` use to keep hermetic native
+    /// training fast.
+    pub fn with_hidden(mut self, hidden: &[usize]) -> Self {
+        assert!(hidden.iter().all(|&w| w > 0), "hidden widths must be positive");
+        let classes = *self.layers.last().expect("model has layers");
+        let mut layers = Vec::with_capacity(hidden.len() + 2);
+        layers.push(self.features);
+        layers.extend_from_slice(hidden);
+        layers.push(classes);
+        self.layers = layers;
+        self
+    }
+
     /// Look up a named builtin.
     pub fn by_name(name: &str) -> Option<Self> {
         match name {
@@ -184,5 +203,18 @@ mod tests {
     #[should_panic(expected = "at least input")]
     fn mlp_requires_two_layers() {
         ModelSpec::mlp("bad", &[5], 8);
+    }
+
+    #[test]
+    fn with_hidden_swaps_graph_but_keeps_timing_constants() {
+        let m = ModelSpec::pedestrian().with_hidden(&[16]);
+        assert_eq!(m.layers, vec![648, 16, 2]);
+        // allocation-side constants stay at the published values
+        assert_eq!(m.coeffs_const, 195_000);
+        assert_eq!(m.flops_per_sample, 781_208.0);
+        assert_eq!(m.features, 648);
+        let deep = ModelSpec::mnist().with_hidden(&[32, 16]);
+        assert_eq!(deep.layers, vec![784, 32, 16, 10]);
+        assert_eq!(deep.coeffs_const, ModelSpec::mnist().coeffs_const);
     }
 }

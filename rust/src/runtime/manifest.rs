@@ -85,12 +85,14 @@ impl Manifest {
         Ok(Self { dir, artifacts })
     }
 
-    /// All buckets available for `(arch, function)`, ascending.
-    pub fn buckets(&self, arch: &str, function: &str) -> Vec<usize> {
+    /// Buckets for `(arch, function)` lowered for exactly `layers`,
+    /// ascending — the layer-aware variant backends/planners use so a
+    /// manifest holding several lowerings of one arch stays unambiguous.
+    pub fn buckets_for(&self, arch: &str, function: &str, layers: &[usize]) -> Vec<usize> {
         let mut b: Vec<usize> = self
             .artifacts
             .iter()
-            .filter(|a| a.arch == arch && a.function == function)
+            .filter(|a| a.arch == arch && a.function == function && a.layers == layers)
             .map(|a| a.bucket)
             .collect();
         b.sort_unstable();
@@ -104,11 +106,18 @@ impl Manifest {
             .find(|a| a.arch == arch && a.function == function && a.bucket == bucket)
     }
 
-    /// Pick the smallest bucket ≥ `n`, falling back to the largest
-    /// available (the runtime then chunks `n` across multiple calls).
-    pub fn pick_bucket(&self, arch: &str, function: &str, n: usize) -> Option<usize> {
-        let buckets = self.buckets(arch, function);
-        buckets.iter().copied().find(|&b| b >= n).or(buckets.last().copied())
+    /// Find the artifact for `(arch, function, bucket)` lowered for
+    /// exactly `layers`.
+    pub fn find_for(
+        &self,
+        arch: &str,
+        function: &str,
+        bucket: usize,
+        layers: &[usize],
+    ) -> Option<&ArtifactMeta> {
+        self.artifacts.iter().find(|a| {
+            a.arch == arch && a.function == function && a.bucket == bucket && a.layers == layers
+        })
     }
 
     pub fn archs(&self) -> Vec<String> {
@@ -181,24 +190,17 @@ mod tests {
         let d = write_fake();
         let m = Manifest::load(d.path()).unwrap();
         assert_eq!(m.artifacts.len(), 2);
-        assert_eq!(m.buckets("toy", "grad_step"), vec![8, 32]);
+        assert_eq!(m.buckets_for("toy", "grad_step", &[4, 3, 2]), vec![8, 32]);
+        // a different lowering of the same arch sees no buckets
+        assert!(m.buckets_for("toy", "grad_step", &[4, 2]).is_empty());
         assert_eq!(m.archs(), vec!["toy"]);
         let a = m.find("toy", "grad_step", 8).unwrap();
         assert_eq!(a.layers, vec![4, 3, 2]);
         assert_eq!(a.inputs[0].shape, vec![4, 3]);
         assert!(m.find("toy", "eval_batch", 8).is_none());
-    }
-
-    #[test]
-    fn bucket_picking() {
-        let d = write_fake();
-        let m = Manifest::load(d.path()).unwrap();
-        assert_eq!(m.pick_bucket("toy", "grad_step", 5), Some(8));
-        assert_eq!(m.pick_bucket("toy", "grad_step", 8), Some(8));
-        assert_eq!(m.pick_bucket("toy", "grad_step", 9), Some(32));
-        // above the largest → largest (runtime chunks)
-        assert_eq!(m.pick_bucket("toy", "grad_step", 1000), Some(32));
-        assert_eq!(m.pick_bucket("toy", "nope", 1), None);
+        // layer-exact lookup
+        assert!(m.find_for("toy", "grad_step", 8, &[4, 3, 2]).is_some());
+        assert!(m.find_for("toy", "grad_step", 8, &[4, 2]).is_none());
     }
 
     #[test]

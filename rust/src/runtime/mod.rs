@@ -1,20 +1,21 @@
-//! PJRT runtime: loads the AOT artifacts produced by `make artifacts`
-//! and executes them from the coordinator's hot path. Python is never
-//! involved at runtime — the HLO text is compiled once by the in-process
-//! XLA CPU client and cached.
+//! Execution runtime: an **engine thread** that owns one
+//! `Box<dyn Backend>` ([`crate::backend::Backend`]) and serves
+//! execute/warm requests from the coordinator's hot path over an mpsc
+//! channel (the cloneable [`EngineHandle`]).
 //!
-//! Threading: `xla::PjRtClient` is `Rc`-backed (`!Send`), so an **engine
-//! thread** owns the client and all compiled executables; the rest of
-//! the system talks to it through the cloneable [`EngineHandle`]
-//! (mpsc request/reply). PJRT's CPU backend parallelizes each execution
-//! internally, so serializing *submissions* does not serialize compute.
+//! Backend selection ([`Engine::start`], "auto"): the PJRT backend when
+//! the `pjrt` feature is compiled in **and** the AOT artifact manifest
+//! is present; the hermetic [`crate::backend::NativeBackend`] otherwise
+//! — so real training runs on every box, with zero external native
+//! dependencies. [`Engine::start_native`] / [`Engine::start_pjrt`]
+//! force a choice (the CLI's `--backend` flag).
 //!
-//! The XLA dependency is feature-gated (`pjrt`): without it the engine
-//! starts (manifest validation still works) but every execute/warm
-//! request fails with a descriptive error. This keeps the allocation
-//! solvers, the event-driven orchestrator, and the discrete-event
-//! simulator — none of which touch PJRT — buildable with zero external
-//! native dependencies.
+//! Threading: `xla::PjRtClient` is `Rc`-backed (`!Send`), so the
+//! backend is *constructed on* the engine thread and never leaves it;
+//! the rest of the system talks through the handle. PJRT's CPU backend
+//! parallelizes each execution internally, so serializing *submissions*
+//! does not serialize compute; the native backend is single-threaded
+//! per call (learner fan-out still overlaps with coordinator work).
 
 pub mod manifest;
 pub mod tensor;
@@ -22,28 +23,88 @@ pub mod tensor;
 use std::path::PathBuf;
 use std::sync::mpsc;
 
+use crate::backend::{Backend, Call, NativeBackend};
+
 pub use manifest::{ArtifactMeta, Manifest};
 pub use tensor::{Tensor, TensorData};
 
+/// True when the PJRT backend can actually run: the `pjrt` feature is
+/// compiled in **and** `artifacts/manifest.json` exists in the working
+/// directory. Gates the PJRT-only tests/benches (`require_pjrt!`).
+pub fn pjrt_available() -> bool {
+    cfg!(feature = "pjrt") && std::path::Path::new("artifacts/manifest.json").exists()
+}
+
+/// True when *some* execution backend is usable. The native backend is
+/// dependency-free, so this is always `true` — kept as an explicit
+/// predicate so callers state which capability they actually need
+/// instead of conflating "pjrt compiled" with "engine usable" (the
+/// pre-native bug this split fixes).
+pub fn backend_available() -> bool {
+    true
+}
+
+/// Historical alias of [`pjrt_available`] (the old name conflated the
+/// two predicates above; prefer the explicit ones).
+pub fn artifacts_available() -> bool {
+    pjrt_available()
+}
+
+/// Which backend an engine was started with.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BackendKind {
+    Native,
+    Pjrt,
+}
+
+impl BackendKind {
+    pub fn label(&self) -> &'static str {
+        match self {
+            BackendKind::Native => "native",
+            BackendKind::Pjrt => "pjrt",
+        }
+    }
+}
+
+/// Backend selection policy for [`Engine::start_with`] / the CLI.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum BackendChoice {
+    /// PJRT when compiled in and artifacts exist; native otherwise.
+    #[default]
+    Auto,
+    Native,
+    Pjrt,
+}
+
+impl BackendChoice {
+    pub fn parse(s: &str) -> Option<Self> {
+        match s.to_ascii_lowercase().as_str() {
+            "auto" => Some(Self::Auto),
+            "native" => Some(Self::Native),
+            "pjrt" => Some(Self::Pjrt),
+            _ => None,
+        }
+    }
+}
+
 /// A request to the engine thread.
 enum Request {
-    /// Execute `artifact` with `inputs`; reply with the output tuple.
-    Execute {
-        artifact: String,
+    /// Execute a backend-agnostic model call.
+    Call {
+        call: Call,
         inputs: Vec<Tensor>,
         reply: mpsc::Sender<Result<Vec<Tensor>, String>>,
     },
-    /// Ensure an artifact is compiled (warmup); reply when done.
-    Warm { artifact: String, reply: mpsc::Sender<Result<(), String>> },
+    /// Prepare a model call ahead of the hot path.
+    WarmCall { call: Call, reply: mpsc::Sender<Result<(), String>> },
+    /// Execute a named AOT artifact (PJRT-only legacy protocol).
+    Artifact {
+        name: String,
+        inputs: Vec<Tensor>,
+        reply: mpsc::Sender<Result<Vec<Tensor>, String>>,
+    },
+    WarmArtifact { name: String, reply: mpsc::Sender<Result<(), String>> },
     Shutdown,
-}
-
-/// True when artifacts can actually be executed: the `pjrt` feature is
-/// compiled in **and** `artifacts/manifest.json` exists in the working
-/// directory. Tests and benches use this single predicate to skip
-/// gracefully instead of failing on boxes without `make artifacts`.
-pub fn artifacts_available() -> bool {
-    cfg!(feature = "pjrt") && std::path::Path::new("artifacts/manifest.json").exists()
 }
 
 /// Cloneable, `Send` handle to the engine thread.
@@ -56,24 +117,158 @@ pub struct EngineHandle {
 pub struct Engine {
     handle: EngineHandle,
     join: Option<std::thread::JoinHandle<()>>,
+    kind: BackendKind,
+    manifest: Option<Manifest>,
 }
 
 impl Engine {
-    /// Start an engine over the artifact directory (loads the manifest
-    /// eagerly, compiles artifacts lazily on first use).
+    /// Start with automatic backend selection over `artifact_dir`:
+    /// PJRT when the feature is compiled in and the manifest loads,
+    /// the hermetic native backend otherwise.
     pub fn start(artifact_dir: impl Into<PathBuf>) -> anyhow::Result<Self> {
+        Self::start_with(BackendChoice::Auto, artifact_dir)
+    }
+
+    /// Start with an explicit backend choice.
+    pub fn start_with(
+        choice: BackendChoice,
+        artifact_dir: impl Into<PathBuf>,
+    ) -> anyhow::Result<Self> {
         let dir = artifact_dir.into();
-        let man = Manifest::load(&dir)?; // validate before spawning
-        let (tx, rx) = mpsc::channel::<Request>();
-        let join = std::thread::Builder::new()
-            .name("mel-pjrt-engine".into())
-            .spawn(move || engine_main(man, rx))
-            .expect("spawn engine thread");
-        Ok(Self { handle: EngineHandle { tx }, join: Some(join) })
+        match choice {
+            BackendChoice::Native => Ok(Self::start_native()),
+            BackendChoice::Pjrt => Self::start_pjrt(dir),
+            BackendChoice::Auto => Ok(Self::start_auto(dir, |_| true)),
+        }
+    }
+
+    /// The single auto-selection policy: PJRT when the feature is
+    /// compiled in, the manifest loads, **and** the caller's `usable`
+    /// predicate accepts it (e.g. "covers my model's layers"); the
+    /// hermetic native backend otherwise. Never fails — native is the
+    /// universal fallback.
+    pub fn start_auto(
+        artifact_dir: impl Into<PathBuf>,
+        usable: impl Fn(&Manifest) -> bool,
+    ) -> Self {
+        let dir = artifact_dir.into();
+        if cfg!(feature = "pjrt") {
+            match Manifest::load(&dir) {
+                Ok(man) if usable(&man) => match Self::start_pjrt_loaded(man) {
+                    Ok(engine) => return engine,
+                    Err(e) => log::warn!("pjrt engine failed to start ({e}); using native"),
+                },
+                Ok(_) => log::info!(
+                    "artifacts in {dir:?} do not cover this workload; using the native backend"
+                ),
+                Err(e) => {
+                    log::info!("no usable AOT artifacts ({e}); falling back to the native backend")
+                }
+            }
+        }
+        Self::start_native()
+    }
+
+    /// Start the hermetic pure-Rust backend (never fails).
+    pub fn start_native() -> Self {
+        spawn(BackendKind::Native, None, || {
+            Ok(Box::new(NativeBackend::new()) as Box<dyn Backend>)
+        })
+        .expect("native backend construction cannot fail")
+    }
+
+    /// Start the PJRT backend over the AOT artifacts; errors truthfully
+    /// when the feature is missing or the manifest cannot load.
+    pub fn start_pjrt(artifact_dir: impl Into<PathBuf>) -> anyhow::Result<Self> {
+        let dir = artifact_dir.into();
+        #[cfg(not(feature = "pjrt"))]
+        {
+            let _ = dir;
+            anyhow::bail!(
+                "built without the `pjrt` feature: add the `xla` dependency in Cargo.toml and \
+                 rebuild with `--features pjrt`, or use the native backend (`--backend native`)"
+            );
+        }
+        #[cfg(feature = "pjrt")]
+        {
+            let man = Manifest::load(&dir)?; // validate before spawning
+            Self::start_pjrt_loaded(man)
+        }
+    }
+
+    /// Start the PJRT backend over an already-loaded manifest (the auto
+    /// probes — here and in the coordinator — hand their parse here
+    /// instead of re-reading the JSON).
+    pub(crate) fn start_pjrt_loaded(man: Manifest) -> anyhow::Result<Self> {
+        #[cfg(not(feature = "pjrt"))]
+        {
+            let _ = man;
+            anyhow::bail!(
+                "built without the `pjrt` feature: add the `xla` dependency in Cargo.toml and \
+                 rebuild with `--features pjrt`, or use the native backend (`--backend native`)"
+            );
+        }
+        #[cfg(feature = "pjrt")]
+        {
+            let thread_man = man.clone();
+            spawn(BackendKind::Pjrt, Some(man), move || pjrt::PjrtBackend::create(thread_man))
+                .map_err(|e| anyhow::anyhow!("pjrt engine failed to start: {e}"))
+        }
     }
 
     pub fn handle(&self) -> EngineHandle {
         self.handle.clone()
+    }
+
+    /// Which backend the engine thread is running.
+    pub fn kind(&self) -> BackendKind {
+        self.kind
+    }
+
+    /// The AOT manifest (PJRT engines only) — callers use its batch
+    /// buckets to plan padded chunks; the native backend accepts any
+    /// batch size, so `None` means "no chunking required".
+    pub fn manifest(&self) -> Option<&Manifest> {
+        self.manifest.as_ref()
+    }
+}
+
+/// Spawn the engine thread; the backend is constructed *on* the thread
+/// (PJRT's client is `!Send`) and its construction outcome reported
+/// back synchronously — so callers (notably [`Engine::start_auto`]) can
+/// fall back instead of holding an engine that fails every request.
+fn spawn<F>(kind: BackendKind, manifest: Option<Manifest>, factory: F) -> Result<Engine, String>
+where
+    F: FnOnce() -> Result<Box<dyn Backend>, String> + Send + 'static,
+{
+    let (tx, rx) = mpsc::channel::<Request>();
+    let (ready_tx, ready_rx) = mpsc::channel::<Result<(), String>>();
+    let join = std::thread::Builder::new()
+        .name(format!("mel-engine-{}", kind.label()))
+        .spawn(move || match factory() {
+            Ok(backend) => {
+                let _ = ready_tx.send(Ok(()));
+                engine_main(backend, rx);
+            }
+            Err(e) => {
+                let _ = ready_tx.send(Err(e.clone()));
+                fail_all(rx, &e);
+            }
+        })
+        .expect("spawn engine thread");
+    match ready_rx.recv() {
+        Ok(Ok(())) => Ok(Engine { handle: EngineHandle { tx }, join: Some(join), kind, manifest }),
+        Ok(Err(e)) => {
+            // unblock the fail_all drain and reap the thread
+            drop(tx);
+            let _ = join.join();
+            Err(e)
+        }
+        Err(_) => {
+            drop(tx);
+            let _ = join.join();
+            Err("engine thread died during startup".into())
+        }
     }
 }
 
@@ -87,23 +282,42 @@ impl Drop for Engine {
 }
 
 impl EngineHandle {
-    /// Execute an artifact by name; blocks until the result is ready.
+    fn send(&self, req: Request) -> anyhow::Result<()> {
+        self.tx.send(req).map_err(|_| anyhow::anyhow!("engine thread is gone"))
+    }
+
+    /// Execute a backend-agnostic model call; blocks for the result.
+    pub fn call(&self, call: &Call, inputs: Vec<Tensor>) -> anyhow::Result<Vec<Tensor>> {
+        let (reply, rx) = mpsc::channel();
+        self.send(Request::Call { call: call.clone(), inputs, reply })?;
+        rx.recv()
+            .map_err(|_| anyhow::anyhow!("engine thread dropped the reply"))?
+            .map_err(|e| anyhow::anyhow!("{} {}: {e}", call.function.name(), call.arch))
+    }
+
+    /// Prepare a model call ahead of the hot path.
+    pub fn warm_call(&self, call: &Call) -> anyhow::Result<()> {
+        let (reply, rx) = mpsc::channel();
+        self.send(Request::WarmCall { call: call.clone(), reply })?;
+        rx.recv()
+            .map_err(|_| anyhow::anyhow!("engine thread dropped the reply"))?
+            .map_err(|e| anyhow::anyhow!("warm {}: {e}", call.arch))
+    }
+
+    /// Execute a named AOT artifact (PJRT engines; the native backend
+    /// rejects with a descriptive error).
     pub fn execute(&self, artifact: &str, inputs: Vec<Tensor>) -> anyhow::Result<Vec<Tensor>> {
         let (reply, rx) = mpsc::channel();
-        self.tx
-            .send(Request::Execute { artifact: artifact.into(), inputs, reply })
-            .map_err(|_| anyhow::anyhow!("engine thread is gone"))?;
+        self.send(Request::Artifact { name: artifact.into(), inputs, reply })?;
         rx.recv()
             .map_err(|_| anyhow::anyhow!("engine thread dropped the reply"))?
             .map_err(|e| anyhow::anyhow!("execute {artifact}: {e}"))
     }
 
-    /// Compile an artifact ahead of the hot path.
+    /// Compile a named AOT artifact ahead of the hot path.
     pub fn warm(&self, artifact: &str) -> anyhow::Result<()> {
         let (reply, rx) = mpsc::channel();
-        self.tx
-            .send(Request::Warm { artifact: artifact.into(), reply })
-            .map_err(|_| anyhow::anyhow!("engine thread is gone"))?;
+        self.send(Request::WarmArtifact { name: artifact.into(), reply })?;
         rx.recv()
             .map_err(|_| anyhow::anyhow!("engine thread dropped the reply"))?
             .map_err(|e| anyhow::anyhow!("warm {artifact}: {e}"))
@@ -114,18 +328,35 @@ impl EngineHandle {
 // engine thread internals
 // ---------------------------------------------------------------------
 
-fn engine_main(man: Manifest, rx: mpsc::Receiver<Request>) {
-    backend::serve(man, rx);
+fn engine_main(mut backend: Box<dyn Backend>, rx: mpsc::Receiver<Request>) {
+    for req in rx {
+        match req {
+            Request::Call { call, inputs, reply } => {
+                let _ = reply.send(backend.execute(&call, inputs));
+            }
+            Request::WarmCall { call, reply } => {
+                let _ = reply.send(backend.warm(&call));
+            }
+            Request::Artifact { name, inputs, reply } => {
+                let _ = reply.send(backend.execute_artifact(&name, inputs));
+            }
+            Request::WarmArtifact { name, reply } => {
+                let _ = reply.send(backend.warm_artifact(&name));
+            }
+            Request::Shutdown => break,
+        }
+    }
 }
 
-/// Drain every request with a constant error message.
+/// Drain every request with a constant error message (backend
+/// construction failed).
 fn fail_all(rx: mpsc::Receiver<Request>, msg: &str) {
     for req in rx {
         match req {
-            Request::Execute { reply, .. } => {
+            Request::Call { reply, .. } | Request::Artifact { reply, .. } => {
                 let _ = reply.send(Err(msg.to_string()));
             }
-            Request::Warm { reply, .. } => {
+            Request::WarmCall { reply, .. } | Request::WarmArtifact { reply, .. } => {
                 let _ = reply.send(Err(msg.to_string()));
             }
             Request::Shutdown => break,
@@ -133,80 +364,126 @@ fn fail_all(rx: mpsc::Receiver<Request>, msg: &str) {
     }
 }
 
-#[cfg(not(feature = "pjrt"))]
-mod backend {
-    //! Stub backend: the engine thread answers every request with a
-    //! build-configuration error. Everything that does not execute
-    //! artifacts (manifest validation, handle plumbing, shutdown) keeps
-    //! working.
-    use super::{fail_all, Manifest, Request};
-    use std::sync::mpsc;
-
-    pub fn serve(_man: Manifest, rx: mpsc::Receiver<Request>) {
-        fail_all(
-            rx,
-            "built without the `pjrt` feature: add the `xla` dependency in Cargo.toml \
-             and rebuild with `--features pjrt` to execute artifacts",
-        );
-    }
-}
-
 #[cfg(feature = "pjrt")]
-mod backend {
+mod pjrt {
     //! Real PJRT backend: owns the `!Send` XLA client and the compiled
-    //! executable cache on the engine thread.
-    use super::{fail_all, Manifest, Request, Tensor, TensorData};
+    //! executable cache on the engine thread, behind the shared
+    //! [`Backend`] trait. Model calls resolve to the bucketed artifact
+    //! whose `(arch, function, bucket)` matches the padded inputs.
+    use super::{Backend, Call, Manifest, Tensor, TensorData};
     use std::collections::HashMap;
-    use std::sync::mpsc;
 
-    pub fn serve(man: Manifest, rx: mpsc::Receiver<Request>) {
-        let client = match xla::PjRtClient::cpu() {
-            Ok(c) => c,
-            Err(e) => {
-                // Fail every request with the construction error.
-                fail_all(rx, &format!("PjRtClient::cpu failed: {e}"));
-                return;
+    pub struct PjrtBackend {
+        client: xla::PjRtClient,
+        man: Manifest,
+        cache: HashMap<String, xla::PjRtLoadedExecutable>,
+    }
+
+    impl PjrtBackend {
+        pub fn create(man: Manifest) -> Result<Box<dyn Backend>, String> {
+            let client =
+                xla::PjRtClient::cpu().map_err(|e| format!("PjRtClient::cpu failed: {e}"))?;
+            Ok(Box::new(Self { client, man, cache: HashMap::new() }))
+        }
+
+        fn ensure_compiled(&mut self, name: &str) -> Result<(), String> {
+            if self.cache.contains_key(name) {
+                return Ok(());
             }
-        };
-        let mut cache: HashMap<String, xla::PjRtLoadedExecutable> = HashMap::new();
+            let meta = self
+                .man
+                .artifacts
+                .iter()
+                .find(|a| a.name == name)
+                .ok_or_else(|| format!("unknown artifact {name:?}"))?;
+            let proto = xla::HloModuleProto::from_text_file(&meta.file)
+                .map_err(|e| format!("parse {:?}: {e}", meta.file))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = self.client.compile(&comp).map_err(|e| format!("compile {name}: {e}"))?;
+            log::debug!("compiled artifact {name}");
+            self.cache.insert(name.to_string(), exe);
+            Ok(())
+        }
 
-        for req in rx {
-            match req {
-                Request::Shutdown => break,
-                Request::Warm { artifact, reply } => {
-                    let r = ensure_compiled(&client, &man, &mut cache, &artifact).map(|_| ());
-                    let _ = reply.send(r);
-                }
-                Request::Execute { artifact, inputs, reply } => {
-                    let r = ensure_compiled(&client, &man, &mut cache, &artifact)
-                        .and_then(|_| run(&cache[&artifact], inputs));
-                    let _ = reply.send(r);
-                }
+        /// Resolve a model call against the padded batch dimension,
+        /// layer-exact (a manifest may hold several lowerings per arch).
+        fn resolve(&self, call: &Call, inputs: &[Tensor]) -> Result<String, String> {
+            let bucket = inputs
+                .get(call.param_tensors())
+                .and_then(|x| x.dims.first().copied())
+                .ok_or_else(|| "call inputs missing the batch tensor".to_string())?;
+            if let Some(meta) =
+                self.man.find_for(&call.arch, call.function.name(), bucket, &call.layers)
+            {
+                return Ok(meta.name.clone());
+            }
+            // distinguish "wrong layers" from "no such bucket at all"
+            match self.man.find(&call.arch, call.function.name(), bucket) {
+                Some(other) => Err(format!(
+                    "artifact {} was lowered for layers {:?} but the call wants {:?}; \
+                     rebuild artifacts or use the native backend",
+                    other.name, other.layers, call.layers
+                )),
+                None => Err(format!(
+                    "no {} artifact for arch {:?} at bucket {bucket}; run `make artifacts`",
+                    call.function.name(),
+                    call.arch
+                )),
             }
         }
     }
 
-    fn ensure_compiled(
-        client: &xla::PjRtClient,
-        man: &Manifest,
-        cache: &mut HashMap<String, xla::PjRtLoadedExecutable>,
-        name: &str,
-    ) -> Result<(), String> {
-        if cache.contains_key(name) {
-            return Ok(());
+    impl Backend for PjrtBackend {
+        fn name(&self) -> &'static str {
+            "pjrt"
         }
-        let meta = man
-            .artifacts
-            .iter()
-            .find(|a| a.name == name)
-            .ok_or_else(|| format!("unknown artifact {name:?}"))?;
-        let proto = xla::HloModuleProto::from_text_file(&meta.file)
-            .map_err(|e| format!("parse {:?}: {e}", meta.file))?;
-        let comp = xla::XlaComputation::from_proto(&proto);
-        let exe = client.compile(&comp).map_err(|e| format!("compile {name}: {e}"))?;
-        log::debug!("compiled artifact {name}");
-        cache.insert(name.to_string(), exe);
-        Ok(())
+
+        fn execute(&mut self, call: &Call, inputs: Vec<Tensor>) -> Result<Vec<Tensor>, String> {
+            let name = self.resolve(call, &inputs)?;
+            self.execute_artifact(&name, inputs)
+        }
+
+        fn warm(&mut self, call: &Call) -> Result<(), String> {
+            // match on layers too: warming must fail for a call that
+            // execute() could never resolve, not defer the error to
+            // the hot path
+            let names: Vec<String> = self
+                .man
+                .artifacts
+                .iter()
+                .filter(|a| {
+                    a.arch == call.arch
+                        && a.function == call.function.name()
+                        && a.layers == call.layers
+                })
+                .map(|a| a.name.clone())
+                .collect();
+            if names.is_empty() {
+                return Err(format!(
+                    "no {} artifacts for arch {:?} with layers {:?}",
+                    call.function.name(),
+                    call.arch,
+                    call.layers
+                ));
+            }
+            for n in names {
+                self.ensure_compiled(&n)?;
+            }
+            Ok(())
+        }
+
+        fn execute_artifact(
+            &mut self,
+            name: &str,
+            inputs: Vec<Tensor>,
+        ) -> Result<Vec<Tensor>, String> {
+            self.ensure_compiled(name)?;
+            run(&self.cache[name], inputs)
+        }
+
+        fn warm_artifact(&mut self, name: &str) -> Result<(), String> {
+            self.ensure_compiled(name)
+        }
     }
 
     fn to_literal(t: &Tensor) -> Result<xla::Literal, String> {
@@ -258,13 +535,31 @@ mod backend {
 
 #[cfg(test)]
 mod tests {
-    // PJRT-backed tests live in rust/tests/runtime_integration.rs (they
-    // need `make artifacts`). Here: handle plumbing with a dead engine.
     use super::*;
+    use crate::backend::Function;
 
     #[test]
-    fn handle_reports_missing_dir() {
-        assert!(Engine::start("/definitely/not/a/dir").is_err());
+    fn missing_artifacts_fall_back_to_native() {
+        let eng = Engine::start("/definitely/not/a/dir").unwrap();
+        assert_eq!(eng.kind(), BackendKind::Native);
+        assert!(eng.manifest().is_none());
+    }
+
+    #[test]
+    fn native_engine_executes_calls_end_to_end() {
+        let eng = Engine::start_native();
+        let h = eng.handle();
+        let layers = [3usize, 4, 2];
+        let call = Call::new(Function::GradStep, "toy", &layers);
+        let inputs = crate::testkit::zero_param_mlp_inputs(&layers, 5, 5);
+        let out = h.call(&call, inputs).unwrap();
+        assert_eq!(out.len(), 6);
+        assert_eq!(out[5].scalar(), 5.0);
+        assert!((out[4].scalar() - 5.0 * 2f32.ln()).abs() < 1e-5);
+        // warm is a no-op, artifact names are rejected truthfully
+        h.warm_call(&call).unwrap();
+        let err = h.execute("pedestrian_grad_step_b64", vec![]).unwrap_err();
+        assert!(err.to_string().contains("native"), "{err}");
     }
 
     #[test]
@@ -274,5 +569,31 @@ mod tests {
         let h = EngineHandle { tx };
         let err = h.execute("x", vec![]).unwrap_err();
         assert!(err.to_string().contains("engine thread"));
+    }
+
+    #[test]
+    fn backend_predicates_are_split() {
+        // the engine is always usable (native backend)…
+        assert!(backend_available());
+        // …while pjrt needs both the feature and the artifacts
+        if !cfg!(feature = "pjrt") {
+            assert!(!pjrt_available());
+        }
+        assert_eq!(artifacts_available(), pjrt_available());
+        assert_eq!(BackendChoice::parse("native"), Some(BackendChoice::Native));
+        assert_eq!(BackendChoice::parse("PJRT"), Some(BackendChoice::Pjrt));
+        assert_eq!(BackendChoice::parse("auto"), Some(BackendChoice::Auto));
+        assert_eq!(BackendChoice::parse("x"), None);
+    }
+
+    #[test]
+    fn forcing_pjrt_without_feature_errors_truthfully() {
+        if cfg!(feature = "pjrt") {
+            return; // covered by the pjrt-gated integration tests
+        }
+        let err = Engine::start_pjrt("artifacts").unwrap_err();
+        let msg = err.to_string();
+        assert!(msg.contains("pjrt"), "{msg}");
+        assert!(msg.contains("native"), "{msg}");
     }
 }

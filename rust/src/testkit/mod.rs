@@ -14,13 +14,16 @@
 
 use crate::util::rng::{Pcg64, Rng};
 
-/// Skip a PJRT-backed test or bench body when artifacts cannot execute
+/// Skip a PJRT-only test or bench body when the PJRT backend cannot run
 /// (no `make artifacts` output, or built without the `pjrt` feature).
-/// Expands to an early `return`, so it must be the first statement.
+/// Only the artifact-specific paths need this — real training runs on
+/// every box through the native backend (`runtime::backend_available()`
+/// is always true). Expands to an early `return`, so it must be the
+/// first statement.
 #[macro_export]
-macro_rules! require_artifacts {
+macro_rules! require_pjrt {
     () => {
-        if !$crate::runtime::artifacts_available() {
+        if !$crate::runtime::pjrt_available() {
             eprintln!(
                 "skipping {}: requires `make artifacts` and --features pjrt",
                 module_path!()
@@ -28,6 +31,37 @@ macro_rules! require_artifacts {
             return;
         }
     };
+}
+
+/// Deterministic `[zero params…, x, y, mask]` input list for an MLP
+/// backend call: all-zero parameters (closed-form loss `n·ln C`),
+/// repeating-pattern features, labels `i % classes`, and the first
+/// `real` mask entries set — the shared builder behind the closed-form
+/// backend checks in `rust/src/backend/`, `rust/src/runtime/`, and
+/// `rust/tests/runtime_integration.rs`.
+pub fn zero_param_mlp_inputs(
+    layers: &[usize],
+    batch: usize,
+    real: usize,
+) -> Vec<crate::runtime::Tensor> {
+    use crate::runtime::Tensor;
+    assert!(layers.len() >= 2, "mlp needs input+output layers");
+    assert!(real <= batch, "real rows ({real}) must fit the batch ({batch})");
+    let mut inputs = Vec::new();
+    for w in layers.windows(2) {
+        inputs.push(Tensor::zeros_f32(vec![w[0], w[1]]));
+        inputs.push(Tensor::zeros_f32(vec![w[1]]));
+    }
+    let f = layers[0];
+    let classes = *layers.last().unwrap();
+    let x: Vec<f32> = (0..batch * f).map(|i| ((i % 7) as f32) / 7.0).collect();
+    let y: Vec<i32> = (0..batch).map(|i| (i % classes) as i32).collect();
+    let mut mask = vec![1.0f32; real];
+    mask.resize(batch, 0.0);
+    inputs.push(Tensor::f32(vec![batch, f], x));
+    inputs.push(Tensor::i32(vec![batch], y));
+    inputs.push(Tensor::f32(vec![batch], mask));
+    inputs
 }
 
 /// Number of cases per property (override with MEL_PROPTEST_CASES).

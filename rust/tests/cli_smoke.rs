@@ -134,6 +134,11 @@ fn malformed_numeric_flags_are_usage_errors_not_panics() {
     assert!(!ok);
     assert!(stderr.contains("bad integer"), "stderr: {stderr}");
     assert!(!stderr.contains("panicked"), "must not panic: {stderr}");
+    // zero hidden widths are a usage error, not an assert panic
+    let (_, stderr, ok) = mel(&["train", "--k", "2", "--d", "32", "--hidden", "16,0"]);
+    assert!(!ok);
+    assert!(stderr.contains("--hidden widths must be positive"), "stderr: {stderr}");
+    assert!(!stderr.contains("panicked"), "must not panic: {stderr}");
 }
 
 #[test]
@@ -142,6 +147,118 @@ fn figure_fig_cluster_renders() {
     assert!(ok, "stderr: {stderr}");
     assert!(stdout.contains("updates churn re-lease"), "{stdout}");
     assert!(stdout.contains("updates sync"), "{stdout}");
+}
+
+#[test]
+fn train_runs_offline_through_native_backend() {
+    // the flagship fix of the backend split: real training end to end
+    // with no artifacts and no pjrt feature — the old engine error path
+    // ("run `make artifacts`") no longer exists on the default route
+    let (stdout, stderr, ok) = mel(&[
+        "train", "--task", "pedestrian", "--k", "2", "--t", "2", "--d", "96", "--cycles", "1",
+        "--hidden", "8", "--eval-samples", "48", "--seed", "7",
+    ]);
+    assert!(ok, "stderr: {stderr}");
+    assert!(stdout.contains("execution backend: native"), "{stdout}");
+    assert!(stdout.contains("done: 1 cycles"), "{stdout}");
+    assert!(!stderr.contains("make artifacts"), "stderr: {stderr}");
+}
+
+#[test]
+fn train_forced_pjrt_errors_truthfully_without_feature() {
+    if mel::runtime::pjrt_available() {
+        return; // on a pjrt box the forced path actually trains
+    }
+    let (_, stderr, ok) = mel(&[
+        "train", "--task", "pedestrian", "--k", "2", "--backend", "pjrt", "--d", "64",
+        "--cycles", "1", "--hidden", "8",
+    ]);
+    assert!(!ok);
+    // the error names the missing capability (feature/artifacts)…
+    assert!(stderr.contains("pjrt") || stderr.contains("artifacts"), "stderr: {stderr}");
+    if !cfg!(feature = "pjrt") {
+        // …and points at the native alternative instead of a dead end
+        assert!(stderr.contains("native"), "stderr: {stderr}");
+    }
+    // unknown backend is a usage error
+    let (_, stderr, ok) = mel(&["train", "--backend", "frobnicate"]);
+    assert!(!ok);
+    assert!(stderr.contains("unknown backend"), "stderr: {stderr}");
+}
+
+#[test]
+fn figure_fig_accuracy_renders_offline() {
+    let (stdout, stderr, ok) = mel(&[
+        "figure", "figAccuracy", "--seed", "42", "--k", "2", "--d", "96", "--cycles", "2",
+        "--hidden", "8", "--eval-samples", "48",
+    ]);
+    assert!(ok, "stderr: {stderr}");
+    assert!(stdout.contains("acc_pm pedestrian optimized"), "{stdout}");
+    assert!(stdout.contains("acc_pm mnist equal"), "{stdout}");
+    assert!(
+        stdout.contains("update timelines: identical"),
+        "cluster/orchestrator timelines must match: {stdout}"
+    );
+}
+
+#[test]
+fn bench_diff_compares_suite_json() {
+    let dir = std::env::temp_dir().join(format!("mel-bench-diff-{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let suite = |name: &str, means: &[(&str, f64)]| {
+        let results: Vec<String> = means
+            .iter()
+            .map(|(n, m)| format!("{{\"name\":\"{n}\",\"mean_s\":{m}}}"))
+            .collect();
+        format!(
+            "{{\"suite\":\"{name}\",\"unit\":\"seconds/iter\",\"results\":[{}]}}",
+            results.join(",")
+        )
+    };
+    let old_path = dir.join("BENCH_old.json");
+    let new_path = dir.join("BENCH_new.json");
+    std::fs::write(&old_path, suite("solvers", &[("alloc", 1.0e-3), ("split", 2.0e-3)])).unwrap();
+    std::fs::write(&new_path, suite("solvers", &[("alloc", 1.5e-3), ("split", 1.0e-3)])).unwrap();
+
+    let (stdout, stderr, ok) =
+        mel(&["bench", "diff", old_path.to_str().unwrap(), new_path.to_str().unwrap()]);
+    assert!(ok, "stderr: {stderr}");
+    assert!(stdout.contains("REGRESS"), "{stdout}"); // alloc +50%
+    assert!(stdout.contains("improve"), "{stdout}"); // split halved
+    assert!(stdout.contains("1 regression(s)"), "{stdout}");
+
+    // --fail-on-regress turns the regression into a nonzero exit
+    let (_, _, ok) = mel(&[
+        "bench", "diff", old_path.to_str().unwrap(), new_path.to_str().unwrap(),
+        "--fail-on-regress",
+    ]);
+    assert!(!ok);
+
+    // raising the threshold clears it
+    let (stdout, _, ok) = mel(&[
+        "bench", "diff", old_path.to_str().unwrap(), new_path.to_str().unwrap(),
+        "--threshold", "0.6", "--fail-on-regress",
+    ]);
+    assert!(ok, "{stdout}");
+    assert!(stdout.contains("0 regression(s)"), "{stdout}");
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn bench_diff_usage_and_io_errors() {
+    let (_, stderr, ok) = mel(&["bench"]);
+    assert!(!ok);
+    assert!(stderr.contains("usage"), "{stderr}");
+    let (_, stderr, ok) = mel(&["bench", "diff", "/no/such/old.json", "/no/such/new.json"]);
+    assert!(!ok);
+    assert!(stderr.contains("reading"), "{stderr}");
+}
+
+#[test]
+fn info_reports_backends() {
+    let (stdout, _, ok) = mel(&["info"]);
+    assert!(ok);
+    assert!(stdout.contains("native (always available)"), "{stdout}");
 }
 
 #[test]
