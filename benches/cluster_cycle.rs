@@ -60,6 +60,50 @@ fn main() {
         });
     }
 
+    group("cluster-level parameter server (2-shard per-update SGD replay)");
+    {
+        use mel::cluster::{ParamServer, ParamServerConfig};
+        use mel::scenario::{ChurnTrace, ShardSpec};
+        let mut cloudlet = CloudletConfig::pedestrian(2);
+        cloudlet.model = cloudlet.model.with_hidden(&[8]);
+        cloudlet.dataset.total_samples = 64;
+        let spec = ClusterSpec {
+            shards: (0..2)
+                .map(|i| ShardSpec {
+                    cloudlet: cloudlet.clone(),
+                    seed_offset: i,
+                    churn: ChurnTrace::default(),
+                })
+                .collect(),
+            global: Default::default(),
+        };
+        let cluster = Cluster::new(
+            spec.clone(),
+            ClusterConfig {
+                policy: Policy::Analytical,
+                mode: Mode::Sync,
+                t_total: 2.0,
+                cycles: 2,
+                seed,
+                ..ClusterConfig::default()
+            },
+        );
+        let report = cluster.run().expect("feasible");
+        // construction (engine spawn + dataset synthesis) stays outside
+        // the timed closure: the stored-baseline CI gate watches the
+        // replay path, not thread-startup jitter. Repeated replays on
+        // one server do identical compute (same leases, same batch
+        // sizes), so the per-iteration cost is stable.
+        let mut ps = ParamServer::new(
+            &spec,
+            ParamServerConfig { lr: 0.05, seed, eval_samples: 32, ..Default::default() },
+        )
+        .expect("native engine");
+        suite.run(&b, "param-server replay: 2 shards x K=2, 2 cycles (native)", || {
+            ps.replay(&report.updates).expect("replay").applies
+        });
+    }
+
     group("churn-aware planner in isolation (K=16 re-split)");
     {
         use mel::cluster::ChurnAwarePlanner;

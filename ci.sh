@@ -5,6 +5,9 @@
 #   STRICT_LINT=1 ./ci.sh  # fail on fmt/clippy findings too
 #   CI_BENCH=1 ./ci.sh   # additionally run the bench targets, which
 #                        # emit results/BENCH_*.json via benchkit::Suite
+#                        # and diff them against the stored baseline
+#                        # (results/BASELINE.json); a regression beyond
+#                        # BENCH_REGRESS_THRESHOLD (default 50%) fails CI
 #
 # Tier-1 gate: `cargo build --release && cargo test -q` must be green.
 set -euo pipefail
@@ -41,6 +44,32 @@ cargo build --release
 echo "==> cargo test -q"
 cargo test -q
 
+# ---- perf-trajectory gate self-test -------------------------------------
+# The stored-baseline comparison below only bites when CI_BENCH runs, so
+# prove on every CI run that the gate itself still fails on a synthetic
+# regression (a 2.1x slowdown must flip `--fail-on-regress` to exit 1).
+echo "==> bench-diff regression gate self-test"
+gate_tmp="$(mktemp -d)"
+cat > "$gate_tmp/old.json" <<'EOF'
+{"suite":"gate","unit":"seconds/iter","results":[{"name":"hot_path","mean_s":0.001}]}
+EOF
+cat > "$gate_tmp/new.json" <<'EOF'
+{"suite":"gate","unit":"seconds/iter","results":[{"name":"hot_path","mean_s":0.0021}]}
+EOF
+if ./target/release/mel bench diff "$gate_tmp/old.json" "$gate_tmp/new.json" \
+        --fail-on-regress > /dev/null; then
+    echo "FAIL: mel bench diff did not flag a 2.1x synthetic regression"
+    rm -rf "$gate_tmp"
+    exit 1
+fi
+if ! ./target/release/mel bench diff "$gate_tmp/old.json" "$gate_tmp/old.json" \
+        --fail-on-regress > /dev/null; then
+    echo "FAIL: mel bench diff flagged an identical suite as a regression"
+    rm -rf "$gate_tmp"
+    exit 1
+fi
+rm -rf "$gate_tmp"
+
 if [ "$CI_BENCH" = "1" ]; then
     mkdir -p results
     for bench in solvers fig1_pedestrian_vs_k fig2_pedestrian_vs_t fig3_mnist e2e_cycle cluster_cycle train_step runtime ablations; do
@@ -49,6 +78,21 @@ if [ "$CI_BENCH" = "1" ]; then
     done
     echo "bench JSON artifacts:"
     ls -l results/BENCH_*.json 2>/dev/null || echo "  (none written)"
+
+    # ---- stored-baseline perf gate (ROADMAP "Perf trajectory") ----------
+    # results/BASELINE.json is a committed/bootstrapped snapshot of the
+    # cluster_cycle suite; regressions beyond the threshold fail CI.
+    # Refresh deliberately with: cp results/BENCH_cluster_cycle.json results/BASELINE.json
+    BASELINE="results/BASELINE.json"
+    BENCH_REGRESS_THRESHOLD="${BENCH_REGRESS_THRESHOLD:-0.5}"
+    if [ -f "$BASELINE" ]; then
+        echo "==> mel bench diff $BASELINE results/BENCH_cluster_cycle.json (threshold ${BENCH_REGRESS_THRESHOLD})"
+        ./target/release/mel bench diff "$BASELINE" results/BENCH_cluster_cycle.json \
+            --threshold "$BENCH_REGRESS_THRESHOLD" --fail-on-regress
+    elif [ -f results/BENCH_cluster_cycle.json ]; then
+        cp results/BENCH_cluster_cycle.json "$BASELINE"
+        echo "bootstrapped $BASELINE from this run (stored bench baseline)"
+    fi
 fi
 
 echo "CI OK"

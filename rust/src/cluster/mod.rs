@@ -26,10 +26,23 @@
 //! orchestrator core, so it reproduces the `SyncPlanner` timeline
 //! bit-for-bit (regression-tested in
 //! `rust/tests/orchestrator_equivalence.rs`).
+//!
+//! On top of the timing run sits the **parameter-server tier**
+//! ([`param_server`]): [`Cluster::run_global`] replays the merged
+//! update stream as real gradient work through the execution backend,
+//! giving the cluster true global model semantics (per-update async
+//! apply or barriered FedAvg-style rounds, staleness-discounted). A
+//! 1-shard replay reproduces the single-cloudlet
+//! [`crate::coordinator::Trainer`] bit-for-bit
+//! (`rust/tests/cluster_global.rs`).
 
 pub mod churn_planner;
+pub mod param_server;
 
 pub use churn_planner::ChurnAwarePlanner;
+pub use param_server::{
+    staleness_factor, GlobalReport, ParamServer, ParamServerConfig, RoundStat,
+};
 
 use std::sync::Arc;
 use std::thread;
@@ -204,6 +217,43 @@ impl Cluster {
             horizon,
         })
     }
+
+    /// Run the timing simulation, then replay the merged update stream
+    /// through a cluster-level [`ParamServer`] — the end-to-end
+    /// multi-shard learning run. The server's global
+    /// accuracy/loss-vs-simtime series are imported into the cluster
+    /// registry (`global_acc_vs_simtime` / `global_loss_vs_simtime`).
+    pub fn run_global(
+        &self,
+        ps_cfg: ParamServerConfig,
+    ) -> anyhow::Result<(ClusterReport, GlobalReport)> {
+        let report =
+            self.run().map_err(|e| anyhow::anyhow!("cluster timing run failed: {e}"))?;
+        let mut ps = ParamServer::new(&self.spec, ps_cfg)?;
+        let global = ps.replay(&report.updates)?;
+        self.metrics.import_series("global_acc_vs_simtime", &global.acc_series);
+        self.metrics.import_series("global_loss_vs_simtime", &global.loss_series);
+        self.metrics.inc("global_updates_replayed", global.updates_replayed);
+        self.metrics.inc("global_applies", global.applies);
+        Ok((report, global))
+    }
+}
+
+/// Derive shard `i`'s RNG seed from `(cluster_seed, shard_id)` plus the
+/// scenario's `seed_offset` knob. Shard 0 keeps `cluster_seed +
+/// seed_offset` unchanged, so single-shard clusters stay bit-for-bit
+/// equal to the single-cloudlet orchestrator/trainer; later shards fold
+/// their index in through a splitmix64 finalizer, so hand-written specs
+/// with colliding offsets cannot correlate shard streams.
+pub fn shard_seed(cluster_seed: u64, seed_offset: u64, shard: usize) -> u64 {
+    let base = cluster_seed.wrapping_add(seed_offset);
+    if shard == 0 {
+        return base;
+    }
+    let mut z = base ^ (shard as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15);
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^ (z >> 31)
 }
 
 /// Run one shard. Churn-free shards without deadline pressure or
@@ -211,7 +261,7 @@ impl Cluster {
 /// bit-for-bit equivalence path); everything else runs the churn-aware
 /// event loop.
 fn run_shard(shard: usize, spec: &ShardSpec, cfg: &ClusterConfig) -> Result<ShardReport, AllocError> {
-    let shard_seed = cfg.seed + spec.seed_offset;
+    let shard_seed = shard_seed(cfg.seed, spec.seed_offset, shard);
     let scenario = Scenario::random_cloudlet(&spec.cloudlet, shard_seed);
     let pressure = cfg.lease_s > 0.0 && (cfg.lease_s - cfg.t_total).abs() > TIME_EPS;
     if spec.churn.is_empty() && !cfg.straggler_releasing && !pressure {
@@ -486,6 +536,40 @@ mod tests {
         // cumulative: monotone in both axes, final = cluster total
         assert!(merged.windows(2).all(|w| w[0].0 <= w[1].0 && w[0].1 <= w[1].1));
         assert_eq!(merged.last().unwrap().1, report.updates_applied as f64);
+    }
+
+    #[test]
+    fn shard_seed_keeps_shard_zero_and_decorrelates_the_rest() {
+        // shard 0 must keep the plain seed: 1-shard clusters are
+        // bit-for-bit equal to the single-cloudlet orchestrator/trainer
+        assert_eq!(shard_seed(42, 0, 0), 42);
+        assert_eq!(shard_seed(42, 7, 0), 49);
+        // same (cluster_seed, offset) at different shard ids must not
+        // collide — hand-written specs with duplicate offsets stay
+        // decorrelated
+        let s1 = shard_seed(42, 0, 1);
+        let s2 = shard_seed(42, 0, 2);
+        assert_ne!(s1, 42);
+        assert_ne!(s2, 42);
+        assert_ne!(s1, s2);
+        // deterministic
+        assert_eq!(s1, shard_seed(42, 0, 1));
+    }
+
+    #[test]
+    fn colliding_seed_offsets_still_decorrelate_shards() {
+        // two shards with the *same* seed_offset draw distinct
+        // scenarios because the shard id is folded into the seed
+        let mut spec = ClusterSpec::uniform("pedestrian", 2, 6).unwrap();
+        spec.shards[1].seed_offset = spec.shards[0].seed_offset;
+        let report = Cluster::new(spec, ClusterConfig { cycles: 2, ..ClusterConfig::default() })
+            .run()
+            .unwrap();
+        let t0: Vec<f64> =
+            report.shards[0].report.updates.iter().map(|u| u.uploaded_at).collect();
+        let t1: Vec<f64> =
+            report.shards[1].report.updates.iter().map(|u| u.uploaded_at).collect();
+        assert_ne!(t0, t1, "colliding offsets must not correlate shard streams");
     }
 
     #[test]

@@ -1,0 +1,700 @@
+//! Cluster-level **parameter server**: the tier that owns the global
+//! model parameters and replays the hierarchically merged shard
+//! [`UpdateRecord`] stream as *real* gradient work through the
+//! execution backend — turning the cluster layer from a timing
+//! simulator into an end-to-end multi-shard learning system.
+//!
+//! The cluster run ([`crate::cluster::Cluster::run`]) produces, per
+//! shard, the exact work orders the paper's cycle enacted: which
+//! learner trained which batch size for how many local iterations
+//! (`τ`), dispatched and uploaded at which simulated instants, and how
+//! stale the upload was. [`ParamServer::replay`] walks that merged
+//! stream in simulation-time order and applies each update's gradient
+//! contribution through the same application path the single-cloudlet
+//! trainer uses ([`crate::coordinator::local_training`] — `grad_step`
+//! [`Call`]s on the engine's backend), under one of two aggregation
+//! modes ([`AggregationMode`]):
+//!
+//! * **Per-update** — a *dispatch cohort* (updates issued at the same
+//!   instant from the same global state) is applied the moment its last
+//!   upload lands. A barrier round is one cohort covering the full
+//!   dataset, so it collapses to exactly the trainer's eq. (5) weighted
+//!   average — the bit-for-bit equivalence pinned by
+//!   `rust/tests/cluster_global.rs`. Staggered async re-leases form
+//!   singleton cohorts: true per-update asynchronous application
+//!   (arXiv:1905.01656), mixed into the global model with weight
+//!   `(1 − staleness_discount)^staleness · d_k` against the remaining
+//!   data share. Note the deliberate semantic split for *partial*
+//!   cohorts (async singletons, dropped stragglers): they blend against
+//!   the global's remaining share, whereas the trainer's barrier loop
+//!   replaces the global with the survivors-only average — a lone
+//!   survivor must not overwrite the whole model. The bit-for-bit
+//!   trainer equivalence is therefore scoped to full-share barrier
+//!   cohorts; what is shared unconditionally is the application path
+//!   (`coordinator::apply`) itself.
+//! * **Rounds** — barriered global rounds every `round_period_s`
+//!   simulated seconds: every update uploaded within the window trains
+//!   from the round-start snapshot and the round merges FedAvg-style,
+//!   weighted by (staleness-discounted) batch share. Aggregation order
+//!   is canonicalized, so the result is invariant under shard merge
+//!   order (property-tested).
+//!
+//! Replay determinism mirrors the trainer's seeding exactly: shard `i`
+//! draws its dataset and per-round batches from
+//! [`super::shard_seed`]`(cluster_seed, seed_offset, i)` using the same
+//! `0xDA7A`/`0x06C` streams the coordinator uses, which is what makes
+//! the 1-shard replay reproduce [`crate::coordinator::Trainer`]'s
+//! parameters bit-for-bit.
+
+use std::collections::{BTreeMap, HashMap};
+use std::sync::Arc;
+
+use crate::backend::Call;
+use crate::coordinator::{eval_batches, local_training, start_engine, ParamSet};
+use crate::dataset::SyntheticDataset;
+use crate::metrics::Metrics;
+use crate::models::ModelSpec;
+use crate::orchestrator::UpdateRecord;
+use crate::runtime::{BackendChoice, Engine};
+use crate::scenario::{AggregationMode, ClusterSpec, GlobalAggSpec};
+use crate::util::rng::Pcg64;
+
+use super::shard_seed;
+
+/// Parameter-server configuration. `from_spec` lifts a scenario's
+/// [`GlobalAggSpec`] knobs; everything else mirrors the trainer's
+/// `TrainConfig` defaults.
+#[derive(Debug, Clone)]
+pub struct ParamServerConfig {
+    pub aggregation: AggregationMode,
+    /// Global-round period in simulated seconds (rounds mode).
+    pub round_period_s: f64,
+    /// Per-staleness-step multiplicative weight discount in `[0, 1]`.
+    pub staleness_discount: f64,
+    /// SGD learning rate of the replayed local iterations.
+    pub lr: f32,
+    /// Cluster base seed — must match the [`super::Cluster`]'s
+    /// (`crate::cluster::ClusterConfig::seed`) for the replay to train
+    /// the same data the timing run leased.
+    pub seed: u64,
+    /// Held-out evaluation set size (must be positive).
+    pub eval_samples: usize,
+    /// Drop missed-deadline updates from aggregation (mirror the
+    /// cluster's straggler policy).
+    pub drop_stragglers: bool,
+    /// Execution backend; `Auto` = PJRT when covering artifacts exist,
+    /// the hermetic native executor otherwise.
+    pub backend: BackendChoice,
+    /// Artifact directory (PJRT backends only).
+    pub artifact_dir: String,
+}
+
+impl Default for ParamServerConfig {
+    fn default() -> Self {
+        Self {
+            aggregation: AggregationMode::PerUpdate,
+            round_period_s: 0.0,
+            staleness_discount: 0.0,
+            lr: 0.05,
+            seed: 1,
+            eval_samples: 256,
+            drop_stragglers: false,
+            backend: BackendChoice::Auto,
+            artifact_dir: "artifacts".into(),
+        }
+    }
+}
+
+impl ParamServerConfig {
+    /// Lift a scenario's global-aggregation knobs into a config.
+    pub fn from_spec(g: &GlobalAggSpec, seed: u64) -> Self {
+        Self {
+            aggregation: g.aggregation,
+            round_period_s: g.round_period_s,
+            staleness_discount: g.staleness_discount,
+            seed,
+            ..Self::default()
+        }
+    }
+
+    fn agg_spec(&self) -> GlobalAggSpec {
+        GlobalAggSpec {
+            aggregation: self.aggregation,
+            round_period_s: self.round_period_s,
+            staleness_discount: self.staleness_discount,
+        }
+    }
+}
+
+/// Total-order sort key for a non-negative simulated time. `−0.0`
+/// normalizes to `+0.0` first — its sign bit would otherwise sort
+/// *after* every positive time in the bit-keyed event walk (and split
+/// `0.0`/`−0.0` dispatches into distinct cohorts).
+fn time_bits(t: f64) -> u64 {
+    (t + 0.0).to_bits()
+}
+
+/// Staleness-discounted weight multiplier: an update that saw
+/// `staleness` other updates applied between its dispatch and its
+/// upload contributes with `(1 − discount)^staleness` of its batch
+/// share. Monotone: a higher discount never increases the factor (and
+/// therefore never increases the applied norm of a stale update —
+/// property-tested in `rust/tests/cluster_global.rs`).
+pub fn staleness_factor(discount: f64, staleness: u64) -> f64 {
+    let d = discount.clamp(0.0, 1.0);
+    let s = staleness.min(i32::MAX as u64) as i32;
+    (1.0 - d).powi(s)
+}
+
+/// One global round's accounting (rounds mode).
+#[derive(Debug, Clone)]
+pub struct RoundStat {
+    /// Round index (`⌊uploaded_at / round_period_s⌋`).
+    pub index: u64,
+    /// Round-closing simulated time — the metrics-series x coordinate.
+    pub t: f64,
+    /// Updates aggregated into the round (after straggler drops).
+    pub updates: u64,
+    /// Σ `d_k` of the aggregated updates (undiscounted batch share).
+    pub batch_share: f64,
+    /// Σ `(1 − discount)^staleness · d_k` — the weight actually mixed.
+    pub weight: f64,
+}
+
+/// Outcome of one [`ParamServer::replay`].
+#[derive(Debug, Clone)]
+pub struct GlobalReport {
+    /// The global model parameters after the full replay.
+    pub params: ParamSet,
+    /// Updates whose gradients entered the global model.
+    pub updates_replayed: u64,
+    /// Aggregation events applied (cohorts or rounds).
+    pub applies: u64,
+    /// Held-out loss/accuracy of the final parameters.
+    pub final_loss: f64,
+    pub final_accuracy: f64,
+    /// Global loss/accuracy keyed by simulated time (one point per
+    /// apply) — also published as `global_loss_vs_simtime` /
+    /// `global_acc_vs_simtime` in the server's metrics registry.
+    pub loss_series: Vec<(f64, f64)>,
+    pub acc_series: Vec<(f64, f64)>,
+    /// Per-round accounting (empty in per-update mode).
+    pub rounds: Vec<RoundStat>,
+}
+
+struct ShardState {
+    /// Learner count of the shard's cloudlet (index-space bound).
+    k: usize,
+    /// The shard's full training dataset (trainer-compatible seeding).
+    train: SyntheticDataset,
+    /// The shard's batch-draw stream (trainer-compatible seeding).
+    rng: Pcg64,
+}
+
+/// The parameter-server tier. Owns the global [`ParamSet`], an
+/// execution engine, and per-shard dataset/RNG state.
+pub struct ParamServer {
+    pub cfg: ParamServerConfig,
+    pub metrics: Arc<Metrics>,
+    engine: Engine,
+    global: ParamSet,
+    grad_call: Call,
+    eval_call: Call,
+    shards: Vec<ShardState>,
+    eval_set: SyntheticDataset,
+    /// Σ shard dataset sizes — the global data share the mixing weights
+    /// are normalized against.
+    total_share: f64,
+}
+
+impl ParamServer {
+    /// Build a server for `spec`: starts the engine, synthesizes every
+    /// shard's dataset with the shard's own seed, and initializes the
+    /// global **w** exactly as the single-cloudlet trainer does.
+    pub fn new(spec: &ClusterSpec, cfg: ParamServerConfig) -> anyhow::Result<Self> {
+        anyhow::ensure!(!spec.shards.is_empty(), "cluster spec has no shards");
+        anyhow::ensure!(cfg.eval_samples > 0, "eval_samples must be positive");
+        cfg.agg_spec().validate().map_err(|e| anyhow::anyhow!("{e}"))?;
+        let model: ModelSpec = spec.shards[0].cloudlet.model.clone();
+        for (i, s) in spec.shards.iter().enumerate() {
+            anyhow::ensure!(
+                s.cloudlet.model.name == model.name && s.cloudlet.model.layers == model.layers,
+                "shard {i} runs model {:?} {:?} but the global model is {:?} {:?}: \
+                 a parameter server needs one architecture across shards",
+                s.cloudlet.model.name,
+                s.cloudlet.model.layers,
+                model.name,
+                model.layers
+            );
+        }
+        let engine = start_engine(&model, cfg.backend, &cfg.artifact_dir)?;
+        let shards = spec
+            .shards
+            .iter()
+            .enumerate()
+            .map(|(i, s)| {
+                let seed = shard_seed(cfg.seed, s.seed_offset, i);
+                ShardState {
+                    k: s.cloudlet.num_learners,
+                    train: SyntheticDataset::full(&s.cloudlet.dataset, seed ^ 0xDA7A),
+                    rng: Pcg64::new(seed, 0x06C),
+                }
+            })
+            .collect::<Vec<_>>();
+        // held-out evaluation set: shard 0's task, trainer-compatible
+        // seeding (shard 0's seed is the cluster seed when its offset
+        // is 0, which is what pins the 1-shard loss/accuracy series)
+        let base0 = shard_seed(cfg.seed, spec.shards[0].seed_offset, 0);
+        let mut eval_spec = spec.shards[0].cloudlet.dataset.clone();
+        eval_spec.total_samples = cfg.eval_samples;
+        let eval_set = SyntheticDataset::generate(&eval_spec, cfg.eval_samples, base0 ^ 0xE7A1);
+        let global = ParamSet::init(&model.layers, base0 ^ 0x1417);
+        let total_share: f64 =
+            spec.shards.iter().map(|s| s.cloudlet.dataset.total_samples as f64).sum();
+        Ok(Self {
+            cfg,
+            metrics: Arc::new(Metrics::new()),
+            engine,
+            global,
+            grad_call: Call::grad_step(&model),
+            eval_call: Call::eval_batch(&model),
+            shards,
+            eval_set,
+            total_share,
+        })
+    }
+
+    /// The current global parameters.
+    pub fn params(&self) -> &ParamSet {
+        &self.global
+    }
+
+    /// Replay a merged `(shard, UpdateRecord)` stream (a
+    /// [`super::ClusterReport::updates`]) against the global model.
+    /// Input order does not matter — the replay canonicalizes internally
+    /// — so the result is invariant under shard merge order.
+    pub fn replay(&mut self, updates: &[(usize, UpdateRecord)]) -> anyhow::Result<GlobalReport> {
+        for (shard, u) in updates {
+            anyhow::ensure!(*shard < self.shards.len(), "update references shard {shard}");
+            anyhow::ensure!(
+                u.learner < self.shards[*shard].k,
+                "shard {shard} update references learner {} of a {}-learner cloudlet",
+                u.learner,
+                self.shards[*shard].k
+            );
+            // strictly increasing round-trip times: a zero-duration
+            // trip is physically meaningless and would invert the
+            // apply-before-dispatch tie-break of the cohort event walk
+            anyhow::ensure!(
+                u.dispatched_at.is_finite()
+                    && u.uploaded_at.is_finite()
+                    && u.dispatched_at >= 0.0
+                    && u.uploaded_at > u.dispatched_at,
+                "shard {shard} learner {} has a malformed time pair ({} → {})",
+                u.learner,
+                u.dispatched_at,
+                u.uploaded_at
+            );
+        }
+        let mut acc = ReplayAcc::default();
+        match self.cfg.aggregation {
+            AggregationMode::PerUpdate => self.replay_per_update(updates, &mut acc)?,
+            AggregationMode::Rounds => self.replay_rounds(updates, &mut acc)?,
+        }
+        let (final_loss, final_accuracy) = self.eval_point()?;
+        self.metrics.inc("global_applies", acc.applies);
+        self.metrics.inc("global_updates_replayed", acc.replayed);
+        Ok(GlobalReport {
+            params: self.global.clone(),
+            updates_replayed: acc.replayed,
+            applies: acc.applies,
+            final_loss,
+            final_accuracy,
+            loss_series: acc.loss_series,
+            acc_series: acc.acc_series,
+            rounds: acc.rounds,
+        })
+    }
+
+    /// Per-update mode: dispatch cohorts keyed by `(shard,
+    /// dispatched_at)`, applied at their last member's upload. The
+    /// event walk interleaves cohort dispatches (batch draws + global
+    /// snapshots) and applications in simulated-time order, applying
+    /// before dispatching at equal instants — the order the cluster's
+    /// event loop enacted them in.
+    fn replay_per_update(
+        &mut self,
+        updates: &[(usize, UpdateRecord)],
+        acc: &mut ReplayAcc,
+    ) -> anyhow::Result<()> {
+        let man = self.engine.manifest().cloned();
+        let handle = self.engine.handle();
+
+        let mut cohorts: BTreeMap<(usize, u64), Vec<UpdateRecord>> = BTreeMap::new();
+        for (shard, u) in updates {
+            cohorts.entry((*shard, time_bits(u.dispatched_at))).or_default().push(u.clone());
+        }
+        // events: (time bits, kind, shard, dispatch bits); applications
+        // (kind 0) precede dispatches (kind 1) at equal times
+        let mut events: Vec<(u64, u8, usize, u64)> = Vec::with_capacity(2 * cohorts.len());
+        for ((shard, disp), members) in cohorts.iter_mut() {
+            members.sort_by_key(|u| u.learner);
+            anyhow::ensure!(
+                members.windows(2).all(|w| w[0].learner != w[1].learner),
+                "shard {shard} has two in-flight leases for learner {} at t={}",
+                members[0].learner,
+                f64::from_bits(*disp)
+            );
+            let apply_at = members.iter().map(|u| time_bits(u.uploaded_at)).max().unwrap();
+            events.push((*disp, 1, *shard, *disp));
+            events.push((apply_at, 0, *shard, *disp));
+        }
+        events.sort_unstable();
+
+        // open cohorts: the global snapshot at dispatch + the drawn
+        // per-member batch index sets
+        let mut open: HashMap<(usize, u64), (ParamSet, Vec<Vec<usize>>)> = HashMap::new();
+        for (t_bits, kind, shard, disp) in events {
+            let key = (shard, disp);
+            if kind == 1 {
+                // dispatch: draw the cohort's batches from the shard's
+                // stream (one draw over the full learner index space,
+                // exactly as the trainer draws a barrier round)
+                let members = &cohorts[&key];
+                let st = &mut self.shards[shard];
+                let mut sizes = vec![0usize; st.k];
+                for u in members {
+                    sizes[u.learner] = u.batch;
+                }
+                anyhow::ensure!(
+                    sizes.iter().sum::<usize>() <= st.train.len(),
+                    "shard {shard} cohort at t={} leases more samples than the dataset holds",
+                    f64::from_bits(disp)
+                );
+                let draws = st.train.draw_batches(&sizes, &mut st.rng);
+                let idx = members.iter().map(|u| draws[u.learner].clone()).collect();
+                open.insert(key, (self.global.clone(), idx));
+            } else {
+                let members = &cohorts[&key];
+                let (snapshot, idx) = open.remove(&key).expect("dispatch precedes apply");
+                let mut entries: Vec<(f64, ParamSet)> = Vec::new();
+                for (u, idx_k) in members.iter().zip(&idx) {
+                    if u.missed_deadline && self.cfg.drop_stragglers {
+                        continue;
+                    }
+                    let mut local = snapshot.clone();
+                    local_training(
+                        &handle,
+                        man.as_ref(),
+                        &self.grad_call,
+                        &mut local,
+                        &self.shards[shard].train,
+                        idx_k,
+                        u.tau,
+                        self.cfg.lr,
+                    )?;
+                    let w = staleness_factor(self.cfg.staleness_discount, u.staleness)
+                        * u.batch as f64;
+                    acc.replayed += 1;
+                    entries.push((w, local));
+                }
+                if mix_into(&mut self.global, self.total_share, entries) {
+                    acc.applies += 1;
+                    let t = f64::from_bits(t_bits);
+                    let (loss, accuracy) = self.eval_point()?;
+                    self.record_point(acc, t, loss, accuracy);
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Rounds mode: barriered global rounds every `round_period_s`
+    /// simulated seconds. Every update uploaded inside a window trains
+    /// from the round-start snapshot; the round merges FedAvg-style by
+    /// staleness-discounted batch share, against the cluster's total
+    /// data share. Per-round processing order is canonical `(shard,
+    /// learner, upload, dispatch)`, so shard merge order cannot change
+    /// the result.
+    fn replay_rounds(
+        &mut self,
+        updates: &[(usize, UpdateRecord)],
+        acc: &mut ReplayAcc,
+    ) -> anyhow::Result<()> {
+        let period = self.cfg.round_period_s;
+        anyhow::ensure!(period > 0.0, "rounds aggregation needs a positive round_period_s");
+        let man = self.engine.manifest().cloned();
+        let handle = self.engine.handle();
+
+        let mut rounds: BTreeMap<u64, Vec<(usize, UpdateRecord)>> = BTreeMap::new();
+        for (shard, u) in updates {
+            rounds.entry((u.uploaded_at / period).floor() as u64).or_default().push((
+                *shard,
+                u.clone(),
+            ));
+        }
+        for (r, mut recs) in rounds {
+            recs.sort_by_key(|(s, u)| {
+                (*s, u.learner, time_bits(u.uploaded_at), time_bits(u.dispatched_at))
+            });
+            let snapshot = self.global.clone();
+            let mut entries: Vec<(f64, ParamSet)> = Vec::new();
+            let (mut share, mut weight) = (0.0f64, 0.0f64);
+            for (s, u) in &recs {
+                // every lease's batch is drawn (the timing run leased
+                // it), aggregation then skips dropped stragglers
+                let st = &mut self.shards[*s];
+                let mut sizes = vec![0usize; st.k];
+                sizes[u.learner] = u.batch;
+                anyhow::ensure!(
+                    u.batch <= st.train.len(),
+                    "shard {s} leases more samples than the dataset holds"
+                );
+                let idx = st.train.draw_batches(&sizes, &mut st.rng).swap_remove(u.learner);
+                if u.missed_deadline && self.cfg.drop_stragglers {
+                    continue;
+                }
+                let mut local = snapshot.clone();
+                local_training(
+                    &handle,
+                    man.as_ref(),
+                    &self.grad_call,
+                    &mut local,
+                    &self.shards[*s].train,
+                    &idx,
+                    u.tau,
+                    self.cfg.lr,
+                )?;
+                let w =
+                    staleness_factor(self.cfg.staleness_discount, u.staleness) * u.batch as f64;
+                share += u.batch as f64;
+                weight += w;
+                acc.replayed += 1;
+                entries.push((w, local));
+            }
+            let aggregated = entries.len() as u64;
+            let t = (r + 1) as f64 * period;
+            if mix_into(&mut self.global, self.total_share, entries) {
+                acc.applies += 1;
+                let (loss, accuracy) = self.eval_point()?;
+                self.record_point(acc, t, loss, accuracy);
+            }
+            acc.rounds.push(RoundStat { index: r, t, updates: aggregated, batch_share: share, weight });
+        }
+        Ok(())
+    }
+
+    /// Held-out loss/accuracy of the current global parameters (the
+    /// trainer's `evaluate`, verbatim semantics).
+    fn eval_point(&self) -> anyhow::Result<(f64, f64)> {
+        let idx: Vec<usize> = (0..self.eval_set.len()).collect();
+        let (loss_sum, correct, weight) = eval_batches(
+            &self.engine.handle(),
+            self.engine.manifest(),
+            &self.eval_call,
+            &self.global,
+            &self.eval_set,
+            &idx,
+        )?;
+        Ok((loss_sum / weight, correct / weight))
+    }
+
+    fn record_point(&self, acc: &mut ReplayAcc, t: f64, loss: f64, accuracy: f64) {
+        acc.loss_series.push((t, loss));
+        acc.acc_series.push((t, accuracy));
+        self.metrics.record("global_loss_vs_simtime", t, loss);
+        self.metrics.record("global_acc_vs_simtime", t, accuracy);
+    }
+}
+
+#[derive(Default)]
+struct ReplayAcc {
+    applies: u64,
+    replayed: u64,
+    loss_series: Vec<(f64, f64)>,
+    acc_series: Vec<(f64, f64)>,
+    rounds: Vec<RoundStat>,
+}
+
+/// Mix a cohort of weighted local models into the global parameters.
+/// With `W = Σ weights` covering the full data share the cohort *is*
+/// the new global (the trainer's eq. (5) barrier average, same float
+/// expressions); otherwise the global keeps the remaining share
+/// `total_share − W`:
+///
+/// `w ← ((total_share − W)·w + Σ_k α_k d_k · w̃_k) / total_share`
+///
+/// Returns `false` (global untouched) when the cohort carries no
+/// positive weight — e.g. every member fully discounted away.
+fn mix_into(global: &mut ParamSet, total_share: f64, entries: Vec<(f64, ParamSet)>) -> bool {
+    let w: f64 = entries.iter().map(|(w, _)| *w).sum();
+    if !(w > 0.0) {
+        return false;
+    }
+    *global = if w >= total_share {
+        ParamSet::weighted_average(&entries)
+    } else {
+        let mut sets = Vec::with_capacity(entries.len() + 1);
+        sets.push((total_share - w, global.clone()));
+        sets.extend(entries);
+        ParamSet::weighted_average(&sets)
+    };
+    true
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::Tensor;
+    use crate::scenario::ShardSpec;
+
+    #[test]
+    fn time_bits_normalizes_negative_zero() {
+        // −0.0 passes the `>= 0.0` validation; its raw sign bit would
+        // sort after every positive time and break the event walk
+        assert_eq!(time_bits(-0.0), time_bits(0.0));
+        assert!(time_bits(-0.0) < time_bits(1.0));
+        // positive times keep their exact bits (monotone key)
+        assert_eq!(time_bits(1.5), 1.5f64.to_bits());
+        assert!(time_bits(1.5) < time_bits(2.5));
+    }
+
+    #[test]
+    fn replay_accepts_negative_zero_dispatch() {
+        let spec = ClusterSpec::uniform("pedestrian", 1, 2).unwrap();
+        let mut tiny = spec.clone();
+        tiny.shards[0].cloudlet.model = tiny.shards[0].cloudlet.model.with_hidden(&[4]);
+        tiny.shards[0].cloudlet.dataset.total_samples = 32;
+        let cfg = ParamServerConfig { eval_samples: 32, ..ParamServerConfig::default() };
+        let mut ps = ParamServer::new(&tiny, cfg).unwrap();
+        let u = UpdateRecord {
+            learner: 0,
+            dispatched_at: -0.0,
+            uploaded_at: 1.0,
+            tau: 1,
+            batch: 4,
+            staleness: 0,
+            missed_deadline: false,
+        };
+        // must replay cleanly (no "dispatch precedes apply" panic)
+        let g = ps.replay(&[(0, u)]).expect("negative-zero dispatch");
+        assert_eq!(g.updates_replayed, 1);
+        assert_eq!(g.applies, 1);
+    }
+
+    #[test]
+    fn staleness_factor_shape() {
+        // fresh updates are never discounted
+        for d in [0.0, 0.3, 1.0] {
+            assert_eq!(staleness_factor(d, 0), 1.0);
+        }
+        // zero discount leaves every staleness untouched
+        for s in [0u64, 1, 7, 40] {
+            assert_eq!(staleness_factor(0.0, s), 1.0);
+        }
+        // full discount zeroes every stale update
+        assert_eq!(staleness_factor(1.0, 1), 0.0);
+        // geometric in staleness, monotone in the discount
+        assert!((staleness_factor(0.5, 2) - 0.25).abs() < 1e-12);
+        assert!(staleness_factor(0.3, 2) > staleness_factor(0.6, 2));
+        assert!(staleness_factor(0.3, 3) < staleness_factor(0.3, 2));
+        // out-of-range inputs are clamped, not propagated
+        assert_eq!(staleness_factor(2.0, 1), 0.0);
+        assert_eq!(staleness_factor(-1.0, 5), 1.0);
+    }
+
+    fn constant_set(layers: &[usize], v: f32) -> ParamSet {
+        let mut p = ParamSet::init(layers, 1);
+        for t in &mut p.tensors {
+            let dims = t.dims.clone();
+            *t = Tensor::f32(dims.clone(), vec![v; dims.iter().product()]);
+        }
+        p
+    }
+
+    #[test]
+    fn mix_into_partial_share_interpolates_and_full_share_replaces() {
+        let layers = [2usize, 2];
+        let mut global = constant_set(&layers, 0.0);
+        let local = constant_set(&layers, 1.0);
+        // quarter share: w ← (3/4)·0 + (1/4)·1
+        assert!(mix_into(&mut global, 100.0, vec![(25.0, local.clone())]));
+        for t in &global.tensors {
+            for &v in t.as_f32() {
+                assert!((v - 0.25).abs() < 1e-7);
+            }
+        }
+        // full share: the cohort replaces the global entirely
+        let mut global = constant_set(&layers, 0.0);
+        assert!(mix_into(&mut global, 100.0, vec![(100.0, local.clone())]));
+        for t in &global.tensors {
+            assert!(t.as_f32().iter().all(|&v| v == 1.0));
+        }
+        // zero-weight cohorts leave the global untouched
+        let mut global = constant_set(&layers, 0.5);
+        assert!(!mix_into(&mut global, 100.0, vec![(0.0, local)]));
+        assert!(!mix_into(&mut global, 100.0, vec![]));
+        assert!(global.tensors[0].as_f32().iter().all(|&v| v == 0.5));
+    }
+
+    #[test]
+    fn new_rejects_degenerate_configs() {
+        let spec = ClusterSpec::uniform("pedestrian", 2, 3).unwrap();
+        // rounds mode without a period
+        let bad = ParamServerConfig {
+            aggregation: AggregationMode::Rounds,
+            round_period_s: 0.0,
+            ..ParamServerConfig::default()
+        };
+        assert!(ParamServer::new(&spec, bad).is_err());
+        // out-of-range discount
+        let bad = ParamServerConfig { staleness_discount: 1.5, ..ParamServerConfig::default() };
+        assert!(ParamServer::new(&spec, bad).is_err());
+        // empty eval set
+        let bad = ParamServerConfig { eval_samples: 0, ..ParamServerConfig::default() };
+        assert!(ParamServer::new(&spec, bad).is_err());
+        // mismatched shard architectures
+        let mut mixed = ClusterSpec::uniform("pedestrian", 2, 3).unwrap();
+        mixed.shards[1] = ShardSpec {
+            cloudlet: crate::scenario::CloudletConfig::mnist(3),
+            seed_offset: 1,
+            churn: Default::default(),
+        };
+        let err = ParamServer::new(&mixed, ParamServerConfig::default()).unwrap_err();
+        assert!(format!("{err}").contains("one architecture"), "{err}");
+    }
+
+    #[test]
+    fn replay_rejects_malformed_records() {
+        let spec = ClusterSpec::uniform("pedestrian", 1, 2).unwrap();
+        let mut ps = ParamServer::new(&spec, ParamServerConfig::default()).unwrap();
+        let u = |learner: usize, d: f64, t: f64| UpdateRecord {
+            learner,
+            dispatched_at: d,
+            uploaded_at: t,
+            tau: 1,
+            batch: 4,
+            staleness: 0,
+            missed_deadline: false,
+        };
+        // out-of-range shard / learner
+        assert!(ps.replay(&[(3, u(0, 0.0, 1.0))]).is_err());
+        assert!(ps.replay(&[(0, u(9, 0.0, 1.0))]).is_err());
+        // upload before dispatch
+        assert!(ps.replay(&[(0, u(0, 5.0, 1.0))]).is_err());
+    }
+
+    #[test]
+    fn config_from_spec_lifts_knobs() {
+        let g = GlobalAggSpec {
+            aggregation: AggregationMode::Rounds,
+            round_period_s: 12.0,
+            staleness_discount: 0.5,
+        };
+        let cfg = ParamServerConfig::from_spec(&g, 77);
+        assert_eq!(cfg.aggregation, AggregationMode::Rounds);
+        assert_eq!(cfg.round_period_s, 12.0);
+        assert_eq!(cfg.staleness_discount, 0.5);
+        assert_eq!(cfg.seed, 77);
+    }
+}

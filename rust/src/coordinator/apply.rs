@@ -1,0 +1,273 @@
+//! The model-update **application path** — the compute half of a
+//! learner round trip, shared by the single-cloudlet
+//! [`crate::coordinator::Trainer`] and the cluster-level
+//! [`crate::cluster::ParamServer`].
+//!
+//! Both callers speak the same sequence: gather a batch into padded
+//! tensor chunks, run `τ` local full-batch SGD iterations through the
+//! engine's [`crate::backend::Backend`] (`grad_step` calls in the exact
+//! AOT-artifact contract), and evaluate `eval_batch` sums over an index
+//! set. Keeping these free functions in one module is what pins the
+//! 1-shard ParamServer ≡ Trainer bit-for-bit equivalence
+//! (`rust/tests/cluster_global.rs`): the two paths cannot drift apart,
+//! because they *are* one path.
+
+use crate::backend::Call;
+use crate::coordinator::ParamSet;
+use crate::dataset::SyntheticDataset;
+use crate::models::ModelSpec;
+use crate::runtime::{BackendChoice, Engine, EngineHandle, Manifest, Tensor};
+
+/// Start an execution engine for `model` honoring the backend choice:
+/// `Auto` picks PJRT only when the artifacts cover both functions the
+/// training path executes (`grad_step` + `eval_batch` at the model's
+/// exact layer widths), the hermetic native executor otherwise. A
+/// forced PJRT engine with non-covering artifacts errors truthfully
+/// instead of asserting later in chunk planning.
+pub fn start_engine(
+    model: &ModelSpec,
+    choice: BackendChoice,
+    artifact_dir: &str,
+) -> anyhow::Result<Engine> {
+    let covered = |man: &Manifest| {
+        ["grad_step", "eval_batch"]
+            .iter()
+            .all(|f| !man.buckets_for(&model.name, f, &model.layers).is_empty())
+    };
+    let engine = match choice {
+        BackendChoice::Auto => Engine::start_auto(artifact_dir, &covered),
+        c => Engine::start_with(c, artifact_dir)?,
+    };
+    if let Some(man) = engine.manifest() {
+        // only reachable on a forced --backend pjrt
+        anyhow::ensure!(
+            covered(man),
+            "artifacts missing grad_step/eval_batch for arch {:?} with layers {:?}; \
+             run `make artifacts` (or use the native backend)",
+            model.name,
+            model.layers
+        );
+    }
+    Ok(engine)
+}
+
+/// Pad `idx[lo..hi]` features/labels into a `bucket`-row tensor triple.
+/// With `bucket == idx.len()` (the native backend) no padding happens.
+pub fn padded_chunk(ds: &SyntheticDataset, idx: &[usize], bucket: usize) -> (Tensor, Tensor, Tensor) {
+    let f = ds.spec.features;
+    let n = idx.len();
+    let (mut x, mut y) = ds.gather_f32(idx);
+    x.resize(bucket * f, 0.0);
+    y.resize(bucket, 0);
+    let mut mask = vec![1.0f32; n];
+    mask.resize(bucket, 0.0);
+    (
+        Tensor::f32(vec![bucket, f], x),
+        Tensor::i32(vec![bucket], y),
+        Tensor::f32(vec![bucket], mask),
+    )
+}
+
+/// Chunking strategy for `n` samples: the manifest's bucketed plan for
+/// PJRT engines (layer-exact, matching the backend's artifact
+/// resolution), a single exact-size chunk for the native backend.
+pub fn plan_chunks(man: Option<&Manifest>, call: &Call, n: usize) -> Vec<(usize, usize, usize)> {
+    match man {
+        Some(m) => chunk_plan(m, &call.arch, call.function.name(), &call.layers, n),
+        None => vec![(0, n, n)],
+    }
+}
+
+/// One learner's τ local iterations of full-batch SGD over its batch,
+/// accumulating masked gradient chunks through the backend.
+#[allow(clippy::too_many_arguments)]
+pub fn local_training(
+    handle: &EngineHandle,
+    man: Option<&Manifest>,
+    call: &Call,
+    local: &mut ParamSet,
+    ds: &SyntheticDataset,
+    idx: &[usize],
+    tau: u64,
+    lr: f32,
+) -> anyhow::Result<()> {
+    for _ in 0..tau {
+        let mut grad_acc = local.zeros_like();
+        let mut weight = 0.0f32;
+        for (lo, hi, bucket) in plan_chunks(man, call, idx.len()) {
+            let (x, y, mask) = padded_chunk(ds, &idx[lo..hi], bucket);
+            let mut inputs = local.tensors.clone();
+            inputs.push(x);
+            inputs.push(y);
+            inputs.push(mask);
+            let out = handle.call(call, inputs)?;
+            anyhow::ensure!(
+                out.len() == local.tensors.len() + 2,
+                "grad_step returned {} tensors",
+                out.len()
+            );
+            for (acc, g) in grad_acc.iter_mut().zip(&out[..local.tensors.len()]) {
+                acc.axpy(1.0, g);
+            }
+            weight += out[local.tensors.len() + 1].scalar();
+        }
+        local.sgd_apply(&grad_acc, lr, weight);
+    }
+    Ok(())
+}
+
+/// Evaluate loss/accuracy sums over an index set.
+pub fn eval_batches(
+    handle: &EngineHandle,
+    man: Option<&Manifest>,
+    call: &Call,
+    params: &ParamSet,
+    ds: &SyntheticDataset,
+    idx: &[usize],
+) -> anyhow::Result<(f64, f64, f64)> {
+    let mut loss_sum = 0.0f64;
+    let mut correct = 0.0f64;
+    let mut weight = 0.0f64;
+    for (lo, hi, bucket) in plan_chunks(man, call, idx.len()) {
+        let (x, y, mask) = padded_chunk(ds, &idx[lo..hi], bucket);
+        let mut inputs = params.tensors.clone();
+        inputs.push(x);
+        inputs.push(y);
+        inputs.push(mask);
+        let out = handle.call(call, inputs)?;
+        anyhow::ensure!(out.len() == 3, "eval_batch returned {} tensors", out.len());
+        loss_sum += out[0].scalar() as f64;
+        correct += out[1].scalar() as f64;
+        weight += out[2].scalar() as f64;
+    }
+    Ok((loss_sum, correct, weight))
+}
+
+/// Split `n` samples into (lo, hi, bucket) chunks using the buckets
+/// lowered for exactly `layers`: big chunks use the largest bucket; the
+/// tail uses the smallest bucket that fits (minimizing padding waste).
+pub fn chunk_plan(
+    man: &Manifest,
+    arch: &str,
+    function: &str,
+    layers: &[usize],
+    n: usize,
+) -> Vec<(usize, usize, usize)> {
+    let buckets = man.buckets_for(arch, function, layers);
+    assert!(!buckets.is_empty(), "no buckets for {arch}/{function} with layers {layers:?}");
+    let largest = *buckets.last().unwrap();
+    let mut plan = Vec::new();
+    let mut lo = 0;
+    while lo < n {
+        let remaining = n - lo;
+        let bucket = if remaining >= largest {
+            largest
+        } else {
+            buckets.iter().copied().find(|&b| b >= remaining).unwrap_or(largest)
+        };
+        let take = remaining.min(bucket);
+        plan.push((lo, lo + take, bucket));
+        lo += take;
+    }
+    plan
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::backend::Function;
+
+    fn fake_man() -> Manifest {
+        // hand-construct a manifest with buckets {8, 32}
+        Manifest {
+            dir: "/tmp".into(),
+            artifacts: [8usize, 32]
+                .iter()
+                .map(|&b| crate::runtime::ArtifactMeta {
+                    name: format!("toy_grad_step_b{b}"),
+                    file: "/dev/null".into(),
+                    arch: "toy".into(),
+                    function: "grad_step".into(),
+                    bucket: b,
+                    layers: vec![4, 2],
+                    param_tensors: 2,
+                    inputs: vec![],
+                    outputs: vec![],
+                    sha256: String::new(),
+                })
+                .collect(),
+        }
+    }
+
+    #[test]
+    fn chunk_plan_covers_exactly_once() {
+        let man = fake_man();
+        for n in [1usize, 7, 8, 9, 31, 32, 33, 100, 257] {
+            let plan = chunk_plan(&man, "toy", "grad_step", &[4, 2], n);
+            let mut covered = 0;
+            let mut prev_hi = 0;
+            for (lo, hi, bucket) in &plan {
+                assert_eq!(*lo, prev_hi);
+                assert!(hi - lo <= *bucket);
+                covered += hi - lo;
+                prev_hi = *hi;
+            }
+            assert_eq!(covered, n, "n={n} plan={plan:?}");
+        }
+    }
+
+    #[test]
+    fn chunk_plan_minimizes_tail_padding() {
+        let man = fake_man();
+        // 40 = 32 + 8: the 8-tail must use the small bucket
+        let plan = chunk_plan(&man, "toy", "grad_step", &[4, 2], 40);
+        assert_eq!(plan, vec![(0, 32, 32), (32, 40, 8)]);
+        // 5 → single small bucket
+        assert_eq!(chunk_plan(&man, "toy", "grad_step", &[4, 2], 5), vec![(0, 5, 8)]);
+    }
+
+    #[test]
+    fn native_plan_is_one_exact_chunk() {
+        let call = Call::new(Function::GradStep, "toy", &[4, 2]);
+        // no manifest (native backend): a single chunk, no padding
+        assert_eq!(plan_chunks(None, &call, 37), vec![(0, 37, 37)]);
+        // with a manifest the bucketed plan applies, layer-exact
+        let man = fake_man();
+        assert_eq!(plan_chunks(Some(&man), &call, 40), vec![(0, 32, 32), (32, 40, 8)]);
+        // a call for different layers must not see those buckets
+        let other = Call::new(Function::GradStep, "toy", &[4, 3, 2]);
+        assert!(man.buckets_for("toy", "grad_step", &other.layers).is_empty());
+    }
+
+    #[test]
+    fn padded_chunk_masks_tail() {
+        let spec = crate::dataset::DatasetSpec {
+            name: "t".into(),
+            total_samples: 10,
+            features: 4,
+            classes: 2,
+            precision_bits: 8,
+        };
+        let ds = SyntheticDataset::generate(&spec, 10, 1);
+        let (x, y, m) = padded_chunk(&ds, &[0, 1, 2], 8);
+        assert_eq!(x.dims, vec![8, 4]);
+        assert_eq!(y.dims, vec![8]);
+        assert_eq!(m.as_f32(), &[1., 1., 1., 0., 0., 0., 0., 0.]);
+        // padded feature rows are zero
+        assert!(x.as_f32()[3 * 4..].iter().all(|&v| v == 0.0));
+        // exact-size chunk (native path) needs no padding
+        let (x, _, m) = padded_chunk(&ds, &[0, 1, 2], 3);
+        assert_eq!(x.dims, vec![3, 4]);
+        assert_eq!(m.as_f32(), &[1., 1., 1.]);
+    }
+
+    #[test]
+    fn start_engine_auto_is_native_without_artifacts() {
+        if crate::runtime::pjrt_available() {
+            return;
+        }
+        let engine =
+            start_engine(&ModelSpec::pedestrian(), BackendChoice::Auto, "artifacts").unwrap();
+        assert_eq!(engine.kind(), crate::runtime::BackendKind::Native);
+    }
+}

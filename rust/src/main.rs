@@ -50,7 +50,7 @@ fn print_help() {
         },
         Command {
             name: "figure",
-            about: "reproduce a paper figure (fig1 fig2 fig3a fig3b figE figAsync figCluster figAccuracy gains all)",
+            about: "reproduce a paper figure (fig1 fig2 fig3a fig3b figE figAsync figCluster figAccuracy figGlobal gains all)",
             usage: "fig1 --out results/ --seed 42",
         },
         Command {
@@ -184,7 +184,7 @@ fn cmd_figure(args: &Args) -> i32 {
     let figs: Vec<&str> = if which == "all" {
         vec![
             "fig1", "fig2", "fig3a", "fig3b", "figE", "figAsync", "figCluster", "figAccuracy",
-            "gains",
+            "figGlobal", "gains",
         ]
     } else {
         vec![which]
@@ -229,6 +229,81 @@ fn cmd_figure(args: &Args) -> i32 {
                     std::fs::create_dir_all(dir).expect("create out dir");
                     let path = format!("{dir}/{}.csv", report.data.id);
                     std::fs::write(&path, report.data.csv()).expect("write csv");
+                    println!("wrote {path}");
+                }
+            }
+            "figGlobal" => {
+                let defaults = experiments::GlobalConfig::default();
+                let hidden = match parse_hidden_flag(args) {
+                    Ok(h) => h.unwrap_or(defaults.hidden.clone()),
+                    Err(e) => {
+                        eprintln!("mel: usage error: {e}");
+                        return 2;
+                    }
+                };
+                // aggregation knobs are validated up front: malformed or
+                // out-of-range values are usage errors, not panics or
+                // mid-run failures
+                let aggregation = match args.opt_str("aggregation") {
+                    None => defaults.global.aggregation,
+                    Some(s) => match mel::scenario::AggregationMode::parse(s) {
+                        Some(a) => a,
+                        None => {
+                            eprintln!(
+                                "mel: usage error: --aggregation expects per_update or rounds, \
+                                 got {s:?}"
+                            );
+                            return 2;
+                        }
+                    },
+                };
+                let round_period_s = match args.try_get_f64("round-period") {
+                    Ok(v) => v.unwrap_or(defaults.global.round_period_s),
+                    Err(e) => {
+                        eprintln!("mel: usage error: {e}");
+                        return 2;
+                    }
+                };
+                let staleness_discount = match args.try_get_f64("staleness-discount") {
+                    Ok(v) => v.unwrap_or(defaults.global.staleness_discount),
+                    Err(e) => {
+                        eprintln!("mel: usage error: {e}");
+                        return 2;
+                    }
+                };
+                let gspec = mel::scenario::GlobalAggSpec {
+                    aggregation,
+                    round_period_s,
+                    staleness_discount,
+                };
+                if let Err(e) = gspec.validate() {
+                    eprintln!("mel: usage error: {e}");
+                    return 2;
+                }
+                let gcfg = experiments::GlobalConfig {
+                    shard_counts: args.get_usize_list("shards", &defaults.shard_counts),
+                    k: args.get_usize("k", defaults.k),
+                    d: args.get_usize("d", defaults.d),
+                    cycles: args.get_usize("cycles", defaults.cycles),
+                    t_total: args.get_f64("t", defaults.t_total),
+                    hidden,
+                    lr: args.get_f64("lr", defaults.lr as f64) as f32,
+                    eval_samples: args.get_usize("eval-samples", defaults.eval_samples),
+                    churners: args.get_usize("churners", defaults.churners),
+                    global: gspec,
+                };
+                let data = match experiments::fig_global(&gcfg, seed) {
+                    Ok(d) => d,
+                    Err(e) => {
+                        eprintln!("figGlobal failed: {e}");
+                        return 1;
+                    }
+                };
+                print!("{}", data.table().render());
+                if let Some(dir) = &out {
+                    std::fs::create_dir_all(dir).expect("create out dir");
+                    let path = format!("{dir}/{}.csv", data.id);
+                    std::fs::write(&path, data.csv()).expect("write csv");
                     println!("wrote {path}");
                 }
             }

@@ -121,6 +121,12 @@ impl Metrics {
         self.inner.lock().unwrap().series.get(name).cloned().unwrap_or_default()
     }
 
+    /// Last point of a named series, if any — the final value of a
+    /// time-keyed curve (e.g. a run's closing global accuracy).
+    pub fn series_last(&self, name: &str) -> Option<(f64, f64)> {
+        self.inner.lock().unwrap().series.get(name).and_then(|s| s.last().copied())
+    }
+
     /// Export everything as JSON (deterministic key order).
     pub fn to_json(&self) -> Json {
         let g = self.inner.lock().unwrap();
@@ -300,6 +306,15 @@ mod tests {
         let m = Metrics::new();
         m.import_series("merged", &[(1.0, 2.0), (3.0, 4.0)]);
         assert_eq!(m.series("merged"), vec![(1.0, 2.0), (3.0, 4.0)]);
+    }
+
+    #[test]
+    fn series_last_returns_final_point() {
+        let m = Metrics::new();
+        assert_eq!(m.series_last("absent"), None);
+        m.record("curve", 1.0, 2.0);
+        m.record("curve", 3.0, 4.5);
+        assert_eq!(m.series_last("curve"), Some((3.0, 4.5)));
     }
 
     #[test]

@@ -172,12 +172,145 @@ impl ShardSpec {
     }
 }
 
-/// A multi-cloudlet cluster: one [`ShardSpec`] per cloudlet shard. Each
-/// shard runs its own event queue (`crate::cluster`); the cluster layer
-/// merges their update streams hierarchically.
+/// How the cluster-level parameter server
+/// ([`crate::cluster::ParamServer`]) applies the merged shard update
+/// stream to the global model parameters.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum AggregationMode {
+    /// Apply each dispatch cohort the moment its last upload lands —
+    /// updates issued at the same instant from the same global state
+    /// aggregate together (a barrier round collapses to exactly the
+    /// single-cloudlet trainer's weighted average); staggered re-leases
+    /// form singleton cohorts, i.e. true per-update async application.
+    #[default]
+    PerUpdate,
+    /// Barriered global rounds: every `round_period_s` simulated
+    /// seconds, all updates uploaded within the window are trained from
+    /// the round-start global snapshot and merged FedAvg-style, weighted
+    /// by batch share (and discounted by staleness).
+    Rounds,
+}
+
+impl AggregationMode {
+    pub fn parse(s: &str) -> Option<Self> {
+        match s {
+            "per_update" | "per-update" => Some(Self::PerUpdate),
+            "rounds" => Some(Self::Rounds),
+            _ => None,
+        }
+    }
+
+    pub fn label(&self) -> &'static str {
+        match self {
+            Self::PerUpdate => "per_update",
+            Self::Rounds => "rounds",
+        }
+    }
+}
+
+/// Cluster-level global-aggregation knobs (the parameter-server tier's
+/// scenario surface), JSON-loadable inside a [`ClusterSpec`]:
+///
+/// ```json
+/// { "shards": [ ... ],
+///   "global": { "aggregation": "rounds", "round_period_s": 30.0,
+///               "staleness_discount": 0.25 } }
+/// ```
+#[derive(Debug, Clone, PartialEq)]
+pub struct GlobalAggSpec {
+    pub aggregation: AggregationMode,
+    /// Global-round period in simulated seconds (rounds mode only; must
+    /// be positive there).
+    pub round_period_s: f64,
+    /// Per-staleness-step multiplicative discount in `[0, 1]`: an update
+    /// that saw `s` other updates applied mid-flight contributes with
+    /// weight `(1 − discount)^s · d_k`. 0 disables discounting; 1 drops
+    /// every stale update entirely.
+    pub staleness_discount: f64,
+}
+
+impl Default for GlobalAggSpec {
+    fn default() -> Self {
+        Self { aggregation: AggregationMode::PerUpdate, round_period_s: 0.0, staleness_discount: 0.0 }
+    }
+}
+
+impl GlobalAggSpec {
+    /// Range/consistency validation, shared by the JSON loader and the
+    /// CLI flag parsing (usage errors, not panics).
+    pub fn validate(&self) -> Result<(), String> {
+        if !self.staleness_discount.is_finite() || !(0.0..=1.0).contains(&self.staleness_discount)
+        {
+            return Err(format!(
+                "staleness_discount must be within [0, 1], got {}",
+                self.staleness_discount
+            ));
+        }
+        if !self.round_period_s.is_finite() || self.round_period_s < 0.0 {
+            return Err(format!(
+                "round_period_s must be a non-negative number, got {}",
+                self.round_period_s
+            ));
+        }
+        if self.aggregation == AggregationMode::Rounds && self.round_period_s <= 0.0 {
+            return Err(format!(
+                "round_period_s must be positive for rounds aggregation, got {}",
+                self.round_period_s
+            ));
+        }
+        Ok(())
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("aggregation", Json::Str(self.aggregation.label().into())),
+            ("round_period_s", Json::Num(self.round_period_s)),
+            ("staleness_discount", Json::Num(self.staleness_discount)),
+        ])
+    }
+
+    pub fn from_json(v: &Json) -> Result<Self, JsonError> {
+        let d = Self::default();
+        let aggregation = match v.opt("aggregation") {
+            None => d.aggregation,
+            Some(a) => {
+                let s = a.as_str()?;
+                AggregationMode::parse(s).ok_or_else(|| {
+                    JsonError::Access(format!(
+                        "aggregation must be \"per_update\" or \"rounds\", got {s:?}"
+                    ))
+                })?
+            }
+        };
+        let spec = Self {
+            aggregation,
+            round_period_s: v
+                .opt("round_period_s")
+                .map(|x| x.as_f64())
+                .transpose()?
+                .unwrap_or(d.round_period_s),
+            staleness_discount: v
+                .opt("staleness_discount")
+                .map(|x| x.as_f64())
+                .transpose()?
+                .unwrap_or(d.staleness_discount),
+        };
+        spec.validate().map_err(JsonError::Access)?;
+        Ok(spec)
+    }
+}
+
+/// A multi-cloudlet cluster: one [`ShardSpec`] per cloudlet shard plus
+/// the global-aggregation knobs. Each shard runs its own event queue
+/// (`crate::cluster`); the cluster layer merges their update streams
+/// hierarchically, and the parameter-server tier replays the merge per
+/// [`GlobalAggSpec`].
 #[derive(Debug, Clone)]
 pub struct ClusterSpec {
     pub shards: Vec<ShardSpec>,
+    /// Parameter-server aggregation knobs (default: per-update apply,
+    /// no staleness discount).
+    pub global: GlobalAggSpec,
 }
 
 impl ClusterSpec {
@@ -193,6 +326,7 @@ impl ClusterSpec {
                     churn: ChurnTrace::default(),
                 })
                 .collect(),
+            global: GlobalAggSpec::default(),
         })
     }
 
@@ -211,7 +345,10 @@ impl ClusterSpec {
     }
 
     pub fn to_json(&self) -> Json {
-        Json::obj(vec![("shards", Json::Arr(self.shards.iter().map(ShardSpec::to_json).collect()))])
+        Json::obj(vec![
+            ("shards", Json::Arr(self.shards.iter().map(ShardSpec::to_json).collect())),
+            ("global", self.global.to_json()),
+        ])
     }
 
     pub fn from_json(v: &Json) -> Result<Self, JsonError> {
@@ -219,7 +356,12 @@ impl ClusterSpec {
         for s in v.get("shards")?.as_arr()? {
             shards.push(ShardSpec::from_json(s)?);
         }
-        Ok(Self { shards })
+        // legacy specs without a global block default to per-update
+        let global = match v.opt("global") {
+            Some(g) => GlobalAggSpec::from_json(g)?,
+            None => GlobalAggSpec::default(),
+        };
+        Ok(Self { shards, global })
     }
 }
 
@@ -287,6 +429,43 @@ mod tests {
         let shard = ShardSpec::from_json(&legacy).unwrap();
         assert!(shard.churn.is_empty());
         assert_eq!(shard.seed_offset, 0);
+    }
+
+    #[test]
+    fn global_agg_spec_round_trips_and_validates() {
+        let mut spec = ClusterSpec::uniform("pedestrian", 2, 4).unwrap();
+        spec.global = GlobalAggSpec {
+            aggregation: AggregationMode::Rounds,
+            round_period_s: 30.0,
+            staleness_discount: 0.25,
+        };
+        let text = spec.to_json().to_pretty();
+        let back = ClusterSpec::from_json(&Json::parse(&text).unwrap()).unwrap();
+        assert_eq!(back.global, spec.global);
+        // legacy specs without a global block default to per-update
+        let legacy = Json::obj(vec![(
+            "shards",
+            Json::Arr(spec.shards.iter().map(ShardSpec::to_json).collect()),
+        )]);
+        let back2 = ClusterSpec::from_json(&legacy).unwrap();
+        assert_eq!(back2.global, GlobalAggSpec::default());
+        assert_eq!(back2.global.aggregation, AggregationMode::PerUpdate);
+
+        // validation: bad mode string, out-of-range discount, rounds
+        // mode without a period — all JSON errors, not panics
+        let bad_mode = Json::obj(vec![("aggregation", Json::Str("frobnicate".into()))]);
+        assert!(GlobalAggSpec::from_json(&bad_mode).is_err());
+        let bad_discount = Json::obj(vec![("staleness_discount", Json::Num(1.5))]);
+        assert!(GlobalAggSpec::from_json(&bad_discount).is_err());
+        let rounds_no_period = Json::obj(vec![("aggregation", Json::Str("rounds".into()))]);
+        assert!(GlobalAggSpec::from_json(&rounds_no_period).is_err());
+        let neg_period = Json::obj(vec![("round_period_s", Json::Num(-3.0))]);
+        assert!(GlobalAggSpec::from_json(&neg_period).is_err());
+
+        assert_eq!(AggregationMode::parse("per_update"), Some(AggregationMode::PerUpdate));
+        assert_eq!(AggregationMode::parse("rounds"), Some(AggregationMode::Rounds));
+        assert_eq!(AggregationMode::parse("x"), None);
+        assert_eq!(AggregationMode::Rounds.label(), "rounds");
     }
 
     #[test]

@@ -8,7 +8,9 @@
 
 pub mod churn;
 
-pub use churn::{ChurnEvent, ChurnTrace, ClusterSpec, ShardSpec};
+pub use churn::{
+    AggregationMode, ChurnEvent, ChurnTrace, ClusterSpec, GlobalAggSpec, ShardSpec,
+};
 
 use crate::alloc::Problem;
 use crate::channel::ChannelSpec;

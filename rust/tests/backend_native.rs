@@ -188,6 +188,93 @@ fn seeded_sgd_run_descends_strictly_and_deterministically() {
     }
 }
 
+/// Parameter-averaging exactness: average K model copies (eq. 5), run
+/// one `grad_step` on the average, apply one SGD step — and compare
+/// every number against the closed form on a **zero-hidden** model
+/// (softmax regression). The copies are chosen so their weighted
+/// average is exactly the all-zero parameter set, where uniform logits
+/// make the gradient analytic: `∂L/∂W[j,c] = Σ_i x[i,j]·(1/C − 1[y_i=c])`,
+/// `∂L/∂b[c] = Σ_i (1/C − 1[y_i=c])`, `loss = n·ln C`. This is the
+/// cluster parameter server's aggregation + application step in one
+/// golden-value test.
+#[test]
+fn averaging_copies_then_grad_step_matches_closed_form_on_zero_hidden_model() {
+    let layers = [6usize, 3]; // no hidden layer: input → classes
+    let (f, classes, n) = (6usize, 3usize, 5usize);
+
+    // K = 3 copies whose weighted average cancels exactly: +a and −a at
+    // equal weight, a zero set at double weight
+    let constant = |v: f32| {
+        let tensors = vec![
+            Tensor::f32(vec![f, classes], vec![v; f * classes]),
+            Tensor::f32(vec![classes], vec![v; classes]),
+        ];
+        ParamSet { tensors, layers: layers.to_vec() }
+    };
+    let avg = ParamSet::weighted_average(&[
+        (1.0, constant(0.5)),
+        (1.0, constant(-0.5)),
+        (2.0, constant(0.0)),
+    ]);
+    for t in &avg.tensors {
+        assert!(t.as_f32().iter().all(|&v| v == 0.0), "average must cancel exactly");
+    }
+
+    // seeded batch
+    let mut rng = Pcg64::seeded(31);
+    let x: Vec<f32> = (0..n * f).map(|_| rng.uniform(0.0, 1.0) as f32).collect();
+    let y: Vec<i32> = (0..n).map(|_| rng.below(classes as u64) as i32).collect();
+    let mut inputs = avg.tensors.clone();
+    inputs.push(Tensor::f32(vec![n, f], x.clone()));
+    inputs.push(Tensor::i32(vec![n], y.clone()));
+    inputs.push(Tensor::f32(vec![n], vec![1.0; n]));
+    let call = grad_call(&layers);
+    let mut be = NativeBackend::new();
+    let out = be.execute(&call, inputs).expect("grad_step");
+    assert_eq!(out.len(), 4); // dW, db, loss_sum, weight_sum
+
+    // closed form at zero parameters: uniform softmax p = 1/C
+    let p = 1.0f64 / classes as f64;
+    for j in 0..f {
+        for c in 0..classes {
+            let expected: f64 = (0..n)
+                .map(|i| {
+                    x[i * f + j] as f64 * (p - if y[i] as usize == c { 1.0 } else { 0.0 })
+                })
+                .sum();
+            let got = out[0].as_f32()[j * classes + c] as f64;
+            assert!(
+                (got - expected).abs() < 1e-5,
+                "dW[{j},{c}]: analytic {got} vs closed form {expected}"
+            );
+        }
+    }
+    for c in 0..classes {
+        let expected: f64 =
+            (0..n).map(|i| p - if y[i] as usize == c { 1.0 } else { 0.0 }).sum();
+        let got = out[1].as_f32()[c] as f64;
+        assert!((got - expected).abs() < 1e-5, "db[{c}]: {got} vs {expected}");
+    }
+    let loss = out[2].scalar() as f64;
+    assert!((loss - n as f64 * (classes as f64).ln()).abs() < 1e-4, "loss {loss}");
+    assert_eq!(out[3].scalar(), n as f32);
+
+    // one SGD step from the average: w ← 0 − (lr/n)·g, every coordinate
+    let mut stepped = avg.clone();
+    let grads: Vec<Tensor> = out[..2].to_vec();
+    let lr = 0.1f32;
+    stepped.sgd_apply(&grads, lr, n as f32);
+    for (t, g) in stepped.tensors.iter().zip(&grads) {
+        for (w, gv) in t.as_f32().iter().zip(g.as_f32()) {
+            let expected = -(lr / n as f32) * gv;
+            assert!(
+                (w - expected).abs() < 1e-7,
+                "sgd step: {w} vs closed form {expected}"
+            );
+        }
+    }
+}
+
 #[test]
 fn chunked_gradient_accumulation_equals_single_batch() {
     // sum-form losses: grad(batch) == grad(first half) + grad(second

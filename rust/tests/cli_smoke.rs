@@ -202,6 +202,58 @@ fn figure_fig_accuracy_renders_offline() {
 }
 
 #[test]
+fn figure_fig_global_renders_offline() {
+    // real multi-shard SGD replay through the parameter server on the
+    // hermetic native backend: tiny 1-shard sweep to stay fast
+    let (stdout, stderr, ok) = mel(&[
+        "figure", "figGlobal", "--seed", "42", "--shards", "1", "--k", "2", "--d", "64",
+        "--cycles", "2", "--hidden", "8", "--eval-samples", "48",
+    ]);
+    assert!(ok, "stderr: {stderr}");
+    assert!(stdout.contains("final_acc_pm optimized"), "{stdout}");
+    assert!(stdout.contains("updates equal"), "{stdout}");
+    assert!(stdout.contains("figGlobal"), "{stdout}");
+}
+
+#[test]
+fn figure_fig_global_rounds_mode_with_knobs() {
+    let (stdout, stderr, ok) = mel(&[
+        "figure", "figGlobal", "--seed", "42", "--shards", "1", "--k", "2", "--d", "64",
+        "--cycles", "2", "--hidden", "8", "--eval-samples", "48", "--aggregation", "rounds",
+        "--round-period", "2.0", "--staleness-discount", "0.25",
+    ]);
+    assert!(ok, "stderr: {stderr}");
+    assert!(stdout.contains("agg=rounds"), "{stdout}");
+}
+
+#[test]
+fn fig_global_malformed_knobs_are_usage_errors() {
+    // malformed numerics: proper usage errors, exit 2, no panic
+    let (_, stderr, ok) = mel(&["figure", "figGlobal", "--round-period", "fast"]);
+    assert!(!ok);
+    assert!(stderr.contains("--round-period expects a number"), "stderr: {stderr}");
+    assert!(!stderr.contains("panicked"), "must not panic: {stderr}");
+
+    let (_, stderr, ok) = mel(&["figure", "figGlobal", "--staleness-discount", "0..5"]);
+    assert!(!ok);
+    assert!(stderr.contains("--staleness-discount expects a number"), "stderr: {stderr}");
+    assert!(!stderr.contains("panicked"), "must not panic: {stderr}");
+
+    // out-of-range / inconsistent values are usage errors too
+    let (_, stderr, ok) = mel(&["figure", "figGlobal", "--staleness-discount", "1.5"]);
+    assert!(!ok);
+    assert!(stderr.contains("staleness_discount must be within"), "stderr: {stderr}");
+
+    let (_, stderr, ok) = mel(&["figure", "figGlobal", "--aggregation", "rounds"]);
+    assert!(!ok);
+    assert!(stderr.contains("round_period_s must be positive"), "stderr: {stderr}");
+
+    let (_, stderr, ok) = mel(&["figure", "figGlobal", "--aggregation", "frobnicate"]);
+    assert!(!ok);
+    assert!(stderr.contains("per_update or rounds"), "stderr: {stderr}");
+}
+
+#[test]
 fn bench_diff_compares_suite_json() {
     let dir = std::env::temp_dir().join(format!("mel-bench-diff-{}", std::process::id()));
     std::fs::create_dir_all(&dir).unwrap();

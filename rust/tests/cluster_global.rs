@@ -1,0 +1,302 @@
+//! Equivalence- and property-test harness of the cluster-level
+//! parameter server (`mel::cluster::ParamServer`):
+//!
+//! 1. **Refactor pin** — a 1-shard per-update ParamServer replay is
+//!    bit-for-bit equal to the single-cloudlet `Trainer`: the update
+//!    timeline (vs the orchestrator core), the final parameters, and
+//!    the per-cycle loss/accuracy values all match exactly. This is
+//!    what guarantees the extracted shared application path
+//!    (`coordinator::apply`) cannot drift between the two tiers.
+//! 2. **Round-aggregation properties** — weighted global rounds
+//!    conserve the total batch share (zero discount ⇒ weights are
+//!    batch shares, summing over rounds to every aggregated update's
+//!    batch) and are invariant under shard merge order, for 2- and
+//!    4-shard configs under churn.
+//! 3. **Staleness-discount monotonicity** — a higher discount never
+//!    increases a stale update's applied norm (pure factor and full
+//!    end-to-end replay).
+
+use mel::alloc::Policy;
+use mel::cluster::{
+    staleness_factor, Cluster, ClusterConfig, ParamServer, ParamServerConfig,
+};
+use mel::coordinator::{ParamSet, TrainConfig, Trainer};
+use mel::orchestrator::{Mode, Orchestrator, OrchestratorConfig, UpdateRecord};
+use mel::scenario::{
+    AggregationMode, ChurnTrace, CloudletConfig, ClusterSpec, GlobalAggSpec, Scenario, ShardSpec,
+};
+
+const T: f64 = 2.0;
+const CYCLES: usize = 3;
+const LR: f32 = 0.05;
+const EVAL: usize = 48;
+const SEED: u64 = 42;
+
+/// Debug-build-friendly cloudlet: paper timing constants drive the
+/// allocation while the executed graph uses a shrunken hidden layer.
+fn tiny_cloudlet(k: usize, d: usize) -> CloudletConfig {
+    let mut c = CloudletConfig::pedestrian(k);
+    c.model = c.model.with_hidden(&[8]);
+    c.dataset.total_samples = d;
+    c
+}
+
+fn one_shard_spec(ccfg: &CloudletConfig) -> ClusterSpec {
+    ClusterSpec {
+        shards: vec![ShardSpec {
+            cloudlet: ccfg.clone(),
+            seed_offset: 0,
+            churn: ChurnTrace::default(),
+        }],
+        global: Default::default(),
+    }
+}
+
+fn assert_params_bit_equal(a: &ParamSet, b: &ParamSet, what: &str) {
+    assert_eq!(a.tensors.len(), b.tensors.len(), "{what}: tensor count");
+    for (i, (ta, tb)) in a.tensors.iter().zip(&b.tensors).enumerate() {
+        assert_eq!(ta.dims, tb.dims, "{what}: tensor {i} dims");
+        for (j, (x, y)) in ta.as_f32().iter().zip(tb.as_f32()).enumerate() {
+            assert_eq!(
+                x.to_bits(),
+                y.to_bits(),
+                "{what}: tensor {i} coord {j}: {x} vs {y}"
+            );
+        }
+    }
+}
+
+#[test]
+fn one_shard_per_update_replay_matches_trainer_bit_for_bit() {
+    let ccfg = tiny_cloudlet(2, 96);
+
+    // --- reference: the single-cloudlet trainer, real training
+    let scenario = Scenario::random_cloudlet(&ccfg, SEED);
+    let tcfg = TrainConfig {
+        policy: Policy::Analytical,
+        t_total: T,
+        cycles: CYCLES,
+        lr: LR,
+        seed: SEED,
+        eval_samples: EVAL,
+        ..TrainConfig::default()
+    };
+    let mut trainer = Trainer::new(scenario, tcfg).expect("native engine");
+    let outcomes = trainer.train().expect("feasible tiny pedestrian run");
+    assert_eq!(outcomes.len(), CYCLES);
+
+    // --- the cluster timing run (1 shard, zero churn)
+    let spec = one_shard_spec(&ccfg);
+    let cluster = Cluster::new(
+        spec.clone(),
+        ClusterConfig {
+            policy: Policy::Analytical,
+            mode: Mode::Sync,
+            t_total: T,
+            cycles: CYCLES,
+            seed: SEED,
+            ..ClusterConfig::default()
+        },
+    );
+    let report = cluster.run().expect("feasible cluster run");
+
+    // --- update timeline ≡ single-cloudlet orchestrator, bit-for-bit
+    let mut orch = Orchestrator::new(
+        Scenario::random_cloudlet(&ccfg, SEED),
+        OrchestratorConfig {
+            mode: Mode::Sync,
+            policy: Policy::Analytical,
+            t_total: T,
+            cycles: CYCLES,
+            seed: SEED,
+            ..OrchestratorConfig::default()
+        },
+    );
+    let single = orch.run().expect("feasible orchestrator run");
+    let mut ref_sorted = single.updates.clone();
+    ref_sorted.sort_by(|a, b| a.uploaded_at.partial_cmp(&b.uploaded_at).unwrap());
+    assert_eq!(report.updates.len(), ref_sorted.len());
+    for ((shard, a), b) in report.updates.iter().zip(&ref_sorted) {
+        assert_eq!(*shard, 0);
+        assert_eq!(a.learner, b.learner);
+        assert_eq!(a.dispatched_at.to_bits(), b.dispatched_at.to_bits(), "dispatch instants");
+        assert_eq!(a.uploaded_at.to_bits(), b.uploaded_at.to_bits(), "upload instants");
+        assert_eq!(a.tau, b.tau);
+        assert_eq!(a.batch, b.batch);
+        assert_eq!(a.staleness, b.staleness);
+        assert_eq!(a.missed_deadline, b.missed_deadline);
+    }
+
+    // --- per-update ParamServer replay reproduces the trainer exactly
+    let ps_cfg = ParamServerConfig {
+        aggregation: AggregationMode::PerUpdate,
+        lr: LR,
+        seed: SEED,
+        eval_samples: EVAL,
+        ..ParamServerConfig::default()
+    };
+    let mut ps = ParamServer::new(&spec, ps_cfg).expect("native engine");
+    let global = ps.replay(&report.updates).expect("replay");
+    // every barrier cohort applied once, every update's gradient entered
+    assert_eq!(global.applies as usize, CYCLES);
+    assert_eq!(global.updates_replayed as usize, report.updates.len());
+    // final parameters: bit-for-bit
+    assert_params_bit_equal(trainer.params(), &global.params, "1-shard replay");
+    // per-cycle loss/accuracy: bit-for-bit (same eval set, same params)
+    assert_eq!(global.acc_series.len(), outcomes.len());
+    assert_eq!(global.loss_series.len(), outcomes.len());
+    for (o, ((_, acc), (_, loss))) in
+        outcomes.iter().zip(global.acc_series.iter().zip(&global.loss_series))
+    {
+        assert_eq!(o.accuracy.to_bits(), acc.to_bits(), "cycle {} accuracy", o.cycle);
+        assert_eq!(o.loss.to_bits(), loss.to_bits(), "cycle {} loss", o.cycle);
+    }
+    assert_eq!(global.final_accuracy.to_bits(), outcomes.last().unwrap().accuracy.to_bits());
+}
+
+/// A `shards`-way cluster of tiny cloudlets, synthetic churn per shard,
+/// rounds-mode aggregation knobs in the spec.
+fn churny_spec(shards: usize) -> ClusterSpec {
+    let ccfg = tiny_cloudlet(3, 96);
+    ClusterSpec {
+        shards: (0..shards)
+            .map(|i| ShardSpec {
+                cloudlet: ccfg.clone(),
+                seed_offset: i as u64,
+                churn: ChurnTrace::default(),
+            })
+            .collect(),
+        global: GlobalAggSpec {
+            aggregation: AggregationMode::Rounds,
+            round_period_s: T,
+            staleness_discount: 0.0,
+        },
+    }
+    .with_synthetic_churn(CYCLES as f64 * T, 1, SEED)
+}
+
+#[test]
+fn round_aggregation_conserves_batch_share_and_is_merge_order_invariant() {
+    for shards in [2usize, 4] {
+        let spec = churny_spec(shards);
+        let cluster = Cluster::new(
+            spec.clone(),
+            ClusterConfig {
+                policy: Policy::Analytical,
+                mode: Mode::Async,
+                t_total: T,
+                cycles: CYCLES,
+                seed: SEED,
+                ..ClusterConfig::default()
+            },
+        );
+        let report = cluster.run().expect("feasible churny run");
+        assert!(!report.updates.is_empty());
+        // churn actually happened somewhere in the cluster
+        assert!(report.shards.iter().any(|s| s.joins + s.departs > 0), "no churn at {shards}");
+
+        let ps_cfg = || ParamServerConfig {
+            lr: LR,
+            eval_samples: EVAL,
+            drop_stragglers: true,
+            ..ParamServerConfig::from_spec(&spec.global, SEED)
+        };
+        let mut ps = ParamServer::new(&spec, ps_cfg()).expect("native engine");
+        let g = ps.replay(&report.updates).expect("replay");
+        assert!(!g.rounds.is_empty());
+
+        // conservation: with zero staleness discount every round's
+        // applied weight IS its batch share, and the shares sum to the
+        // total batch volume of every aggregated update
+        let mut total_share = 0.0;
+        for r in &g.rounds {
+            assert_eq!(
+                r.weight, r.batch_share,
+                "{shards} shards, round {}: zero discount must conserve weights",
+                r.index
+            );
+            total_share += r.batch_share;
+        }
+        let expected: f64 = report
+            .updates
+            .iter()
+            .filter(|(_, u)| !u.missed_deadline)
+            .map(|(_, u)| u.batch as f64)
+            .sum();
+        assert_eq!(total_share, expected, "{shards} shards: batch share not conserved");
+
+        // permutation invariance: the merged stream's order must not
+        // change the replayed global model by a single bit
+        let mut reversed = report.updates.clone();
+        reversed.reverse();
+        let mut shard_desc = report.updates.clone();
+        shard_desc.sort_by_key(|(s, _)| usize::MAX - *s);
+        for (name, perm) in [("reversed", reversed), ("shard-descending", shard_desc)] {
+            let mut ps2 = ParamServer::new(&spec, ps_cfg()).expect("native engine");
+            let g2 = ps2.replay(&perm).expect("replay permuted stream");
+            assert_eq!(g2.updates_replayed, g.updates_replayed);
+            assert_eq!(g2.applies, g.applies);
+            assert_params_bit_equal(
+                &g.params,
+                &g2.params,
+                &format!("{shards}-shard {name} merge order"),
+            );
+        }
+    }
+}
+
+#[test]
+fn higher_staleness_discount_never_increases_applied_norm() {
+    // the pure factor is non-increasing in the discount and in staleness
+    for s in [1u64, 2, 5, 17] {
+        let mut prev = f64::INFINITY;
+        for d in [0.0, 0.1, 0.25, 0.5, 0.75, 0.9, 1.0] {
+            let f = staleness_factor(d, s);
+            assert!(f <= prev, "staleness {s}: factor must be non-increasing in the discount");
+            assert!((0.0..=1.0).contains(&f));
+            prev = f;
+        }
+    }
+
+    // end to end: one stale update replayed under growing discounts
+    // moves the global model by a non-increasing amount
+    let ccfg = tiny_cloudlet(2, 96);
+    let spec = one_shard_spec(&ccfg);
+    let stale = vec![(
+        0usize,
+        UpdateRecord {
+            learner: 0,
+            dispatched_at: 0.0,
+            uploaded_at: 1.0,
+            tau: 2,
+            batch: 16,
+            staleness: 3,
+            missed_deadline: false,
+        },
+    )];
+    let init = ParamSet::init(&ccfg.model.layers, SEED ^ 0x1417);
+    let mut prev_norm = f64::INFINITY;
+    let mut first_norm = None;
+    for discount in [0.0, 0.3, 0.7, 1.0] {
+        let cfg = ParamServerConfig {
+            staleness_discount: discount,
+            lr: LR,
+            seed: SEED,
+            eval_samples: EVAL,
+            ..ParamServerConfig::default()
+        };
+        let mut ps = ParamServer::new(&spec, cfg).expect("native engine");
+        let g = ps.replay(&stale).expect("replay");
+        let norm = g.params.distance2(&init);
+        assert!(
+            norm <= prev_norm,
+            "discount {discount} increased the applied norm ({norm} > {prev_norm})"
+        );
+        first_norm.get_or_insert(norm);
+        prev_norm = norm;
+    }
+    // the undiscounted apply really moved the model…
+    assert!(first_norm.unwrap() > 0.0, "zero-discount apply must move the global model");
+    // …and a full discount ignores the stale update entirely
+    assert_eq!(prev_norm, 0.0, "full discount must leave the global model untouched");
+}

@@ -9,9 +9,10 @@
 //!    shrink factor in (0, 1).
 
 use mel::alloc::{Policy, Problem};
-use mel::cluster::ChurnAwarePlanner;
+use mel::cluster::{shard_seed, Cluster, ClusterConfig, ChurnAwarePlanner};
 use mel::learner::Coeffs;
-use mel::orchestrator::{CyclePlanner, Redispatch};
+use mel::orchestrator::{CyclePlanner, Mode, Redispatch};
+use mel::scenario::ClusterSpec;
 use mel::util::rng::{Pcg64, Rng};
 
 /// Random heterogeneous problem in the calibrated two-class envelope —
@@ -121,6 +122,54 @@ fn straggler_release_sequence_shrinks_monotonically_and_terminates() {
         // parked exactly at the batch floor
         assert_eq!(*seq.last().unwrap(), 1, "trial {trial}: {seq:?}");
     }
+}
+
+/// Shard RNG streams are a pure function of `(cluster_seed, shard_id)`
+/// (plus the spec's `seed_offset` knob): two identical `Cluster::run`s
+/// — each spawning its own thread per shard, under churn, fading,
+/// deadline pressure, and straggler re-leasing — must produce
+/// *identical* merged timelines, bit for bit. Host thread scheduling
+/// must never leak into the simulated streams.
+#[test]
+fn identical_cluster_runs_produce_identical_merged_timelines() {
+    let run = || {
+        let spec = ClusterSpec::uniform("pedestrian", 3, 5)
+            .unwrap()
+            .with_synthetic_churn(240.0, 2, 9);
+        let cfg = ClusterConfig {
+            policy: Policy::Analytical,
+            mode: Mode::Async,
+            t_total: 30.0,
+            lease_s: 25.0,
+            cycles: 8,
+            straggler_releasing: true,
+            rayleigh: true,
+            seed: 7,
+            ..ClusterConfig::default()
+        };
+        Cluster::new(spec, cfg).run().unwrap()
+    };
+    let a = run();
+    let b = run();
+    assert_eq!(a.updates.len(), b.updates.len());
+    assert_eq!(a.updates_applied, b.updates_applied);
+    assert_eq!(a.deadline_misses, b.deadline_misses);
+    assert_eq!(a.releases, b.releases);
+    for ((sa, ua), (sb, ub)) in a.updates.iter().zip(&b.updates) {
+        assert_eq!(sa, sb, "shard tags diverged");
+        assert_eq!(ua.learner, ub.learner);
+        assert_eq!(ua.dispatched_at.to_bits(), ub.dispatched_at.to_bits());
+        assert_eq!(ua.uploaded_at.to_bits(), ub.uploaded_at.to_bits());
+        assert_eq!(ua.tau, ub.tau);
+        assert_eq!(ua.batch, ub.batch);
+        assert_eq!(ua.staleness, ub.staleness);
+        assert_eq!(ua.missed_deadline, ub.missed_deadline);
+    }
+    // the derivation itself: shard 0 keeps the cluster seed (the
+    // single-shard equivalence contract), later shards fold their id in
+    assert_eq!(shard_seed(7, 0, 0), 7);
+    assert_ne!(shard_seed(7, 0, 1), shard_seed(7, 1, 0));
+    assert_ne!(shard_seed(7, 0, 1), shard_seed(7, 0, 2));
 }
 
 #[test]
