@@ -1,6 +1,12 @@
 //! Native training-step bench: fwd+bwd+SGD latency of the hermetic
-//! pure-Rust executor over a (batch × hidden-width) sweep, plus the
-//! engine-thread dispatch overhead on top of a direct backend call.
+//! pure-Rust executor over a (batch × hidden-width) sweep, the
+//! engine-thread dispatch overhead on top of a direct backend call, and
+//! the compute-pool **thread sweep** (ISSUE 5): the same wide-layer
+//! grad step at 1/2/4/8 pool threads, with the speedup over the serial
+//! path reported informatively (multi-core hosts should beat serial;
+//! the sweep never fails the bench — CI gates on the stored baseline
+//! per bench name, and thread-count entries are compared only against
+//! their own history).
 //! Prints the effective FLOP rate next to the paper's modeled learner
 //! rates so the simulated compute profiles stay honest. Emits
 //! `results/BENCH_train_step.json` via `benchkit::Suite`.
@@ -68,6 +74,42 @@ fn main() {
             params.sgd_apply(&grads, 0.05, out[5].scalar());
             params.tensors[0].as_f32()[0]
         });
+    }
+
+    group("compute-pool thread sweep: wide-layer grad_step h=512 b=256");
+    {
+        let (call, ins) = inputs(512, 256);
+        let host = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+        let mut serial_mean = 0.0f64;
+        let mut best_speedup = 1.0f64;
+        for &threads in &[1usize, 2, 4, 8] {
+            let mut be = NativeBackend::with_threads(threads);
+            let r = suite.run(&b, &format!("grad_step h=512 b=256 threads={threads}"), || {
+                be.execute(&call, ins.clone()).unwrap()[5].scalar()
+            });
+            if threads == 1 {
+                serial_mean = r.mean;
+            } else if serial_mean > 0.0 {
+                let speedup = serial_mean / r.mean;
+                best_speedup = best_speedup.max(speedup);
+                println!(
+                    "    → {speedup:.2}x vs threads=1 ({:.2} GFLOP/s effective)",
+                    step_flops(512, 256) / r.mean / 1e9
+                );
+            }
+        }
+        // informative gate, never flaky-fatal: a multi-core host should
+        // beat the serial path on this shape
+        if host > 1 && best_speedup <= 1.05 {
+            println!(
+                "    WARN: pooled matmul did not beat serial ({best_speedup:.2}x on a \
+                 {host}-core host) — check MEL_THREADS / load"
+            );
+        } else {
+            println!(
+                "    OK: best pooled speedup {best_speedup:.2}x on a {host}-core host"
+            );
+        }
     }
 
     group("engine dispatch overhead (mpsc round trip vs direct call)");

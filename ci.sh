@@ -5,8 +5,10 @@
 #   STRICT_LINT=1 ./ci.sh  # fail on fmt/clippy findings too
 #   CI_BENCH=1 ./ci.sh   # additionally run the bench targets, which
 #                        # emit results/BENCH_*.json via benchkit::Suite
-#                        # and diff them against the stored baseline
-#                        # (results/BASELINE.json); a regression beyond
+#                        # and diff the gated suites against their stored
+#                        # baselines (results/BASELINE.json for
+#                        # cluster_cycle, results/BASELINE_train_step.json
+#                        # for train_step); a regression beyond
 #                        # BENCH_REGRESS_THRESHOLD (default 50%) fails CI
 #
 # Tier-1 gate: `cargo build --release && cargo test -q` must be green.
@@ -44,6 +46,17 @@ cargo build --release
 echo "==> cargo test -q"
 cargo test -q
 
+# ---- thread-count determinism gate (ISSUE 5) ----------------------------
+# The native backend's pooled matmuls must be bit-for-bit identical at
+# any pool size. The backend_native determinism tests compare pinned
+# 1/2/4/8-thread pools in-process; running them under MEL_THREADS=1 and
+# MEL_THREADS=4 additionally exercises the env-sized *shared* pool at
+# both extremes.
+for t in 1 4; do
+    echo "==> determinism tests at MEL_THREADS=$t"
+    MEL_THREADS="$t" cargo test -q --test backend_native determinis
+done
+
 # ---- perf-trajectory gate self-test -------------------------------------
 # The stored-baseline comparison below only bites when CI_BENCH runs, so
 # prove on every CI run that the gate itself still fails on a synthetic
@@ -80,19 +93,27 @@ if [ "$CI_BENCH" = "1" ]; then
     ls -l results/BENCH_*.json 2>/dev/null || echo "  (none written)"
 
     # ---- stored-baseline perf gate (ROADMAP "Perf trajectory") ----------
-    # results/BASELINE.json is a committed/bootstrapped snapshot of the
-    # cluster_cycle suite; regressions beyond the threshold fail CI.
-    # Refresh deliberately with: cp results/BENCH_cluster_cycle.json results/BASELINE.json
-    BASELINE="results/BASELINE.json"
+    # Each gated suite keeps a committed/bootstrapped baseline snapshot;
+    # regressions beyond the threshold fail CI. Refresh deliberately with:
+    #   cp results/BENCH_<suite>.json <baseline>
+    # (cluster_cycle keeps its historical BASELINE.json name; train_step
+    # joined the gate in ISSUE 5 as BASELINE_train_step.json.)
     BENCH_REGRESS_THRESHOLD="${BENCH_REGRESS_THRESHOLD:-0.5}"
-    if [ -f "$BASELINE" ]; then
-        echo "==> mel bench diff $BASELINE results/BENCH_cluster_cycle.json (threshold ${BENCH_REGRESS_THRESHOLD})"
-        ./target/release/mel bench diff "$BASELINE" results/BENCH_cluster_cycle.json \
-            --threshold "$BENCH_REGRESS_THRESHOLD" --fail-on-regress
-    elif [ -f results/BENCH_cluster_cycle.json ]; then
-        cp results/BENCH_cluster_cycle.json "$BASELINE"
-        echo "bootstrapped $BASELINE from this run (stored bench baseline)"
-    fi
+    gate_suite() {
+        suite="$1"
+        baseline="$2"
+        fresh="results/BENCH_${suite}.json"
+        if [ -f "$baseline" ]; then
+            echo "==> mel bench diff $baseline $fresh (threshold ${BENCH_REGRESS_THRESHOLD})"
+            ./target/release/mel bench diff "$baseline" "$fresh" \
+                --threshold "$BENCH_REGRESS_THRESHOLD" --fail-on-regress
+        elif [ -f "$fresh" ]; then
+            cp "$fresh" "$baseline"
+            echo "bootstrapped $baseline from this run (stored bench baseline)"
+        fi
+    }
+    gate_suite cluster_cycle results/BASELINE.json
+    gate_suite train_step results/BASELINE_train_step.json
 fi
 
 echo "CI OK"

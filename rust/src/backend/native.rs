@@ -12,18 +12,66 @@
 //! All inner loops run over contiguous row slices (iterator zips, no
 //! per-element bounds checks in the hot path), which keeps even debug
 //! builds fast enough for the integration tests.
+//!
+//! **Parallelism & determinism.** The hot contractions (`x·W` forward,
+//! `δ·Wᵀ` backward, `xᵀ·δ` gradient accumulation) and the per-row eval
+//! pass run as row-blocked tiles on the [`crate::compute::pool`] worker
+//! pool. Every tile owns a disjoint block of *output* rows and replays
+//! the serial kernel's per-element operation sequence exactly (same
+//! addends, same order, same zero-skips), and the eval/loss sums reduce
+//! serially over a per-row buffer in fixed row order — so the results
+//! are **bit-for-bit identical at any thread count**, including the
+//! pre-pool serial path. That is what keeps the trainer ≡ 1-shard
+//! cluster ≡ ParamServer replay equivalences alive under parallel
+//! execution (regression-tested in `rust/tests/backend_native.rs`).
+
+use std::sync::Arc;
 
 use super::{Backend, Call, Function};
+use crate::compute::pool::{self, ComputePool};
 use crate::runtime::{Tensor, TensorData};
 
-/// The dependency-free executor. Stateless: every call re-derives the
-/// graph from `call.layers`, so one backend serves any mix of models.
+/// Minimum multiply-accumulates in one parallel tile: below twice this
+/// the fork/join overhead beats the win and the serial kernel runs
+/// instead. Shape-dependent only (never thread-count-dependent), so the
+/// serial/parallel decision cannot make results depend on the pool.
+const PAR_MIN_MACS: usize = 64 * 1024;
+
+/// The dependency-free executor. Stateless between calls — every call
+/// re-derives the graph from `call.layers`, so one backend serves any
+/// mix of models; the only long-lived state is which worker pool the
+/// row-blocked kernels submit to.
 #[derive(Debug, Default)]
-pub struct NativeBackend;
+pub struct NativeBackend {
+    /// `None` → the process-wide shared pool ([`pool::shared`], sized by
+    /// `MEL_THREADS` / `--compute-threads`); `Some` → a privately sized
+    /// pool (determinism tests, bench thread sweeps).
+    pool: Option<Arc<ComputePool>>,
+}
 
 impl NativeBackend {
+    /// A backend on the process-wide shared pool (the default: every
+    /// engine in the process then draws from one pool, so multi-shard
+    /// clusters never oversubscribe the host).
     pub fn new() -> Self {
-        Self
+        Self { pool: None }
+    }
+
+    /// A backend submitting to a caller-owned pool.
+    pub fn with_pool(pool: Arc<ComputePool>) -> Self {
+        Self { pool: Some(pool) }
+    }
+
+    /// A backend on a dedicated pool of exactly `threads` threads.
+    pub fn with_threads(threads: usize) -> Self {
+        Self::with_pool(Arc::new(ComputePool::new(threads)))
+    }
+
+    fn pool(&self) -> &ComputePool {
+        match &self.pool {
+            Some(p) => p,
+            None => pool::shared(),
+        }
     }
 }
 
@@ -35,8 +83,8 @@ impl Backend for NativeBackend {
     fn execute(&mut self, call: &Call, inputs: Vec<Tensor>) -> Result<Vec<Tensor>, String> {
         let net = Network::unpack(call, &inputs)?;
         match call.function {
-            Function::GradStep => net.grad_step(),
-            Function::EvalBatch => net.eval_batch(),
+            Function::GradStep => net.grad_step(self.pool()),
+            Function::EvalBatch => net.eval_batch(self.pool()),
         }
     }
 }
@@ -109,14 +157,14 @@ impl<'a> Network<'a> {
 
     /// Forward pass; returns every post-activation (`acts[i]` is the
     /// input to layer `i`, `acts.last()` holds the logits).
-    fn forward(&self) -> Vec<Vec<f32>> {
+    fn forward(&self, pool: &ComputePool) -> Vec<Vec<f32>> {
         let n_layers = self.layers.len() - 1;
         let mut acts: Vec<Vec<f32>> = Vec::with_capacity(n_layers);
         let mut cur: &[f32] = self.x;
         for (i, (w, b)) in self.params.iter().enumerate() {
             let (rows, cols) = (self.layers[i], self.layers[i + 1]);
             let mut z = vec![0.0f32; self.batch * cols];
-            matmul(cur, w, self.batch, rows, cols, &mut z);
+            par_matmul(pool, cur, w, self.batch, rows, cols, &mut z);
             for row in z.chunks_exact_mut(cols) {
                 for (v, &bias) in row.iter_mut().zip(*b) {
                     *v += bias;
@@ -159,20 +207,81 @@ impl<'a> Network<'a> {
         (loss, g)
     }
 
-    /// Loss-only variant for the evaluation path — no gradient buffer,
-    /// no per-logit softmax exponentials.
-    fn masked_loss(&self, logits: &[f32]) -> f64 {
+    /// Per-row loss and argmax of the evaluation pass, computed as
+    /// row-blocked pool tiles into disjoint per-row buffers, then
+    /// reduced serially in fixed row order — a deterministic
+    /// fixed-order reduction whose every operation matches the old
+    /// serial loop bit for bit.
+    fn eval_rows(&self, pool: &ComputePool, logits: &[f32]) -> (f64, f64) {
         let classes = *self.layers.last().unwrap();
+        let mut row_loss = vec![0.0f64; self.batch];
+        let mut row_pred = vec![0u32; self.batch];
+        // MAC-equivalent work estimate: the stable lse costs an exp and
+        // an ln per logit (~64 MACs' worth each on top of the scans),
+        // so a default 512-row × 10-class eval genuinely engages the
+        // pool rather than inheriting a matmul-calibrated threshold it
+        // could never reach
+        let parts = par_parts(pool, self.batch, self.batch * classes * 64);
+        if parts <= 1 {
+            self.fill_eval_rows(logits, classes, 0, &mut row_loss, &mut row_pred);
+        } else {
+            let block = (self.batch + parts - 1) / parts;
+            let net = &*self;
+            let tasks: Vec<Box<dyn FnOnce() + Send + '_>> = row_loss
+                .chunks_mut(block)
+                .zip(row_pred.chunks_mut(block))
+                .enumerate()
+                .map(|(bi, (loss_blk, pred_blk))| {
+                    Box::new(move || {
+                        net.fill_eval_rows(logits, classes, bi * block, loss_blk, pred_blk);
+                    }) as Box<dyn FnOnce() + Send + '_>
+                })
+                .collect();
+            pool.run(tasks);
+        }
+        // fixed-order reduction: identical adds, identical skips, in
+        // identical order to the serial per-row loop
         let mut loss = 0.0f64;
+        let mut correct = 0.0f64;
         for r in 0..self.batch {
             let m = self.mask[r];
             if m == 0.0 {
                 continue;
             }
-            let row = &logits[r * classes..(r + 1) * classes];
-            loss += (m as f64) * ((row_lse(row) - row[self.y[r] as usize]) as f64);
+            loss += row_loss[r];
+            if row_pred[r] as usize == self.y[r] as usize {
+                correct += m as f64;
+            }
         }
-        loss
+        (loss, correct)
+    }
+
+    /// One eval tile: rows `r0..r0 + blk.len()` (shared by the serial
+    /// and pooled paths of [`Self::eval_rows`]).
+    fn fill_eval_rows(
+        &self,
+        logits: &[f32],
+        classes: usize,
+        r0: usize,
+        loss_blk: &mut [f64],
+        pred_blk: &mut [u32],
+    ) {
+        for (i, (lv, pv)) in loss_blk.iter_mut().zip(pred_blk.iter_mut()).enumerate() {
+            let r = r0 + i;
+            if self.mask[r] == 0.0 {
+                continue;
+            }
+            let row = &logits[r * classes..(r + 1) * classes];
+            *lv = (self.mask[r] as f64) * ((row_lse(row) - row[self.y[r] as usize]) as f64);
+            // first-max wins, matching XLA argmax
+            let mut pred = 0usize;
+            for (j, &v) in row.iter().enumerate() {
+                if v > row[pred] {
+                    pred = j;
+                }
+            }
+            *pv = pred as u32;
+        }
     }
 
     fn weight_sum(&self) -> f32 {
@@ -180,8 +289,8 @@ impl<'a> Network<'a> {
     }
 
     /// `[dw0, db0, …, loss_sum, weight_sum]`.
-    fn grad_step(&self) -> Result<Vec<Tensor>, String> {
-        let acts = self.forward();
+    fn grad_step(&self, pool: &ComputePool) -> Result<Vec<Tensor>, String> {
+        let acts = self.forward(pool);
         let n_layers = self.layers.len() - 1;
         let (loss, mut g) = self.loss_and_dlogits(acts.last().unwrap());
 
@@ -191,7 +300,7 @@ impl<'a> Network<'a> {
             let a_in: &[f32] = if i == 0 { self.x } else { &acts[i - 1] };
             // dw = a_inᵀ · g
             let mut dw = vec![0.0f32; rows * cols];
-            matmul_at_b(a_in, &g, self.batch, rows, cols, &mut dw);
+            par_matmul_at_b(pool, a_in, &g, self.batch, rows, cols, &mut dw);
             // db = column sums of g
             let mut db = vec![0.0f32; cols];
             for g_row in g.chunks_exact(cols) {
@@ -204,7 +313,7 @@ impl<'a> Network<'a> {
                 // activations are > 0 exactly where z > 0.
                 let w = self.params[i].0;
                 let mut gp = vec![0.0f32; self.batch * rows];
-                matmul_a_bt(&g, w, self.batch, cols, rows, &mut gp);
+                par_matmul_a_bt(pool, &g, w, self.batch, cols, rows, &mut gp);
                 for (gv, &av) in gp.iter_mut().zip(a_in) {
                     if av <= 0.0 {
                         *gv = 0.0;
@@ -228,29 +337,10 @@ impl<'a> Network<'a> {
     }
 
     /// `[loss_sum, correct_sum, weight_sum]`.
-    fn eval_batch(&self) -> Result<Vec<Tensor>, String> {
-        let acts = self.forward();
+    fn eval_batch(&self, pool: &ComputePool) -> Result<Vec<Tensor>, String> {
+        let acts = self.forward(pool);
         let logits = acts.last().unwrap();
-        let classes = *self.layers.last().unwrap();
-        let loss = self.masked_loss(logits);
-        let mut correct = 0.0f64;
-        for r in 0..self.batch {
-            let m = self.mask[r];
-            if m == 0.0 {
-                continue;
-            }
-            let row = &logits[r * classes..(r + 1) * classes];
-            // first-max wins, matching XLA argmax
-            let mut pred = 0usize;
-            for (j, &v) in row.iter().enumerate() {
-                if v > row[pred] {
-                    pred = j;
-                }
-            }
-            if pred == self.y[r] as usize {
-                correct += m as f64;
-            }
-        }
+        let (loss, correct) = self.eval_rows(pool, logits);
         Ok(vec![
             Tensor::scalar_f32(loss as f32),
             Tensor::scalar_f32(correct as f32),
@@ -322,6 +412,131 @@ fn matmul_a_bt(g: &[f32], w: &[f32], m: usize, n: usize, k: usize, out: &mut [f3
                 acc += gv * wv;
             }
             *o += acc;
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// row-blocked parallel tiles over the serial kernels
+// ---------------------------------------------------------------------
+//
+// Each tile owns a disjoint block of OUTPUT rows and performs exactly
+// the serial kernel's per-element operations in the serial order, so
+// the parallel results are bit-for-bit equal to the serial ones at any
+// thread count and under any partition (property-tested below and in
+// rust/tests/backend_native.rs).
+
+/// How many tiles to cut `rows` output rows into for `work` total MACs:
+/// 1 (serial) below the overhead threshold, else at most one tile per
+/// pool thread with every tile above [`PAR_MIN_MACS`].
+fn par_parts(pool: &ComputePool, rows: usize, work: usize) -> usize {
+    if rows < 2 || pool.threads() < 2 || work < 2 * PAR_MIN_MACS {
+        return 1;
+    }
+    pool.threads().min(rows).min((work / PAR_MIN_MACS).max(1))
+}
+
+/// Parallel `out(m×n) += a(m×k) · b(k×n)`: contiguous row blocks of
+/// `out` (and the matching rows of `a`) per tile.
+fn par_matmul(pool: &ComputePool, a: &[f32], b: &[f32], m: usize, k: usize, n: usize, out: &mut [f32]) {
+    let parts = par_parts(pool, m, m * k * n);
+    if parts <= 1 {
+        return matmul(a, b, m, k, n, out);
+    }
+    let block = (m + parts - 1) / parts;
+    let tasks: Vec<Box<dyn FnOnce() + Send + '_>> = a
+        .chunks(block * k)
+        .zip(out.chunks_mut(block * n))
+        .map(|(a_blk, out_blk)| {
+            let rows = out_blk.len() / n;
+            Box::new(move || matmul(a_blk, b, rows, k, n, out_blk))
+                as Box<dyn FnOnce() + Send + '_>
+        })
+        .collect();
+    pool.run(tasks);
+}
+
+/// Parallel `out(m×k) += g(m×n) · wᵀ(n×k)`: row blocks of `out`/`g`.
+fn par_matmul_a_bt(
+    pool: &ComputePool,
+    g: &[f32],
+    w: &[f32],
+    m: usize,
+    n: usize,
+    k: usize,
+    out: &mut [f32],
+) {
+    let parts = par_parts(pool, m, m * n * k);
+    if parts <= 1 {
+        return matmul_a_bt(g, w, m, n, k, out);
+    }
+    let block = (m + parts - 1) / parts;
+    let tasks: Vec<Box<dyn FnOnce() + Send + '_>> = g
+        .chunks(block * n)
+        .zip(out.chunks_mut(block * k))
+        .map(|(g_blk, out_blk)| {
+            let rows = out_blk.len() / k;
+            Box::new(move || matmul_a_bt(g_blk, w, rows, n, k, out_blk))
+                as Box<dyn FnOnce() + Send + '_>
+        })
+        .collect();
+    pool.run(tasks);
+}
+
+/// Parallel `out(k×n) += aᵀ(k×m) · g(m×n)`: the reduction over the
+/// batch dimension `m` cannot split without changing float order, so
+/// tiles own blocks of *output* rows `c` instead and each walks the
+/// full batch — the per-element accumulation order (ascending `r`,
+/// zero-skips included) is exactly the serial kernel's.
+fn par_matmul_at_b(
+    pool: &ComputePool,
+    a: &[f32],
+    g: &[f32],
+    m: usize,
+    k: usize,
+    n: usize,
+    out: &mut [f32],
+) {
+    let parts = par_parts(pool, k, m * k * n);
+    if parts <= 1 {
+        return matmul_at_b(a, g, m, k, n, out);
+    }
+    let block = (k + parts - 1) / parts;
+    let tasks: Vec<Box<dyn FnOnce() + Send + '_>> = out
+        .chunks_mut(block * n)
+        .enumerate()
+        .map(|(bi, out_blk)| {
+            Box::new(move || matmul_at_b_cols(a, g, m, k, n, bi * block, out_blk))
+                as Box<dyn FnOnce() + Send + '_>
+        })
+        .collect();
+    pool.run(tasks);
+}
+
+/// The column-range tile of [`matmul_at_b`]: accumulates output rows
+/// `c0..c0 + out_blk.len()/n` of `aᵀ·g`, walking `r` ascending with the
+/// serial kernel's `a[r,c] == 0` skip — per-element operations match
+/// the serial row-major walk bit for bit.
+fn matmul_at_b_cols(
+    a: &[f32],
+    g: &[f32],
+    m: usize,
+    k: usize,
+    n: usize,
+    c0: usize,
+    out_blk: &mut [f32],
+) {
+    for (ci, out_row) in out_blk.chunks_exact_mut(n).enumerate() {
+        let c = c0 + ci;
+        for r in 0..m {
+            let arc = a[r * k + c];
+            if arc == 0.0 {
+                continue;
+            }
+            let g_row = &g[r * n..(r + 1) * n];
+            for (o, &gv) in out_row.iter_mut().zip(g_row) {
+                *o += arc * gv;
+            }
         }
     }
 }
@@ -428,6 +643,128 @@ mod tests {
             for c in 0..k {
                 let want: f32 = (0..n).map(|j| g[r * n + j] * w[c * n + j]).sum();
                 assert!((gp[r * k + c] - want).abs() < 1e-5);
+            }
+        }
+    }
+
+    fn bits_equal(a: &[f32], b: &[f32]) -> bool {
+        a.len() == b.len() && a.iter().zip(b).all(|(x, y)| x.to_bits() == y.to_bits())
+    }
+
+    /// Deterministic pseudo-data with zeros sprinkled in, so the
+    /// kernels' sparsity skips are part of the checked equivalence.
+    fn lattice(len: usize, mul: usize, modu: usize, scale: f32) -> Vec<f32> {
+        (0..len)
+            .map(|i| {
+                let v = ((i * mul % modu) as f32 - (modu / 2) as f32) * scale;
+                if v.abs() < 2.0 * scale {
+                    0.0
+                } else {
+                    v
+                }
+            })
+            .collect()
+    }
+
+    #[test]
+    fn pooled_kernels_match_serial_bit_for_bit() {
+        // big enough that par_parts engages (m·k·n ≥ 2·PAR_MIN_MACS)
+        let (m, k, n) = (64usize, 96, 48);
+        assert!(m * k * n >= 2 * PAR_MIN_MACS);
+        let a = lattice(m * k, 37, 101, 0.013);
+        let b = lattice(k * n, 53, 89, 0.011);
+        let g = lattice(m * n, 29, 97, 0.017);
+        let w = lattice(k * n, 41, 83, 0.009);
+
+        let mut fwd = vec![0.0f32; m * n];
+        matmul(&a, &b, m, k, n, &mut fwd);
+        let mut dw = vec![0.0f32; k * n];
+        matmul_at_b(&a, &g, m, k, n, &mut dw);
+        let mut gp = vec![0.0f32; m * k];
+        matmul_a_bt(&g, &w, m, n, k, &mut gp);
+
+        for threads in [1usize, 2, 3, 8] {
+            let pool = ComputePool::new(threads);
+            let mut out = vec![0.0f32; m * n];
+            par_matmul(&pool, &a, &b, m, k, n, &mut out);
+            assert!(bits_equal(&fwd, &out), "matmul diverged at {threads} threads");
+            let mut out = vec![0.0f32; k * n];
+            par_matmul_at_b(&pool, &a, &g, m, k, n, &mut out);
+            assert!(bits_equal(&dw, &out), "matmul_at_b diverged at {threads} threads");
+            let mut out = vec![0.0f32; m * k];
+            par_matmul_a_bt(&pool, &g, &w, m, n, k, &mut out);
+            assert!(bits_equal(&gp, &out), "matmul_a_bt diverged at {threads} threads");
+        }
+    }
+
+    #[test]
+    fn below_threshold_shapes_take_the_serial_path_with_equal_results() {
+        let (m, k, n) = (5usize, 7, 3); // tiny: par_parts must say 1
+        let pool = ComputePool::new(4);
+        assert_eq!(par_parts(&pool, m, m * k * n), 1);
+        let a = lattice(m * k, 7, 31, 0.05);
+        let b = lattice(k * n, 11, 29, 0.04);
+        let mut serial = vec![0.0f32; m * n];
+        matmul(&a, &b, m, k, n, &mut serial);
+        let mut pooled = vec![0.0f32; m * n];
+        par_matmul(&pool, &a, &b, m, k, n, &mut pooled);
+        assert!(bits_equal(&serial, &pooled));
+    }
+
+    #[test]
+    fn par_parts_is_thread_count_capped_and_shape_driven() {
+        let big = 4 * PAR_MIN_MACS;
+        assert_eq!(par_parts(&ComputePool::new(1), 100, big), 1);
+        assert_eq!(par_parts(&ComputePool::new(8), 1, big), 1);
+        assert_eq!(par_parts(&ComputePool::new(8), 100, PAR_MIN_MACS), 1);
+        assert_eq!(par_parts(&ComputePool::new(8), 100, big), 4);
+        assert_eq!(par_parts(&ComputePool::new(2), 100, big), 2);
+        assert_eq!(par_parts(&ComputePool::new(8), 3, 100 * PAR_MIN_MACS), 3);
+    }
+
+    #[test]
+    fn pooled_backend_execution_is_bit_equal_across_thread_counts() {
+        // full grad_step + eval_batch through Backend::execute on a
+        // shape wide enough to engage every parallel tile
+        let layers = [96usize, 64, 4];
+        let batch = 48;
+        let mut rng_state = 0x9E3779B97F4A7C15u64;
+        let mut next = move || {
+            rng_state ^= rng_state << 13;
+            rng_state ^= rng_state >> 7;
+            rng_state ^= rng_state << 17;
+            (rng_state >> 40) as f32 / (1u64 << 24) as f32 - 0.5
+        };
+        let mut inputs = Vec::new();
+        for w in layers.windows(2) {
+            inputs.push(Tensor::f32(vec![w[0], w[1]], (0..w[0] * w[1]).map(|_| next()).collect()));
+            inputs.push(Tensor::f32(vec![w[1]], (0..w[1]).map(|_| next()).collect()));
+        }
+        inputs.push(Tensor::f32(
+            vec![batch, layers[0]],
+            (0..batch * layers[0]).map(|_| next().abs()).collect(),
+        ));
+        inputs.push(Tensor::i32(vec![batch], (0..batch).map(|i| (i % 4) as i32).collect()));
+        let mut mask = vec![1.0f32; batch];
+        mask[batch - 1] = 0.0;
+        inputs.push(Tensor::f32(vec![batch], mask));
+
+        let mut reference = NativeBackend::with_threads(1);
+        for function in [Function::GradStep, Function::EvalBatch] {
+            let c = call(function, &layers);
+            let want = reference.execute(&c, inputs.clone()).unwrap();
+            for threads in [2usize, 5] {
+                let mut be = NativeBackend::with_threads(threads);
+                let got = be.execute(&c, inputs.clone()).unwrap();
+                assert_eq!(want.len(), got.len());
+                for (x, y) in want.iter().zip(&got) {
+                    assert_eq!(x.dims, y.dims);
+                    assert!(
+                        bits_equal(x.as_f32(), y.as_f32()),
+                        "{:?} diverged at {threads} threads",
+                        function
+                    );
+                }
             }
         }
     }

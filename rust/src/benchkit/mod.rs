@@ -41,9 +41,15 @@ impl BenchResult {
         )
     }
 
-    /// Iterations per second.
+    /// Iterations per second. A degenerate mean (0, negative after a
+    /// clock hiccup, or non-finite) reports 0 instead of propagating
+    /// ±inf/NaN into downstream tables and JSON.
     pub fn throughput(&self) -> f64 {
-        1.0 / self.mean
+        if self.mean.is_finite() && self.mean > 0.0 {
+            1.0 / self.mean
+        } else {
+            0.0
+        }
     }
 
     /// Machine-readable form (seconds per iteration throughout).
@@ -388,6 +394,27 @@ mod tests {
         // round-trips through the codec
         let back = Json::parse(&j.to_pretty()).unwrap();
         assert_eq!(back.get("unit").unwrap().as_str().unwrap(), "seconds/iter");
+    }
+
+    #[test]
+    fn throughput_guards_degenerate_means() {
+        let mut r = BenchResult {
+            name: "x".into(),
+            mean: 0.0,
+            median: 0.0,
+            std: 0.0,
+            p05: 0.0,
+            p95: 0.0,
+            iters_total: 0,
+            samples: 0,
+        };
+        assert_eq!(r.throughput(), 0.0);
+        r.mean = -1.0e-9;
+        assert_eq!(r.throughput(), 0.0);
+        r.mean = f64::NAN;
+        assert_eq!(r.throughput(), 0.0);
+        r.mean = 2.0e-3;
+        assert!((r.throughput() - 500.0).abs() < 1e-9);
     }
 
     #[test]

@@ -34,7 +34,12 @@
 //! apply or barriered FedAvg-style rounds, staleness-discounted). A
 //! 1-shard replay reproduces the single-cloudlet
 //! [`crate::coordinator::Trainer`] bit-for-bit
-//! (`rust/tests/cluster_global.rs`).
+//! (`rust/tests/cluster_global.rs`). Every native engine the cluster
+//! spins up submits its matmul tiles to the one process-wide
+//! [`crate::compute::pool`], so multi-shard replays scale with the
+//! host's cores without oversubscribing them — and since the pooled
+//! kernels are bit-for-bit thread-count invariant, none of the
+//! equivalences above depend on `MEL_THREADS`.
 
 pub mod churn_planner;
 pub mod param_server;
@@ -196,7 +201,9 @@ impl Cluster {
             self.metrics.inc("departs", sr.departs);
             self.metrics.inc("resplits", sr.resplits);
         }
-        updates.sort_by(|a, b| a.1.uploaded_at.partial_cmp(&b.1.uploaded_at).unwrap());
+        // total_cmp keeps the merge panic-free even if a shard ever
+        // reports a NaN upload time (same hardening as metrics::merge_*)
+        updates.sort_by(|a, b| a.1.uploaded_at.total_cmp(&b.1.uploaded_at));
 
         let shard_updates: Vec<Vec<(f64, f64)>> =
             shards.iter().map(|s| s.metrics.series("updates_vs_simtime")).collect();

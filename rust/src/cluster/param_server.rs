@@ -50,7 +50,7 @@ use std::collections::{BTreeMap, HashMap};
 use std::sync::Arc;
 
 use crate::backend::Call;
-use crate::coordinator::{eval_batches, local_training, start_engine, ParamSet};
+use crate::coordinator::{eval_batches, local_training, start_engine_pooled, ParamSet};
 use crate::dataset::SyntheticDataset;
 use crate::metrics::Metrics;
 use crate::models::ModelSpec;
@@ -87,6 +87,13 @@ pub struct ParamServerConfig {
     pub backend: BackendChoice,
     /// Artifact directory (PJRT backends only).
     pub artifact_dir: String,
+    /// Native compute threads: `0` (default) = the process-wide shared
+    /// pool, so every shard replay in the process draws from one pool
+    /// and a many-shard cluster never oversubscribes the host; `n > 0`
+    /// = a dedicated pool for this server's engine. Never changes
+    /// numerics — pooled matmuls are bit-for-bit thread-count
+    /// invariant.
+    pub compute_threads: usize,
 }
 
 impl Default for ParamServerConfig {
@@ -101,6 +108,7 @@ impl Default for ParamServerConfig {
             drop_stragglers: false,
             backend: BackendChoice::Auto,
             artifact_dir: "artifacts".into(),
+            compute_threads: 0,
         }
     }
 }
@@ -227,7 +235,8 @@ impl ParamServer {
                 model.layers
             );
         }
-        let engine = start_engine(&model, cfg.backend, &cfg.artifact_dir)?;
+        let engine =
+            start_engine_pooled(&model, cfg.backend, &cfg.artifact_dir, cfg.compute_threads)?;
         let shards = spec
             .shards
             .iter()

@@ -1,4 +1,7 @@
-//! Learner compute-capability substrate.
+//! Learner compute-capability substrate, plus the engine-side
+//! [`pool`] worker pool that executes the native backend's parallel
+//! matmul tiles (`compute` models *simulated* learner speed; `pool`
+//! provides the *real* host parallelism the executor runs on).
 //!
 //! The paper abstracts each learner's processing as a frequency `f_k`
 //! (eq. 10: `t_k^C = d_k·C_m / f_k`). Real devices sustain only a
@@ -14,6 +17,10 @@
 //!
 //! With these, the MNIST (K=10, T=120 s) point reproduces the paper's
 //! ETA τ=3 / adaptive τ=12 exactly.
+
+pub mod pool;
+
+pub use pool::ComputePool;
 
 use crate::util::json::{Json, JsonError};
 

@@ -1,0 +1,416 @@
+//! The shared compute worker pool — the engine-side parallelism
+//! substrate behind [`crate::backend::NativeBackend`]'s row-blocked
+//! matmul tiles.
+//!
+//! Design constraints (ISSUE 5):
+//!
+//! * **No new dependencies** — a plain `Mutex<VecDeque>` + `Condvar`
+//!   job queue over `std::thread` workers.
+//! * **Scoped tasks over raw chunks** — [`ComputePool::run`] blocks the
+//!   caller until every submitted task has finished, so tasks may
+//!   borrow slices from the caller's stack (the lifetime is erased
+//!   internally; see the safety comment in `run`). A pool of `n`
+//!   threads owns exactly `n` workers and submitters *sleep* (condvar
+//!   wait, no busy work) until their tasks finish — so no matter how
+//!   many engine threads submit concurrently, at most `n` threads ever
+//!   execute compute: the no-oversubscription guarantee holds even for
+//!   multi-engine (multi-shard) runs.
+//! * **One pool per process** — [`shared`] is lazily initialized on
+//!   first use and sized by, in priority order: the CLI override
+//!   ([`set_shared_threads`], wired to `mel --compute-threads`), the
+//!   `MEL_THREADS` environment variable, and the host's available
+//!   parallelism. Every native backend (and therefore every
+//!   [`crate::runtime::Engine`], including one engine per cluster
+//!   shard) submits to this one pool, so multi-engine runs share the
+//!   machine instead of multiplying thread counts.
+//!
+//! Determinism: the pool guarantees nothing about *which* thread runs
+//! which task or in what order — callers get determinism by making
+//! tasks write disjoint outputs whose per-element computation does not
+//! depend on the partition (the native backend's kernels preserve the
+//! serial per-element operation order exactly, so results are
+//! bit-for-bit identical at any thread count).
+
+use std::collections::VecDeque;
+use std::fmt;
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex, OnceLock};
+use std::thread::JoinHandle;
+
+/// Hard ceiling on a pool's size: far above any real host, low enough
+/// that a typo'd `--compute-threads`/`MEL_THREADS` cannot exhaust the
+/// process's thread limit (and panic the spawn) before
+/// [`ComputePool::new`] even returns. Every sizing entry point clamps
+/// or validates against this.
+pub const MAX_THREADS: usize = 1024;
+
+/// A queued unit of work. The `'static` here is a lie told only inside
+/// this module: jobs are lifetime-erased scoped closures, and `run`
+/// never returns while one is alive.
+type Job = Box<dyn FnOnce() + Send + 'static>;
+
+struct Queue {
+    state: Mutex<QueueState>,
+    work_cv: Condvar,
+}
+
+struct QueueState {
+    jobs: VecDeque<Job>,
+    shutdown: bool,
+}
+
+/// Completion latch for one `run` call. Tasks signal through a
+/// [`DoneGuard`] so a panicking (or never-executed) task still counts
+/// down instead of deadlocking the submitter.
+struct Latch {
+    state: Mutex<LatchState>,
+    done_cv: Condvar,
+}
+
+struct LatchState {
+    pending: usize,
+    panicked: bool,
+}
+
+impl Latch {
+    fn new(pending: usize) -> Self {
+        Self {
+            state: Mutex::new(LatchState { pending, panicked: false }),
+            done_cv: Condvar::new(),
+        }
+    }
+
+    fn count_down(&self, panicked: bool) {
+        let mut s = self.state.lock().unwrap();
+        s.pending -= 1;
+        if panicked {
+            s.panicked = true;
+        }
+        if s.pending == 0 {
+            self.done_cv.notify_all();
+        }
+    }
+
+    /// Block until every task settled; returns whether any panicked.
+    fn wait(&self) -> bool {
+        let mut s = self.state.lock().unwrap();
+        while s.pending > 0 {
+            s = self.done_cv.wait(s).unwrap();
+        }
+        s.panicked
+    }
+}
+
+/// Counts a task as settled on drop: `completed` stays `false` through
+/// a panic (or if the job is dropped unexecuted because a worker died),
+/// which flags the run instead of hanging it.
+struct DoneGuard {
+    latch: Arc<Latch>,
+    completed: bool,
+}
+
+impl Drop for DoneGuard {
+    fn drop(&mut self) {
+        self.latch.count_down(!self.completed);
+    }
+}
+
+/// A fixed-size worker pool executing scoped jobs (see module docs).
+pub struct ComputePool {
+    queue: Arc<Queue>,
+    workers: Vec<JoinHandle<()>>,
+    threads: usize,
+}
+
+impl fmt::Debug for ComputePool {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.debug_struct("ComputePool").field("threads", &self.threads).finish()
+    }
+}
+
+impl ComputePool {
+    /// Build a pool of exactly `threads` worker threads (clamped into
+    /// `1..=`[`MAX_THREADS`]). Workers do all the executing; submitters
+    /// block idle in [`ComputePool::run`] — so `threads` bounds the
+    /// pool's total compute parallelism regardless of how many threads
+    /// submit to it.
+    pub fn new(threads: usize) -> Self {
+        let threads = threads.clamp(1, MAX_THREADS);
+        let queue = Arc::new(Queue {
+            state: Mutex::new(QueueState { jobs: VecDeque::new(), shutdown: false }),
+            work_cv: Condvar::new(),
+        });
+        let workers = (0..threads)
+            .map(|i| {
+                let q = Arc::clone(&queue);
+                std::thread::Builder::new()
+                    .name(format!("mel-compute-{i}"))
+                    .spawn(move || worker_main(&q))
+                    .expect("spawn compute worker")
+            })
+            .collect();
+        Self { queue, workers, threads }
+    }
+
+    /// The pool's worker count — the hard cap on concurrent tiles.
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+
+    /// Execute every task to completion on the pool's workers, then
+    /// return; the calling thread sleeps (condvar wait) meanwhile, so
+    /// concurrent submitters never add compute threads beyond the
+    /// pool's size. Panics (only after all tasks have settled, so no
+    /// borrow outlives its data) if any task panicked.
+    ///
+    /// Must not be called from *inside* a pool task of the same pool —
+    /// the nested submission would have the outer task block on jobs
+    /// the occupied workers cannot pick up. The native backend submits
+    /// only from the engine thread, which is never a pool worker.
+    pub fn run<'scope>(&self, tasks: Vec<Box<dyn FnOnce() + Send + 'scope>>) {
+        if tasks.is_empty() {
+            return;
+        }
+        let latch = Arc::new(Latch::new(tasks.len()));
+        {
+            let mut q = self.queue.state.lock().unwrap();
+            for task in tasks {
+                let mut guard = DoneGuard { latch: Arc::clone(&latch), completed: false };
+                let job: Box<dyn FnOnce() + Send + 'scope> = Box::new(move || {
+                    task();
+                    guard.completed = true;
+                });
+                // SAFETY: this call blocks on `latch.wait()` below until
+                // every job has been dropped (executed or not), so the
+                // `'scope` borrows inside the job strictly outlive its
+                // use; the transmute only erases the lifetime, the
+                // vtable/layout of the trait object is unchanged.
+                let job: Job = unsafe {
+                    std::mem::transmute::<Box<dyn FnOnce() + Send + 'scope>, Job>(job)
+                };
+                q.jobs.push_back(job);
+            }
+        }
+        self.queue.work_cv.notify_all();
+        if latch.wait() {
+            panic!("compute pool task panicked");
+        }
+    }
+}
+
+impl Drop for ComputePool {
+    fn drop(&mut self) {
+        self.queue.state.lock().unwrap().shutdown = true;
+        self.queue.work_cv.notify_all();
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+fn worker_main(queue: &Queue) {
+    loop {
+        let job = {
+            let mut s = queue.state.lock().unwrap();
+            loop {
+                if let Some(job) = s.jobs.pop_front() {
+                    break Some(job);
+                }
+                if s.shutdown {
+                    break None;
+                }
+                s = queue.work_cv.wait(s).unwrap();
+            }
+        };
+        match job {
+            // A panicking task must not kill the worker: the DoneGuard
+            // inside the job flags the failure to its submitter.
+            Some(job) => {
+                let _ = catch_unwind(AssertUnwindSafe(job));
+            }
+            None => return,
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// the process-wide shared pool + its sizing knob
+// ---------------------------------------------------------------------
+
+static SHARED: OnceLock<ComputePool> = OnceLock::new();
+/// CLI override; 0 = unset (fall through to `MEL_THREADS` / the host).
+static THREAD_OVERRIDE: AtomicUsize = AtomicUsize::new(0);
+
+/// The thread count the shared pool uses (or will use on first touch).
+/// Once the pool exists this reports its actual size; before that: the
+/// [`set_shared_threads`] override, else `MEL_THREADS` when it is a
+/// positive integer within [`MAX_THREADS`], else the host's available
+/// parallelism.
+pub fn configured_threads() -> usize {
+    if let Some(pool) = SHARED.get() {
+        return pool.threads();
+    }
+    let o = THREAD_OVERRIDE.load(Ordering::Relaxed);
+    if o > 0 {
+        return o.min(MAX_THREADS);
+    }
+    if let Ok(s) = std::env::var("MEL_THREADS") {
+        match s.trim().parse::<usize>() {
+            Ok(n) if (1..=MAX_THREADS).contains(&n) => return n,
+            _ => log::warn!(
+                "ignoring MEL_THREADS={s:?} (expected an integer within 1..={MAX_THREADS})"
+            ),
+        }
+    }
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+}
+
+/// Set the process-wide compute thread count (the `mel`
+/// `--compute-threads` flag). Effective only before the shared pool's
+/// first use; returns `false` — and stores nothing, so
+/// [`configured_threads`] keeps reporting the pool's real size — when
+/// the pool already exists at a different size (callers log, they
+/// don't fail: the run is still correct, just differently parallel).
+pub fn set_shared_threads(threads: usize) -> bool {
+    match SHARED.get() {
+        None => {
+            THREAD_OVERRIDE.store(threads, Ordering::Relaxed);
+            true
+        }
+        Some(pool) => pool.threads() == threads,
+    }
+}
+
+/// The lazily-initialized process-wide pool every native backend
+/// submits to. Multiple engines (e.g. one per cluster shard) share it,
+/// so concurrent training never oversubscribes the host.
+pub fn shared() -> &'static ComputePool {
+    SHARED.get_or_init(|| ComputePool::new(configured_threads()))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn new_clamps_degenerate_thread_counts() {
+        // a zero thread count must construct a working 1-worker pool,
+        // never panic (the MAX_THREADS hardening caps the top end the
+        // same way; not exercised here to avoid spawning 1024 threads
+        // in a unit test)
+        let p = ComputePool::new(0);
+        assert_eq!(p.threads(), 1);
+        let flag = Mutex::new(false);
+        p.run(vec![
+            Box::new(|| *flag.lock().unwrap() = true) as Box<dyn FnOnce() + Send + '_>,
+        ]);
+        assert!(*flag.lock().unwrap());
+        assert_eq!(ComputePool::new(3).threads(), 3);
+    }
+
+    #[test]
+    fn run_executes_scoped_tasks_over_disjoint_chunks() {
+        let pool = ComputePool::new(4);
+        let mut out = vec![0u64; 1000];
+        let tasks: Vec<Box<dyn FnOnce() + Send + '_>> = out
+            .chunks_mut(137)
+            .enumerate()
+            .map(|(i, chunk)| {
+                Box::new(move || {
+                    for (j, v) in chunk.iter_mut().enumerate() {
+                        *v = (i * 137 + j) as u64 + 1;
+                    }
+                }) as Box<dyn FnOnce() + Send + '_>
+            })
+            .collect();
+        pool.run(tasks);
+        for (i, &v) in out.iter().enumerate() {
+            assert_eq!(v, i as u64 + 1);
+        }
+        // empty runs are no-ops
+        pool.run(Vec::new());
+    }
+
+    #[test]
+    fn single_thread_pool_executes_in_submission_order() {
+        // one worker drains the FIFO queue, so task order is preserved
+        let pool = ComputePool::new(1);
+        assert_eq!(pool.threads(), 1);
+        let order = Mutex::new(Vec::new());
+        let tasks: Vec<Box<dyn FnOnce() + Send + '_>> = (0..8)
+            .map(|i| {
+                let order = &order;
+                Box::new(move || order.lock().unwrap().push(i)) as Box<dyn FnOnce() + Send + '_>
+            })
+            .collect();
+        pool.run(tasks);
+        assert_eq!(*order.lock().unwrap(), (0..8).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn task_panic_propagates_and_pool_survives() {
+        let pool = ComputePool::new(3);
+        let boom = catch_unwind(AssertUnwindSafe(|| {
+            let tasks: Vec<Box<dyn FnOnce() + Send + '_>> = (0..4)
+                .map(|i| {
+                    Box::new(move || {
+                        if i == 2 {
+                            panic!("task 2 exploded");
+                        }
+                    }) as Box<dyn FnOnce() + Send + '_>
+                })
+                .collect();
+            pool.run(tasks);
+        }));
+        assert!(boom.is_err(), "a panicking task must fail the run");
+        // the pool keeps working after a task panic
+        let mut hits = vec![false; 4];
+        let tasks: Vec<Box<dyn FnOnce() + Send + '_>> = hits
+            .iter_mut()
+            .map(|h| Box::new(move || *h = true) as Box<dyn FnOnce() + Send + '_>)
+            .collect();
+        pool.run(tasks);
+        assert!(hits.iter().all(|&h| h));
+    }
+
+    #[test]
+    fn concurrent_runs_from_many_threads_are_isolated() {
+        let pool = Arc::new(ComputePool::new(4));
+        let handles: Vec<_> = (0..6)
+            .map(|t| {
+                let pool = Arc::clone(&pool);
+                std::thread::spawn(move || {
+                    let mut out = vec![0usize; 256];
+                    let tasks: Vec<Box<dyn FnOnce() + Send + '_>> = out
+                        .chunks_mut(64)
+                        .map(|chunk| {
+                            Box::new(move || {
+                                for v in chunk.iter_mut() {
+                                    *v = t + 1;
+                                }
+                            })
+                                as Box<dyn FnOnce() + Send + '_>
+                        })
+                        .collect();
+                    pool.run(tasks);
+                    assert!(out.iter().all(|&v| v == t + 1));
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+    }
+
+    #[test]
+    fn shared_pool_is_one_per_process() {
+        let a = shared();
+        let b = shared();
+        assert!(std::ptr::eq(a, b));
+        assert!(a.threads() >= 1);
+        assert!(configured_threads() >= 1);
+        // overriding to the pool's existing size is always accepted
+        assert!(set_shared_threads(a.threads()));
+    }
+}

@@ -12,7 +12,10 @@
 //! (`rust/tests/cluster_global.rs`): the two paths cannot drift apart,
 //! because they *are* one path.
 
+use std::sync::Arc;
+
 use crate::backend::Call;
+use crate::compute::ComputePool;
 use crate::coordinator::ParamSet;
 use crate::dataset::SyntheticDataset;
 use crate::models::ModelSpec;
@@ -24,19 +27,56 @@ use crate::runtime::{BackendChoice, Engine, EngineHandle, Manifest, Tensor};
 /// exact layer widths), the hermetic native executor otherwise. A
 /// forced PJRT engine with non-covering artifacts errors truthfully
 /// instead of asserting later in chunk planning.
+///
+/// The native engine submits its matmul tiles to the process-wide
+/// shared compute pool (`MEL_THREADS` / `--compute-threads`), so many
+/// engines — the cluster spins up one per shard replay — share the
+/// host's cores. [`start_engine_pooled`] pins a dedicated pool size.
 pub fn start_engine(
     model: &ModelSpec,
     choice: BackendChoice,
     artifact_dir: &str,
+) -> anyhow::Result<Engine> {
+    start_engine_pooled(model, choice, artifact_dir, 0)
+}
+
+/// [`start_engine`] with an explicit native compute-thread count:
+/// `0` = the shared pool (the default everywhere), `n > 0` = a pool of
+/// exactly `n` threads dedicated to this engine. Results are
+/// bit-for-bit identical either way — the knob trades isolation against
+/// sharing, never numerics.
+pub fn start_engine_pooled(
+    model: &ModelSpec,
+    choice: BackendChoice,
+    artifact_dir: &str,
+    compute_threads: usize,
 ) -> anyhow::Result<Engine> {
     let covered = |man: &Manifest| {
         ["grad_step", "eval_batch"]
             .iter()
             .all(|f| !man.buckets_for(&model.name, f, &model.layers).is_empty())
     };
+    // dedicated pools are built lazily, only where a native backend
+    // actually materializes — a PJRT pick must not spawn-and-discard
+    // worker threads
     let engine = match choice {
-        BackendChoice::Auto => Engine::start_auto(artifact_dir, &covered),
-        c => Engine::start_with(c, artifact_dir)?,
+        BackendChoice::Auto => Engine::start_auto_pooled(
+            artifact_dir,
+            &covered,
+            (compute_threads > 0).then_some(compute_threads),
+        ),
+        BackendChoice::Native if compute_threads > 0 => {
+            Engine::start_native_with_pool(Arc::new(ComputePool::new(compute_threads)))
+        }
+        c => {
+            if compute_threads > 0 {
+                log::warn!(
+                    "compute_threads={compute_threads} applies to the native backend only; \
+                     ignored for the pjrt engine"
+                );
+            }
+            Engine::start_with(c, artifact_dir)?
+        }
     };
     if let Some(man) = engine.manifest() {
         // only reachable on a forced --backend pjrt
@@ -269,5 +309,25 @@ mod tests {
         let engine =
             start_engine(&ModelSpec::pedestrian(), BackendChoice::Auto, "artifacts").unwrap();
         assert_eq!(engine.kind(), crate::runtime::BackendKind::Native);
+    }
+
+    #[test]
+    fn start_engine_pooled_pins_a_dedicated_pool() {
+        if crate::runtime::pjrt_available() {
+            return;
+        }
+        // both a forced-native and an auto engine accept the knob, and
+        // the pinned engine still executes calls end to end
+        for choice in [BackendChoice::Native, BackendChoice::Auto] {
+            let engine =
+                start_engine_pooled(&ModelSpec::pedestrian(), choice, "artifacts", 2).unwrap();
+            assert_eq!(engine.kind(), crate::runtime::BackendKind::Native);
+            let layers = [3usize, 4, 2];
+            let call = Call::new(Function::GradStep, "toy", &layers);
+            let inputs = crate::testkit::zero_param_mlp_inputs(&layers, 5, 5);
+            let out = engine.handle().call(&call, inputs).unwrap();
+            assert_eq!(out.len(), 6);
+            assert_eq!(out[5].scalar(), 5.0);
+        }
     }
 }

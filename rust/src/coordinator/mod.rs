@@ -49,7 +49,7 @@ use crate::runtime::{BackendChoice, BackendKind, Engine};
 use crate::scenario::Scenario;
 use crate::util::rng::Pcg64;
 
-pub use apply::{chunk_plan, eval_batches, local_training, start_engine};
+pub use apply::{chunk_plan, eval_batches, local_training, start_engine, start_engine_pooled};
 pub use params::ParamSet;
 
 /// Training-run configuration.
@@ -79,6 +79,11 @@ pub struct TrainConfig {
     pub reallocate_each_cycle: bool,
     /// Learner threads for the dispatch fan-out.
     pub dispatch_threads: usize,
+    /// Native-backend compute threads: `0` (default) = the process-wide
+    /// shared pool (`MEL_THREADS` / `--compute-threads`); `n > 0` = a
+    /// dedicated pool of exactly `n` threads for this trainer's engine.
+    /// Bit-for-bit identical results either way.
+    pub compute_threads: usize,
     /// Per-cycle log-normal shadowing sigma (dB); 0 = static channels.
     pub shadow_sigma_db: f64,
     /// Per-cycle Rayleigh fading redraws.
@@ -103,6 +108,7 @@ impl Default for TrainConfig {
             backend: BackendChoice::Auto,
             reallocate_each_cycle: false,
             dispatch_threads: 4,
+            compute_threads: 0,
             shadow_sigma_db: 0.0,
             rayleigh: false,
             drop_stragglers: false,
@@ -150,7 +156,12 @@ impl Trainer {
         // trainer executes) — `start_engine` decides coverage *before*
         // spawning an engine, so auto selection never constructs an XLA
         // client it would immediately discard.
-        let engine = apply::start_engine(&scenario.model, cfg.backend, &cfg.artifact_dir)?;
+        let engine = apply::start_engine_pooled(
+            &scenario.model,
+            cfg.backend,
+            &cfg.artifact_dir,
+            cfg.compute_threads,
+        )?;
         let train_set = SyntheticDataset::full(&scenario.dataset, cfg.seed ^ 0xDA7A);
         let mut eval_spec = scenario.dataset.clone();
         eval_spec.total_samples = cfg.eval_samples;

@@ -76,7 +76,7 @@ pub mod prelude {
     pub use crate::backend::{Backend, Call, Function, NativeBackend};
     pub use crate::channel::{Link, PathLoss};
     pub use crate::cluster::{Cluster, ClusterConfig, ClusterReport, ShardReport};
-    pub use crate::compute::ComputeProfile;
+    pub use crate::compute::{ComputePool, ComputeProfile};
     pub use crate::coordinator::{Orchestrator, TrainConfig, Trainer};
     pub use crate::dataset::DatasetSpec;
     pub use crate::learner::Learner;

@@ -24,6 +24,28 @@ use mel::util::table::{fnum, Table};
 fn main() {
     let args = Args::parse();
     logging::init(args.opt_str("log"));
+    // `--compute-threads N` sizes the process-wide native compute pool
+    // (overriding MEL_THREADS) and must be applied before any engine
+    // first touches the pool — i.e. right here.
+    match args.try_get_u64("compute-threads") {
+        Ok(None) => {}
+        Ok(Some(n)) => {
+            let max = mel::compute::pool::MAX_THREADS as u64;
+            if !(1..=max).contains(&n) {
+                eprintln!(
+                    "mel: usage error: --compute-threads must be within 1..={max}, got {n}"
+                );
+                std::process::exit(2);
+            }
+            if !mel::compute::pool::set_shared_threads(n as usize) {
+                log::warn!("compute pool already initialized; --compute-threads {n} ignored");
+            }
+        }
+        Err(e) => {
+            eprintln!("mel: usage error: {e}");
+            std::process::exit(2);
+        }
+    }
     let code = match args.positional(0) {
         Some("solve") => cmd_solve(&args),
         Some("figure") => cmd_figure(&args),
@@ -56,7 +78,8 @@ fn print_help() {
         Command {
             name: "train",
             about: "run real MEL training (hermetic native backend, or PJRT when available)",
-            usage: "--task pedestrian --k 4 --t 30 --cycles 20 --d 2048 --backend auto --hidden 16",
+            usage: "--task pedestrian --k 4 --t 30 --cycles 20 --d 2048 --backend auto \
+                    --hidden 16 --compute-threads 4 --precision-bits 32",
         },
         Command {
             name: "bench",
@@ -109,6 +132,15 @@ fn build_scenario(args: &Args) -> Scenario {
     if args.has_flag("rayleigh") {
         cfg.channel.rayleigh = true;
     }
+    // `--precision-bits` overrides the task's P_m bit-width; the paper's
+    // C¹_k/C⁰_k timing constants scale with it, so out-of-range values
+    // are usage errors (exit 2), never silent truncation.
+    let bits = args.get_u64("precision-bits", cfg.dataset.precision_bits as u64);
+    if !(1..=64).contains(&bits) {
+        eprintln!("mel: usage error: --precision-bits must be within 1..=64, got {bits}");
+        std::process::exit(2);
+    }
+    cfg.dataset.precision_bits = bits as u32;
     Scenario::random_cloudlet(&cfg, seed)
 }
 
@@ -378,6 +410,8 @@ fn cmd_train(args: &Args) -> i32 {
         backend,
         reallocate_each_cycle: args.has_flag("reallocate"),
         dispatch_threads: args.get_usize("threads", 4),
+        // 0 = the shared pool, whose size --compute-threads already set
+        compute_threads: 0,
         shadow_sigma_db: args.get_f64("shadow-db", 0.0),
         rayleigh: args.has_flag("rayleigh"),
         drop_stragglers: args.has_flag("drop-stragglers"),
@@ -456,6 +490,10 @@ fn cmd_info() -> i32 {
         "paper: Mohammad & Sorour, “Adaptive Task Allocation for Mobile Edge Learning” (2018)"
     );
     println!("policies: {:?}", Policy::all().map(|p| p.label()));
+    println!(
+        "compute pool: {} thread(s) (MEL_THREADS / --compute-threads)",
+        mel::compute::pool::configured_threads()
+    );
     println!(
         "backends: native (always available), pjrt ({})",
         if mel::runtime::pjrt_available() {

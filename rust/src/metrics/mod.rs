@@ -7,19 +7,45 @@ use std::collections::BTreeMap;
 use std::sync::Mutex;
 
 use crate::util::json::Json;
+use crate::util::rng::{Pcg64, Rng};
 use crate::util::stats::{percentile, Welford};
 
+/// Retained-sample cap of a [`Summary`]: percentiles are estimated from
+/// a fixed-capacity reservoir (Vitter's Algorithm R over a private,
+/// deterministically seeded stream), so metrics memory stays O(1) over
+/// arbitrarily long `Cluster` runs instead of growing with every
+/// `observe`. Count/mean/max stay exact via the Welford accumulator.
+const SUMMARY_RESERVOIR_CAP: usize = 4096;
+
 /// A histogram/summary over pushed samples.
-#[derive(Debug, Clone, Default)]
+#[derive(Debug, Clone)]
 pub struct Summary {
     w: Welford,
     samples: Vec<f64>,
+    rng: Pcg64,
+}
+
+impl Default for Summary {
+    fn default() -> Self {
+        // fixed seed: summaries are deterministic across runs
+        Self { w: Welford::default(), samples: Vec::new(), rng: Pcg64::new(0x5EED, 0x5A17) }
+    }
 }
 
 impl Summary {
     pub fn push(&mut self, x: f64) {
         self.w.push(x);
-        self.samples.push(x);
+        let seen = self.w.count();
+        if self.samples.len() < SUMMARY_RESERVOIR_CAP {
+            self.samples.push(x);
+        } else {
+            // Algorithm R: the i-th sample replaces a random slot with
+            // probability cap/i, keeping every slot a uniform draw
+            let j = self.rng.below(seen);
+            if (j as usize) < SUMMARY_RESERVOIR_CAP {
+                self.samples[j as usize] = x;
+            }
+        }
     }
 
     pub fn count(&self) -> u64 {
@@ -210,7 +236,11 @@ pub fn merge_cumulative(series: &[Vec<(f64, f64)>]) -> Vec<(f64, f64)> {
             prev = total;
         }
     }
-    deltas.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+    // total_cmp: a NaN timestamp from a degenerate scenario sorts (to
+    // the end) instead of panicking the whole cluster merge; the delta
+    // tiebreak makes the merge invariant under shard order even when
+    // shards share an event instant.
+    deltas.sort_by(|a, b| a.0.total_cmp(&b.0).then(a.1.total_cmp(&b.1)));
     let mut total = 0.0;
     deltas
         .into_iter()
@@ -223,9 +253,12 @@ pub fn merge_cumulative(series: &[Vec<(f64, f64)>]) -> Vec<(f64, f64)> {
 
 /// Merge **point** per-source series (independent samples keyed by
 /// time, like `staleness_vs_simtime`) into one time-ordered series.
+/// NaN-safe (`total_cmp`) and invariant under source order — tied
+/// timestamps break on the value, so permuting the shard list cannot
+/// change the merged series.
 pub fn merge_sorted(series: &[Vec<(f64, f64)>]) -> Vec<(f64, f64)> {
     let mut out: Vec<(f64, f64)> = series.iter().flatten().copied().collect();
-    out.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+    out.sort_by(|a, b| a.0.total_cmp(&b.0).then(a.1.total_cmp(&b.1)));
     out
 }
 
@@ -299,6 +332,89 @@ mod tests {
     fn merge_sorted_orders_points() {
         let merged = merge_sorted(&[vec![(3.0, 7.0), (5.0, 1.0)], vec![(1.0, 2.0), (4.0, 0.0)]]);
         assert_eq!(merged.iter().map(|p| p.0).collect::<Vec<_>>(), vec![1.0, 3.0, 4.0, 5.0]);
+    }
+
+    #[test]
+    fn merges_survive_nan_timestamps() {
+        // regression: a single NaN timestamp from a degenerate scenario
+        // used to panic the whole cluster merge via partial_cmp().unwrap()
+        let poisoned = vec![(1.0, 1.0), (f64::NAN, 2.0), (3.0, 3.0)];
+        let clean = vec![(2.0, 4.0)];
+        let merged = merge_cumulative(&[poisoned.clone(), clean.clone()]);
+        assert_eq!(merged.len(), 4);
+        // total_cmp sorts the NaN after every real time
+        assert!(merged.last().unwrap().0.is_nan());
+        assert!(merged[..3].iter().all(|p| !p.0.is_nan()));
+        let sorted = merge_sorted(&[poisoned, clean]);
+        assert_eq!(sorted.len(), 4);
+        assert!(sorted.last().unwrap().0.is_nan());
+    }
+
+    #[test]
+    fn tied_timestamps_merge_invariant_under_shard_permutation() {
+        // three shards with events at the same instants: permuting the
+        // shard list must not change either merged series
+        let a = vec![(1.0, 2.0), (5.0, 4.0)];
+        let b = vec![(1.0, 1.0), (5.0, 6.0)];
+        let c = vec![(1.0, 3.0), (5.0, 5.0)];
+        let base_cum = merge_cumulative(&[a.clone(), b.clone(), c.clone()]);
+        let base_sorted = merge_sorted(&[a.clone(), b.clone(), c.clone()]);
+        let perms: [[&Vec<(f64, f64)>; 3]; 5] = [
+            [&a, &c, &b],
+            [&b, &a, &c],
+            [&b, &c, &a],
+            [&c, &a, &b],
+            [&c, &b, &a],
+        ];
+        for p in perms {
+            let series: Vec<Vec<(f64, f64)>> = p.iter().map(|s| (*s).clone()).collect();
+            assert_eq!(merge_cumulative(&series), base_cum, "cumulative diverged");
+            assert_eq!(merge_sorted(&series), base_sorted, "sorted diverged");
+        }
+        // cumulative semantics preserved at the ties: final totals sum
+        assert_eq!(base_cum.last().unwrap().1, 4.0 + 6.0 + 5.0);
+    }
+
+    #[test]
+    fn summary_reservoir_is_bounded_with_sane_percentiles() {
+        let m = Metrics::new();
+        let n = 100_000usize;
+        for i in 0..n {
+            m.observe("lat", i as f64);
+        }
+        let g = m.inner.lock().unwrap();
+        let s = g.summaries.get("lat").unwrap();
+        // bounded memory — the whole point of the reservoir
+        assert_eq!(s.samples.len(), SUMMARY_RESERVOIR_CAP);
+        // exact moments survive
+        assert_eq!(s.count(), n as u64);
+        assert!((s.mean() - (n as f64 - 1.0) / 2.0).abs() < 1e-6);
+        assert_eq!(s.max(), n as f64 - 1.0);
+        // percentile estimates stay within tolerance of the truth
+        let p50 = s.p(50.0) / n as f64;
+        let p95 = s.p(95.0) / n as f64;
+        assert!((p50 - 0.5).abs() < 0.05, "p50 {p50}");
+        assert!((p95 - 0.95).abs() < 0.05, "p95 {p95}");
+        // below the cap the summary is exact, as before
+        let mut small = Summary::default();
+        for i in 0..100 {
+            small.push(i as f64);
+        }
+        assert_eq!(small.samples.len(), 100);
+        assert!((small.p(50.0) - 49.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn summary_reservoir_is_deterministic() {
+        let mk = || {
+            let mut s = Summary::default();
+            for i in 0..(3 * SUMMARY_RESERVOIR_CAP) {
+                s.push((i as f64).sin());
+            }
+            s
+        };
+        let (a, b) = (mk(), mk());
+        assert_eq!(a.samples, b.samples);
     }
 
     #[test]

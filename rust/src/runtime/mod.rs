@@ -14,16 +14,24 @@
 //! backend is *constructed on* the engine thread and never leaves it;
 //! the rest of the system talks through the handle. PJRT's CPU backend
 //! parallelizes each execution internally, so serializing *submissions*
-//! does not serialize compute; the native backend is single-threaded
-//! per call (learner fan-out still overlaps with coordinator work).
+//! does not serialize compute; the native backend executes each call's
+//! matmuls as row-blocked tiles on the process-wide
+//! [`crate::compute::pool`] worker pool (`MEL_THREADS` /
+//! `--compute-threads`). Because every native engine submits to that
+//! *one* pool by default, a multi-engine run (e.g. one engine per
+//! cluster shard) shares the host's cores instead of oversubscribing
+//! them; [`Engine::start_native_with_pool`] pins an engine to a
+//! dedicated pool (determinism tests, bench thread sweeps).
 
 pub mod manifest;
 pub mod tensor;
 
 use std::path::PathBuf;
 use std::sync::mpsc;
+use std::sync::Arc;
 
 use crate::backend::{Backend, Call, NativeBackend};
+use crate::compute::ComputePool;
 
 pub use manifest::{ArtifactMeta, Manifest};
 pub use tensor::{Tensor, TensorData};
@@ -151,6 +159,19 @@ impl Engine {
         artifact_dir: impl Into<PathBuf>,
         usable: impl Fn(&Manifest) -> bool,
     ) -> Self {
+        Self::start_auto_pooled(artifact_dir, usable, None)
+    }
+
+    /// [`Engine::start_auto`] with an explicit compute-thread count for
+    /// the native fallback (`None` = the process-wide shared pool). The
+    /// dedicated pool is constructed only *after* auto-selection lands
+    /// on the native backend, so a PJRT pick never spawns worker
+    /// threads just to discard them.
+    pub fn start_auto_pooled(
+        artifact_dir: impl Into<PathBuf>,
+        usable: impl Fn(&Manifest) -> bool,
+        native_threads: Option<usize>,
+    ) -> Self {
         let dir = artifact_dir.into();
         if cfg!(feature = "pjrt") {
             match Manifest::load(&dir) {
@@ -166,13 +187,27 @@ impl Engine {
                 }
             }
         }
-        Self::start_native()
+        match native_threads {
+            Some(n) => Self::start_native_with_pool(Arc::new(ComputePool::new(n))),
+            None => Self::start_native(),
+        }
     }
 
-    /// Start the hermetic pure-Rust backend (never fails).
+    /// Start the hermetic pure-Rust backend (never fails) on the
+    /// process-wide shared compute pool.
     pub fn start_native() -> Self {
         spawn(BackendKind::Native, None, || {
             Ok(Box::new(NativeBackend::new()) as Box<dyn Backend>)
+        })
+        .expect("native backend construction cannot fail")
+    }
+
+    /// Start the native backend on a dedicated compute pool instead of
+    /// the shared one — the engine's matmul tiles then use exactly that
+    /// pool's threads (thread-sweep benches, determinism tests).
+    pub fn start_native_with_pool(pool: Arc<ComputePool>) -> Self {
+        spawn(BackendKind::Native, None, move || {
+            Ok(Box::new(NativeBackend::with_pool(pool)) as Box<dyn Backend>)
         })
         .expect("native backend construction cannot fail")
     }
@@ -560,6 +595,30 @@ mod tests {
         h.warm_call(&call).unwrap();
         let err = h.execute("pedestrian_grad_step_b64", vec![]).unwrap_err();
         assert!(err.to_string().contains("native"), "{err}");
+    }
+
+    #[test]
+    fn pooled_native_engine_matches_shared_pool_engine() {
+        // a dedicated 3-thread pool and the shared pool must produce
+        // bit-identical results — the engine-level face of the native
+        // backend's thread-count determinism guarantee
+        let layers = [48usize, 64, 2];
+        let call = Call::new(Function::GradStep, "toy", &layers);
+        let inputs = crate::testkit::zero_param_mlp_inputs(&layers, 96, 90);
+        let shared = Engine::start_native();
+        let pooled = Engine::start_native_with_pool(Arc::new(ComputePool::new(3)));
+        assert_eq!(pooled.kind(), BackendKind::Native);
+        let a = shared.handle().call(&call, inputs.clone()).unwrap();
+        let b = pooled.handle().call(&call, inputs).unwrap();
+        assert_eq!(a.len(), b.len());
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.dims, y.dims);
+            assert!(x
+                .as_f32()
+                .iter()
+                .zip(y.as_f32())
+                .all(|(p, q)| p.to_bits() == q.to_bits()));
+        }
     }
 
     #[test]

@@ -74,7 +74,9 @@ pub struct ChurnTrace {
 
 impl ChurnTrace {
     pub fn new(mut events: Vec<ChurnEvent>) -> Self {
-        events.sort_by(|a, b| a.at_s.partial_cmp(&b.at_s).unwrap());
+        // total_cmp: a NaN time in a hand-written trace must not panic
+        // the loader (it sorts last and the horizon check drops it)
+        events.sort_by(|a, b| a.at_s.total_cmp(&b.at_s));
         Self { events }
     }
 
@@ -96,7 +98,7 @@ impl ChurnTrace {
                 .events
                 .iter()
                 .filter(|e| e.learner == learner)
-                .min_by(|a, b| a.at_s.partial_cmp(&b.at_s).unwrap());
+                .min_by(|a, b| a.at_s.total_cmp(&b.at_s));
             if let Some(ev) = first {
                 member[learner] = !ev.join;
             }

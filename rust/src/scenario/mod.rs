@@ -75,6 +75,39 @@ impl AsyncSpec {
     }
 }
 
+/// Serialize a [`DatasetSpec`] (shared by the scenario and cloudlet
+/// JSON codecs).
+fn dataset_to_json(d: &DatasetSpec) -> Json {
+    Json::obj(vec![
+        ("name", Json::Str(d.name.clone())),
+        ("total_samples", Json::Num(d.total_samples as f64)),
+        ("features", Json::Num(d.features as f64)),
+        ("classes", Json::Num(d.classes as f64)),
+        ("precision_bits", Json::Num(d.precision_bits as f64)),
+    ])
+}
+
+/// Load a [`DatasetSpec`], validating `precision_bits` into `1..=64`:
+/// the paper's per-sample timing constants `C¹_k`/`C⁰_k` scale with the
+/// bit-width `P_m`, so an out-of-range value (which the old
+/// `as_u64()? as u32` silently truncated) corrupts every allocation the
+/// scenario solves. Load-time error, not a mid-run surprise.
+fn dataset_from_json(dj: &Json) -> Result<DatasetSpec, JsonError> {
+    let bits = dj.get("precision_bits")?.as_u64()?;
+    if !(1..=64).contains(&bits) {
+        return Err(JsonError::Access(format!(
+            "precision_bits must be within 1..=64 (the P_m bit-width), got {bits}"
+        )));
+    }
+    Ok(DatasetSpec {
+        name: dj.get("name")?.as_str()?.to_string(),
+        total_samples: dj.get("total_samples")?.as_usize()?,
+        features: dj.get("features")?.as_usize()?,
+        classes: dj.get("classes")?.as_usize()?,
+        precision_bits: bits as u32,
+    })
+}
+
 /// Generator configuration for a random cloudlet.
 #[derive(Debug, Clone)]
 pub struct CloudletConfig {
@@ -133,35 +166,19 @@ impl CloudletConfig {
             ("laptop_fraction", Json::Num(self.laptop_fraction)),
             ("channel", self.channel.to_json()),
             ("model", self.model.to_json()),
-            (
-                "dataset",
-                Json::obj(vec![
-                    ("name", Json::Str(self.dataset.name.clone())),
-                    ("total_samples", Json::Num(self.dataset.total_samples as f64)),
-                    ("features", Json::Num(self.dataset.features as f64)),
-                    ("classes", Json::Num(self.dataset.classes as f64)),
-                    ("precision_bits", Json::Num(self.dataset.precision_bits as f64)),
-                ]),
-            ),
+            ("dataset", dataset_to_json(&self.dataset)),
             ("async", self.async_mode.to_json()),
         ])
     }
 
     pub fn from_json(v: &Json) -> Result<Self, JsonError> {
-        let dj = v.get("dataset")?;
         Ok(Self {
             num_learners: v.get("num_learners")?.as_usize()?,
             radius_m: v.get("radius_m")?.as_f64()?,
             laptop_fraction: v.get("laptop_fraction")?.as_f64()?,
             channel: ChannelSpec::from_json(v.get("channel")?)?,
             model: ModelSpec::from_json(v.get("model")?)?,
-            dataset: DatasetSpec {
-                name: dj.get("name")?.as_str()?.to_string(),
-                total_samples: dj.get("total_samples")?.as_usize()?,
-                features: dj.get("features")?.as_usize()?,
-                classes: dj.get("classes")?.as_usize()?,
-                precision_bits: dj.get("precision_bits")?.as_u64()? as u32,
-            },
+            dataset: dataset_from_json(v.get("dataset")?)?,
             async_mode: match v.opt("async") {
                 Some(a) => AsyncSpec::from_json(a)?,
                 None => AsyncSpec::default(),
@@ -233,16 +250,7 @@ impl Scenario {
         Json::obj(vec![
             ("seed", Json::Num(self.seed as f64)),
             ("model", self.model.to_json()),
-            (
-                "dataset",
-                Json::obj(vec![
-                    ("name", Json::Str(self.dataset.name.clone())),
-                    ("total_samples", Json::Num(self.dataset.total_samples as f64)),
-                    ("features", Json::Num(self.dataset.features as f64)),
-                    ("classes", Json::Num(self.dataset.classes as f64)),
-                    ("precision_bits", Json::Num(self.dataset.precision_bits as f64)),
-                ]),
-            ),
+            ("dataset", dataset_to_json(&self.dataset)),
             (
                 "learners",
                 Json::Arr(
@@ -268,14 +276,7 @@ impl Scenario {
 
     pub fn from_json(v: &Json) -> Result<Self, JsonError> {
         let model = ModelSpec::from_json(v.get("model")?)?;
-        let dj = v.get("dataset")?;
-        let dataset = DatasetSpec {
-            name: dj.get("name")?.as_str()?.to_string(),
-            total_samples: dj.get("total_samples")?.as_usize()?,
-            features: dj.get("features")?.as_usize()?,
-            classes: dj.get("classes")?.as_usize()?,
-            precision_bits: dj.get("precision_bits")?.as_u64()? as u32,
-        };
+        let dataset = dataset_from_json(v.get("dataset")?)?;
         let mut learners = Vec::new();
         for lj in v.get("learners")?.as_arr()? {
             let mut link = crate::channel::Link::at_distance(lj.get("distance_m")?.as_f64()?);
@@ -387,6 +388,42 @@ mod tests {
         };
         let back2 = CloudletConfig::from_json(&legacy).unwrap();
         assert!(!back2.async_mode.enabled);
+    }
+
+    #[test]
+    fn out_of_range_precision_bits_is_a_load_error_not_truncation() {
+        // regression: 2^40 used to silently truncate through `as u32`,
+        // corrupting the C¹_k/C⁰_k timing constants the solvers consume
+        for bad in [0u64, 65, 4096, 1 << 40] {
+            let mut cj = CloudletConfig::pedestrian(4).to_json();
+            if let Json::Obj(o) = &mut cj {
+                if let Some(Json::Obj(d)) = o.get_mut("dataset") {
+                    d.insert("precision_bits".into(), Json::Num(bad as f64));
+                }
+            }
+            let err = CloudletConfig::from_json(&cj).unwrap_err();
+            assert!(format!("{err}").contains("1..=64"), "bits={bad}: {err}");
+
+            let mut sj = Scenario::random_cloudlet(&CloudletConfig::mnist(3), 1).to_json();
+            if let Some(Json::Obj(d)) = match &mut sj {
+                Json::Obj(o) => o.get_mut("dataset"),
+                _ => None,
+            } {
+                d.insert("precision_bits".into(), Json::Num(bad as f64));
+            }
+            assert!(Scenario::from_json(&sj).is_err(), "bits={bad}");
+        }
+        // the full legal range loads
+        for good in [1u64, 8, 32, 64] {
+            let mut cj = CloudletConfig::pedestrian(4).to_json();
+            if let Json::Obj(o) = &mut cj {
+                if let Some(Json::Obj(d)) = o.get_mut("dataset") {
+                    d.insert("precision_bits".into(), Json::Num(good as f64));
+                }
+            }
+            let back = CloudletConfig::from_json(&cj).unwrap();
+            assert_eq!(back.dataset.precision_bits as u64, good);
+        }
     }
 
     #[test]

@@ -80,7 +80,9 @@ pub fn percentile(xs: &[f64], q: f64) -> f64 {
     assert!(!xs.is_empty(), "percentile of empty sample");
     assert!((0.0..=100.0).contains(&q));
     let mut v = xs.to_vec();
-    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    // total_cmp: NaN samples sort high deterministically instead of
+    // panicking mid-report (part of the ISSUE 5 NaN hardening sweep)
+    v.sort_by(f64::total_cmp);
     let pos = q / 100.0 * (v.len() - 1) as f64;
     let lo = pos.floor() as usize;
     let hi = pos.ceil() as usize;

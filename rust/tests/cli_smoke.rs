@@ -142,6 +142,57 @@ fn malformed_numeric_flags_are_usage_errors_not_panics() {
 }
 
 #[test]
+fn precision_bits_flag_validates_range() {
+    // out-of-range P_m bit-widths are usage errors (exit 2), never the
+    // silent `as u32` truncation that used to corrupt C¹_k/C⁰_k
+    for bad in ["0", "65", "4096"] {
+        let (_, stderr, ok) = mel(&["solve", "--k", "4", "--precision-bits", bad]);
+        assert!(!ok, "--precision-bits {bad} must fail");
+        assert!(stderr.contains("1..=64"), "stderr: {stderr}");
+        assert!(!stderr.contains("panicked"), "must not panic: {stderr}");
+    }
+    // malformed values fall through the shared numeric-flag handling
+    let (_, stderr, ok) = mel(&["solve", "--k", "4", "--precision-bits", "eight"]);
+    assert!(!ok);
+    assert!(stderr.contains("--precision-bits expects an integer"), "stderr: {stderr}");
+    // an in-range override threads into the generated scenario
+    let (stdout, stderr, ok) =
+        mel(&["scenario", "--task", "mnist", "--k", "2", "--precision-bits", "16"]);
+    assert!(ok, "stderr: {stderr}");
+    let v = mel::util::json::Json::parse(&stdout).expect("valid JSON");
+    assert_eq!(
+        v.get("dataset").unwrap().get("precision_bits").unwrap().as_u64().unwrap(),
+        16
+    );
+}
+
+#[test]
+fn compute_threads_flag_sizes_the_pool() {
+    // a pinned pool trains end to end through the native backend
+    let (stdout, stderr, ok) = mel(&[
+        "train", "--task", "pedestrian", "--k", "2", "--t", "2", "--d", "96", "--cycles", "1",
+        "--hidden", "8", "--eval-samples", "48", "--seed", "7", "--compute-threads", "2",
+    ]);
+    assert!(ok, "stderr: {stderr}");
+    assert!(stdout.contains("done: 1 cycles"), "{stdout}");
+    // zero, absurd, and malformed thread counts are usage errors (exit
+    // 2), never a thread-spawn panic
+    for bad in ["0", "4000000000"] {
+        let (_, stderr, ok) = mel(&["info", "--compute-threads", bad]);
+        assert!(!ok, "--compute-threads {bad} must fail");
+        assert!(stderr.contains("--compute-threads must be within 1..="), "stderr: {stderr}");
+        assert!(!stderr.contains("panicked"), "must not panic: {stderr}");
+    }
+    let (_, stderr, ok) = mel(&["info", "--compute-threads", "many"]);
+    assert!(!ok);
+    assert!(stderr.contains("--compute-threads expects an integer"), "stderr: {stderr}");
+    // the info report surfaces the configured pool size
+    let (stdout, _, ok) = mel(&["info", "--compute-threads", "3"]);
+    assert!(ok);
+    assert!(stdout.contains("compute pool: 3 thread(s)"), "{stdout}");
+}
+
+#[test]
 fn figure_fig_cluster_renders() {
     let (stdout, stderr, ok) = mel(&["figure", "figCluster", "--seed", "42"]);
     assert!(ok, "stderr: {stderr}");
