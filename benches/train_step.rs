@@ -1,12 +1,16 @@
 //! Native training-step bench: fwd+bwd+SGD latency of the hermetic
 //! pure-Rust executor over a (batch × hidden-width) sweep, the
-//! engine-thread dispatch overhead on top of a direct backend call, and
-//! the compute-pool **thread sweep** (ISSUE 5): the same wide-layer
-//! grad step at 1/2/4/8 pool threads, with the speedup over the serial
-//! path reported informatively (multi-core hosts should beat serial;
-//! the sweep never fails the bench — CI gates on the stored baseline
-//! per bench name, and thread-count entries are compared only against
-//! their own history).
+//! **quantized precision sweep** (ISSUE 6: `precision_bits ∈ {8,16,32}`
+//! — int8 GEMMs vs grid fake-quant vs f32 on the same shape), the
+//! **fused-vs-unfused step comparison** (one `fused_step` call against
+//! `grad_step` + accumulate + `sgd_apply`), the engine-thread dispatch
+//! overhead on top of a direct backend call, and the compute-pool
+//! **thread sweep** (ISSUE 5): the same wide-layer grad step at 1/2/4/8
+//! pool threads, with the speedup over the serial path reported
+//! informatively (multi-core hosts should beat serial; the sweep never
+//! fails the bench — CI gates on the stored baseline per bench name,
+//! and thread-count entries are compared only against their own
+//! history).
 //! Prints the effective FLOP rate next to the paper's modeled learner
 //! rates so the simulated compute profiles stay honest. Emits
 //! `results/BENCH_train_step.json` via `benchkit::Suite`.
@@ -62,6 +66,34 @@ fn main() {
         }
     }
 
+    group("quantized (P_m-bit) grad_step: precision_bits x batch sweep");
+    {
+        let mut mean32 = 0.0f64;
+        let mut mean8 = 0.0f64;
+        for &bits in &[32u32, 16, 8] {
+            for &batch in &[64usize, 256] {
+                let (call, ins) = inputs(300, batch);
+                let call = call.with_precision(bits);
+                let r = suite.run(&b, &format!("grad_step bits={bits} h=300 b={batch}"), || {
+                    be.execute(&call, ins.clone()).unwrap()[5].scalar()
+                });
+                if batch == 256 {
+                    if bits == 32 {
+                        mean32 = r.mean;
+                    } else if bits == 8 {
+                        mean8 = r.mean;
+                    }
+                }
+            }
+        }
+        if mean32 > 0.0 && mean8 > 0.0 {
+            println!(
+                "    → int8 (P_m=8) step is {:.2}x the f32 rate at h=300 b=256",
+                mean32 / mean8
+            );
+        }
+    }
+
     group("full SGD step (grad + apply) at paper shape h=300 b=64");
     {
         let (call, ins) = inputs(300, 64);
@@ -74,6 +106,43 @@ fn main() {
             params.sgd_apply(&grads, 0.05, out[5].scalar());
             params.tensors[0].as_f32()[0]
         });
+    }
+
+    group("fused fwd+bwd+SGD vs unfused grad_step + sgd_apply, h=300 b=256");
+    {
+        let (call, ins) = inputs(300, 256);
+        // each closure replays exactly one local_training iteration of
+        // its path (params clone included), so the ratio is the real
+        // per-iteration win
+        let mut params = ParamSet::init(&[648, 300, 2], 2);
+        let unfused = suite.run(&b, "unfused step h=300 b=256", || {
+            let mut v = params.tensors.clone();
+            v.extend(ins[ins.len() - 3..].iter().cloned());
+            let out = be.execute(&call, v).unwrap();
+            let np = params.tensors.len();
+            let mut acc = params.zeros_like();
+            for (a, g) in acc.iter_mut().zip(&out[..np]) {
+                a.axpy(1.0, g);
+            }
+            params.sgd_apply(&acc, 0.05, out[np + 1].scalar());
+            params.tensors[0].as_f32()[0]
+        });
+        let fcall = Call::new(Function::FusedStep, "pedestrian", &[648, 300, 2]);
+        let mut params = ParamSet::init(&[648, 300, 2], 2);
+        let fused = suite.run(&b, "fused step h=300 b=256", || {
+            let mut v = params.tensors.clone();
+            v.extend(ins[ins.len() - 3..].iter().cloned());
+            v.push(Tensor::scalar_f32(0.05));
+            let out = be.execute(&fcall, v).unwrap();
+            for (p, np) in params.tensors.iter_mut().zip(out) {
+                *p = np;
+            }
+            params.tensors[0].as_f32()[0]
+        });
+        println!(
+            "    → fused step at {:.2}x the unfused rate",
+            unfused.mean / fused.mean
+        );
     }
 
     group("compute-pool thread sweep: wide-layer grad_step h=512 b=256");

@@ -46,15 +46,24 @@ cargo build --release
 echo "==> cargo test -q"
 cargo test -q
 
-# ---- thread-count determinism gate (ISSUE 5) ----------------------------
+# ---- thread-count determinism gate (ISSUE 5 + 6) ------------------------
 # The native backend's pooled matmuls must be bit-for-bit identical at
 # any pool size. The backend_native determinism tests compare pinned
 # 1/2/4/8-thread pools in-process; running them under MEL_THREADS=1 and
 # MEL_THREADS=4 additionally exercises the env-sized *shared* pool at
-# both extremes.
+# both extremes. ISSUE 6 extends the gate to the blocked-kernel layer
+# (kernels-vs-naive-oracle bit equality, MC tile-split regression), the
+# fused fwd+bwd+SGD step (bit-equal to the unfused path), and the
+# quantized P_m paths (deterministic, grid-bounded divergence from f32).
 for t in 1 4; do
     echo "==> determinism tests at MEL_THREADS=$t"
     MEL_THREADS="$t" cargo test -q --test backend_native determinis
+    echo "==> kernel bit-equality tests at MEL_THREADS=$t"
+    MEL_THREADS="$t" cargo test -q --lib compute::kernels
+    echo "==> fused-step equivalence tests at MEL_THREADS=$t"
+    MEL_THREADS="$t" cargo test -q --test backend_native fused
+    echo "==> quantized-path tests at MEL_THREADS=$t"
+    MEL_THREADS="$t" cargo test -q --test backend_native quantized
 done
 
 # ---- perf-trajectory gate self-test -------------------------------------
@@ -97,7 +106,10 @@ if [ "$CI_BENCH" = "1" ]; then
     # regressions beyond the threshold fail CI. Refresh deliberately with:
     #   cp results/BENCH_<suite>.json <baseline>
     # (cluster_cycle keeps its historical BASELINE.json name; train_step
-    # joined the gate in ISSUE 5 as BASELINE_train_step.json.)
+    # joined the gate in ISSUE 5 as BASELINE_train_step.json. The diff is
+    # per bench name, so the fused/quantized rows ISSUE 6 added to
+    # train_step are gated with --fail-on-regress automatically once a
+    # baseline containing them is stored.)
     BENCH_REGRESS_THRESHOLD="${BENCH_REGRESS_THRESHOLD:-0.5}"
     gate_suite() {
         suite="$1"

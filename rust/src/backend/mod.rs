@@ -22,6 +22,17 @@
 //!   masked *sum* of per-sample losses, so chunk gradients accumulate
 //!   exactly and the caller normalizes once by the total weight).
 //! * `eval_batch` same inputs → `[loss_sum, correct_sum, weight_sum]`.
+//! * `fused_step` inputs `[params…, x, y, mask, lr]` → outputs
+//!   `[w0', b0', …, loss_sum, weight_sum]`: forward + backward + the
+//!   SGD update `p' = p − lr/max(weight,1)·dp` in one call, bit-for-bit
+//!   the unfused accumulate-then-apply arithmetic. Native-only fast
+//!   path for single-chunk τ loops — no AOT artifact exists for it, so
+//!   the PJRT path keeps issuing `grad_step`.
+//!
+//! [`Call::precision_bits`] carries the model's `P_m` (paper eq. 2–4)
+//! into execution: below 32 the native backend runs the real quantized
+//! path (int8 GEMMs at ≤ 8 bits, grid-snapped f32 at 9..=31) instead of
+//! only pricing the precision in the timing model.
 
 pub mod native;
 
@@ -34,6 +45,9 @@ use crate::runtime::Tensor;
 pub enum Function {
     /// Masked sum-loss gradients + `(loss_sum, weight_sum)`.
     GradStep,
+    /// Forward + backward + in-call SGD: `[params…, x, y, mask, lr]` →
+    /// `[params'…, loss_sum, weight_sum]`.
+    FusedStep,
     /// Masked `(loss_sum, correct_sum, weight_sum)`.
     EvalBatch,
 }
@@ -43,6 +57,7 @@ impl Function {
     pub fn name(&self) -> &'static str {
         match self {
             Function::GradStep => "grad_step",
+            Function::FusedStep => "fused_step",
             Function::EvalBatch => "eval_batch",
         }
     }
@@ -56,22 +71,40 @@ pub struct Call {
     pub function: Function,
     pub arch: String,
     pub layers: Vec<usize>,
+    /// The model's `P_m` bit-width; 32 (the default) and above execute
+    /// plain f32, lower widths take the native quantized path.
+    pub precision_bits: u32,
 }
 
 impl Call {
     pub fn new(function: Function, arch: impl Into<String>, layers: &[usize]) -> Self {
         assert!(layers.len() >= 2, "a call needs at least input+output layers");
-        Self { function, arch: arch.into(), layers: layers.to_vec() }
+        Self { function, arch: arch.into(), layers: layers.to_vec(), precision_bits: 32 }
     }
 
-    /// Grad-step call for a model spec.
+    /// Same call at a `P_m` bit-width (builder style).
+    pub fn with_precision(mut self, bits: u32) -> Self {
+        assert!((1..=64).contains(&bits), "precision_bits must be within 1..=64, got {bits}");
+        self.precision_bits = bits;
+        self
+    }
+
+    /// Grad-step call for a model spec (carrying its `P_m`).
     pub fn grad_step(model: &crate::models::ModelSpec) -> Self {
         Self::new(Function::GradStep, model.name.clone(), &model.layers)
+            .with_precision(model.model_precision_bits.clamp(1, 64))
     }
 
-    /// Eval-batch call for a model spec.
+    /// Fused-step call for a model spec (carrying its `P_m`).
+    pub fn fused_step(model: &crate::models::ModelSpec) -> Self {
+        Self::new(Function::FusedStep, model.name.clone(), &model.layers)
+            .with_precision(model.model_precision_bits.clamp(1, 64))
+    }
+
+    /// Eval-batch call for a model spec (carrying its `P_m`).
     pub fn eval_batch(model: &crate::models::ModelSpec) -> Self {
         Self::new(Function::EvalBatch, model.name.clone(), &model.layers)
+            .with_precision(model.model_precision_bits.clamp(1, 64))
     }
 
     /// Number of parameter tensors the call's inputs start with.
@@ -136,6 +169,26 @@ mod tests {
         let e = Call::eval_batch(&ModelSpec::mnist());
         assert_eq!(e.function.name(), "eval_batch");
         assert_eq!(e.param_tensors(), 8);
+    }
+
+    #[test]
+    fn calls_carry_model_precision_bits() {
+        let mut m = ModelSpec::pedestrian();
+        assert_eq!(Call::grad_step(&m).precision_bits, m.model_precision_bits);
+        m.model_precision_bits = 8;
+        assert_eq!(Call::grad_step(&m).precision_bits, 8);
+        assert_eq!(Call::fused_step(&m).precision_bits, 8);
+        assert_eq!(Call::fused_step(&m).function.name(), "fused_step");
+        assert_eq!(Call::eval_batch(&m).precision_bits, 8);
+        let c = Call::new(Function::GradStep, "x", &[4, 2]);
+        assert_eq!(c.precision_bits, 32);
+        assert_eq!(c.with_precision(16).precision_bits, 16);
+    }
+
+    #[test]
+    #[should_panic(expected = "precision_bits")]
+    fn with_precision_rejects_out_of_range() {
+        let _ = Call::new(Function::GradStep, "x", &[4, 2]).with_precision(0);
     }
 
     #[test]

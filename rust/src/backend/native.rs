@@ -6,36 +6,47 @@
 //! gradients accumulate exactly and padding rows with `mask = 0` are
 //! perfectly neutral), and `eval_batch` counts `argmax` correctness with
 //! first-index tie-breaking (XLA's convention). No allocation-solver or
-//! orchestrator code is involved — this is pure dense linear algebra on
+//! orchestrator code is involved — this is dense linear algebra on
 //! [`Tensor`]s, dependency-free so it builds and runs on every box.
 //!
-//! All inner loops run over contiguous row slices (iterator zips, no
-//! per-element bounds checks in the hot path), which keeps even debug
-//! builds fast enough for the integration tests.
+//! **Kernels.** The contractions run on the cache-blocked, packed GEMM
+//! microkernels of [`crate::compute::kernels`] (ISSUE 6), as row-blocked
+//! tiles on the [`crate::compute::pool`] worker pool. Every tile owns a
+//! disjoint MC-aligned block of *output* rows and replays the naive
+//! serial oracle's per-element operation sequence exactly (same addends,
+//! same order, same zero-skips), and the eval/loss sums reduce serially
+//! in fixed row order — so f32 results are **bit-for-bit identical at
+//! any thread count** and vs the retained naive oracles. That is what
+//! keeps the trainer ≡ 1-shard cluster ≡ ParamServer replay
+//! equivalences alive under parallel execution (regression-tested in
+//! `rust/tests/backend_native.rs`).
 //!
-//! **Parallelism & determinism.** The hot contractions (`x·W` forward,
-//! `δ·Wᵀ` backward, `xᵀ·δ` gradient accumulation) and the per-row eval
-//! pass run as row-blocked tiles on the [`crate::compute::pool`] worker
-//! pool. Every tile owns a disjoint block of *output* rows and replays
-//! the serial kernel's per-element operation sequence exactly (same
-//! addends, same order, same zero-skips), and the eval/loss sums reduce
-//! serially over a per-row buffer in fixed row order — so the results
-//! are **bit-for-bit identical at any thread count**, including the
-//! pre-pool serial path. That is what keeps the trainer ≡ 1-shard
-//! cluster ≡ ParamServer replay equivalences alive under parallel
-//! execution (regression-tested in `rust/tests/backend_native.rs`).
+//! **Fused step.** [`Function::FusedStep`] runs forward + backward +
+//! SGD in one call: the gradients are applied to the incoming params
+//! (`p' = p − lr/weight·dp`, replicating the unfused
+//! accumulate-then-[`sgd_apply`] arithmetic bit for bit) while the
+//! activations are still cache-hot, cutting the zero/accumulate/apply
+//! memory passes and the per-iteration gradient round trip out of
+//! `local_training`.
+//!
+//! **Quantized (P_m-bit) execution.** [`Call::precision_bits`] below 32
+//! changes the *real* compute, not just the paper's timing model (eqs.
+//! 2–4 price each iteration in `P_m`): `P_m ≤ 8` quantizes
+//! weights/activations/cotangents to int8 on a deterministic
+//! round-to-nearest grid and runs real int8 GEMMs with exact i32
+//! accumulation (¼ the memory traffic per MAC); `9..=31` snaps operands
+//! to the same grid in f32 (fake-quantize) and runs the blocked f32
+//! kernels over them. Both paths are deterministic at any thread count;
+//! divergence from f32 is bounded by the grid step (property-tested).
+//!
+//! [`sgd_apply`]: crate::coordinator::ParamSet::sgd_apply
 
 use std::sync::Arc;
 
 use super::{Backend, Call, Function};
+use crate::compute::kernels::{self, QuantBuf};
 use crate::compute::pool::{self, ComputePool};
 use crate::runtime::{Tensor, TensorData};
-
-/// Minimum multiply-accumulates in one parallel tile: below twice this
-/// the fork/join overhead beats the win and the serial kernel runs
-/// instead. Shape-dependent only (never thread-count-dependent), so the
-/// serial/parallel decision cannot make results depend on the pool.
-const PAR_MIN_MACS: usize = 64 * 1024;
 
 /// The dependency-free executor. Stateless between calls — every call
 /// re-derives the graph from `call.layers`, so one backend serves any
@@ -84,9 +95,46 @@ impl Backend for NativeBackend {
         let net = Network::unpack(call, &inputs)?;
         match call.function {
             Function::GradStep => net.grad_step(self.pool()),
+            Function::FusedStep => net.fused_step(self.pool()),
             Function::EvalBatch => net.eval_batch(self.pool()),
         }
     }
+}
+
+/// How a `P_m` bit-width maps onto real execution.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ExecMode {
+    /// `P_m ≥ 32`: plain f32 — bit-for-bit the pre-quantization path.
+    F32,
+    /// `9 ≤ P_m ≤ 31`: f32 compute over grid-snapped operands.
+    FakeQuant(u32),
+    /// `P_m ≤ 8`: real int8 GEMMs with exact i32 accumulation.
+    Int8(u32),
+}
+
+impl ExecMode {
+    pub fn for_bits(bits: u32) -> Self {
+        if bits >= 32 {
+            ExecMode::F32
+        } else if bits > 8 {
+            ExecMode::FakeQuant(bits)
+        } else {
+            ExecMode::Int8(bits)
+        }
+    }
+}
+
+/// Everything the backward pass reuses from a forward pass.
+struct Forward {
+    /// f32 post-activations; `acts[i]` is the (dequantized) output of
+    /// layer `i`, `acts.last()` the logits.
+    acts: Vec<Vec<f32>>,
+    /// Int8 mode: quantized layer inputs (`q_in[0]` = x) and weights.
+    q_in: Vec<QuantBuf>,
+    q_w: Vec<QuantBuf>,
+    /// FakeQuant mode: grid-snapped x and weights.
+    fx: Vec<f32>,
+    fw: Vec<Vec<f32>>,
 }
 
 /// Validated view over one call's inputs.
@@ -98,18 +146,30 @@ struct Network<'a> {
     y: &'a [i32],
     mask: &'a [f32],
     batch: usize,
+    mode: ExecMode,
+    /// Learning rate of a fused step (`None` for grad/eval calls).
+    lr: Option<f32>,
 }
 
 impl<'a> Network<'a> {
     fn unpack(call: &'a Call, inputs: &'a [Tensor]) -> Result<Self, String> {
         let layers = &call.layers[..];
         let np = call.param_tensors();
-        if inputs.len() != np + 3 {
+        let fused = call.function == Function::FusedStep;
+        let extra = if fused { 4 } else { 3 };
+        if inputs.len() != np + extra {
             return Err(format!(
-                "{} over layers {layers:?} needs {} inputs (params + x,y,mask), got {}",
+                "{} over layers {layers:?} needs {} inputs (params + x,y,mask{}), got {}",
                 call.function.name(),
-                np + 3,
+                np + extra,
+                if fused { ",lr" } else { "" },
                 inputs.len()
+            ));
+        }
+        if !(1..=64).contains(&call.precision_bits) {
+            return Err(format!(
+                "precision_bits must be within 1..=64, got {}",
+                call.precision_bits
             ));
         }
         let mut params = Vec::with_capacity(np / 2);
@@ -137,6 +197,19 @@ impl<'a> Network<'a> {
         if mask.dims != vec![batch] {
             return Err(format!("mask dims {:?}, expected [{batch}]", mask.dims));
         }
+        let lr = if fused {
+            let t = &inputs[np + 3];
+            let v = as_f32(t, "lr")?;
+            if v.len() != 1 {
+                return Err(format!("lr must be a scalar, got dims {:?}", t.dims));
+            }
+            if !v[0].is_finite() {
+                return Err(format!("lr must be finite, got {}", v[0]));
+            }
+            Some(v[0])
+        } else {
+            None
+        };
         let classes = *layers.last().unwrap();
         let y = match &y.data {
             TensorData::I32(v) => v.as_slice(),
@@ -152,19 +225,29 @@ impl<'a> Network<'a> {
             y,
             mask: as_f32(mask, "mask")?,
             batch,
+            mode: ExecMode::for_bits(call.precision_bits),
+            lr,
         })
     }
 
-    /// Forward pass; returns every post-activation (`acts[i]` is the
-    /// input to layer `i`, `acts.last()` holds the logits).
-    fn forward(&self, pool: &ComputePool) -> Vec<Vec<f32>> {
+    /// Forward pass under the call's [`ExecMode`].
+    fn forward(&self, pool: &ComputePool) -> Forward {
+        match self.mode {
+            ExecMode::F32 => self.forward_f32(pool),
+            ExecMode::FakeQuant(bits) => self.forward_fake(pool, bits),
+            ExecMode::Int8(bits) => self.forward_int8(pool, bits),
+        }
+    }
+
+    /// Plain f32 forward — the bit-pinned PR 5 semantics.
+    fn forward_f32(&self, pool: &ComputePool) -> Forward {
         let n_layers = self.layers.len() - 1;
         let mut acts: Vec<Vec<f32>> = Vec::with_capacity(n_layers);
         let mut cur: &[f32] = self.x;
         for (i, (w, b)) in self.params.iter().enumerate() {
             let (rows, cols) = (self.layers[i], self.layers[i + 1]);
             let mut z = vec![0.0f32; self.batch * cols];
-            par_matmul(pool, cur, w, self.batch, rows, cols, &mut z);
+            kernels::par_matmul(pool, cur, w, self.batch, rows, cols, &mut z);
             for row in z.chunks_exact_mut(cols) {
                 for (v, &bias) in row.iter_mut().zip(*b) {
                     *v += bias;
@@ -180,7 +263,89 @@ impl<'a> Network<'a> {
             acts.push(z);
             cur = acts.last().unwrap();
         }
-        acts
+        Forward { acts, q_in: Vec::new(), q_w: Vec::new(), fx: Vec::new(), fw: Vec::new() }
+    }
+
+    /// `9..=31`-bit forward: every operand (x, W, b, hidden
+    /// activations) snapped to its deterministic grid, f32 kernels in
+    /// between. Logits stay unsnapped — they feed the loss directly.
+    fn forward_fake(&self, pool: &ComputePool, bits: u32) -> Forward {
+        let n_layers = self.layers.len() - 1;
+        let mut fx = self.x.to_vec();
+        kernels::fake_quantize(&mut fx, bits);
+        let fw: Vec<Vec<f32>> = self
+            .params
+            .iter()
+            .map(|(w, _)| {
+                let mut c = w.to_vec();
+                kernels::fake_quantize(&mut c, bits);
+                c
+            })
+            .collect();
+        let mut acts: Vec<Vec<f32>> = Vec::with_capacity(n_layers);
+        let mut cur: &[f32] = &fx;
+        for (i, (_, b)) in self.params.iter().enumerate() {
+            let (rows, cols) = (self.layers[i], self.layers[i + 1]);
+            let mut fb = b.to_vec();
+            kernels::fake_quantize(&mut fb, bits);
+            let mut z = vec![0.0f32; self.batch * cols];
+            kernels::par_matmul(pool, cur, &fw[i], self.batch, rows, cols, &mut z);
+            for row in z.chunks_exact_mut(cols) {
+                for (v, &bias) in row.iter_mut().zip(&fb) {
+                    *v += bias;
+                }
+            }
+            if i + 1 < n_layers {
+                for v in &mut z {
+                    if *v < 0.0 {
+                        *v = 0.0;
+                    }
+                }
+                kernels::fake_quantize(&mut z, bits);
+            }
+            acts.push(z);
+            cur = acts.last().unwrap();
+        }
+        Forward { acts, q_in: Vec::new(), q_w: Vec::new(), fx, fw }
+    }
+
+    /// `≤ 8`-bit forward: real int8 GEMMs. Each layer input and weight
+    /// matrix is quantized once per call; the i32 accumulators are
+    /// dequantized through f64 (exact for any i32) back to f32 logits.
+    fn forward_int8(&self, pool: &ComputePool, bits: u32) -> Forward {
+        let n_layers = self.layers.len() - 1;
+        let mut acts: Vec<Vec<f32>> = Vec::with_capacity(n_layers);
+        let mut q_in: Vec<QuantBuf> = Vec::with_capacity(n_layers);
+        let mut q_w: Vec<QuantBuf> = Vec::with_capacity(n_layers);
+        q_in.push(kernels::quantize_i8(self.x, bits));
+        for (i, (w, b)) in self.params.iter().enumerate() {
+            let (rows, cols) = (self.layers[i], self.layers[i + 1]);
+            q_w.push(kernels::quantize_i8(w, bits));
+            let qa = &q_in[i];
+            let qw = q_w.last().unwrap();
+            let mut acc = vec![0i32; self.batch * cols];
+            kernels::par_matmul_q8(pool, &qa.q, &qw.q, self.batch, rows, cols, &mut acc);
+            let s = qa.scale as f64 * qw.scale as f64;
+            // biases live on the same P_m grid
+            let mut fb = b.to_vec();
+            kernels::fake_quantize(&mut fb, bits);
+            let mut z = vec![0.0f32; acc.len()];
+            for (z_row, acc_row) in z.chunks_exact_mut(cols).zip(acc.chunks_exact(cols)) {
+                for ((v, &av), &bias) in z_row.iter_mut().zip(acc_row).zip(&fb) {
+                    *v = (av as f64 * s) as f32 + bias;
+                }
+            }
+            if i + 1 < n_layers {
+                for v in &mut z {
+                    if *v < 0.0 {
+                        *v = 0.0;
+                    }
+                }
+                q_in.push(kernels::quantize_i8(&z, bits));
+            }
+            acts.push(z);
+        }
+        Forward { acts, q_in, q_w, fx: Vec::new(), fw: Vec::new() }
     }
 
     /// Masked sum softmax-CE over the logits plus d(loss)/d(logits).
@@ -207,6 +372,98 @@ impl<'a> Network<'a> {
         (loss, g)
     }
 
+    /// Backward pass over a completed forward: per-layer `(dw, db)` in
+    /// layer order plus the masked loss sum. The bias gradient (cheap
+    /// column sums) always uses the f32 cotangent; the two GEMMs run
+    /// int8/grid-snapped under the quantized modes, with the upstream
+    /// cotangent masked by relu'(z) from the stored activations.
+    fn backward(&self, pool: &ComputePool, fwd: &Forward) -> (Vec<(Vec<f32>, Vec<f32>)>, f64) {
+        let n_layers = self.layers.len() - 1;
+        let (loss, mut g) = self.loss_and_dlogits(fwd.acts.last().unwrap());
+        let mut grads: Vec<(Vec<f32>, Vec<f32>)> = Vec::with_capacity(n_layers);
+        for i in (0..n_layers).rev() {
+            let (rows, cols) = (self.layers[i], self.layers[i + 1]);
+            let mut db = vec![0.0f32; cols];
+            for g_row in g.chunks_exact(cols) {
+                for (d, &gv) in db.iter_mut().zip(g_row) {
+                    *d += gv;
+                }
+            }
+            let mut dw = vec![0.0f32; rows * cols];
+            match self.mode {
+                ExecMode::F32 => {
+                    let a_in: &[f32] = if i == 0 { self.x } else { &fwd.acts[i - 1] };
+                    // dw = a_inᵀ · g
+                    kernels::par_matmul_at_b(pool, a_in, &g, self.batch, rows, cols, &mut dw);
+                    if i > 0 {
+                        // upstream cotangent: (g · wᵀ) ⊙ relu'(z);
+                        // post-relu activations are > 0 exactly where z > 0
+                        let w = self.params[i].0;
+                        let mut gp = vec![0.0f32; self.batch * rows];
+                        kernels::par_matmul_a_bt(pool, &g, w, self.batch, cols, rows, &mut gp);
+                        for (gv, &av) in gp.iter_mut().zip(a_in) {
+                            if av <= 0.0 {
+                                *gv = 0.0;
+                            }
+                        }
+                        g = gp;
+                    }
+                }
+                ExecMode::FakeQuant(bits) => {
+                    let a_in: &[f32] = if i == 0 { &fwd.fx } else { &fwd.acts[i - 1] };
+                    let mut gq = g.clone();
+                    kernels::fake_quantize(&mut gq, bits);
+                    kernels::par_matmul_at_b(pool, a_in, &gq, self.batch, rows, cols, &mut dw);
+                    if i > 0 {
+                        let w = &fwd.fw[i];
+                        let mut gp = vec![0.0f32; self.batch * rows];
+                        kernels::par_matmul_a_bt(pool, &gq, w, self.batch, cols, rows, &mut gp);
+                        for (gv, &av) in gp.iter_mut().zip(a_in) {
+                            if av <= 0.0 {
+                                *gv = 0.0;
+                            }
+                        }
+                        g = gp;
+                    }
+                }
+                ExecMode::Int8(bits) => {
+                    let qg = kernels::quantize_i8(&g, bits);
+                    let qa = &fwd.q_in[i];
+                    let mut acc = vec![0i32; rows * cols];
+                    kernels::par_matmul_at_b_q8(
+                        pool, &qa.q, &qg.q, self.batch, rows, cols, &mut acc,
+                    );
+                    let s = qa.scale as f64 * qg.scale as f64;
+                    for (d, &av) in dw.iter_mut().zip(&acc) {
+                        *d = (av as f64 * s) as f32;
+                    }
+                    if i > 0 {
+                        let qw = &fwd.q_w[i];
+                        let mut accp = vec![0i32; self.batch * rows];
+                        kernels::par_matmul_a_bt_q8(
+                            pool, &qg.q, &qw.q, self.batch, cols, rows, &mut accp,
+                        );
+                        let sp = qg.scale as f64 * qw.scale as f64;
+                        let mut gp = vec![0.0f32; accp.len()];
+                        for (d, &av) in gp.iter_mut().zip(&accp) {
+                            *d = (av as f64 * sp) as f32;
+                        }
+                        let a_in = &fwd.acts[i - 1];
+                        for (gv, &av) in gp.iter_mut().zip(a_in.iter()) {
+                            if av <= 0.0 {
+                                *gv = 0.0;
+                            }
+                        }
+                        g = gp;
+                    }
+                }
+            }
+            grads.push((dw, db));
+        }
+        grads.reverse();
+        (grads, loss)
+    }
+
     /// Per-row loss and argmax of the evaluation pass, computed as
     /// row-blocked pool tiles into disjoint per-row buffers, then
     /// reduced serially in fixed row order — a deterministic
@@ -221,7 +478,7 @@ impl<'a> Network<'a> {
         // so a default 512-row × 10-class eval genuinely engages the
         // pool rather than inheriting a matmul-calibrated threshold it
         // could never reach
-        let parts = par_parts(pool, self.batch, self.batch * classes * 64);
+        let parts = kernels::par_parts(pool, self.batch, self.batch * classes * 64);
         if parts <= 1 {
             self.fill_eval_rows(logits, classes, 0, &mut row_loss, &mut row_pred);
         } else {
@@ -290,56 +547,53 @@ impl<'a> Network<'a> {
 
     /// `[dw0, db0, …, loss_sum, weight_sum]`.
     fn grad_step(&self, pool: &ComputePool) -> Result<Vec<Tensor>, String> {
-        let acts = self.forward(pool);
-        let n_layers = self.layers.len() - 1;
-        let (loss, mut g) = self.loss_and_dlogits(acts.last().unwrap());
-
-        let mut grads: Vec<(Tensor, Tensor)> = Vec::with_capacity(n_layers);
-        for i in (0..n_layers).rev() {
+        let fwd = self.forward(pool);
+        let (grads, loss) = self.backward(pool, &fwd);
+        let mut out = Vec::with_capacity(2 * grads.len() + 2);
+        for (i, (dw, db)) in grads.into_iter().enumerate() {
             let (rows, cols) = (self.layers[i], self.layers[i + 1]);
-            let a_in: &[f32] = if i == 0 { self.x } else { &acts[i - 1] };
-            // dw = a_inᵀ · g
-            let mut dw = vec![0.0f32; rows * cols];
-            par_matmul_at_b(pool, a_in, &g, self.batch, rows, cols, &mut dw);
-            // db = column sums of g
-            let mut db = vec![0.0f32; cols];
-            for g_row in g.chunks_exact(cols) {
-                for (d, &gv) in db.iter_mut().zip(g_row) {
-                    *d += gv;
-                }
-            }
-            if i > 0 {
-                // upstream cotangent: (g · wᵀ) ⊙ relu'(z); post-relu
-                // activations are > 0 exactly where z > 0.
-                let w = self.params[i].0;
-                let mut gp = vec![0.0f32; self.batch * rows];
-                par_matmul_a_bt(pool, &g, w, self.batch, cols, rows, &mut gp);
-                for (gv, &av) in gp.iter_mut().zip(a_in) {
-                    if av <= 0.0 {
-                        *gv = 0.0;
-                    }
-                }
-                g = gp;
-            }
-            grads.push((
-                Tensor::f32(vec![rows, cols], dw),
-                Tensor::f32(vec![cols], db),
-            ));
-        }
-        let mut out = Vec::with_capacity(2 * n_layers + 2);
-        for (dw, db) in grads.into_iter().rev() {
-            out.push(dw);
-            out.push(db);
+            out.push(Tensor::f32(vec![rows, cols], dw));
+            out.push(Tensor::f32(vec![cols], db));
         }
         out.push(Tensor::scalar_f32(loss as f32));
         out.push(Tensor::scalar_f32(self.weight_sum()));
         Ok(out)
     }
 
+    /// `[w0', b0', …, loss_sum, weight_sum]` — forward + backward +
+    /// SGD in one call. Replicates the unfused path's arithmetic
+    /// *exactly*: the accumulator init `0.0 + dp` (what
+    /// `Tensor::axpy(1.0, g)` leaves in a zeroed accumulator, -0.0
+    /// included) and `ParamSet::sgd_apply`'s `p + (-lr/max(weight,1))·acc`
+    /// — so a fused iteration is bit-for-bit an unfused one while the
+    /// grads never leave the backend and the zero/accumulate/apply
+    /// passes disappear.
+    fn fused_step(&self, pool: &ComputePool) -> Result<Vec<Tensor>, String> {
+        let lr = self.lr.expect("fused_step call carries lr");
+        let fwd = self.forward(pool);
+        let (grads, loss) = self.backward(pool, &fwd);
+        let weight = self.weight_sum();
+        let scale = -lr / weight.max(1.0);
+        let mut out = Vec::with_capacity(2 * grads.len() + 2);
+        for (i, (dw, db)) in grads.into_iter().enumerate() {
+            let (rows, cols) = (self.layers[i], self.layers[i + 1]);
+            let (w, b) = self.params[i];
+            let new_w: Vec<f32> =
+                w.iter().zip(&dw).map(|(&pv, &dv)| pv + scale * (0.0 + dv)).collect();
+            let new_b: Vec<f32> =
+                b.iter().zip(&db).map(|(&pv, &dv)| pv + scale * (0.0 + dv)).collect();
+            out.push(Tensor::f32(vec![rows, cols], new_w));
+            out.push(Tensor::f32(vec![cols], new_b));
+        }
+        out.push(Tensor::scalar_f32(loss as f32));
+        out.push(Tensor::scalar_f32(weight));
+        Ok(out)
+    }
+
     /// `[loss_sum, correct_sum, weight_sum]`.
     fn eval_batch(&self, pool: &ComputePool) -> Result<Vec<Tensor>, String> {
-        let acts = self.forward(pool);
-        let logits = acts.last().unwrap();
+        let fwd = self.forward(pool);
+        let logits = fwd.acts.last().unwrap();
         let (loss, correct) = self.eval_rows(pool, logits);
         Ok(vec![
             Tensor::scalar_f32(loss as f32),
@@ -360,184 +614,6 @@ fn as_f32<'a>(t: &'a Tensor, what: &str) -> Result<&'a [f32], String> {
     match &t.data {
         TensorData::F32(v) => Ok(v),
         _ => Err(format!("{what} must be float32")),
-    }
-}
-
-/// `out(m×n) += a(m×k) · b(k×n)`, row-major; ikj order so the inner loop
-/// streams contiguous rows of both `b` and `out`.
-fn matmul(a: &[f32], b: &[f32], m: usize, k: usize, n: usize, out: &mut [f32]) {
-    for i in 0..m {
-        let a_row = &a[i * k..(i + 1) * k];
-        let out_row = &mut out[i * n..(i + 1) * n];
-        for (kk, &aik) in a_row.iter().enumerate() {
-            if aik == 0.0 {
-                continue; // relu activations are often sparse
-            }
-            let b_row = &b[kk * n..(kk + 1) * n];
-            for (o, &bv) in out_row.iter_mut().zip(b_row) {
-                *o += aik * bv;
-            }
-        }
-    }
-}
-
-/// `out(k×n) += aᵀ(k×m) · g(m×n)` for row-major `a(m×k)`, `g(m×n)` —
-/// the weight-gradient contraction, streamed row by row.
-fn matmul_at_b(a: &[f32], g: &[f32], m: usize, k: usize, n: usize, out: &mut [f32]) {
-    for r in 0..m {
-        let a_row = &a[r * k..(r + 1) * k];
-        let g_row = &g[r * n..(r + 1) * n];
-        for (c, &arc) in a_row.iter().enumerate() {
-            if arc == 0.0 {
-                continue;
-            }
-            let out_row = &mut out[c * n..(c + 1) * n];
-            for (o, &gv) in out_row.iter_mut().zip(g_row) {
-                *o += arc * gv;
-            }
-        }
-    }
-}
-
-/// `out(m×k) += g(m×n) · wᵀ(n×k)` for row-major `w(k×n)` — the input
-/// cotangent; each entry is a dot product of two contiguous rows.
-fn matmul_a_bt(g: &[f32], w: &[f32], m: usize, n: usize, k: usize, out: &mut [f32]) {
-    for r in 0..m {
-        let g_row = &g[r * n..(r + 1) * n];
-        let out_row = &mut out[r * k..(r + 1) * k];
-        for (c, o) in out_row.iter_mut().enumerate() {
-            let w_row = &w[c * n..(c + 1) * n];
-            let mut acc = 0.0f32;
-            for (&gv, &wv) in g_row.iter().zip(w_row) {
-                acc += gv * wv;
-            }
-            *o += acc;
-        }
-    }
-}
-
-// ---------------------------------------------------------------------
-// row-blocked parallel tiles over the serial kernels
-// ---------------------------------------------------------------------
-//
-// Each tile owns a disjoint block of OUTPUT rows and performs exactly
-// the serial kernel's per-element operations in the serial order, so
-// the parallel results are bit-for-bit equal to the serial ones at any
-// thread count and under any partition (property-tested below and in
-// rust/tests/backend_native.rs).
-
-/// How many tiles to cut `rows` output rows into for `work` total MACs:
-/// 1 (serial) below the overhead threshold, else at most one tile per
-/// pool thread with every tile above [`PAR_MIN_MACS`].
-fn par_parts(pool: &ComputePool, rows: usize, work: usize) -> usize {
-    if rows < 2 || pool.threads() < 2 || work < 2 * PAR_MIN_MACS {
-        return 1;
-    }
-    pool.threads().min(rows).min((work / PAR_MIN_MACS).max(1))
-}
-
-/// Parallel `out(m×n) += a(m×k) · b(k×n)`: contiguous row blocks of
-/// `out` (and the matching rows of `a`) per tile.
-fn par_matmul(pool: &ComputePool, a: &[f32], b: &[f32], m: usize, k: usize, n: usize, out: &mut [f32]) {
-    let parts = par_parts(pool, m, m * k * n);
-    if parts <= 1 {
-        return matmul(a, b, m, k, n, out);
-    }
-    let block = (m + parts - 1) / parts;
-    let tasks: Vec<Box<dyn FnOnce() + Send + '_>> = a
-        .chunks(block * k)
-        .zip(out.chunks_mut(block * n))
-        .map(|(a_blk, out_blk)| {
-            let rows = out_blk.len() / n;
-            Box::new(move || matmul(a_blk, b, rows, k, n, out_blk))
-                as Box<dyn FnOnce() + Send + '_>
-        })
-        .collect();
-    pool.run(tasks);
-}
-
-/// Parallel `out(m×k) += g(m×n) · wᵀ(n×k)`: row blocks of `out`/`g`.
-fn par_matmul_a_bt(
-    pool: &ComputePool,
-    g: &[f32],
-    w: &[f32],
-    m: usize,
-    n: usize,
-    k: usize,
-    out: &mut [f32],
-) {
-    let parts = par_parts(pool, m, m * n * k);
-    if parts <= 1 {
-        return matmul_a_bt(g, w, m, n, k, out);
-    }
-    let block = (m + parts - 1) / parts;
-    let tasks: Vec<Box<dyn FnOnce() + Send + '_>> = g
-        .chunks(block * n)
-        .zip(out.chunks_mut(block * k))
-        .map(|(g_blk, out_blk)| {
-            let rows = out_blk.len() / k;
-            Box::new(move || matmul_a_bt(g_blk, w, rows, n, k, out_blk))
-                as Box<dyn FnOnce() + Send + '_>
-        })
-        .collect();
-    pool.run(tasks);
-}
-
-/// Parallel `out(k×n) += aᵀ(k×m) · g(m×n)`: the reduction over the
-/// batch dimension `m` cannot split without changing float order, so
-/// tiles own blocks of *output* rows `c` instead and each walks the
-/// full batch — the per-element accumulation order (ascending `r`,
-/// zero-skips included) is exactly the serial kernel's.
-fn par_matmul_at_b(
-    pool: &ComputePool,
-    a: &[f32],
-    g: &[f32],
-    m: usize,
-    k: usize,
-    n: usize,
-    out: &mut [f32],
-) {
-    let parts = par_parts(pool, k, m * k * n);
-    if parts <= 1 {
-        return matmul_at_b(a, g, m, k, n, out);
-    }
-    let block = (k + parts - 1) / parts;
-    let tasks: Vec<Box<dyn FnOnce() + Send + '_>> = out
-        .chunks_mut(block * n)
-        .enumerate()
-        .map(|(bi, out_blk)| {
-            Box::new(move || matmul_at_b_cols(a, g, m, k, n, bi * block, out_blk))
-                as Box<dyn FnOnce() + Send + '_>
-        })
-        .collect();
-    pool.run(tasks);
-}
-
-/// The column-range tile of [`matmul_at_b`]: accumulates output rows
-/// `c0..c0 + out_blk.len()/n` of `aᵀ·g`, walking `r` ascending with the
-/// serial kernel's `a[r,c] == 0` skip — per-element operations match
-/// the serial row-major walk bit for bit.
-fn matmul_at_b_cols(
-    a: &[f32],
-    g: &[f32],
-    m: usize,
-    k: usize,
-    n: usize,
-    c0: usize,
-    out_blk: &mut [f32],
-) {
-    for (ci, out_row) in out_blk.chunks_exact_mut(n).enumerate() {
-        let c = c0 + ci;
-        for r in 0..m {
-            let arc = a[r * k + c];
-            if arc == 0.0 {
-                continue;
-            }
-            let g_row = &g[r * n..(r + 1) * n];
-            for (o, &gv) in out_row.iter_mut().zip(g_row) {
-                *o += arc * gv;
-            }
-        }
     }
 }
 
@@ -610,124 +686,23 @@ mod tests {
         let mut inputs = zero_inputs(&layers, 4, 4);
         inputs[0] = Tensor::zeros_f32(vec![4, 4]);
         assert!(be.execute(&c, inputs).unwrap_err().contains("w0"));
-    }
-
-    #[test]
-    fn matmul_kernels_agree_with_naive_reference() {
-        let (m, k, n) = (3usize, 4, 5);
-        let a: Vec<f32> = (0..m * k).map(|i| (i as f32) * 0.3 - 1.0).collect();
-        let b: Vec<f32> = (0..k * n).map(|i| 0.7 - (i as f32) * 0.2).collect();
-        let mut out = vec![0.0f32; m * n];
-        matmul(&a, &b, m, k, n, &mut out);
-        for i in 0..m {
-            for j in 0..n {
-                let want: f32 = (0..k).map(|kk| a[i * k + kk] * b[kk * n + j]).sum();
-                assert!((out[i * n + j] - want).abs() < 1e-5);
-            }
-        }
-        // aᵀ·g against the same naive contraction
-        let g: Vec<f32> = (0..m * n).map(|i| (i as f32) * 0.1).collect();
-        let mut dw = vec![0.0f32; k * n];
-        matmul_at_b(&a, &g, m, k, n, &mut dw);
-        for c in 0..k {
-            for j in 0..n {
-                let want: f32 = (0..m).map(|r| a[r * k + c] * g[r * n + j]).sum();
-                assert!((dw[c * n + j] - want).abs() < 1e-5);
-            }
-        }
-        // g·wᵀ
-        let w: Vec<f32> = (0..k * n).map(|i| (i as f32) * 0.05 - 0.3).collect();
-        let mut gp = vec![0.0f32; m * k];
-        matmul_a_bt(&g, &w, m, n, k, &mut gp);
-        for r in 0..m {
-            for c in 0..k {
-                let want: f32 = (0..n).map(|j| g[r * n + j] * w[c * n + j]).sum();
-                assert!((gp[r * k + c] - want).abs() < 1e-5);
-            }
-        }
+        // fused call without its lr input
+        let fc = call(Function::FusedStep, &layers);
+        let err = be.execute(&fc, zero_inputs(&layers, 4, 4)).unwrap_err();
+        assert!(err.contains("needs"), "{err}");
+        // fused call with a non-finite lr
+        let mut inputs = zero_inputs(&layers, 4, 4);
+        inputs.push(Tensor::scalar_f32(f32::NAN));
+        let err = be.execute(&fc, inputs).unwrap_err();
+        assert!(err.contains("finite"), "{err}");
     }
 
     fn bits_equal(a: &[f32], b: &[f32]) -> bool {
         a.len() == b.len() && a.iter().zip(b).all(|(x, y)| x.to_bits() == y.to_bits())
     }
 
-    /// Deterministic pseudo-data with zeros sprinkled in, so the
-    /// kernels' sparsity skips are part of the checked equivalence.
-    fn lattice(len: usize, mul: usize, modu: usize, scale: f32) -> Vec<f32> {
-        (0..len)
-            .map(|i| {
-                let v = ((i * mul % modu) as f32 - (modu / 2) as f32) * scale;
-                if v.abs() < 2.0 * scale {
-                    0.0
-                } else {
-                    v
-                }
-            })
-            .collect()
-    }
-
-    #[test]
-    fn pooled_kernels_match_serial_bit_for_bit() {
-        // big enough that par_parts engages (m·k·n ≥ 2·PAR_MIN_MACS)
-        let (m, k, n) = (64usize, 96, 48);
-        assert!(m * k * n >= 2 * PAR_MIN_MACS);
-        let a = lattice(m * k, 37, 101, 0.013);
-        let b = lattice(k * n, 53, 89, 0.011);
-        let g = lattice(m * n, 29, 97, 0.017);
-        let w = lattice(k * n, 41, 83, 0.009);
-
-        let mut fwd = vec![0.0f32; m * n];
-        matmul(&a, &b, m, k, n, &mut fwd);
-        let mut dw = vec![0.0f32; k * n];
-        matmul_at_b(&a, &g, m, k, n, &mut dw);
-        let mut gp = vec![0.0f32; m * k];
-        matmul_a_bt(&g, &w, m, n, k, &mut gp);
-
-        for threads in [1usize, 2, 3, 8] {
-            let pool = ComputePool::new(threads);
-            let mut out = vec![0.0f32; m * n];
-            par_matmul(&pool, &a, &b, m, k, n, &mut out);
-            assert!(bits_equal(&fwd, &out), "matmul diverged at {threads} threads");
-            let mut out = vec![0.0f32; k * n];
-            par_matmul_at_b(&pool, &a, &g, m, k, n, &mut out);
-            assert!(bits_equal(&dw, &out), "matmul_at_b diverged at {threads} threads");
-            let mut out = vec![0.0f32; m * k];
-            par_matmul_a_bt(&pool, &g, &w, m, n, k, &mut out);
-            assert!(bits_equal(&gp, &out), "matmul_a_bt diverged at {threads} threads");
-        }
-    }
-
-    #[test]
-    fn below_threshold_shapes_take_the_serial_path_with_equal_results() {
-        let (m, k, n) = (5usize, 7, 3); // tiny: par_parts must say 1
-        let pool = ComputePool::new(4);
-        assert_eq!(par_parts(&pool, m, m * k * n), 1);
-        let a = lattice(m * k, 7, 31, 0.05);
-        let b = lattice(k * n, 11, 29, 0.04);
-        let mut serial = vec![0.0f32; m * n];
-        matmul(&a, &b, m, k, n, &mut serial);
-        let mut pooled = vec![0.0f32; m * n];
-        par_matmul(&pool, &a, &b, m, k, n, &mut pooled);
-        assert!(bits_equal(&serial, &pooled));
-    }
-
-    #[test]
-    fn par_parts_is_thread_count_capped_and_shape_driven() {
-        let big = 4 * PAR_MIN_MACS;
-        assert_eq!(par_parts(&ComputePool::new(1), 100, big), 1);
-        assert_eq!(par_parts(&ComputePool::new(8), 1, big), 1);
-        assert_eq!(par_parts(&ComputePool::new(8), 100, PAR_MIN_MACS), 1);
-        assert_eq!(par_parts(&ComputePool::new(8), 100, big), 4);
-        assert_eq!(par_parts(&ComputePool::new(2), 100, big), 2);
-        assert_eq!(par_parts(&ComputePool::new(8), 3, 100 * PAR_MIN_MACS), 3);
-    }
-
-    #[test]
-    fn pooled_backend_execution_is_bit_equal_across_thread_counts() {
-        // full grad_step + eval_batch through Backend::execute on a
-        // shape wide enough to engage every parallel tile
-        let layers = [96usize, 64, 4];
-        let batch = 48;
+    /// Deterministic non-trivial inputs for a layers/batch shape.
+    fn varied_inputs(layers: &[usize], batch: usize) -> Vec<Tensor> {
         let mut rng_state = 0x9E3779B97F4A7C15u64;
         let mut next = move || {
             rng_state ^= rng_state << 13;
@@ -744,11 +719,20 @@ mod tests {
             vec![batch, layers[0]],
             (0..batch * layers[0]).map(|_| next().abs()).collect(),
         ));
-        inputs.push(Tensor::i32(vec![batch], (0..batch).map(|i| (i % 4) as i32).collect()));
+        let classes = *layers.last().unwrap();
+        inputs.push(Tensor::i32(vec![batch], (0..batch).map(|i| (i % classes) as i32).collect()));
         let mut mask = vec![1.0f32; batch];
         mask[batch - 1] = 0.0;
         inputs.push(Tensor::f32(vec![batch], mask));
+        inputs
+    }
 
+    #[test]
+    fn pooled_backend_execution_is_bit_equal_across_thread_counts() {
+        // full grad_step + eval_batch through Backend::execute on a
+        // shape wide enough to engage every parallel tile
+        let layers = [96usize, 64, 4];
+        let inputs = varied_inputs(&layers, 48);
         let mut reference = NativeBackend::with_threads(1);
         for function in [Function::GradStep, Function::EvalBatch] {
             let c = call(function, &layers);
@@ -766,6 +750,67 @@ mod tests {
                     );
                 }
             }
+        }
+    }
+
+    #[test]
+    fn fused_step_is_bit_equal_to_grad_step_plus_sgd_apply() {
+        let layers = [96usize, 64, 4];
+        let batch = 48;
+        let lr = 0.05f32;
+        for threads in [1usize, 4] {
+            let mut be = NativeBackend::with_threads(threads);
+            let inputs = varied_inputs(&layers, batch);
+            // unfused: grad_step, then the local_training arithmetic
+            // (zeroed accumulator + axpy(1.0, g) + sgd_apply)
+            let g_out = be.execute(&call(Function::GradStep, &layers), inputs.clone()).unwrap();
+            let np = 2 * (layers.len() - 1);
+            let mut params = crate::coordinator::ParamSet {
+                tensors: inputs[..np].to_vec(),
+                layers: layers.to_vec(),
+            };
+            let mut acc = params.zeros_like();
+            for (a, g) in acc.iter_mut().zip(&g_out[..np]) {
+                a.axpy(1.0, g);
+            }
+            let weight = g_out[np + 1].scalar();
+            params.sgd_apply(&acc, lr, weight);
+            // fused: one call
+            let mut f_inputs = inputs.clone();
+            f_inputs.push(Tensor::scalar_f32(lr));
+            let f_out = be.execute(&call(Function::FusedStep, &layers), f_inputs).unwrap();
+            assert_eq!(f_out.len(), np + 2);
+            assert_eq!(f_out[np].scalar().to_bits(), g_out[np].scalar().to_bits());
+            assert_eq!(f_out[np + 1].scalar().to_bits(), weight.to_bits());
+            for (i, (want, got)) in params.tensors.iter().zip(&f_out[..np]).enumerate() {
+                assert_eq!(want.dims, got.dims);
+                assert!(
+                    bits_equal(want.as_f32(), got.as_f32()),
+                    "fused param {i} diverged at {threads} threads"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn quantized_modes_map_bits_and_stay_deterministic() {
+        assert_eq!(ExecMode::for_bits(32), ExecMode::F32);
+        assert_eq!(ExecMode::for_bits(64), ExecMode::F32);
+        assert_eq!(ExecMode::for_bits(16), ExecMode::FakeQuant(16));
+        assert_eq!(ExecMode::for_bits(9), ExecMode::FakeQuant(9));
+        assert_eq!(ExecMode::for_bits(8), ExecMode::Int8(8));
+        assert_eq!(ExecMode::for_bits(1), ExecMode::Int8(1));
+        let layers = [24usize, 16, 4];
+        let inputs = varied_inputs(&layers, 12);
+        for bits in [4u32, 8, 16] {
+            let c = Call::new(Function::GradStep, "toy", &layers).with_precision(bits);
+            let mut be = NativeBackend::with_threads(1);
+            let a = be.execute(&c, inputs.clone()).unwrap();
+            let b = be.execute(&c, inputs.clone()).unwrap();
+            for (x, y) in a.iter().zip(&b) {
+                assert!(bits_equal(x.as_f32(), y.as_f32()), "bits={bits} not deterministic");
+            }
+            assert!(a.iter().all(|t| t.as_f32().iter().all(|v| v.is_finite())));
         }
     }
 }

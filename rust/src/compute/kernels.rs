@@ -1,0 +1,1088 @@
+//! Cache-blocked, packed GEMM microkernels — the compute layer under
+//! [`crate::backend::NativeBackend`] (ISSUE 6).
+//!
+//! Three contractions cover an MLP training step, and each comes in
+//! three forms here:
+//!
+//! * a **naive oracle** (`naive_*`) — the serial triple loops PR 3–5
+//!   shipped, kept in-tree verbatim as the bit-exact specification;
+//! * a **blocked kernel** (`matmul`, `matmul_at_b`, `matmul_a_bt`) —
+//!   walks fixed `MC×KC×NC` cache blocks, packs the B/W panel once per
+//!   call, and keeps the inner loop a contiguous
+//!   broadcast-scalar × row-vector update that autovectorizes;
+//! * a **pooled wrapper** (`par_*`) — row-blocked tiles over the
+//!   [`ComputePool`], with tile boundaries aligned to [`MC`] so a tile
+//!   never degenerates into sub-block rows that defeat the blocking.
+//!
+//! **Bit-equality contract.** Every blocked/pooled form produces
+//! *bit-for-bit* the oracle's results at any shape, any blocking and
+//! any thread count, because blocking only re-orders *which output
+//! element is updated next*, never the per-element arithmetic:
+//!
+//! * each output element keeps a **single accumulator chain** walked in
+//!   ascending contraction order (`kk`/`r`/`j` exactly as the oracle);
+//! * the oracles' `== 0.0` sparsity skips are applied to the same
+//!   broadcast scalar at the same point;
+//! * vectorization happens **across output columns** (the contiguous
+//!   packed row), never across the contraction dimension — so lanes are
+//!   independent chains, not split reductions;
+//! * the optional `core::arch` paths (feature `arch-kernels`) use
+//!   mul-then-add, never FMA, whose fused rounding would break the
+//!   contract.
+//!
+//! The quantized (`*_q8`) kernels below run real int8 GEMMs with exact
+//! `i32` accumulation for the `P_m ≤ 8` execution path; integer
+//! addition is associative, so those are trivially deterministic under
+//! any partition.
+
+use super::pool::ComputePool;
+
+/// Output-row block: every pooled tile and the blocked walk step the
+/// `m` (or `k`, for `aᵀ·g`) dimension in multiples of this.
+pub const MC: usize = 32;
+/// Contraction-panel depth of one packed B panel.
+pub const KC: usize = 128;
+/// Output-column width of one packed B panel (`MC·NC` f32 = 16 KiB of
+/// hot output block; `KC·NC` f32 = 64 KiB of L2-resident packed panel).
+pub const NC: usize = 128;
+/// Register-tile rows of `matmul_a_bt` (accumulators live in registers
+/// across the whole dot product).
+pub const MR: usize = 4;
+/// Register-tile columns of `matmul_a_bt` (one autovectorized lane row).
+pub const NR: usize = 8;
+/// Below this many elements of the packed operand, the whole matrix
+/// already sits in L1 and the naive streaming oracle is the fastest
+/// correct kernel — the blocked forms delegate.
+pub const PACK_MIN_B: usize = 64 * 64;
+
+/// Minimum multiply-accumulates in one parallel tile: below twice this
+/// the fork/join overhead beats the win and the serial kernel runs
+/// instead. Shape-dependent only (never thread-count-dependent), so the
+/// serial/parallel decision cannot make results depend on the pool.
+pub const PAR_MIN_MACS: usize = 64 * 1024;
+
+// ---------------------------------------------------------------------
+// naive serial oracles (the bit-exact specification, PR 3 verbatim)
+// ---------------------------------------------------------------------
+
+/// Oracle `out(m×n) += a(m×k) · b(k×n)`, row-major; ikj order so the
+/// inner loop streams contiguous rows of both `b` and `out`.
+pub fn naive_matmul(a: &[f32], b: &[f32], m: usize, k: usize, n: usize, out: &mut [f32]) {
+    for i in 0..m {
+        let a_row = &a[i * k..(i + 1) * k];
+        let out_row = &mut out[i * n..(i + 1) * n];
+        for (kk, &aik) in a_row.iter().enumerate() {
+            if aik == 0.0 {
+                continue; // relu activations are often sparse
+            }
+            let b_row = &b[kk * n..(kk + 1) * n];
+            for (o, &bv) in out_row.iter_mut().zip(b_row) {
+                *o += aik * bv;
+            }
+        }
+    }
+}
+
+/// Oracle `out(k×n) += aᵀ(k×m) · g(m×n)` for row-major `a(m×k)`,
+/// `g(m×n)` — the weight-gradient contraction, streamed row by row.
+pub fn naive_matmul_at_b(a: &[f32], g: &[f32], m: usize, k: usize, n: usize, out: &mut [f32]) {
+    for r in 0..m {
+        let a_row = &a[r * k..(r + 1) * k];
+        let g_row = &g[r * n..(r + 1) * n];
+        for (c, &arc) in a_row.iter().enumerate() {
+            if arc == 0.0 {
+                continue;
+            }
+            let out_row = &mut out[c * n..(c + 1) * n];
+            for (o, &gv) in out_row.iter_mut().zip(g_row) {
+                *o += arc * gv;
+            }
+        }
+    }
+}
+
+/// Oracle `out(m×k) += g(m×n) · wᵀ(n×k)` for row-major `w(k×n)` — the
+/// input cotangent; each entry is a dot product of two contiguous rows.
+pub fn naive_matmul_a_bt(g: &[f32], w: &[f32], m: usize, n: usize, k: usize, out: &mut [f32]) {
+    for r in 0..m {
+        let g_row = &g[r * n..(r + 1) * n];
+        let out_row = &mut out[r * k..(r + 1) * k];
+        for (c, o) in out_row.iter_mut().enumerate() {
+            let w_row = &w[c * n..(c + 1) * n];
+            let mut acc = 0.0f32;
+            for (&gv, &wv) in g_row.iter().zip(w_row) {
+                acc += gv * wv;
+            }
+            *o += acc;
+        }
+    }
+}
+
+/// The column-range tile of [`naive_matmul_at_b`]: output rows
+/// `c0..c0 + out_blk.len()/n`, walking `r` ascending with the oracle's
+/// `a[r,c] == 0` skip — per-element operations match the full oracle.
+pub fn naive_matmul_at_b_cols(
+    a: &[f32],
+    g: &[f32],
+    m: usize,
+    k: usize,
+    n: usize,
+    c0: usize,
+    out_blk: &mut [f32],
+) {
+    for (ci, out_row) in out_blk.chunks_exact_mut(n).enumerate() {
+        let c = c0 + ci;
+        for r in 0..m {
+            let arc = a[r * k + c];
+            if arc == 0.0 {
+                continue;
+            }
+            let g_row = &g[r * n..(r + 1) * n];
+            for (o, &gv) in out_row.iter_mut().zip(g_row) {
+                *o += arc * gv;
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// the blocked/packed kernels
+// ---------------------------------------------------------------------
+
+/// `b(k×n)` repacked into `KC×NC` panels, each panel's rows contiguous —
+/// one pass over B per call buys contiguous, cache-resident panel rows
+/// for every MC-row block of A.
+struct PackedB {
+    data: Vec<f32>,
+    /// Panel start offsets, indexed `p * nq + q` for KC-panel `p`,
+    /// NC-panel `q` (edge panels are narrower, hence explicit offsets).
+    offsets: Vec<usize>,
+    nq: usize,
+}
+
+fn pack_b(b: &[f32], k: usize, n: usize) -> PackedB {
+    let np = (k + KC - 1) / KC;
+    let nq = (n + NC - 1) / NC;
+    let mut data = Vec::with_capacity(k * n);
+    let mut offsets = Vec::with_capacity(np * nq);
+    for p in 0..np {
+        let kc0 = p * KC;
+        let kcw = KC.min(k - kc0);
+        for q in 0..nq {
+            let nc0 = q * NC;
+            let ncw = NC.min(n - nc0);
+            offsets.push(data.len());
+            for kk in 0..kcw {
+                let start = (kc0 + kk) * n + nc0;
+                data.extend_from_slice(&b[start..start + ncw]);
+            }
+        }
+    }
+    PackedB { data, offsets, nq }
+}
+
+/// `out_row[..] += s · row[..]` — the one autovectorized inner loop all
+/// f32 kernels funnel through (and the `arch-kernels` dispatch point).
+#[inline]
+fn axpy_row(out: &mut [f32], s: f32, row: &[f32]) {
+    #[cfg(feature = "arch-kernels")]
+    if arch::enabled() {
+        // SAFETY: `arch::enabled` runtime-detects the target feature.
+        unsafe { arch::axpy_row(out, s, row) };
+        return;
+    }
+    for (o, &v) in out.iter_mut().zip(row) {
+        *o += s * v;
+    }
+}
+
+/// Blocked `out(m×n) += a(m×k) · b(k×n)`: packs B once, then walks
+/// `MC`-row × `NC`-column output blocks accumulating `KC`-deep panels
+/// in ascending `kk` order. Bit-equal to [`naive_matmul`].
+pub fn matmul(a: &[f32], b: &[f32], m: usize, k: usize, n: usize, out: &mut [f32]) {
+    if k * n <= PACK_MIN_B {
+        return naive_matmul(a, b, m, k, n, out);
+    }
+    let bp = pack_b(b, k, n);
+    matmul_packed(a, &bp, m, k, n, out);
+}
+
+/// The packed walk of [`matmul`] (shared by the pooled tiles so B is
+/// packed once per *call*, not once per tile). Register tile: two
+/// output rows share every packed B row load; each row keeps the
+/// oracle's ascending-`kk`, zero-skipping accumulation.
+fn matmul_packed(a: &[f32], bp: &PackedB, m: usize, k: usize, n: usize, out: &mut [f32]) {
+    let np = (k + KC - 1) / KC;
+    let nq = bp.nq;
+    for i0 in (0..m).step_by(MC) {
+        let mh = MC.min(m - i0);
+        for q in 0..nq {
+            let nc0 = q * NC;
+            let ncw = NC.min(n - nc0);
+            for p in 0..np {
+                let kc0 = p * KC;
+                let kcw = KC.min(k - kc0);
+                let panel = &bp.data[bp.offsets[p * nq + q]..][..kcw * ncw];
+                let mut i = i0;
+                while i + 1 < i0 + mh {
+                    let (lo, hi) = out.split_at_mut((i + 1) * n);
+                    let o0 = &mut lo[i * n + nc0..i * n + nc0 + ncw];
+                    let o1 = &mut hi[nc0..nc0 + ncw];
+                    let a0 = &a[i * k + kc0..i * k + kc0 + kcw];
+                    let a1 = &a[(i + 1) * k + kc0..(i + 1) * k + kc0 + kcw];
+                    for kk in 0..kcw {
+                        let b_row = &panel[kk * ncw..(kk + 1) * ncw];
+                        let v0 = a0[kk];
+                        if v0 != 0.0 {
+                            axpy_row(o0, v0, b_row);
+                        }
+                        let v1 = a1[kk];
+                        if v1 != 0.0 {
+                            axpy_row(o1, v1, b_row);
+                        }
+                    }
+                    i += 2;
+                }
+                if i < i0 + mh {
+                    let o0 = &mut out[i * n + nc0..i * n + nc0 + ncw];
+                    let a0 = &a[i * k + kc0..i * k + kc0 + kcw];
+                    for (kk, &v0) in a0.iter().enumerate() {
+                        if v0 != 0.0 {
+                            axpy_row(o0, v0, &panel[kk * ncw..(kk + 1) * ncw]);
+                        }
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Blocked `out(k×n) += aᵀ(k×m) · g(m×n)`: `MC×NC` output blocks stay
+/// L1-hot across the whole ascending-`r` batch walk (the contraction
+/// runs over the batch, so it cannot split without reordering floats —
+/// blocking the *output* is the whole win here; `a`'s row segments and
+/// `g`'s rows are already contiguous, nothing needs packing).
+/// Bit-equal to [`naive_matmul_at_b`].
+pub fn matmul_at_b(a: &[f32], g: &[f32], m: usize, k: usize, n: usize, out: &mut [f32]) {
+    matmul_at_b_cols(a, g, m, k, n, 0, out);
+}
+
+/// Column-range tile of [`matmul_at_b`]: output rows
+/// `c0..c0 + out_blk.len()/n` (the pooled form hands each tile a
+/// disjoint range; `c0 = 0` with the full buffer is the serial call).
+pub fn matmul_at_b_cols(
+    a: &[f32],
+    g: &[f32],
+    m: usize,
+    k: usize,
+    n: usize,
+    c0: usize,
+    out_blk: &mut [f32],
+) {
+    let kb = if n == 0 { 0 } else { out_blk.len() / n };
+    if kb * n <= PACK_MIN_B {
+        return naive_matmul_at_b_cols(a, g, m, k, n, c0, out_blk);
+    }
+    for cc0 in (0..kb).step_by(MC) {
+        let cw = MC.min(kb - cc0);
+        for nc0 in (0..n).step_by(NC) {
+            let ncw = NC.min(n - nc0);
+            for r in 0..m {
+                let a_seg = &a[r * k + c0 + cc0..r * k + c0 + cc0 + cw];
+                let g_row = &g[r * n + nc0..r * n + nc0 + ncw];
+                for (ci, &arc) in a_seg.iter().enumerate() {
+                    if arc == 0.0 {
+                        continue;
+                    }
+                    let out_row = &mut out_blk[(cc0 + ci) * n + nc0..][..ncw];
+                    axpy_row(out_row, arc, g_row);
+                }
+            }
+        }
+    }
+}
+
+/// `w(k×n)` transpose-packed into `NR`-wide column panels
+/// (`wp[cb][j][ci] = w[cb·NR + ci][j]`, tail panels zero-padded to NR)
+/// so the `matmul_a_bt` register tile reads one contiguous lane row per
+/// `j` step.
+struct PackedWt {
+    data: Vec<f32>,
+}
+
+fn pack_w_t(w: &[f32], k: usize, n: usize) -> PackedWt {
+    let ncb = (k + NR - 1) / NR;
+    let mut data = vec![0.0f32; ncb * n * NR];
+    for cb in 0..ncb {
+        let c0 = cb * NR;
+        let cw = NR.min(k - c0);
+        let base = cb * n * NR;
+        for ci in 0..cw {
+            let w_row = &w[(c0 + ci) * n..(c0 + ci + 1) * n];
+            for (j, &wv) in w_row.iter().enumerate() {
+                data[base + j * NR + ci] = wv;
+            }
+        }
+    }
+    PackedWt { data }
+}
+
+/// Blocked `out(m×k) += g(m×n) · wᵀ(n×k)`: packs Wᵀ once, then runs
+/// `MR×NR` register tiles whose accumulators each remain a single
+/// ascending-`j` chain for the whole dot product (spilling between
+/// panels would reorder float adds, so the `j` loop is never split).
+/// Bit-equal to [`naive_matmul_a_bt`].
+pub fn matmul_a_bt(g: &[f32], w: &[f32], m: usize, n: usize, k: usize, out: &mut [f32]) {
+    if k * n <= PACK_MIN_B {
+        return naive_matmul_a_bt(g, w, m, n, k, out);
+    }
+    let wp = pack_w_t(w, k, n);
+    matmul_a_bt_packed(g, &wp, m, n, k, out);
+}
+
+fn matmul_a_bt_packed(g: &[f32], wp: &PackedWt, m: usize, n: usize, k: usize, out: &mut [f32]) {
+    let ncb = (k + NR - 1) / NR;
+    for r0 in (0..m).step_by(MR) {
+        let rh = MR.min(m - r0);
+        for cb in 0..ncb {
+            let c0 = cb * NR;
+            let cw = NR.min(k - c0);
+            let panel = &wp.data[cb * n * NR..(cb + 1) * n * NR];
+            // acc[mr][ci] is the oracle's single accumulator for output
+            // (r0+mr, c0+ci); zero-padded lanes ci ≥ cw are never read
+            let mut acc = [[0.0f32; NR]; MR];
+            for j in 0..n {
+                let w_lane = &panel[j * NR..(j + 1) * NR];
+                for (mr, acc_row) in acc.iter_mut().enumerate().take(rh) {
+                    let gv = g[(r0 + mr) * n + j];
+                    for (av, &wv) in acc_row.iter_mut().zip(w_lane) {
+                        *av += gv * wv;
+                    }
+                }
+            }
+            for (mr, acc_row) in acc.iter().enumerate().take(rh) {
+                let out_row = &mut out[(r0 + mr) * k + c0..(r0 + mr) * k + c0 + cw];
+                for (o, &av) in out_row.iter_mut().zip(acc_row) {
+                    *o += av;
+                }
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// pooled row-blocked tiles (MC-aligned split — the ISSUE 6 par_parts fix)
+// ---------------------------------------------------------------------
+
+/// How many tiles to cut `rows` output rows into for `work` total MACs:
+/// 1 (serial) below the overhead threshold, else at most one tile per
+/// pool thread with every tile above [`PAR_MIN_MACS`].
+pub fn par_parts(pool: &ComputePool, rows: usize, work: usize) -> usize {
+    if rows < 2 || pool.threads() < 2 || work < 2 * PAR_MIN_MACS {
+        return 1;
+    }
+    pool.threads().min(rows).min((work / PAR_MIN_MACS).max(1))
+}
+
+/// Rows per tile for an `MC`-aligned split of `rows` into (at most)
+/// `parts` tiles. PR 5 sized tiles purely by MAC count, so a tall
+/// matrix with a tiny other dimension could split into sub-`MC` slivers
+/// that defeat the blocked kernels' packing; rounding the tile height
+/// up to the block boundary keeps every tile (except a possible tail)
+/// an exact multiple of [`MC`]. Tile boundaries never change results —
+/// every kernel's per-element accumulation is partition-independent.
+pub fn align_tile_rows(rows: usize, parts: usize) -> usize {
+    let raw = (rows + parts.max(1) - 1) / parts.max(1);
+    if raw >= rows {
+        return rows.max(1);
+    }
+    ((raw + MC - 1) / MC * MC).min(rows)
+}
+
+/// Pooled `out(m×n) += a(m×k) · b(k×n)`: B packed **once**, then
+/// MC-aligned row blocks of `out`/`a` per tile.
+pub fn par_matmul(
+    pool: &ComputePool,
+    a: &[f32],
+    b: &[f32],
+    m: usize,
+    k: usize,
+    n: usize,
+    out: &mut [f32],
+) {
+    let parts = par_parts(pool, m, m * k * n);
+    if parts <= 1 {
+        return matmul(a, b, m, k, n, out);
+    }
+    let block = align_tile_rows(m, parts);
+    if k * n <= PACK_MIN_B {
+        let tasks: Vec<Box<dyn FnOnce() + Send + '_>> = a
+            .chunks(block * k)
+            .zip(out.chunks_mut(block * n))
+            .map(|(a_blk, out_blk)| {
+                let rows = out_blk.len() / n;
+                Box::new(move || naive_matmul(a_blk, b, rows, k, n, out_blk))
+                    as Box<dyn FnOnce() + Send + '_>
+            })
+            .collect();
+        return pool.run(tasks);
+    }
+    let bp = pack_b(b, k, n);
+    let bp = &bp;
+    let tasks: Vec<Box<dyn FnOnce() + Send + '_>> = a
+        .chunks(block * k)
+        .zip(out.chunks_mut(block * n))
+        .map(|(a_blk, out_blk)| {
+            let rows = out_blk.len() / n;
+            Box::new(move || matmul_packed(a_blk, bp, rows, k, n, out_blk))
+                as Box<dyn FnOnce() + Send + '_>
+        })
+        .collect();
+    pool.run(tasks);
+}
+
+/// Pooled `out(m×k) += g(m×n) · wᵀ(n×k)`: Wᵀ packed once, MC-aligned
+/// row blocks of `out`/`g` per tile.
+pub fn par_matmul_a_bt(
+    pool: &ComputePool,
+    g: &[f32],
+    w: &[f32],
+    m: usize,
+    n: usize,
+    k: usize,
+    out: &mut [f32],
+) {
+    let parts = par_parts(pool, m, m * n * k);
+    if parts <= 1 {
+        return matmul_a_bt(g, w, m, n, k, out);
+    }
+    let block = align_tile_rows(m, parts);
+    if k * n <= PACK_MIN_B {
+        let tasks: Vec<Box<dyn FnOnce() + Send + '_>> = g
+            .chunks(block * n)
+            .zip(out.chunks_mut(block * k))
+            .map(|(g_blk, out_blk)| {
+                let rows = out_blk.len() / k;
+                Box::new(move || naive_matmul_a_bt(g_blk, w, rows, n, k, out_blk))
+                    as Box<dyn FnOnce() + Send + '_>
+            })
+            .collect();
+        return pool.run(tasks);
+    }
+    let wp = pack_w_t(w, k, n);
+    let wp = &wp;
+    let tasks: Vec<Box<dyn FnOnce() + Send + '_>> = g
+        .chunks(block * n)
+        .zip(out.chunks_mut(block * k))
+        .map(|(g_blk, out_blk)| {
+            let rows = out_blk.len() / k;
+            Box::new(move || matmul_a_bt_packed(g_blk, wp, rows, n, k, out_blk))
+                as Box<dyn FnOnce() + Send + '_>
+        })
+        .collect();
+    pool.run(tasks);
+}
+
+/// Pooled `out(k×n) += aᵀ(k×m) · g(m×n)`: the reduction over the batch
+/// `m` cannot split without changing float order, so tiles own
+/// MC-aligned blocks of *output* rows `c` and each walks the full
+/// batch in the oracle's ascending-`r`, zero-skipping order.
+pub fn par_matmul_at_b(
+    pool: &ComputePool,
+    a: &[f32],
+    g: &[f32],
+    m: usize,
+    k: usize,
+    n: usize,
+    out: &mut [f32],
+) {
+    let parts = par_parts(pool, k, m * k * n);
+    if parts <= 1 {
+        return matmul_at_b(a, g, m, k, n, out);
+    }
+    let block = align_tile_rows(k, parts);
+    let tasks: Vec<Box<dyn FnOnce() + Send + '_>> = out
+        .chunks_mut(block * n)
+        .enumerate()
+        .map(|(bi, out_blk)| {
+            Box::new(move || matmul_at_b_cols(a, g, m, k, n, bi * block, out_blk))
+                as Box<dyn FnOnce() + Send + '_>
+        })
+        .collect();
+    pool.run(tasks);
+}
+
+// ---------------------------------------------------------------------
+// quantized (P_m-bit) execution: deterministic grids + int8 GEMMs
+// ---------------------------------------------------------------------
+
+/// A symmetrically quantized tensor: `values ≈ scale · q`, every `q` on
+/// the signed `±(2^(bits-1) − 1)`-level grid.
+#[derive(Debug, Clone)]
+pub struct QuantBuf {
+    pub q: Vec<i8>,
+    pub scale: f32,
+}
+
+/// Grid levels per sign for a `bits`-wide signed representation,
+/// clamped into the int8 range (1-bit has no nonzero signed level, so
+/// it executes on the ternary 2-bit grid).
+pub fn quant_levels(bits: u32) -> i32 {
+    (1i32 << (bits.clamp(2, 8) - 1)) - 1
+}
+
+/// Deterministic round-to-nearest quantization onto the symmetric
+/// per-tensor grid `scale = absmax / levels`. Stochastic-free: the grid
+/// derives only from the tensor's (order-independent) absolute maximum,
+/// ties round away from zero (`f32::round`), NaN maps to 0 and the
+/// degenerate all-zero/non-finite-absmax tensors use scale 1 — the same
+/// inputs always produce the same grid and the same codes.
+pub fn quantize_i8(v: &[f32], bits: u32) -> QuantBuf {
+    let levels = quant_levels(bits) as f32;
+    let absmax = v.iter().fold(0.0f32, |acc, &x| if x.abs() > acc { x.abs() } else { acc });
+    let scale = if absmax.is_finite() && absmax > 0.0 { absmax / levels } else { 1.0 };
+    let inv = 1.0 / scale;
+    let q = v.iter().map(|&x| (x * inv).round().clamp(-levels, levels) as i8).collect();
+    QuantBuf { q, scale }
+}
+
+/// In-place fake-quantization for the `9..=31`-bit grids: values snap
+/// to the same deterministic round-to-nearest symmetric grid but stay
+/// f32, so the blocked f32 kernels execute them directly (with the
+/// grid's sparsity feeding their zero-skips). `P_m ≥ 32` callers must
+/// not call this — that path is bit-for-bit plain f32.
+pub fn fake_quantize(v: &mut [f32], bits: u32) {
+    let b = bits.clamp(2, 31);
+    let levels = ((1u64 << (b - 1)) - 1) as f32;
+    let absmax = v.iter().fold(0.0f32, |acc, &x| if x.abs() > acc { x.abs() } else { acc });
+    if !(absmax.is_finite() && absmax > 0.0) {
+        return;
+    }
+    let scale = absmax / levels;
+    let inv = 1.0 / scale;
+    for x in v.iter_mut() {
+        *x = (*x * inv).round().clamp(-levels, levels) * scale;
+    }
+}
+
+/// The grid step a `bits`-wide quantization of a tensor with absolute
+/// maximum `absmax` uses — tolerance derivations in the property tests
+/// bound quantized-vs-f32 divergence with exactly this step.
+pub fn grid_step(absmax: f32, bits: u32) -> f32 {
+    if !(absmax.is_finite() && absmax > 0.0) {
+        return 1.0;
+    }
+    if bits >= 32 {
+        return 0.0;
+    }
+    if bits > 8 {
+        let levels = ((1u64 << (bits.clamp(2, 31) - 1)) - 1) as f32;
+        absmax / levels
+    } else {
+        absmax / quant_levels(bits) as f32
+    }
+}
+
+/// Int8 `out(m×n) += qa(m×k) · qb(k×n)` with exact i32 accumulation
+/// (`k ≤ i32::MAX / 127²` ≈ 133k rows of headroom — far above any MLP
+/// batch or layer width here).
+pub fn matmul_q8(qa: &[i8], qb: &[i8], m: usize, k: usize, n: usize, out: &mut [i32]) {
+    debug_assert!(k <= (i32::MAX / (127 * 127)) as usize, "i32 accumulator headroom");
+    for i in 0..m {
+        let a_row = &qa[i * k..(i + 1) * k];
+        let out_row = &mut out[i * n..(i + 1) * n];
+        for (kk, &aik) in a_row.iter().enumerate() {
+            if aik == 0 {
+                continue; // quantization rounds small values to exact zero
+            }
+            let av = aik as i32;
+            let b_row = &qb[kk * n..(kk + 1) * n];
+            for (o, &bv) in out_row.iter_mut().zip(b_row) {
+                *o += av * bv as i32;
+            }
+        }
+    }
+}
+
+/// Int8 column-range tile of `out(k×n) += qaᵀ(k×m) · qg(m×n)`.
+pub fn matmul_at_b_q8_cols(
+    qa: &[i8],
+    qg: &[i8],
+    m: usize,
+    k: usize,
+    n: usize,
+    c0: usize,
+    out_blk: &mut [i32],
+) {
+    debug_assert!(m <= (i32::MAX / (127 * 127)) as usize, "i32 accumulator headroom");
+    for (ci, out_row) in out_blk.chunks_exact_mut(n).enumerate() {
+        let c = c0 + ci;
+        for r in 0..m {
+            let arc = qa[r * k + c];
+            if arc == 0 {
+                continue;
+            }
+            let av = arc as i32;
+            let g_row = &qg[r * n..(r + 1) * n];
+            for (o, &gv) in out_row.iter_mut().zip(g_row) {
+                *o += av * gv as i32;
+            }
+        }
+    }
+}
+
+/// Int8 `out(m×k) += qg(m×n) · qwᵀ(n×k)`.
+pub fn matmul_a_bt_q8(qg: &[i8], qw: &[i8], m: usize, n: usize, k: usize, out: &mut [i32]) {
+    debug_assert!(n <= (i32::MAX / (127 * 127)) as usize, "i32 accumulator headroom");
+    for r in 0..m {
+        let g_row = &qg[r * n..(r + 1) * n];
+        let out_row = &mut out[r * k..(r + 1) * k];
+        for (c, o) in out_row.iter_mut().enumerate() {
+            let w_row = &qw[c * n..(c + 1) * n];
+            let mut acc = 0i32;
+            for (&gv, &wv) in g_row.iter().zip(w_row) {
+                acc += gv as i32 * wv as i32;
+            }
+            *o += acc;
+        }
+    }
+}
+
+/// Pooled [`matmul_q8`] (integer adds are associative — any partition
+/// is exact, the row split just mirrors the f32 tiling).
+pub fn par_matmul_q8(
+    pool: &ComputePool,
+    qa: &[i8],
+    qb: &[i8],
+    m: usize,
+    k: usize,
+    n: usize,
+    out: &mut [i32],
+) {
+    let parts = par_parts(pool, m, m * k * n);
+    if parts <= 1 {
+        return matmul_q8(qa, qb, m, k, n, out);
+    }
+    let block = align_tile_rows(m, parts);
+    let tasks: Vec<Box<dyn FnOnce() + Send + '_>> = qa
+        .chunks(block * k)
+        .zip(out.chunks_mut(block * n))
+        .map(|(a_blk, out_blk)| {
+            let rows = out_blk.len() / n;
+            Box::new(move || matmul_q8(a_blk, qb, rows, k, n, out_blk))
+                as Box<dyn FnOnce() + Send + '_>
+        })
+        .collect();
+    pool.run(tasks);
+}
+
+/// Pooled [`matmul_at_b_q8_cols`] over MC-aligned output-row tiles.
+pub fn par_matmul_at_b_q8(
+    pool: &ComputePool,
+    qa: &[i8],
+    qg: &[i8],
+    m: usize,
+    k: usize,
+    n: usize,
+    out: &mut [i32],
+) {
+    let parts = par_parts(pool, k, m * k * n);
+    if parts <= 1 {
+        return matmul_at_b_q8_cols(qa, qg, m, k, n, 0, out);
+    }
+    let block = align_tile_rows(k, parts);
+    let tasks: Vec<Box<dyn FnOnce() + Send + '_>> = out
+        .chunks_mut(block * n)
+        .enumerate()
+        .map(|(bi, out_blk)| {
+            Box::new(move || matmul_at_b_q8_cols(qa, qg, m, k, n, bi * block, out_blk))
+                as Box<dyn FnOnce() + Send + '_>
+        })
+        .collect();
+    pool.run(tasks);
+}
+
+/// Pooled [`matmul_a_bt_q8`] over MC-aligned output-row tiles.
+pub fn par_matmul_a_bt_q8(
+    pool: &ComputePool,
+    qg: &[i8],
+    qw: &[i8],
+    m: usize,
+    n: usize,
+    k: usize,
+    out: &mut [i32],
+) {
+    let parts = par_parts(pool, m, m * n * k);
+    if parts <= 1 {
+        return matmul_a_bt_q8(qg, qw, m, n, k, out);
+    }
+    let block = align_tile_rows(m, parts);
+    let tasks: Vec<Box<dyn FnOnce() + Send + '_>> = qg
+        .chunks(block * n)
+        .zip(out.chunks_mut(block * k))
+        .map(|(g_blk, out_blk)| {
+            let rows = out_blk.len() / k;
+            Box::new(move || matmul_a_bt_q8(g_blk, qw, rows, n, k, out_blk))
+                as Box<dyn FnOnce() + Send + '_>
+        })
+        .collect();
+    pool.run(tasks);
+}
+
+/// Which explicit-SIMD inner loop is live: `"portable"` unless the
+/// `arch-kernels` feature is built *and* the host passes runtime
+/// detection *and* `MEL_PORTABLE_KERNELS=1` is not set.
+pub fn active_path() -> &'static str {
+    #[cfg(feature = "arch-kernels")]
+    {
+        if arch::enabled() {
+            if cfg!(target_arch = "x86_64") {
+                return "avx2";
+            }
+            if cfg!(target_arch = "aarch64") {
+                return "neon";
+            }
+        }
+    }
+    "portable"
+}
+
+/// Optional explicit-SIMD inner loops (cargo feature `arch-kernels`,
+/// off by default — the portable autovectorized path is the product).
+/// Strictly mul-then-add, never FMA: a fused multiply-add rounds once
+/// where the scalar oracle rounds twice, which would break the
+/// bit-equality contract. Lanes are independent output columns, so the
+/// vector ops compute exactly the scalar path's per-element chains.
+#[cfg(feature = "arch-kernels")]
+mod arch {
+    fn forced_portable() -> bool {
+        std::env::var("MEL_PORTABLE_KERNELS").map(|v| v == "1").unwrap_or(false)
+    }
+
+    #[cfg(target_arch = "x86_64")]
+    pub fn enabled() -> bool {
+        use std::sync::OnceLock;
+        static ON: OnceLock<bool> = OnceLock::new();
+        *ON.get_or_init(|| !forced_portable() && is_x86_feature_detected!("avx2"))
+    }
+
+    /// # Safety
+    /// Caller must have verified AVX2 via [`enabled`].
+    #[cfg(target_arch = "x86_64")]
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn axpy_row(out: &mut [f32], s: f32, row: &[f32]) {
+        use core::arch::x86_64::*;
+        let n = out.len().min(row.len());
+        let sv = _mm256_set1_ps(s);
+        let mut j = 0;
+        while j + 8 <= n {
+            let o = _mm256_loadu_ps(out.as_ptr().add(j));
+            let r = _mm256_loadu_ps(row.as_ptr().add(j));
+            _mm256_storeu_ps(out.as_mut_ptr().add(j), _mm256_add_ps(o, _mm256_mul_ps(sv, r)));
+            j += 8;
+        }
+        while j < n {
+            *out.get_unchecked_mut(j) += s * *row.get_unchecked(j);
+            j += 1;
+        }
+    }
+
+    #[cfg(target_arch = "aarch64")]
+    pub fn enabled() -> bool {
+        // NEON is baseline on aarch64
+        !forced_portable()
+    }
+
+    /// # Safety
+    /// NEON is unconditionally available on aarch64.
+    #[cfg(target_arch = "aarch64")]
+    pub unsafe fn axpy_row(out: &mut [f32], s: f32, row: &[f32]) {
+        use core::arch::aarch64::*;
+        let n = out.len().min(row.len());
+        let sv = vdupq_n_f32(s);
+        let mut j = 0;
+        while j + 4 <= n {
+            let o = vld1q_f32(out.as_ptr().add(j));
+            let r = vld1q_f32(row.as_ptr().add(j));
+            vst1q_f32(out.as_mut_ptr().add(j), vaddq_f32(o, vmulq_f32(sv, r)));
+            j += 4;
+        }
+        while j < n {
+            *out.get_unchecked_mut(j) += s * *row.get_unchecked(j);
+            j += 1;
+        }
+    }
+
+    #[cfg(not(any(target_arch = "x86_64", target_arch = "aarch64")))]
+    pub fn enabled() -> bool {
+        false
+    }
+
+    /// # Safety
+    /// Trivially safe — the portable fallback for arches without an
+    /// explicit path.
+    #[cfg(not(any(target_arch = "x86_64", target_arch = "aarch64")))]
+    pub unsafe fn axpy_row(out: &mut [f32], s: f32, row: &[f32]) {
+        for (o, &v) in out.iter_mut().zip(row) {
+            *o += s * v;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn bits_equal(a: &[f32], b: &[f32]) -> bool {
+        a.len() == b.len() && a.iter().zip(b).all(|(x, y)| x.to_bits() == y.to_bits())
+    }
+
+    /// Deterministic pseudo-data with zeros sprinkled in, so the
+    /// kernels' sparsity skips are part of the checked equivalence.
+    fn lattice(len: usize, mul: usize, modu: usize, scale: f32) -> Vec<f32> {
+        (0..len)
+            .map(|i| {
+                let v = ((i * mul % modu) as f32 - (modu / 2) as f32) * scale;
+                if v.abs() < 2.0 * scale {
+                    0.0
+                } else {
+                    v
+                }
+            })
+            .collect()
+    }
+
+    /// The satellite bit-equality test: blocked kernels vs the naive
+    /// oracle at shapes straddling every block boundary (non-multiples
+    /// of MC/KC/NC/MR/NR, single rows/cols, exact multiples, and
+    /// below-threshold shapes that delegate).
+    #[test]
+    fn blocked_kernels_match_naive_oracle_at_odd_shapes() {
+        let shapes: &[(usize, usize, usize)] = &[
+            (33, 129, 65),  // one past MC/KC, mid-NC
+            (1, 257, 70),   // single output row, two KC panels
+            (65, 5, 130),   // shallow contraction, two NC panels
+            (7, 200, 31),   // below PACK_MIN_B → delegates to the oracle
+            (64, 128, 128), // exact block multiples
+            (50, 97, 61),   // nothing aligned at all
+        ];
+        for &(m, k, n) in shapes {
+            let a = lattice(m * k, 37, 101, 0.013);
+            let b = lattice(k * n, 53, 89, 0.011);
+            let g = lattice(m * n, 29, 97, 0.017);
+            let w = lattice(k * n, 41, 83, 0.009);
+
+            let mut want = vec![0.0f32; m * n];
+            naive_matmul(&a, &b, m, k, n, &mut want);
+            let mut got = vec![0.0f32; m * n];
+            matmul(&a, &b, m, k, n, &mut got);
+            assert!(bits_equal(&want, &got), "matmul diverged at {m}x{k}x{n}");
+
+            let mut want = vec![0.0f32; k * n];
+            naive_matmul_at_b(&a, &g, m, k, n, &mut want);
+            let mut got = vec![0.0f32; k * n];
+            matmul_at_b(&a, &g, m, k, n, &mut got);
+            assert!(bits_equal(&want, &got), "matmul_at_b diverged at {m}x{k}x{n}");
+
+            let mut want = vec![0.0f32; m * k];
+            naive_matmul_a_bt(&g, &w, m, n, k, &mut want);
+            let mut got = vec![0.0f32; m * k];
+            matmul_a_bt(&g, &w, m, n, k, &mut got);
+            assert!(bits_equal(&want, &got), "matmul_a_bt diverged at {m}x{k}x{n}");
+        }
+    }
+
+    #[test]
+    fn pooled_kernels_match_serial_bit_for_bit() {
+        // big enough that par_parts engages (m·k·n ≥ 2·PAR_MIN_MACS)
+        let (m, k, n) = (64usize, 96, 48);
+        assert!(m * k * n >= 2 * PAR_MIN_MACS);
+        let a = lattice(m * k, 37, 101, 0.013);
+        let b = lattice(k * n, 53, 89, 0.011);
+        let g = lattice(m * n, 29, 97, 0.017);
+        let w = lattice(k * n, 41, 83, 0.009);
+
+        let mut fwd = vec![0.0f32; m * n];
+        naive_matmul(&a, &b, m, k, n, &mut fwd);
+        let mut dw = vec![0.0f32; k * n];
+        naive_matmul_at_b(&a, &g, m, k, n, &mut dw);
+        let mut gp = vec![0.0f32; m * k];
+        naive_matmul_a_bt(&g, &w, m, n, k, &mut gp);
+
+        for threads in [1usize, 2, 3, 8] {
+            let pool = ComputePool::new(threads);
+            let mut out = vec![0.0f32; m * n];
+            par_matmul(&pool, &a, &b, m, k, n, &mut out);
+            assert!(bits_equal(&fwd, &out), "matmul diverged at {threads} threads");
+            let mut out = vec![0.0f32; k * n];
+            par_matmul_at_b(&pool, &a, &g, m, k, n, &mut out);
+            assert!(bits_equal(&dw, &out), "matmul_at_b diverged at {threads} threads");
+            let mut out = vec![0.0f32; m * k];
+            par_matmul_a_bt(&pool, &g, &w, m, n, k, &mut out);
+            assert!(bits_equal(&gp, &out), "matmul_a_bt diverged at {threads} threads");
+        }
+    }
+
+    #[test]
+    fn below_threshold_shapes_take_the_serial_path_with_equal_results() {
+        let (m, k, n) = (5usize, 7, 3); // tiny: par_parts must say 1
+        let pool = ComputePool::new(4);
+        assert_eq!(par_parts(&pool, m, m * k * n), 1);
+        let a = lattice(m * k, 7, 31, 0.05);
+        let b = lattice(k * n, 11, 29, 0.04);
+        let mut serial = vec![0.0f32; m * n];
+        naive_matmul(&a, &b, m, k, n, &mut serial);
+        let mut pooled = vec![0.0f32; m * n];
+        par_matmul(&pool, &a, &b, m, k, n, &mut pooled);
+        assert!(bits_equal(&serial, &pooled));
+    }
+
+    #[test]
+    fn par_parts_is_thread_count_capped_and_shape_driven() {
+        let big = 4 * PAR_MIN_MACS;
+        assert_eq!(par_parts(&ComputePool::new(1), 100, big), 1);
+        assert_eq!(par_parts(&ComputePool::new(8), 1, big), 1);
+        assert_eq!(par_parts(&ComputePool::new(8), 100, PAR_MIN_MACS), 1);
+        assert_eq!(par_parts(&ComputePool::new(8), 100, big), 4);
+        assert_eq!(par_parts(&ComputePool::new(2), 100, big), 2);
+        assert_eq!(par_parts(&ComputePool::new(8), 3, 100 * PAR_MIN_MACS), 3);
+    }
+
+    /// The ISSUE 6 par_parts bugfix: tile splits respect the MC block
+    /// boundary instead of slicing tall-tiny matrices into sub-block
+    /// slivers.
+    #[test]
+    fn tile_split_respects_mc_block_boundary() {
+        // tall output, many parts: every tile is an exact MC multiple
+        // except a possible tail
+        for (rows, parts) in [(100usize, 8usize), (4096, 8), (129, 4), (1000, 3)] {
+            let block = align_tile_rows(rows, parts);
+            assert_eq!(block % MC, 0, "block {block} for rows={rows} parts={parts}");
+            assert!(block * parts >= rows || block >= (rows + parts - 1) / parts);
+        }
+        // tiny output rows (the at_b "tiny-N tall matrix" case): one
+        // undivided tile instead of sub-MC slivers
+        assert_eq!(align_tile_rows(16, 4), 16);
+        assert_eq!(align_tile_rows(MC - 1, 2), MC - 1);
+        // exactly-MC rows stay one tile
+        assert_eq!(align_tile_rows(MC, 4), MC);
+        // and the pooled kernel stays bit-equal on such a shape
+        let (m, k, n) = (2048usize, 16, 8); // tall a, tiny out rows for aᵀ·g
+        let a = lattice(m * k, 13, 67, 0.02);
+        let g = lattice(m * n, 19, 71, 0.03);
+        let mut want = vec![0.0f32; k * n];
+        naive_matmul_at_b(&a, &g, m, k, n, &mut want);
+        let pool = ComputePool::new(4);
+        let mut got = vec![0.0f32; k * n];
+        par_matmul_at_b(&pool, &a, &g, m, k, n, &mut got);
+        assert!(bits_equal(&want, &got));
+    }
+
+    #[test]
+    fn quantize_i8_grid_is_deterministic_and_symmetric() {
+        let v = lattice(257, 23, 103, 0.07);
+        let qa = quantize_i8(&v, 8);
+        let qb = quantize_i8(&v, 8);
+        assert_eq!(qa.q, qb.q);
+        assert_eq!(qa.scale.to_bits(), qb.scale.to_bits());
+        let levels = quant_levels(8);
+        assert_eq!(levels, 127);
+        assert!(qa.q.iter().all(|&q| (q as i32).abs() <= levels));
+        // round-to-nearest: dequantized error bounded by half a step
+        let step = grid_step(v.iter().fold(0.0f32, |m, &x| m.max(x.abs())), 8);
+        assert!((qa.scale - step).abs() <= f32::EPSILON * step.abs());
+        for (&x, &q) in v.iter().zip(&qa.q) {
+            assert!((x - q as f32 * qa.scale).abs() <= 0.5 * qa.scale * 1.0001, "x={x} q={q}");
+        }
+        // degenerate tensors stay deterministic
+        let z = quantize_i8(&[0.0, 0.0], 8);
+        assert_eq!(z.scale, 1.0);
+        assert!(z.q.iter().all(|&q| q == 0));
+        let nan = quantize_i8(&[f32::NAN, 1.0], 8);
+        assert_eq!(nan.q[0], 0); // NaN → 0, never UB or nondeterminism
+    }
+
+    #[test]
+    fn fake_quantize_snaps_to_grid_within_half_step() {
+        let mut v = lattice(300, 31, 113, 0.05);
+        let orig = v.clone();
+        let absmax = orig.iter().fold(0.0f32, |m, &x| m.max(x.abs()));
+        fake_quantize(&mut v, 16);
+        let step = grid_step(absmax, 16);
+        for (&x, &q) in orig.iter().zip(&v) {
+            assert!((x - q).abs() <= 0.5 * step * 1.0001);
+        }
+        // repeat-quantization is a fixed point (already on the grid)
+        let mut again = v.clone();
+        fake_quantize(&mut again, 16);
+        assert!(bits_equal(&v, &again));
+        // bits ≥ 32 is the caller's passthrough contract; 31 still snaps
+        let mut w = vec![1.0f32, 0.5, -0.25];
+        fake_quantize(&mut w, 31);
+        assert!(w.iter().all(|v| v.is_finite()));
+    }
+
+    /// The derived-tolerance property of the tentpole: int8 GEMM vs the
+    /// f32 oracle, bounded by the quantization grid steps. Per product,
+    /// |q(a)q(b) − ab| ≤ |a|·Δb/2 + |b|·Δa/2 + ΔaΔb/4; summed over the
+    /// contraction depth.
+    #[test]
+    fn quantized_matmul_within_grid_tolerance_of_f32() {
+        let (m, k, n) = (24usize, 48, 16);
+        let a = lattice(m * k, 37, 101, 0.013);
+        let b = lattice(k * n, 53, 89, 0.011);
+        let qa = quantize_i8(&a, 8);
+        let qb = quantize_i8(&b, 8);
+        let mut acc = vec![0i32; m * n];
+        matmul_q8(&qa.q, &qb.q, m, k, n, &mut acc);
+        let s = qa.scale as f64 * qb.scale as f64;
+        let mut want = vec![0.0f32; m * n];
+        naive_matmul(&a, &b, m, k, n, &mut want);
+        let amax = a.iter().fold(0.0f32, |mx, &x| mx.max(x.abs())) as f64;
+        let bmax = b.iter().fold(0.0f32, |mx, &x| mx.max(x.abs())) as f64;
+        let (da, db) = (qa.scale as f64, qb.scale as f64);
+        let tol = k as f64 * (amax * db / 2.0 + bmax * da / 2.0 + da * db / 4.0) * 1.05 + 1e-6;
+        for (i, (&got_i32, &want_f)) in acc.iter().zip(&want).enumerate() {
+            let got = got_i32 as f64 * s;
+            assert!(
+                (got - want_f as f64).abs() <= tol,
+                "elem {i}: quantized {got} vs f32 {want_f} beyond derived tol {tol}"
+            );
+        }
+    }
+
+    #[test]
+    fn int8_kernels_are_partition_independent() {
+        let (m, k, n) = (64usize, 96, 48);
+        let a = lattice(m * k, 37, 101, 0.013);
+        let g = lattice(m * n, 29, 97, 0.017);
+        let w = lattice(k * n, 41, 83, 0.009);
+        let (qa, qg, qw) = (quantize_i8(&a, 8), quantize_i8(&g, 8), quantize_i8(&w, 8));
+
+        let mut fwd = vec![0i32; m * n];
+        matmul_q8(&qa.q, &qw.q, m, k, n, &mut fwd);
+        let mut dw = vec![0i32; k * n];
+        matmul_at_b_q8_cols(&qa.q, &qg.q, m, k, n, 0, &mut dw);
+        let mut gp = vec![0i32; m * k];
+        matmul_a_bt_q8(&qg.q, &qw.q, m, n, k, &mut gp);
+        for threads in [2usize, 5] {
+            let pool = ComputePool::new(threads);
+            let mut out = vec![0i32; m * n];
+            par_matmul_q8(&pool, &qa.q, &qw.q, m, k, n, &mut out);
+            assert_eq!(fwd, out);
+            let mut out = vec![0i32; k * n];
+            par_matmul_at_b_q8(&pool, &qa.q, &qg.q, m, k, n, &mut out);
+            assert_eq!(dw, out);
+            let mut out = vec![0i32; m * k];
+            par_matmul_a_bt_q8(&pool, &qg.q, &qw.q, m, n, k, &mut out);
+            assert_eq!(gp, out);
+        }
+    }
+
+    #[test]
+    fn active_path_reports_a_known_kernel() {
+        assert!(["portable", "avx2", "neon"].contains(&active_path()));
+        #[cfg(not(feature = "arch-kernels"))]
+        assert_eq!(active_path(), "portable");
+    }
+}

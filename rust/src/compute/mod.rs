@@ -1,7 +1,9 @@
 //! Learner compute-capability substrate, plus the engine-side
 //! [`pool`] worker pool that executes the native backend's parallel
-//! matmul tiles (`compute` models *simulated* learner speed; `pool`
-//! provides the *real* host parallelism the executor runs on).
+//! matmul tiles and the [`kernels`] GEMM microkernel layer those tiles
+//! run (`compute` models *simulated* learner speed; `pool`/`kernels`
+//! provide the *real* host parallelism and cache-blocked inner loops
+//! the executor runs on).
 //!
 //! The paper abstracts each learner's processing as a frequency `f_k`
 //! (eq. 10: `t_k^C = d_k·C_m / f_k`). Real devices sustain only a
@@ -18,6 +20,7 @@
 //! With these, the MNIST (K=10, T=120 s) point reproduces the paper's
 //! ETA τ=3 / adaptive τ=12 exactly.
 
+pub mod kernels;
 pub mod pool;
 
 pub use pool::ComputePool;

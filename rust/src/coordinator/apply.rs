@@ -14,7 +14,7 @@
 
 use std::sync::Arc;
 
-use crate::backend::Call;
+use crate::backend::{Call, Function};
 use crate::compute::ComputePool;
 use crate::coordinator::ParamSet;
 use crate::dataset::SyntheticDataset;
@@ -120,6 +120,16 @@ pub fn plan_chunks(man: Option<&Manifest>, call: &Call, n: usize) -> Vec<(usize,
 
 /// One learner's τ local iterations of full-batch SGD over its batch,
 /// accumulating masked gradient chunks through the backend.
+///
+/// On the native single-chunk path (no manifest → `plan_chunks` is one
+/// exact chunk) a `GradStep` call is upgraded to [`Function::FusedStep`]:
+/// the backend applies the SGD update in-call, so the per-iteration
+/// gradient round trip and the zero/accumulate/apply passes disappear.
+/// The fused arithmetic is bit-for-bit the unfused path's
+/// (`rust/tests/backend_native.rs`), so every equivalence downstream —
+/// trainer ≡ 1-shard cluster ≡ ParamServer replay — is unaffected. The
+/// PJRT/bucketed path (and multi-chunk plans, whose gradients must
+/// accumulate before one apply) keeps the unfused loop.
 #[allow(clippy::too_many_arguments)]
 pub fn local_training(
     handle: &EngineHandle,
@@ -131,6 +141,30 @@ pub fn local_training(
     tau: u64,
     lr: f32,
 ) -> anyhow::Result<()> {
+    let plan = plan_chunks(man, call, idx.len());
+    if man.is_none() && call.function == Function::GradStep && plan.len() == 1 {
+        let fused = Call { function: Function::FusedStep, ..call.clone() };
+        let (lo, hi, bucket) = plan[0];
+        // the batch tensors are iteration-invariant: build them once
+        let (x, y, mask) = padded_chunk(ds, &idx[lo..hi], bucket);
+        for _ in 0..tau {
+            let mut inputs = local.tensors.clone();
+            inputs.push(x.clone());
+            inputs.push(y.clone());
+            inputs.push(mask.clone());
+            inputs.push(Tensor::scalar_f32(lr));
+            let out = handle.call(&fused, inputs)?;
+            anyhow::ensure!(
+                out.len() == local.tensors.len() + 2,
+                "fused_step returned {} tensors",
+                out.len()
+            );
+            for (p, np) in local.tensors.iter_mut().zip(out) {
+                *p = np;
+            }
+        }
+        return Ok(());
+    }
     for _ in 0..tau {
         let mut grad_acc = local.zeros_like();
         let mut weight = 0.0f32;
@@ -299,6 +333,51 @@ mod tests {
         let (x, _, m) = padded_chunk(&ds, &[0, 1, 2], 3);
         assert_eq!(x.dims, vec![3, 4]);
         assert_eq!(m.as_f32(), &[1., 1., 1.]);
+    }
+
+    #[test]
+    fn fused_local_training_matches_the_unfused_replay_bit_for_bit() {
+        if crate::runtime::pjrt_available() {
+            return;
+        }
+        let spec = crate::dataset::DatasetSpec {
+            name: "t".into(),
+            total_samples: 64,
+            features: 12,
+            classes: 3,
+            precision_bits: 32,
+        };
+        let ds = SyntheticDataset::generate(&spec, 64, 9);
+        let layers = [12usize, 16, 3];
+        let idx: Vec<usize> = (0..40).collect();
+        let (tau, lr) = (5u64, 0.1f32);
+        let engine =
+            start_engine(&ModelSpec::pedestrian(), BackendChoice::Native, "artifacts").unwrap();
+        let call = Call::new(Function::GradStep, "toy", &layers);
+        // fused: local_training's native single-chunk fast path
+        let mut fused = ParamSet::init(&layers, 3);
+        local_training(&engine.handle(), None, &call, &mut fused, &ds, &idx, tau, lr).unwrap();
+        // unfused replay: explicit grad_step + accumulate + sgd_apply
+        let mut unfused = ParamSet::init(&layers, 3);
+        for _ in 0..tau {
+            let (x, y, mask) = padded_chunk(&ds, &idx, idx.len());
+            let mut inputs = unfused.tensors.clone();
+            inputs.extend([x, y, mask]);
+            let out = engine.handle().call(&call, inputs).unwrap();
+            let np = unfused.tensors.len();
+            let mut acc = unfused.zeros_like();
+            for (a, g) in acc.iter_mut().zip(&out[..np]) {
+                a.axpy(1.0, g);
+            }
+            let weight = out[np + 1].scalar();
+            unfused.sgd_apply(&acc, lr, weight);
+        }
+        for (a, b) in fused.tensors.iter().zip(&unfused.tensors) {
+            assert_eq!(a.dims, b.dims);
+            for (x, y) in a.as_f32().iter().zip(b.as_f32()) {
+                assert_eq!(x.to_bits(), y.to_bits());
+            }
+        }
     }
 
     #[test]

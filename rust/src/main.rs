@@ -79,7 +79,7 @@ fn print_help() {
             name: "train",
             about: "run real MEL training (hermetic native backend, or PJRT when available)",
             usage: "--task pedestrian --k 4 --t 30 --cycles 20 --d 2048 --backend auto \
-                    --hidden 16 --compute-threads 4 --precision-bits 32",
+                    --hidden 16 --compute-threads 4 --precision-bits 32 --model-bits 32",
         },
         Command {
             name: "bench",
@@ -392,6 +392,16 @@ fn cmd_train(args: &Args) -> i32 {
             return 2;
         }
     }
+    // --model-bits sets the model's P_m bit-width. Since ISSUE 6 this
+    // changes *real* execution in the native backend (int8 GEMMs at
+    // ≤ 8 bits, grid fake-quantize at 9..=31, plain f32 at ≥ 32) on
+    // top of the paper's eq. 2–4 timing coefficients.
+    let model_bits = args.get_u64("model-bits", scenario.model.model_precision_bits as u64);
+    if !(1..=64).contains(&model_bits) {
+        eprintln!("mel: usage error: --model-bits must be within 1..=64, got {model_bits}");
+        return 2;
+    }
+    scenario.model.model_precision_bits = model_bits as u32;
     let backend = match BackendChoice::parse(args.get_str("backend", "auto")) {
         Some(b) => b,
         None => {
@@ -493,6 +503,14 @@ fn cmd_info() -> i32 {
     println!(
         "compute pool: {} thread(s) (MEL_THREADS / --compute-threads)",
         mel::compute::pool::configured_threads()
+    );
+    println!(
+        "gemm kernels: {} path, blocks MC={} KC={} NC={} \
+         (quantized exec: int8 at P_m<=8, grid fake-quant at 9..=31, f32 at >=32)",
+        mel::compute::kernels::active_path(),
+        mel::compute::kernels::MC,
+        mel::compute::kernels::KC,
+        mel::compute::kernels::NC,
     );
     println!(
         "backends: native (always available), pjrt ({})",

@@ -133,7 +133,16 @@ impl ModelSpec {
             v.get("data_precision_bits")?.as_u64()? as u32,
         );
         if let Some(x) = v.opt("model_precision_bits") {
-            spec.model_precision_bits = x.as_u64()? as u32;
+            let bits = x.as_u64()?;
+            // P_m now selects a real execution path (int8 ≤ 8, grid
+            // fake-quant 9..=31, f32 ≥ 32), so reject nonsense widths
+            // here instead of deep inside a backend call
+            if !(1..=64).contains(&bits) {
+                return Err(JsonError::Access(format!(
+                    "model_precision_bits must be within 1..=64 (the P_m bit-width), got {bits}"
+                )));
+            }
+            spec.model_precision_bits = bits as u32;
         }
         if let Some(x) = v.opt("coeffs_per_sample") {
             spec.coeffs_per_sample = x.as_usize()?;
@@ -203,6 +212,23 @@ mod tests {
     #[should_panic(expected = "at least input")]
     fn mlp_requires_two_layers() {
         ModelSpec::mlp("bad", &[5], 8);
+    }
+
+    #[test]
+    fn from_json_validates_model_precision_bits() {
+        let ok = Json::parse(
+            r#"{"name":"t","layers":[4,2],"data_precision_bits":8,"model_precision_bits":8}"#,
+        )
+        .unwrap();
+        assert_eq!(ModelSpec::from_json(&ok).unwrap().model_precision_bits, 8);
+        for bad in ["0", "65", "1000"] {
+            let j = Json::parse(&format!(
+                r#"{{"name":"t","layers":[4,2],"data_precision_bits":8,"model_precision_bits":{bad}}}"#
+            ))
+            .unwrap();
+            let err = ModelSpec::from_json(&j).unwrap_err();
+            assert!(err.to_string().contains("1..=64"), "{err}");
+        }
     }
 
     #[test]
