@@ -73,6 +73,7 @@ fn main() {
                     cloudlet: cloudlet.clone(),
                     seed_offset: i,
                     churn: ChurnTrace::default(),
+                    population: None,
                 })
                 .collect(),
             global: Default::default(),

@@ -1,0 +1,95 @@
+//! Event-engine bench: binary-heap vs hierarchical timer-wheel
+//! [`EventQueue`] throughput on fill/drain and steady-state workloads
+//! up to 10^6 events, plus `plan_round`-style allocation latency flat
+//! vs grouped on population-sampled pools (the sublinear fast path).
+//! Emits `results/BENCH_sim_events.json` via `benchkit::Suite` so the
+//! scaling trajectory of the event engine is CI-gated across PRs.
+//!
+//! ```bash
+//! cargo bench --bench sim_events
+//! ```
+
+use mel::benchkit::{group, Bencher, Suite};
+use mel::prelude::*;
+use mel::scenario::PopulationSpec;
+use mel::sim::events::EventQueue;
+use mel::util::rng::Rng;
+
+/// Fill a queue with `n` uniformly-timed events, then drain it dry —
+/// the worst case for the heap (every pop pays the full log n
+/// sift-down) and the bulk-advance case for the wheel.
+fn fill_drain(mut q: EventQueue<u32>, n: usize, seed: u64) -> f64 {
+    let mut rng = Pcg64::new(seed, 0x51E);
+    for i in 0..n {
+        q.schedule(rng.uniform(0.0, 3600.0), i as u32);
+    }
+    let mut last = 0.0;
+    while let Some((t, _)) = q.pop() {
+        last = t;
+    }
+    last
+}
+
+/// Steady-state simulator loop: a resident set of `k` pending leases,
+/// `steps` pop-then-reschedule operations with exponential
+/// inter-arrivals — the access pattern of the orchestrator's event
+/// core under churn.
+fn steady_state(mut q: EventQueue<u32>, k: usize, steps: usize, seed: u64) -> f64 {
+    let mut rng = Pcg64::new(seed, 0x57D);
+    for i in 0..k {
+        q.schedule(rng.uniform(0.0, 30.0), i as u32);
+    }
+    let mut last = 0.0;
+    for _ in 0..steps {
+        let (t, e) = q.pop().expect("resident set never empties");
+        last = t;
+        q.schedule_in(rng.exponential(1.0 / 30.0), e);
+    }
+    last
+}
+
+fn main() {
+    let b = Bencher::quick();
+    let seed = 42;
+    let mut suite = Suite::new("sim_events");
+
+    group("fill/drain: schedule N then pop to empty (heap vs wheel)");
+    for &n in &[1_000usize, 10_000, 100_000, 1_000_000] {
+        suite.run(&b, &format!("events heap fill/drain: N={n}"), || {
+            fill_drain(EventQueue::heap(), n, seed)
+        });
+        suite.run(&b, &format!("events wheel fill/drain: N={n}"), || {
+            fill_drain(EventQueue::wheel(), n, seed)
+        });
+    }
+
+    group("steady state: 10^4 resident leases, 10^5 pop+reschedule ops");
+    {
+        let (k, steps) = (10_000usize, 100_000usize);
+        suite.run(&b, &format!("events heap steady: K={k} ops={steps}"), || {
+            steady_state(EventQueue::heap(), k, steps, seed)
+        });
+        suite.run(&b, &format!("events wheel steady: K={k} ops={steps}"), || {
+            steady_state(EventQueue::wheel(), k, steps, seed)
+        });
+    }
+
+    group("allocation latency: flat per-learner vs grouped per-group solve");
+    {
+        let cloudlet = CloudletConfig::by_task("pedestrian", 64).expect("known task");
+        let population = PopulationSpec::sample(&cloudlet, 16, seed);
+        for &k in &[1_000usize, 10_000, 100_000] {
+            let pop = population.rescaled(k);
+            let gp = pop.grouped_problem(30.0);
+            let flat = pop.expand().problem(30.0);
+            suite.run(&b, &format!("plan flat UB-Analytical: K={k}"), || {
+                Policy::Analytical.allocator().allocate(&flat).expect("feasible").tau
+            });
+            suite.run(&b, &format!("plan grouped UB-Analytical: K={k} G=16"), || {
+                mel::alloc::grouped::solve_analytical(&gp).expect("feasible").tau
+            });
+        }
+    }
+
+    suite.write_and_report();
+}

@@ -8,7 +8,8 @@
 #                        # and diff the gated suites against their stored
 #                        # baselines (results/BASELINE.json for
 #                        # cluster_cycle, results/BASELINE_train_step.json
-#                        # for train_step); a regression beyond
+#                        # for train_step, results/BASELINE_sim_events.json
+#                        # for sim_events); a regression beyond
 #                        # BENCH_REGRESS_THRESHOLD (default 50%) fails CI
 #
 # Tier-1 gate: `cargo build --release && cargo test -q` must be green.
@@ -66,6 +67,22 @@ for t in 1 4; do
     MEL_THREADS="$t" cargo test -q --test backend_native quantized
 done
 
+# ---- event-queue engine equivalence gate (ISSUE 7) ----------------------
+# The hierarchical timer wheel must be a drop-in replacement for the
+# binary heap: the equivalence/determinism suites rerun under both
+# engines (MEL_EVENT_QUEUE picks the EventQueue backend process-wide)
+# and must pass with identical results either way. The timer-wheel
+# property tests additionally compare pop order against the heap oracle
+# bit-for-bit in-process.
+for q in heap wheel; do
+    echo "==> orchestrator equivalence under MEL_EVENT_QUEUE=$q"
+    MEL_EVENT_QUEUE="$q" cargo test -q --test orchestrator_equivalence
+    echo "==> scale-engine integration under MEL_EVENT_QUEUE=$q"
+    MEL_EVENT_QUEUE="$q" cargo test -q --test scale_engine
+    echo "==> timer-wheel vs heap property tests under MEL_EVENT_QUEUE=$q"
+    MEL_EVENT_QUEUE="$q" cargo test -q --lib sim::
+done
+
 # ---- perf-trajectory gate self-test -------------------------------------
 # The stored-baseline comparison below only bites when CI_BENCH runs, so
 # prove on every CI run that the gate itself still fails on a synthetic
@@ -94,7 +111,7 @@ rm -rf "$gate_tmp"
 
 if [ "$CI_BENCH" = "1" ]; then
     mkdir -p results
-    for bench in solvers fig1_pedestrian_vs_k fig2_pedestrian_vs_t fig3_mnist e2e_cycle cluster_cycle train_step runtime ablations; do
+    for bench in solvers fig1_pedestrian_vs_k fig2_pedestrian_vs_t fig3_mnist e2e_cycle cluster_cycle train_step runtime ablations sim_events; do
         echo "==> cargo bench --bench $bench"
         cargo bench --bench "$bench"
     done
@@ -126,6 +143,7 @@ if [ "$CI_BENCH" = "1" ]; then
     }
     gate_suite cluster_cycle results/BASELINE.json
     gate_suite train_step results/BASELINE_train_step.json
+    gate_suite sim_events results/BASELINE_sim_events.json
 fi
 
 echo "CI OK"

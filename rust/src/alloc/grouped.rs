@@ -1,0 +1,579 @@
+//! **Grouped allocation** — solve once per heterogeneity group, share
+//! the result across members, making allocation cost a function of the
+//! group count `G` instead of the learner count `K`.
+//!
+//! Population-sampled scenarios ([`crate::scenario::PopulationSpec`])
+//! draw learners from a handful of groups, so their coefficient vectors
+//! contain only `G ≪ K` distinct values. Two identities make the
+//! reduction *exact*, not approximate:
+//!
+//! * **ETA** splits `d` evenly regardless of coefficients, so its τ is
+//!   a min over at most `2G` distinct `τ_max` evaluations.
+//! * **UB-Analytical**: `n` identical learners with coefficients
+//!   `(C², C¹, C⁰)` contribute `n·a/(τ+b)` to the eq. (29) constraint
+//!   `g(τ) = Σ a_k/(τ+b_k) − d`, which equals one reduced learner with
+//!   `(C²/n, C¹/n, C⁰)` — same `b`, `a` scaled by `n`. The relaxed root
+//!   τ* of the K-learner system is therefore the root of a G-sized
+//!   system ([`GroupedProblem::reduced`]), and the optimal *integer* τ
+//!   is the capacity boundary `max{τ : Σ_g n_g·⌊d_max_g(τ)⌋ ≥ d}` —
+//!   the same criterion [`crate::alloc::exact::ExactAllocator`] binary
+//!   searches, evaluated here in O(G) per probe.
+//!
+//! [`allocate_auto`] is the drop-in front door planners use: it dedups
+//! a flat [`Problem`], takes the grouped path when the pool collapses
+//! (`2G ≤ K`), and stays bit-for-bit on the flat allocator otherwise —
+//! so fully heterogeneous scenarios are untouched.
+
+use std::collections::HashMap;
+
+use super::eta::EtaAllocator;
+use super::{relax, Allocation, AllocError, Policy, Problem, TaskAllocator};
+use crate::learner::Coeffs;
+
+/// An allocation problem in grouped form: one coefficient triple per
+/// heterogeneity group plus member counts. Memory is O(G).
+#[derive(Debug, Clone)]
+pub struct GroupedProblem {
+    /// One [`Coeffs`] per group.
+    pub coeffs: Vec<Coeffs>,
+    /// Members per group (all share the group's coefficients).
+    pub counts: Vec<usize>,
+    pub total_samples: usize,
+    pub t_total: f64,
+}
+
+impl GroupedProblem {
+    pub fn new(coeffs: Vec<Coeffs>, counts: Vec<usize>, total_samples: usize, t_total: f64) -> Self {
+        assert_eq!(coeffs.len(), counts.len(), "one count per group");
+        Self { coeffs, counts, total_samples, t_total }
+    }
+
+    /// Number of groups G.
+    pub fn g(&self) -> usize {
+        self.coeffs.len()
+    }
+
+    /// Number of learners K = Σ n_g.
+    pub fn k(&self) -> usize {
+        self.counts.iter().sum()
+    }
+
+    /// Dedup a flat problem into groups by exact (bitwise) coefficient
+    /// equality, in first-appearance order. Returns the grouped problem
+    /// and `group_of[i]` = group index of flat learner `i`.
+    pub fn from_problem(p: &Problem) -> (Self, Vec<usize>) {
+        let mut index: HashMap<(u64, u64, u64), usize> = HashMap::new();
+        let mut coeffs = Vec::new();
+        let mut counts = Vec::new();
+        let mut group_of = Vec::with_capacity(p.k());
+        for c in &p.coeffs {
+            let key = (c.c2.to_bits(), c.c1.to_bits(), c.c0.to_bits());
+            let g = *index.entry(key).or_insert_with(|| {
+                coeffs.push(*c);
+                counts.push(0);
+                coeffs.len() - 1
+            });
+            counts[g] += 1;
+            group_of.push(g);
+        }
+        (Self { coeffs, counts, total_samples: p.total_samples, t_total: p.t_total }, group_of)
+    }
+
+    /// The canonical group-major member ordering (`group_of` for a pool
+    /// laid out group 0 first, then group 1, ...).
+    pub fn group_major_order(&self) -> Vec<usize> {
+        let mut out = Vec::with_capacity(self.k());
+        for (g, &n) in self.counts.iter().enumerate() {
+            out.extend(std::iter::repeat(g).take(n));
+        }
+        out
+    }
+
+    /// The G-learner reduced problem whose relaxed constraint set is
+    /// *identical* to the full K-learner one: `(C²/n, C¹/n, C⁰)` per
+    /// group (same `b_k`, `a_k` scaled by `n`).
+    pub fn reduced(&self) -> Problem {
+        Problem {
+            coeffs: self
+                .coeffs
+                .iter()
+                .zip(&self.counts)
+                .map(|(c, &n)| Coeffs {
+                    c2: c.c2 / n as f64,
+                    c1: c.c1 / n as f64,
+                    c0: c.c0,
+                })
+                .collect(),
+            total_samples: self.total_samples,
+            t_total: self.t_total,
+        }
+    }
+
+    /// Expand to a flat problem in group-major member order (O(K) —
+    /// tests and equivalence harnesses only).
+    pub fn expand(&self) -> Problem {
+        let mut coeffs = Vec::with_capacity(self.k());
+        for (c, &n) in self.coeffs.iter().zip(&self.counts) {
+            coeffs.extend(std::iter::repeat(*c).take(n));
+        }
+        Problem { coeffs, total_samples: self.total_samples, t_total: self.t_total }
+    }
+
+    /// Integer batch capacity at iteration count `tau`, O(G); bit-equal
+    /// to [`Problem::capacity`] on the expanded pool (per-member floors
+    /// are identical within a group).
+    pub fn capacity(&self, tau: u64) -> u64 {
+        self.coeffs
+            .iter()
+            .zip(&self.counts)
+            .map(|(c, &n)| {
+                let dm = c.d_max(tau as f64, self.t_total);
+                if dm <= 0.0 {
+                    0
+                } else {
+                    (dm.floor() as u64).saturating_mul(n as u64)
+                }
+            })
+            .sum()
+    }
+
+    /// The optimal integer τ (capacity boundary), O(G log τ). Mirrors
+    /// `ExactAllocator::optimal_tau`; in the effectively-unbounded
+    /// regime (τ > 2^40) it returns the last *feasible* probe.
+    pub fn optimal_tau(&self) -> Option<u64> {
+        let d = self.total_samples as u64;
+        if self.capacity(1) < d {
+            return None;
+        }
+        let mut hi = 2u64;
+        while self.capacity(hi) >= d {
+            hi *= 2;
+            if hi > 1 << 40 {
+                return Some(hi / 2);
+            }
+        }
+        let mut lo = hi / 2; // feasible
+        while hi - lo > 1 {
+            let mid = lo + (hi - lo) / 2;
+            if self.capacity(mid) >= d {
+                lo = mid;
+            } else {
+                hi = mid;
+            }
+        }
+        Some(lo)
+    }
+}
+
+/// A per-group allocation: members of group `g` receive `base[g]` or
+/// `base[g] + 1` samples (the first `plus_one[g]` of them, in member
+/// order). O(G) memory; expand on demand.
+#[derive(Debug, Clone)]
+pub struct GroupedAllocation {
+    pub tau: u64,
+    pub relaxed_tau: f64,
+    /// Per-member batch floor, per group.
+    pub base: Vec<usize>,
+    /// How many members of each group get `base + 1`.
+    pub plus_one: Vec<usize>,
+    /// Per-member relaxed share per group (empty ⇒ use the integer
+    /// batches, ETA semantics).
+    pub relaxed_share: Vec<f64>,
+    pub policy: &'static str,
+}
+
+impl GroupedAllocation {
+    /// Total samples assigned.
+    pub fn total(&self, counts: &[usize]) -> usize {
+        self.base
+            .iter()
+            .zip(counts)
+            .zip(&self.plus_one)
+            .map(|((&b, &n), &p)| b * n + p)
+            .sum()
+    }
+
+    /// Batch for member `rank` (0-based within its group) of group `g`.
+    pub fn batch_for(&self, g: usize, rank: usize) -> usize {
+        self.base[g] + usize::from(rank < self.plus_one[g])
+    }
+
+    /// Expand per-member batches for a pool laid out as `group_of`
+    /// (each member's group, in flat order; ranks follow flat order).
+    pub fn expand_batches(&self, group_of: &[usize]) -> Vec<usize> {
+        let mut rank = vec![0usize; self.base.len()];
+        group_of
+            .iter()
+            .map(|&g| {
+                let r = rank[g];
+                rank[g] += 1;
+                self.batch_for(g, r)
+            })
+            .collect()
+    }
+
+    /// Lift into a standard [`Allocation`] for the flat pool `group_of`
+    /// describes.
+    pub fn to_allocation(&self, group_of: &[usize]) -> Allocation {
+        let batches = self.expand_batches(group_of);
+        let relaxed_batches = if self.relaxed_share.is_empty() {
+            batches.iter().map(|&b| b as f64).collect()
+        } else {
+            group_of.iter().map(|&g| self.relaxed_share[g]).collect()
+        };
+        Allocation {
+            tau: self.tau,
+            tau_k: Vec::new(),
+            batches,
+            relaxed_tau: self.relaxed_tau,
+            relaxed_batches,
+            policy: self.policy,
+            sai_steps: 0,
+        }
+    }
+}
+
+/// ETA on a grouped problem, O(G): bit-for-bit the flat
+/// [`EtaAllocator`] on the pool `group_of` describes (`base = ⌊d/K⌋`,
+/// the first `d mod K` members in flat order absorb the remainder, τ
+/// bounded by the slowest non-empty share).
+pub fn solve_eta(gp: &GroupedProblem, group_of: &[usize]) -> Result<GroupedAllocation, AllocError> {
+    let k = gp.k();
+    if k == 0 {
+        return Err(AllocError::Infeasible { reason: "no learners".into() });
+    }
+    debug_assert_eq!(group_of.len(), k);
+    let d = gp.total_samples;
+    let base = d / k;
+    let rem = d % k;
+    // plus-one counts per group = how many of the first `rem` flat
+    // members fall in each group
+    let mut plus_one = vec![0usize; gp.g()];
+    for &g in &group_of[..rem] {
+        plus_one[g] += 1;
+    }
+    let mut tau_f = f64::INFINITY;
+    for (g, (c, &n)) in gp.coeffs.iter().zip(&gp.counts).enumerate() {
+        if plus_one[g] > 0 {
+            tau_f = tau_f.min(c.tau_max((base + 1) as f64, gp.t_total));
+        }
+        if n > plus_one[g] && base > 0 {
+            tau_f = tau_f.min(c.tau_max(base as f64, gp.t_total));
+        }
+    }
+    if !tau_f.is_finite() || tau_f < 1.0 {
+        return Err(AllocError::Infeasible {
+            reason: format!(
+                "ETA cannot complete one local iteration within T = {} \
+                 (slowest group's τ_max = {tau_f:.3})",
+                gp.t_total
+            ),
+        });
+    }
+    Ok(GroupedAllocation {
+        tau: tau_f.floor() as u64,
+        relaxed_tau: tau_f,
+        base: vec![base; gp.g()],
+        plus_one,
+        relaxed_share: Vec::new(),
+        policy: "grouped-eta",
+    })
+}
+
+/// UB-Analytical on a grouped problem, O(G log τ): Newton on the
+/// reduced G-sized eq. (29) system for the relaxed τ*, then the
+/// capacity-boundary integer τ (the provably optimal uniform-τ integer
+/// solution — same criterion as the exact reference solver), with
+/// per-group rounding: every group starts at its per-member cap
+/// `⌊d_max_g(τ)⌋` and the surplus over `d` is trimmed from the last
+/// groups first.
+pub fn solve_analytical(gp: &GroupedProblem) -> Result<GroupedAllocation, AllocError> {
+    if gp.k() == 0 {
+        return Err(AllocError::Infeasible { reason: "no learners".into() });
+    }
+    let d = gp.total_samples;
+    let tau = gp.optimal_tau().ok_or_else(|| AllocError::Infeasible {
+        reason: format!("grouped capacity(1) < d = {d}"),
+    })?;
+    // per-member caps at the chosen τ
+    let caps: Vec<usize> = gp
+        .coeffs
+        .iter()
+        .map(|c| {
+            let dm = c.d_max(tau as f64, gp.t_total);
+            if dm <= 0.0 {
+                0
+            } else {
+                dm.floor() as usize
+            }
+        })
+        .collect();
+    let capacity: usize = caps.iter().zip(&gp.counts).map(|(&f, &n)| f * n).sum();
+    debug_assert!(capacity >= d, "optimal_tau guarantees capacity");
+    // trim the surplus deterministically from the highest group index
+    // down; within a group the shortfall spreads as evenly as possible
+    let mut excess = capacity - d;
+    let g_count = gp.g();
+    let mut base = vec![0usize; g_count];
+    let mut plus_one = vec![0usize; g_count];
+    for g in (0..g_count).rev() {
+        let n = gp.counts[g];
+        let full = caps[g] * n;
+        let sub = excess.min(full);
+        excess -= sub;
+        let total = full - sub;
+        base[g] = total / n.max(1);
+        plus_one[g] = total % n.max(1);
+    }
+    debug_assert_eq!(excess, 0);
+    // relaxed diagnostics from the reduced system (exact same root as
+    // the flat K-learner Newton, up to f64 summation order)
+    let (relaxed_tau, relaxed_share) = match relax::solve(&gp.reduced()) {
+        Ok(sol) => {
+            // reduced batches are group totals n_g·s_g; report the
+            // per-member share s_g = d_max_g(τ*)
+            let share = gp
+                .coeffs
+                .iter()
+                .map(|c| c.d_max(sol.tau, gp.t_total))
+                .collect();
+            (sol.tau, share)
+        }
+        // capacity was feasible but some group's a_g ≤ 0 (C⁰ ≥ T): those
+        // groups got zero batches above; fall back to the integer τ
+        Err(_) => (tau as f64, vec![0.0; g_count]),
+    };
+    Ok(GroupedAllocation {
+        tau,
+        relaxed_tau,
+        base,
+        plus_one,
+        relaxed_share,
+        policy: "grouped-analytical",
+    })
+}
+
+/// Allocate `p` under `policy`, taking the grouped fast path when the
+/// pool dedups to at most half as many groups as learners (`2G ≤ K`) —
+/// otherwise (the fully heterogeneous common case) this is *exactly*
+/// the flat allocator, bit for bit. ETA and UB-Analytical have exact
+/// grouped solvers; every other policy stays flat.
+pub fn allocate_auto(policy: Policy, p: &Problem) -> Result<Allocation, AllocError> {
+    let flat = || policy.allocator().allocate(p);
+    if p.k() == 0 {
+        return flat();
+    }
+    match policy {
+        Policy::Eta | Policy::Analytical => {}
+        _ => return flat(),
+    }
+    let (gp, group_of) = GroupedProblem::from_problem(p);
+    if gp.g() * 2 > p.k() {
+        return flat();
+    }
+    let ga = match policy {
+        Policy::Eta => solve_eta(&gp, &group_of)?,
+        _ => solve_analytical(&gp)?,
+    };
+    let alloc = ga.to_allocation(&group_of);
+    debug_assert!(alloc.is_feasible(p), "grouped allocation must be feasible");
+    Ok(alloc)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::alloc::analytical::AnalyticalAllocator;
+    use crate::alloc::exact::ExactAllocator;
+    use crate::alloc::testutil::two_class_problem;
+    use crate::util::rng::{Pcg64, Rng};
+
+    /// Problem whose coefficients repeat across G groups with given
+    /// member counts, interleaved round-robin (worst case for grouping).
+    fn grouped_fixture(rng: &mut Pcg64, counts: &[usize], d: usize, t: f64) -> Problem {
+        let groups: Vec<Coeffs> = counts
+            .iter()
+            .map(|_| Coeffs {
+                c2: rng.uniform(1e-5, 1e-2),
+                c1: rng.uniform(1e-6, 1e-3),
+                c0: rng.uniform(0.001, t * 0.2),
+            })
+            .collect();
+        let mut remaining = counts.to_vec();
+        let mut coeffs = Vec::new();
+        loop {
+            let mut placed = false;
+            for (g, r) in remaining.iter_mut().enumerate() {
+                if *r > 0 {
+                    coeffs.push(groups[g]);
+                    *r -= 1;
+                    placed = true;
+                }
+            }
+            if !placed {
+                break;
+            }
+        }
+        Problem { coeffs, total_samples: d, t_total: t }
+    }
+
+    #[test]
+    fn dedup_finds_groups_in_first_appearance_order() {
+        let p = two_class_problem(7, 100, 30.0); // fast/slow alternating
+        let (gp, group_of) = GroupedProblem::from_problem(&p);
+        assert_eq!(gp.g(), 2);
+        assert_eq!(gp.counts, vec![4, 3]); // 4 even (fast), 3 odd (slow)
+        assert_eq!(group_of, vec![0, 1, 0, 1, 0, 1, 0]);
+        assert_eq!(gp.coeffs[0], p.coeffs[0]);
+        assert_eq!(gp.coeffs[1], p.coeffs[1]);
+        assert_eq!(gp.k(), 7);
+        // expansion round-trips the multiset (group-major order)
+        let flat = gp.expand();
+        assert_eq!(flat.k(), 7);
+        assert_eq!(gp.group_major_order(), vec![0, 0, 0, 0, 1, 1, 1]);
+    }
+
+    #[test]
+    fn grouped_capacity_is_bit_equal_to_flat() {
+        let p = two_class_problem(10, 9000, 30.0);
+        let (gp, _) = GroupedProblem::from_problem(&p);
+        for tau in [1u64, 5, 17, 36, 120, 500] {
+            assert_eq!(gp.capacity(tau), p.capacity(tau), "tau {tau}");
+        }
+    }
+
+    #[test]
+    fn grouped_eta_is_bit_equal_to_flat_eta() {
+        let mut rng = Pcg64::seeded(41);
+        for trial in 0..40 {
+            let counts = [1 + trial % 5, 2 + trial % 3, 1 + trial % 7];
+            let p = grouped_fixture(&mut rng, &counts, 100 + 97 * trial, 40.0);
+            let (gp, group_of) = GroupedProblem::from_problem(&p);
+            let flat = EtaAllocator.allocate(&p);
+            let grouped = solve_eta(&gp, &group_of);
+            match (flat, grouped) {
+                (Ok(f), Ok(g)) => {
+                    assert_eq!(f.tau, g.tau, "trial {trial}");
+                    let a = g.to_allocation(&group_of);
+                    assert_eq!(f.batches, a.batches, "trial {trial}");
+                    assert_eq!(f.relaxed_tau, g.relaxed_tau, "trial {trial}");
+                    assert_eq!(f.relaxed_batches, a.relaxed_batches);
+                }
+                (Err(_), Err(_)) => {}
+                (x, y) => panic!("trial {trial}: {x:?} vs {y:?}"),
+            }
+        }
+    }
+
+    #[test]
+    fn grouped_analytical_achieves_exact_integer_optimum() {
+        let mut rng = Pcg64::seeded(43);
+        let mut checked = 0;
+        for trial in 0..40 {
+            let counts = [2 + trial % 9, 1 + trial % 4, 3];
+            let p = grouped_fixture(&mut rng, &counts, 500 + 211 * trial, 35.0);
+            let (gp, group_of) = GroupedProblem::from_problem(&p);
+            match solve_analytical(&gp) {
+                Ok(g) => {
+                    let exact = ExactAllocator::optimal_tau(&p).expect("feasible");
+                    assert_eq!(g.tau, exact, "trial {trial}");
+                    let a = g.to_allocation(&group_of);
+                    assert_eq!(
+                        a.batches.iter().sum::<usize>(),
+                        p.total_samples,
+                        "conservation, trial {trial}"
+                    );
+                    assert!(a.is_feasible(&p), "trial {trial}");
+                    checked += 1;
+                }
+                Err(_) => assert!(ExactAllocator::optimal_tau(&p).is_none(), "trial {trial}"),
+            }
+        }
+        assert!(checked > 15, "too few feasible draws ({checked})");
+    }
+
+    #[test]
+    fn reduced_system_has_the_same_relaxed_root() {
+        let p = two_class_problem(24, 9000, 30.0);
+        let (gp, _) = GroupedProblem::from_problem(&p);
+        let flat = relax::solve(&p).unwrap();
+        let red = relax::solve(&gp.reduced()).unwrap();
+        assert!(
+            (flat.tau - red.tau).abs() < 1e-9 * (1.0 + flat.tau),
+            "flat τ* {} vs reduced τ* {}",
+            flat.tau,
+            red.tau
+        );
+        // reduced batches are group totals: they sum to d
+        let sum: f64 = red.batches.iter().sum();
+        assert!((sum - 9000.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn grouped_analytical_tracks_flat_analytical() {
+        for (k, d, t) in [(10, 9000, 30.0), (50, 9000, 30.0), (20, 3000, 60.0)] {
+            let p = two_class_problem(k, d, t);
+            let (gp, group_of) = GroupedProblem::from_problem(&p);
+            let flat = AnalyticalAllocator::default().allocate(&p).unwrap();
+            let grouped = solve_analytical(&gp).unwrap();
+            // flat SAI is property-tested optimal; grouped is optimal by
+            // construction — they must agree on τ
+            assert_eq!(grouped.tau, flat.tau, "K={k}");
+            assert!(
+                (grouped.relaxed_tau - flat.relaxed_tau).abs()
+                    < 1e-6 * (1.0 + flat.relaxed_tau)
+            );
+            let a = grouped.to_allocation(&group_of);
+            assert!(a.is_feasible(&p));
+            assert_eq!(a.batches.iter().sum::<usize>(), d);
+        }
+    }
+
+    #[test]
+    fn allocate_auto_takes_flat_path_when_heterogeneous() {
+        let mut rng = Pcg64::seeded(47);
+        let p = crate::alloc::testutil::random_problem(&mut rng, 8, 2000, 40.0);
+        // all-distinct coefficients: must be the flat allocator verbatim
+        let auto = allocate_auto(Policy::Analytical, &p).unwrap();
+        let flat = AnalyticalAllocator::default().allocate(&p).unwrap();
+        assert_eq!(auto.policy, "ub-analytical");
+        assert_eq!(auto.tau, flat.tau);
+        assert_eq!(auto.batches, flat.batches);
+        assert_eq!(auto.relaxed_tau, flat.relaxed_tau);
+    }
+
+    #[test]
+    fn allocate_auto_takes_grouped_path_when_collapsed() {
+        let p = two_class_problem(12, 5000, 30.0);
+        let auto = allocate_auto(Policy::Analytical, &p).unwrap();
+        assert_eq!(auto.policy, "grouped-analytical");
+        assert!(auto.is_feasible(&p));
+        let eta = allocate_auto(Policy::Eta, &p).unwrap();
+        assert_eq!(eta.policy, "grouped-eta");
+        // grouped ETA stays bit-equal to flat ETA
+        let flat_eta = EtaAllocator.allocate(&p).unwrap();
+        assert_eq!(eta.tau, flat_eta.tau);
+        assert_eq!(eta.batches, flat_eta.batches);
+        // non-grouped policies pass through untouched
+        let sai = allocate_auto(Policy::UbSai, &p).unwrap();
+        assert_eq!(sai.policy, "ub-sai");
+    }
+
+    #[test]
+    fn one_group_pool_collapses_to_one_solve() {
+        let c = Coeffs { c2: 651e-6, c1: 36e-6, c0: 0.086 };
+        let p = Problem { coeffs: vec![c; 1000], total_samples: 50_000, t_total: 30.0 };
+        let (gp, group_of) = GroupedProblem::from_problem(&p);
+        assert_eq!(gp.g(), 1);
+        let g = solve_analytical(&gp).unwrap();
+        let a = g.to_allocation(&group_of);
+        assert_eq!(a.batches.iter().sum::<usize>(), 50_000);
+        assert!(a.is_feasible(&p));
+        // members differ by at most one sample
+        let (min, max) = (
+            a.batches.iter().min().unwrap(),
+            a.batches.iter().max().unwrap(),
+        );
+        assert!(max - min <= 1, "uneven within-group split: {min}..{max}");
+    }
+}

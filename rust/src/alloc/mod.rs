@@ -21,6 +21,7 @@ pub mod analytical;
 pub mod async_eta;
 pub mod eta;
 pub mod exact;
+pub mod grouped;
 pub mod heuristic;
 pub mod numerical;
 pub mod relax;

@@ -11,10 +11,21 @@
 //!   in the enrolled set, and "enrol everyone" is optimal
 //!   ([`adaptive_is_monotone`] is property-tested).
 //! * **ETA**: equal batches mean one slow/remote node drags τ for the
-//!   whole cloudlet — there is an *optimal subset size*, and the greedy
-//!   sweep ([`best_eta_subset`]) finds the best prefix by per-node
+//!   whole cloudlet — there is an *optimal subset size*, and the prefix
+//!   search ([`best_eta_subset`]) finds the best prefix by per-node
 //!   throughput score. This quantifies a second, structural advantage of
 //!   adaptive allocation: it never needs node triage.
+//!
+//! **Complexity.** [`best_eta_subset`] used to re-solve ETA per prefix —
+//! O(K²) total work. It now binary-searches the achievable integer τ
+//! and tests all K prefixes per probe with one prefix-min pass over
+//! `d_max_k(τ)`, which is O(K log K + K log τ_max): prefix `m` under
+//! ETA achieves `τ ≥ t` iff its `rem = d mod m` biggest shares fit the
+//! first `rem` nodes (`P_{rem−1} ≥ base+1`) and the equal share fits
+//! everyone (`P_{m−1} ≥ base`), where `P` is the running prefix-min of
+//! `⌊d_max⌋`-style capacities in score order. The old sweep survives as
+//! [`best_eta_subset_sweep`], the brute-force oracle the property tests
+//! compare against.
 
 use super::eta::EtaAllocator;
 use super::{AllocError, Problem, TaskAllocator};
@@ -45,14 +56,10 @@ pub fn subproblem(p: &Problem, idx: &[usize]) -> Problem {
     }
 }
 
-/// Best ETA subset: sort candidates by their equal-share cost, sweep
-/// prefix sizes 1..=K, return the prefix that maximizes ETA's τ.
-/// O(K² ) ETA solves — fine for cloudlet scales.
-pub fn best_eta_subset(p: &Problem) -> Result<Selection, AllocError> {
+/// Candidates ranked by equal-share cost (the triage order both subset
+/// searches sweep prefixes of).
+fn triage_order(p: &Problem) -> Vec<usize> {
     let k = p.k();
-    if k == 0 {
-        return Err(AllocError::Infeasible { reason: "no candidates".into() });
-    }
     let mut order: Vec<usize> = (0..k).collect();
     // rank by cost on a K-way equal share (a neutral reference share)
     let ref_share = p.total_samples as f64 / k as f64;
@@ -61,6 +68,92 @@ pub fn best_eta_subset(p: &Problem) -> Result<Selection, AllocError> {
             .partial_cmp(&eta_cost(&p.coeffs[b], ref_share))
             .unwrap()
     });
+    order
+}
+
+/// Best ETA subset: sort candidates by their equal-share cost, then
+/// binary-search the largest integer τ some prefix can sustain; the
+/// smallest such prefix matches the sweep's first-wins tie-break.
+/// O(K log K + K log τ) instead of the sweep's O(K²).
+pub fn best_eta_subset(p: &Problem) -> Result<Selection, AllocError> {
+    let k = p.k();
+    if k == 0 {
+        return Err(AllocError::Infeasible { reason: "no candidates".into() });
+    }
+    let d = p.total_samples;
+    let order = triage_order(p);
+    let coeffs: Vec<Coeffs> = order.iter().map(|&i| p.coeffs[i]).collect();
+
+    // upper bound on any prefix's τ: the best single node at the
+    // smallest positive share (every non-empty prefix hands someone ≥ 1)
+    let mut hi = 0u64;
+    for c in &coeffs {
+        let tm = c.tau_max(1.0, p.t_total);
+        if tm.is_finite() && tm >= 1.0 {
+            hi = hi.max(tm.floor() as u64);
+        }
+    }
+    let infeasible = || AllocError::Infeasible {
+        reason: "no feasible ETA subset (even the best single node fails)".into(),
+    };
+    if d == 0 || hi == 0 {
+        return Err(infeasible());
+    }
+
+    // smallest prefix size m whose ETA split sustains τ ≥ t, via one
+    // prefix-min pass over d_max(t)
+    let feasible_prefix = |t: u64| -> Option<usize> {
+        let tf = t as f64;
+        let mut pmin = Vec::with_capacity(k);
+        let mut run = f64::INFINITY;
+        for c in &coeffs {
+            run = run.min(c.d_max(tf, p.t_total));
+            pmin.push(run);
+        }
+        (1..=k).find(|&m| {
+            let base = d / m;
+            let rem = d % m;
+            let plus_ok = rem == 0 || pmin[rem - 1] >= (base + 1) as f64;
+            let base_ok = base == 0 || pmin[m - 1] >= base as f64;
+            plus_ok && base_ok
+        })
+    };
+
+    if feasible_prefix(1).is_none() {
+        return Err(infeasible());
+    }
+    // feasibility is downward-closed in t (d_max is monotone in τ even
+    // under f64 rounding), so binary search for the largest feasible τ
+    let (mut lo, mut hi_b) = (1u64, hi.max(1));
+    while lo < hi_b {
+        let mid = lo + (hi_b - lo + 1) / 2;
+        if feasible_prefix(mid).is_some() {
+            lo = mid;
+        } else {
+            hi_b = mid - 1;
+        }
+    }
+    let m = feasible_prefix(lo).expect("lo stays feasible");
+    let subset = &order[..m];
+    // run the real allocator on the winner so the reported τ is exactly
+    // what enacting the selection yields; on a knife-edge rounding
+    // disagreement between τ_max and its inverse d_max (measure-zero),
+    // fall back to the exhaustive sweep
+    match EtaAllocator.allocate(&subproblem(p, subset)) {
+        Ok(a) if a.tau == lo => Ok(Selection { enrolled: subset.to_vec(), tau: a.tau }),
+        _ => best_eta_subset_sweep(p),
+    }
+}
+
+/// The original exhaustive prefix sweep — one ETA solve per prefix,
+/// O(K²). Kept as the brute-force oracle [`best_eta_subset`] is
+/// property-tested against (and its fallback on float knife-edges).
+pub fn best_eta_subset_sweep(p: &Problem) -> Result<Selection, AllocError> {
+    let k = p.k();
+    if k == 0 {
+        return Err(AllocError::Infeasible { reason: "no candidates".into() });
+    }
+    let order = triage_order(p);
     let mut best: Option<Selection> = None;
     for take in 1..=k {
         let subset = &order[..take];
@@ -119,6 +212,50 @@ mod tests {
     }
 
     #[test]
+    fn fast_path_matches_sweep_oracle() {
+        // the O(K log K) search must reproduce the O(K²) sweep exactly:
+        // same τ, same enrolled prefix (first-wins tie-break included)
+        let mut rng = Pcg64::seeded(97);
+        let mut agreed = 0;
+        for trial in 0..120 {
+            let k = 1 + trial % 17;
+            let p = random_problem(&mut rng, k, 50 + 211 * (trial % 23), 25.0);
+            match (best_eta_subset(&p), best_eta_subset_sweep(&p)) {
+                (Ok(fast), Ok(sweep)) => {
+                    assert_eq!(fast.tau, sweep.tau, "trial {trial}");
+                    assert_eq!(fast.enrolled, sweep.enrolled, "trial {trial}");
+                    agreed += 1;
+                }
+                (Err(_), Err(_)) => {}
+                (x, y) => panic!("trial {trial}: feasibility disagrees: {x:?} vs {y:?}"),
+            }
+        }
+        assert!(agreed > 60, "too few feasible draws ({agreed})");
+    }
+
+    #[test]
+    fn fast_path_matches_sweep_on_straggler_pools() {
+        for k in [1usize, 2, 3, 7, 10, 24, 51] {
+            let p = pool_with_straggler(k);
+            let fast = best_eta_subset(&p).unwrap();
+            let sweep = best_eta_subset_sweep(&p).unwrap();
+            assert_eq!(fast.tau, sweep.tau, "k={k}");
+            assert_eq!(fast.enrolled, sweep.enrolled, "k={k}");
+        }
+    }
+
+    #[test]
+    fn fast_path_handles_d_smaller_than_k() {
+        // d < K: trailing prefix members get zero samples and must not
+        // drag τ (ETA skips d_k = 0 in its min)
+        let p = two_class_problem(12, 5, 30.0);
+        let fast = best_eta_subset(&p).unwrap();
+        let sweep = best_eta_subset_sweep(&p).unwrap();
+        assert_eq!(fast.tau, sweep.tau);
+        assert_eq!(fast.enrolled, sweep.enrolled);
+    }
+
+    #[test]
     fn adaptive_is_monotone_in_enrolment() {
         let mut rng = Pcg64::seeded(31);
         for trial in 0..40 {
@@ -162,6 +299,14 @@ mod tests {
     fn empty_pool_errors() {
         let p = Problem { coeffs: vec![], total_samples: 10, t_total: 1.0 };
         assert!(best_eta_subset(&p).is_err());
+        assert!(best_eta_subset_sweep(&p).is_err());
+    }
+
+    #[test]
+    fn zero_samples_errors() {
+        let p = two_class_problem(4, 0, 30.0);
+        assert!(best_eta_subset(&p).is_err());
+        assert!(best_eta_subset_sweep(&p).is_err());
     }
 
     #[test]

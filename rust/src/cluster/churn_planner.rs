@@ -48,6 +48,10 @@ pub struct ChurnAwarePlanner {
     pub min_batch: usize,
     /// Lease deadline clock in seconds; 0 ⇒ the problem's `t_total`.
     pub lease_s: f64,
+    /// Opt-in: re-splits solve once per heterogeneity group
+    /// ([`crate::alloc::grouped::allocate_auto`]) — sublinear in K on
+    /// population-sampled shards, where churn makes re-splits frequent.
+    pub grouped: bool,
     active: Vec<bool>,
     /// Current split over the full learner index space (inactive ⇒ 0).
     planned: Vec<usize>,
@@ -70,6 +74,7 @@ impl ChurnAwarePlanner {
             shrink: 0.5,
             min_batch: 1,
             lease_s: 0.0,
+            grouped: false,
             active: initial_active,
             planned: vec![0; k],
             planned_tau: vec![0; k],
@@ -90,6 +95,12 @@ impl ChurnAwarePlanner {
     /// baseline: planned leases are re-dispatched unchanged).
     pub fn with_shrink(mut self, shrink: f64) -> Self {
         self.shrink = shrink;
+        self
+    }
+
+    /// Enable the per-group re-split solve (see [`Self::grouped`]).
+    pub fn with_grouped(mut self, grouped: bool) -> Self {
+        self.grouped = grouped;
         self
     }
 
@@ -147,7 +158,15 @@ impl ChurnAwarePlanner {
         let sub = subproblem(p, &idx);
         // ETA lifts to per-learner τ_k exactly as the async planner does
         let split = if self.split == Policy::Eta { Policy::AsyncEta } else { self.split };
-        let alloc = split.allocator().allocate(&sub)?;
+        // only `alloc.batches` is consumed below (τ_k is re-filled from
+        // the solve clock), and grouped/async ETA share the even d/K
+        // split — so the grouped path keeps the planned state identical
+        // while solving per group instead of per learner
+        let alloc = if self.grouped {
+            crate::alloc::grouped::allocate_auto(self.split, &sub)?
+        } else {
+            split.allocator().allocate(&sub)?
+        };
 
         let mut planned = vec![0usize; k];
         let mut planned_tau = vec![0u64; k];
@@ -463,6 +482,31 @@ mod tests {
         pl.on_membership(2, false, &p, 5.0);
         assert!(matches!(pl.on_upload(2, &p, 6.0), Redispatch::AwaitBarrier));
         assert!(matches!(pl.on_deadline_miss(2, &p, 6.0), Redispatch::AwaitBarrier));
+    }
+
+    #[test]
+    fn grouped_resplit_conserves_and_matches_flat_eta() {
+        let p = two_class_problem(12, 6000, 60.0);
+        for split in [Policy::Eta, Policy::Analytical] {
+            let mut flat = ChurnAwarePlanner::new(split, vec![true; 12]);
+            let mut grouped = ChurnAwarePlanner::new(split, vec![true; 12]).with_grouped(true);
+            flat.plan_round(&p, 0.0).unwrap();
+            grouped.plan_round(&p, 0.0).unwrap();
+            if split == Policy::Eta {
+                // even d/K split: grouped is bit-identical to the flat path
+                assert_eq!(grouped.planned_batches(), flat.planned_batches());
+            }
+            assert_eq!(grouped.planned_batches().iter().sum::<usize>(), 6000);
+
+            // a departure re-splits the full dataset over 11 members,
+            // still conserving and still leaving the departed at 0
+            grouped.on_membership(4, false, &p, 10.0);
+            assert_eq!(grouped.planned_batches()[4], 0);
+            assert_eq!(grouped.planned_batches().iter().sum::<usize>(), 6000);
+            grouped.on_membership(4, true, &p, 20.0);
+            assert_eq!(grouped.planned_batches().iter().sum::<usize>(), 6000);
+            assert!(grouped.planned_batches()[4] > 0);
+        }
     }
 
     #[test]

@@ -94,6 +94,11 @@ pub struct ClusterConfig {
     pub seed: u64,
     /// Record full per-shard event timelines.
     pub trace: bool,
+    /// Solve allocations and churn re-splits once per heterogeneity
+    /// group (`crate::alloc::grouped`). Population-sampled shards
+    /// (`ShardSpec::population`) always take the grouped path; this
+    /// knob extends it to per-learner shards whose pools collapse.
+    pub grouped_alloc: bool,
 }
 
 impl Default for ClusterConfig {
@@ -110,6 +115,7 @@ impl Default for ClusterConfig {
             rayleigh: false,
             seed: 1,
             trace: false,
+            grouped_alloc: false,
         }
     }
 }
@@ -269,7 +275,13 @@ pub fn shard_seed(cluster_seed: u64, seed_offset: u64, shard: usize) -> u64 {
 /// event loop.
 fn run_shard(shard: usize, spec: &ShardSpec, cfg: &ClusterConfig) -> Result<ShardReport, AllocError> {
     let shard_seed = shard_seed(cfg.seed, spec.seed_offset, shard);
-    let scenario = Scenario::random_cloudlet(&spec.cloudlet, shard_seed);
+    // population shards expand their group table (O(groups) spec state)
+    // and route allocations through the per-group solvers
+    let scenario = match &spec.population {
+        Some(pop) => pop.expand(),
+        None => Scenario::random_cloudlet(&spec.cloudlet, shard_seed),
+    };
+    let grouped = cfg.grouped_alloc || spec.population.is_some();
     let pressure = cfg.lease_s > 0.0 && (cfg.lease_s - cfg.t_total).abs() > TIME_EPS;
     if spec.churn.is_empty() && !cfg.straggler_releasing && !pressure {
         let metrics = Arc::new(Metrics::new());
@@ -282,6 +294,7 @@ fn run_shard(shard: usize, spec: &ShardSpec, cfg: &ClusterConfig) -> Result<Shar
             rayleigh: cfg.rayleigh,
             seed: shard_seed,
             trace: cfg.trace,
+            grouped_alloc: grouped,
             ..OrchestratorConfig::default()
         };
         let mut orch = Orchestrator::new(scenario, ocfg).with_metrics(metrics.clone());
@@ -320,7 +333,8 @@ fn run_churn_shard(
     let mut member = spec.churn.initial_membership(k_n);
     let mut planner = ChurnAwarePlanner::new(cfg.policy, member.clone())
         .with_lease_clock(cfg.lease_s)
-        .with_shrink(shrink);
+        .with_shrink(shrink)
+        .with_grouped(cfg.grouped_alloc || spec.population.is_some());
 
     let fading = cfg.shadow_sigma_db > 0.0 || cfg.rayleigh;
     let mut fade_rng = Pcg64::new(seed, 0xFAD);

@@ -668,6 +668,7 @@ mod tests {
             cloudlet: crate::scenario::CloudletConfig::mnist(3),
             seed_offset: 1,
             churn: Default::default(),
+            population: None,
         };
         let err = ParamServer::new(&mixed, ParamServerConfig::default()).unwrap_err();
         assert!(format!("{err}").contains("one architecture"), "{err}");

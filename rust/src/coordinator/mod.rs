@@ -181,6 +181,7 @@ impl Trainer {
             seed: cfg.seed,
             trace: false,
             energy_budget_j: 0.0,
+            grouped_alloc: false,
         };
         let core = OrchCore::new(scenario, core_cfg).with_metrics(metrics.clone());
         Ok(Self { metrics, core, engine, global, train_set, eval_set, rng, cfg })

@@ -640,7 +640,12 @@ pub fn single_vs_cluster_timelines_match(cfg: &AccuracyConfig, seed: u64) -> any
         .map_err(|e| anyhow::anyhow!("single-cloudlet timeline run failed: {e}"))?;
 
     let spec = ClusterSpec {
-        shards: vec![ShardSpec { cloudlet: ccfg, seed_offset: 0, churn: ChurnTrace::default() }],
+        shards: vec![ShardSpec {
+            cloudlet: ccfg,
+            seed_offset: 0,
+            churn: ChurnTrace::default(),
+            population: None,
+        }],
         global: Default::default(),
     };
     let cluster_cfg = ClusterConfig {
@@ -750,6 +755,7 @@ pub fn fig_global(cfg: &GlobalConfig, seed: u64) -> anyhow::Result<FigureData> {
                         cloudlet: cloudlet.clone(),
                         seed_offset: s as u64,
                         churn: ChurnTrace::default(),
+                        population: None,
                     })
                     .collect(),
                 global: cfg.global.clone(),
@@ -912,6 +918,193 @@ mod fig_accuracy_tests {
             assert!(eta >= 1, "{task}: ETA must be feasible, got τ {eta}");
             assert!(ada > eta, "{task}: adaptive τ {ada} vs ETA τ {eta}");
         }
+    }
+}
+
+// ---------------------------------------------------------------------
+// Figure "Scale": population-sampled diurnal load with a flash crowd
+// ---------------------------------------------------------------------
+
+/// Knobs of the [`fig_scale`] sweep — a trace-driven day on one
+/// cloudlet whose population is a [`crate::scenario::PopulationSpec`]:
+/// the hourly load trace rescales the group counts (spec state stays
+/// O(groups) no matter how many learners an hour brings), and one hour
+/// hosts a flash crowd whose members churn in mid-window, exercising
+/// the grouped re-split path of the churn planner.
+#[derive(Debug, Clone)]
+pub struct ScaleConfig {
+    /// Hours of the simulated day swept along the x axis.
+    pub hours: Vec<usize>,
+    /// Mean population; the diurnal trace swings around this value.
+    pub base_learners: usize,
+    /// Diurnal amplitude as a fraction of the mean (0..1).
+    pub swing: f64,
+    /// Hour hit by the flash crowd.
+    pub flash_hour: usize,
+    /// Population multiplier during the flash-crowd hour.
+    pub flash_factor: f64,
+    /// Members churning (depart/rejoin + late joins) in the flash hour.
+    pub flash_joiners: usize,
+    /// Heterogeneity groups sampled for the population.
+    pub groups: usize,
+    /// Global cycle clock per hour window, seconds.
+    pub t_total: f64,
+    /// Cycles simulated per hour window.
+    pub cycles: usize,
+}
+
+impl Default for ScaleConfig {
+    fn default() -> Self {
+        Self {
+            hours: (0..24).step_by(3).collect(),
+            base_learners: 1200,
+            swing: 0.5,
+            flash_hour: 18,
+            flash_factor: 3.0,
+            flash_joiners: 4,
+            groups: 12,
+            t_total: 30.0,
+            cycles: 2,
+        }
+    }
+}
+
+impl ScaleConfig {
+    /// The diurnal trace: learners present at hour `h`, peaking
+    /// mid-afternoon, with the flash-crowd multiplier applied on its
+    /// hour. Always at least one learner.
+    pub fn learners_at(&self, h: usize) -> usize {
+        let phase = 2.0 * std::f64::consts::PI * (h as f64 - 6.0) / 24.0;
+        let mut load = self.base_learners as f64 * (1.0 + self.swing * phase.sin());
+        if h == self.flash_hour {
+            load *= self.flash_factor;
+        }
+        (load.round() as usize).max(1)
+    }
+}
+
+/// Fig "Scale" (ours): one cloudlet over a diurnal load trace with a
+/// flash crowd. Every hour runs a population-backed 1-shard cluster
+/// window (grouped allocation is automatic for population shards), the
+/// flash hour additionally under synthetic churn. Three series: the
+/// trace itself (`learners`), the grouped UB-Analytical τ the planner
+/// settles on (`tau`), and the updates completed inside each hour's
+/// window (`updates`) — the scaling story is that τ adapts to the
+/// population while per-hour planning cost stays a function of the
+/// group count, not the crowd size.
+pub fn fig_scale(cfg: &ScaleConfig, seed: u64) -> FigureData {
+    use crate::cluster::{Cluster, ClusterConfig};
+    use crate::orchestrator::Mode;
+    use crate::scenario::{ChurnTrace, ClusterSpec, PopulationSpec, ShardSpec};
+
+    let horizon = cfg.cycles as f64 * cfg.t_total;
+    let cloudlet = CloudletConfig::by_task("pedestrian", cfg.base_learners.max(2))
+        .expect("builtin task");
+    let population = PopulationSpec::sample(&cloudlet, cfg.groups, seed);
+    let mut series: Vec<(String, Vec<u64>)> = vec![
+        ("learners".into(), Vec::new()),
+        ("tau".into(), Vec::new()),
+        ("updates".into(), Vec::new()),
+    ];
+    for &h in &cfg.hours {
+        let k = cfg.learners_at(h);
+        let pop = population.rescaled(k);
+        let tau = crate::alloc::grouped::solve_analytical(&pop.grouped_problem(cfg.t_total))
+            .map(|a| a.tau)
+            .unwrap_or(0);
+        let spec = ClusterSpec {
+            shards: vec![ShardSpec {
+                cloudlet: cloudlet.clone(),
+                seed_offset: h as u64,
+                churn: ChurnTrace::default(),
+                population: Some(pop),
+            }],
+            global: Default::default(),
+        };
+        let spec = if h == cfg.flash_hour {
+            spec.with_synthetic_churn(horizon, cfg.flash_joiners, seed)
+        } else {
+            spec
+        };
+        let cluster_cfg = ClusterConfig {
+            policy: Policy::Analytical,
+            mode: Mode::Sync,
+            t_total: cfg.t_total,
+            cycles: cfg.cycles,
+            seed,
+            ..ClusterConfig::default()
+        };
+        let report = Cluster::new(spec, cluster_cfg)
+            .run()
+            .expect("pedestrian population windows are feasible");
+        series[0].1.push(k as u64);
+        series[1].1.push(tau);
+        series[2].1.push(report.updates_applied);
+    }
+    FigureData {
+        id: "figScale",
+        title: format!(
+            "population-sampled diurnal load: learners, grouped UB-Analytical τ and \
+             updates per {horizon}s window vs hour ({} groups, flash crowd x{} at \
+             {:02}:00)",
+            cfg.groups, cfg.flash_factor, cfg.flash_hour
+        ),
+        xlabel: "hour",
+        x: cfg.hours.iter().map(|&h| h as f64).collect(),
+        series,
+    }
+}
+
+#[cfg(test)]
+mod fig_scale_tests {
+    use super::*;
+
+    fn tiny() -> ScaleConfig {
+        ScaleConfig {
+            hours: vec![0, 6, 12, 18],
+            base_learners: 40,
+            flash_hour: 18,
+            flash_joiners: 2,
+            groups: 4,
+            cycles: 2,
+            ..ScaleConfig::default()
+        }
+    }
+
+    #[test]
+    fn scale_figure_follows_the_trace_and_is_deterministic() {
+        let f = fig_scale(&tiny(), 42);
+        assert_eq!(f.x, vec![0.0, 6.0, 12.0, 18.0]);
+        let learners = f.series_by_prefix("learners").unwrap().clone();
+        let taus = f.series_by_prefix("tau").unwrap().clone();
+        let updates = f.series_by_prefix("updates").unwrap().clone();
+        // diurnal trough at dawn, flash-crowd peak in the evening
+        assert!(learners[1] < learners[2], "trace not rising: {learners:?}");
+        let flash = *learners.last().unwrap();
+        assert!(
+            learners.iter().all(|&l| l <= flash),
+            "flash hour is not the peak: {learners:?}"
+        );
+        // every window makes progress and plans a feasible τ
+        assert!(taus.iter().all(|&t| t >= 1), "{taus:?}");
+        assert!(updates.iter().all(|&u| u > 0), "{updates:?}");
+        // more learners sharing a fixed dataset ⇒ deeper local runs
+        let (lo, hi) = (learners[1], learners[2]);
+        assert!(lo < hi && taus[1] <= taus[2], "τ not monotone in K: {taus:?}");
+        let again = fig_scale(&tiny(), 42);
+        for ((la, ya), (lb, yb)) in f.series.iter().zip(&again.series) {
+            assert_eq!(la, lb);
+            assert_eq!(ya, yb, "{la} not deterministic");
+        }
+    }
+
+    #[test]
+    fn flash_hour_window_runs_grouped_churn_resplits() {
+        // the flash hour is the only churny window: it must still
+        // complete updates through the grouped churn planner
+        let f = fig_scale(&tiny(), 7);
+        let updates = f.series_by_prefix("updates").unwrap();
+        assert!(*updates.last().unwrap() > 0, "{updates:?}");
     }
 }
 

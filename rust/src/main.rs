@@ -2,7 +2,7 @@
 //!
 //! ```text
 //! mel solve    --task pedestrian --k 10 --t 30 [--policy all|eta|analytical|sai|opti] [--seed N]
-//! mel figure   <fig1|fig2|fig3a|fig3b|figE|figAsync|figCluster|figAccuracy|gains|all> [--out results/] [--seed N]
+//! mel figure   <fig1|fig2|fig3a|fig3b|figE|figAsync|figCluster|figAccuracy|figScale|gains|all> [--out results/] [--seed N]
 //! mel train    --task pedestrian --k 4 --t 30 --cycles 20 [--policy ...] [--lr 0.5] [--d 2048]
 //!              [--backend auto|native|pjrt] [--hidden 16,8]
 //! mel bench    diff <old.json> <new.json> [--threshold 0.10] [--fail-on-regress]
@@ -72,7 +72,7 @@ fn print_help() {
         },
         Command {
             name: "figure",
-            about: "reproduce a paper figure (fig1 fig2 fig3a fig3b figE figAsync figCluster figAccuracy figGlobal gains all)",
+            about: "reproduce a paper figure (fig1 fig2 fig3a fig3b figE figAsync figCluster figAccuracy figGlobal figScale gains all)",
             usage: "fig1 --out results/ --seed 42",
         },
         Command {
@@ -216,7 +216,7 @@ fn cmd_figure(args: &Args) -> i32 {
     let figs: Vec<&str> = if which == "all" {
         vec![
             "fig1", "fig2", "fig3a", "fig3b", "figE", "figAsync", "figCluster", "figAccuracy",
-            "figGlobal", "gains",
+            "figGlobal", "figScale", "gains",
         ]
     } else {
         vec![which]
@@ -344,6 +344,23 @@ fn cmd_figure(args: &Args) -> i32 {
                 print!("{}", experiments::gains_table(&rows).render());
                 if rows.iter().any(|r| !r.holds) {
                     eprintln!("WARNING: a headline claim did not hold");
+                }
+            }
+            "figScale" => {
+                let defaults = experiments::ScaleConfig::default();
+                let scfg = experiments::ScaleConfig {
+                    base_learners: args.get_usize("base-learners", defaults.base_learners),
+                    groups: args.get_usize("groups", defaults.groups),
+                    cycles: args.get_usize("cycles", defaults.cycles),
+                    ..defaults
+                };
+                let data = experiments::fig_scale(&scfg, seed);
+                print!("{}", data.table().render());
+                if let Some(dir) = &out {
+                    std::fs::create_dir_all(dir).expect("create out dir");
+                    let path = format!("{dir}/{}.csv", data.id);
+                    std::fs::write(&path, data.csv()).expect("write csv");
+                    println!("wrote {path}");
                 }
             }
             "fig1" | "fig2" | "fig3a" | "fig3b" | "figE" | "figAsync" | "figCluster" => {

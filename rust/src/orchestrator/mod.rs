@@ -116,6 +116,12 @@ pub struct OrchestratorConfig {
     /// select the [`EnergyCapPlanner`], which clamps each lease's `τ_k`
     /// via [`crate::energy::cap_tau_to_energy_budget`].
     pub energy_budget_j: f64,
+    /// Solve allocations once per heterogeneity group
+    /// ([`crate::alloc::grouped::allocate_auto`]) instead of per
+    /// learner — the sublinear fast path for population-sampled pools
+    /// (sync mode). Off by default: the flat per-learner solve is the
+    /// paper-exact reference.
+    pub grouped_alloc: bool,
 }
 
 impl Default for OrchestratorConfig {
@@ -132,6 +138,7 @@ impl Default for OrchestratorConfig {
             seed: 1,
             trace: false,
             energy_budget_j: 0.0,
+            grouped_alloc: false,
         }
     }
 }
@@ -232,7 +239,7 @@ impl Orchestrator {
     /// [`Policy::AsyncEtaEnergy`] or `energy_budget_j` is positive.
     pub fn new(scenario: Scenario, cfg: OrchestratorConfig) -> Self {
         let planner: Box<dyn CyclePlanner> = match cfg.mode {
-            Mode::Sync => Box::new(SyncPlanner::new(cfg.policy)),
+            Mode::Sync => Box::new(SyncPlanner::new(cfg.policy).with_grouped(cfg.grouped_alloc)),
             Mode::Async => {
                 if cfg.policy == Policy::AsyncEtaEnergy || cfg.energy_budget_j > 0.0 {
                     // AsyncEtaEnergy is the equal split (the allocator is

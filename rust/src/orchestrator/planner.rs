@@ -104,11 +104,23 @@ pub fn leases_from_alloc(alloc: &Allocation, now: f64, t_total: f64) -> Vec<Leas
 #[derive(Debug, Clone)]
 pub struct SyncPlanner {
     pub policy: Policy,
+    /// Opt-in sublinear fast path for population-sampled pools: solve
+    /// once per heterogeneity group via
+    /// [`crate::alloc::grouped::allocate_auto`], so `plan_round` cost
+    /// scales with the group count, not K. Off (flat allocator,
+    /// bit-for-bit the paper's solve) by default.
+    pub grouped: bool,
 }
 
 impl SyncPlanner {
     pub fn new(policy: Policy) -> Self {
-        Self { policy }
+        Self { policy, grouped: false }
+    }
+
+    /// Enable the grouped per-group solve (see [`Self::grouped`]).
+    pub fn with_grouped(mut self, grouped: bool) -> Self {
+        self.grouped = grouped;
+        self
     }
 }
 
@@ -118,7 +130,11 @@ impl CyclePlanner for SyncPlanner {
     }
 
     fn plan_round(&mut self, p: &Problem, now: f64) -> Result<RoundPlan, AllocError> {
-        let alloc = self.policy.allocator().allocate(p)?;
+        let alloc = if self.grouped {
+            crate::alloc::grouped::allocate_auto(self.policy, p)?
+        } else {
+            self.policy.allocator().allocate(p)?
+        };
         let leases = leases_from_alloc(&alloc, now, p.t_total);
         Ok(RoundPlan { alloc, leases })
     }
@@ -245,6 +261,26 @@ mod tests {
             }
             other => panic!("expected immediate redispatch, got {other:?}"),
         }
+    }
+
+    #[test]
+    fn grouped_sync_planner_conserves_and_keeps_eta_bit_equal() {
+        let p = two_class_problem(12, 5000, 30.0); // 2 groups ≪ 12 learners
+        let mut grouped = SyncPlanner::new(Policy::Eta).with_grouped(true);
+        let mut flat = SyncPlanner::new(Policy::Eta);
+        let g = grouped.plan_round(&p, 0.0).unwrap();
+        let f = flat.plan_round(&p, 0.0).unwrap();
+        // grouped ETA is exact: identical τ, batches, and leases
+        assert_eq!(g.alloc.policy, "grouped-eta");
+        assert_eq!(g.alloc.tau, f.alloc.tau);
+        assert_eq!(g.alloc.batches, f.alloc.batches);
+        assert_eq!(g.leases, f.leases);
+
+        let mut adaptive = SyncPlanner::new(Policy::Analytical).with_grouped(true);
+        let a = adaptive.plan_round(&p, 0.0).unwrap();
+        assert_eq!(a.alloc.policy, "grouped-analytical");
+        assert!(a.alloc.is_feasible(&p));
+        assert_eq!(a.alloc.batches.iter().sum::<usize>(), 5000);
     }
 
     #[test]

@@ -30,6 +30,7 @@
 use crate::util::json::{Json, JsonError};
 use crate::util::rng::{Pcg64, Rng};
 
+use super::population::PopulationSpec;
 use super::CloudletConfig;
 
 /// One membership change: `learner` joins or departs at `at_s` seconds
@@ -145,21 +146,39 @@ impl ChurnTrace {
 
 /// One cloudlet shard of a cluster: its generator config, a seed offset
 /// (shard scenarios draw from `base_seed + seed_offset`), and a churn
-/// trace.
+/// trace. An optional `population` block switches the shard to the
+/// group-sampled representation ([`PopulationSpec`]) — the scenario is
+/// expanded from the group table instead of per-learner sampling, and
+/// the churn planner solves re-splits once per heterogeneity group.
 #[derive(Debug, Clone)]
 pub struct ShardSpec {
     pub cloudlet: CloudletConfig,
     pub seed_offset: u64,
     pub churn: ChurnTrace,
+    /// Group-sampled population (overrides per-learner cloudlet
+    /// sampling when present).
+    pub population: Option<PopulationSpec>,
 }
 
 impl ShardSpec {
+    /// Learner count of the shard's scenario (population-aware).
+    pub fn num_learners(&self) -> usize {
+        match &self.population {
+            Some(p) => p.k(),
+            None => self.cloudlet.num_learners,
+        }
+    }
+
     pub fn to_json(&self) -> Json {
-        Json::obj(vec![
+        let mut fields = vec![
             ("cloudlet", self.cloudlet.to_json()),
             ("seed_offset", Json::Num(self.seed_offset as f64)),
             ("churn", self.churn.to_json()),
-        ])
+        ];
+        if let Some(p) = &self.population {
+            fields.push(("population", p.to_json()));
+        }
+        Json::obj(fields)
     }
 
     pub fn from_json(v: &Json) -> Result<Self, JsonError> {
@@ -170,6 +189,7 @@ impl ShardSpec {
                 Some(c) => ChurnTrace::from_json(c)?,
                 None => ChurnTrace::default(),
             },
+            population: v.opt("population").map(PopulationSpec::from_json).transpose()?,
         })
     }
 }
@@ -326,6 +346,7 @@ impl ClusterSpec {
                     cloudlet: cloudlet.clone(),
                     seed_offset: i as u64,
                     churn: ChurnTrace::default(),
+                    population: None,
                 })
                 .collect(),
             global: GlobalAggSpec::default(),
@@ -336,7 +357,7 @@ impl ClusterSpec {
     /// per-shard streams) to every shard.
     pub fn with_synthetic_churn(mut self, horizon: f64, churners: usize, seed: u64) -> Self {
         for (i, shard) in self.shards.iter_mut().enumerate() {
-            let k = shard.cloudlet.num_learners;
+            let k = shard.num_learners();
             shard.churn = ChurnTrace::synthetic(k, horizon, churners, seed ^ (0x5AD + i as u64));
         }
         self

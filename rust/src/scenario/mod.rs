@@ -7,10 +7,12 @@
 //! into the [`crate::alloc::Problem`] every solver consumes.
 
 pub mod churn;
+pub mod population;
 
 pub use churn::{
     AggregationMode, ChurnEvent, ChurnTrace, ClusterSpec, GlobalAggSpec, ShardSpec,
 };
+pub use population::{PopulationGroup, PopulationSpec};
 
 use crate::alloc::Problem;
 use crate::channel::ChannelSpec;

@@ -1,0 +1,386 @@
+//! **Population-sampled scenarios** — cloudlets described by a handful
+//! of heterogeneity *groups* instead of K per-learner records.
+//!
+//! At 10^5–10^6 learners, materializing one `Learner` per node (the
+//! [`super::Scenario`] representation) is both the memory and the
+//! allocator bottleneck: the per-learner vectors are O(K) but carry
+//! only a few distinct values, because fleets are made of device
+//! *classes*. A [`PopulationSpec`] stores exactly that structure — one
+//! sampled (channel, compute) parameter set per group plus a member
+//! count — so memory is O(groups), the allocation problem reduces to
+//! [`crate::alloc::grouped::GroupedProblem`] (solved once per group,
+//! see `crate::alloc::grouped`), and churn/lease state can be tracked
+//! per group. Members expand lazily ([`PopulationSpec::member`]); the
+//! O(K) [`PopulationSpec::expand`] exists for the equivalence tests
+//! that pin this representation to the legacy per-learner one.
+//!
+//! JSON schema:
+//!
+//! ```json
+//! {
+//!   "seed": 7,
+//!   "channel": { ... ChannelSpec ... },
+//!   "model":   { ... ModelSpec ... },
+//!   "dataset": { ... DatasetSpec ... },
+//!   "groups": [
+//!     { "name": "laptop-near", "count": 120000, "class": "laptop",
+//!       "compute": { "freq_hz": 2.4e9, "flops_per_cycle": 8.0 },
+//!       "distance_m": 18.4, "fading_gain": 1.0 }
+//!   ]
+//! }
+//! ```
+
+use crate::alloc::grouped::GroupedProblem;
+use crate::channel::{ChannelSpec, Link};
+use crate::compute::ComputeProfile;
+use crate::dataset::DatasetSpec;
+use crate::learner::{Coeffs, Learner};
+use crate::models::ModelSpec;
+use crate::util::json::{Json, JsonError};
+use crate::util::rng::{Pcg64, Rng};
+
+use super::{CloudletConfig, Scenario};
+
+/// One heterogeneity group: every member shares these sampled channel
+/// and compute parameters exactly (which is what makes the grouped
+/// allocation solvers *exact*, not approximate).
+#[derive(Debug, Clone)]
+pub struct PopulationGroup {
+    pub name: String,
+    /// Members in this group (0 is legal — e.g. a diurnal trough).
+    pub count: usize,
+    /// Device-class tag carried onto expanded learners.
+    pub class: String,
+    pub compute: ComputeProfile,
+    /// Representative orchestrator distance, meters.
+    pub distance_m: f64,
+    /// Representative fading gain (1.0 = no fading).
+    pub fading_gain: f64,
+}
+
+impl PopulationGroup {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("name", Json::Str(self.name.clone())),
+            ("count", Json::Num(self.count as f64)),
+            ("class", Json::Str(self.class.clone())),
+            ("compute", self.compute.to_json()),
+            ("distance_m", Json::Num(self.distance_m)),
+            ("fading_gain", Json::Num(self.fading_gain)),
+        ])
+    }
+
+    pub fn from_json(v: &Json) -> Result<Self, JsonError> {
+        let distance_m = v.get("distance_m")?.as_f64()?;
+        if !distance_m.is_finite() || distance_m < 0.0 {
+            return Err(JsonError::Access(format!(
+                "group distance_m must be a non-negative number, got {distance_m}"
+            )));
+        }
+        Ok(Self {
+            name: v.get("name")?.as_str()?.to_string(),
+            count: v.get("count")?.as_usize()?,
+            class: v.get("class")?.as_str()?.to_string(),
+            compute: ComputeProfile::from_json(v.get("compute")?)?,
+            distance_m,
+            fading_gain: v.opt("fading_gain").map(|x| x.as_f64()).transpose()?.unwrap_or(1.0),
+        })
+    }
+}
+
+/// A cloudlet population in O(groups) memory: the group table plus the
+/// shared channel/task description.
+#[derive(Debug, Clone)]
+pub struct PopulationSpec {
+    pub groups: Vec<PopulationGroup>,
+    pub channel: ChannelSpec,
+    pub model: ModelSpec,
+    pub dataset: DatasetSpec,
+    /// Seed the group parameters were sampled from (0 for hand-built).
+    pub seed: u64,
+}
+
+impl PopulationSpec {
+    /// Sample `n_groups` heterogeneity groups from a cloudlet generator
+    /// config: distances uniform in the disc (`r = R·√u`, the §V-A
+    /// placement), the configured laptop fraction applied to the group
+    /// roster, per-group fading drawn when the channel enables it, and
+    /// `num_learners` split as evenly as possible across groups.
+    /// Deterministic in `seed` (dedicated population stream).
+    pub fn sample(cfg: &CloudletConfig, n_groups: usize, seed: u64) -> Self {
+        assert!(n_groups > 0, "population needs at least one group");
+        let mut rng = Pcg64::new(seed, 0x909); // population stream
+        let n_laptop = (n_groups as f64 * cfg.laptop_fraction).round() as usize;
+        let base = cfg.num_learners / n_groups;
+        let rem = cfg.num_learners % n_groups;
+        let groups = (0..n_groups)
+            .map(|g| {
+                let r = cfg.radius_m * rng.next_f64().sqrt();
+                let mut link = cfg.channel.link(r);
+                if cfg.channel.shadow_sigma_db > 0.0 || cfg.channel.rayleigh {
+                    link.redraw_fading(&mut rng, cfg.channel.shadow_sigma_db, cfg.channel.rayleigh);
+                }
+                let (class, compute) = if g < n_laptop {
+                    ("laptop", ComputeProfile::laptop())
+                } else {
+                    ("rpi", ComputeProfile::rpi())
+                };
+                PopulationGroup {
+                    name: format!("{class}-{g}"),
+                    count: base + usize::from(g < rem),
+                    class: class.to_string(),
+                    compute,
+                    distance_m: r,
+                    fading_gain: link.fading_gain,
+                }
+            })
+            .collect();
+        Self {
+            groups,
+            channel: cfg.channel.clone(),
+            model: cfg.model.clone(),
+            dataset: cfg.dataset.clone(),
+            seed,
+        }
+    }
+
+    /// Number of groups G.
+    pub fn g(&self) -> usize {
+        self.groups.len()
+    }
+
+    /// Population size K = Σ counts (no expansion).
+    pub fn k(&self) -> usize {
+        self.groups.iter().map(|g| g.count).sum()
+    }
+
+    /// The group's shared link.
+    pub fn link_for(&self, group: &PopulationGroup) -> Link {
+        let mut link = self.channel.link(group.distance_m);
+        link.fading_gain = group.fading_gain;
+        link
+    }
+
+    /// Per-group eq. (13) coefficients, O(G).
+    pub fn coeffs(&self) -> Vec<Coeffs> {
+        self.groups
+            .iter()
+            .map(|g| {
+                Learner::new(0, &g.class, g.compute, self.link_for(g)).coeffs(&self.model)
+            })
+            .collect()
+    }
+
+    /// The allocation problem in grouped form, O(G) — what
+    /// `crate::alloc::grouped` solves once per group.
+    pub fn grouped_problem(&self, t_total: f64) -> GroupedProblem {
+        GroupedProblem::new(
+            self.coeffs(),
+            self.groups.iter().map(|g| g.count).collect(),
+            self.dataset.total_samples,
+            t_total,
+        )
+    }
+
+    /// Group index of each member in the canonical group-major order
+    /// (O(K) — pair with [`crate::alloc::grouped::GroupedAllocation::expand_batches`]).
+    pub fn group_of(&self) -> Vec<usize> {
+        self.grouped_problem(1.0).group_major_order()
+    }
+
+    /// Lazily expand member `i` (group-major flat order) without
+    /// materializing the population. O(G) per call.
+    pub fn member(&self, i: usize) -> Learner {
+        let mut offset = 0;
+        for g in &self.groups {
+            if i < offset + g.count {
+                return Learner::new(i, &g.class, g.compute, self.link_for(g));
+            }
+            offset += g.count;
+        }
+        panic!("member index {i} out of population of {}", offset);
+    }
+
+    /// Expand into a legacy per-learner [`Scenario`] — O(K) memory; for
+    /// equivalence tests and small populations only.
+    pub fn expand(&self) -> Scenario {
+        let mut learners = Vec::with_capacity(self.k());
+        for g in &self.groups {
+            let link = self.link_for(g);
+            for _ in 0..g.count {
+                learners.push(Learner::new(learners.len(), &g.class, g.compute, link.clone()));
+            }
+        }
+        Scenario {
+            learners,
+            model: self.model.clone(),
+            dataset: self.dataset.clone(),
+            seed: self.seed,
+        }
+    }
+
+    /// Same group mix rescaled to `total` members (largest-share-first
+    /// remainder): the diurnal-load and flash-crowd workloads of
+    /// `experiments::fig_scale` swing population size without
+    /// re-sampling group parameters.
+    pub fn rescaled(&self, total: usize) -> Self {
+        let k = self.k().max(1);
+        let mut out = self.clone();
+        let mut assigned = 0;
+        for (g, group) in out.groups.iter_mut().enumerate() {
+            let share = if g + 1 == self.groups.len() {
+                total - assigned // last group absorbs the remainder
+            } else {
+                total * self.groups[g].count / k
+            };
+            group.count = share;
+            assigned += share;
+        }
+        out
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("seed", Json::Num(self.seed as f64)),
+            ("channel", self.channel.to_json()),
+            ("model", self.model.to_json()),
+            ("dataset", super::dataset_to_json(&self.dataset)),
+            ("groups", Json::Arr(self.groups.iter().map(PopulationGroup::to_json).collect())),
+        ])
+    }
+
+    pub fn from_json(v: &Json) -> Result<Self, JsonError> {
+        let mut groups = Vec::new();
+        for g in v.get("groups")?.as_arr()? {
+            groups.push(PopulationGroup::from_json(g)?);
+        }
+        if groups.is_empty() {
+            return Err(JsonError::Access("population needs at least one group".into()));
+        }
+        Ok(Self {
+            groups,
+            channel: ChannelSpec::from_json(v.get("channel")?)?,
+            model: ModelSpec::from_json(v.get("model")?)?,
+            dataset: super::dataset_from_json(v.get("dataset")?)?,
+            seed: v.opt("seed").map(|x| x.as_u64()).transpose()?.unwrap_or(0),
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::alloc::grouped::{self, GroupedProblem};
+    use crate::alloc::Policy;
+
+    #[test]
+    fn sample_is_deterministic_in_seed() {
+        let cfg = CloudletConfig::pedestrian(1000);
+        let a = PopulationSpec::sample(&cfg, 8, 7);
+        let b = PopulationSpec::sample(&cfg, 8, 7);
+        assert_eq!(a.g(), 8);
+        assert_eq!(a.k(), 1000);
+        for (x, y) in a.groups.iter().zip(&b.groups) {
+            assert_eq!(x.distance_m, y.distance_m);
+            assert_eq!(x.count, y.count);
+            assert_eq!(x.class, y.class);
+        }
+        let c = PopulationSpec::sample(&cfg, 8, 8);
+        assert!(a.groups.iter().zip(&c.groups).any(|(x, y)| x.distance_m != y.distance_m));
+        // laptop fraction applied to the group roster
+        let laptops = a.groups.iter().filter(|g| g.class == "laptop").count();
+        assert_eq!(laptops, 4);
+        // counts split evenly: 1000 = 8 × 125
+        assert!(a.groups.iter().all(|g| g.count == 125));
+    }
+
+    #[test]
+    fn expansion_is_lazy_and_group_major() {
+        let cfg = CloudletConfig::pedestrian(37);
+        let pop = PopulationSpec::sample(&cfg, 5, 3);
+        let scenario = pop.expand();
+        assert_eq!(scenario.k(), 37);
+        // lazy member() agrees with the bulk expansion at every index
+        for i in [0usize, 1, 7, 18, 36] {
+            let lazy = pop.member(i);
+            let bulk = &scenario.learners[i];
+            assert_eq!(lazy.id, bulk.id);
+            assert_eq!(lazy.class, bulk.class);
+            assert_eq!(lazy.link.distance_m, bulk.link.distance_m);
+        }
+        // members are laid out group-major with the group's exact params
+        let group_of = pop.group_of();
+        assert_eq!(group_of.len(), 37);
+        for (i, &g) in group_of.iter().enumerate() {
+            assert_eq!(scenario.learners[i].class, pop.groups[g].class);
+            assert_eq!(scenario.learners[i].link.distance_m, pop.groups[g].distance_m);
+        }
+    }
+
+    #[test]
+    fn grouped_problem_matches_expanded_problem_bitwise() {
+        let cfg = CloudletConfig::mnist(64);
+        let pop = PopulationSpec::sample(&cfg, 4, 11);
+        let gp = pop.grouped_problem(60.0);
+        let flat = pop.expand().problem(60.0);
+        // dedup of the expansion recovers exactly the population groups
+        let (gp2, group_of) = GroupedProblem::from_problem(&flat);
+        assert_eq!(gp2.g(), gp.g());
+        assert_eq!(gp2.counts, gp.counts);
+        for (a, b) in gp2.coeffs.iter().zip(&gp.coeffs) {
+            assert_eq!(a, b, "coefficients must match bitwise");
+        }
+        assert_eq!(group_of, pop.group_of());
+        assert_eq!(gp.total_samples, flat.total_samples);
+        // and the grouped allocator solves the same problem the flat
+        // allocator sees on the expansion
+        let auto = grouped::allocate_auto(Policy::Analytical, &flat).unwrap();
+        assert_eq!(auto.policy, "grouped-analytical");
+        assert!(auto.is_feasible(&flat));
+    }
+
+    #[test]
+    fn json_round_trip_preserves_grouped_problem() {
+        let cfg = CloudletConfig::pedestrian(500);
+        let mut pop = PopulationSpec::sample(&cfg, 6, 21);
+        pop.groups[2].fading_gain = 0.7;
+        let text = pop.to_json().to_pretty();
+        let back = PopulationSpec::from_json(&Json::parse(&text).unwrap()).unwrap();
+        assert_eq!(back.g(), 6);
+        assert_eq!(back.k(), 500);
+        assert_eq!(back.seed, 21);
+        let a = pop.grouped_problem(30.0);
+        let b = back.grouped_problem(30.0);
+        assert_eq!(a.counts, b.counts);
+        for (x, y) in a.coeffs.iter().zip(&b.coeffs) {
+            assert!((x.c2 - y.c2).abs() < 1e-15);
+            assert!((x.c1 - y.c1).abs() < 1e-18);
+            assert!((x.c0 - y.c0).abs() < 1e-15);
+        }
+        // malformed populations are load errors
+        assert!(PopulationSpec::from_json(
+            &Json::parse(r#"{"groups": [], "channel": {}, "model": {}, "dataset": {}}"#).unwrap()
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn rescaled_conserves_total_and_mix() {
+        let cfg = CloudletConfig::pedestrian(1000);
+        let pop = PopulationSpec::sample(&cfg, 4, 5);
+        for total in [10usize, 999, 1000, 250_000] {
+            let r = pop.rescaled(total);
+            assert_eq!(r.k(), total, "total {total}");
+            assert_eq!(r.g(), 4);
+            // group parameters untouched — only counts move
+            for (a, b) in r.groups.iter().zip(&pop.groups) {
+                assert_eq!(a.distance_m, b.distance_m);
+            }
+        }
+        // proportions roughly preserved on a big rescale
+        let big = pop.rescaled(100_000);
+        for g in &big.groups {
+            assert!((24_000..=26_000).contains(&g.count), "count {}", g.count);
+        }
+    }
+}

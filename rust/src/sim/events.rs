@@ -1,8 +1,27 @@
 //! Generic discrete-event queue: a time-ordered priority queue with
 //! stable FIFO ordering for simultaneous events (deterministic replay).
+//!
+//! Two interchangeable engines sit behind the one [`EventQueue`] API:
+//!
+//! * **Heap** — the original `BinaryHeap`, O(log n) per op. Retained as
+//!   the bit-exact oracle and the default.
+//! * **Wheel** — the hierarchical [`TimerWheel`], O(1) amortized per
+//!   op, which is what makes 10^5–10^6-learner scenarios tractable.
+//!
+//! Both pop in exactly `(time asc, seq asc)` order — the wheel's
+//! bucket sort uses the heap's comparator verbatim — so every consumer
+//! (CycleSim, the orchestrator, the churn-shard loop) produces
+//! bit-identical timelines under either engine. Select at runtime with
+//! `MEL_EVENT_QUEUE=heap|wheel` (read once per process); the wheel's
+//! tick defaults to 1 ms and can be overridden with
+//! `MEL_EVENT_QUEUE_TICK` (seconds) or per-queue via
+//! [`EventQueue::wheel_with_tick`].
 
 use std::cmp::Ordering;
 use std::collections::BinaryHeap;
+use std::sync::OnceLock;
+
+use super::timer_wheel::TimerWheel;
 
 struct Entry<E> {
     time: f64,
@@ -35,9 +54,58 @@ impl<E> Ord for Entry<E> {
     }
 }
 
+/// Which engine [`EventQueue::new`] builds.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum QueueKind {
+    /// `BinaryHeap` — O(log n) per op, the bit-exact oracle (default).
+    Heap,
+    /// Hierarchical timer wheel — O(1) amortized per op.
+    Wheel,
+}
+
+impl QueueKind {
+    /// Process-wide engine selection from `MEL_EVENT_QUEUE`
+    /// (`heap`/`wheel`, anything else falls back to the heap), read
+    /// once and cached.
+    pub fn from_env() -> QueueKind {
+        static KIND: OnceLock<QueueKind> = OnceLock::new();
+        *KIND.get_or_init(|| {
+            match std::env::var("MEL_EVENT_QUEUE").as_deref() {
+                Ok("wheel") | Ok("timer-wheel") => QueueKind::Wheel,
+                _ => QueueKind::Heap,
+            }
+        })
+    }
+
+    pub fn label(&self) -> &'static str {
+        match self {
+            QueueKind::Heap => "heap",
+            QueueKind::Wheel => "wheel",
+        }
+    }
+}
+
+/// Default wheel tick: 1 ms, overridable via `MEL_EVENT_QUEUE_TICK`
+/// (seconds), read once per process.
+pub fn default_wheel_tick() -> f64 {
+    static TICK: OnceLock<f64> = OnceLock::new();
+    *TICK.get_or_init(|| {
+        std::env::var("MEL_EVENT_QUEUE_TICK")
+            .ok()
+            .and_then(|s| s.parse::<f64>().ok())
+            .filter(|t| t.is_finite() && *t > 0.0)
+            .unwrap_or(1e-3)
+    })
+}
+
+enum Engine<E> {
+    Heap(BinaryHeap<Entry<E>>),
+    Wheel(TimerWheel<E>),
+}
+
 /// Time-ordered event queue.
 pub struct EventQueue<E> {
-    heap: BinaryHeap<Entry<E>>,
+    engine: Engine<E>,
     seq: u64,
     now: f64,
 }
@@ -49,15 +117,46 @@ impl<E> Default for EventQueue<E> {
 }
 
 impl<E> EventQueue<E> {
+    /// Build the engine selected by `MEL_EVENT_QUEUE` (heap unless
+    /// overridden). Every construction site in the crate goes through
+    /// here, so the switch flips the whole simulation stack at once.
     pub fn new() -> Self {
-        Self { heap: BinaryHeap::new(), seq: 0, now: 0.0 }
+        match QueueKind::from_env() {
+            QueueKind::Heap => Self::heap(),
+            QueueKind::Wheel => Self::wheel(),
+        }
+    }
+
+    /// Explicit `BinaryHeap` engine (the oracle), ignoring the env.
+    pub fn heap() -> Self {
+        Self { engine: Engine::Heap(BinaryHeap::new()), seq: 0, now: 0.0 }
+    }
+
+    /// Explicit timer-wheel engine at the default tick, ignoring the env.
+    pub fn wheel() -> Self {
+        Self::wheel_with_tick(default_wheel_tick())
+    }
+
+    /// Timer-wheel engine at an explicit tick granularity (seconds).
+    pub fn wheel_with_tick(tick_s: f64) -> Self {
+        Self { engine: Engine::Wheel(TimerWheel::new(tick_s)), seq: 0, now: 0.0 }
+    }
+
+    pub fn kind(&self) -> QueueKind {
+        match self.engine {
+            Engine::Heap(_) => QueueKind::Heap,
+            Engine::Wheel(_) => QueueKind::Wheel,
+        }
     }
 
     /// Schedule `event` at absolute `time` (must not be in the past).
     pub fn schedule(&mut self, time: f64, event: E) {
         debug_assert!(time >= self.now, "scheduling into the past: {time} < {}", self.now);
         debug_assert!(time.is_finite());
-        self.heap.push(Entry { time, seq: self.seq, event });
+        match &mut self.engine {
+            Engine::Heap(heap) => heap.push(Entry { time, seq: self.seq, event }),
+            Engine::Wheel(wheel) => wheel.push(time, self.seq, event),
+        }
         self.seq += 1;
     }
 
@@ -68,9 +167,13 @@ impl<E> EventQueue<E> {
 
     /// Pop the earliest event, advancing the simulation clock.
     pub fn pop(&mut self) -> Option<(f64, E)> {
-        self.heap.pop().map(|e| {
-            self.now = e.time;
-            (e.time, e.event)
+        let popped = match &mut self.engine {
+            Engine::Heap(heap) => heap.pop().map(|e| (e.time, e.event)),
+            Engine::Wheel(wheel) => wheel.pop(),
+        };
+        popped.map(|(t, e)| {
+            self.now = t;
+            (t, e)
         })
     }
 
@@ -80,11 +183,14 @@ impl<E> EventQueue<E> {
     }
 
     pub fn len(&self) -> usize {
-        self.heap.len()
+        match &self.engine {
+            Engine::Heap(heap) => heap.len(),
+            Engine::Wheel(wheel) => wheel.len(),
+        }
     }
 
     pub fn is_empty(&self) -> bool {
-        self.heap.is_empty()
+        self.len() == 0
     }
 
     /// Drain all events through `handler`, which may schedule more.
@@ -99,53 +205,64 @@ impl<E> EventQueue<E> {
 mod tests {
     use super::*;
 
+    /// Run one scenario against both engines — the API-level tests must
+    /// hold regardless of what `MEL_EVENT_QUEUE` says.
+    fn on_both(f: impl Fn(EventQueue<&'static str>)) {
+        f(EventQueue::heap());
+        f(EventQueue::wheel());
+    }
+
     #[test]
     fn earliest_first() {
-        let mut q = EventQueue::new();
-        q.schedule(3.0, "c");
-        q.schedule(1.0, "a");
-        q.schedule(2.0, "b");
-        assert_eq!(q.pop().unwrap(), (1.0, "a"));
-        assert_eq!(q.pop().unwrap(), (2.0, "b"));
-        assert_eq!(q.pop().unwrap(), (3.0, "c"));
-        assert!(q.pop().is_none());
+        on_both(|mut q| {
+            q.schedule(3.0, "c");
+            q.schedule(1.0, "a");
+            q.schedule(2.0, "b");
+            assert_eq!(q.pop().unwrap(), (1.0, "a"));
+            assert_eq!(q.pop().unwrap(), (2.0, "b"));
+            assert_eq!(q.pop().unwrap(), (3.0, "c"));
+            assert!(q.pop().is_none());
+        });
     }
 
     #[test]
     fn fifo_for_ties() {
-        let mut q = EventQueue::new();
-        for i in 0..10 {
-            q.schedule(5.0, i);
-        }
-        for i in 0..10 {
-            assert_eq!(q.pop().unwrap().1, i);
+        for mut q in [EventQueue::heap(), EventQueue::wheel()] {
+            for i in 0..10 {
+                q.schedule(5.0, i);
+            }
+            for i in 0..10 {
+                assert_eq!(q.pop().unwrap().1, i);
+            }
         }
     }
 
     #[test]
     fn clock_advances_and_relative_schedule() {
-        let mut q = EventQueue::new();
-        q.schedule(1.0, "x");
-        q.pop();
-        assert_eq!(q.now(), 1.0);
-        q.schedule_in(0.5, "y");
-        assert_eq!(q.pop().unwrap(), (1.5, "y"));
+        on_both(|mut q| {
+            q.schedule(1.0, "x");
+            q.pop();
+            assert_eq!(q.now(), 1.0);
+            q.schedule_in(0.5, "y");
+            assert_eq!(q.pop().unwrap(), (1.5, "y"));
+        });
     }
 
     #[test]
     fn run_with_cascading_events() {
         // a chain: each event schedules the next until 5
-        let mut q = EventQueue::new();
-        q.schedule(0.0, 0u32);
-        let mut seen = Vec::new();
-        q.run(|q, t, n| {
-            seen.push((t, n));
-            if n < 5 {
-                q.schedule_in(1.0, n + 1);
-            }
-        });
-        assert_eq!(seen.len(), 6);
-        assert_eq!(seen[5], (5.0, 5));
+        for mut q in [EventQueue::heap(), EventQueue::wheel()] {
+            q.schedule(0.0, 0u32);
+            let mut seen = Vec::new();
+            q.run(|q, t, n| {
+                seen.push((t, n));
+                if n < 5 {
+                    q.schedule_in(1.0, n + 1);
+                }
+            });
+            assert_eq!(seen.len(), 6);
+            assert_eq!(seen[5], (5.0, 5));
+        }
     }
 
     #[test]
@@ -160,9 +277,18 @@ mod tests {
 
     #[test]
     fn len_and_empty() {
-        let mut q: EventQueue<()> = EventQueue::new();
-        assert!(q.is_empty());
-        q.schedule(1.0, ());
-        assert_eq!(q.len(), 1);
+        for mut q in [EventQueue::<()>::heap(), EventQueue::<()>::wheel()] {
+            assert!(q.is_empty());
+            q.schedule(1.0, ());
+            assert_eq!(q.len(), 1);
+        }
+    }
+
+    #[test]
+    fn kind_reports_engine() {
+        assert_eq!(EventQueue::<()>::heap().kind(), QueueKind::Heap);
+        assert_eq!(EventQueue::<()>::wheel().kind(), QueueKind::Wheel);
+        assert_eq!(QueueKind::Heap.label(), "heap");
+        assert_eq!(QueueKind::Wheel.label(), "wheel");
     }
 }

@@ -5,7 +5,9 @@
 //! [`crate::orchestrator::Orchestrator`] state machine consumes learner
 //! lifecycle events (dispatched / send-complete / iteration-done /
 //! uploaded / missed-deadline) from it, in both barrier-synchronous and
-//! staggered-async dispatch modes.
+//! staggered-async dispatch modes. Two engines back it: the original
+//! `BinaryHeap` oracle and the O(1)-amortized [`timer_wheel`]
+//! (`MEL_EVENT_QUEUE=wheel`), bit-identical in pop order.
 //!
 //! [`CycleSim`] is the *closed-form reference* for one synchronous
 //! global cycle: it schedules the per-learner **send → τ×compute →
@@ -19,6 +21,7 @@
 //! convergence model on top for paper-scale sweeps.
 
 pub mod events;
+pub mod timer_wheel;
 pub mod training;
 
 use crate::alloc::{Allocation, Problem};

@@ -1,0 +1,303 @@
+//! Hierarchical timer wheel: the O(1)-amortized engine behind
+//! [`EventQueue`](crate::sim::events::EventQueue).
+//!
+//! Eleven levels of 64 slots each (6 bits per level, 66 bits total)
+//! address every `u64` tick, so there is no overflow list: an event at
+//! absolute time `t` lands in tick `⌊t / tick_s⌋`, and the level is the
+//! position of the highest bit in which that tick differs from the
+//! wheel's current tick (`elapsed`) — the same digit-radix placement
+//! tokio's driver and the classic Varghese–Lauck wheel use. Pushes are
+//! O(1); `pop` advances to the next occupied slot with one
+//! `trailing_zeros` per level and cascades higher-level buckets down as
+//! the clock crosses them, which amortizes to O(1) per event.
+//!
+//! **Ordering contract** (what lets the wheel replace the `BinaryHeap`
+//! bit-for-bit): the heap pops by `(time asc, seq asc)`. The wheel pops
+//! ticks in ascending order and sorts each due bucket by exactly the
+//! heap's comparator, and since `tick = ⌊t / tick_s⌋` is monotone in
+//! `t` — equal times always share a tick — the two global pop orders
+//! coincide *exactly*, at any tick granularity. The property tests
+//! below pin this against the heap oracle on adversarial streams.
+
+use std::cmp::Ordering;
+
+const SLOT_BITS: u32 = 6;
+const SLOTS: usize = 1 << SLOT_BITS;
+/// 11 × 6 = 66 bits ≥ 64: every u64 tick is addressable, no overflow.
+const LEVELS: usize = 11;
+
+pub(crate) struct Item<E> {
+    pub time: f64,
+    pub seq: u64,
+    pub event: E,
+}
+
+/// Exactly the heap's ordering: time ascending, then FIFO by sequence.
+/// (`partial_cmp` + `Equal` fallback, *not* `total_cmp`, so that -0.0
+/// and 0.0 tie on seq exactly as they do in the `BinaryHeap` engine.)
+fn cmp_items<E>(a: &Item<E>, b: &Item<E>) -> Ordering {
+    a.time
+        .partial_cmp(&b.time)
+        .unwrap_or(Ordering::Equal)
+        .then(a.seq.cmp(&b.seq))
+}
+
+pub struct TimerWheel<E> {
+    tick_s: f64,
+    /// Tick currently being drained; `pending` holds its events.
+    elapsed: u64,
+    /// Per-level occupancy bitmap: bit `s` set ⇔ `slots[level][s]`
+    /// is non-empty. `trailing_zeros` finds the next due slot.
+    occupied: [u64; LEVELS],
+    /// `LEVELS × SLOTS` buckets, row-major, unsorted within a bucket.
+    slots: Vec<Vec<Item<E>>>,
+    /// Events due now (tick ≤ `elapsed`), sorted *descending* by
+    /// (time, seq) so the next event to fire is `pending.pop()`.
+    pending: Vec<Item<E>>,
+    len: usize,
+}
+
+impl<E> TimerWheel<E> {
+    pub fn new(tick_s: f64) -> Self {
+        assert!(
+            tick_s.is_finite() && tick_s > 0.0,
+            "timer wheel tick must be positive and finite, got {tick_s}"
+        );
+        Self {
+            tick_s,
+            elapsed: 0,
+            occupied: [0; LEVELS],
+            slots: (0..LEVELS * SLOTS).map(|_| Vec::new()).collect(),
+            pending: Vec::new(),
+            len: 0,
+        }
+    }
+
+    pub fn tick_s(&self) -> f64 {
+        self.tick_s
+    }
+
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    fn tick_of(&self, time: f64) -> u64 {
+        let t = (time / self.tick_s).floor();
+        if t <= 0.0 {
+            0
+        } else if t >= u64::MAX as f64 {
+            u64::MAX
+        } else {
+            t as u64
+        }
+    }
+
+    pub fn push(&mut self, time: f64, seq: u64, event: E) {
+        let tick = self.tick_of(time);
+        let item = Item { time, seq, event };
+        if tick <= self.elapsed {
+            // due within the tick being drained (or past-due, which a
+            // release build permits): splice into the sorted run so it
+            // pops exactly where the heap would pop it
+            self.insert_pending(item);
+        } else {
+            self.insert_wheel(tick, item);
+        }
+        self.len += 1;
+    }
+
+    pub fn pop(&mut self) -> Option<(f64, E)> {
+        if self.pending.is_empty() && !self.advance() {
+            return None;
+        }
+        let item = self.pending.pop().expect("advance() refills pending");
+        self.len -= 1;
+        Some((item.time, item.event))
+    }
+
+    fn insert_pending(&mut self, item: Item<E>) {
+        // keep descending order; (time, seq) is a total order so the
+        // partition point is unique
+        let pos = self
+            .pending
+            .partition_point(|x| cmp_items(x, &item) == Ordering::Greater);
+        self.pending.insert(pos, item);
+    }
+
+    fn insert_wheel(&mut self, tick: u64, item: Item<E>) {
+        let masked = tick ^ self.elapsed;
+        debug_assert!(masked != 0, "current-tick items belong in pending");
+        let level = ((63 - masked.leading_zeros()) / SLOT_BITS) as usize;
+        let slot = ((tick >> (SLOT_BITS * level as u32)) & (SLOTS as u64 - 1)) as usize;
+        self.slots[level * SLOTS + slot].push(item);
+        self.occupied[level] |= 1u64 << slot;
+    }
+
+    /// Move the clock to the next occupied tick and refill `pending`,
+    /// cascading higher-level buckets down as the clock crosses them.
+    /// Returns false when the wheel is empty.
+    fn advance(&mut self) -> bool {
+        debug_assert!(self.pending.is_empty());
+        loop {
+            let Some(level) = (0..LEVELS).find(|&l| self.occupied[l] != 0) else {
+                return false;
+            };
+            let slot = self.occupied[level].trailing_zeros() as usize;
+            let shift = SLOT_BITS * level as u32;
+            // smallest tick this slot addresses: elapsed's digits above
+            // the level, the slot digit at the level, zeros below.
+            // Slot digits never wrap (an item is placed at the level of
+            // its highest differing bit, so its digit exceeds
+            // elapsed's), hence this never moves the clock backwards.
+            let above = if shift + SLOT_BITS >= 64 {
+                0
+            } else {
+                (self.elapsed >> (shift + SLOT_BITS)) << (shift + SLOT_BITS)
+            };
+            self.elapsed = above | ((slot as u64) << shift);
+            let bucket = std::mem::take(&mut self.slots[level * SLOTS + slot]);
+            self.occupied[level] &= !(1u64 << slot);
+            if level == 0 {
+                // a level-0 bucket is exactly one tick: sort it into
+                // pending wholesale (descending; pop() takes the back)
+                let mut batch = bucket;
+                batch.sort_unstable_by(|a, b| cmp_items(b, a));
+                self.pending = batch;
+                return true;
+            }
+            // cascade: every item re-lands strictly below `level`
+            // (their ticks differ from the new elapsed only in digits
+            // below it) or is due at the new elapsed tick itself
+            for item in bucket {
+                let tick = self.tick_of(item.time);
+                if tick <= self.elapsed {
+                    self.insert_pending(item);
+                } else {
+                    self.insert_wheel(tick, item);
+                }
+            }
+            if !self.pending.is_empty() {
+                return true;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use crate::sim::events::EventQueue;
+    use crate::util::rng::{Pcg64, Rng};
+
+    /// Drive a heap queue and a wheel queue with an identical random
+    /// stream of interleaved pushes and pops — duplicate timestamps,
+    /// zero-delay (due-now) inserts into a partially drained tick,
+    /// sub-tick jitter, and far-future bursts — and require bit-equal
+    /// pops throughout, including the FIFO tiebreak on event ids.
+    fn oracle_stream(seed: u64, tick_s: f64) {
+        let mut heap = EventQueue::heap();
+        let mut wheel = EventQueue::wheel_with_tick(tick_s);
+        let mut rng = Pcg64::seeded(seed);
+        let mut next_id = 0u64;
+        let mut last_t = 0.0f64;
+        for _ in 0..300 {
+            for _ in 0..rng.below(8) {
+                let t = match rng.below(5) {
+                    0 => heap.now(),                        // due now: fire immediately
+                    // exact duplicate timestamp (clamped: the queue
+                    // rejects scheduling into the past in debug builds)
+                    1 => last_t.max(heap.now()),
+                    2 => heap.now() + rng.next_f64() * 1e-4, // sub-tick jitter
+                    3 => heap.now() + rng.next_f64() * 3.0, // typical spacing
+                    _ => heap.now() + 1e3 + rng.next_f64() * 1e6, // far future
+                };
+                last_t = t;
+                heap.schedule(t, next_id);
+                wheel.schedule(t, next_id);
+                next_id += 1;
+            }
+            for _ in 0..rng.below(6) {
+                assert_eq!(heap.pop(), wheel.pop(), "seed {seed} tick {tick_s}");
+                assert_eq!(heap.now(), wheel.now());
+                assert_eq!(heap.len(), wheel.len());
+            }
+        }
+        loop {
+            let (h, w) = (heap.pop(), wheel.pop());
+            assert_eq!(h, w, "drain diverged, seed {seed} tick {tick_s}");
+            if h.is_none() {
+                break;
+            }
+        }
+    }
+
+    #[test]
+    fn wheel_matches_heap_oracle_across_granularities() {
+        // granularities spanning sub-event-spacing to multi-event ticks:
+        // a huge tick collapses everything into few buckets (stress the
+        // in-bucket sort), a tiny one stresses cascading across levels
+        for &tick_s in &[1e-6, 1e-3, 0.25, 7.0, 1e4] {
+            for seed in 0..6 {
+                oracle_stream(seed, tick_s);
+            }
+        }
+    }
+
+    #[test]
+    fn fifo_within_one_tick() {
+        let mut q = EventQueue::wheel_with_tick(1.0);
+        // all land in tick 5, with distinct times and one duplicate pair
+        q.schedule(5.75, "a");
+        q.schedule(5.25, "b");
+        q.schedule(5.25, "c");
+        q.schedule(5.5, "d");
+        assert_eq!(q.pop().unwrap(), (5.25, "b"));
+        assert_eq!(q.pop().unwrap(), (5.25, "c"));
+        assert_eq!(q.pop().unwrap(), (5.5, "d"));
+        assert_eq!(q.pop().unwrap(), (5.75, "a"));
+    }
+
+    #[test]
+    fn due_now_insert_lands_mid_drain() {
+        let mut q = EventQueue::wheel_with_tick(1.0);
+        q.schedule(5.1, 1u32);
+        q.schedule(5.9, 3u32);
+        assert_eq!(q.pop().unwrap(), (5.1, 1));
+        // tick 5 is half-drained; a due-now event must still precede 5.9
+        q.schedule(5.1, 2u32);
+        assert_eq!(q.pop().unwrap(), (5.1, 2));
+        assert_eq!(q.pop().unwrap(), (5.9, 3));
+        assert!(q.pop().is_none());
+    }
+
+    #[test]
+    fn far_future_cascades_through_levels() {
+        let mut q = EventQueue::wheel_with_tick(1e-3);
+        // ticks: 1, ~64^2, ~64^4, ~64^5 — forces multi-level cascades
+        q.schedule(17_179_869.0, "level5");
+        q.schedule(16_777.216, "level4");
+        q.schedule(4.096, "level2");
+        q.schedule(0.001, "level0");
+        assert_eq!(q.pop().unwrap().1, "level0");
+        assert_eq!(q.pop().unwrap().1, "level2");
+        assert_eq!(q.pop().unwrap().1, "level4");
+        assert_eq!(q.pop().unwrap().1, "level5");
+        assert!(q.is_empty());
+    }
+
+    #[test]
+    fn bulk_identical_timestamps_stay_fifo() {
+        let mut heap = EventQueue::heap();
+        let mut wheel = EventQueue::wheel_with_tick(0.125);
+        for i in 0..1000u32 {
+            heap.schedule(42.0, i);
+            wheel.schedule(42.0, i);
+        }
+        for _ in 0..1000 {
+            assert_eq!(heap.pop(), wheel.pop());
+        }
+    }
+}

@@ -47,6 +47,7 @@ fn one_shard_spec(ccfg: &CloudletConfig) -> ClusterSpec {
             cloudlet: ccfg.clone(),
             seed_offset: 0,
             churn: ChurnTrace::default(),
+            population: None,
         }],
         global: Default::default(),
     }
@@ -164,6 +165,7 @@ fn churny_spec(shards: usize) -> ClusterSpec {
                 cloudlet: ccfg.clone(),
                 seed_offset: i as u64,
                 churn: ChurnTrace::default(),
+                population: None,
             })
             .collect(),
         global: GlobalAggSpec {

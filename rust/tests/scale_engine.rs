@@ -1,0 +1,180 @@
+//! Scale-engine integration: population-sampled scenarios must be a
+//! *representation* change, not a semantics change. Expansion is
+//! deterministic in the seed; the grouped allocator fast path keeps the
+//! orchestrator's sync timeline bit-identical (ETA) or τ-identical with
+//! conserved totals (UB-Analytical); and churn re-splits on a
+//! population-backed pool conserve the dataset exactly, member by
+//! member, no matter how many learners the groups expand to.
+
+use mel::alloc::Policy;
+use mel::cluster::{ChurnAwarePlanner, Cluster, ClusterConfig};
+use mel::orchestrator::{CyclePlanner, Mode, Orchestrator, OrchestratorConfig};
+use mel::scenario::{ChurnTrace, CloudletConfig, ClusterSpec, PopulationSpec, ShardSpec};
+
+fn population(k: usize, groups: usize, seed: u64) -> PopulationSpec {
+    let cloudlet = CloudletConfig::by_task("pedestrian", k).expect("builtin task");
+    PopulationSpec::sample(&cloudlet, groups, seed)
+}
+
+fn sync_cfg(policy: Policy, grouped: bool, seed: u64) -> OrchestratorConfig {
+    OrchestratorConfig {
+        mode: Mode::Sync,
+        policy,
+        t_total: 30.0,
+        cycles: 3,
+        seed,
+        grouped_alloc: grouped,
+        ..OrchestratorConfig::default()
+    }
+}
+
+#[test]
+fn population_expansion_is_deterministic_in_the_seed() {
+    for seed in [1u64, 7, 42] {
+        let a = population(120, 6, seed).expand();
+        let b = population(120, 6, seed).expand();
+        assert_eq!(a.k(), 120);
+        assert_eq!(a.dataset.total_samples, b.dataset.total_samples);
+        for (la, lb) in a.learners.iter().zip(&b.learners) {
+            // bit-for-bit: same sampled groups, same member coefficients
+            let (ca, cb) = (la.coeffs(&a.model), lb.coeffs(&b.model));
+            assert_eq!(ca.c2, cb.c2, "seed {seed}");
+            assert_eq!(ca.c1, cb.c1, "seed {seed}");
+            assert_eq!(ca.c0, cb.c0, "seed {seed}");
+        }
+        // a different seed draws different group placements — the
+        // channel-side coefficients (c1/c0 depend on distance) move
+        let other = population(120, 6, seed + 100).expand();
+        let differs = a
+            .learners
+            .iter()
+            .zip(&other.learners)
+            .any(|(x, y)| x.coeffs(&a.model).c1 != y.coeffs(&other.model).c1);
+        assert!(differs, "seed {seed}: different seeds must sample different groups");
+    }
+}
+
+#[test]
+fn grouped_orchestrator_matches_flat_on_expanded_populations() {
+    // The sublinear per-group solve is an equivalence transform of the
+    // legacy per-learner path: ETA timelines are bit-identical, and
+    // UB-Analytical agrees on τ with exact conservation. Covers the
+    // 1-group (fully homogeneous) collapse and a multi-group pool.
+    for (groups, seed) in [(1usize, 3u64), (4, 9)] {
+        let pop = population(100, groups, seed);
+        let flat_eta =
+            Orchestrator::new(pop.expand(), sync_cfg(Policy::Eta, false, seed)).run().unwrap();
+        let grp_eta =
+            Orchestrator::new(pop.expand(), sync_cfg(Policy::Eta, true, seed)).run().unwrap();
+        assert_eq!(flat_eta.rounds.len(), grp_eta.rounds.len());
+        for (a, b) in flat_eta.rounds.iter().zip(&grp_eta.rounds) {
+            assert_eq!(a.alloc.tau, b.alloc.tau, "{groups} group(s)");
+            assert_eq!(a.alloc.batches, b.alloc.batches, "{groups} group(s)");
+            // bit-for-bit: identical batches drive identical timelines
+            assert_eq!(a.makespan, b.makespan, "{groups} group(s)");
+            assert_eq!(a.completion, b.completion, "{groups} group(s)");
+        }
+
+        let d = pop.dataset.total_samples;
+        let flat_ana = Orchestrator::new(pop.expand(), sync_cfg(Policy::Analytical, false, seed))
+            .run()
+            .unwrap();
+        let grp_ana = Orchestrator::new(pop.expand(), sync_cfg(Policy::Analytical, true, seed))
+            .run()
+            .unwrap();
+        for (a, b) in flat_ana.rounds.iter().zip(&grp_ana.rounds) {
+            assert_eq!(a.alloc.tau, b.alloc.tau, "{groups} group(s)");
+            assert_eq!(b.alloc.batches.iter().sum::<usize>(), d, "{groups} group(s)");
+            assert!(b.deadline_misses.is_empty(), "{groups} group(s)");
+        }
+    }
+}
+
+#[test]
+fn grouped_churn_resplits_conserve_the_dataset() {
+    // Depart/rejoin storms on a population-backed pool: every re-split
+    // through the grouped path hands out exactly d samples across the
+    // active members, matching the flat planner's conservation law.
+    let pop = population(96, 6, 11);
+    let problem = pop.expand().problem(30.0);
+    let d = pop.dataset.total_samples;
+    let k = problem.k();
+    for policy in [Policy::Eta, Policy::Analytical] {
+        let mut grouped = ChurnAwarePlanner::new(policy, vec![true; k]).with_grouped(true);
+        let mut flat = ChurnAwarePlanner::new(policy, vec![true; k]);
+        grouped.plan_round(&problem, 0.0).expect("feasible");
+        flat.plan_round(&problem, 0.0).expect("feasible");
+        assert_eq!(grouped.planned_batches().iter().sum::<usize>(), d);
+        // a storm: drop a prefix one by one, then bring everyone back
+        let mut now = 1.0;
+        for i in 0..8 {
+            grouped.on_membership(i, false, &problem, now);
+            flat.on_membership(i, false, &problem, now);
+            now += 1.0;
+            assert_eq!(
+                grouped.planned_batches().iter().sum::<usize>(),
+                d,
+                "{policy:?}: conservation lost after {} departures",
+                i + 1
+            );
+            for gone in 0..=i {
+                assert_eq!(grouped.planned_batches()[gone], 0, "{policy:?}");
+            }
+            if policy == Policy::Eta {
+                // grouped and flat ETA re-splits stay bit-identical
+                assert_eq!(grouped.planned_batches(), flat.planned_batches());
+            }
+        }
+        for i in 0..8 {
+            grouped.on_membership(i, true, &problem, now);
+            now += 1.0;
+        }
+        assert_eq!(grouped.planned_batches().iter().sum::<usize>(), d, "{policy:?}");
+        assert_eq!(grouped.resplits(), 17, "{policy:?}: one initial + one per event");
+    }
+}
+
+#[test]
+fn population_shard_runs_through_the_cluster_under_churn() {
+    // End to end: a ShardSpec with a population (no per-learner
+    // cloudlet sampling) runs the full cluster path — grouped
+    // allocation is automatic — under synthetic churn, deterministically.
+    let pop = population(64, 4, 5);
+    let k = pop.k();
+    let spec = || {
+        let s = ClusterSpec {
+            shards: vec![ShardSpec {
+                cloudlet: CloudletConfig::by_task("pedestrian", k).unwrap(),
+                seed_offset: 0,
+                churn: ChurnTrace::default(),
+                population: Some(pop.clone()),
+            }],
+            global: Default::default(),
+        };
+        s.with_synthetic_churn(120.0, 3, 5)
+    };
+    let cfg = ClusterConfig {
+        policy: Policy::Analytical,
+        mode: Mode::Async,
+        t_total: 30.0,
+        cycles: 4,
+        seed: 5,
+        ..ClusterConfig::default()
+    };
+    let first = Cluster::new(spec(), cfg.clone()).run().unwrap();
+    assert_eq!(first.shards.len(), 1);
+    assert!(first.updates_applied > 0);
+    let sr = &first.shards[0];
+    assert!(sr.joins + sr.departs > 0, "synthetic churn produced no events");
+    assert!(sr.resplits >= 2, "churn must force grouped re-splits");
+    // seeded end to end, population path included
+    let second = Cluster::new(spec(), cfg).run().unwrap();
+    assert_eq!(first.updates_applied, second.updates_applied);
+    assert_eq!(first.updates.len(), second.updates.len());
+    for ((sa, a), (sb, b)) in first.updates.iter().zip(&second.updates) {
+        assert_eq!(sa, sb);
+        assert_eq!(a.learner, b.learner);
+        assert_eq!(a.uploaded_at, b.uploaded_at);
+        assert_eq!(a.batch, b.batch);
+    }
+}
