@@ -83,6 +83,35 @@ for q in heap wheel; do
     MEL_EVENT_QUEUE="$q" cargo test -q --lib sim::
 done
 
+# ---- tracing-plane gate (ISSUE 8) ---------------------------------------
+# The tracing plane must (a) never perturb training — the trace_plane
+# suite compares seeded runs bit-for-bit with tracing on and off, at
+# both compute-pool extremes — and (b) actually export loadable
+# artifacts: `mel trace` must write Chrome trace-event JSON, a
+# Prometheus exposition, and the per-lease eq. (13) budget CSV.
+for t in 1 4; do
+    echo "==> tracing non-perturbation tests at MEL_THREADS=$t"
+    MEL_THREADS="$t" cargo test -q --test trace_plane
+done
+echo "==> mel trace smoke"
+trace_tmp="$(mktemp -d)"
+./target/release/mel trace --scenario pedestrian --k 5 --t 10 --cycles 3 \
+    --mode async --d 256 --hidden 8 --eval-samples 48 --seed 42 \
+    --out "$trace_tmp" --format all > /dev/null
+for f in trace.chrome.json metrics.prom budget.csv; do
+    if [ ! -s "$trace_tmp/$f" ]; then
+        echo "FAIL: mel trace did not write $f"
+        rm -rf "$trace_tmp"
+        exit 1
+    fi
+done
+head -1 "$trace_tmp/budget.csv" | grep -q '^shard,learner,dispatch_s' || {
+    echo "FAIL: budget.csv header is wrong"
+    rm -rf "$trace_tmp"
+    exit 1
+}
+rm -rf "$trace_tmp"
+
 # ---- perf-trajectory gate self-test -------------------------------------
 # The stored-baseline comparison below only bites when CI_BENCH runs, so
 # prove on every CI run that the gate itself still fails on a synthetic

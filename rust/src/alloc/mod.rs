@@ -267,6 +267,25 @@ impl Policy {
     }
 }
 
+/// Run an allocator solve under a wall-clock trace span (`cat =
+/// "alloc"`), tagging the span with the problem size. A plain passthrough
+/// when tracing is disabled; the solve itself is untouched either way,
+/// so traced and untraced plans are bit-identical.
+pub fn allocate_traced(
+    a: &dyn TaskAllocator,
+    label: &'static str,
+    p: &Problem,
+) -> Result<Allocation, AllocError> {
+    let _span = crate::trace::wall_span(
+        "alloc",
+        label,
+        crate::trace::current_shard(),
+        0,
+        &[("k", p.coeffs.len() as f64), ("d", p.total_samples as f64)],
+    );
+    a.allocate(p)
+}
+
 #[cfg(test)]
 pub(crate) mod testutil {
     use super::*;

@@ -163,9 +163,18 @@ impl ChurnAwarePlanner {
         // split — so the grouped path keeps the planned state identical
         // while solving per group instead of per learner
         let alloc = if self.grouped {
-            crate::alloc::grouped::allocate_auto(self.split, &sub)?
+            let solve_span = crate::trace::wall_span(
+                "alloc",
+                "resplit_grouped",
+                crate::trace::current_shard(),
+                0,
+                &[("members", idx.len() as f64), ("d", sub.total_samples as f64)],
+            );
+            let a = crate::alloc::grouped::allocate_auto(self.split, &sub)?;
+            drop(solve_span);
+            a
         } else {
-            split.allocator().allocate(&sub)?
+            crate::alloc::allocate_traced(&*split.allocator(), "resplit_flat", &sub)?
         };
 
         let mut planned = vec![0usize; k];
@@ -198,6 +207,12 @@ impl ChurnAwarePlanner {
         self.lease_batch = lease_batch;
         self.planned_tau = planned_tau;
         self.resplits += 1;
+        log::debug!(
+            "re-split #{} across {} active member(s), {} samples total",
+            self.resplits,
+            idx.len(),
+            p.total_samples
+        );
         Ok(())
     }
 
@@ -287,10 +302,14 @@ impl CyclePlanner for ChurnAwarePlanner {
         if learner < self.active.len() {
             self.active[learner] = joined;
         }
-        if self.resplit(p).is_err() {
+        if let Err(e) = self.resplit(p) {
             // keep the surviving split; the departed learner's share is
             // parked until the next successful re-split
             self.resplit_failures += 1;
+            log::warn!(
+                "re-split failed after learner {learner} {} ({e}); keeping the surviving split",
+                if joined { "joined" } else { "departed" }
+            );
             if !joined && learner < self.planned.len() {
                 self.planned[learner] = 0;
                 self.lease_batch[learner] = 0;
@@ -313,13 +332,23 @@ impl CyclePlanner for ChurnAwarePlanner {
             });
         }
         match self.shrunken(learner) {
-            None => Redispatch::AwaitBarrier, // parked
-            Some(batch) => Redispatch::Immediate(Lease {
-                learner,
-                batch,
-                tau: self.fresh_tau(p, learner, batch),
-                deadline: now + self.lease_clock(p),
-            }),
+            None => {
+                // parked: batch floor reached (or no share at all)
+                log::debug!(
+                    "learner {learner}: batch floor reached at t={now:.3}s; \
+                     parked until the next re-split"
+                );
+                Redispatch::AwaitBarrier
+            }
+            Some(batch) => {
+                log::trace!("learner {learner}: shrunken re-lease d={batch} at t={now:.3}s");
+                Redispatch::Immediate(Lease {
+                    learner,
+                    batch,
+                    tau: self.fresh_tau(p, learner, batch),
+                    deadline: now + self.lease_clock(p),
+                })
+            }
         }
     }
 }

@@ -99,6 +99,10 @@ pub struct ClusterConfig {
     /// (`ShardSpec::population`) always take the grouped path; this
     /// knob extends it to per-learner shards whose pools collapse.
     pub grouped_alloc: bool,
+    /// Enable the [`crate::trace`] span recorder for this run (same
+    /// effect as `MEL_TRACE=1`). Non-perturbing: traced runs are
+    /// bit-for-bit identical to untraced ones.
+    pub trace_spans: bool,
 }
 
 impl Default for ClusterConfig {
@@ -116,6 +120,7 @@ impl Default for ClusterConfig {
             seed: 1,
             trace: false,
             grouped_alloc: false,
+            trace_spans: false,
         }
     }
 }
@@ -173,6 +178,9 @@ impl Cluster {
     /// bench iterations) do not accumulate stale totals.
     pub fn run(&self) -> Result<ClusterReport, AllocError> {
         self.metrics.clear();
+        if self.cfg.trace_spans {
+            crate::trace::set_enabled(true);
+        }
         let handles: Vec<_> = self
             .spec
             .shards
@@ -181,7 +189,13 @@ impl Cluster {
             .map(|(i, s)| {
                 let spec = s.clone();
                 let cfg = self.cfg.clone();
-                thread::spawn(move || run_shard(i, &spec, &cfg))
+                thread::spawn(move || {
+                    // tag the shard thread so every span it records —
+                    // including deep ones in alloc/orchestrator — lands
+                    // on this shard's trace track
+                    crate::trace::set_shard(i as u32);
+                    run_shard(i, &spec, &cfg)
+                })
             })
             .collect();
         let mut shards = Vec::with_capacity(handles.len());
@@ -327,6 +341,8 @@ fn run_churn_shard(
     let metrics = Arc::new(Metrics::new());
     let k_n = scenario.k();
     let horizon = cfg.cycles as f64 * cfg.t_total;
+    // churn-loop event times are absolute already
+    crate::trace::set_sim_offset(0.0);
     let drop_stragglers = !cfg.straggler_releasing;
     let shrink = if cfg.straggler_releasing { cfg.lease_shrink } else { 1.0 };
 
@@ -407,6 +423,18 @@ fn run_churn_shard(
                     // cancel the in-flight lease: the node is gone
                     active[learner] = None;
                 }
+                log::debug!(
+                    "shard {shard}: learner {learner} {} at t={t:.3}s",
+                    if joined { "joined" } else { "departed" }
+                );
+                crate::trace::instant(
+                    "churn",
+                    if joined { "join" } else { "depart" },
+                    shard as u32,
+                    learner as u32,
+                    t,
+                    &[],
+                );
                 timeline.push((t, ev));
                 if fading {
                     scenario.redraw_fading(&fade_spec, &mut fade_rng);
@@ -419,6 +447,16 @@ fn run_churn_shard(
                 for k in 0..k_n {
                     if member[k] && active[k].is_none() && t < horizon {
                         if let Redispatch::Immediate(lease) = planner.on_upload(k, &problem, t) {
+                            log::trace!(
+                                "shard {shard}: re-leasing idle learner {k} at t={t:.3}s \
+                                 (tau={}, d={})",
+                                lease.tau,
+                                lease.batch
+                            );
+                            crate::trace::instant("churn", "re_lease", shard as u32, k as u32, t, &[
+                                ("tau", lease.tau as f64),
+                                ("d", lease.batch as f64),
+                            ]);
                             expected_upload[k] =
                                 t + problem.coeffs[k].time(lease.tau as f64, lease.batch as f64);
                             schedule_lease(&mut q, &problem, &lease, t, cfg.trace);
@@ -441,6 +479,19 @@ fn run_churn_shard(
                 if missed {
                     misses += 1;
                     metrics.inc("deadline_misses", 1);
+                    log::debug!(
+                        "shard {shard}: learner {learner} missed its lease deadline \
+                         {:.3}s at t={t:.3}s",
+                        lease.deadline
+                    );
+                    crate::trace::instant(
+                        "lease",
+                        "deadline_miss",
+                        shard as u32,
+                        learner as u32,
+                        t,
+                        &[("deadline", lease.deadline), ("staleness", staleness as f64)],
+                    );
                     timeline.push((t, LearnerEvent::DeadlineMissed { learner }));
                 } else {
                     timeline.push((t, ev));
@@ -474,6 +525,19 @@ fn run_churn_shard(
                         if missed && cfg.straggler_releasing {
                             releases += 1;
                             metrics.inc("releases", 1);
+                            log::debug!(
+                                "shard {shard}: re-leasing straggler {learner} at t={t:.3}s \
+                                 with shrunken batch {}",
+                                lease.batch
+                            );
+                            crate::trace::instant(
+                                "churn",
+                                "straggler_release",
+                                shard as u32,
+                                learner as u32,
+                                t,
+                                &[("tau", lease.tau as f64), ("d", lease.batch as f64)],
+                            );
                         }
                         expected_upload[learner] =
                             t + problem.coeffs[learner].time(lease.tau as f64, lease.batch as f64);

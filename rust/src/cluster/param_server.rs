@@ -338,6 +338,8 @@ impl ParamServer {
     ) -> anyhow::Result<()> {
         let man = self.engine.manifest().cloned();
         let handle = self.engine.handle();
+        // replay times are absolute cluster-sim times
+        crate::trace::set_sim_offset(0.0);
 
         let mut cohorts: BTreeMap<(usize, u64), Vec<UpdateRecord>> = BTreeMap::new();
         for (shard, u) in updates {
@@ -386,10 +388,34 @@ impl ParamServer {
             } else {
                 let members = &cohorts[&key];
                 let (snapshot, idx) = open.remove(&key).expect("dispatch precedes apply");
+                let train_span = crate::trace::wall_span(
+                    "ps",
+                    "cohort_train",
+                    crate::trace::PID_PARAM_SERVER,
+                    shard as u32,
+                    &[("members", members.len() as f64)],
+                );
                 let mut entries: Vec<(f64, ParamSet)> = Vec::new();
                 for (u, idx_k) in members.iter().zip(&idx) {
                     if u.missed_deadline && self.cfg.drop_stragglers {
                         continue;
+                    }
+                    if u.staleness > 0 {
+                        crate::trace::instant(
+                            "ps",
+                            "stale_update",
+                            crate::trace::PID_PARAM_SERVER,
+                            shard as u32,
+                            u.uploaded_at,
+                            &[
+                                ("learner", u.learner as f64),
+                                ("staleness", u.staleness as f64),
+                                (
+                                    "discount_w",
+                                    staleness_factor(self.cfg.staleness_discount, u.staleness),
+                                ),
+                            ],
+                        );
                     }
                     let mut local = snapshot.clone();
                     local_training(
@@ -407,9 +433,20 @@ impl ParamServer {
                     acc.replayed += 1;
                     entries.push((w, local));
                 }
+                drop(train_span);
+                let cohort_members = entries.len();
                 if mix_into(&mut self.global, self.total_share, entries) {
                     acc.applies += 1;
                     let t = f64::from_bits(t_bits);
+                    crate::trace::span(
+                        "ps",
+                        "cohort_apply",
+                        crate::trace::PID_PARAM_SERVER,
+                        shard as u32,
+                        f64::from_bits(disp),
+                        t,
+                        &[("members", cohort_members as f64), ("applies", acc.applies as f64)],
+                    );
                     let (loss, accuracy) = self.eval_point()?;
                     self.record_point(acc, t, loss, accuracy);
                 }
@@ -434,6 +471,8 @@ impl ParamServer {
         anyhow::ensure!(period > 0.0, "rounds aggregation needs a positive round_period_s");
         let man = self.engine.manifest().cloned();
         let handle = self.engine.handle();
+        // replay times are absolute cluster-sim times
+        crate::trace::set_sim_offset(0.0);
 
         let mut rounds: BTreeMap<u64, Vec<(usize, UpdateRecord)>> = BTreeMap::new();
         for (shard, u) in updates {
@@ -483,6 +522,20 @@ impl ParamServer {
             }
             let aggregated = entries.len() as u64;
             let t = (r + 1) as f64 * period;
+            crate::trace::span(
+                "ps",
+                "round_apply",
+                crate::trace::PID_PARAM_SERVER,
+                0,
+                r as f64 * period,
+                t,
+                &[
+                    ("round", r as f64),
+                    ("updates", aggregated as f64),
+                    ("share", share),
+                    ("weight", weight),
+                ],
+            );
             if mix_into(&mut self.global, self.total_share, entries) {
                 acc.applies += 1;
                 let (loss, accuracy) = self.eval_point()?;

@@ -146,7 +146,10 @@ impl ComputePool {
                 let q = Arc::clone(&queue);
                 std::thread::Builder::new()
                     .name(format!("mel-compute-{i}"))
-                    .spawn(move || worker_main(&q))
+                    .spawn(move || {
+                        crate::trace::set_worker(i as u32);
+                        worker_main(&q)
+                    })
                     .expect("spawn compute worker")
             })
             .collect();
@@ -172,12 +175,28 @@ impl ComputePool {
         if tasks.is_empty() {
             return;
         }
+        // Wall-clock occupancy of this run call (queue wait + execution);
+        // a no-op unless tracing is enabled.
+        let _run_span = crate::trace::wall_span(
+            "pool",
+            "pool_run",
+            crate::trace::PID_COMPUTE_POOL,
+            crate::trace::TID_POOL_RUN,
+            &[("jobs", tasks.len() as f64)],
+        );
         let latch = Arc::new(Latch::new(tasks.len()));
         {
             let mut q = self.queue.state.lock().unwrap();
             for task in tasks {
                 let mut guard = DoneGuard { latch: Arc::clone(&latch), completed: false };
                 let job: Box<dyn FnOnce() + Send + 'scope> = Box::new(move || {
+                    let _job_span = crate::trace::wall_span(
+                        "pool",
+                        "job",
+                        crate::trace::PID_COMPUTE_POOL,
+                        crate::trace::current_worker(),
+                        &[],
+                    );
                     task();
                     guard.completed = true;
                 });

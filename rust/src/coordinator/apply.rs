@@ -141,6 +141,15 @@ pub fn local_training(
     tau: u64,
     lr: f32,
 ) -> anyhow::Result<()> {
+    // Wall-clock cost of one learner's full local round (τ iterations);
+    // a no-op unless tracing is enabled.
+    let _train_span = crate::trace::wall_span(
+        "train",
+        "local_training",
+        crate::trace::current_shard(),
+        0,
+        &[("tau", tau as f64), ("n", idx.len() as f64)],
+    );
     let plan = plan_chunks(man, call, idx.len());
     if man.is_none() && call.function == Function::GradStep && plan.len() == 1 {
         let fused = Call { function: Function::FusedStep, ..call.clone() };

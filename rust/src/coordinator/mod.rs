@@ -93,6 +93,11 @@ pub struct TrainConfig {
     /// cycle (false) — the deadline-enforcement behaviour a real
     /// orchestrator needs.
     pub drop_stragglers: bool,
+    /// Enable the tracing plane for this run (same effect as
+    /// `MEL_TRACE=1`). Tracing is observational only: it never touches
+    /// RNG state or float order, so results are bit-for-bit identical
+    /// with it on or off.
+    pub trace_spans: bool,
 }
 
 impl Default for TrainConfig {
@@ -112,6 +117,7 @@ impl Default for TrainConfig {
             shadow_sigma_db: 0.0,
             rayleigh: false,
             drop_stragglers: false,
+            trace_spans: false,
         }
     }
 }
@@ -151,6 +157,9 @@ impl Trainer {
     /// synthesizes the datasets, initializes **w**, and stands up the
     /// event-driven orchestration core in barrier mode.
     pub fn new(scenario: Scenario, cfg: TrainConfig) -> anyhow::Result<Self> {
+        if cfg.trace_spans {
+            crate::trace::set_enabled(true);
+        }
         // The PJRT backend can only run graphs the artifacts were
         // lowered for (exact arch + layer widths, both functions the
         // trainer executes) — `start_engine` decides coverage *before*

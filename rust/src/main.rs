@@ -7,6 +7,8 @@
 //!              [--backend auto|native|pjrt] [--hidden 16,8]
 //! mel bench    diff <old.json> <new.json> [--threshold 0.10] [--fail-on-regress]
 //! mel scenario --task mnist --k 10 [--seed N] [--describe]
+//! mel trace    --scenario pedestrian --k 5 --t 10 --cycles 3 [--mode sync|async] [--shards N]
+//!              [--churners N] --out results/trace [--format chrome|prom|csv|all]
 //! mel info
 //! ```
 
@@ -54,6 +56,7 @@ fn main() {
         Some("energy") => cmd_energy(&args),
         Some("sweep") => cmd_sweep(&args),
         Some("bench") => cmd_bench(&args),
+        Some("trace") => cmd_trace(&args),
         Some("info") => cmd_info(),
         _ => {
             print_help();
@@ -100,6 +103,12 @@ fn print_help() {
             name: "energy",
             about: "per-cycle energy report for every policy (extension)",
             usage: "--task pedestrian --k 10 --t 30",
+        },
+        Command {
+            name: "trace",
+            about: "run a traced cluster + ParamServer replay and export Perfetto/Prometheus/CSV",
+            usage: "--scenario pedestrian --k 5 --t 10 --cycles 3 --mode async \
+                    --out results/trace --format all",
         },
         Command { name: "info", about: "build/runtime information", usage: "" },
     ];
@@ -442,6 +451,7 @@ fn cmd_train(args: &Args) -> i32 {
         shadow_sigma_db: args.get_f64("shadow-db", 0.0),
         rayleigh: args.has_flag("rayleigh"),
         drop_stragglers: args.has_flag("drop-stragglers"),
+        trace_spans: args.has_flag("trace-spans"),
     };
     println!(
         "MEL training: task={} layers={:?} K={} d={} T={}s policy={} cycles={}",
@@ -599,6 +609,151 @@ fn cmd_bench(args: &Args) -> i32 {
         return 1;
     }
     0
+}
+
+// ---------------------------------------------------------------------
+// deterministic tracing plane (`mel trace`)
+// ---------------------------------------------------------------------
+
+/// Run a traced multi-shard timing run plus the real ParamServer SGD
+/// replay, then export the recorded spans: Chrome trace-event JSON
+/// (load at ui.perfetto.dev), a Prometheus text exposition of the
+/// cluster metrics, and the per-lease eq. (13) budget CSV whose
+/// `send + compute + upload + slack` columns sum to `T` for every
+/// on-time lease.
+fn cmd_trace(args: &Args) -> i32 {
+    use mel::cluster::{Cluster, ClusterConfig, ParamServerConfig};
+    use mel::orchestrator::Mode;
+    use mel::scenario::ClusterSpec;
+
+    // validate every knob before doing any work: malformed flags are
+    // usage errors (exit 2), never mid-run failures
+    let format = args.get_str("format", "all");
+    let (want_chrome, want_prom, want_csv) = match format {
+        "all" => (true, true, true),
+        "chrome" => (true, false, false),
+        "prom" => (false, true, false),
+        "csv" => (false, false, true),
+        other => {
+            eprintln!("mel: usage error: --format expects chrome|prom|csv|all, got {other:?}");
+            return 2;
+        }
+    };
+    let mode = match args.get_str("mode", "sync") {
+        "sync" => Mode::Sync,
+        "async" => Mode::Async,
+        other => {
+            eprintln!("mel: usage error: --mode expects sync or async, got {other:?}");
+            return 2;
+        }
+    };
+    let out = args.get_str("out", "results/trace");
+    if let Err(e) = std::fs::create_dir_all(out) {
+        eprintln!("mel: usage error: cannot create --out {out:?}: {e}");
+        return 2;
+    }
+    let task = args.opt_str("scenario").or_else(|| args.opt_str("task")).unwrap_or("pedestrian");
+    let k = args.get_usize("k", 5);
+    let shards = args.get_usize("shards", 1).max(1);
+    let seed = args.get_u64("seed", 42);
+    let t_total = args.get_f64("t", 10.0);
+    let cycles = args.get_usize("cycles", 3);
+    let churners = args.get_usize("churners", 0);
+    let mut spec = match ClusterSpec::uniform(task, shards, k) {
+        Some(s) => s,
+        None => {
+            eprintln!("mel: usage error: unknown scenario {task:?} (pedestrian|mnist)");
+            return 2;
+        }
+    };
+    // shrink the per-shard dataset so traced runs stay interactive; the
+    // timing model keeps the paper's full-rate coefficients either way
+    let d = args.get_usize("d", 512);
+    for shard in &mut spec.shards {
+        shard.cloudlet.dataset.total_samples = d;
+    }
+    match parse_hidden_flag(args) {
+        Ok(Some(hidden)) => {
+            for shard in &mut spec.shards {
+                shard.cloudlet.model = shard.cloudlet.model.with_hidden(&hidden);
+            }
+        }
+        Ok(None) => {}
+        Err(e) => {
+            eprintln!("mel: usage error: {e}");
+            return 2;
+        }
+    }
+    if churners > 0 {
+        spec = spec.with_synthetic_churn(cycles as f64 * t_total, churners, seed);
+    }
+    let policy = match Policy::parse(args.get_str("policy", "analytical")) {
+        Some(p) => p,
+        None => {
+            eprintln!("mel: usage error: unknown policy {:?}", args.get_str("policy", ""));
+            return 2;
+        }
+    };
+    let cluster = Cluster::new(
+        spec,
+        ClusterConfig {
+            policy,
+            mode,
+            t_total,
+            cycles,
+            seed,
+            trace_spans: true,
+            ..ClusterConfig::default()
+        },
+    );
+    let mut ps_cfg = ParamServerConfig::from_spec(&cluster.spec.global, seed);
+    ps_cfg.lr = args.get_f64("lr", 0.05) as f32;
+    ps_cfg.eval_samples = args.get_usize("eval-samples", 64);
+
+    mel::trace::set_enabled(true);
+    mel::trace::clear();
+    let (report, global) = match cluster.run_global(ps_cfg) {
+        Ok(r) => r,
+        Err(e) => {
+            eprintln!("trace run failed: {e}");
+            return 1;
+        }
+    };
+    let events = mel::trace::drain();
+    println!(
+        "traced {} event(s) ({} dropped by ring buffers): {} update(s), {} applied, \
+         {} deadline miss(es), final acc {:.3}",
+        events.len(),
+        mel::trace::dropped(),
+        report.updates.len(),
+        global.applies,
+        report.deadline_misses,
+        global.final_accuracy,
+    );
+    let mut write = |name: &str, contents: String| -> i32 {
+        let path = format!("{out}/{name}");
+        match std::fs::write(&path, contents) {
+            Ok(()) => {
+                println!("wrote {path}");
+                0
+            }
+            Err(e) => {
+                eprintln!("writing {path}: {e}");
+                1
+            }
+        }
+    };
+    let mut code = 0;
+    if want_chrome {
+        code |= write("trace.chrome.json", mel::trace::export::chrome_trace(&events).to_string());
+    }
+    if want_prom {
+        code |= write("metrics.prom", cluster.metrics.to_prometheus());
+    }
+    if want_csv {
+        code |= write("budget.csv", mel::trace::export::budget_csv(&events, t_total));
+    }
+    code
 }
 
 // ---------------------------------------------------------------------

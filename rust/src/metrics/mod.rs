@@ -64,6 +64,12 @@ impl Summary {
         self.w.max()
     }
 
+    /// Exact minimum via the Welford accumulator (the reservoir may
+    /// have evicted the smallest sample, so it cannot be trusted here).
+    pub fn min(&self) -> f64 {
+        self.w.min()
+    }
+
     pub fn to_json(&self) -> Json {
         if self.samples.is_empty() {
             return Json::obj(vec![("count", Json::Num(0.0))]);
@@ -71,8 +77,10 @@ impl Summary {
         Json::obj(vec![
             ("count", Json::Num(self.count() as f64)),
             ("mean", Json::Num(self.mean())),
+            ("min", Json::Num(self.min())),
             ("p50", Json::Num(self.p(50.0))),
             ("p95", Json::Num(self.p(95.0))),
+            ("p99", Json::Num(self.p(99.0))),
             ("max", Json::Num(self.max())),
         ])
     }
@@ -190,6 +198,55 @@ impl Metrics {
                 ),
             ),
         ])
+    }
+
+    /// Export the registry as a Prometheus text-exposition snapshot
+    /// (`mel trace --format prometheus`): counters and gauges verbatim,
+    /// summaries as `_count`/`_sum` plus `quantile` samples (p50/p95/
+    /// p99) and exact `_min`/`_max`, series as a `_points` gauge with
+    /// the last value. All names get a `mel_` prefix and are sanitized
+    /// to `[a-zA-Z0-9_:]`; BTreeMap iteration keeps the output
+    /// deterministic.
+    pub fn to_prometheus(&self) -> String {
+        fn sanitize(name: &str) -> String {
+            name.chars()
+                .map(|c| if c.is_ascii_alphanumeric() || c == '_' || c == ':' { c } else { '_' })
+                .collect()
+        }
+        let g = self.inner.lock().unwrap();
+        let mut out = String::new();
+        for (k, &v) in &g.counters {
+            let n = sanitize(k);
+            out.push_str(&format!("# TYPE mel_{n} counter\nmel_{n} {v}\n"));
+        }
+        for (k, &v) in &g.gauges {
+            let n = sanitize(k);
+            out.push_str(&format!("# TYPE mel_{n} gauge\nmel_{n} {v}\n"));
+        }
+        for (k, s) in &g.summaries {
+            if s.count() == 0 {
+                continue;
+            }
+            let n = sanitize(k);
+            out.push_str(&format!("# TYPE mel_{n} summary\n"));
+            for (q, label) in [(50.0, "0.5"), (95.0, "0.95"), (99.0, "0.99")] {
+                out.push_str(&format!("mel_{n}{{quantile=\"{label}\"}} {}\n", s.p(q)));
+            }
+            out.push_str(&format!(
+                "mel_{n}_sum {}\nmel_{n}_count {}\n",
+                s.mean() * s.count() as f64,
+                s.count()
+            ));
+            out.push_str(&format!("mel_{n}_min {}\nmel_{n}_max {}\n", s.min(), s.max()));
+        }
+        for (k, pts) in &g.series {
+            let n = sanitize(k);
+            out.push_str(&format!("# TYPE mel_{n}_points gauge\nmel_{n}_points {}\n", pts.len()));
+            if let Some(&(_, y)) = pts.last() {
+                out.push_str(&format!("# TYPE mel_{n}_last gauge\nmel_{n}_last {y}\n"));
+            }
+        }
+        out
     }
 
     /// Export one series as a two-column CSV.
@@ -415,6 +472,67 @@ mod tests {
         };
         let (a, b) = (mk(), mk());
         assert_eq!(a.samples, b.samples);
+    }
+
+    #[test]
+    fn summary_min_p99_at_reservoir_boundary() {
+        // count == cap: the reservoir still holds every sample, so
+        // min/p50/p99 are all exact
+        let mut exact = Summary::default();
+        for i in 0..SUMMARY_RESERVOIR_CAP {
+            exact.push(i as f64);
+        }
+        assert_eq!(exact.samples.len(), SUMMARY_RESERVOIR_CAP);
+        assert_eq!(exact.min(), 0.0);
+        let n = SUMMARY_RESERVOIR_CAP as f64;
+        assert!((exact.p(99.0) - 0.99 * (n - 1.0)).abs() < 1.0, "p99 {}", exact.p(99.0));
+        let j = exact.to_json();
+        assert_eq!(j.get("min").unwrap().as_f64().unwrap(), 0.0);
+        assert!(j.get("p99").unwrap().as_f64().unwrap() <= j.get("max").unwrap().as_f64().unwrap());
+
+        // count > cap: sampling kicks in — count/min/max stay exact via
+        // Welford even if the reservoir evicted the extremes, and p99
+        // remains a sane estimate inside the observed range
+        let mut over = Summary::default();
+        let total = 2 * SUMMARY_RESERVOIR_CAP + 123;
+        for i in 0..total {
+            // descending, so the true minimum arrives last — a pure
+            // reservoir reading would likely miss early extremes
+            over.push((total - 1 - i) as f64);
+        }
+        assert_eq!(over.samples.len(), SUMMARY_RESERVOIR_CAP);
+        assert_eq!(over.count(), total as u64);
+        assert_eq!(over.min(), 0.0);
+        assert_eq!(over.max(), (total - 1) as f64);
+        let p99 = over.p(99.0);
+        assert!(p99 >= over.min() && p99 <= over.max());
+        assert!((p99 / (total as f64) - 0.99).abs() < 0.05, "p99 {p99}");
+        let j = over.to_json();
+        assert_eq!(j.get("count").unwrap().as_u64().unwrap(), total as u64);
+        assert_eq!(j.get("min").unwrap().as_f64().unwrap(), 0.0);
+    }
+
+    #[test]
+    fn prometheus_exposition_snapshot() {
+        let m = Metrics::new();
+        m.inc("updates_applied", 7);
+        m.gauge("tau", 42.0);
+        for i in 0..100 {
+            m.observe("solver seconds", i as f64); // space must sanitize
+        }
+        m.record("loss_vs_simtime", 1.0, 2.5);
+        m.record("loss_vs_simtime", 2.0, 1.5);
+        let text = m.to_prometheus();
+        assert!(text.contains("# TYPE mel_updates_applied counter\nmel_updates_applied 7\n"));
+        assert!(text.contains("# TYPE mel_tau gauge\nmel_tau 42\n"));
+        assert!(text.contains("# TYPE mel_solver_seconds summary\n"));
+        assert!(text.contains("mel_solver_seconds{quantile=\"0.99\"}"));
+        assert!(text.contains("mel_solver_seconds_count 100\n"));
+        assert!(text.contains("mel_solver_seconds_min 0\n"));
+        assert!(text.contains("mel_loss_vs_simtime_points 2\n"));
+        assert!(text.contains("mel_loss_vs_simtime_last 1.5\n"));
+        // no unsanitized names escape
+        assert!(!text.contains("solver seconds"));
     }
 
     #[test]

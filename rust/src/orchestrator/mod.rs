@@ -309,7 +309,15 @@ impl Orchestrator {
             }
         }
         let t0 = std::time::Instant::now();
+        let solve_span = crate::trace::wall_span(
+            "alloc",
+            if self.cfg.grouped_alloc { "solve_grouped" } else { "solve_flat" },
+            crate::trace::current_shard(),
+            0,
+            &[("k", problem.k() as f64), ("d", problem.total_samples as f64)],
+        );
         let plan = self.planner.plan_round(problem, 0.0)?;
+        drop(solve_span);
         self.metrics.observe("solver_seconds", t0.elapsed().as_secs_f64());
         self.cached = Some(plan.alloc.clone());
         Ok((plan.alloc, plan.leases))
@@ -323,6 +331,9 @@ impl Orchestrator {
         let problem = self.scenario.problem(self.cfg.t_total);
         let (alloc, leases) = self.round_plan(&problem)?;
         let round_start = self.sim_time;
+        // the cycle runs on a local t = 0 clock; rebase trace spans onto
+        // the absolute run timeline
+        crate::trace::set_sim_offset(round_start);
 
         let mut q: EventQueue<LearnerEvent> = EventQueue::new();
         let mut timeline = Vec::new();
@@ -356,6 +367,28 @@ impl Orchestrator {
                 }));
             }
         }
+        if !deadline_misses.is_empty() {
+            log::debug!(
+                "cycle {cycle}: {} deadline miss(es) past T={}s: {:?}",
+                deadline_misses.len(),
+                self.cfg.t_total,
+                deadline_misses
+            );
+            if crate::trace::enabled() {
+                let pid = crate::trace::current_shard();
+                for &k in &deadline_misses {
+                    crate::trace::instant(
+                        "lease",
+                        "deadline_miss",
+                        pid,
+                        k as u32,
+                        completion[k],
+                        &[("t_k", completion[k]), ("t_total", self.cfg.t_total)],
+                    );
+                }
+            }
+        }
+        crate::trace::set_sim_offset(0.0);
 
         self.sim_time = round_start + self.cfg.t_total;
         // mirror run_sync's accounting: misses are only *dropped* (not
@@ -424,6 +457,8 @@ impl Orchestrator {
     fn run_async(&mut self) -> Result<OrchestratorReport, AllocError> {
         let horizon = self.horizon();
         let k_n = self.scenario.k();
+        // async event times are already absolute
+        crate::trace::set_sim_offset(0.0);
         self.maybe_refade();
         let mut problem = self.scenario.problem(self.cfg.t_total);
         let plan = self.planner.plan_round(&problem, 0.0)?;
@@ -461,6 +496,18 @@ impl Orchestrator {
                     if missed {
                         timeline.push((t, LearnerEvent::DeadlineMissed { learner }));
                         self.metrics.inc("deadline_misses", 1);
+                        log::debug!(
+                            "async: learner {learner} uploaded at t={t:.3}s, past its lease deadline {:.3}s",
+                            lease.deadline
+                        );
+                        crate::trace::instant(
+                            "lease",
+                            "deadline_miss",
+                            crate::trace::current_shard(),
+                            learner as u32,
+                            t,
+                            &[("deadline", lease.deadline), ("staleness", staleness as f64)],
+                        );
                     } else {
                         timeline.push((t, ev));
                     }
@@ -502,6 +549,13 @@ impl Orchestrator {
                         };
                         match decision {
                             Redispatch::Immediate(lease) => {
+                                if missed {
+                                    log::trace!(
+                                        "async: re-leasing straggler {learner} at t={t:.3}s (tau={}, d={})",
+                                        lease.tau,
+                                        lease.batch
+                                    );
+                                }
                                 schedule_lease(&mut q, &problem, &lease, t, self.cfg.trace);
                                 timeline.push((t, LearnerEvent::Dispatched { learner }));
                                 snapshot[learner] = applied;
@@ -549,6 +603,28 @@ pub(crate) fn schedule_lease(
     let d = lease.batch as f64;
     let learner = lease.learner;
     let send_end = c.c1 * d + c.c0 / 2.0; // downlink half of C0
+    if crate::trace::enabled() {
+        // the eq. (13) budget decomposition of this lease: send (C¹ₖdₖ
+        // + downlink C⁰ₖ/2) → compute (C²ₖτdₖ) → upload (uplink C⁰ₖ/2).
+        // Read-only annotation; the scheduled events are untouched.
+        let comp = c.c2 * d * lease.tau as f64;
+        let up = c.c0 / 2.0;
+        let total = c.time(lease.tau as f64, d);
+        let pid = crate::trace::current_shard();
+        let tid = learner as u32;
+        crate::trace::span("lease", "lease", pid, tid, start, start + total, &[
+            ("tau", lease.tau as f64),
+            ("d", d),
+            ("send_s", send_end),
+            ("comp_s", comp),
+            ("up_s", up),
+        ]);
+        crate::trace::span("lease", "send", pid, tid, start, start + send_end, &[]);
+        crate::trace::span("lease", "compute", pid, tid, start + send_end, start + send_end + comp, &[
+            ("tau", lease.tau as f64),
+        ]);
+        crate::trace::span("lease", "upload", pid, tid, start + send_end + comp, start + total, &[]);
+    }
     q.schedule(start + send_end, LearnerEvent::SendComplete { learner });
     if trace && lease.tau <= 100_000 {
         let iter_t = c.c2 * d;

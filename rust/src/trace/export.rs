@@ -1,0 +1,234 @@
+//! Trace exporters: Chrome trace-event JSON (Perfetto-loadable) and
+//! the per-lease eq. (13) budget-breakdown CSV. The Prometheus text
+//! exposition lives on `metrics::Metrics::to_prometheus`, since it
+//! snapshots the metrics registry rather than the span buffer.
+
+use super::{Clock, Kind, TraceEvent, PID_COMPUTE_POOL, PID_PARAM_SERVER, TID_POOL_RUN};
+use crate::util::json::Json;
+
+fn process_label(pid: u32) -> String {
+    match pid {
+        PID_PARAM_SERVER => "param-server".to_string(),
+        PID_COMPUTE_POOL => "compute-pool".to_string(),
+        n => format!("shard-{n}"),
+    }
+}
+
+fn thread_label(pid: u32, tid: u32) -> String {
+    if pid == PID_COMPUTE_POOL {
+        if tid == TID_POOL_RUN {
+            "pool-runs".to_string()
+        } else {
+            format!("worker-{tid}")
+        }
+    } else if pid == PID_PARAM_SERVER {
+        format!("shard-{tid}")
+    } else {
+        format!("learner-{tid}")
+    }
+}
+
+/// Render events as Chrome trace-event JSON (the `traceEvents` array
+/// format), loadable in Perfetto / `chrome://tracing`.
+///
+/// Track mapping: `pid` groups tracks into processes (shard-N,
+/// param-server, compute-pool — named via `"M"` metadata events) and
+/// `tid` is the track within the group (learner, worker, shard).
+/// Sim-clock events use sim-seconds × 10⁶ as their µs timestamps; wall-
+/// clock events use µs since the shared logging epoch. Sim events carry
+/// their record-time wall offset as an extra `wall_ms` arg so the two
+/// timelines can be cross-referenced. Non-finite values are skipped
+/// (the repo's JSON printer would render them as `null`).
+pub fn chrome_trace(events: &[TraceEvent]) -> Json {
+    let mut items: Vec<Json> = Vec::new();
+
+    let mut pids: Vec<u32> = events.iter().map(|e| e.pid).collect();
+    pids.sort_unstable();
+    pids.dedup();
+    for &pid in &pids {
+        items.push(Json::obj(vec![
+            ("ph", Json::Str("M".to_string())),
+            ("name", Json::Str("process_name".to_string())),
+            ("pid", Json::Num(pid as f64)),
+            ("tid", Json::Num(0.0)),
+            ("args", Json::obj(vec![("name", Json::Str(process_label(pid)))])),
+        ]));
+    }
+    let mut tracks: Vec<(u32, u32)> = events.iter().map(|e| (e.pid, e.tid)).collect();
+    tracks.sort_unstable();
+    tracks.dedup();
+    for &(pid, tid) in &tracks {
+        items.push(Json::obj(vec![
+            ("ph", Json::Str("M".to_string())),
+            ("name", Json::Str("thread_name".to_string())),
+            ("pid", Json::Num(pid as f64)),
+            ("tid", Json::Num(tid as f64)),
+            ("args", Json::obj(vec![("name", Json::Str(thread_label(pid, tid)))])),
+        ]));
+    }
+
+    for e in events {
+        let (ts, dur) = match e.clock {
+            Clock::Sim => (e.sim_start * 1e6, e.sim_dur * 1e6),
+            Clock::Wall => (e.wall_start_ns as f64 / 1e3, e.wall_dur_ns as f64 / 1e3),
+        };
+        if !ts.is_finite() || !dur.is_finite() {
+            continue;
+        }
+        let mut args: Vec<(&str, Json)> = e
+            .args()
+            .iter()
+            .filter(|(_, v)| v.is_finite())
+            .map(|&(k, v)| (k, Json::Num(v)))
+            .collect();
+        if e.clock == Clock::Sim {
+            args.push(("wall_ms", Json::Num(e.wall_start_ns as f64 / 1e6)));
+        }
+        let mut fields: Vec<(&str, Json)> = vec![
+            ("ph", Json::Str(if e.kind == Kind::Instant { "i" } else { "X" }.to_string())),
+            ("name", Json::Str(e.name.to_string())),
+            ("cat", Json::Str(e.cat.to_string())),
+            ("pid", Json::Num(e.pid as f64)),
+            ("tid", Json::Num(e.tid as f64)),
+            ("ts", Json::Num(ts)),
+        ];
+        if e.kind == Kind::Instant {
+            // thread-scoped instant marker
+            fields.push(("s", Json::Str("t".to_string())));
+        } else {
+            fields.push(("dur", Json::Num(dur)));
+        }
+        fields.push(("args", Json::obj(args)));
+        items.push(Json::obj(fields));
+    }
+
+    Json::obj(vec![
+        ("traceEvents", Json::Arr(items)),
+        ("displayTimeUnit", Json::Str("ms".to_string())),
+    ])
+}
+
+/// Render the per-lease eq. (13) budget breakdown as CSV.
+///
+/// One row per `"lease"` span: where each learner's deadline T went —
+/// `send_s` (C¹ₖ·dₖ + downlink half of C⁰ₖ), `compute_s` (C²ₖ·τ·dₖ),
+/// `upload_s` (uplink half of C⁰ₖ), and `slack_s := T − (send+compute+
+/// upload)`, so the four columns sum to `t_total` exactly for every
+/// lease; `on_time` is `true` when the budget fit inside T.
+pub fn budget_csv(events: &[TraceEvent], t_total: f64) -> String {
+    let mut out =
+        String::from("shard,learner,dispatch_s,tau,d,send_s,compute_s,upload_s,slack_s,t_total,on_time\n");
+    for e in events {
+        if e.name != "lease" || e.kind != Kind::Span {
+            continue;
+        }
+        let tau = match e.arg("tau") {
+            Some(v) => v,
+            None => continue,
+        };
+        let d = match e.arg("d") {
+            Some(v) => v,
+            None => continue,
+        };
+        let send = match e.arg("send_s") {
+            Some(v) => v,
+            None => continue,
+        };
+        let comp = match e.arg("comp_s") {
+            Some(v) => v,
+            None => continue,
+        };
+        let up = match e.arg("up_s") {
+            Some(v) => v,
+            None => continue,
+        };
+        let used = send + comp + up;
+        let slack = t_total - used;
+        let on_time = used <= t_total + 1e-6;
+        out.push_str(&format!(
+            "{},{},{:.9},{},{},{:.9},{:.9},{:.9},{:.9},{:.9},{}\n",
+            e.pid, e.tid, e.sim_start, tau as u64, d as u64, send, comp, up, slack, t_total, on_time
+        ));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::trace::{Clock, Kind, MAX_ARGS};
+
+    fn ev(
+        name: &'static str,
+        pid: u32,
+        tid: u32,
+        start: f64,
+        dur: f64,
+        args: &[(&'static str, f64)],
+    ) -> TraceEvent {
+        let mut a = [("", 0.0f64); MAX_ARGS];
+        let n = args.len().min(MAX_ARGS);
+        a[..n].copy_from_slice(&args[..n]);
+        TraceEvent {
+            cat: "test",
+            name,
+            pid,
+            tid,
+            sim_start: start,
+            sim_dur: dur,
+            wall_start_ns: 0,
+            wall_dur_ns: 0,
+            clock: Clock::Sim,
+            kind: Kind::Span,
+            args: a,
+            nargs: n as u8,
+        }
+    }
+
+    #[test]
+    fn chrome_trace_is_parseable_and_skips_non_finite() {
+        let events = vec![
+            ev("lease", 0, 3, 1.0, 2.0, &[("tau", 40.0), ("bad", f64::NAN)]),
+            ev("send", 0, 3, 1.0, 0.5, &[]),
+        ];
+        let j = chrome_trace(&events);
+        let text = j.to_pretty();
+        let back = Json::parse(&text).expect("chrome export must re-parse");
+        let evs = back.get("traceEvents").unwrap().as_arr().unwrap();
+        // 1 process_name + 1 thread_name + 2 spans
+        assert_eq!(evs.len(), 4);
+        let lease = evs
+            .iter()
+            .find(|e| matches!(e.get("name"), Ok(Json::Str(s)) if s == "lease"))
+            .unwrap();
+        let args = lease.get("args").unwrap().as_obj().unwrap();
+        assert!(args.contains_key("tau"));
+        assert!(!args.contains_key("bad"), "NaN arg must be skipped");
+    }
+
+    #[test]
+    fn budget_csv_columns_sum_to_t() {
+        let t_total = 30.0;
+        let events = vec![ev(
+            "lease",
+            1,
+            4,
+            0.0,
+            25.0,
+            &[("tau", 40.0), ("d", 120.0), ("send_s", 10.0), ("comp_s", 12.0), ("up_s", 3.0)],
+        )];
+        let csv = budget_csv(&events, t_total);
+        let mut lines = csv.lines();
+        let header = lines.next().unwrap();
+        assert!(header.starts_with("shard,learner,"));
+        let row: Vec<&str> = lines.next().unwrap().split(',').collect();
+        assert_eq!(row[0], "1");
+        assert_eq!(row[1], "4");
+        let send: f64 = row[5].parse().unwrap();
+        let comp: f64 = row[6].parse().unwrap();
+        let up: f64 = row[7].parse().unwrap();
+        let slack: f64 = row[8].parse().unwrap();
+        assert!((send + comp + up + slack - t_total).abs() < 1e-6);
+        assert_eq!(row[10], "true");
+    }
+}

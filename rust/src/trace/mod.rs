@@ -1,0 +1,493 @@
+//! Deterministic tracing & telemetry plane (ISSUE 8).
+//!
+//! A zero-dependency span/event recorder that annotates the simulation
+//! with *both* clocks the paper cares about: **sim-time** (the eq. (13)
+//! budget timeline — where T goes per lease) and **wall-time** (where
+//! the host CPU goes — solver calls, pool jobs, cohort training).
+//!
+//! Design constraints, in order:
+//!
+//! 1. **Non-perturbing.** Instrumentation only *reads* simulation state
+//!    and the wall clock. It never draws from an RNG, never reorders
+//!    float arithmetic, and never feeds wall-time back into sim
+//!    decisions — so a traced run is bit-for-bit identical to an
+//!    untraced one (`rust/tests/trace_plane.rs` pins this at 1 and 4
+//!    threads).
+//! 2. **Cheap when off.** `enabled()` is one atomic load; every public
+//!    recording call returns immediately when tracing is disabled.
+//! 3. **Allocation-free when on.** Events are fixed-size `Copy` structs
+//!    pushed into per-thread ring buffers (capacity `MEL_TRACE_BUF`,
+//!    default 65536, overwrite-oldest). The only allocations are one
+//!    ring per recording thread, at its first event.
+//!
+//! Wall times are nanoseconds since the process-wide epoch pinned by
+//! [`crate::util::logging::epoch`], so trace timestamps and `MEL_LOG`
+//! stderr timestamps agree across threads and engines.
+//!
+//! Identity is carried by thread-locals so deep call sites need no
+//! plumbing: [`set_shard`] tags the current thread with its cluster
+//! shard (pid in the Chrome export), [`set_worker`] with its compute-
+//! pool worker index, and [`set_sim_offset`] rebases cycle-local sim
+//! times (the sync orchestrator schedules each cycle from t = 0) onto
+//! the absolute run timeline.
+//!
+//! Env knobs: `MEL_TRACE=1` enables recording at startup (programmatic
+//! [`set_enabled`] always wins); `MEL_TRACE_BUF=N` sizes the per-thread
+//! rings. Exporters live in [`export`]: Chrome trace-event JSON
+//! (Perfetto-loadable), Prometheus text exposition (on
+//! `metrics::Metrics`), and the per-lease budget CSV.
+
+use std::cell::{Cell, RefCell};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex, MutexGuard, OnceLock};
+
+pub mod export;
+
+/// Max key/value args carried inline by one event.
+pub const MAX_ARGS: usize = 6;
+
+/// Chrome-export "process" id for the parameter-server track group.
+pub const PID_PARAM_SERVER: u32 = 9998;
+/// Chrome-export "process" id for the compute-pool track group.
+pub const PID_COMPUTE_POOL: u32 = 9999;
+/// Chrome-export "thread" id for pool-run (submitter-side) spans.
+pub const TID_POOL_RUN: u32 = 10_000;
+
+/// Which clock a span's `ts/dur` are meaningful on.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Clock {
+    /// Simulation seconds (the eq. (13) timeline).
+    Sim,
+    /// Host nanoseconds since the shared logging epoch.
+    Wall,
+}
+
+/// Span (has duration) vs instant (a point marker).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Kind {
+    Span,
+    Instant,
+}
+
+/// One recorded event. Fixed-size and `Copy` so the ring-buffer hot
+/// path never allocates; names are `&'static str` by construction.
+#[derive(Debug, Clone, Copy)]
+pub struct TraceEvent {
+    pub cat: &'static str,
+    pub name: &'static str,
+    /// Track group: shard index, or a `PID_*` constant.
+    pub pid: u32,
+    /// Track within the group: learner index, worker index, shard.
+    pub tid: u32,
+    /// Absolute sim start (seconds); 0 for wall-only events.
+    pub sim_start: f64,
+    /// Sim duration (seconds); 0 for instants and wall-only events.
+    pub sim_dur: f64,
+    /// Nanoseconds since `util::logging::epoch()` at record time.
+    pub wall_start_ns: u64,
+    /// Wall duration (ns); only nonzero for `Clock::Wall` spans.
+    pub wall_dur_ns: u64,
+    pub clock: Clock,
+    pub kind: Kind,
+    args: [(&'static str, f64); MAX_ARGS],
+    nargs: u8,
+}
+
+impl TraceEvent {
+    /// The attached key/value args (τ_k, d_k, budget terms, …).
+    pub fn args(&self) -> &[(&'static str, f64)] {
+        &self.args[..self.nargs as usize]
+    }
+
+    /// Look up one arg by key.
+    pub fn arg(&self, key: &str) -> Option<f64> {
+        self.args().iter().find(|(k, _)| *k == key).map(|&(_, v)| v)
+    }
+
+    /// Absolute sim end (seconds).
+    pub fn sim_end(&self) -> f64 {
+        self.sim_start + self.sim_dur
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Enable flag
+// ---------------------------------------------------------------------------
+
+static ENABLED: AtomicBool = AtomicBool::new(false);
+
+/// Seed `ENABLED` from `MEL_TRACE` exactly once, before any read or
+/// programmatic override, so `set_enabled` deterministically wins over
+/// the environment regardless of call order within a thread.
+fn ensure_env() {
+    static INIT: OnceLock<()> = OnceLock::new();
+    INIT.get_or_init(|| {
+        let on = std::env::var("MEL_TRACE")
+            .map(|v| {
+                let v = v.trim();
+                !v.is_empty() && v != "0" && !v.eq_ignore_ascii_case("false")
+            })
+            .unwrap_or(false);
+        if on {
+            ENABLED.store(true, Ordering::Relaxed);
+        }
+    });
+}
+
+/// Is the trace plane recording? One atomic load on the hot path.
+#[inline]
+pub fn enabled() -> bool {
+    ensure_env();
+    ENABLED.load(Ordering::Relaxed)
+}
+
+/// Programmatically enable/disable recording (overrides `MEL_TRACE`).
+pub fn set_enabled(on: bool) {
+    ensure_env();
+    ENABLED.store(on, Ordering::Relaxed);
+}
+
+// ---------------------------------------------------------------------------
+// Per-thread rings + identity
+// ---------------------------------------------------------------------------
+
+struct Ring {
+    buf: Vec<TraceEvent>,
+    cap: usize,
+    /// Oldest slot once the buffer has wrapped.
+    head: usize,
+    dropped: u64,
+}
+
+impl Ring {
+    fn new(cap: usize) -> Self {
+        Self { buf: Vec::with_capacity(cap), cap, head: 0, dropped: 0 }
+    }
+
+    fn push(&mut self, ev: TraceEvent) {
+        if self.buf.len() < self.cap {
+            self.buf.push(ev);
+        } else {
+            self.buf[self.head] = ev;
+            self.head = (self.head + 1) % self.cap;
+            self.dropped += 1;
+        }
+    }
+
+    /// Take everything in insertion order and reset.
+    fn take_ordered(&mut self) -> Vec<TraceEvent> {
+        let mut out = Vec::with_capacity(self.buf.len());
+        out.extend_from_slice(&self.buf[self.head..]);
+        out.extend_from_slice(&self.buf[..self.head]);
+        self.buf.clear();
+        self.head = 0;
+        out
+    }
+}
+
+fn registry() -> &'static Mutex<Vec<Arc<Mutex<Ring>>>> {
+    static REG: OnceLock<Mutex<Vec<Arc<Mutex<Ring>>>>> = OnceLock::new();
+    REG.get_or_init(|| Mutex::new(Vec::new()))
+}
+
+/// Poison-tolerant lock: a panicking traced task (e.g. the pool's
+/// panic-propagation tests) must not wedge the whole trace plane.
+fn lock_poison_ok<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+fn buffer_capacity() -> usize {
+    static CAP: OnceLock<usize> = OnceLock::new();
+    *CAP.get_or_init(|| {
+        std::env::var("MEL_TRACE_BUF")
+            .ok()
+            .and_then(|s| s.trim().parse::<usize>().ok())
+            .map(|n| n.clamp(16, 16_777_216))
+            .unwrap_or(65_536)
+    })
+}
+
+thread_local! {
+    static LOCAL_RING: RefCell<Option<Arc<Mutex<Ring>>>> = RefCell::new(None);
+    static SHARD: Cell<u32> = Cell::new(0);
+    static WORKER: Cell<u32> = Cell::new(0);
+    static SIM_OFFSET: Cell<f64> = Cell::new(0.0);
+}
+
+/// Tag this thread with its cluster shard index (Chrome pid).
+pub fn set_shard(shard: u32) {
+    SHARD.with(|c| c.set(shard));
+}
+
+/// The shard tag of the current thread (0 outside a cluster).
+pub fn current_shard() -> u32 {
+    SHARD.with(|c| c.get())
+}
+
+/// Tag this thread with its compute-pool worker index.
+pub fn set_worker(worker: u32) {
+    WORKER.with(|c| c.set(worker));
+}
+
+/// The pool-worker tag of the current thread (0 off-pool).
+pub fn current_worker() -> u32 {
+    WORKER.with(|c| c.get())
+}
+
+/// Rebase subsequently recorded sim times by `offset` seconds. The sync
+/// orchestrator schedules each cycle on a local t = 0 timeline; it sets
+/// the offset to the cycle's absolute start so lease spans land on the
+/// run timeline without changing `schedule_lease`'s signature. Absolute-
+/// time call sites (async, churn shards, replay) set it back to 0.
+pub fn set_sim_offset(offset: f64) {
+    SIM_OFFSET.with(|c| c.set(offset));
+}
+
+fn record(ev: TraceEvent) {
+    LOCAL_RING.with(|slot| {
+        let mut slot = slot.borrow_mut();
+        if slot.is_none() {
+            let ring = Arc::new(Mutex::new(Ring::new(buffer_capacity())));
+            lock_poison_ok(registry()).push(Arc::clone(&ring));
+            *slot = Some(ring);
+        }
+        if let Some(ring) = slot.as_ref() {
+            lock_poison_ok(ring).push(ev);
+        }
+    });
+}
+
+fn wall_now_ns() -> u64 {
+    crate::util::logging::epoch().elapsed().as_nanos() as u64
+}
+
+fn make_event(
+    kind: Kind,
+    clock: Clock,
+    cat: &'static str,
+    name: &'static str,
+    pid: u32,
+    tid: u32,
+    sim_start: f64,
+    sim_dur: f64,
+    args: &[(&'static str, f64)],
+) -> TraceEvent {
+    let mut a = [("", 0.0f64); MAX_ARGS];
+    let n = args.len().min(MAX_ARGS);
+    a[..n].copy_from_slice(&args[..n]);
+    TraceEvent {
+        cat,
+        name,
+        pid,
+        tid,
+        sim_start,
+        sim_dur,
+        wall_start_ns: wall_now_ns(),
+        wall_dur_ns: 0,
+        clock,
+        kind,
+        args: a,
+        nargs: n as u8,
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Recording API
+// ---------------------------------------------------------------------------
+
+/// Record a sim-time span over `[sim_start, sim_end]` (cycle-local
+/// times are rebased by the thread's [`set_sim_offset`]).
+pub fn span(
+    cat: &'static str,
+    name: &'static str,
+    pid: u32,
+    tid: u32,
+    sim_start: f64,
+    sim_end: f64,
+    args: &[(&'static str, f64)],
+) {
+    if !enabled() {
+        return;
+    }
+    let off = SIM_OFFSET.with(|c| c.get());
+    record(make_event(
+        Kind::Span,
+        Clock::Sim,
+        cat,
+        name,
+        pid,
+        tid,
+        off + sim_start,
+        (sim_end - sim_start).max(0.0),
+        args,
+    ));
+}
+
+/// Record a sim-time point marker (deadline miss, join/depart, …).
+pub fn instant(
+    cat: &'static str,
+    name: &'static str,
+    pid: u32,
+    tid: u32,
+    sim_t: f64,
+    args: &[(&'static str, f64)],
+) {
+    if !enabled() {
+        return;
+    }
+    let off = SIM_OFFSET.with(|c| c.get());
+    record(make_event(Kind::Instant, Clock::Sim, cat, name, pid, tid, off + sim_t, 0.0, args));
+}
+
+/// RAII guard for a wall-clock span: records on drop with the measured
+/// duration. A no-op (`None` payload) when tracing is disabled.
+pub struct WallGuard {
+    ev: Option<TraceEvent>,
+}
+
+impl Drop for WallGuard {
+    fn drop(&mut self) {
+        if let Some(mut ev) = self.ev.take() {
+            ev.wall_dur_ns = wall_now_ns().saturating_sub(ev.wall_start_ns);
+            record(ev);
+        }
+    }
+}
+
+/// Open a wall-clock span (solver call, pool job, cohort training);
+/// the returned guard records it when dropped.
+#[must_use]
+pub fn wall_span(
+    cat: &'static str,
+    name: &'static str,
+    pid: u32,
+    tid: u32,
+    args: &[(&'static str, f64)],
+) -> WallGuard {
+    if !enabled() {
+        return WallGuard { ev: None };
+    }
+    WallGuard { ev: Some(make_event(Kind::Span, Clock::Wall, cat, name, pid, tid, 0.0, 0.0, args)) }
+}
+
+// ---------------------------------------------------------------------------
+// Draining
+// ---------------------------------------------------------------------------
+
+/// Drain every thread's ring into one deterministically ordered vector
+/// (pid, tid, sim time, wall time, name). Rings are left empty.
+pub fn drain() -> Vec<TraceEvent> {
+    let rings: Vec<Arc<Mutex<Ring>>> = lock_poison_ok(registry()).clone();
+    let mut out = Vec::new();
+    for ring in &rings {
+        out.extend(lock_poison_ok(ring).take_ordered());
+    }
+    out.sort_by(|a, b| {
+        a.pid
+            .cmp(&b.pid)
+            .then(a.tid.cmp(&b.tid))
+            .then(a.sim_start.total_cmp(&b.sim_start))
+            .then(a.wall_start_ns.cmp(&b.wall_start_ns))
+            .then(a.name.cmp(b.name))
+    });
+    out
+}
+
+/// Discard all buffered events and reset drop counters.
+pub fn clear() {
+    let rings: Vec<Arc<Mutex<Ring>>> = lock_poison_ok(registry()).clone();
+    for ring in &rings {
+        let mut g = lock_poison_ok(ring);
+        g.take_ordered();
+        g.dropped = 0;
+    }
+}
+
+/// Total events overwritten (ring-full) since the last [`clear`].
+pub fn dropped() -> u64 {
+    let rings: Vec<Arc<Mutex<Ring>>> = lock_poison_ok(registry()).clone();
+    rings.iter().map(|r| lock_poison_ok(r).dropped).sum()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // Lib tests run concurrently in one process and the enable flag is
+    // global, so these tests (a) serialize against each other via a
+    // module lock and (b) tag their events with a sentinel pid and
+    // filter drained output, since unrelated lib tests may record too.
+    const TEST_PID: u32 = 424_242;
+
+    fn test_lock() -> MutexGuard<'static, ()> {
+        static L: OnceLock<Mutex<()>> = OnceLock::new();
+        lock_poison_ok(L.get_or_init(|| Mutex::new(())))
+    }
+
+    fn mine(evs: &[TraceEvent]) -> Vec<TraceEvent> {
+        evs.iter().copied().filter(|e| e.pid == TEST_PID).collect()
+    }
+
+    #[test]
+    fn disabled_records_nothing_and_enabled_round_trips() {
+        let _g = test_lock();
+        set_enabled(false);
+        span("t", "off", TEST_PID, 1, 0.0, 1.0, &[]);
+        assert!(mine(&drain()).is_empty());
+
+        set_enabled(true);
+        span("t", "lease", TEST_PID, 7, 1.5, 2.5, &[("tau", 40.0), ("d", 128.0)]);
+        instant("t", "mark", TEST_PID, 7, 2.0, &[]);
+        {
+            let _g = wall_span("t", "work", TEST_PID, 0, &[("k", 3.0)]);
+        }
+        let evs = mine(&drain());
+        set_enabled(false);
+        assert_eq!(evs.len(), 3);
+        let lease = evs.iter().find(|e| e.name == "lease").unwrap();
+        assert_eq!(lease.clock, Clock::Sim);
+        assert_eq!(lease.kind, Kind::Span);
+        assert_eq!(lease.tid, 7);
+        assert_eq!(lease.arg("tau"), Some(40.0));
+        assert_eq!(lease.arg("d"), Some(128.0));
+        assert!((lease.sim_start - 1.5).abs() < 1e-12);
+        assert!((lease.sim_dur - 1.0).abs() < 1e-12);
+        let mark = evs.iter().find(|e| e.name == "mark").unwrap();
+        assert_eq!(mark.kind, Kind::Instant);
+        assert_eq!(mark.sim_dur, 0.0);
+        let work = evs.iter().find(|e| e.name == "work").unwrap();
+        assert_eq!(work.clock, Clock::Wall);
+        assert_eq!(work.arg("k"), Some(3.0));
+        // second drain: rings were emptied
+        assert!(mine(&drain()).is_empty());
+    }
+
+    #[test]
+    fn sim_offset_rebases_cycle_local_times() {
+        let _g = test_lock();
+        set_enabled(true);
+        set_sim_offset(100.0);
+        span("t", "offset_lease", TEST_PID, 2, 3.0, 4.0, &[]);
+        set_sim_offset(0.0);
+        let evs = mine(&drain());
+        set_enabled(false);
+        let e = evs.iter().find(|e| e.name == "offset_lease").unwrap();
+        assert!((e.sim_start - 103.0).abs() < 1e-12);
+        assert!((e.sim_end() - 104.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn arg_overflow_truncates_safely() {
+        let _g = test_lock();
+        set_enabled(true);
+        let many: Vec<(&'static str, f64)> =
+            vec![("a", 1.0), ("b", 2.0), ("c", 3.0), ("d", 4.0), ("e", 5.0), ("f", 6.0), ("g", 7.0)];
+        span("t", "many_args", TEST_PID, 3, 0.0, 1.0, &many);
+        let evs = mine(&drain());
+        set_enabled(false);
+        let e = evs.iter().find(|e| e.name == "many_args").unwrap();
+        assert_eq!(e.args().len(), MAX_ARGS);
+        assert_eq!(e.arg("f"), Some(6.0));
+        assert_eq!(e.arg("g"), None);
+    }
+}

@@ -1,15 +1,27 @@
 //! Tiny leveled logger behind the `log` facade: timestamps + level tags
 //! to stderr, level from `MEL_LOG` (error|warn|info|debug|trace).
+//!
+//! The timestamp origin is [`epoch`], the single process-wide wall
+//! epoch. It used to be resolved lazily at the first *log call*, so
+//! timestamps taken from different threads/engines before the logger
+//! was exercised could disagree with other wall-clock consumers; it is
+//! now pinned at first use by *anyone* — `init`, the first log record,
+//! or the trace plane (`crate::trace` stamps every event's
+//! `wall_start_ns` against the same epoch, so exporter wall-times and
+//! `MEL_LOG` stderr timestamps line up).
 
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::OnceLock;
 use std::time::Instant;
 
-static START: OnceLock<Instant> = OnceLock::new();
+static EPOCH: OnceLock<Instant> = OnceLock::new();
 static INSTALLED: AtomicBool = AtomicBool::new(false);
 
-fn start() -> Instant {
-    *START.get_or_init(Instant::now)
+/// The process-wide wall-clock epoch shared by log timestamps and the
+/// trace plane. First caller pins it; every later caller gets the same
+/// instant.
+pub fn epoch() -> Instant {
+    *EPOCH.get_or_init(Instant::now)
 }
 
 struct StderrLogger {
@@ -25,7 +37,7 @@ impl log::Log for StderrLogger {
         if !self.enabled(record.metadata()) {
             return;
         }
-        let t = start().elapsed().as_secs_f64();
+        let t = epoch().elapsed().as_secs_f64();
         eprintln!(
             "[{t:10.4}s {:5} {}] {}",
             record.level(),
@@ -53,7 +65,7 @@ pub fn init(level: Option<&str>) {
         "trace" => log::LevelFilter::Trace,
         _ => log::LevelFilter::Info,
     };
-    let _ = start();
+    let _ = epoch();
     let _ = log::set_boxed_logger(Box::new(StderrLogger { level: filter }));
     log::set_max_level(filter);
 }

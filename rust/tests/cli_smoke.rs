@@ -3,6 +3,13 @@
 use std::process::Command;
 
 fn mel(args: &[&str]) -> (String, String, bool) {
+    let (stdout, stderr, code) = mel_code(args);
+    (stdout, stderr, code == Some(0))
+}
+
+/// Like [`mel`] but surfaces the exact exit code, for tests pinning the
+/// usage-error (2) vs runtime-failure (1) convention.
+fn mel_code(args: &[&str]) -> (String, String, Option<i32>) {
     let out = Command::new(env!("CARGO_BIN_EXE_mel"))
         .args(args)
         .current_dir(env!("CARGO_MANIFEST_DIR"))
@@ -11,7 +18,7 @@ fn mel(args: &[&str]) -> (String, String, bool) {
     (
         String::from_utf8_lossy(&out.stdout).into_owned(),
         String::from_utf8_lossy(&out.stderr).into_owned(),
-        out.status.success(),
+        out.status.code(),
     )
 }
 
@@ -19,7 +26,7 @@ fn mel(args: &[&str]) -> (String, String, bool) {
 fn help_lists_commands() {
     let (stdout, _, ok) = mel(&[]);
     assert!(ok);
-    for cmd in ["solve", "figure", "train", "scenario", "info"] {
+    for cmd in ["solve", "figure", "train", "scenario", "trace", "info"] {
         assert!(stdout.contains(cmd), "missing {cmd} in help:\n{stdout}");
     }
 }
@@ -362,6 +369,66 @@ fn info_reports_backends() {
     let (stdout, _, ok) = mel(&["info"]);
     assert!(ok);
     assert!(stdout.contains("native (always available)"), "{stdout}");
+}
+
+#[test]
+fn trace_malformed_flags_are_usage_errors() {
+    // bad --format: exit 2 before any work happens
+    let (_, stderr, code) = mel_code(&["trace", "--format", "bogus"]);
+    assert_eq!(code, Some(2), "stderr: {stderr}");
+    assert!(stderr.contains("usage error"), "{stderr}");
+    assert!(stderr.contains("chrome|prom|csv|all"), "{stderr}");
+    // bad --mode
+    let (_, stderr, code) = mel_code(&["trace", "--mode", "warp"]);
+    assert_eq!(code, Some(2), "stderr: {stderr}");
+    assert!(stderr.contains("sync or async"), "{stderr}");
+    // an --out path nested under a plain file cannot be created
+    let dir = std::env::temp_dir().join(format!("mel-trace-badout-{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let file = dir.join("plain-file");
+    std::fs::write(&file, "x").unwrap();
+    let bad = file.join("sub");
+    let (_, stderr, code) = mel_code(&["trace", "--out", bad.to_str().unwrap()]);
+    assert_eq!(code, Some(2), "stderr: {stderr}");
+    assert!(stderr.contains("cannot create --out"), "{stderr}");
+    // unknown scenario task
+    let ok_out = dir.join("out");
+    let (_, stderr, code) =
+        mel_code(&["trace", "--scenario", "frobnicate", "--out", ok_out.to_str().unwrap()]);
+    assert_eq!(code, Some(2), "stderr: {stderr}");
+    assert!(stderr.contains("unknown scenario"), "{stderr}");
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn trace_writes_parseable_artifacts() {
+    let dir = std::env::temp_dir().join(format!("mel-trace-out-{}", std::process::id()));
+    let (stdout, stderr, ok) = mel(&[
+        "trace", "--scenario", "pedestrian", "--k", "2", "--t", "2", "--cycles", "2", "--d",
+        "96", "--hidden", "8", "--eval-samples", "48", "--seed", "7", "--out",
+        dir.to_str().unwrap(), "--format", "all",
+    ]);
+    assert!(ok, "stderr: {stderr}");
+    assert!(stdout.contains("traced "), "{stdout}");
+
+    let chrome = std::fs::read_to_string(dir.join("trace.chrome.json")).expect("chrome file");
+    let v = mel::util::json::Json::parse(&chrome).expect("Perfetto-loadable JSON");
+    assert!(
+        !v.get("traceEvents").unwrap().as_arr().unwrap().is_empty(),
+        "empty traceEvents"
+    );
+
+    let prom = std::fs::read_to_string(dir.join("metrics.prom")).expect("prom file");
+    assert!(prom.contains("# TYPE mel_"), "no metrics in exposition:\n{prom}");
+
+    let csv = std::fs::read_to_string(dir.join("budget.csv")).expect("csv file");
+    let mut lines = csv.lines();
+    assert_eq!(
+        lines.next().unwrap(),
+        "shard,learner,dispatch_s,tau,d,send_s,compute_s,upload_s,slack_s,t_total,on_time"
+    );
+    assert!(lines.count() >= 4, "expected one row per lease:\n{csv}");
+    let _ = std::fs::remove_dir_all(&dir);
 }
 
 #[test]

@@ -1,0 +1,270 @@
+//! Non-perturbation and exporter-golden tests of the tracing plane
+//! (`mel::trace`):
+//!
+//! 1. **Training is bit-for-bit identical with tracing on and off** —
+//!    the recorder only *reads* simulation state and the wall clock, so
+//!    a seeded real-training run must produce identical parameters,
+//!    losses and timelines either way. `ci.sh` runs this whole binary
+//!    at `MEL_THREADS=1` and `MEL_THREADS=4`, so the guarantee holds
+//!    across compute-pool parallelism too.
+//! 2. **A churning 2-shard cluster is bit-for-bit identical** — same
+//!    property through the event-driven churn path (joins, departs,
+//!    re-leases, straggler releases all emit trace events).
+//! 3. **Exporter goldens** — the Chrome trace-event JSON re-parses with
+//!    `mel::util::json` and its lease phase spans (`send`/`compute`/
+//!    `upload`) nest inside their `lease` span; the per-lease budget
+//!    CSV's `send + compute + upload + slack` columns sum to `T`
+//!    (eq. (13)) on every row.
+//!
+//! Every test toggles the process-global trace flag, so they serialize
+//! on one lock.
+
+use std::sync::{Mutex, MutexGuard, OnceLock};
+
+use mel::alloc::Policy;
+use mel::cluster::{Cluster, ClusterConfig};
+use mel::coordinator::{ParamSet, TrainConfig, Trainer};
+use mel::orchestrator::{Mode, Orchestrator, OrchestratorConfig, UpdateRecord};
+use mel::scenario::{CloudletConfig, ClusterSpec, Scenario};
+use mel::trace::{self, Kind};
+use mel::util::json::Json;
+
+const T: f64 = 2.0;
+const SEED: u64 = 7;
+
+fn lock() -> MutexGuard<'static, ()> {
+    static LOCK: OnceLock<Mutex<()>> = OnceLock::new();
+    LOCK.get_or_init(|| Mutex::new(())).lock().unwrap_or_else(|e| e.into_inner())
+}
+
+/// Debug-build-friendly cloudlet: paper timing constants drive the
+/// allocation while the executed graph uses a shrunken hidden layer.
+fn tiny_cloudlet(k: usize, d: usize) -> CloudletConfig {
+    let mut c = CloudletConfig::pedestrian(k);
+    c.model = c.model.with_hidden(&[8]);
+    c.dataset.total_samples = d;
+    c
+}
+
+fn assert_params_bit_equal(a: &ParamSet, b: &ParamSet, what: &str) {
+    assert_eq!(a.tensors.len(), b.tensors.len(), "{what}: tensor count");
+    for (i, (ta, tb)) in a.tensors.iter().zip(&b.tensors).enumerate() {
+        assert_eq!(ta.dims, tb.dims, "{what}: tensor {i} dims");
+        for (j, (x, y)) in ta.as_f32().iter().zip(tb.as_f32()).enumerate() {
+            assert_eq!(x.to_bits(), y.to_bits(), "{what}: tensor {i} coord {j}: {x} vs {y}");
+        }
+    }
+}
+
+fn assert_updates_bit_equal(a: &[(usize, UpdateRecord)], b: &[(usize, UpdateRecord)]) {
+    assert_eq!(a.len(), b.len(), "update counts");
+    for (i, ((sa, ua), (sb, ub))) in a.iter().zip(b).enumerate() {
+        assert_eq!(sa, sb, "update {i}: shard");
+        assert_eq!(ua.learner, ub.learner, "update {i}: learner");
+        assert_eq!(
+            ua.dispatched_at.to_bits(),
+            ub.dispatched_at.to_bits(),
+            "update {i}: dispatch instant"
+        );
+        assert_eq!(
+            ua.uploaded_at.to_bits(),
+            ub.uploaded_at.to_bits(),
+            "update {i}: upload instant"
+        );
+        assert_eq!(ua.tau, ub.tau, "update {i}: tau");
+        assert_eq!(ua.batch, ub.batch, "update {i}: batch");
+        assert_eq!(ua.staleness, ub.staleness, "update {i}: staleness");
+        assert_eq!(ua.missed_deadline, ub.missed_deadline, "update {i}: miss flag");
+    }
+}
+
+#[test]
+fn training_is_bit_identical_with_tracing_on_and_off() {
+    let _g = lock();
+    let run = |traced: bool| {
+        trace::set_enabled(traced);
+        trace::clear();
+        let ccfg = tiny_cloudlet(3, 96);
+        let cfg = TrainConfig {
+            policy: Policy::Analytical,
+            t_total: T,
+            cycles: 10,
+            lr: 0.05,
+            seed: SEED,
+            eval_samples: 48,
+            trace_spans: traced,
+            ..TrainConfig::default()
+        };
+        let mut trainer =
+            Trainer::new(Scenario::random_cloudlet(&ccfg, SEED), cfg).expect("native engine");
+        let outcomes = trainer.train().expect("feasible tiny run");
+        assert_eq!(outcomes.len(), 10);
+        let events = trace::drain();
+        if traced {
+            // real training must populate the whole plane: leases,
+            // solver spans, local-training spans, pool jobs
+            for (cat, name) in
+                [("lease", "lease"), ("alloc", "solve_flat"), ("train", "local_training")]
+            {
+                assert!(
+                    events.iter().any(|e| e.cat == cat && e.name == name),
+                    "traced run is missing a {cat}/{name} event"
+                );
+            }
+        } else {
+            assert!(events.is_empty(), "disabled tracing must record nothing");
+        }
+        trace::set_enabled(false);
+        let sig: Vec<(u64, u64, u64, Vec<usize>, u64)> = outcomes
+            .iter()
+            .map(|o| {
+                (o.loss.to_bits(), o.accuracy.to_bits(), o.tau, o.batches.clone(), o.makespan.to_bits())
+            })
+            .collect();
+        (trainer.params().clone(), sig)
+    };
+    let (params_off, sig_off) = run(false);
+    let (params_on, sig_on) = run(true);
+    assert_eq!(sig_off, sig_on, "per-cycle outcomes must not shift by a bit under tracing");
+    assert_params_bit_equal(&params_off, &params_on, "traced vs untraced training");
+}
+
+#[test]
+fn churny_cluster_is_bit_identical_with_tracing_on_and_off() {
+    let _g = lock();
+    let spec = || {
+        let mut s = ClusterSpec::uniform("pedestrian", 2, 3).expect("builtin task");
+        for shard in &mut s.shards {
+            shard.cloudlet.model = shard.cloudlet.model.with_hidden(&[8]);
+            shard.cloudlet.dataset.total_samples = 96;
+        }
+        s.with_synthetic_churn(3.0 * T, 1, 9)
+    };
+    let run = |traced: bool| {
+        trace::set_enabled(traced);
+        trace::clear();
+        let cluster = Cluster::new(
+            spec(),
+            ClusterConfig {
+                policy: Policy::Analytical,
+                mode: Mode::Async,
+                t_total: T,
+                cycles: 3,
+                seed: SEED,
+                trace_spans: traced,
+                ..ClusterConfig::default()
+            },
+        );
+        let report = cluster.run().expect("feasible churny run");
+        assert!(!report.updates.is_empty());
+        let events = trace::drain();
+        if traced {
+            assert!(!events.is_empty(), "traced churny cluster recorded nothing");
+        } else {
+            assert!(events.is_empty(), "disabled tracing must record nothing");
+        }
+        trace::set_enabled(false);
+        report
+    };
+    let off = run(false);
+    let on = run(true);
+    assert_updates_bit_equal(&off.updates, &on.updates);
+    assert_eq!(off.deadline_misses, on.deadline_misses);
+    assert_eq!(off.releases, on.releases);
+    assert_eq!(off.updates_applied, on.updates_applied);
+}
+
+#[test]
+fn exporters_chrome_json_parses_and_budget_csv_sums_to_t() {
+    let _g = lock();
+    trace::set_enabled(true);
+    trace::clear();
+    let ccfg = tiny_cloudlet(3, 96);
+    let mut orch = Orchestrator::new(
+        Scenario::random_cloudlet(&ccfg, 42),
+        OrchestratorConfig {
+            mode: Mode::Sync,
+            policy: Policy::Analytical,
+            t_total: T,
+            cycles: 2,
+            seed: 42,
+            ..OrchestratorConfig::default()
+        },
+    );
+    orch.run().expect("feasible orchestrator run");
+    let events = trace::drain();
+    trace::set_enabled(false);
+
+    let leases: Vec<_> =
+        events.iter().filter(|e| e.name == "lease" && e.kind == Kind::Span).collect();
+    assert_eq!(leases.len(), 2 * 3, "one lease span per learner per cycle");
+
+    // --- budget CSV: every row's budget terms sum to T exactly (slack
+    // is defined as the remainder, eq. (13) fixes the other three)
+    let csv = mel::trace::export::budget_csv(&events, T);
+    let mut lines = csv.lines();
+    assert_eq!(
+        lines.next().unwrap(),
+        "shard,learner,dispatch_s,tau,d,send_s,compute_s,upload_s,slack_s,t_total,on_time"
+    );
+    let mut rows = 0;
+    for line in lines {
+        let cols: Vec<&str> = line.split(',').collect();
+        assert_eq!(cols.len(), 11, "malformed row {line:?}");
+        let send: f64 = cols[5].parse().unwrap();
+        let comp: f64 = cols[6].parse().unwrap();
+        let up: f64 = cols[7].parse().unwrap();
+        let slack: f64 = cols[8].parse().unwrap();
+        let t_total: f64 = cols[9].parse().unwrap();
+        assert!(
+            (send + comp + up + slack - t_total).abs() < 1e-6,
+            "budget terms must sum to T: {line:?}"
+        );
+        assert_eq!(cols[10], "true", "this feasible run has no late lease: {line:?}");
+        rows += 1;
+    }
+    assert_eq!(rows, leases.len(), "one budget row per lease span");
+
+    // --- Chrome trace JSON: round-trips through util::json, and the
+    // lease phase spans nest inside their lease span on each track
+    let text = mel::trace::export::chrome_trace(&events).to_string();
+    let back = Json::parse(&text).expect("chrome trace JSON parses");
+    let evs = back.get("traceEvents").unwrap().as_arr().unwrap();
+    let name_of = |e: &Json| e.get("name").unwrap().as_str().unwrap().to_string();
+    let ph_of = |e: &Json| e.get("ph").unwrap().as_str().unwrap().to_string();
+    assert!(
+        evs.iter().any(|e| ph_of(e) == "M" && name_of(e) == "process_name"),
+        "missing process_name metadata"
+    );
+    let track = |e: &Json| -> (f64, f64) {
+        (e.get("pid").unwrap().as_f64().unwrap(), e.get("tid").unwrap().as_f64().unwrap())
+    };
+    let span_range = |e: &Json| -> (f64, f64) {
+        let ts = e.get("ts").unwrap().as_f64().unwrap();
+        (ts, ts + e.get("dur").unwrap().as_f64().unwrap())
+    };
+    let lease_spans: Vec<_> =
+        evs.iter().filter(|e| ph_of(e) == "X" && name_of(e) == "lease").collect();
+    assert_eq!(lease_spans.len(), leases.len());
+    let mut phases = 0;
+    for e in evs {
+        let ph = ph_of(e);
+        let name = name_of(e);
+        if ph != "X" || !matches!(name.as_str(), "send" | "compute" | "upload") {
+            continue;
+        }
+        let (lo, hi) = span_range(e);
+        let parent = lease_spans.iter().any(|l| {
+            let (plo, phi) = span_range(l);
+            track(l) == track(e) && plo <= lo + 0.5 && hi <= phi + 0.5
+        });
+        assert!(parent, "{name} span at {lo}..{hi}us has no enclosing lease span");
+        phases += 1;
+    }
+    assert_eq!(phases, 3 * leases.len(), "send+compute+upload per lease");
+
+    // --- Prometheus exposition sanity on the run's metrics
+    let prom = orch.metrics.to_prometheus();
+    assert!(prom.contains("# TYPE mel_tau gauge"), "missing tau gauge:\n{prom}");
+    assert!(prom.contains("mel_makespan_count"), "missing makespan summary:\n{prom}");
+}
