@@ -112,6 +112,35 @@ head -1 "$trace_tmp/budget.csv" | grep -q '^shard,learner,dispatch_s' || {
 }
 rm -rf "$trace_tmp"
 
+# ---- live-plane equivalence + crash-resume gate (ISSUE 9) ---------------
+# The streaming parameter-server plane must be bit-for-bit identical to
+# the offline replay oracle (live ≡ replay under churn, rounds and
+# per-update aggregation) and a killed run must resume bit-for-bit from
+# its journal + last checkpoint — at both compute-pool extremes.
+for t in 1 4; do
+    echo "==> live-plane equivalence + crash-resume tests at MEL_THREADS=$t"
+    MEL_THREADS="$t" cargo test -q --test cluster_live
+done
+echo "==> mel trace --live + mel resume smoke"
+live_tmp="$(mktemp -d)"
+./target/release/mel trace --scenario pedestrian --k 2 --t 2 --cycles 2 \
+    --mode async --d 96 --hidden 8 --eval-samples 48 --seed 42 \
+    --out "$live_tmp/out" --live --journal "$live_tmp/journal" \
+    --checkpoint-every 1 > /dev/null
+for f in journal.jsonl checkpoint.json run.json; do
+    if [ ! -s "$live_tmp/journal/$f" ]; then
+        echo "FAIL: mel trace --live did not write $f"
+        rm -rf "$live_tmp"
+        exit 1
+    fi
+done
+./target/release/mel resume --journal "$live_tmp/journal" | grep -q 'resumed from' || {
+    echo "FAIL: mel resume did not replay the journaled run"
+    rm -rf "$live_tmp"
+    exit 1
+}
+rm -rf "$live_tmp"
+
 # ---- perf-trajectory gate self-test -------------------------------------
 # The stored-baseline comparison below only bites when CI_BENCH runs, so
 # prove on every CI run that the gate itself still fails on a synthetic

@@ -1,0 +1,607 @@
+//! **Live streaming mode** of the parameter-server tier: shard event
+//! loops stream their [`UpdateRecord`]s over the bounded message plane
+//! ([`super::plane`]) while the server applies cohorts *as the stream
+//! arrives*, instead of replaying a fully-merged report afterwards.
+//!
+//! ## Determinism: the watermark cut
+//!
+//! Shard threads interleave nondeterministically on the wall clock, so
+//! the server cannot just apply messages in arrival order. Instead
+//! every message carries the sending shard's **floor** — a simulated
+//! time below which that shard will never produce another event
+//! (its event-loop clock capped by the minimum `dispatched_at` over
+//! still-in-flight leases). The server keeps the per-shard floors,
+//! takes their minimum as the global *safe cut*, and has
+//! [`super::ParamServer::flush`] apply exactly the buffered events
+//! strictly older than the cut. Because the engine's processing order
+//! is a pure function of the buffered records (never of arrival
+//! order), a live run is **bit-for-bit identical** to
+//! [`super::ParamServer::replay`] of the same timing run — the
+//! deterministic oracle CI pins it against.
+//!
+//! ## Durability: journal + checkpoint
+//!
+//! With a journal directory configured, every streamed update is
+//! appended to `journal.jsonl` *before* it is ingested, and the full
+//! server state (applied-prefix cut, accumulator, global parameters,
+//! shard RNGs, open cohorts) is checkpointed to `checkpoint.json`
+//! (atomic temp-file + rename) every `checkpoint_every` applies and at
+//! end of stream. A killed run resumes from the last checkpoint plus
+//! the journal: re-ingest everything, prune what the crashed run
+//! already applied, and re-drive the (deterministic) timing simulation
+//! with the journaled per-shard prefixes skipped — landing on
+//! bit-identical final parameters.
+//!
+//! All on-disk floats are bit-exact: `f64`s as 16-hex-digit bit
+//! patterns, `f32` tensors as `u32` bit integers, `Pcg64` state as
+//! 32-hex-digit `u128`s. JSON object keys are sorted and open cohorts
+//! canonically ordered, so checkpoints are byte-stable too.
+
+use std::fs;
+use std::io::Write as _;
+use std::path::{Path, PathBuf};
+
+use crate::coordinator::ParamSet;
+use crate::orchestrator::UpdateRecord;
+use crate::runtime::Tensor;
+use crate::scenario::GlobalAggSpec;
+use crate::util::json::Json;
+
+use super::param_server::{
+    GlobalReport, LiveApply, OpenCohort, ParamServer, RoundStat, ServerCheckpoint,
+};
+use super::plane::{Receiver, ShardMsg};
+
+/// Journal file name inside a durability directory.
+pub const JOURNAL_FILE: &str = "journal.jsonl";
+/// Checkpoint file name inside a durability directory.
+pub const CHECKPOINT_FILE: &str = "checkpoint.json";
+
+/// Knobs of one live serving session.
+#[derive(Debug, Clone)]
+pub struct LiveOptions {
+    /// Write a checkpoint after this many additional aggregation
+    /// applies (`0` = only the final end-of-stream checkpoint). Only
+    /// meaningful with a `journal_dir`.
+    pub checkpoint_every: u64,
+    /// Durability directory holding `journal.jsonl` + `checkpoint.json`
+    /// (`None` = in-memory only, no crash recovery).
+    pub journal_dir: Option<PathBuf>,
+    /// Resume from the directory's existing journal/checkpoint instead
+    /// of truncating them.
+    pub resume: bool,
+    /// Bounded plane capacity in messages (backpressure threshold).
+    pub plane_capacity: usize,
+    /// Test hook: abandon the stream (simulating a crash) once this
+    /// many applies have happened. The journal and last checkpoint
+    /// stay on disk for a resume.
+    #[doc(hidden)]
+    pub halt_after_applies: Option<u64>,
+}
+
+impl Default for LiveOptions {
+    fn default() -> Self {
+        Self {
+            checkpoint_every: 0,
+            journal_dir: None,
+            resume: false,
+            plane_capacity: 256,
+            halt_after_applies: None,
+        }
+    }
+}
+
+impl LiveOptions {
+    /// Lift a scenario's live/durability knobs (the journal directory
+    /// and resume flag stay CLI-side decisions).
+    pub fn from_spec(g: &GlobalAggSpec) -> Self {
+        Self {
+            checkpoint_every: g.checkpoint_every,
+            plane_capacity: g.plane_capacity,
+            ..Self::default()
+        }
+    }
+}
+
+/// The serving loop: consume `(shard, ShardMsg)` messages until every
+/// sender hangs up, maintaining per-shard floors, flushing the engine
+/// at each safe-cut advance, journaling updates and checkpointing.
+///
+/// `preloaded` re-ingests a resumed run's journal before live traffic
+/// (empty on a fresh run); `checkpoint` then restores the crashed
+/// run's applied prefix.
+///
+/// Returns `Ok(None)` when the `halt_after_applies` crash hook fired;
+/// `Ok(Some(report))` on a completed stream.
+pub(crate) fn serve(
+    ps: &mut ParamServer,
+    rx: Receiver<(usize, ShardMsg)>,
+    opts: &LiveOptions,
+    num_shards: usize,
+    preloaded: &[(usize, UpdateRecord)],
+    checkpoint: Option<&ServerCheckpoint>,
+) -> anyhow::Result<Option<GlobalReport>> {
+    let mut la = ps.begin();
+    for (shard, rec) in preloaded {
+        ps.ingest(&mut la, *shard, rec)?;
+    }
+    if let Some(ck) = checkpoint {
+        ps.restore_checkpoint(&mut la, ck)?;
+    }
+    let mut journal = match &opts.journal_dir {
+        Some(dir) => {
+            fs::create_dir_all(dir)?;
+            let mut o = fs::OpenOptions::new();
+            o.create(true);
+            if opts.resume {
+                o.append(true);
+            } else {
+                o.write(true).truncate(true);
+            }
+            Some(o.open(dir.join(JOURNAL_FILE))?)
+        }
+        None => None,
+    };
+
+    let mut floors = vec![0.0f64; num_shards];
+    let mut applied_cut = f64::NEG_INFINITY;
+    let mut last_ck_applies = la.applies();
+    while let Some((shard, msg)) = rx.recv() {
+        anyhow::ensure!(
+            shard < num_shards,
+            "live plane message from unknown shard {shard} of {num_shards}"
+        );
+        match msg {
+            ShardMsg::Update { rec, min_inflight } => {
+                if let Some(f) = journal.as_mut() {
+                    writeln!(f, "{}", record_to_json(shard, &rec))?;
+                    crate::trace::instant(
+                        "ps",
+                        "journal_append",
+                        crate::trace::PID_PARAM_SERVER,
+                        shard as u32,
+                        rec.uploaded_at,
+                        &[("learner", rec.learner as f64)],
+                    );
+                }
+                // a record's own upload is an event at `uploaded_at`;
+                // in-flight leases pin the floor to their dispatch
+                floors[shard] = floors[shard].max(rec.uploaded_at.min(min_inflight));
+                ps.ingest(&mut la, shard, &rec)?;
+            }
+            ShardMsg::Advance { clock, min_inflight } => {
+                floors[shard] = floors[shard].max(clock.min(min_inflight));
+            }
+            ShardMsg::Done => floors[shard] = f64::INFINITY,
+        }
+        ps.metrics.gauge("plane_depth", rx.depth() as f64);
+        let cut = floors.iter().copied().fold(f64::INFINITY, f64::min);
+        if cut > applied_cut {
+            applied_cut = cut;
+            ps.flush(&mut la, cut)?;
+        }
+        if opts.checkpoint_every > 0
+            && opts.journal_dir.is_some()
+            && la.applies() - last_ck_applies >= opts.checkpoint_every
+        {
+            last_ck_applies = la.applies();
+            write_checkpoint(ps, &la, opts.journal_dir.as_deref().unwrap())?;
+        }
+        if let Some(halt) = opts.halt_after_applies {
+            if la.applies() >= halt {
+                // simulated crash: abandon the stream mid-flight; the
+                // dropped receiver releases any blocked senders
+                return Ok(None);
+            }
+        }
+    }
+    // end of stream: every floor is +∞, so everything has been applied;
+    // the final checkpoint therefore records a fully-drained state
+    if let Some(dir) = &opts.journal_dir {
+        write_checkpoint(ps, &la, dir)?;
+    }
+    Ok(Some(ps.finish(la)?))
+}
+
+fn write_checkpoint(ps: &ParamServer, la: &LiveApply, dir: &Path) -> anyhow::Result<()> {
+    let ck = ps.capture_checkpoint(la);
+    let cut = f64::from_bits(ck.cut_bits);
+    let t = if cut.is_finite() { cut } else { ck.loss_series.last().map_or(0.0, |p| p.0) };
+    let open = ck.open.len();
+    let tmp = dir.join(format!("{CHECKPOINT_FILE}.tmp"));
+    fs::write(&tmp, checkpoint_to_json(&ck).to_pretty())?;
+    fs::rename(&tmp, dir.join(CHECKPOINT_FILE))?;
+    crate::trace::instant(
+        "ps",
+        "checkpoint",
+        crate::trace::PID_PARAM_SERVER,
+        0,
+        t,
+        &[("applies", ck.applies as f64), ("open_cohorts", open as f64)],
+    );
+    Ok(())
+}
+
+/// Load a durability directory's journal (empty vec when absent).
+pub fn load_journal(dir: &Path) -> anyhow::Result<Vec<(usize, UpdateRecord)>> {
+    let path = dir.join(JOURNAL_FILE);
+    if !path.exists() {
+        return Ok(Vec::new());
+    }
+    let text = fs::read_to_string(&path)?;
+    let mut out = Vec::new();
+    for (i, line) in text.lines().enumerate() {
+        let line = line.trim();
+        if line.is_empty() {
+            continue;
+        }
+        let parsed = Json::parse(line)
+            .map_err(anyhow::Error::from)
+            .and_then(|j| record_from_json(&j))
+            .map_err(|e| anyhow::anyhow!("{}:{}: {e}", path.display(), i + 1))?;
+        out.push(parsed);
+    }
+    Ok(out)
+}
+
+/// Load a durability directory's checkpoint (`None` when absent — a
+/// run killed before its first checkpoint resumes from the journal
+/// alone).
+pub(crate) fn load_checkpoint(dir: &Path) -> anyhow::Result<Option<ServerCheckpoint>> {
+    let path = dir.join(CHECKPOINT_FILE);
+    if !path.exists() {
+        return Ok(None);
+    }
+    let text = fs::read_to_string(&path)?;
+    let j = Json::parse(&text).map_err(|e| anyhow::anyhow!("{}: {e}", path.display()))?;
+    Ok(Some(
+        checkpoint_from_json(&j).map_err(|e| anyhow::anyhow!("{}: {e}", path.display()))?,
+    ))
+}
+
+// ---------------------------------------------------------------------------
+// bit-exact JSON codecs
+// ---------------------------------------------------------------------------
+
+fn hex_u64(x: u64) -> Json {
+    Json::Str(format!("{x:016x}"))
+}
+
+fn hex_u128(x: u128) -> Json {
+    Json::Str(format!("{x:032x}"))
+}
+
+fn hex_f64(x: f64) -> Json {
+    hex_u64(x.to_bits())
+}
+
+fn u64_from_hex(j: &Json) -> anyhow::Result<u64> {
+    Ok(u64::from_str_radix(j.as_str()?, 16)?)
+}
+
+fn u128_from_hex(j: &Json) -> anyhow::Result<u128> {
+    Ok(u128::from_str_radix(j.as_str()?, 16)?)
+}
+
+fn f64_from_hex(j: &Json) -> anyhow::Result<f64> {
+    Ok(f64::from_bits(u64_from_hex(j)?))
+}
+
+pub(crate) fn record_to_json(shard: usize, u: &UpdateRecord) -> Json {
+    Json::obj(vec![
+        ("shard", Json::Num(shard as f64)),
+        ("learner", Json::Num(u.learner as f64)),
+        ("disp", hex_f64(u.dispatched_at)),
+        ("up", hex_f64(u.uploaded_at)),
+        ("tau", Json::Num(u.tau as f64)),
+        ("batch", Json::Num(u.batch as f64)),
+        ("stale", Json::Num(u.staleness as f64)),
+        ("miss", Json::Bool(u.missed_deadline)),
+    ])
+}
+
+fn record_from_json(j: &Json) -> anyhow::Result<(usize, UpdateRecord)> {
+    Ok((
+        j.get("shard")?.as_usize()?,
+        UpdateRecord {
+            learner: j.get("learner")?.as_usize()?,
+            dispatched_at: f64_from_hex(j.get("disp")?)?,
+            uploaded_at: f64_from_hex(j.get("up")?)?,
+            tau: j.get("tau")?.as_u64()?,
+            batch: j.get("batch")?.as_usize()?,
+            staleness: j.get("stale")?.as_u64()?,
+            missed_deadline: j.get("miss")?.as_bool()?,
+        },
+    ))
+}
+
+fn series_to_json(pts: &[(f64, f64)]) -> Json {
+    Json::Arr(pts.iter().map(|&(t, v)| Json::Arr(vec![hex_f64(t), hex_f64(v)])).collect())
+}
+
+fn series_from_json(j: &Json) -> anyhow::Result<Vec<(f64, f64)>> {
+    j.as_arr()?
+        .iter()
+        .map(|p| {
+            let p = p.as_arr()?;
+            anyhow::ensure!(p.len() == 2, "series point is not a pair");
+            Ok((f64_from_hex(&p[0])?, f64_from_hex(&p[1])?))
+        })
+        .collect()
+}
+
+fn tensor_to_json(t: &Tensor) -> Json {
+    Json::obj(vec![
+        ("dims", Json::from_usize_slice(&t.dims)),
+        // f32 coordinates as raw u32 bit patterns: exact in a f64 Num
+        ("f32", Json::Arr(t.as_f32().iter().map(|v| Json::Num(v.to_bits() as f64)).collect())),
+    ])
+}
+
+fn tensor_from_json(j: &Json) -> anyhow::Result<Tensor> {
+    let dims =
+        j.get("dims")?.as_arr()?.iter().map(Json::as_usize).collect::<Result<Vec<_>, _>>()?;
+    let data = j
+        .get("f32")?
+        .as_arr()?
+        .iter()
+        .map(|v| Ok(f32::from_bits(u32::try_from(v.as_u64()?)?)))
+        .collect::<anyhow::Result<Vec<f32>>>()?;
+    Ok(Tensor::f32(dims, data))
+}
+
+fn params_to_json(p: &ParamSet) -> Json {
+    Json::obj(vec![
+        ("layers", Json::from_usize_slice(&p.layers)),
+        ("tensors", Json::Arr(p.tensors.iter().map(tensor_to_json).collect())),
+    ])
+}
+
+fn params_from_json(j: &Json) -> anyhow::Result<ParamSet> {
+    let layers =
+        j.get("layers")?.as_arr()?.iter().map(Json::as_usize).collect::<Result<Vec<_>, _>>()?;
+    let tensors = j
+        .get("tensors")?
+        .as_arr()?
+        .iter()
+        .map(tensor_from_json)
+        .collect::<anyhow::Result<Vec<_>>>()?;
+    Ok(ParamSet { tensors, layers })
+}
+
+fn round_to_json(r: &RoundStat) -> Json {
+    Json::obj(vec![
+        ("index", Json::Num(r.index as f64)),
+        ("t", hex_f64(r.t)),
+        ("updates", Json::Num(r.updates as f64)),
+        ("share", hex_f64(r.batch_share)),
+        ("weight", hex_f64(r.weight)),
+    ])
+}
+
+fn round_from_json(j: &Json) -> anyhow::Result<RoundStat> {
+    Ok(RoundStat {
+        index: j.get("index")?.as_u64()?,
+        t: f64_from_hex(j.get("t")?)?,
+        updates: j.get("updates")?.as_u64()?,
+        batch_share: f64_from_hex(j.get("share")?)?,
+        weight: f64_from_hex(j.get("weight")?)?,
+    })
+}
+
+fn open_to_json(o: &OpenCohort) -> Json {
+    Json::obj(vec![
+        ("shard", Json::Num(o.shard as f64)),
+        ("disp", hex_u64(o.disp_bits)),
+        ("snapshot", params_to_json(&o.snapshot)),
+        ("idx", Json::Arr(o.idx.iter().map(|v| Json::from_usize_slice(v)).collect())),
+    ])
+}
+
+fn open_from_json(j: &Json) -> anyhow::Result<OpenCohort> {
+    Ok(OpenCohort {
+        shard: j.get("shard")?.as_usize()?,
+        disp_bits: u64_from_hex(j.get("disp")?)?,
+        snapshot: params_from_json(j.get("snapshot")?)?,
+        idx: j
+            .get("idx")?
+            .as_arr()?
+            .iter()
+            .map(|v| v.as_arr()?.iter().map(Json::as_usize).collect::<Result<Vec<_>, _>>())
+            .collect::<Result<Vec<_>, _>>()?,
+    })
+}
+
+fn checkpoint_to_json(ck: &ServerCheckpoint) -> Json {
+    Json::obj(vec![
+        ("format", Json::Num(1.0)),
+        ("cut", hex_u64(ck.cut_bits)),
+        ("applies", Json::Num(ck.applies as f64)),
+        ("replayed", Json::Num(ck.replayed as f64)),
+        ("loss", series_to_json(&ck.loss_series)),
+        ("acc", series_to_json(&ck.acc_series)),
+        ("rounds", Json::Arr(ck.rounds.iter().map(round_to_json).collect())),
+        ("global", params_to_json(&ck.global)),
+        (
+            "rngs",
+            Json::Arr(
+                ck.rngs.iter().map(|&(s, i)| Json::Arr(vec![hex_u128(s), hex_u128(i)])).collect(),
+            ),
+        ),
+        ("open", Json::Arr(ck.open.iter().map(open_to_json).collect())),
+    ])
+}
+
+fn checkpoint_from_json(j: &Json) -> anyhow::Result<ServerCheckpoint> {
+    let format = j.get("format")?.as_u64()?;
+    anyhow::ensure!(format == 1, "unsupported checkpoint format {format}");
+    Ok(ServerCheckpoint {
+        cut_bits: u64_from_hex(j.get("cut")?)?,
+        applies: j.get("applies")?.as_u64()?,
+        replayed: j.get("replayed")?.as_u64()?,
+        loss_series: series_from_json(j.get("loss")?)?,
+        acc_series: series_from_json(j.get("acc")?)?,
+        rounds: j
+            .get("rounds")?
+            .as_arr()?
+            .iter()
+            .map(round_from_json)
+            .collect::<anyhow::Result<Vec<_>>>()?,
+        global: params_from_json(j.get("global")?)?,
+        rngs: j
+            .get("rngs")?
+            .as_arr()?
+            .iter()
+            .map(|p| {
+                let p = p.as_arr()?;
+                anyhow::ensure!(p.len() == 2, "rng entry is not a (state, inc) pair");
+                Ok((u128_from_hex(&p[0])?, u128_from_hex(&p[1])?))
+            })
+            .collect::<anyhow::Result<Vec<_>>>()?,
+        open: j
+            .get("open")?
+            .as_arr()?
+            .iter()
+            .map(open_from_json)
+            .collect::<anyhow::Result<Vec<_>>>()?,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmpdir(name: &str) -> PathBuf {
+        let d = std::env::temp_dir().join(format!("mel-{name}-{}", std::process::id()));
+        let _ = fs::remove_dir_all(&d);
+        fs::create_dir_all(&d).unwrap();
+        d
+    }
+
+    fn rec(learner: usize, d: f64, t: f64) -> UpdateRecord {
+        UpdateRecord {
+            learner,
+            dispatched_at: d,
+            uploaded_at: t,
+            tau: 3,
+            batch: 16,
+            staleness: 1,
+            missed_deadline: learner % 2 == 1,
+        }
+    }
+
+    #[test]
+    fn journal_record_codec_is_bit_exact() {
+        // awkward floats: denormal-adjacent, negative zero, huge
+        for (shard, r) in [
+            (0usize, rec(0, 0.0, 0.1 + 0.2)),
+            (3, rec(7, f64::MIN_POSITIVE, 1e300)),
+            (1, rec(2, -0.0, 5e-324)),
+        ] {
+            let j = record_to_json(shard, &r);
+            let (s2, r2) = record_from_json(&Json::parse(&j.to_string()).unwrap()).unwrap();
+            assert_eq!(s2, shard);
+            assert_eq!(r2.learner, r.learner);
+            assert_eq!(r2.dispatched_at.to_bits(), r.dispatched_at.to_bits());
+            assert_eq!(r2.uploaded_at.to_bits(), r.uploaded_at.to_bits());
+            assert_eq!(r2.tau, r.tau);
+            assert_eq!(r2.batch, r.batch);
+            assert_eq!(r2.staleness, r.staleness);
+            assert_eq!(r2.missed_deadline, r.missed_deadline);
+        }
+    }
+
+    #[test]
+    fn journal_file_round_trips_and_tolerates_absence() {
+        let dir = tmpdir("journal-rt");
+        assert!(load_journal(&dir).unwrap().is_empty(), "missing journal = empty");
+        let recs = vec![(0usize, rec(0, 0.0, 1.5)), (1, rec(3, 1.5, 2.25)), (0, rec(1, 0.0, 3.0))];
+        {
+            let mut f = fs::File::create(dir.join(JOURNAL_FILE)).unwrap();
+            for (s, r) in &recs {
+                writeln!(f, "{}", record_to_json(*s, r)).unwrap();
+            }
+        }
+        let loaded = load_journal(&dir).unwrap();
+        assert_eq!(loaded.len(), recs.len());
+        for ((s, a), (s2, b)) in recs.iter().zip(&loaded) {
+            assert_eq!(s, s2);
+            assert_eq!(a.uploaded_at.to_bits(), b.uploaded_at.to_bits());
+        }
+        // a corrupt line is a load error naming the line
+        fs::write(dir.join(JOURNAL_FILE), "{\"shard\":0\n").unwrap();
+        let err = format!("{}", load_journal(&dir).unwrap_err());
+        assert!(err.contains(":1:"), "{err}");
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn checkpoint_codec_round_trips_bit_exactly() {
+        let p = ParamSet::init(&[4, 3, 2], 99);
+        let ck = ServerCheckpoint {
+            cut_bits: f64::INFINITY.to_bits(),
+            applies: 12,
+            replayed: 40,
+            loss_series: vec![(0.5, 0.693_147), (1.0, f64::MIN_POSITIVE)],
+            acc_series: vec![(0.5, 0.25), (1.0, 1.0)],
+            rounds: vec![RoundStat {
+                index: 3,
+                t: 8.0,
+                updates: 5,
+                batch_share: 80.0,
+                weight: 72.5,
+            }],
+            global: p.clone(),
+            rngs: vec![(u128::MAX - 3, 0x0C0FFEE), (1, u128::MAX)],
+            open: vec![OpenCohort {
+                shard: 1,
+                disp_bits: 2.5f64.to_bits(),
+                snapshot: p,
+                idx: vec![vec![0, 5, 9], vec![]],
+            }],
+        };
+        let text = checkpoint_to_json(&ck).to_pretty();
+        let ck2 = checkpoint_from_json(&Json::parse(&text).unwrap()).unwrap();
+        assert_eq!(ck2.cut_bits, ck.cut_bits);
+        assert_eq!(ck2.applies, ck.applies);
+        assert_eq!(ck2.replayed, ck.replayed);
+        assert_eq!(ck2.rngs, ck.rngs);
+        assert_eq!(ck2.rounds.len(), 1);
+        assert_eq!(ck2.rounds[0].weight.to_bits(), ck.rounds[0].weight.to_bits());
+        for (a, b) in ck.loss_series.iter().zip(&ck2.loss_series) {
+            assert_eq!(a.1.to_bits(), b.1.to_bits());
+        }
+        for (ta, tb) in ck.global.tensors.iter().zip(&ck2.global.tensors) {
+            assert_eq!(ta.dims, tb.dims);
+            for (x, y) in ta.as_f32().iter().zip(tb.as_f32()) {
+                assert_eq!(x.to_bits(), y.to_bits());
+            }
+        }
+        assert_eq!(ck2.open.len(), 1);
+        assert_eq!(ck2.open[0].disp_bits, ck.open[0].disp_bits);
+        assert_eq!(ck2.open[0].idx, ck.open[0].idx);
+        // serialization is canonical: a re-serialize is byte-identical
+        assert_eq!(checkpoint_to_json(&ck2).to_pretty(), text);
+    }
+
+    #[test]
+    fn checkpoint_loader_rejects_garbage_and_tolerates_absence() {
+        let dir = tmpdir("ck-load");
+        assert!(load_checkpoint(&dir).unwrap().is_none());
+        fs::write(dir.join(CHECKPOINT_FILE), "{\"format\": 7}").unwrap();
+        let err = format!("{}", load_checkpoint(&dir).unwrap_err());
+        assert!(err.contains("unsupported checkpoint format"), "{err}");
+        fs::write(dir.join(CHECKPOINT_FILE), "not json").unwrap();
+        assert!(load_checkpoint(&dir).is_err());
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn from_spec_lifts_live_knobs() {
+        let g = GlobalAggSpec { plane_capacity: 64, checkpoint_every: 5, ..Default::default() };
+        let o = LiveOptions::from_spec(&g);
+        assert_eq!(o.plane_capacity, 64);
+        assert_eq!(o.checkpoint_every, 5);
+        assert!(o.journal_dir.is_none() && !o.resume);
+    }
+}

@@ -41,13 +41,27 @@
 //! kernels are bit-for-bit thread-count invariant, none of the
 //! equivalences above depend on `MEL_THREADS`.
 
+//!
+//! The replay can also run **live** ([`Cluster::run_live`]): shards
+//! stream their records to the server over a bounded in-process
+//! message plane ([`plane`]) with blocking backpressure, the server
+//! applies cohorts as the watermark-protected simulated-time cut
+//! advances ([`live`]), and — with a journal directory — persists an
+//! append-only update journal plus periodic checkpoints so a killed
+//! run resumes bit-for-bit. Live results are bit-identical to the
+//! post-hoc replay (CI-gated in `rust/tests/cluster_live.rs`).
+
 pub mod churn_planner;
+pub mod live;
 pub mod param_server;
+pub mod plane;
 
 pub use churn_planner::ChurnAwarePlanner;
+pub use live::LiveOptions;
 pub use param_server::{
-    staleness_factor, GlobalReport, ParamServer, ParamServerConfig, RoundStat,
+    staleness_factor, GlobalReport, LiveApply, ParamServer, ParamServerConfig, RoundStat,
 };
+pub use plane::ShardMsg;
 
 use std::sync::Arc;
 use std::thread;
@@ -103,6 +117,10 @@ pub struct ClusterConfig {
     /// effect as `MEL_TRACE=1`). Non-perturbing: traced runs are
     /// bit-for-bit identical to untraced ones.
     pub trace_spans: bool,
+    /// Test hook: make this shard's thread panic on entry, exercising
+    /// the cluster's panic-propagation path.
+    #[doc(hidden)]
+    pub inject_panic_shard: Option<usize>,
 }
 
 impl Default for ClusterConfig {
@@ -121,6 +139,7 @@ impl Default for ClusterConfig {
             trace: false,
             grouped_alloc: false,
             trace_spans: false,
+            inject_panic_shard: None,
         }
     }
 }
@@ -176,33 +195,41 @@ impl Cluster {
     /// matter how the host schedules the threads. The cluster registry
     /// is rebuilt from scratch on every call, so repeated runs (e.g.
     /// bench iterations) do not accumulate stale totals.
-    pub fn run(&self) -> Result<ClusterReport, AllocError> {
+    pub fn run(&self) -> anyhow::Result<ClusterReport> {
         self.metrics.clear();
         if self.cfg.trace_spans {
             crate::trace::set_enabled(true);
         }
-        let handles: Vec<_> = self
-            .spec
+        let shards = join_shards(self.spawn_shards(None, &[]))?;
+        Ok(self.aggregate(shards))
+    }
+
+    fn spawn_shards(
+        &self,
+        feed: Option<&plane::Sender<(usize, ShardMsg)>>,
+        skip: &[u64],
+    ) -> Vec<thread::JoinHandle<Result<ShardReport, AllocError>>> {
+        self.spec
             .shards
             .iter()
             .enumerate()
             .map(|(i, s)| {
                 let spec = s.clone();
                 let cfg = self.cfg.clone();
+                let feed = feed.cloned();
+                let skip_n = skip.get(i).copied().unwrap_or(0);
                 thread::spawn(move || {
                     // tag the shard thread so every span it records —
                     // including deep ones in alloc/orchestrator — lands
                     // on this shard's trace track
                     crate::trace::set_shard(i as u32);
-                    run_shard(i, &spec, &cfg)
+                    run_shard(i, &spec, &cfg, feed.as_ref(), skip_n)
                 })
             })
-            .collect();
-        let mut shards = Vec::with_capacity(handles.len());
-        for h in handles {
-            shards.push(h.join().expect("shard thread panicked")?);
-        }
+            .collect()
+    }
 
+    fn aggregate(&self, shards: Vec<ShardReport>) -> ClusterReport {
         // ---- hierarchical aggregation ----
         let mut updates: Vec<(usize, UpdateRecord)> = Vec::new();
         let mut updates_applied = 0u64;
@@ -235,14 +262,14 @@ impl Cluster {
         self.metrics.inc("deadline_misses", deadline_misses);
         self.metrics.inc("releases", releases);
 
-        Ok(ClusterReport {
+        ClusterReport {
             shards,
             updates,
             updates_applied,
             deadline_misses,
             releases,
             horizon,
-        })
+        }
     }
 
     /// Run the timing simulation, then replay the merged update stream
@@ -258,11 +285,109 @@ impl Cluster {
             self.run().map_err(|e| anyhow::anyhow!("cluster timing run failed: {e}"))?;
         let mut ps = ParamServer::new(&self.spec, ps_cfg)?;
         let global = ps.replay(&report.updates)?;
+        self.import_global(&global);
+        Ok((report, global))
+    }
+
+    /// Run the timing simulation and the parameter server
+    /// **concurrently**: shard threads stream every completed
+    /// [`UpdateRecord`] over a bounded plane channel, and the server
+    /// applies cohorts as the safe simulated-time cut advances — plus
+    /// optional journal/checkpoint durability and crash resume (see
+    /// [`live`]). Produces bit-for-bit the same [`GlobalReport`] as
+    /// [`Cluster::run_global`] on the same spec/config/seed.
+    pub fn run_live(
+        &self,
+        ps_cfg: ParamServerConfig,
+        live_opts: &LiveOptions,
+    ) -> anyhow::Result<(ClusterReport, GlobalReport)> {
+        self.metrics.clear();
+        if self.cfg.trace_spans {
+            crate::trace::set_enabled(true);
+        }
+        anyhow::ensure!(live_opts.plane_capacity > 0, "plane capacity must be positive");
+        // resume artifacts load before the shards spawn: the journaled
+        // per-shard record prefixes are already durable, so the
+        // re-driven (deterministic) timing simulation skips streaming
+        // them and only advances floors in their place
+        let (preloaded, checkpoint) = match (&live_opts.journal_dir, live_opts.resume) {
+            (Some(dir), true) => (live::load_journal(dir)?, live::load_checkpoint(dir)?),
+            _ => (Vec::new(), None),
+        };
+        let mut skip = vec![0u64; self.spec.shards.len()];
+        for (shard, _) in &preloaded {
+            anyhow::ensure!(
+                *shard < skip.len(),
+                "journal references shard {shard} of a {}-shard cluster",
+                skip.len()
+            );
+            skip[*shard] += 1;
+        }
+        let mut ps = ParamServer::new(&self.spec, ps_cfg)?;
+        let (tx, rx) = plane::bounded::<(usize, ShardMsg)>(live_opts.plane_capacity);
+        let handles = self.spawn_shards(Some(&tx), &skip);
+        // drop the template sender: the serve loop's end-of-stream is
+        // "every shard hung up", not "the spawner still holds a clone"
+        drop(tx);
+        let served = live::serve(
+            &mut ps,
+            rx,
+            live_opts,
+            self.spec.shards.len(),
+            &preloaded,
+            checkpoint.as_ref(),
+        );
+        // join before inspecting the serve result: a shard panic is the
+        // root cause behind any dead-plane serve error
+        let shards = join_shards(handles)?;
+        let global = served?.ok_or_else(|| {
+            anyhow::anyhow!("live serving halted early (halt_after_applies test hook)")
+        })?;
+        let report = self.aggregate(shards);
+        self.import_global(&global);
+        Ok((report, global))
+    }
+
+    fn import_global(&self, global: &GlobalReport) {
         self.metrics.import_series("global_acc_vs_simtime", &global.acc_series);
         self.metrics.import_series("global_loss_vs_simtime", &global.loss_series);
         self.metrics.inc("global_updates_replayed", global.updates_replayed);
         self.metrics.inc("global_applies", global.applies);
-        Ok((report, global))
+    }
+}
+
+/// Join every shard thread, converting panics and per-shard errors into
+/// one `anyhow` error that names the shard. Always joins *all* handles
+/// (no thread is left detached behind an early `?`); the first failure
+/// in shard order wins.
+fn join_shards(
+    handles: Vec<thread::JoinHandle<Result<ShardReport, AllocError>>>,
+) -> anyhow::Result<Vec<ShardReport>> {
+    let mut shards = Vec::with_capacity(handles.len());
+    let mut first_err: Option<anyhow::Error> = None;
+    for (i, h) in handles.into_iter().enumerate() {
+        match h.join() {
+            Ok(Ok(sr)) => shards.push(sr),
+            Ok(Err(e)) => {
+                if first_err.is_none() {
+                    first_err = Some(anyhow::anyhow!("shard {i}: {e}"));
+                }
+            }
+            Err(payload) => {
+                let msg = payload
+                    .downcast_ref::<&str>()
+                    .map(|s| s.to_string())
+                    .or_else(|| payload.downcast_ref::<String>().cloned())
+                    .unwrap_or_else(|| "non-string panic payload".to_string());
+                if first_err.is_none() {
+                    first_err = Some(anyhow::anyhow!("shard {i} thread panicked: {msg}"));
+                }
+            }
+        }
+    }
+    match first_err {
+        Some(e) => Err(e),
+        None => Ok(shards),
     }
 }
 
@@ -287,7 +412,16 @@ pub fn shard_seed(cluster_seed: u64, seed_offset: u64, shard: usize) -> u64 {
 /// re-leasing delegate to the orchestrator core unchanged (this is the
 /// bit-for-bit equivalence path); everything else runs the churn-aware
 /// event loop.
-fn run_shard(shard: usize, spec: &ShardSpec, cfg: &ClusterConfig) -> Result<ShardReport, AllocError> {
+fn run_shard(
+    shard: usize,
+    spec: &ShardSpec,
+    cfg: &ClusterConfig,
+    feed: Option<&plane::Sender<(usize, ShardMsg)>>,
+    skip_n: u64,
+) -> Result<ShardReport, AllocError> {
+    if cfg.inject_panic_shard == Some(shard) {
+        panic!("injected shard panic (test hook)");
+    }
     let shard_seed = shard_seed(cfg.seed, spec.seed_offset, shard);
     // population shards expand their group table (O(groups) spec state)
     // and route allocations through the per-group solvers
@@ -313,6 +447,9 @@ fn run_shard(shard: usize, spec: &ShardSpec, cfg: &ClusterConfig) -> Result<Shar
         };
         let mut orch = Orchestrator::new(scenario, ocfg).with_metrics(metrics.clone());
         let report = orch.run()?;
+        if let Some(tx) = feed {
+            stream_report(shard, &report.updates, skip_n, tx);
+        }
         let misses = metrics.counter("deadline_misses");
         return Ok(ShardReport {
             shard,
@@ -325,7 +462,55 @@ fn run_shard(shard: usize, spec: &ShardSpec, cfg: &ClusterConfig) -> Result<Shar
             misses,
         });
     }
-    run_churn_shard(shard, scenario, spec, cfg, shard_seed)
+    run_churn_shard(shard, scenario, spec, cfg, shard_seed, feed, skip_n)
+}
+
+/// Stream an already-computed orchestrator report over the live plane
+/// (the churn-free delegation path finishes its timing run first, so
+/// "live" here means upload order with exact in-flight floors). The
+/// first `skip_n` records are journaled resume prefixes: their floor
+/// advances are sent, the records themselves are not re-streamed.
+fn stream_report(
+    shard: usize,
+    updates: &[UpdateRecord],
+    skip_n: u64,
+    tx: &plane::Sender<(usize, ShardMsg)>,
+) {
+    let mut sorted: Vec<&UpdateRecord> = updates.iter().collect();
+    sorted.sort_by(|a, b| a.uploaded_at.total_cmp(&b.uploaded_at));
+    // suffix-min of future dispatch instants: the shard's floor must
+    // never pass the dispatch event of a record it has yet to deliver
+    let mut min_suffix = vec![f64::INFINITY; sorted.len() + 1];
+    for i in (0..sorted.len()).rev() {
+        min_suffix[i] = min_suffix[i + 1].min(sorted[i].dispatched_at);
+    }
+    for (i, u) in sorted.iter().enumerate() {
+        let min_inflight = min_suffix[i + 1];
+        let msg = if (i as u64) < skip_n {
+            ShardMsg::Advance { clock: u.uploaded_at, min_inflight }
+        } else {
+            ShardMsg::Update { rec: (*u).clone(), min_inflight }
+        };
+        // a send error means the server died early; that failure
+        // surfaces through the serve result, not a shard panic
+        if tx.send((shard, msg)).is_err() {
+            return;
+        }
+    }
+    let _ = tx.send((shard, ShardMsg::Done));
+}
+
+/// The floor pinned by in-flight leases: the minimum dispatch instant
+/// among them (`+∞` when none are in flight). Cohorts dispatched at or
+/// after this instant may still gain members, so the server must not
+/// apply past it.
+fn inflight_floor(active: &[Option<Lease>], dispatched_at: &[f64]) -> f64 {
+    active
+        .iter()
+        .zip(dispatched_at)
+        .filter(|(l, _)| l.is_some())
+        .map(|(_, &d)| d)
+        .fold(f64::INFINITY, f64::min)
 }
 
 /// The churn-aware per-shard event loop: staggered dispatch (as the
@@ -337,12 +522,15 @@ fn run_churn_shard(
     spec: &ShardSpec,
     cfg: &ClusterConfig,
     seed: u64,
+    feed: Option<&plane::Sender<(usize, ShardMsg)>>,
+    skip_n: u64,
 ) -> Result<ShardReport, AllocError> {
     let metrics = Arc::new(Metrics::new());
     let k_n = scenario.k();
     let horizon = cfg.cycles as f64 * cfg.t_total;
-    // churn-loop event times are absolute already
-    crate::trace::set_sim_offset(0.0);
+    // churn-loop event times are absolute already; guard-scoped so the
+    // offset cannot leak to later work on a pooled thread
+    let _off = crate::trace::sim_offset_guard(0.0);
     let drop_stragglers = !cfg.straggler_releasing;
     let shrink = if cfg.straggler_releasing { cfg.lease_shrink } else { 1.0 };
 
@@ -397,6 +585,10 @@ fn run_churn_shard(
     let (mut joins, mut departs) = (0u64, 0u64);
     let mut updates = Vec::new();
     let mut timeline = Vec::new();
+    // live-plane bookkeeping: journaled resume prefix left to skip, and
+    // the highest floor already announced to the server
+    let mut skip_left = skip_n;
+    let mut last_floor = 0.0f64;
 
     let plan = planner.plan_round(&problem, 0.0)?;
     for lease in plan.leases {
@@ -548,6 +740,20 @@ fn run_churn_shard(
                         active[learner] = Some(lease);
                     }
                 }
+                // stream the record *after* any re-dispatch, so the
+                // in-flight floor already pins the successor lease
+                if let Some(tx) = feed {
+                    if skip_left > 0 {
+                        // journaled by the crashed run: the record is
+                        // already durable, only its floor advance flows
+                        skip_left -= 1;
+                    } else {
+                        let mi = inflight_floor(&active, &dispatched_at);
+                        let rec = updates.last().expect("just pushed").clone();
+                        let _ = tx.send((shard, ShardMsg::Update { rec, min_inflight: mi }));
+                        last_floor = last_floor.max(t.min(mi));
+                    }
+                }
             }
             LearnerEvent::SendComplete { .. } | LearnerEvent::IterationDone { .. } => {
                 if cfg.trace {
@@ -558,6 +764,19 @@ fn run_churn_shard(
             // itself, never scheduled.
             _ => {}
         }
+        // every popped event may raise the shard's floor (the event
+        // clock capped by in-flight dispatches); announce strict rises
+        if let Some(tx) = feed {
+            let mi = inflight_floor(&active, &dispatched_at);
+            let cand = t.min(mi);
+            if cand > last_floor {
+                last_floor = cand;
+                let _ = tx.send((shard, ShardMsg::Advance { clock: t, min_inflight: mi }));
+            }
+        }
+    }
+    if let Some(tx) = feed {
+        let _ = tx.send((shard, ShardMsg::Done));
     }
 
     metrics.inc("joins", joins);
@@ -729,6 +948,54 @@ mod tests {
             .filter(|(_, e)| matches!(e, LearnerEvent::Joined { .. } | LearnerEvent::Departed { .. }))
             .count();
         assert_eq!(churn_events, 3);
+    }
+
+    #[test]
+    fn shard_panic_propagates_as_an_error_naming_the_shard() {
+        let cfg = ClusterConfig {
+            cycles: 2,
+            inject_panic_shard: Some(1),
+            ..ClusterConfig::default()
+        };
+        let err = cluster(3, 4, cfg).run().unwrap_err();
+        let msg = format!("{err}");
+        assert!(msg.contains("shard 1") && msg.contains("panicked"), "{msg}");
+    }
+
+    #[test]
+    fn live_streaming_matches_replay_on_the_delegation_path() {
+        // churn-free sync shards take the orchestrator delegation path;
+        // a tiny plane capacity forces real backpressure stalls
+        let mut spec = ClusterSpec::uniform("pedestrian", 2, 3).unwrap();
+        for s in &mut spec.shards {
+            s.cloudlet.model = s.cloudlet.model.with_hidden(&[8]);
+            s.cloudlet.dataset.total_samples = 96;
+        }
+        let c = Cluster::new(
+            spec,
+            ClusterConfig { cycles: 2, t_total: 2.0, seed: 11, ..ClusterConfig::default() },
+        );
+        let ps_cfg = || ParamServerConfig {
+            lr: 0.05,
+            seed: 11,
+            eval_samples: 32,
+            ..ParamServerConfig::default()
+        };
+        let (_, oracle) = c.run_global(ps_cfg()).expect("replay oracle");
+        let live_opts = LiveOptions { plane_capacity: 2, ..LiveOptions::default() };
+        let (_, live) = c.run_live(ps_cfg(), &live_opts).expect("live run");
+        assert_eq!(live.applies, oracle.applies);
+        assert_eq!(live.updates_replayed, oracle.updates_replayed);
+        assert_eq!(live.final_loss.to_bits(), oracle.final_loss.to_bits());
+        for (ta, tb) in oracle.params.tensors.iter().zip(&live.params.tensors) {
+            for (x, y) in ta.as_f32().iter().zip(tb.as_f32()) {
+                assert_eq!(x.to_bits(), y.to_bits(), "live ≠ replay parameters");
+            }
+        }
+        for (a, b) in oracle.loss_series.iter().zip(&live.loss_series) {
+            assert_eq!(a.0.to_bits(), b.0.to_bits());
+            assert_eq!(a.1.to_bits(), b.1.to_bits());
+        }
     }
 
     #[test]

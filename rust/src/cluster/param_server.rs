@@ -46,7 +46,7 @@
 //! the 1-shard replay reproduce [`crate::coordinator::Trainer`]'s
 //! parameters bit-for-bit.
 
-use std::collections::{BTreeMap, HashMap};
+use std::collections::{BTreeMap, BTreeSet, HashMap};
 use std::sync::Arc;
 
 use crate::backend::Call;
@@ -130,6 +130,7 @@ impl ParamServerConfig {
             aggregation: self.aggregation,
             round_period_s: self.round_period_s,
             staleness_discount: self.staleness_discount,
+            ..GlobalAggSpec::default()
         }
     }
 }
@@ -282,34 +283,128 @@ impl ParamServer {
     /// [`super::ClusterReport::updates`]) against the global model.
     /// Input order does not matter — the replay canonicalizes internally
     /// — so the result is invariant under shard merge order.
+    ///
+    /// This is the deterministic **oracle**: it is nothing but
+    /// [`Self::begin`] + [`Self::ingest`]-everything + [`Self::finish`],
+    /// the exact engine the live streaming plane ([`super::live`])
+    /// drives incrementally — which is what makes live mode bit-for-bit
+    /// equivalent by construction.
     pub fn replay(&mut self, updates: &[(usize, UpdateRecord)]) -> anyhow::Result<GlobalReport> {
+        // validate the whole stream up front: replay callers get every
+        // malformed-record error before any gradient work happens
         for (shard, u) in updates {
-            anyhow::ensure!(*shard < self.shards.len(), "update references shard {shard}");
+            self.validate_record(*shard, u)?;
+        }
+        let mut la = self.begin();
+        for (shard, u) in updates {
+            self.ingest(&mut la, *shard, u)?;
+        }
+        self.finish(la)
+    }
+
+    /// Per-record validation shared by [`Self::replay`]'s upfront sweep
+    /// and [`Self::ingest`]'s streaming path.
+    fn validate_record(&self, shard: usize, u: &UpdateRecord) -> anyhow::Result<()> {
+        anyhow::ensure!(shard < self.shards.len(), "update references shard {shard}");
+        anyhow::ensure!(
+            u.learner < self.shards[shard].k,
+            "shard {shard} update references learner {} of a {}-learner cloudlet",
+            u.learner,
+            self.shards[shard].k
+        );
+        // strictly increasing round-trip times: a zero-duration
+        // trip is physically meaningless and would invert the
+        // apply-before-dispatch tie-break of the cohort event walk
+        anyhow::ensure!(
+            u.dispatched_at.is_finite()
+                && u.uploaded_at.is_finite()
+                && u.dispatched_at >= 0.0
+                && u.uploaded_at > u.dispatched_at,
+            "shard {shard} learner {} has a malformed time pair ({} → {})",
+            u.learner,
+            u.dispatched_at,
+            u.uploaded_at
+        );
+        Ok(())
+    }
+
+    /// Open an incremental application stream. Drive it with
+    /// [`Self::ingest`] as records arrive, [`Self::flush`] as the safe
+    /// simulated-time cut advances, and [`Self::finish`] at end of
+    /// stream.
+    pub fn begin(&self) -> LiveApply {
+        let state = match self.cfg.aggregation {
+            AggregationMode::PerUpdate => ApplyState::PerUpdate {
+                cohorts: BTreeMap::new(),
+                events: BTreeSet::new(),
+                open: HashMap::new(),
+            },
+            AggregationMode::Rounds => ApplyState::Rounds { pending: BTreeMap::new() },
+        };
+        LiveApply { state, acc: ReplayAcc::default(), cut_bits: 0 }
+    }
+
+    /// Buffer one record into the stream. Pure bookkeeping — grouping,
+    /// ordering, validation — never gradient work, so ingest order
+    /// cannot affect numerics.
+    pub fn ingest(
+        &mut self,
+        la: &mut LiveApply,
+        shard: usize,
+        u: &UpdateRecord,
+    ) -> anyhow::Result<()> {
+        self.validate_record(shard, u)?;
+        match &mut la.state {
+            ApplyState::PerUpdate { cohorts, events, open: _ } => {
+                let disp = time_bits(u.dispatched_at);
+                let ub = time_bits(u.uploaded_at);
+                let key = (shard, disp);
+                let members = cohorts.entry(key).or_default();
+                if members.is_empty() {
+                    events.insert((disp, 1, shard, disp));
+                    events.insert((ub, 0, shard, disp));
+                    members.push(u.clone());
+                } else {
+                    anyhow::ensure!(
+                        members.iter().all(|m| m.learner != u.learner),
+                        "shard {shard} has two in-flight leases for learner {} at t={}",
+                        u.learner,
+                        f64::from_bits(disp)
+                    );
+                    let old_apply = members.iter().map(|m| time_bits(m.uploaded_at)).max().unwrap();
+                    // keep members learner-sorted: the cohort's batch
+                    // draws align to this order at dispatch time
+                    let pos = members.partition_point(|m| m.learner < u.learner);
+                    members.insert(pos, u.clone());
+                    if ub > old_apply {
+                        events.remove(&(old_apply, 0, shard, disp));
+                        events.insert((ub, 0, shard, disp));
+                    }
+                }
+            }
+            ApplyState::Rounds { pending } => {
+                let period = self.cfg.round_period_s;
+                anyhow::ensure!(period > 0.0, "rounds aggregation needs a positive round_period_s");
+                let r = (u.uploaded_at / period).floor() as u64;
+                pending.entry(r).or_default().push((shard, u.clone()));
+            }
+        }
+        Ok(())
+    }
+
+    /// Finish the stream: apply everything still buffered (the cut goes
+    /// to `+∞`), evaluate the final parameters, and report.
+    pub fn finish(&mut self, mut la: LiveApply) -> anyhow::Result<GlobalReport> {
+        self.flush(&mut la, f64::INFINITY)?;
+        if let ApplyState::PerUpdate { events, open, .. } = &la.state {
             anyhow::ensure!(
-                u.learner < self.shards[*shard].k,
-                "shard {shard} update references learner {} of a {}-learner cloudlet",
-                u.learner,
-                self.shards[*shard].k
-            );
-            // strictly increasing round-trip times: a zero-duration
-            // trip is physically meaningless and would invert the
-            // apply-before-dispatch tie-break of the cohort event walk
-            anyhow::ensure!(
-                u.dispatched_at.is_finite()
-                    && u.uploaded_at.is_finite()
-                    && u.dispatched_at >= 0.0
-                    && u.uploaded_at > u.dispatched_at,
-                "shard {shard} learner {} has a malformed time pair ({} → {})",
-                u.learner,
-                u.dispatched_at,
-                u.uploaded_at
+                events.is_empty() && open.is_empty(),
+                "per-update stream left {} event(s) and {} open cohort(s) unapplied",
+                events.len(),
+                open.len()
             );
         }
-        let mut acc = ReplayAcc::default();
-        match self.cfg.aggregation {
-            AggregationMode::PerUpdate => self.replay_per_update(updates, &mut acc)?,
-            AggregationMode::Rounds => self.replay_rounds(updates, &mut acc)?,
-        }
+        let acc = la.acc;
         let (final_loss, final_accuracy) = self.eval_point()?;
         self.metrics.inc("global_applies", acc.applies);
         self.metrics.inc("global_updates_replayed", acc.replayed);
@@ -325,47 +420,43 @@ impl ParamServer {
         })
     }
 
-    /// Per-update mode: dispatch cohorts keyed by `(shard,
-    /// dispatched_at)`, applied at their last member's upload. The
-    /// event walk interleaves cohort dispatches (batch draws + global
-    /// snapshots) and applications in simulated-time order, applying
-    /// before dispatching at equal instants — the order the cluster's
-    /// event loop enacted them in.
-    fn replay_per_update(
-        &mut self,
-        updates: &[(usize, UpdateRecord)],
-        acc: &mut ReplayAcc,
-    ) -> anyhow::Result<()> {
+    /// Apply every buffered event strictly older than `floor`
+    /// (simulated seconds) — the safe cut. The cut is monotone: flushes
+    /// with an older floor than already reached are no-ops.
+    ///
+    /// Per-update mode walks dispatch cohorts keyed by `(shard,
+    /// dispatched_at)` in simulated-time order — cohort dispatches
+    /// (batch draws + global snapshots) interleaved with applications
+    /// at their last member's upload, applying before dispatching at
+    /// equal instants — the order the cluster's event loop enacted them
+    /// in. Rounds mode applies every round whose window closed before
+    /// the cut. Because processing order is a pure function of the
+    /// buffered records and the cut only ever *delays* processing, any
+    /// flush schedule (one big flush ≡ replay, or the live plane's
+    /// watermark-driven increments) yields bit-identical results.
+    pub fn flush(&mut self, la: &mut LiveApply, floor: f64) -> anyhow::Result<()> {
+        let LiveApply { state, acc, cut_bits } = la;
+        *cut_bits = (*cut_bits).max(time_bits(floor));
+        let cut = *cut_bits;
+        // replay times are absolute cluster-sim times; scoped so a
+        // traced cycle-local run on this thread afterwards keeps its
+        // own rebase (the ISSUE 9 trace-clock-leak fix)
+        let _off = crate::trace::sim_offset_guard(0.0);
+
+        let ApplyState::PerUpdate { cohorts, events, open } = state else {
+            return self.flush_rounds(state, acc, cut);
+        };
+        match events.iter().next() {
+            Some(&(t, ..)) if t < cut => {}
+            _ => return Ok(()),
+        }
         let man = self.engine.manifest().cloned();
         let handle = self.engine.handle();
-        // replay times are absolute cluster-sim times
-        crate::trace::set_sim_offset(0.0);
-
-        let mut cohorts: BTreeMap<(usize, u64), Vec<UpdateRecord>> = BTreeMap::new();
-        for (shard, u) in updates {
-            cohorts.entry((*shard, time_bits(u.dispatched_at))).or_default().push(u.clone());
-        }
-        // events: (time bits, kind, shard, dispatch bits); applications
-        // (kind 0) precede dispatches (kind 1) at equal times
-        let mut events: Vec<(u64, u8, usize, u64)> = Vec::with_capacity(2 * cohorts.len());
-        for ((shard, disp), members) in cohorts.iter_mut() {
-            members.sort_by_key(|u| u.learner);
-            anyhow::ensure!(
-                members.windows(2).all(|w| w[0].learner != w[1].learner),
-                "shard {shard} has two in-flight leases for learner {} at t={}",
-                members[0].learner,
-                f64::from_bits(*disp)
-            );
-            let apply_at = members.iter().map(|u| time_bits(u.uploaded_at)).max().unwrap();
-            events.push((*disp, 1, *shard, *disp));
-            events.push((apply_at, 0, *shard, *disp));
-        }
-        events.sort_unstable();
-
-        // open cohorts: the global snapshot at dispatch + the drawn
-        // per-member batch index sets
-        let mut open: HashMap<(usize, u64), (ParamSet, Vec<Vec<usize>>)> = HashMap::new();
-        for (t_bits, kind, shard, disp) in events {
+        while let Some(&(t_bits, kind, shard, disp)) = events.iter().next() {
+            if t_bits >= cut {
+                break;
+            }
+            events.remove(&(t_bits, kind, shard, disp));
             let key = (shard, disp);
             if kind == 1 {
                 // dispatch: draw the cohort's batches from the shard's
@@ -387,7 +478,12 @@ impl ParamServer {
                 open.insert(key, (self.global.clone(), idx));
             } else {
                 let members = &cohorts[&key];
-                let (snapshot, idx) = open.remove(&key).expect("dispatch precedes apply");
+                let (snapshot, idx) = open.remove(&key).ok_or_else(|| {
+                    anyhow::anyhow!(
+                        "shard {shard} cohort at t={} applied before its dispatch was processed",
+                        f64::from_bits(disp)
+                    )
+                })?;
                 let train_span = crate::trace::wall_span(
                     "ps",
                     "cohort_train",
@@ -455,33 +551,36 @@ impl ParamServer {
         Ok(())
     }
 
-    /// Rounds mode: barriered global rounds every `round_period_s`
-    /// simulated seconds. Every update uploaded inside a window trains
-    /// from the round-start snapshot; the round merges FedAvg-style by
-    /// staleness-discounted batch share, against the cluster's total
-    /// data share. Per-round processing order is canonical `(shard,
-    /// learner, upload, dispatch)`, so shard merge order cannot change
-    /// the result.
-    fn replay_rounds(
+    /// Rounds-mode arm of [`Self::flush`]: apply every buffered round
+    /// whose window closed strictly inside the cut. Every update
+    /// uploaded inside a window trains from the round-start snapshot;
+    /// the round merges FedAvg-style by staleness-discounted batch
+    /// share, against the cluster's total data share. Per-round
+    /// processing order is canonical `(shard, learner, upload,
+    /// dispatch)`, so shard merge order cannot change the result.
+    fn flush_rounds(
         &mut self,
-        updates: &[(usize, UpdateRecord)],
+        state: &mut ApplyState,
         acc: &mut ReplayAcc,
+        cut: u64,
     ) -> anyhow::Result<()> {
+        let ApplyState::Rounds { pending } = state else {
+            unreachable!("flush_rounds called on a per-update stream");
+        };
         let period = self.cfg.round_period_s;
         anyhow::ensure!(period > 0.0, "rounds aggregation needs a positive round_period_s");
         let man = self.engine.manifest().cloned();
         let handle = self.engine.handle();
-        // replay times are absolute cluster-sim times
-        crate::trace::set_sim_offset(0.0);
 
-        let mut rounds: BTreeMap<u64, Vec<(usize, UpdateRecord)>> = BTreeMap::new();
-        for (shard, u) in updates {
-            rounds.entry((u.uploaded_at / period).floor() as u64).or_default().push((
-                *shard,
-                u.clone(),
-            ));
-        }
-        for (r, mut recs) in rounds {
+        loop {
+            let Some((&r, _)) = pending.iter().next() else { break };
+            // a round is final once no upload inside its window can
+            // still arrive: every member upload u has time_bits(u) <
+            // time_bits((r+1)·period), so the window end must be ≤ cut
+            if time_bits((r + 1) as f64 * period) > cut {
+                break;
+            }
+            let mut recs = pending.remove(&r).expect("peeked key");
             recs.sort_by_key(|(s, u)| {
                 (*s, u.learner, time_bits(u.uploaded_at), time_bits(u.dispatched_at))
             });
@@ -569,6 +668,49 @@ impl ParamServer {
     }
 }
 
+/// In-flight state of one incremental application stream — the handle
+/// [`ParamServer::begin`] returns and `ingest`/`flush`/`finish` drive.
+/// Everything the stream has buffered but not yet applied lives here,
+/// *not* in the server, so a replay and a live run share one engine.
+pub struct LiveApply {
+    state: ApplyState,
+    acc: ReplayAcc,
+    /// Monotone safe cut: `time_bits` of the highest flushed floor.
+    /// Events strictly below it have been applied.
+    cut_bits: u64,
+}
+
+impl LiveApply {
+    /// Aggregation events (cohorts or rounds) applied so far.
+    pub fn applies(&self) -> u64 {
+        self.acc.applies
+    }
+
+    /// Updates whose gradients have entered the global model so far.
+    pub fn replayed(&self) -> u64 {
+        self.acc.replayed
+    }
+}
+
+enum ApplyState {
+    PerUpdate {
+        /// Cohort membership: `(shard, dispatch_bits)` → learner-sorted
+        /// member records.
+        cohorts: BTreeMap<(usize, u64), Vec<UpdateRecord>>,
+        /// Pending walk events `(t_bits, kind, shard, dispatch_bits)`
+        /// with `kind` 0 = apply, 1 = dispatch — the tuple `Ord` is the
+        /// walk order (apply before dispatch at equal instants).
+        events: BTreeSet<(u64, u8, usize, u64)>,
+        /// Dispatched-but-unapplied cohorts: the global snapshot they
+        /// trained from plus their drawn batch index sets.
+        open: HashMap<(usize, u64), (ParamSet, Vec<Vec<usize>>)>,
+    },
+    Rounds {
+        /// Round index → buffered `(shard, record)` members.
+        pending: BTreeMap<u64, Vec<(usize, UpdateRecord)>>,
+    },
+}
+
 #[derive(Default)]
 struct ReplayAcc {
     applies: u64,
@@ -576,6 +718,137 @@ struct ReplayAcc {
     loss_series: Vec<(f64, f64)>,
     acc_series: Vec<(f64, f64)>,
     rounds: Vec<RoundStat>,
+}
+
+/// Everything a crashed live run needs beyond the update journal to
+/// resume bit-for-bit: the applied-prefix cut, the accumulator, the
+/// global parameters, every shard's batch-draw RNG, and the
+/// dispatched-but-unapplied cohorts (their snapshots and batch draws
+/// happened *before* the cut, so they cannot be re-derived from the
+/// journal suffix alone). Serialized by [`super::live`].
+pub(crate) struct ServerCheckpoint {
+    pub(crate) cut_bits: u64,
+    pub(crate) applies: u64,
+    pub(crate) replayed: u64,
+    pub(crate) loss_series: Vec<(f64, f64)>,
+    pub(crate) acc_series: Vec<(f64, f64)>,
+    pub(crate) rounds: Vec<RoundStat>,
+    pub(crate) global: ParamSet,
+    /// Per-shard `Pcg64` raw `(state, inc)` pairs.
+    pub(crate) rngs: Vec<(u128, u128)>,
+    /// Open cohorts, sorted by `(shard, disp_bits)` for a canonical
+    /// (diffable, bit-stable) serialized form.
+    pub(crate) open: Vec<OpenCohort>,
+}
+
+pub(crate) struct OpenCohort {
+    pub(crate) shard: usize,
+    pub(crate) disp_bits: u64,
+    pub(crate) snapshot: ParamSet,
+    pub(crate) idx: Vec<Vec<usize>>,
+}
+
+impl ParamServer {
+    /// Snapshot the stream + server state for crash recovery.
+    pub(crate) fn capture_checkpoint(&self, la: &LiveApply) -> ServerCheckpoint {
+        let mut open: Vec<OpenCohort> = match &la.state {
+            ApplyState::PerUpdate { open, .. } => open
+                .iter()
+                .map(|(&(shard, disp_bits), (snapshot, idx))| OpenCohort {
+                    shard,
+                    disp_bits,
+                    snapshot: snapshot.clone(),
+                    idx: idx.clone(),
+                })
+                .collect(),
+            ApplyState::Rounds { .. } => Vec::new(),
+        };
+        // HashMap iteration order is nondeterministic — canonicalize
+        open.sort_by_key(|o| (o.shard, o.disp_bits));
+        ServerCheckpoint {
+            cut_bits: la.cut_bits,
+            applies: la.acc.applies,
+            replayed: la.acc.replayed,
+            loss_series: la.acc.loss_series.clone(),
+            acc_series: la.acc.acc_series.clone(),
+            rounds: la.acc.rounds.clone(),
+            global: self.global.clone(),
+            rngs: self.shards.iter().map(|s| s.rng.to_raw()).collect(),
+            open,
+        }
+    }
+
+    /// Restore a checkpoint into a stream that has re-ingested the
+    /// **full** journal: prunes everything the pre-crash run already
+    /// applied (events strictly below the cut / rounds whose window
+    /// closed inside it), re-opens the checkpointed in-flight cohorts,
+    /// and restores the accumulator, global parameters and shard RNGs.
+    pub(crate) fn restore_checkpoint(
+        &mut self,
+        la: &mut LiveApply,
+        ck: &ServerCheckpoint,
+    ) -> anyhow::Result<()> {
+        anyhow::ensure!(
+            ck.rngs.len() == self.shards.len(),
+            "checkpoint carries {} shard RNG(s) for a {}-shard server",
+            ck.rngs.len(),
+            self.shards.len()
+        );
+        match &mut la.state {
+            ApplyState::PerUpdate { cohorts, events, open } => {
+                // drop every event the pre-crash run already consumed
+                *events = events.split_off(&(ck.cut_bits, 0, 0, 0));
+                for o in &ck.open {
+                    let key = (o.shard, o.disp_bits);
+                    let members = cohorts.get(&key).ok_or_else(|| {
+                        anyhow::anyhow!(
+                            "checkpoint re-opens a cohort (shard {}, t={}) \
+                             the journal never dispatched",
+                            o.shard,
+                            f64::from_bits(o.disp_bits)
+                        )
+                    })?;
+                    anyhow::ensure!(
+                        members.len() == o.idx.len(),
+                        "open cohort (shard {}, t={}) checkpointed {} draw(s) \
+                         but the journal holds {} member(s)",
+                        o.shard,
+                        f64::from_bits(o.disp_bits),
+                        o.idx.len(),
+                        members.len()
+                    );
+                    open.insert(key, (o.snapshot.clone(), o.idx.clone()));
+                }
+            }
+            ApplyState::Rounds { pending } => {
+                anyhow::ensure!(
+                    ck.open.is_empty(),
+                    "rounds-mode checkpoint must not carry open cohorts"
+                );
+                let period = self.cfg.round_period_s;
+                pending.retain(|&r, _| time_bits((r + 1) as f64 * period) > ck.cut_bits);
+            }
+        }
+        la.cut_bits = ck.cut_bits;
+        la.acc.applies = ck.applies;
+        la.acc.replayed = ck.replayed;
+        la.acc.loss_series = ck.loss_series.clone();
+        la.acc.acc_series = ck.acc_series.clone();
+        la.acc.rounds = ck.rounds.clone();
+        // the metrics registry of a resumed server must look like one
+        // continuous run's
+        for (t, v) in &ck.loss_series {
+            self.metrics.record("global_loss_vs_simtime", *t, *v);
+        }
+        for (t, v) in &ck.acc_series {
+            self.metrics.record("global_acc_vs_simtime", *t, *v);
+        }
+        self.global = ck.global.clone();
+        for (st, &(state, inc)) in self.shards.iter_mut().zip(&ck.rngs) {
+            st.rng = Pcg64::from_raw(state, inc);
+        }
+        Ok(())
+    }
 }
 
 /// Mix a cohort of weighted local models into the global parameters.
@@ -753,6 +1026,7 @@ mod tests {
             aggregation: AggregationMode::Rounds,
             round_period_s: 12.0,
             staleness_discount: 0.5,
+            ..GlobalAggSpec::default()
         };
         let cfg = ParamServerConfig::from_spec(&g, 77);
         assert_eq!(cfg.aggregation, AggregationMode::Rounds);

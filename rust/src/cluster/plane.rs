@@ -1,0 +1,263 @@
+//! In-process message plane for the live parameter-server tier: a
+//! zero-dependency **bounded MPSC channel** with *blocking*
+//! backpressure. Shard event loops stall in [`Sender::send`] when the
+//! server falls behind instead of buffering unboundedly — the
+//! production shape the ROADMAP's live-plane item asks for.
+//!
+//! Semantics:
+//!
+//! * `bounded(cap)` returns one `(Sender, Receiver)` pair; senders are
+//!   `Clone` (one per shard thread).
+//! * `send` blocks while the queue holds `cap` messages. Each stall is
+//!   recorded as a `backpressure_stall` wall span on the sending
+//!   shard's trace track, so Perfetto shows exactly where producers
+//!   waited on the server.
+//! * `recv` blocks until a message arrives; it returns `None` once the
+//!   queue is empty **and** every sender has been dropped (clean
+//!   end-of-stream).
+//! * Dropping the receiver makes every subsequent/blocked `send` return
+//!   `Err(Disconnected)` — a dying server releases its producers
+//!   instead of deadlocking them.
+//!
+//! None of this participates in simulation numerics: the channel
+//! carries already-computed [`crate::orchestrator::UpdateRecord`]s and
+//! watermarks, so host scheduling can reorder *wall-clock* interleaving
+//! freely while the server's simulated-time cut (see
+//! [`super::live`]) keeps the applied stream deterministic.
+
+use std::sync::{Arc, Condvar, Mutex};
+
+use crate::orchestrator::UpdateRecord;
+
+/// Messages a shard streams to the live parameter server.
+#[derive(Debug, Clone)]
+pub enum ShardMsg {
+    /// One completed learner round trip, plus the shard's in-flight
+    /// floor: the minimum `dispatched_at` over leases still in flight
+    /// when the record was emitted (`+∞` when none are). The server may
+    /// safely apply any cohort strictly older than the minimum floor
+    /// across shards.
+    Update { rec: UpdateRecord, min_inflight: f64 },
+    /// Clock/floor advance without a completed record (the shard's
+    /// event loop moved past `clock` simulated seconds).
+    Advance { clock: f64, min_inflight: f64 },
+    /// The shard finished: its floor becomes `+∞`.
+    Done,
+}
+
+/// The send half has been dropped on the floor by a dead receiver.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Disconnected;
+
+impl std::fmt::Display for Disconnected {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "live plane receiver disconnected")
+    }
+}
+
+impl std::error::Error for Disconnected {}
+
+struct Inner<T> {
+    queue: std::collections::VecDeque<T>,
+    senders: usize,
+    rx_alive: bool,
+}
+
+struct Shared<T> {
+    inner: Mutex<Inner<T>>,
+    not_full: Condvar,
+    not_empty: Condvar,
+    cap: usize,
+}
+
+/// Producer half (one per shard thread). Cloning registers another
+/// producer; the receiver sees end-of-stream when all clones drop.
+pub struct Sender<T> {
+    shared: Arc<Shared<T>>,
+}
+
+/// Consumer half (the serving loop owns it exclusively).
+pub struct Receiver<T> {
+    shared: Arc<Shared<T>>,
+}
+
+/// Build a bounded channel holding at most `cap` in-flight messages.
+pub fn bounded<T>(cap: usize) -> (Sender<T>, Receiver<T>) {
+    assert!(cap > 0, "plane capacity must be positive");
+    let shared = Arc::new(Shared {
+        inner: Mutex::new(Inner {
+            queue: std::collections::VecDeque::with_capacity(cap),
+            senders: 1,
+            rx_alive: true,
+        }),
+        not_full: Condvar::new(),
+        not_empty: Condvar::new(),
+        cap,
+    });
+    (Sender { shared: Arc::clone(&shared) }, Receiver { shared })
+}
+
+impl<T> Sender<T> {
+    /// Blocking send: stalls while the queue is full (recording a
+    /// `backpressure_stall` wall span for the stall's duration), errors
+    /// once the receiver is gone.
+    pub fn send(&self, msg: T) -> Result<(), Disconnected> {
+        let mut g = self.shared.inner.lock().unwrap_or_else(|e| e.into_inner());
+        if g.queue.len() >= self.shared.cap && g.rx_alive {
+            let stall = crate::trace::wall_span(
+                "plane",
+                "backpressure_stall",
+                crate::trace::current_shard(),
+                0,
+                &[("depth", g.queue.len() as f64)],
+            );
+            while g.queue.len() >= self.shared.cap && g.rx_alive {
+                g = self.shared.not_full.wait(g).unwrap_or_else(|e| e.into_inner());
+            }
+            drop(stall);
+        }
+        if !g.rx_alive {
+            return Err(Disconnected);
+        }
+        g.queue.push_back(msg);
+        drop(g);
+        self.shared.not_empty.notify_one();
+        Ok(())
+    }
+}
+
+impl<T> Clone for Sender<T> {
+    fn clone(&self) -> Self {
+        self.shared.inner.lock().unwrap_or_else(|e| e.into_inner()).senders += 1;
+        Self { shared: Arc::clone(&self.shared) }
+    }
+}
+
+impl<T> Drop for Sender<T> {
+    fn drop(&mut self) {
+        let mut g = self.shared.inner.lock().unwrap_or_else(|e| e.into_inner());
+        g.senders -= 1;
+        let last = g.senders == 0;
+        drop(g);
+        if last {
+            // wake a receiver blocked on an empty queue: end-of-stream
+            self.shared.not_empty.notify_all();
+        }
+    }
+}
+
+impl<T> Receiver<T> {
+    /// Blocking receive; `None` = queue drained and every sender gone.
+    pub fn recv(&self) -> Option<T> {
+        let mut g = self.shared.inner.lock().unwrap_or_else(|e| e.into_inner());
+        loop {
+            if let Some(msg) = g.queue.pop_front() {
+                drop(g);
+                self.shared.not_full.notify_one();
+                return Some(msg);
+            }
+            if g.senders == 0 {
+                return None;
+            }
+            g = self.shared.not_empty.wait(g).unwrap_or_else(|e| e.into_inner());
+        }
+    }
+
+    /// Messages currently queued (a point-in-time gauge).
+    pub fn depth(&self) -> usize {
+        self.shared.inner.lock().unwrap_or_else(|e| e.into_inner()).queue.len()
+    }
+}
+
+impl<T> Drop for Receiver<T> {
+    fn drop(&mut self) {
+        let mut g = self.shared.inner.lock().unwrap_or_else(|e| e.into_inner());
+        g.rx_alive = false;
+        g.queue.clear();
+        drop(g);
+        // release every producer blocked on a full queue
+        self.shared.not_full.notify_all();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::thread;
+    use std::time::Duration;
+
+    #[test]
+    fn fifo_within_one_sender() {
+        let (tx, rx) = bounded(8);
+        for i in 0..5 {
+            tx.send(i).unwrap();
+        }
+        drop(tx);
+        let got: Vec<i32> = std::iter::from_fn(|| rx.recv()).collect();
+        assert_eq!(got, vec![0, 1, 2, 3, 4]);
+    }
+
+    #[test]
+    fn recv_returns_none_after_all_senders_drop() {
+        let (tx, rx) = bounded::<u32>(2);
+        let tx2 = tx.clone();
+        drop(tx);
+        tx2.send(7).unwrap();
+        drop(tx2);
+        assert_eq!(rx.recv(), Some(7));
+        assert_eq!(rx.recv(), None);
+        assert_eq!(rx.recv(), None);
+    }
+
+    #[test]
+    fn bounded_send_blocks_until_recv_frees_a_slot() {
+        let (tx, rx) = bounded(1);
+        tx.send(1u32).unwrap();
+        let h = thread::spawn(move || {
+            // this must block until the main thread drains a slot
+            tx.send(2).unwrap();
+        });
+        thread::sleep(Duration::from_millis(20));
+        assert_eq!(rx.depth(), 1, "second send must be stalled, not queued");
+        assert_eq!(rx.recv(), Some(1));
+        h.join().unwrap();
+        assert_eq!(rx.recv(), Some(2));
+    }
+
+    #[test]
+    fn dropped_receiver_unblocks_and_errors_senders() {
+        let (tx, rx) = bounded(1);
+        tx.send(1u32).unwrap();
+        let h = thread::spawn(move || tx.send(2));
+        thread::sleep(Duration::from_millis(20));
+        drop(rx);
+        assert_eq!(h.join().unwrap(), Err(Disconnected));
+    }
+
+    #[test]
+    fn mpsc_delivers_every_message() {
+        let (tx, rx) = bounded(4);
+        let producers: Vec<_> = (0..4)
+            .map(|p| {
+                let tx = tx.clone();
+                thread::spawn(move || {
+                    for i in 0..50u64 {
+                        tx.send(p * 1000 + i).unwrap();
+                    }
+                })
+            })
+            .collect();
+        drop(tx);
+        let mut got = Vec::new();
+        while let Some(v) = rx.recv() {
+            got.push(v);
+        }
+        for h in producers {
+            h.join().unwrap();
+        }
+        assert_eq!(got.len(), 200);
+        got.sort_unstable();
+        got.dedup();
+        assert_eq!(got.len(), 200, "duplicated or lost messages");
+    }
+}

@@ -853,6 +853,7 @@ mod fig_global_tests {
                 aggregation: crate::scenario::AggregationMode::Rounds,
                 round_period_s: 2.0,
                 staleness_discount: 0.25,
+                ..crate::scenario::GlobalAggSpec::default()
             },
             ..tiny()
         };

@@ -9,6 +9,8 @@
 //! mel scenario --task mnist --k 10 [--seed N] [--describe]
 //! mel trace    --scenario pedestrian --k 5 --t 10 --cycles 3 [--mode sync|async] [--shards N]
 //!              [--churners N] --out results/trace [--format chrome|prom|csv|all]
+//!              [--live] [--journal DIR] [--checkpoint-every N] [--plane-capacity N]
+//! mel resume   --journal DIR
 //! mel info
 //! ```
 
@@ -57,6 +59,7 @@ fn main() {
         Some("sweep") => cmd_sweep(&args),
         Some("bench") => cmd_bench(&args),
         Some("trace") => cmd_trace(&args),
+        Some("resume") => cmd_resume(&args),
         Some("info") => cmd_info(),
         _ => {
             print_help();
@@ -108,7 +111,13 @@ fn print_help() {
             name: "trace",
             about: "run a traced cluster + ParamServer replay and export Perfetto/Prometheus/CSV",
             usage: "--scenario pedestrian --k 5 --t 10 --cycles 3 --mode async \
-                    --out results/trace --format all",
+                    --out results/trace --format all \
+                    --live --journal results/journal --checkpoint-every 8",
+        },
+        Command {
+            name: "resume",
+            about: "resume a killed --live run from its journal + last checkpoint, bit-for-bit",
+            usage: "--journal results/journal",
         },
         Command { name: "info", about: "build/runtime information", usage: "" },
     ];
@@ -316,6 +325,7 @@ fn cmd_figure(args: &Args) -> i32 {
                     aggregation,
                     round_period_s,
                     staleness_discount,
+                    ..mel::scenario::GlobalAggSpec::default()
                 };
                 if let Err(e) = gspec.validate() {
                     eprintln!("mel: usage error: {e}");
@@ -647,6 +657,42 @@ fn cmd_trace(args: &Args) -> i32 {
             return 2;
         }
     };
+    // live-plane knobs: `--live` as a bare flag or an explicit boolean
+    // value; the durability flags only make sense together with it
+    let live = match parse_live_flag(args) {
+        Ok(b) => b,
+        Err(e) => {
+            eprintln!("mel: usage error: {e}");
+            return 2;
+        }
+    };
+    let checkpoint_every = match args.try_get_u64("checkpoint-every") {
+        Ok(v) => v,
+        Err(e) => {
+            eprintln!("mel: usage error: {e}");
+            return 2;
+        }
+    };
+    let plane_capacity = match args.try_get_u64("plane-capacity") {
+        Ok(v) => v,
+        Err(e) => {
+            eprintln!("mel: usage error: {e}");
+            return 2;
+        }
+    };
+    let journal = match args.opt_str("journal") {
+        Some("") => {
+            eprintln!("mel: usage error: --journal expects a directory path, got \"\"");
+            return 2;
+        }
+        j => j.map(str::to_string),
+    };
+    if !live && (checkpoint_every.is_some() || plane_capacity.is_some() || journal.is_some()) {
+        eprintln!(
+            "mel: usage error: --journal/--checkpoint-every/--plane-capacity require --live"
+        );
+        return 2;
+    }
     let out = args.get_str("out", "results/trace");
     if let Err(e) = std::fs::create_dir_all(out) {
         eprintln!("mel: usage error: cannot create --out {out:?}: {e}");
@@ -687,6 +733,21 @@ fn cmd_trace(args: &Args) -> i32 {
     if churners > 0 {
         spec = spec.with_synthetic_churn(cycles as f64 * t_total, churners, seed);
     }
+    if live {
+        // lift the CLI knobs into the spec so validation, the run
+        // manifest and `mel resume` all see one source of truth
+        spec.global.live = true;
+        if let Some(n) = checkpoint_every {
+            spec.global.checkpoint_every = n;
+        }
+        if let Some(cap) = plane_capacity {
+            spec.global.plane_capacity = cap as usize;
+        }
+        if let Err(e) = spec.global.validate() {
+            eprintln!("mel: usage error: {e}");
+            return 2;
+        }
+    }
     let policy = match Policy::parse(args.get_str("policy", "analytical")) {
         Some(p) => p,
         None => {
@@ -712,11 +773,49 @@ fn cmd_trace(args: &Args) -> i32 {
 
     mel::trace::set_enabled(true);
     mel::trace::clear();
-    let (report, global) = match cluster.run_global(ps_cfg) {
-        Ok(r) => r,
-        Err(e) => {
-            eprintln!("trace run failed: {e}");
-            return 1;
+    let (report, global) = if live {
+        let mut live_opts = mel::cluster::LiveOptions::from_spec(&cluster.spec.global);
+        live_opts.journal_dir = journal.as_ref().map(std::path::PathBuf::from);
+        if let Some(dir) = &live_opts.journal_dir {
+            if let Err(e) = std::fs::create_dir_all(dir) {
+                eprintln!(
+                    "mel: usage error: cannot create --journal {:?}: {e}",
+                    dir.display()
+                );
+                return 2;
+            }
+            // the run manifest is what lets `mel resume` rebuild this
+            // exact cluster after a crash
+            let manifest = run_manifest_json(
+                &cluster.spec,
+                policy,
+                mode,
+                t_total,
+                cycles,
+                seed,
+                ps_cfg.lr,
+                ps_cfg.eval_samples,
+            );
+            let path = dir.join("run.json");
+            if let Err(e) = std::fs::write(&path, manifest.to_pretty()) {
+                eprintln!("writing {:?}: {e}", path.display());
+                return 1;
+            }
+        }
+        match cluster.run_live(ps_cfg, &live_opts) {
+            Ok(r) => r,
+            Err(e) => {
+                eprintln!("trace run failed: {e}");
+                return 1;
+            }
+        }
+    } else {
+        match cluster.run_global(ps_cfg) {
+            Ok(r) => r,
+            Err(e) => {
+                eprintln!("trace run failed: {e}");
+                return 1;
+            }
         }
     };
     let events = mel::trace::drain();
@@ -754,6 +853,158 @@ fn cmd_trace(args: &Args) -> i32 {
         code |= write("budget.csv", mel::trace::export::budget_csv(&events, t_total));
     }
     code
+}
+
+/// Parse `--live`: accepted as a bare flag or with an explicit boolean
+/// value (`--live true|false|1|0`); anything else is a usage error.
+fn parse_live_flag(args: &Args) -> Result<bool, String> {
+    if args.has_flag("live") {
+        return Ok(true);
+    }
+    match args.opt_str("live") {
+        None => Ok(false),
+        Some("true") | Some("1") => Ok(true),
+        Some("false") | Some("0") => Ok(false),
+        Some(other) => Err(format!("--live expects true/false/1/0, got {other:?}")),
+    }
+}
+
+/// The `run.json` manifest persisted next to a live journal: everything
+/// `mel resume` needs to rebuild the cluster bit-for-bit. The spec's
+/// `global` block carries the live/durability knobs, so they are not
+/// repeated here.
+#[allow(clippy::too_many_arguments)]
+fn run_manifest_json(
+    spec: &mel::scenario::ClusterSpec,
+    policy: Policy,
+    mode: mel::orchestrator::Mode,
+    t_total: f64,
+    cycles: usize,
+    seed: u64,
+    lr: f32,
+    eval_samples: usize,
+) -> Json {
+    Json::obj(vec![
+        ("format", Json::Num(1.0)),
+        ("spec", spec.to_json()),
+        (
+            "config",
+            Json::obj(vec![
+                ("policy", Json::Str(policy.label().into())),
+                (
+                    "mode",
+                    Json::Str(
+                        match mode {
+                            mel::orchestrator::Mode::Sync => "sync",
+                            mel::orchestrator::Mode::Async => "async",
+                        }
+                        .into(),
+                    ),
+                ),
+                ("t_total", Json::Num(t_total)),
+                ("cycles", Json::Num(cycles as f64)),
+                ("seed", Json::Num(seed as f64)),
+            ]),
+        ),
+        (
+            "server",
+            Json::obj(vec![
+                ("lr", Json::Num(lr as f64)),
+                ("eval_samples", Json::Num(eval_samples as f64)),
+            ]),
+        ),
+    ])
+}
+
+/// `mel resume --journal DIR` — reload the run manifest, re-run the
+/// deterministic timing simulation, skip the already-journaled prefix
+/// of every shard's stream, and continue serving from the last
+/// checkpoint. Bit-for-bit identical to the uninterrupted run.
+fn cmd_resume(args: &Args) -> i32 {
+    use mel::cluster::{Cluster, ClusterConfig, LiveOptions, ParamServerConfig};
+    use mel::orchestrator::Mode;
+    use mel::scenario::ClusterSpec;
+
+    let dir = match args.opt_str("journal").or_else(|| args.positional(1)) {
+        Some(d) if !d.is_empty() => d.to_string(),
+        _ => {
+            eprintln!("mel: usage error: mel resume needs --journal <dir>");
+            return 2;
+        }
+    };
+    let run_path = format!("{dir}/run.json");
+    let text = match std::fs::read_to_string(&run_path) {
+        Ok(t) => t,
+        Err(e) => {
+            eprintln!("mel: usage error: cannot read {run_path}: {e}");
+            return 2;
+        }
+    };
+    let parsed = (|| -> Result<(ClusterSpec, ClusterConfig, f32, usize), String> {
+        let v = Json::parse(&text).map_err(|e| e.to_string())?;
+        let fmt = v.get("format").and_then(|f| f.as_u64()).map_err(|e| e.to_string())?;
+        if fmt != 1 {
+            return Err(format!("unsupported run.json format {fmt}"));
+        }
+        let spec =
+            ClusterSpec::from_json(v.get("spec").map_err(|e| e.to_string())?)
+                .map_err(|e| e.to_string())?;
+        let c = v.get("config").map_err(|e| e.to_string())?;
+        let policy_s = c.get("policy").and_then(|p| p.as_str()).map_err(|e| e.to_string())?;
+        let policy =
+            Policy::parse(policy_s).ok_or_else(|| format!("unknown policy {policy_s:?}"))?;
+        let mode = match c.get("mode").and_then(|m| m.as_str()).map_err(|e| e.to_string())? {
+            "sync" => Mode::Sync,
+            "async" => Mode::Async,
+            other => return Err(format!("unknown mode {other:?}")),
+        };
+        let cfg = ClusterConfig {
+            policy,
+            mode,
+            t_total: c.get("t_total").and_then(|x| x.as_f64()).map_err(|e| e.to_string())?,
+            cycles: c.get("cycles").and_then(|x| x.as_usize()).map_err(|e| e.to_string())?,
+            seed: c.get("seed").and_then(|x| x.as_u64()).map_err(|e| e.to_string())?,
+            trace_spans: true,
+            ..ClusterConfig::default()
+        };
+        let s = v.get("server").map_err(|e| e.to_string())?;
+        let lr = s.get("lr").and_then(|x| x.as_f64()).map_err(|e| e.to_string())? as f32;
+        let eval = s.get("eval_samples").and_then(|x| x.as_usize()).map_err(|e| e.to_string())?;
+        Ok((spec, cfg, lr, eval))
+    })();
+    let (spec, cfg, lr, eval_samples) = match parsed {
+        Ok(p) => p,
+        Err(e) => {
+            eprintln!("resume: {run_path} is not a valid run manifest: {e}");
+            return 2;
+        }
+    };
+    let seed = cfg.seed;
+    let cluster = Cluster::new(spec, cfg);
+    let mut ps_cfg = ParamServerConfig::from_spec(&cluster.spec.global, seed);
+    ps_cfg.lr = lr;
+    ps_cfg.eval_samples = eval_samples;
+    let mut live_opts = LiveOptions::from_spec(&cluster.spec.global);
+    live_opts.journal_dir = Some(std::path::PathBuf::from(&dir));
+    live_opts.resume = true;
+    match cluster.run_live(ps_cfg, &live_opts) {
+        Ok((report, global)) => {
+            println!(
+                "resumed from {dir}: {} update(s), {} applied ({} replayed), \
+                 {} deadline miss(es), final acc {:.3}",
+                report.updates.len(),
+                global.applies,
+                global.updates_replayed,
+                report.deadline_misses,
+                global.final_accuracy,
+            );
+            0
+        }
+        Err(e) => {
+            eprintln!("resume failed: {e}");
+            1
+        }
+    }
 }
 
 // ---------------------------------------------------------------------

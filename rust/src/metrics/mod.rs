@@ -259,10 +259,17 @@ impl Metrics {
     }
 
     /// Install an externally built series (e.g. a cross-shard merge)
-    /// into this registry, appending after any existing points.
+    /// into this registry, sort-merging with any existing points so the
+    /// stored series stays time-ordered (and `series_last` keeps
+    /// returning the *final* point) no matter how many imports land or
+    /// how the input was ordered. NaN-safe: same `total_cmp` comparator
+    /// as [`merge_sorted`], so permuting imports cannot change the
+    /// stored series.
     pub fn import_series(&self, name: &str, pts: &[(f64, f64)]) {
         let mut g = self.inner.lock().unwrap();
-        g.series.entry(name.into()).or_default().extend_from_slice(pts);
+        let s = g.series.entry(name.into()).or_default();
+        s.extend_from_slice(pts);
+        s.sort_by(|a, b| a.0.total_cmp(&b.0).then(a.1.total_cmp(&b.1)));
     }
 
     /// Drop every counter, gauge, summary, and series. Aggregators that
@@ -540,6 +547,32 @@ mod tests {
         let m = Metrics::new();
         m.import_series("merged", &[(1.0, 2.0), (3.0, 4.0)]);
         assert_eq!(m.series("merged"), vec![(1.0, 2.0), (3.0, 4.0)]);
+    }
+
+    #[test]
+    fn import_series_sort_merges_repeated_and_unsorted_imports() {
+        // regression: a second import (or unsorted input) used to leave
+        // the stored series non-monotone, so series_last no longer
+        // returned the final point in time
+        let m = Metrics::new();
+        m.import_series("curve", &[(5.0, 50.0), (1.0, 10.0)]);
+        assert_eq!(m.series("curve"), vec![(1.0, 10.0), (5.0, 50.0)]);
+        m.import_series("curve", &[(3.0, 30.0)]);
+        assert_eq!(m.series("curve"), vec![(1.0, 10.0), (3.0, 30.0), (5.0, 50.0)]);
+        assert_eq!(m.series_last("curve"), Some((5.0, 50.0)));
+        // tied timestamps break on the value (merge_sorted comparator),
+        // so import order cannot change the stored series
+        let a = Metrics::new();
+        a.import_series("s", &[(2.0, 9.0)]);
+        a.import_series("s", &[(2.0, 1.0)]);
+        let b = Metrics::new();
+        b.import_series("s", &[(2.0, 1.0)]);
+        b.import_series("s", &[(2.0, 9.0)]);
+        assert_eq!(a.series("s"), b.series("s"));
+        // NaN timestamps sort to the end instead of panicking
+        let n = Metrics::new();
+        n.import_series("nan", &[(f64::NAN, 1.0), (1.0, 2.0)]);
+        assert!(n.series("nan").last().unwrap().0.is_nan());
     }
 
     #[test]

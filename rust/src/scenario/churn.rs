@@ -249,11 +249,30 @@ pub struct GlobalAggSpec {
     /// weight `(1 − discount)^s · d_k`. 0 disables discounting; 1 drops
     /// every stale update entirely.
     pub staleness_discount: f64,
+    /// Stream updates to the parameter server *during* the run over the
+    /// bounded message plane ([`crate::cluster::plane`]) instead of
+    /// replaying after the timing simulation. Bit-for-bit equivalent to
+    /// the replay oracle.
+    pub live: bool,
+    /// Bounded-channel capacity of the live plane (messages in flight
+    /// before producers stall). Must be in `[1, 1048576]`.
+    pub plane_capacity: usize,
+    /// Live mode: persist a full server checkpoint every N applies
+    /// (0 = only the final checkpoint). Only meaningful with a journal
+    /// directory.
+    pub checkpoint_every: u64,
 }
 
 impl Default for GlobalAggSpec {
     fn default() -> Self {
-        Self { aggregation: AggregationMode::PerUpdate, round_period_s: 0.0, staleness_discount: 0.0 }
+        Self {
+            aggregation: AggregationMode::PerUpdate,
+            round_period_s: 0.0,
+            staleness_discount: 0.0,
+            live: false,
+            plane_capacity: 256,
+            checkpoint_every: 0,
+        }
     }
 }
 
@@ -280,6 +299,12 @@ impl GlobalAggSpec {
                 self.round_period_s
             ));
         }
+        if !(1..=1_048_576).contains(&self.plane_capacity) {
+            return Err(format!(
+                "plane_capacity must be within [1, 1048576], got {}",
+                self.plane_capacity
+            ));
+        }
         Ok(())
     }
 
@@ -288,6 +313,9 @@ impl GlobalAggSpec {
             ("aggregation", Json::Str(self.aggregation.label().into())),
             ("round_period_s", Json::Num(self.round_period_s)),
             ("staleness_discount", Json::Num(self.staleness_discount)),
+            ("live", Json::Bool(self.live)),
+            ("plane_capacity", Json::Num(self.plane_capacity as f64)),
+            ("checkpoint_every", Json::Num(self.checkpoint_every as f64)),
         ])
     }
 
@@ -316,6 +344,17 @@ impl GlobalAggSpec {
                 .map(|x| x.as_f64())
                 .transpose()?
                 .unwrap_or(d.staleness_discount),
+            live: v.opt("live").map(|x| x.as_bool()).transpose()?.unwrap_or(d.live),
+            plane_capacity: v
+                .opt("plane_capacity")
+                .map(|x| x.as_usize())
+                .transpose()?
+                .unwrap_or(d.plane_capacity),
+            checkpoint_every: v
+                .opt("checkpoint_every")
+                .map(|x| x.as_u64())
+                .transpose()?
+                .unwrap_or(d.checkpoint_every),
         };
         spec.validate().map_err(JsonError::Access)?;
         Ok(spec)
@@ -461,6 +500,9 @@ mod tests {
             aggregation: AggregationMode::Rounds,
             round_period_s: 30.0,
             staleness_discount: 0.25,
+            live: true,
+            plane_capacity: 64,
+            checkpoint_every: 5,
         };
         let text = spec.to_json().to_pretty();
         let back = ClusterSpec::from_json(&Json::parse(&text).unwrap()).unwrap();
@@ -484,6 +526,16 @@ mod tests {
         assert!(GlobalAggSpec::from_json(&rounds_no_period).is_err());
         let neg_period = Json::obj(vec![("round_period_s", Json::Num(-3.0))]);
         assert!(GlobalAggSpec::from_json(&neg_period).is_err());
+        // live/durability knobs: load-time validated, default off
+        assert!(!back2.global.live);
+        assert_eq!(back2.global.plane_capacity, 256);
+        assert_eq!(back2.global.checkpoint_every, 0);
+        let zero_cap = Json::obj(vec![("plane_capacity", Json::Num(0.0))]);
+        assert!(GlobalAggSpec::from_json(&zero_cap).is_err());
+        let huge_cap = Json::obj(vec![("plane_capacity", Json::Num(2_000_000.0))]);
+        assert!(GlobalAggSpec::from_json(&huge_cap).is_err());
+        let bad_live = Json::obj(vec![("live", Json::Num(3.0))]);
+        assert!(GlobalAggSpec::from_json(&bad_live).is_err());
 
         assert_eq!(AggregationMode::parse("per_update"), Some(AggregationMode::PerUpdate));
         assert_eq!(AggregationMode::parse("rounds"), Some(AggregationMode::Rounds));

@@ -243,6 +243,34 @@ pub fn set_sim_offset(offset: f64) {
     SIM_OFFSET.with(|c| c.set(offset));
 }
 
+/// The current thread's sim-time rebase offset.
+pub fn sim_offset() -> f64 {
+    SIM_OFFSET.with(|c| c.get())
+}
+
+/// RAII scope for [`set_sim_offset`]: sets `offset` now and restores
+/// the previous value on drop. Long-lived absolute-time call sites
+/// (the parameter-server replay, the churn shards) use this instead of
+/// a bare `set_sim_offset(0.0)`, which would leak a rebased clock into
+/// whatever the thread traces next.
+#[must_use]
+pub fn sim_offset_guard(offset: f64) -> SimOffsetGuard {
+    let prev = sim_offset();
+    set_sim_offset(offset);
+    SimOffsetGuard { prev }
+}
+
+/// Guard returned by [`sim_offset_guard`]; restores the saved offset.
+pub struct SimOffsetGuard {
+    prev: f64,
+}
+
+impl Drop for SimOffsetGuard {
+    fn drop(&mut self) {
+        set_sim_offset(self.prev);
+    }
+}
+
 fn record(ev: TraceEvent) {
     LOCAL_RING.with(|slot| {
         let mut slot = slot.borrow_mut();
@@ -474,6 +502,33 @@ mod tests {
         let e = evs.iter().find(|e| e.name == "offset_lease").unwrap();
         assert!((e.sim_start - 103.0).abs() < 1e-12);
         assert!((e.sim_end() - 104.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn sim_offset_guard_restores_previous_offset() {
+        let _g = test_lock();
+        set_enabled(true);
+        set_sim_offset(100.0);
+        {
+            let _z = sim_offset_guard(0.0);
+            assert_eq!(sim_offset(), 0.0);
+            span("t", "guarded_abs", TEST_PID, 4, 7.0, 8.0, &[]);
+            {
+                // guards nest: inner scopes restore the outer offset
+                let _i = sim_offset_guard(1000.0);
+                assert_eq!(sim_offset(), 1000.0);
+            }
+            assert_eq!(sim_offset(), 0.0);
+        }
+        assert_eq!(sim_offset(), 100.0);
+        span("t", "guarded_rebased", TEST_PID, 4, 3.0, 4.0, &[]);
+        set_sim_offset(0.0);
+        let evs = mine(&drain());
+        set_enabled(false);
+        let abs = evs.iter().find(|e| e.name == "guarded_abs").unwrap();
+        assert!((abs.sim_start - 7.0).abs() < 1e-12);
+        let reb = evs.iter().find(|e| e.name == "guarded_rebased").unwrap();
+        assert!((reb.sim_start - 103.0).abs() < 1e-12, "offset leaked: {}", reb.sim_start);
     }
 
     #[test]

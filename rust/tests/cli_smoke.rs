@@ -26,7 +26,7 @@ fn mel_code(args: &[&str]) -> (String, String, Option<i32>) {
 fn help_lists_commands() {
     let (stdout, _, ok) = mel(&[]);
     assert!(ok);
-    for cmd in ["solve", "figure", "train", "scenario", "trace", "info"] {
+    for cmd in ["solve", "figure", "train", "scenario", "trace", "resume", "info"] {
         assert!(stdout.contains(cmd), "missing {cmd} in help:\n{stdout}");
     }
 }
@@ -429,6 +429,90 @@ fn trace_writes_parseable_artifacts() {
     );
     assert!(lines.count() >= 4, "expected one row per lease:\n{csv}");
     let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn trace_live_malformed_flags_are_usage_errors() {
+    // --live with a non-boolean value
+    let (_, stderr, code) = mel_code(&["trace", "--live", "xyz"]);
+    assert_eq!(code, Some(2), "stderr: {stderr}");
+    assert!(stderr.contains("--live expects true/false/1/0"), "{stderr}");
+    assert!(!stderr.contains("panicked"), "must not panic: {stderr}");
+    // malformed --checkpoint-every
+    let (_, stderr, code) = mel_code(&["trace", "--live", "--checkpoint-every", "notanint"]);
+    assert_eq!(code, Some(2), "stderr: {stderr}");
+    assert!(stderr.contains("--checkpoint-every expects an integer"), "{stderr}");
+    // malformed --plane-capacity
+    let (_, stderr, code) = mel_code(&["trace", "--live", "--plane-capacity", "lots"]);
+    assert_eq!(code, Some(2), "stderr: {stderr}");
+    assert!(stderr.contains("--plane-capacity expects an integer"), "{stderr}");
+    // a zero plane capacity fails spec validation before any work
+    let (_, stderr, code) = mel_code(&["trace", "--live", "--plane-capacity", "0"]);
+    assert_eq!(code, Some(2), "stderr: {stderr}");
+    assert!(stderr.contains("plane_capacity"), "{stderr}");
+    // an empty --journal value
+    let (_, stderr, code) = mel_code(&["trace", "--live", "--journal="]);
+    assert_eq!(code, Some(2), "stderr: {stderr}");
+    assert!(stderr.contains("--journal expects a directory path"), "{stderr}");
+    // durability knobs without --live are inconsistent usage
+    let (_, stderr, code) = mel_code(&["trace", "--journal", "somewhere"]);
+    assert_eq!(code, Some(2), "stderr: {stderr}");
+    assert!(
+        stderr.contains("--journal/--checkpoint-every/--plane-capacity require --live"),
+        "{stderr}"
+    );
+    // `mel resume` without a journal directory
+    let (_, stderr, code) = mel_code(&["resume"]);
+    assert_eq!(code, Some(2), "stderr: {stderr}");
+    assert!(stderr.contains("resume needs --journal"), "{stderr}");
+    // `mel resume` pointing at a directory with no run manifest
+    let dir = std::env::temp_dir().join(format!("mel-resume-empty-{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let (_, stderr, code) = mel_code(&["resume", "--journal", dir.to_str().unwrap()]);
+    assert_eq!(code, Some(2), "stderr: {stderr}");
+    assert!(stderr.contains("run.json"), "{stderr}");
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn trace_live_writes_journal_artifacts_and_resume_replays_them() {
+    let base = std::env::temp_dir().join(format!("mel-cli-live-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&base);
+    let out = base.join("out");
+    let journal = base.join("journal");
+    let (stdout, stderr, ok) = mel(&[
+        "trace", "--scenario", "pedestrian", "--k", "2", "--t", "2", "--cycles", "2", "--d",
+        "96", "--hidden", "8", "--eval-samples", "48", "--seed", "7", "--out",
+        out.to_str().unwrap(), "--live", "--journal", journal.to_str().unwrap(),
+        "--checkpoint-every", "1",
+    ]);
+    assert!(ok, "stderr: {stderr}");
+    assert!(stdout.contains("traced "), "{stdout}");
+
+    // durability artifacts: an append-only journal, the last
+    // checkpoint, and the run manifest `mel resume` rebuilds from
+    let journal_text =
+        std::fs::read_to_string(journal.join("journal.jsonl")).expect("journal file");
+    assert!(!journal_text.trim().is_empty(), "empty journal");
+    for line in journal_text.lines() {
+        let rec = mel::util::json::Json::parse(line).expect("journal line parses");
+        rec.get("shard").unwrap().as_u64().expect("shard field");
+        rec.get("learner").unwrap().as_u64().expect("learner field");
+    }
+    let ck = std::fs::read_to_string(journal.join("checkpoint.json")).expect("checkpoint");
+    let ck = mel::util::json::Json::parse(&ck).expect("checkpoint parses");
+    assert_eq!(ck.get("format").unwrap().as_u64().unwrap(), 1);
+    let manifest = std::fs::read_to_string(journal.join("run.json")).expect("run manifest");
+    let manifest = mel::util::json::Json::parse(&manifest).expect("run.json parses");
+    assert_eq!(manifest.get("format").unwrap().as_u64().unwrap(), 1);
+    assert!(manifest.get("spec").is_ok(), "manifest must embed the cluster spec");
+
+    // the journaled run resumes (here: a no-op tail after a completed
+    // stream) and reports the same update/apply accounting
+    let (stdout, stderr, code) = mel_code(&["resume", "--journal", journal.to_str().unwrap()]);
+    assert_eq!(code, Some(0), "stderr: {stderr}");
+    assert!(stdout.contains("resumed from"), "{stdout}");
+    let _ = std::fs::remove_dir_all(&base);
 }
 
 #[test]

@@ -172,6 +172,7 @@ fn churny_spec(shards: usize) -> ClusterSpec {
             aggregation: AggregationMode::Rounds,
             round_period_s: T,
             staleness_discount: 0.0,
+            ..GlobalAggSpec::default()
         },
     }
     .with_synthetic_churn(CYCLES as f64 * T, 1, SEED)

@@ -1,0 +1,236 @@
+//! Live-streaming parameter-server plane (ISSUE 9):
+//!
+//! 1. **Live ≡ replay** — `Cluster::run_live` (shards streaming
+//!    `UpdateRecord`s over the bounded plane, server applying cohorts
+//!    as the safe simulated-time cut advances) is bit-for-bit equal to
+//!    the `Cluster::run_global` replay oracle on a churning 2-shard
+//!    async cluster, in both rounds and per-update aggregation.
+//! 2. **Crash resume** — a run killed mid-stream (via the
+//!    `halt_after_applies` hook) leaves a journal + checkpoint from
+//!    which a resumed `run_live` reproduces the uninterrupted run's
+//!    final parameters and loss/accuracy series exactly.
+//!
+//! Both properties are CI-gated at `MEL_THREADS=1` and `4` (see ci.sh).
+
+use mel::alloc::Policy;
+use mel::cluster::{
+    Cluster, ClusterConfig, ClusterReport, GlobalReport, LiveOptions, ParamServerConfig,
+};
+use mel::coordinator::ParamSet;
+use mel::orchestrator::Mode;
+use mel::scenario::{
+    AggregationMode, ChurnTrace, CloudletConfig, ClusterSpec, GlobalAggSpec, ShardSpec,
+};
+
+const T: f64 = 2.0;
+const CYCLES: usize = 3;
+const LR: f32 = 0.05;
+const EVAL: usize = 48;
+const SEED: u64 = 42;
+
+/// Debug-build-friendly cloudlet: paper timing constants drive the
+/// allocation while the executed graph uses a shrunken hidden layer.
+fn tiny_cloudlet(k: usize, d: usize) -> CloudletConfig {
+    let mut c = CloudletConfig::pedestrian(k);
+    c.model = c.model.with_hidden(&[8]);
+    c.dataset.total_samples = d;
+    c
+}
+
+/// A 2-shard cluster of tiny cloudlets with synthetic churn and the
+/// requested global-aggregation mode.
+fn churny_spec(aggregation: AggregationMode, staleness_discount: f64) -> ClusterSpec {
+    let ccfg = tiny_cloudlet(3, 96);
+    ClusterSpec {
+        shards: (0..2)
+            .map(|i| ShardSpec {
+                cloudlet: ccfg.clone(),
+                seed_offset: i as u64,
+                churn: ChurnTrace::default(),
+                population: None,
+            })
+            .collect(),
+        global: GlobalAggSpec {
+            aggregation,
+            round_period_s: T,
+            staleness_discount,
+            ..GlobalAggSpec::default()
+        },
+    }
+    .with_synthetic_churn(CYCLES as f64 * T, 1, SEED)
+}
+
+fn cluster_for(spec: &ClusterSpec) -> Cluster {
+    Cluster::new(
+        spec.clone(),
+        ClusterConfig {
+            policy: Policy::Analytical,
+            mode: Mode::Async,
+            t_total: T,
+            cycles: CYCLES,
+            seed: SEED,
+            ..ClusterConfig::default()
+        },
+    )
+}
+
+fn ps_cfg_for(spec: &ClusterSpec) -> ParamServerConfig {
+    ParamServerConfig {
+        lr: LR,
+        eval_samples: EVAL,
+        ..ParamServerConfig::from_spec(&spec.global, SEED)
+    }
+}
+
+fn assert_params_bit_equal(a: &ParamSet, b: &ParamSet, what: &str) {
+    assert_eq!(a.tensors.len(), b.tensors.len(), "{what}: tensor count");
+    for (i, (ta, tb)) in a.tensors.iter().zip(&b.tensors).enumerate() {
+        assert_eq!(ta.dims, tb.dims, "{what}: tensor {i} dims");
+        for (j, (x, y)) in ta.as_f32().iter().zip(tb.as_f32()).enumerate() {
+            assert_eq!(
+                x.to_bits(),
+                y.to_bits(),
+                "{what}: tensor {i} coord {j}: {x} vs {y}"
+            );
+        }
+    }
+}
+
+fn assert_series_bit_equal(a: &[(f64, f64)], b: &[(f64, f64)], what: &str) {
+    assert_eq!(a.len(), b.len(), "{what}: length");
+    for (i, ((ta, va), (tb, vb))) in a.iter().zip(b).enumerate() {
+        assert_eq!(ta.to_bits(), tb.to_bits(), "{what}: point {i} time");
+        assert_eq!(va.to_bits(), vb.to_bits(), "{what}: point {i} value");
+    }
+}
+
+fn assert_timelines_bit_equal(a: &ClusterReport, b: &ClusterReport, what: &str) {
+    assert_eq!(a.updates.len(), b.updates.len(), "{what}: update count");
+    for (i, ((sa, ua), (sb, ub))) in a.updates.iter().zip(&b.updates).enumerate() {
+        assert_eq!(sa, sb, "{what}: update {i} shard");
+        assert_eq!(ua.learner, ub.learner, "{what}: update {i} learner");
+        assert_eq!(
+            ua.dispatched_at.to_bits(),
+            ub.dispatched_at.to_bits(),
+            "{what}: update {i} dispatch"
+        );
+        assert_eq!(
+            ua.uploaded_at.to_bits(),
+            ub.uploaded_at.to_bits(),
+            "{what}: update {i} upload"
+        );
+        assert_eq!(ua.tau, ub.tau, "{what}: update {i} tau");
+        assert_eq!(ua.batch, ub.batch, "{what}: update {i} batch");
+        assert_eq!(ua.staleness, ub.staleness, "{what}: update {i} staleness");
+        assert_eq!(ua.missed_deadline, ub.missed_deadline, "{what}: update {i} miss");
+    }
+}
+
+fn assert_globals_bit_equal(a: &GlobalReport, b: &GlobalReport, what: &str) {
+    assert_eq!(a.applies, b.applies, "{what}: applies");
+    assert_eq!(a.updates_replayed, b.updates_replayed, "{what}: updates replayed");
+    assert_eq!(a.final_loss.to_bits(), b.final_loss.to_bits(), "{what}: final loss");
+    assert_eq!(
+        a.final_accuracy.to_bits(),
+        b.final_accuracy.to_bits(),
+        "{what}: final accuracy"
+    );
+    assert_params_bit_equal(&a.params, &b.params, what);
+    assert_series_bit_equal(&a.loss_series, &b.loss_series, &format!("{what}: loss series"));
+    assert_series_bit_equal(&a.acc_series, &b.acc_series, &format!("{what}: acc series"));
+    assert_eq!(a.rounds.len(), b.rounds.len(), "{what}: round count");
+    for (i, (ra, rb)) in a.rounds.iter().zip(&b.rounds).enumerate() {
+        assert_eq!(ra.index, rb.index, "{what}: round {i} index");
+        assert_eq!(ra.weight.to_bits(), rb.weight.to_bits(), "{what}: round {i} weight");
+    }
+}
+
+fn live_equals_replay(aggregation: AggregationMode, staleness_discount: f64, what: &str) {
+    let spec = churny_spec(aggregation, staleness_discount);
+
+    // the deterministic oracle: full timing run, then an offline replay
+    let oracle = cluster_for(&spec);
+    let (ref_report, ref_global) =
+        oracle.run_global(ps_cfg_for(&spec)).expect("replay oracle run");
+    assert!(!ref_report.updates.is_empty(), "{what}: oracle produced no updates");
+    assert!(
+        ref_report.shards.iter().any(|s| s.joins + s.departs > 0),
+        "{what}: no churn in the oracle run"
+    );
+
+    // the live plane, with a deliberately tiny channel so backpressure
+    // (blocking senders) is actually exercised
+    let live = cluster_for(&spec);
+    let opts = LiveOptions { plane_capacity: 2, ..LiveOptions::default() };
+    let (live_report, live_global) =
+        live.run_live(ps_cfg_for(&spec), &opts).expect("live run");
+
+    assert_timelines_bit_equal(&live_report, &ref_report, what);
+    assert_globals_bit_equal(&live_global, &ref_global, what);
+}
+
+#[test]
+fn live_rounds_aggregation_matches_replay_bit_for_bit_under_churn() {
+    live_equals_replay(AggregationMode::Rounds, 0.0, "rounds live≡replay");
+}
+
+#[test]
+fn live_per_update_aggregation_matches_replay_bit_for_bit_under_churn() {
+    live_equals_replay(AggregationMode::PerUpdate, 0.2, "per-update live≡replay");
+}
+
+/// Fresh tempdir for one test's journal artifacts.
+fn journal_tempdir(name: &str) -> std::path::PathBuf {
+    let dir = std::env::temp_dir().join(format!("mel-{name}-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).expect("create journal tempdir");
+    dir
+}
+
+#[test]
+fn killed_live_run_resumes_bit_for_bit_from_journal_and_checkpoint() {
+    let spec = churny_spec(AggregationMode::PerUpdate, 0.0);
+
+    // uninterrupted oracle
+    let oracle = cluster_for(&spec);
+    let (_, ref_global) = oracle.run_global(ps_cfg_for(&spec)).expect("replay oracle run");
+    assert!(ref_global.applies > 2, "need enough applies to kill mid-run");
+
+    let dir = journal_tempdir("resume");
+
+    // crash mid-stream: checkpoint every apply, abandon after two
+    let halted = cluster_for(&spec);
+    let halt_opts = LiveOptions {
+        checkpoint_every: 1,
+        journal_dir: Some(dir.clone()),
+        plane_capacity: 2,
+        halt_after_applies: Some(2),
+        ..LiveOptions::default()
+    };
+    let err = halted
+        .run_live(ps_cfg_for(&spec), &halt_opts)
+        .expect_err("halt hook must abort the run");
+    assert!(
+        format!("{err}").contains("halted early"),
+        "unexpected halt error: {err}"
+    );
+    assert!(dir.join("journal.jsonl").exists(), "journal must survive the crash");
+    assert!(dir.join("checkpoint.json").exists(), "checkpoint must survive the crash");
+
+    // resume: replays the journaled prefix, restores the checkpoint,
+    // and streams the rest live — bit-identical to never crashing
+    let resumed = cluster_for(&spec);
+    let resume_opts = LiveOptions {
+        checkpoint_every: 1,
+        journal_dir: Some(dir.clone()),
+        resume: true,
+        plane_capacity: 2,
+        ..LiveOptions::default()
+    };
+    let (_, live_global) =
+        resumed.run_live(ps_cfg_for(&spec), &resume_opts).expect("resumed run");
+
+    assert_globals_bit_equal(&live_global, &ref_global, "crash-resume");
+
+    let _ = std::fs::remove_dir_all(&dir);
+}

@@ -268,3 +268,69 @@ fn exporters_chrome_json_parses_and_budget_csv_sums_to_t() {
     assert!(prom.contains("# TYPE mel_tau gauge"), "missing tau gauge:\n{prom}");
     assert!(prom.contains("mel_makespan_count"), "missing makespan summary:\n{prom}");
 }
+
+#[test]
+fn live_plane_spans_are_recorded_and_the_sim_offset_is_restored() {
+    let _g = lock();
+    trace::set_enabled(true);
+    trace::clear();
+    // a rebased clock left by whatever this thread traced before; the
+    // server's replay/flush rebases to absolute time and must restore
+    // this on exit (ISSUE 9 regression: a bare `set_sim_offset(0.0)`
+    // used to leak into everything the thread traced afterwards)
+    trace::set_sim_offset(123.5);
+
+    let mut spec = ClusterSpec::uniform("pedestrian", 2, 3).expect("builtin task");
+    for shard in &mut spec.shards {
+        shard.cloudlet.model = shard.cloudlet.model.with_hidden(&[8]);
+        shard.cloudlet.dataset.total_samples = 96;
+    }
+    let spec = spec.with_synthetic_churn(3.0 * T, 1, 9);
+    let cluster = Cluster::new(
+        spec.clone(),
+        ClusterConfig {
+            policy: Policy::Analytical,
+            mode: Mode::Async,
+            t_total: T,
+            cycles: 3,
+            seed: SEED,
+            trace_spans: true,
+            ..ClusterConfig::default()
+        },
+    );
+    let dir = std::env::temp_dir().join(format!("mel-trace-live-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    // capacity 1 on a bursty 2-shard stream with a training-slow
+    // consumer: the senders are guaranteed to block at least once
+    let opts = mel::cluster::LiveOptions {
+        checkpoint_every: 1,
+        journal_dir: Some(dir.clone()),
+        plane_capacity: 1,
+        ..mel::cluster::LiveOptions::default()
+    };
+    let ps_cfg = mel::cluster::ParamServerConfig {
+        lr: 0.05,
+        eval_samples: 48,
+        ..mel::cluster::ParamServerConfig::from_spec(&spec.global, SEED)
+    };
+    cluster.run_live(ps_cfg, &opts).expect("live run");
+
+    assert_eq!(
+        trace::sim_offset(),
+        123.5,
+        "the server flush leaked its sim-offset rebase onto the calling thread"
+    );
+    trace::set_sim_offset(0.0);
+
+    let events = trace::drain();
+    trace::set_enabled(false);
+    for (cat, name) in
+        [("plane", "backpressure_stall"), ("ps", "journal_append"), ("ps", "checkpoint")]
+    {
+        assert!(
+            events.iter().any(|e| e.cat == cat && e.name == name),
+            "live run is missing a {cat}/{name} event"
+        );
+    }
+    let _ = std::fs::remove_dir_all(&dir);
+}
