@@ -1,7 +1,7 @@
 #!/usr/bin/env bash
-# CI driver: lint → build → test → (optionally) bench.
+# CI driver: lint → build → mel lint (hard gate) → test → (optionally) bench.
 #
-#   ./ci.sh              # fmt-check + clippy (advisory), build, test
+#   ./ci.sh              # fmt-check + clippy (advisory), build, mel lint, test
 #   STRICT_LINT=1 ./ci.sh  # fail on fmt/clippy findings too
 #   CI_BENCH=1 ./ci.sh   # additionally run the bench targets, which
 #                        # emit results/BENCH_*.json via benchkit::Suite
@@ -21,16 +21,28 @@ CI_BENCH="${CI_BENCH:-0}"
 
 lint_status=0
 
-echo "==> cargo fmt --check"
-if ! cargo fmt --check; then
-    lint_status=1
-    echo "fmt: formatting differences found"
+# fmt/clippy are rustup components that some build images omit; skip
+# with a notice rather than failing on a missing toolchain piece (the
+# hard determinism gate below is `mel lint`, which has no external
+# dependency).
+if cargo fmt --version > /dev/null 2>&1; then
+    echo "==> cargo fmt --check"
+    if ! cargo fmt --check; then
+        lint_status=1
+        echo "fmt: formatting differences found"
+    fi
+else
+    echo "NOTICE: rustfmt not installed; skipping cargo fmt --check"
 fi
 
-echo "==> cargo clippy --all-targets -- -D warnings"
-if ! cargo clippy --all-targets -- -D warnings; then
-    lint_status=1
-    echo "clippy: lints found"
+if cargo clippy --version > /dev/null 2>&1; then
+    echo "==> cargo clippy --all-targets -- -D warnings"
+    if ! cargo clippy --all-targets -- -D warnings; then
+        lint_status=1
+        echo "clippy: lints found"
+    fi
+else
+    echo "NOTICE: clippy not installed; skipping cargo clippy"
 fi
 
 if [ "$lint_status" -ne 0 ]; then
@@ -43,6 +55,17 @@ fi
 
 echo "==> cargo build --release"
 cargo build --release
+
+# ---- self-hosted determinism & robustness gate (ISSUE 10) ---------------
+# `mel lint` statically enforces the invariants the rest of this script
+# probes dynamically: no partial_cmp().unwrap() orderings (D1), no
+# HashMap iteration order leaking into results (D2), wall clocks (D3)
+# and thread spawns (D4) confined to their sanctioned modules, no
+# unjustified unwrap/expect/panic in library code (R1), and the Cargo
+# target / MEL_* env registries in sync (C1, C2). This is a hard gate:
+# any new finding fails CI before the tests even run.
+echo "==> mel lint"
+./target/release/mel lint
 
 echo "==> cargo test -q"
 cargo test -q

@@ -51,7 +51,7 @@ fn fill_batches(p: &Problem, tau: u64) -> Option<Vec<usize>> {
     }
     // hand out the remainder to the largest fractional parts with slack
     let mut remainder = d - assigned;
-    fracs.sort_by(|a, b| b.0.partial_cmp(&a.0).unwrap());
+    fracs.sort_by(|a, b| b.0.total_cmp(&a.0));
     let mut cursor = 0;
     while remainder > 0 {
         // cycle through learners by descending fraction, respecting caps

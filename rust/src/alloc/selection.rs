@@ -64,9 +64,7 @@ fn triage_order(p: &Problem) -> Vec<usize> {
     // rank by cost on a K-way equal share (a neutral reference share)
     let ref_share = p.total_samples as f64 / k as f64;
     order.sort_by(|&a, &b| {
-        eta_cost(&p.coeffs[a], ref_share)
-            .partial_cmp(&eta_cost(&p.coeffs[b], ref_share))
-            .unwrap()
+        eta_cost(&p.coeffs[a], ref_share).total_cmp(&eta_cost(&p.coeffs[b], ref_share))
     });
     order
 }
@@ -133,6 +131,7 @@ pub fn best_eta_subset(p: &Problem) -> Result<Selection, AllocError> {
             hi_b = mid - 1;
         }
     }
+    // mel-lint: allow(R1) — the binary search only narrows within the feasible set, so `lo` was verified feasible
     let m = feasible_prefix(lo).expect("lo stays feasible");
     let subset = &order[..m];
     // run the real allocator on the winner so the reported τ is exactly

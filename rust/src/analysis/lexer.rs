@@ -1,0 +1,402 @@
+//! Comment/string/char-literal-aware source views for the lint rules.
+//!
+//! The analyzer never pattern-matches raw source: rules scan a **code
+//! view** where every comment and every string/char-literal *body* has
+//! been blanked to spaces (same byte positions, same line structure),
+//! so a forbidden token inside a doc comment or a format string can
+//! never fire. Alongside it the lexer keeps the comment text per line
+//! (pragma parsing), the string-literal bodies (the `MEL_*` env-var
+//! registry check reads those), and a per-line `#[cfg(test)]`-region
+//! mask (test code is exempt from the robustness rules).
+//!
+//! This is a lexer, not a parser: it understands exactly the token
+//! classes that can *hide* rule tokens — line/doc comments, nesting
+//! block comments, plain and raw (`r"…"`/`r#"…"#`, `b"…"`, `br#"…"#`)
+//! strings, char literals vs lifetimes — and nothing more.
+
+/// One string literal's body and the (1-based) line it starts on.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct StrLit {
+    pub line: usize,
+    pub body: String,
+}
+
+/// Lexed view of one source file.
+#[derive(Debug, Default)]
+pub struct FileView {
+    /// Raw source lines (no trailing newline).
+    pub raw: Vec<String>,
+    /// Code-only lines: comments and string/char bodies replaced by
+    /// spaces, byte-for-byte aligned with `raw`.
+    pub code: Vec<String>,
+    /// Comment text per line (everything that was inside `//…` or
+    /// `/*…*/` on that line, concatenated).
+    pub comments: Vec<String>,
+    /// String-literal bodies (escape sequences left verbatim).
+    pub strings: Vec<StrLit>,
+    /// `true` for every line inside a `#[cfg(test)]` item.
+    pub in_test: Vec<bool>,
+}
+
+impl FileView {
+    /// The whole code view as one string (lines joined by `\n`) — the
+    /// token rules scan this so calls spanning lines still match.
+    pub fn code_text(&self) -> String {
+        self.code.join("\n")
+    }
+}
+
+#[derive(Copy, Clone, PartialEq)]
+enum St {
+    Code,
+    LineComment,
+    BlockComment(u32),
+    Str,
+    RawStr(u32),
+}
+
+/// Lex `text` into a [`FileView`].
+pub fn lex(text: &str) -> FileView {
+    let b: Vec<char> = text.chars().collect();
+    let n = b.len();
+    let mut code = String::with_capacity(text.len());
+    let mut comment = String::with_capacity(64);
+    let mut view = FileView::default();
+    let mut cur_str = String::new();
+    let mut cur_str_line = 1usize;
+    let mut line = 1usize;
+    let mut st = St::Code;
+    let mut flush_line = |view: &mut FileView, code: &mut String, comment: &mut String| {
+        view.code.push(std::mem::take(code));
+        view.comments.push(std::mem::take(comment));
+    };
+    let mut i = 0usize;
+    while i < n {
+        let c = b[i];
+        if c == '\n' {
+            match st {
+                St::LineComment => st = St::Code,
+                St::Str | St::RawStr(_) => {
+                    // multi-line string: body keeps the newline
+                    cur_str.push('\n');
+                }
+                _ => {}
+            }
+            flush_line(&mut view, &mut code, &mut comment);
+            line += 1;
+            i += 1;
+            continue;
+        }
+        match st {
+            St::Code => {
+                if c == '/' && i + 1 < n && b[i + 1] == '/' {
+                    st = St::LineComment;
+                    code.push(' ');
+                    code.push(' ');
+                    i += 2;
+                    continue;
+                }
+                if c == '/' && i + 1 < n && b[i + 1] == '*' {
+                    st = St::BlockComment(1);
+                    code.push(' ');
+                    code.push(' ');
+                    i += 2;
+                    continue;
+                }
+                // raw / byte strings: r"  r#"  br"  b"  br#"
+                if (c == 'r' || c == 'b') && !prev_is_ident(&b, i) {
+                    if let Some((hashes, skip)) = raw_str_open(&b, i) {
+                        st = St::RawStr(hashes);
+                        cur_str_line = line;
+                        for _ in 0..skip {
+                            code.push(' ');
+                        }
+                        i += skip;
+                        continue;
+                    }
+                    if c == 'b' && i + 1 < n && b[i + 1] == '"' {
+                        st = St::Str;
+                        cur_str_line = line;
+                        code.push(' ');
+                        code.push(' ');
+                        i += 2;
+                        continue;
+                    }
+                }
+                if c == '"' {
+                    st = St::Str;
+                    cur_str_line = line;
+                    code.push(' ');
+                    i += 1;
+                    continue;
+                }
+                if c == '\'' {
+                    // char literal or lifetime? A literal is '\…' or
+                    // 'x' (single char then closing quote); anything
+                    // else ('a in generics, 'static) is a lifetime.
+                    if i + 1 < n && b[i + 1] == '\\' {
+                        let end = char_lit_end(&b, i);
+                        for _ in i..end {
+                            code.push(' ');
+                        }
+                        i = end;
+                        continue;
+                    }
+                    if i + 2 < n && b[i + 1] != '\'' && b[i + 2] == '\'' {
+                        code.push(' ');
+                        code.push(' ');
+                        code.push(' ');
+                        i += 3;
+                        continue;
+                    }
+                    // lifetime tick: keep it (harmless in the code view)
+                    code.push('\'');
+                    i += 1;
+                    continue;
+                }
+                code.push(c);
+                i += 1;
+            }
+            St::LineComment => {
+                comment.push(c);
+                code.push(' ');
+                i += 1;
+            }
+            St::BlockComment(d) => {
+                if c == '*' && i + 1 < n && b[i + 1] == '/' {
+                    st = if d == 1 { St::Code } else { St::BlockComment(d - 1) };
+                    code.push(' ');
+                    code.push(' ');
+                    i += 2;
+                    continue;
+                }
+                if c == '/' && i + 1 < n && b[i + 1] == '*' {
+                    st = St::BlockComment(d + 1);
+                    code.push(' ');
+                    code.push(' ');
+                    i += 2;
+                    continue;
+                }
+                comment.push(c);
+                code.push(' ');
+                i += 1;
+            }
+            St::Str => {
+                if c == '\\' && i + 1 < n {
+                    cur_str.push(c);
+                    cur_str.push(b[i + 1]);
+                    code.push(' ');
+                    code.push(' ');
+                    i += 2;
+                    continue;
+                }
+                if c == '"' {
+                    st = St::Code;
+                    view.strings.push(StrLit {
+                        line: cur_str_line,
+                        body: std::mem::take(&mut cur_str),
+                    });
+                    code.push(' ');
+                    i += 1;
+                    continue;
+                }
+                cur_str.push(c);
+                code.push(' ');
+                i += 1;
+            }
+            St::RawStr(hashes) => {
+                if c == '"' && raw_str_closes(&b, i, hashes) {
+                    st = St::Code;
+                    view.strings.push(StrLit {
+                        line: cur_str_line,
+                        body: std::mem::take(&mut cur_str),
+                    });
+                    for _ in 0..(1 + hashes as usize) {
+                        code.push(' ');
+                    }
+                    i += 1 + hashes as usize;
+                    continue;
+                }
+                cur_str.push(c);
+                code.push(' ');
+                i += 1;
+            }
+        }
+    }
+    flush_line(&mut view, &mut code, &mut comment);
+    view.raw = text.split('\n').map(str::to_string).collect();
+    // ragged safety: raw/code/comments must stay line-aligned
+    while view.code.len() < view.raw.len() {
+        view.code.push(String::new());
+        view.comments.push(String::new());
+    }
+    view.in_test = test_mask(&view.code);
+    view
+}
+
+fn prev_is_ident(b: &[char], i: usize) -> bool {
+    i > 0 && (b[i - 1].is_alphanumeric() || b[i - 1] == '_')
+}
+
+/// If `b[i..]` opens a raw string (`r"`, `r#"`, `br##"` …), return
+/// `(hash_count, chars_to_skip)` for the opener.
+fn raw_str_open(b: &[char], i: usize) -> Option<(u32, usize)> {
+    let mut j = i;
+    if b[j] == 'b' {
+        j += 1;
+    }
+    if j >= b.len() || b[j] != 'r' {
+        return None;
+    }
+    j += 1;
+    let mut hashes = 0u32;
+    while j < b.len() && b[j] == '#' {
+        hashes += 1;
+        j += 1;
+    }
+    if j < b.len() && b[j] == '"' {
+        Some((hashes, j + 1 - i))
+    } else {
+        None
+    }
+}
+
+/// Does the `"` at `i` close a raw string with `hashes` hash marks?
+fn raw_str_closes(b: &[char], i: usize, hashes: u32) -> bool {
+    (1..=hashes as usize).all(|k| i + k < b.len() && b[i + k] == '#')
+}
+
+/// End index (exclusive) of the escaped char literal starting at `i`
+/// (`b[i] == '\''`, `b[i+1] == '\\'`): scan to the closing quote.
+fn char_lit_end(b: &[char], i: usize) -> usize {
+    let mut j = i + 2; // past '\
+    if j < b.len() {
+        j += 1; // the escaped char itself ('\n', '\\', '\'', '\u')
+    }
+    // \u{…} payloads
+    while j < b.len() && b[j] != '\'' && j - i < 12 {
+        j += 1;
+    }
+    if j < b.len() && b[j] == '\'' {
+        j + 1
+    } else {
+        i + 2
+    }
+}
+
+/// Per-line mask of `#[cfg(test)]` item regions, computed on the code
+/// view (so braces in strings/comments cannot skew the matching). The
+/// region runs from the attribute to the close of the next top-level
+/// `{…}` block — or to the first `;` if one lands before any brace
+/// (e.g. `#[cfg(test)] use …;`).
+fn test_mask(code_lines: &[String]) -> Vec<bool> {
+    let text = code_lines.join("\n");
+    let bytes: Vec<char> = text.chars().collect();
+    let mut mask = vec![false; code_lines.len()];
+    let needle: Vec<char> = "#[cfg(test)]".chars().collect();
+    let mut starts = Vec::new();
+    for i in 0..bytes.len().saturating_sub(needle.len() - 1) {
+        if bytes[i..i + needle.len()] == needle[..] {
+            starts.push(i);
+        }
+    }
+    for &s in &starts {
+        let mut depth = 0i64;
+        let mut end = bytes.len().saturating_sub(1);
+        let mut k = s + needle.len();
+        while k < bytes.len() {
+            match bytes[k] {
+                '{' => depth += 1,
+                '}' => {
+                    depth -= 1;
+                    if depth == 0 {
+                        end = k;
+                        break;
+                    }
+                }
+                ';' if depth == 0 => {
+                    end = k;
+                    break;
+                }
+                _ => {}
+            }
+            k += 1;
+        }
+        let l0 = bytes[..s].iter().filter(|&&c| c == '\n').count();
+        let l1 = bytes[..=end.min(bytes.len() - 1)].iter().filter(|&&c| c == '\n').count();
+        for m in mask.iter_mut().take(l1 + 1).skip(l0) {
+            *m = true;
+        }
+    }
+    mask
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn comments_and_strings_are_blanked() {
+        let v = lex("let x = 1; // partial_cmp().unwrap()\nlet s = \"panic!(ok)\";\n");
+        assert!(!v.code[0].contains("partial_cmp"));
+        assert!(v.comments[0].contains("partial_cmp"));
+        assert!(!v.code[1].contains("panic!"));
+        assert_eq!(v.strings[0].body, "panic!(ok)");
+        assert!(v.code[0].contains("let x = 1;"));
+    }
+
+    #[test]
+    fn block_comments_nest_and_span_lines() {
+        let v = lex("a /* one /* two */ still */ b\n/* open\nunwrap()\n*/ c\n");
+        assert!(v.code[0].contains('a') && v.code[0].contains('b'));
+        assert!(!v.code[0].contains("still"));
+        assert!(!v.code[2].contains("unwrap"));
+        assert!(v.code[3].contains('c'));
+    }
+
+    #[test]
+    fn raw_strings_and_escapes() {
+        let v = lex("let a = r#\"he said \"unwrap()\"\"#; let b = \"q\\\"panic!\\\"\";\n");
+        assert!(!v.code[0].contains("unwrap"));
+        assert!(!v.code[0].contains("panic"));
+        assert_eq!(v.strings.len(), 2);
+        assert!(v.strings[0].body.contains("unwrap()"));
+    }
+
+    #[test]
+    fn char_literals_vs_lifetimes() {
+        let v = lex("fn f<'a>(x: &'a str) { let q = '\"'; let n = '\\n'; s.unwrap(); }\n");
+        // the '"' char literal must not open a string state: the
+        // unwrap() after it stays visible in the code view
+        assert!(v.code[0].contains("fn f<'a>"));
+        assert!(v.code[0].contains("s.unwrap();"));
+        assert_eq!(v.strings.len(), 0);
+    }
+
+    #[test]
+    fn cfg_test_region_masks_lines() {
+        let src = "fn lib() {}\n#[cfg(test)]\nmod tests {\n    fn t() { x.unwrap(); }\n}\nfn lib2() {}\n";
+        let v = lex(src);
+        assert!(!v.in_test[0]);
+        assert!(v.in_test[1] && v.in_test[2] && v.in_test[3] && v.in_test[4]);
+        assert!(!v.in_test[5]);
+    }
+
+    #[test]
+    fn cfg_test_on_single_item_ends_at_semicolon() {
+        let src = "#[cfg(test)]\nuse foo::bar;\nfn lib() { x.unwrap(); }\n";
+        let v = lex(src);
+        assert!(v.in_test[0] && v.in_test[1]);
+        assert!(!v.in_test[2]);
+    }
+
+    #[test]
+    fn multiline_strings_keep_line_alignment() {
+        let src = "let s = \"line one\nline two unwrap()\";\nlet x = 1;\n";
+        let v = lex(src);
+        assert_eq!(v.code.len(), v.raw.len());
+        assert!(!v.code[1].contains("unwrap"));
+        assert!(v.code[2].contains("let x = 1;"));
+        assert!(v.strings[0].body.contains("line two"));
+    }
+}

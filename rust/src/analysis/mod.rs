@@ -1,0 +1,368 @@
+//! `mel lint` — self-hosted determinism & robustness analyzer.
+//!
+//! The invariants this repo lives on (traced ≡ untraced, live ≡ replay,
+//! pooled ≡ serial, wheel ≡ heap, all bit-for-bit) are exactly the kind
+//! no compiler checks, and PRs 5–9 each burned a satellite re-fixing
+//! the same mechanically-detectable bug classes by hand. This module
+//! enforces them statically:
+//!
+//! * [`lexer`] — comment/string/char-literal-aware source views
+//! * [`rules`] — the code rules (D1–D4, R1) + suppression pragmas
+//! * [`project`] — repo-level rules (C1 Cargo targets, C2 env registry)
+//! * this file — the tree walker, deterministic report, baseline
+//!   filtering, and human/JSON rendering behind `mel lint`
+//!
+//! Everything is zero-dependency and self-hosted: the analyzer scans
+//! the very sources it is part of, and ci.sh gates on it before tests.
+
+pub mod lexer;
+pub mod project;
+pub mod rules;
+
+pub use rules::{lint_source, Finding, LintConfig, RuleId, SourceLint};
+
+use crate::util::json::Json;
+use std::collections::BTreeSet;
+use std::path::{Path, PathBuf};
+
+/// Baseline key: (path, rule, line). Findings matching a baseline entry
+/// are reported in the summary but do not fail the run — the adoption
+/// path for turning the lint on over a tree with known debt.
+pub type BaselineKey = (String, String, u64);
+
+/// Aggregated lint result over a tree.
+#[derive(Debug, Default)]
+pub struct Report {
+    /// Live findings, sorted by (path, line, rule, message).
+    pub findings: Vec<Finding>,
+    pub files_scanned: usize,
+    /// Findings silenced by justified pragmas.
+    pub suppressed: usize,
+    /// Findings silenced by the `--baseline` file.
+    pub baselined: usize,
+}
+
+impl Report {
+    /// 0 = clean, 1 = findings (usage errors exit 2 at the CLI).
+    pub fn exit_code(&self) -> i32 {
+        if self.findings.is_empty() {
+            0
+        } else {
+            1
+        }
+    }
+
+    /// Deterministic JSON: object keys are BTreeMap-ordered, findings
+    /// are pre-sorted, so identical trees render identical bytes. The
+    /// output doubles as a `--baseline` file.
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("format", Json::Num(1.0)),
+            ("files_scanned", Json::Num(self.files_scanned as f64)),
+            ("suppressed", Json::Num(self.suppressed as f64)),
+            ("baselined", Json::Num(self.baselined as f64)),
+            (
+                "findings",
+                Json::Arr(
+                    self.findings
+                        .iter()
+                        .map(|f| {
+                            Json::obj(vec![
+                                ("rule", Json::Str(f.rule.as_str().to_string())),
+                                ("path", Json::Str(f.path.clone())),
+                                ("line", Json::Num(f.line as f64)),
+                                ("message", Json::Str(f.message.clone())),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+
+    /// `path:line: RULE: message` lines plus a one-line summary.
+    pub fn render_human(&self) -> String {
+        let mut s = String::new();
+        for f in &self.findings {
+            s.push_str(&format!("{}:{}: {}: {}\n", f.path, f.line, f.rule, f.message));
+        }
+        if self.findings.is_empty() {
+            s.push_str(&format!(
+                "mel lint: clean — {} files scanned ({} suppressed by pragma, {} baselined)\n",
+                self.files_scanned, self.suppressed, self.baselined
+            ));
+        } else {
+            s.push_str(&format!(
+                "mel lint: {} finding(s) across {} files scanned ({} suppressed by pragma, {} baselined)\n",
+                self.findings.len(),
+                self.files_scanned,
+                self.suppressed,
+                self.baselined
+            ));
+        }
+        s
+    }
+}
+
+/// Parse a `--baseline` file (any prior `mel lint --format json` output).
+pub fn load_baseline(text: &str) -> anyhow::Result<BTreeSet<BaselineKey>> {
+    let json = Json::parse(text).map_err(|e| anyhow::anyhow!("baseline is not valid JSON: {e:?}"))?;
+    let findings = json
+        .get("findings")
+        .and_then(|f| f.as_arr().map(|a| a.to_vec()))
+        .map_err(|e| anyhow::anyhow!("baseline has no findings array: {e:?}"))?;
+    let mut out = BTreeSet::new();
+    for f in &findings {
+        let rule = f.get("rule").and_then(|v| v.as_str().map(str::to_string));
+        let path = f.get("path").and_then(|v| v.as_str().map(str::to_string));
+        let line = f.get("line").and_then(|v| v.as_u64());
+        match (rule, path, line) {
+            (Ok(rule), Ok(path), Ok(line)) => {
+                out.insert((path, rule, line));
+            }
+            _ => return Err(anyhow::anyhow!("baseline finding entries need rule/path/line")),
+        }
+    }
+    Ok(out)
+}
+
+/// Drop findings present in the baseline; counts move to
+/// `report.baselined`.
+pub fn apply_baseline(report: &mut Report, baseline: &BTreeSet<BaselineKey>) {
+    let (kept, dropped): (Vec<_>, Vec<_>) = std::mem::take(&mut report.findings)
+        .into_iter()
+        .partition(|f| {
+            !baseline.contains(&(f.path.clone(), f.rule.as_str().to_string(), f.line as u64))
+        });
+    report.baselined += dropped.len();
+    report.findings = kept;
+}
+
+/// Repo-relative display path with `/` separators.
+fn rel_path(root: &Path, p: &Path) -> String {
+    let s = match p.strip_prefix(root) {
+        Ok(r) => r.to_string_lossy().into_owned(),
+        Err(_) => p.to_string_lossy().into_owned(),
+    };
+    s.replace('\\', "/")
+}
+
+/// Recursively collect `.rs` files under `dir`, sorted, skipping
+/// `target/` and dot-directories — deterministic scan order is what
+/// makes the report byte-stable.
+fn walk_rs(dir: &Path, out: &mut Vec<PathBuf>) -> anyhow::Result<()> {
+    let mut entries: Vec<PathBuf> = Vec::new();
+    let rd = std::fs::read_dir(dir)
+        .map_err(|e| anyhow::anyhow!("cannot read directory {}: {e}", dir.display()))?;
+    for entry in rd {
+        let entry = entry.map_err(|e| anyhow::anyhow!("readdir {}: {e}", dir.display()))?;
+        entries.push(entry.path());
+    }
+    entries.sort();
+    for p in entries {
+        let name = p.file_name().and_then(|n| n.to_str()).unwrap_or("");
+        if name.starts_with('.') || name == "target" {
+            continue;
+        }
+        if p.is_dir() {
+            walk_rs(&p, out)?;
+        } else if name.ends_with(".rs") {
+            out.push(p);
+        }
+    }
+    Ok(())
+}
+
+/// List `*.rs` directly under `dir` (non-recursive), sorted, as paths
+/// relative to `root`. Missing directory → empty list.
+fn list_rs(root: &Path, dir: &Path) -> Vec<String> {
+    let mut out = Vec::new();
+    if let Ok(rd) = std::fs::read_dir(dir) {
+        for entry in rd.flatten() {
+            let p = entry.path();
+            let name = p.file_name().and_then(|n| n.to_str()).unwrap_or("");
+            if name.ends_with(".rs") && p.is_file() {
+                out.push(rel_path(root, &p));
+            }
+        }
+    }
+    out.sort();
+    out
+}
+
+/// Does a pragma in `text` cover `(rule, line)`?
+fn pragma_covers(text: &str, rule: RuleId, line: usize) -> bool {
+    let (lines, file) = rules::pragma_cover(text);
+    file.contains(&rule) || lines.contains(&(rule, line))
+}
+
+/// Lint a tree. With no explicit `paths`, scans `root/rust/src`
+/// recursively **and** runs the project rules (C1 against
+/// `root/Cargo.toml` + `root/rust/tests` + `root/benches`, C2 against
+/// `root/README.md`). With explicit paths (files or directories,
+/// resolved against `root` when relative), only the code rules run.
+pub fn lint_tree(root: &Path, paths: &[PathBuf], cfg: &LintConfig) -> anyhow::Result<Report> {
+    let default_mode = paths.is_empty();
+    let mut files: Vec<PathBuf> = Vec::new();
+    if default_mode {
+        let src_root = root.join("rust").join("src");
+        anyhow::ensure!(
+            src_root.is_dir(),
+            "no rust/src under {} (pass explicit paths to lint other trees)",
+            root.display()
+        );
+        walk_rs(&src_root, &mut files)?;
+    } else {
+        for p in paths {
+            let abs = if p.is_absolute() { p.clone() } else { root.join(p) };
+            if abs.is_dir() {
+                walk_rs(&abs, &mut files)?;
+            } else if abs.is_file() {
+                files.push(abs);
+            } else {
+                anyhow::bail!("no such file or directory: {}", p.display());
+            }
+        }
+        files.sort();
+        files.dedup();
+    }
+
+    let mut report = Report::default();
+    // (relpath, text) for every scanned file — C2 needs the string
+    // literals and pragma covers after the walk
+    let mut scanned: Vec<(String, String)> = Vec::new();
+    for path in &files {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| anyhow::anyhow!("cannot read {}: {e}", path.display()))?;
+        let rel = rel_path(root, path);
+        let lint = rules::lint_source(&rel, &text, cfg);
+        report.suppressed += lint.suppressed;
+        report.findings.extend(lint.findings);
+        report.files_scanned += 1;
+        scanned.push((rel, text));
+    }
+
+    if default_mode {
+        // C1 — Cargo target registry vs files on disk
+        let cargo_path = root.join("Cargo.toml");
+        if let Ok(cargo_text) = std::fs::read_to_string(&cargo_path) {
+            let test_files = list_rs(root, &root.join("rust").join("tests"));
+            let bench_files = list_rs(root, &root.join("benches"));
+            for f in
+                project::check_cargo_targets("Cargo.toml", &cargo_text, &test_files, &bench_files)
+            {
+                // orphan findings anchor at the orphan .rs file — honor
+                // a pragma there (Cargo.toml-anchored ones have no
+                // comment syntax we parse; baseline them instead)
+                let covered = f.path.ends_with(".rs")
+                    && std::fs::read_to_string(root.join(&f.path))
+                        .map(|t| pragma_covers(&t, RuleId::C1, f.line))
+                        .unwrap_or(false);
+                if covered {
+                    report.suppressed += 1;
+                } else {
+                    report.findings.push(f);
+                }
+            }
+        }
+        // C2 — MEL_* env vars read in source must be in the README.
+        // Only non-test string literals count: a var read inside
+        // `#[cfg(test)]` is not a runtime knob.
+        let readme = std::fs::read_to_string(root.join("README.md")).unwrap_or_default();
+        let mut per_file: Vec<(String, Vec<lexer::StrLit>)> = Vec::new();
+        for (rel, text) in &scanned {
+            let view = lexer::lex(text);
+            let strings: Vec<lexer::StrLit> = view
+                .strings
+                .iter()
+                .filter(|s| !view.in_test.get(s.line.saturating_sub(1)).copied().unwrap_or(false))
+                .cloned()
+                .collect();
+            per_file.push((rel.clone(), strings));
+        }
+        for f in project::check_env_registry(&per_file, &readme) {
+            let covered = scanned
+                .iter()
+                .find(|(rel, _)| rel == &f.path)
+                .map(|(_, text)| pragma_covers(text, RuleId::C2, f.line))
+                .unwrap_or(false);
+            if covered {
+                report.suppressed += 1;
+            } else {
+                report.findings.push(f);
+            }
+        }
+    }
+
+    report.findings.sort();
+    Ok(report)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn finding(path: &str, line: usize, rule: RuleId) -> Finding {
+        Finding { path: path.to_string(), line, rule, message: format!("m {rule}") }
+    }
+
+    #[test]
+    fn json_roundtrips_as_baseline() {
+        let mut report = Report {
+            findings: vec![
+                finding("a.rs", 3, RuleId::R1),
+                finding("b.rs", 7, RuleId::D1),
+            ],
+            files_scanned: 2,
+            suppressed: 1,
+            baselined: 0,
+        };
+        let text = report.to_json().to_string();
+        let base = load_baseline(&text).unwrap();
+        assert_eq!(base.len(), 2);
+        apply_baseline(&mut report, &base);
+        assert!(report.findings.is_empty());
+        assert_eq!(report.baselined, 2);
+        assert_eq!(report.exit_code(), 0);
+    }
+
+    #[test]
+    fn baseline_only_drops_exact_matches() {
+        let mut report = Report {
+            findings: vec![finding("a.rs", 3, RuleId::R1), finding("a.rs", 4, RuleId::R1)],
+            files_scanned: 1,
+            suppressed: 0,
+            baselined: 0,
+        };
+        let base: BTreeSet<BaselineKey> =
+            [("a.rs".to_string(), "R1".to_string(), 3u64)].into_iter().collect();
+        apply_baseline(&mut report, &base);
+        assert_eq!(report.findings.len(), 1);
+        assert_eq!(report.findings[0].line, 4);
+        assert_eq!(report.exit_code(), 1);
+    }
+
+    #[test]
+    fn malformed_baselines_error() {
+        assert!(load_baseline("not json").is_err());
+        assert!(load_baseline("{\"no_findings\": true}").is_err());
+        assert!(load_baseline("{\"findings\": [{\"rule\": \"R1\"}]}").is_err());
+        // an empty report is a valid baseline
+        assert_eq!(load_baseline("{\"findings\": []}").unwrap().len(), 0);
+    }
+
+    #[test]
+    fn human_render_has_anchors_and_summary() {
+        let report = Report {
+            findings: vec![finding("rust/src/x.rs", 12, RuleId::D3)],
+            files_scanned: 5,
+            suppressed: 2,
+            baselined: 1,
+        };
+        let s = report.render_human();
+        assert!(s.contains("rust/src/x.rs:12: D3: "), "{s}");
+        assert!(s.contains("1 finding(s) across 5 files"), "{s}");
+        let clean = Report { files_scanned: 5, ..Default::default() };
+        assert!(clean.render_human().contains("clean"));
+    }
+}

@@ -1,0 +1,217 @@
+//! Project-level consistency rules (the C family).
+//!
+//! * **C1** — every `rust/tests/*.rs` file needs a `[[test]]` entry in
+//!   Cargo.toml and every `benches/*.rs` a `[[bench]]` entry (a
+//!   `trace_plane.rs` with no entry silently never ran in PR 9), and
+//!   every registered target path must exist on disk.
+//! * **C2** — every `MEL_*` env var read anywhere in `rust/src` must be
+//!   documented in the README's env-var registry, so runtime knobs
+//!   can't ship undiscoverable.
+//!
+//! These run only on the default whole-tree scan (no explicit PATHS),
+//! because they need the repo root's Cargo.toml / README.md / target
+//! directories for context.
+
+use super::lexer::StrLit;
+use super::rules::{Finding, RuleId};
+use std::collections::BTreeSet;
+
+/// One `path = "…"` entry under a `[[test]]` / `[[bench]]` section.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct CargoTarget {
+    pub kind: TargetKind,
+    pub path: String,
+    /// 1-based Cargo.toml line of the `path = …` entry.
+    pub line: usize,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TargetKind {
+    Test,
+    Bench,
+}
+
+/// Scan Cargo.toml (line-oriented; the manifest is hand-maintained and
+/// flat) for `[[test]]`/`[[bench]]` target paths.
+pub fn parse_cargo_targets(cargo_text: &str) -> Vec<CargoTarget> {
+    #[derive(PartialEq, Clone, Copy)]
+    enum Sect {
+        Test,
+        Bench,
+        Other,
+    }
+    let mut sect = Sect::Other;
+    let mut out = Vec::new();
+    for (idx, raw) in cargo_text.lines().enumerate() {
+        let line = raw.split('#').next().unwrap_or("").trim();
+        if line.starts_with('[') {
+            sect = match line {
+                "[[test]]" => Sect::Test,
+                "[[bench]]" => Sect::Bench,
+                _ => Sect::Other,
+            };
+            continue;
+        }
+        if sect == Sect::Other {
+            continue;
+        }
+        if let Some(rest) = line.strip_prefix("path") {
+            let rest = rest.trim_start();
+            if let Some(rest) = rest.strip_prefix('=') {
+                let v = rest.trim().trim_matches('"');
+                out.push(CargoTarget {
+                    kind: if sect == Sect::Test { TargetKind::Test } else { TargetKind::Bench },
+                    path: v.to_string(),
+                    line: idx + 1,
+                });
+            }
+        }
+    }
+    out
+}
+
+/// C1: cross-check the Cargo target registry against the files on
+/// disk. `test_files`/`bench_files` are repo-relative paths (`/`
+/// separators) of every `rust/tests/*.rs` and `benches/*.rs` actually
+/// present; `cargo_path` is the repo-relative manifest path used to
+/// anchor missing-on-disk findings (normally `Cargo.toml`).
+pub fn check_cargo_targets(
+    cargo_path: &str,
+    cargo_text: &str,
+    test_files: &[String],
+    bench_files: &[String],
+) -> Vec<Finding> {
+    let targets = parse_cargo_targets(cargo_text);
+    let registered: BTreeSet<&str> = targets.iter().map(|t| t.path.as_str()).collect();
+    let mut out = Vec::new();
+    for (files, section) in [(test_files, "[[test]]"), (bench_files, "[[bench]]")] {
+        for f in files {
+            if !registered.contains(f.as_str()) {
+                out.push(Finding {
+                    path: f.clone(),
+                    line: 1,
+                    rule: RuleId::C1,
+                    message: format!(
+                        "no {section} entry in Cargo.toml points at this file — it will silently never run (PR 9 trace_plane bug class)"
+                    ),
+                });
+            }
+        }
+    }
+    let on_disk: BTreeSet<&str> =
+        test_files.iter().chain(bench_files.iter()).map(|s| s.as_str()).collect();
+    for t in &targets {
+        if !on_disk.contains(t.path.as_str()) {
+            out.push(Finding {
+                path: cargo_path.to_string(),
+                line: t.line,
+                rule: RuleId::C1,
+                message: format!("registered target path {:?} does not exist on disk", t.path),
+            });
+        }
+    }
+    out
+}
+
+/// Is `body` exactly a `MEL_*` env-var name?
+fn is_mel_var(body: &str) -> bool {
+    body.len() > 4
+        && body.starts_with("MEL_")
+        && body.chars().all(|c| c.is_ascii_uppercase() || c.is_ascii_digit() || c == '_')
+}
+
+/// C2: every `MEL_*` string literal in source (these are exactly the
+/// env-var names passed to `std::env::var`) must appear in the README.
+/// `files` holds (repo-relative path, string literals) per scanned
+/// source file.
+pub fn check_env_registry(files: &[(String, Vec<StrLit>)], readme: &str) -> Vec<Finding> {
+    let mut out = Vec::new();
+    let mut reported: BTreeSet<String> = BTreeSet::new();
+    for (path, strings) in files {
+        for s in strings {
+            if !is_mel_var(&s.body) {
+                continue;
+            }
+            if readme.contains(&s.body) {
+                continue;
+            }
+            // one finding per (file, var): a var read twice in one file
+            // is one documentation gap
+            if !reported.insert(format!("{path}\u{0}{}", s.body)) {
+                continue;
+            }
+            out.push(Finding {
+                path: path.clone(),
+                line: s.line,
+                rule: RuleId::C2,
+                message: format!(
+                    "env var `{}` is read here but not documented in README.md's MEL_* registry",
+                    s.body
+                ),
+            });
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::analysis::rules::string_literals;
+
+    const CARGO: &str = "\
+[package]
+name = \"mel\"
+
+[[test]]
+name = \"alpha\"
+path = \"rust/tests/alpha.rs\"
+
+[[bench]]
+name = \"speed\"
+path = \"benches/speed.rs\"
+";
+
+    #[test]
+    fn c1_flags_orphans_and_ghosts() {
+        let tests = vec!["rust/tests/alpha.rs".to_string(), "rust/tests/orphan.rs".to_string()];
+        let benches = vec!["benches/speed.rs".to_string()];
+        let fs = check_cargo_targets("Cargo.toml", CARGO, &tests, &benches);
+        assert_eq!(fs.len(), 1, "{fs:?}");
+        assert_eq!(fs[0].path, "rust/tests/orphan.rs");
+        assert_eq!(fs[0].line, 1);
+        assert_eq!(fs[0].rule, RuleId::C1);
+
+        // registered but deleted from disk
+        let fs = check_cargo_targets("Cargo.toml", CARGO, &["rust/tests/alpha.rs".to_string()], &[]);
+        assert_eq!(fs.len(), 1, "{fs:?}");
+        assert_eq!(fs[0].path, "Cargo.toml");
+        assert_eq!(fs[0].line, 10); // the bench `path = …` line
+    }
+
+    #[test]
+    fn c1_clean_when_registry_matches() {
+        let tests = vec!["rust/tests/alpha.rs".to_string()];
+        let benches = vec!["benches/speed.rs".to_string()];
+        assert!(check_cargo_targets("Cargo.toml", CARGO, &tests, &benches).is_empty());
+    }
+
+    #[test]
+    fn c2_flags_undocumented_vars_at_read_site() {
+        let src = "fn threads() -> usize {\n    std::env::var(\"MEL_THREADS\").ok().and_then(|v| v.parse().ok()).unwrap_or(1)\n}\nfn secret() -> bool {\n    std::env::var(\"MEL_UNDOCUMENTED\").is_ok()\n}\n";
+        let files = vec![("rust/src/x.rs".to_string(), string_literals(src))];
+        let readme = "## Env vars\n\n| `MEL_THREADS` | pool size |\n";
+        let fs = check_env_registry(&files, readme);
+        assert_eq!(fs.len(), 1, "{fs:?}");
+        assert_eq!(fs[0].rule, RuleId::C2);
+        assert_eq!(fs[0].line, 5);
+        assert!(fs[0].message.contains("MEL_UNDOCUMENTED"));
+    }
+
+    #[test]
+    fn c2_ignores_non_env_strings_and_comments() {
+        let src = "// MEL_IN_COMMENT is not a read\nfn f() -> &'static str { \"MELODY\" }\nfn g() -> &'static str { \"mel_lower\" }\n";
+        let files = vec![("rust/src/x.rs".to_string(), string_literals(src))];
+        assert!(check_env_registry(&files, "").is_empty());
+    }
+}

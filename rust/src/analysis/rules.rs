@@ -1,0 +1,809 @@
+//! The determinism & robustness rules, and the suppression pragmas.
+//!
+//! Every rule is grounded in a bug this repo actually shipped and then
+//! re-fixed by hand (see README "Static guarantees" for the table):
+//!
+//! * **D1** — no `partial_cmp()` + `unwrap()/expect()` on floats: a NaN
+//!   panics the comparator (the PR 5 merge-path bug). Use `total_cmp`.
+//! * **D2** — no iteration over `HashMap`/`HashSet`: hash order is
+//!   nondeterministic per process, and float apply order changes
+//!   results (the PR 9 `param_server` checkpoint bug). Use `BTreeMap`
+//!   or sort explicitly.
+//! * **D3** — `Instant::now`/`SystemTime::now` only in sanctioned
+//!   wall-clock modules: wall time must never feed simulated state.
+//! * **D4** — `thread::spawn`/`Builder`/`scope` only in the sanctioned
+//!   concurrency modules, so nothing bypasses the shared compute
+//!   pool's oversubscription invariant.
+//! * **R1** — no `unwrap()/expect()/panic!` in library code (tests,
+//!   `main.rs` and `#[cfg(test)]` blocks exempt) without a justified
+//!   pragma.
+//!
+//! Rules scan the blanked *code view* (see [`super::lexer`]), so tokens
+//! inside strings, chars, and comments never fire. Findings are
+//! suppressed per line or per file with justified pragma comments —
+//! see README "Static guarantees" for the exact syntax (kept out of
+//! this doc comment because the analyzer scans its own sources and the
+//! pragma marker is recognized wherever it appears in a comment). The
+//! justification is mandatory; a pragma without one is itself a
+//! finding.
+
+use super::lexer::FileView;
+use std::collections::{BTreeMap, BTreeSet};
+use std::fmt;
+
+/// Rule identifiers. `Pragma` covers malformed suppression comments and
+/// is itself unsuppressable.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum RuleId {
+    D1,
+    D2,
+    D3,
+    D4,
+    R1,
+    C1,
+    C2,
+    Pragma,
+}
+
+impl RuleId {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            RuleId::D1 => "D1",
+            RuleId::D2 => "D2",
+            RuleId::D3 => "D3",
+            RuleId::D4 => "D4",
+            RuleId::R1 => "R1",
+            RuleId::C1 => "C1",
+            RuleId::C2 => "C2",
+            RuleId::Pragma => "pragma",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<RuleId> {
+        match s {
+            "D1" => Some(RuleId::D1),
+            "D2" => Some(RuleId::D2),
+            "D3" => Some(RuleId::D3),
+            "D4" => Some(RuleId::D4),
+            "R1" => Some(RuleId::R1),
+            "C1" => Some(RuleId::C1),
+            "C2" => Some(RuleId::C2),
+            _ => None,
+        }
+    }
+
+    /// All suppressable rules (what `allow(...)` accepts).
+    pub fn all() -> [RuleId; 7] {
+        [RuleId::D1, RuleId::D2, RuleId::D3, RuleId::D4, RuleId::R1, RuleId::C1, RuleId::C2]
+    }
+}
+
+impl fmt::Display for RuleId {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.as_str())
+    }
+}
+
+/// One lint finding, anchored at `path:line` (1-based).
+#[derive(Debug, Clone, PartialEq, Eq, PartialOrd, Ord)]
+pub struct Finding {
+    pub path: String,
+    pub line: usize,
+    pub rule: RuleId,
+    pub message: String,
+}
+
+impl Finding {
+    fn new(path: &str, line: usize, rule: RuleId, message: impl Into<String>) -> Self {
+        Finding { path: path.to_string(), line, rule, message: message.into() }
+    }
+}
+
+/// What the lint should treat as sanctioned / exempt. [`Default`] is
+/// the repo's policy; fixture tests construct their own.
+#[derive(Debug, Clone)]
+pub struct LintConfig {
+    /// Path fragments where wall-clock reads (D3) are sanctioned.
+    pub d3_sanctioned: Vec<String>,
+    /// Path fragments where thread creation (D4) is sanctioned.
+    pub d4_sanctioned: Vec<String>,
+    /// File basenames exempt from R1 (binary entry points may panic).
+    pub r1_exempt_files: Vec<String>,
+}
+
+impl Default for LintConfig {
+    fn default() -> Self {
+        LintConfig {
+            d3_sanctioned: vec![
+                "util/logging.rs".into(),
+                "benchkit/".into(),
+                "trace/".into(),
+            ],
+            d4_sanctioned: vec![
+                "compute/pool.rs".into(),
+                "cluster/mod.rs".into(),
+                "cluster/plane.rs".into(),
+            ],
+            r1_exempt_files: vec!["main.rs".into()],
+        }
+    }
+}
+
+fn path_matches(path: &str, fragments: &[String]) -> bool {
+    let norm = path.replace('\\', "/");
+    fragments.iter().any(|f| norm.contains(f.as_str()))
+}
+
+fn basename(path: &str) -> &str {
+    path.rsplit(['/', '\\']).next().unwrap_or(path)
+}
+
+// ---------------------------------------------------------------------
+// pragmas
+// ---------------------------------------------------------------------
+
+#[derive(Debug, Default)]
+struct Pragmas {
+    /// (rule, line) pairs that are suppressed.
+    lines: BTreeSet<(RuleId, usize)>,
+    /// Rules suppressed file-wide.
+    file: BTreeSet<RuleId>,
+    /// Malformed-pragma findings.
+    findings: Vec<(usize, String)>,
+}
+
+const MARKER: &str = "mel-lint:";
+
+/// Parse every suppression pragma (the [`MARKER`] comments) in the file.
+fn collect_pragmas(view: &FileView) -> Pragmas {
+    let mut p = Pragmas::default();
+    for (idx, comment) in view.comments.iter().enumerate() {
+        let line = idx + 1;
+        let Some(pos) = comment.find(MARKER) else { continue };
+        let rest = comment[pos + MARKER.len()..].trim_start();
+        let (file_wide, rest) = if let Some(r) = rest.strip_prefix("allow-file") {
+            (true, r)
+        } else if let Some(r) = rest.strip_prefix("allow") {
+            (false, r)
+        } else {
+            p.findings.push((line, format!("malformed pragma: expected `allow(...)` or `allow-file(...)` after `{MARKER}`")));
+            continue;
+        };
+        let rest = rest.trim_start();
+        let Some(rest) = rest.strip_prefix('(') else {
+            p.findings.push((line, "malformed pragma: missing `(` after allow".into()));
+            continue;
+        };
+        let Some(close) = rest.find(')') else {
+            p.findings.push((line, "malformed pragma: missing `)`".into()));
+            continue;
+        };
+        let ids_text = &rest[..close];
+        let justification = rest[close + 1..]
+            .trim_start()
+            .trim_start_matches(['—', '–', '-', ':'])
+            .trim();
+        let mut rules = Vec::new();
+        let mut bad = false;
+        for id in ids_text.split(',') {
+            let id = id.trim();
+            match RuleId::parse(id) {
+                Some(r) => rules.push(r),
+                None => {
+                    p.findings.push((line, format!("unknown rule {id:?} in pragma (expected one of D1 D2 D3 D4 R1 C1 C2)")));
+                    bad = true;
+                }
+            }
+        }
+        if bad {
+            continue;
+        }
+        if rules.is_empty() {
+            p.findings.push((line, "pragma allows no rules".into()));
+            continue;
+        }
+        if justification.is_empty() {
+            p.findings.push((
+                line,
+                "pragma without justification (write `// mel-lint: allow(<rule>) — <why this is safe>`)".into(),
+            ));
+            continue;
+        }
+        if file_wide {
+            p.file.extend(rules);
+            continue;
+        }
+        // trailing pragma → its own line; full-line comment → the next
+        // line that carries code
+        let own_code = view.code.get(idx).map(|c| !c.trim().is_empty()).unwrap_or(false);
+        let target = if own_code {
+            line
+        } else {
+            let mut t = line;
+            for (j, code) in view.code.iter().enumerate().skip(idx + 1) {
+                if !code.trim().is_empty() {
+                    t = j + 1;
+                    break;
+                }
+            }
+            t
+        };
+        for r in rules {
+            p.lines.insert((r, line));
+            p.lines.insert((r, target));
+        }
+    }
+    p
+}
+
+// ---------------------------------------------------------------------
+// token scanning helpers
+// ---------------------------------------------------------------------
+
+struct Scan {
+    chars: Vec<char>,
+    /// char index → 1-based line number
+    line_of: Vec<usize>,
+}
+
+impl Scan {
+    fn new(code_text: &str) -> Self {
+        let chars: Vec<char> = code_text.chars().collect();
+        let mut line_of = Vec::with_capacity(chars.len() + 1);
+        let mut line = 1usize;
+        for &c in &chars {
+            line_of.push(line);
+            if c == '\n' {
+                line += 1;
+            }
+        }
+        line_of.push(line);
+        Scan { chars, line_of }
+    }
+
+    fn line(&self, i: usize) -> usize {
+        self.line_of.get(i).copied().unwrap_or(1)
+    }
+
+    fn is_ident_char(c: char) -> bool {
+        c.is_alphanumeric() || c == '_'
+    }
+
+    /// Every start index where `word` appears as a standalone identifier.
+    fn ident_occurrences(&self, word: &str) -> Vec<usize> {
+        let w: Vec<char> = word.chars().collect();
+        let n = self.chars.len();
+        let mut out = Vec::new();
+        if w.is_empty() || n < w.len() {
+            return out;
+        }
+        for i in 0..=n - w.len() {
+            if self.chars[i..i + w.len()] != w[..] {
+                continue;
+            }
+            if i > 0 && Self::is_ident_char(self.chars[i - 1]) {
+                continue;
+            }
+            if i + w.len() < n && Self::is_ident_char(self.chars[i + w.len()]) {
+                continue;
+            }
+            out.push(i);
+        }
+        out
+    }
+
+    fn skip_ws(&self, mut i: usize) -> usize {
+        while i < self.chars.len() && self.chars[i].is_whitespace() {
+            i += 1;
+        }
+        i
+    }
+
+    fn skip_ws_back(&self, mut i: isize) -> isize {
+        while i >= 0 && self.chars[i as usize].is_whitespace() {
+            i -= 1;
+        }
+        i
+    }
+
+    /// Read the identifier ending at `i` (inclusive); returns its start.
+    fn ident_start(&self, i: isize) -> isize {
+        let mut j = i;
+        while j >= 0 && Self::is_ident_char(self.chars[j as usize]) {
+            j -= 1;
+        }
+        j + 1
+    }
+
+    fn ident_ending_at(&self, i: isize) -> Option<String> {
+        if i < 0 || !Self::is_ident_char(self.chars[i as usize]) {
+            return None;
+        }
+        let s = self.ident_start(i);
+        Some(self.chars[s as usize..=i as usize].iter().collect())
+    }
+
+    /// Given the index of `(`, the index just past its matching `)`.
+    fn skip_call(&self, open: usize) -> Option<usize> {
+        let mut depth = 0i64;
+        for (k, &c) in self.chars.iter().enumerate().skip(open) {
+            match c {
+                '(' => depth += 1,
+                ')' => {
+                    depth -= 1;
+                    if depth == 0 {
+                        return Some(k + 1);
+                    }
+                }
+                _ => {}
+            }
+        }
+        None
+    }
+
+    /// After `i`, is the next non-ws sequence `.ident` with ident in
+    /// `names`? Returns the matched name.
+    fn dot_method_after(&self, i: usize, names: &[&str]) -> Option<String> {
+        let j = self.skip_ws(i);
+        if j >= self.chars.len() || self.chars[j] != '.' {
+            return None;
+        }
+        let k = self.skip_ws(j + 1);
+        let mut e = k;
+        while e < self.chars.len() && Self::is_ident_char(self.chars[e]) {
+            e += 1;
+        }
+        let ident: String = self.chars[k..e].iter().collect();
+        names.contains(&ident.as_str()).then_some(ident)
+    }
+}
+
+// ---------------------------------------------------------------------
+// the rules
+// ---------------------------------------------------------------------
+
+/// D1 — `partial_cmp(...)` directly chained into `unwrap()`/`expect()`.
+fn rule_d1(scan: &Scan, path: &str, out: &mut Vec<Finding>) {
+    for i in scan.ident_occurrences("partial_cmp") {
+        let open = scan.skip_ws(i + "partial_cmp".len());
+        if open >= scan.chars.len() || scan.chars[open] != '(' {
+            continue;
+        }
+        let Some(end) = scan.skip_call(open) else { continue };
+        if let Some(m) = scan.dot_method_after(end, &["unwrap", "expect"]) {
+            out.push(Finding::new(
+                path,
+                scan.line(i),
+                RuleId::D1,
+                format!("`partial_cmp().{m}()` panics on NaN and hides -0.0/0.0 ties — use `f64::total_cmp` (PR 5 merge-path bug class)"),
+            ));
+        }
+    }
+}
+
+const HASH_ITER_METHODS: [&str; 8] =
+    ["iter", "iter_mut", "keys", "values", "values_mut", "into_iter", "drain", "retain"];
+
+/// Identifiers in this file declared (or annotated) as HashMap/HashSet.
+fn hash_named_idents(scan: &Scan) -> BTreeSet<String> {
+    let mut names = BTreeSet::new();
+    for ty in ["HashMap", "HashSet"] {
+        for occ in scan.ident_occurrences(ty) {
+            // walk back over an optional `std::collections::` path
+            let mut j = occ as isize - 1;
+            loop {
+                let k = scan.skip_ws_back(j);
+                if k >= 1
+                    && scan.chars[k as usize] == ':'
+                    && scan.chars[k as usize - 1] == ':'
+                {
+                    let id_end = scan.skip_ws_back(k - 2);
+                    match scan.ident_ending_at(id_end) {
+                        Some(_) => j = scan.ident_start(id_end) - 1,
+                        None => break,
+                    }
+                } else {
+                    j = k;
+                    break;
+                }
+            }
+            if j < 0 {
+                continue;
+            }
+            let c = scan.chars[j as usize];
+            // `name: HashMap<...>` (field, param, or annotated let) —
+            // a single colon only, `::` was consumed above
+            if c == ':' && (j == 0 || scan.chars[j as usize - 1] != ':') {
+                let id_end = scan.skip_ws_back(j - 1);
+                if let Some(name) = scan.ident_ending_at(id_end) {
+                    if name != "mut" {
+                        names.insert(name);
+                    }
+                }
+            }
+            // `name = HashMap::new()` / `let mut name = HashMap::...`
+            if c == '=' {
+                let before = scan.skip_ws_back(j - 1);
+                if let Some(name) = scan.ident_ending_at(before) {
+                    names.insert(name);
+                }
+            }
+        }
+    }
+    names
+}
+
+/// D2 — iteration over a HashMap/HashSet-typed binding.
+fn rule_d2(scan: &Scan, path: &str, out: &mut Vec<Finding>) {
+    let names = hash_named_idents(scan);
+    if names.is_empty() {
+        return;
+    }
+    // method-call iteration: `name.iter()`, `self.name.drain(..)`, ...
+    for m in HASH_ITER_METHODS {
+        for occ in scan.ident_occurrences(m) {
+            let after = scan.skip_ws(occ + m.len());
+            if after >= scan.chars.len() || scan.chars[after] != '(' {
+                continue;
+            }
+            let dot = scan.skip_ws_back(occ as isize - 1);
+            if dot < 0 || scan.chars[dot as usize] != '.' {
+                continue;
+            }
+            let recv_end = scan.skip_ws_back(dot - 1);
+            let Some(recv) = scan.ident_ending_at(recv_end) else { continue };
+            if names.contains(&recv) {
+                out.push(Finding::new(
+                    path,
+                    scan.line(occ),
+                    RuleId::D2,
+                    format!("iteration over hash-ordered `{recv}` via `.{m}()` is nondeterministic — use BTreeMap/BTreeSet or collect-and-sort (PR 9 param_server bug class)"),
+                ));
+            }
+        }
+    }
+    // `for pat in [&[mut]] name {` / `for pat in &self.name {`
+    for occ in scan.ident_occurrences("for") {
+        let mut k = occ + 3;
+        // find ` in ` at paren depth 0 before the loop body `{`
+        let mut depth = 0i64;
+        let mut in_pos = None;
+        while k < scan.chars.len() {
+            match scan.chars[k] {
+                '(' | '[' => depth += 1,
+                ')' | ']' => depth -= 1,
+                '{' | ';' if depth == 0 => break,
+                'i' if depth == 0
+                    && scan.chars.get(k + 1) == Some(&'n')
+                    && !Scan::is_ident_char(*scan.chars.get(k + 2).unwrap_or(&'x'))
+                    && k > 0
+                    && !Scan::is_ident_char(scan.chars[k - 1]) =>
+                {
+                    in_pos = Some(k);
+                    break;
+                }
+                _ => {}
+            }
+            k += 1;
+        }
+        let Some(inp) = in_pos else { continue };
+        // expression between `in` and the body `{`
+        let mut e = inp + 2;
+        let mut depth = 0i64;
+        let start = e;
+        while e < scan.chars.len() {
+            match scan.chars[e] {
+                '(' | '[' => depth += 1,
+                ')' | ']' => depth -= 1,
+                '{' if depth == 0 => break,
+                _ => {}
+            }
+            e += 1;
+        }
+        let expr: String = scan.chars[start..e].iter().collect();
+        let expr = expr.trim().trim_start_matches('&').trim_start();
+        let expr = expr.strip_prefix("mut ").unwrap_or(expr).trim();
+        if expr.contains('(') || expr.is_empty() {
+            continue; // method calls are handled above; exprs we can't resolve pass
+        }
+        let last = expr.rsplit('.').next().unwrap_or(expr).trim();
+        if names.contains(last) {
+            out.push(Finding::new(
+                path,
+                scan.line(occ),
+                RuleId::D2,
+                format!("`for … in {expr}` iterates a hash-ordered collection — use BTreeMap/BTreeSet or collect-and-sort (PR 9 param_server bug class)"),
+            ));
+        }
+    }
+}
+
+/// D3 — wall-clock reads outside the sanctioned modules. Test code is
+/// exempt (tests may time themselves; they never feed sim state).
+fn rule_d3(scan: &Scan, view: &FileView, path: &str, cfg: &LintConfig, out: &mut Vec<Finding>) {
+    if path_matches(path, &cfg.d3_sanctioned) {
+        return;
+    }
+    let in_test = |line: usize| view.in_test.get(line - 1).copied().unwrap_or(false);
+    for token in ["Instant", "SystemTime"] {
+        for occ in scan.ident_occurrences(token) {
+            if in_test(scan.line(occ)) {
+                continue;
+            }
+            let j = scan.skip_ws(occ + token.len());
+            let rest: String = scan.chars[j..scan.chars.len().min(j + 8)].iter().collect();
+            if rest.starts_with("::now") {
+                out.push(Finding::new(
+                    path,
+                    scan.line(occ),
+                    RuleId::D3,
+                    format!("`{token}::now` outside sanctioned wall-clock modules ({}) — wall time must never feed simulated state", cfg.d3_sanctioned.join(", ")),
+                ));
+            }
+        }
+    }
+}
+
+/// D4 — thread creation outside the sanctioned concurrency modules.
+/// Test code is exempt (test harnesses spawn helper threads freely).
+fn rule_d4(scan: &Scan, view: &FileView, path: &str, cfg: &LintConfig, out: &mut Vec<Finding>) {
+    if path_matches(path, &cfg.d4_sanctioned) {
+        return;
+    }
+    let in_test = |line: usize| view.in_test.get(line - 1).copied().unwrap_or(false);
+    for occ in scan.ident_occurrences("thread") {
+        if in_test(scan.line(occ)) {
+            continue;
+        }
+        let j = scan.skip_ws(occ + "thread".len());
+        let rest: String = scan.chars[j..scan.chars.len().min(j + 12)].iter().collect();
+        for tail in ["::spawn", "::Builder", "::scope"] {
+            if rest.starts_with(tail) {
+                out.push(Finding::new(
+                    path,
+                    scan.line(occ),
+                    RuleId::D4,
+                    format!("`thread{tail}` outside sanctioned modules ({}) bypasses the shared compute pool's oversubscription invariant", cfg.d4_sanctioned.join(", ")),
+                ));
+            }
+        }
+    }
+}
+
+/// R1 — `unwrap()`/`expect()`/`panic!` in library code.
+fn rule_r1(scan: &Scan, view: &FileView, path: &str, cfg: &LintConfig, out: &mut Vec<Finding>) {
+    if cfg.r1_exempt_files.iter().any(|f| basename(path) == f) {
+        return;
+    }
+    let in_test = |line: usize| view.in_test.get(line - 1).copied().unwrap_or(false);
+    for occ in scan.ident_occurrences("unwrap") {
+        let dot = scan.skip_ws_back(occ as isize - 1);
+        if dot < 0 || scan.chars[dot as usize] != '.' {
+            continue;
+        }
+        let open = scan.skip_ws(occ + "unwrap".len());
+        if open < scan.chars.len() && scan.chars[open] == '(' {
+            let close = scan.skip_ws(open + 1);
+            if close < scan.chars.len() && scan.chars[close] == ')' && !in_test(scan.line(occ)) {
+                out.push(Finding::new(
+                    path,
+                    scan.line(occ),
+                    RuleId::R1,
+                    "`.unwrap()` in library code — propagate the error, or document the invariant with a justified pragma",
+                ));
+            }
+        }
+    }
+    for occ in scan.ident_occurrences("expect") {
+        let dot = scan.skip_ws_back(occ as isize - 1);
+        if dot < 0 || scan.chars[dot as usize] != '.' {
+            continue;
+        }
+        let open = scan.skip_ws(occ + "expect".len());
+        if open < scan.chars.len() && scan.chars[open] == '(' && !in_test(scan.line(occ)) {
+            out.push(Finding::new(
+                path,
+                scan.line(occ),
+                RuleId::R1,
+                "`.expect(...)` in library code — propagate the error, or document the invariant with a justified pragma",
+            ));
+        }
+    }
+    for occ in scan.ident_occurrences("panic") {
+        let bang = scan.skip_ws(occ + "panic".len());
+        if bang < scan.chars.len() && scan.chars[bang] == '!' && !in_test(scan.line(occ)) {
+            out.push(Finding::new(
+                path,
+                scan.line(occ),
+                RuleId::R1,
+                "`panic!` in library code — return an error, or document why aborting is correct with a justified pragma",
+            ));
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// per-file driver
+// ---------------------------------------------------------------------
+
+/// Lint result for one source file.
+#[derive(Debug, Default)]
+pub struct SourceLint {
+    pub findings: Vec<Finding>,
+    /// Findings silenced by a justified pragma.
+    pub suppressed: usize,
+}
+
+/// Run every code rule over one file. `path` decides the D3/D4
+/// sanction lists and the R1 `main.rs` exemption; use repo-relative
+/// paths with `/` separators.
+pub fn lint_source(path: &str, text: &str, cfg: &LintConfig) -> SourceLint {
+    let view = super::lexer::lex(text);
+    let scan = Scan::new(&view.code_text());
+    let mut found = Vec::new();
+    rule_d1(&scan, path, &mut found);
+    rule_d2(&scan, path, &mut found);
+    rule_d3(&scan, &view, path, cfg, &mut found);
+    rule_d4(&scan, &view, path, cfg, &mut found);
+    rule_r1(&scan, &view, path, cfg, &mut found);
+    let pragmas = collect_pragmas(&view);
+    let mut out = SourceLint::default();
+    for f in found {
+        if pragmas.file.contains(&f.rule) || pragmas.lines.contains(&(f.rule, f.line)) {
+            out.suppressed += 1;
+        } else {
+            out.findings.push(f);
+        }
+    }
+    for (line, msg) in pragmas.findings {
+        out.findings.push(Finding::new(path, line, RuleId::Pragma, msg));
+    }
+    out.findings.sort();
+    out
+}
+
+/// The pragma coverage map for C-rule callers: (rule, line) pairs plus
+/// file-wide rules, so project-level checks anchored in source files
+/// can honor line pragmas too.
+pub fn pragma_cover(text: &str) -> (BTreeSet<(RuleId, usize)>, BTreeSet<RuleId>) {
+    let view = super::lexer::lex(text);
+    let p = collect_pragmas(&view);
+    (p.lines, p.file)
+}
+
+/// Extract string-literal bodies (line, body) — the C2 env-registry
+/// check consumes these.
+pub fn string_literals(text: &str) -> Vec<super::lexer::StrLit> {
+    super::lexer::lex(text).strings
+}
+
+/// Group findings per rule for summaries.
+pub fn count_by_rule(findings: &[Finding]) -> BTreeMap<&'static str, usize> {
+    let mut m = BTreeMap::new();
+    for f in findings {
+        *m.entry(f.rule.as_str()).or_insert(0) += 1;
+    }
+    m
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn lint(path: &str, src: &str) -> Vec<Finding> {
+        lint_source(path, src, &LintConfig::default()).findings
+    }
+
+    #[test]
+    fn d1_fires_with_exact_line() {
+        let src = "fn f(v: &mut Vec<f64>) {\n    v.sort_by(|a, b| a.partial_cmp(b).unwrap());\n}\n";
+        let fs = lint("rust/src/x.rs", src);
+        assert_eq!(fs.len(), 1, "{fs:?}");
+        assert_eq!((fs[0].rule, fs[0].line), (RuleId::D1, 2));
+        // total_cmp replacement is clean
+        let ok = "fn f(v: &mut Vec<f64>) {\n    v.sort_by(|a, b| a.total_cmp(b));\n}\n";
+        assert!(lint("rust/src/x.rs", ok).is_empty());
+        // partial_cmp with a NaN-safe fallback is clean too
+        let ok2 = "fn g(a: f64, b: f64) -> std::cmp::Ordering {\n    a.partial_cmp(&b).unwrap_or(std::cmp::Ordering::Equal)\n}\n";
+        assert!(lint("rust/src/x.rs", ok2).is_empty());
+    }
+
+    #[test]
+    fn d2_fires_on_hash_iteration_not_lookup() {
+        let src = "use std::collections::HashMap;\nfn f() {\n    let mut m: HashMap<u32, f64> = HashMap::new();\n    m.insert(1, 2.0);\n    let _ = m.get(&1);\n    for (k, v) in &m {\n        drop((k, v));\n    }\n    let _: Vec<_> = m.keys().collect();\n}\n";
+        let fs = lint("rust/src/x.rs", src);
+        let d2: Vec<_> = fs.iter().filter(|f| f.rule == RuleId::D2).collect();
+        assert_eq!(d2.len(), 2, "{fs:?}");
+        assert_eq!(d2[0].line, 6);
+        assert_eq!(d2[1].line, 9);
+    }
+
+    #[test]
+    fn d2_resolves_self_fields() {
+        let src = "struct S { open: std::collections::HashMap<u64, f64> }\nimpl S {\n    fn all(&self) -> Vec<u64> {\n        self.open.keys().copied().collect()\n    }\n}\n";
+        let fs = lint("rust/src/x.rs", src);
+        assert_eq!(fs.len(), 1, "{fs:?}");
+        assert_eq!((fs[0].rule, fs[0].line), (RuleId::D2, 4));
+    }
+
+    #[test]
+    fn d3_sanctioned_paths_pass() {
+        let src = "fn t() -> std::time::Instant { std::time::Instant::now() }\n";
+        assert_eq!(lint("rust/src/x.rs", src).len(), 1);
+        assert!(lint("rust/src/benchkit/mod.rs", src).is_empty());
+        assert!(lint("rust/src/util/logging.rs", src).is_empty());
+        assert!(lint("rust/src/trace/export.rs", src).is_empty());
+    }
+
+    #[test]
+    fn d4_thread_spawn_confinement() {
+        let src = "fn f() { std::thread::spawn(|| {}); }\n";
+        let fs = lint("rust/src/metrics/mod.rs", src);
+        assert_eq!((fs[0].rule, fs[0].line), (RuleId::D4, 1));
+        assert!(lint("rust/src/compute/pool.rs", src).is_empty());
+        assert!(lint("rust/src/cluster/plane.rs", src).is_empty());
+    }
+
+    #[test]
+    fn r1_unwrap_expect_panic_but_not_variants() {
+        let src = "fn f(x: Option<u32>) -> u32 {\n    let a = x.unwrap();\n    let b = x.expect(\"reason\");\n    if a + b == 0 { panic!(\"boom\"); }\n    let c = x.unwrap_or(0);\n    let d = x.unwrap_or_else(|| 1);\n    a + b + c + d\n}\n";
+        let fs = lint("rust/src/x.rs", src);
+        assert_eq!(fs.len(), 3, "{fs:?}");
+        assert_eq!(
+            fs.iter().map(|f| f.line).collect::<Vec<_>>(),
+            vec![2, 3, 4]
+        );
+        assert!(fs.iter().all(|f| f.rule == RuleId::R1));
+    }
+
+    #[test]
+    fn r1_exempts_tests_and_main() {
+        let src = "fn lib() {}\n#[cfg(test)]\nmod tests {\n    #[test]\n    fn t() { None::<u32>.unwrap(); }\n}\n";
+        assert!(lint("rust/src/x.rs", src).is_empty());
+        let m = "fn main() { std::fs::read(\"x\").unwrap(); }\n";
+        assert!(lint("rust/src/main.rs", m).is_empty());
+        assert_eq!(lint("rust/src/lib2.rs", m).len(), 1);
+    }
+
+    #[test]
+    fn tokens_in_strings_and_comments_do_not_fire() {
+        let src = "// calling .unwrap() here would panic!\nfn f() -> &'static str {\n    \"partial_cmp().unwrap() or panic!(now) or Instant::now or thread::spawn\"\n}\n";
+        assert!(lint("rust/src/x.rs", src).is_empty());
+    }
+
+    #[test]
+    fn pragmas_suppress_with_justification_only() {
+        let trailing = "fn f(x: Option<u32>) -> u32 {\n    x.unwrap() // mel-lint: allow(R1) — invariant: caller checked is_some\n}\n";
+        assert!(lint("rust/src/x.rs", trailing).is_empty());
+        let full_line = "fn f(x: Option<u32>) -> u32 {\n    // mel-lint: allow(R1) — invariant: caller checked is_some\n    x.unwrap()\n}\n";
+        assert!(lint("rust/src/x.rs", full_line).is_empty());
+        // no justification → the pragma itself is the finding and the
+        // R1 finding stays
+        let bare = "fn f(x: Option<u32>) -> u32 {\n    x.unwrap() // mel-lint: allow(R1)\n}\n";
+        let fs = lint("rust/src/x.rs", bare);
+        assert_eq!(fs.len(), 2, "{fs:?}");
+        assert!(fs.iter().any(|f| f.rule == RuleId::Pragma));
+        assert!(fs.iter().any(|f| f.rule == RuleId::R1));
+        // unknown rule id → pragma finding
+        let unk = "fn f() {} // mel-lint: allow(Z9) — whatever\n";
+        let fs = lint("rust/src/x.rs", unk);
+        assert_eq!(fs.len(), 1);
+        assert_eq!(fs[0].rule, RuleId::Pragma);
+    }
+
+    #[test]
+    fn allow_file_covers_whole_file() {
+        let src = "// mel-lint: allow-file(D3) — this module *is* the wall-clock boundary\nfn a() { let _ = std::time::Instant::now(); }\nfn b() { let _ = std::time::Instant::now(); }\n";
+        let r = lint_source("rust/src/x.rs", src, &LintConfig::default());
+        assert!(r.findings.is_empty(), "{:?}", r.findings);
+        assert_eq!(r.suppressed, 2);
+    }
+
+    #[test]
+    fn pragma_only_covers_named_rule() {
+        let src = "fn f(x: Option<f64>, v: &mut Vec<f64>) {\n    // mel-lint: allow(R1) — only R1 here\n    v.sort_by(|a, b| a.partial_cmp(b).unwrap());\n}\n";
+        let fs = lint("rust/src/x.rs", src);
+        assert_eq!(fs.len(), 1, "{fs:?}");
+        assert_eq!(fs[0].rule, RuleId::D1);
+    }
+}

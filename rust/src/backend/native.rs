@@ -137,6 +137,14 @@ struct Forward {
     fw: Vec<Vec<f32>>,
 }
 
+impl Forward {
+    /// The logits — the last layer's activations.
+    fn logits(&self) -> &[f32] {
+        // mel-lint: allow(R1) — every forward_* pushes one activation per layer and unpack() rejects empty layer lists
+        self.acts.last().expect("forward produced no activations")
+    }
+}
+
 /// Validated view over one call's inputs.
 struct Network<'a> {
     layers: &'a [usize],
@@ -210,7 +218,7 @@ impl<'a> Network<'a> {
         } else {
             None
         };
-        let classes = *layers.last().unwrap();
+        let classes = *layers.last().ok_or("model needs at least one layer")?;
         let y = match &y.data {
             TensorData::I32(v) => v.as_slice(),
             _ => return Err("labels must be int32".into()),
@@ -228,6 +236,12 @@ impl<'a> Network<'a> {
             mode: ExecMode::for_bits(call.precision_bits),
             lr,
         })
+    }
+
+    /// Output-class count — the last layer's width.
+    fn classes(&self) -> usize {
+        // mel-lint: allow(R1) — unpack() rejects empty layer lists before a Network exists
+        *self.layers.last().expect("layers validated non-empty in unpack")
     }
 
     /// Forward pass under the call's [`ExecMode`].
@@ -261,7 +275,8 @@ impl<'a> Network<'a> {
                 }
             }
             acts.push(z);
-            cur = acts.last().unwrap();
+            // mel-lint: allow(R1) — `acts` received a push two lines above
+            cur = acts.last().expect("activation pushed above");
         }
         Forward { acts, q_in: Vec::new(), q_w: Vec::new(), fx: Vec::new(), fw: Vec::new() }
     }
@@ -304,7 +319,8 @@ impl<'a> Network<'a> {
                 kernels::fake_quantize(&mut z, bits);
             }
             acts.push(z);
-            cur = acts.last().unwrap();
+            // mel-lint: allow(R1) — `acts` received a push two lines above
+            cur = acts.last().expect("activation pushed above");
         }
         Forward { acts, q_in: Vec::new(), q_w: Vec::new(), fx, fw }
     }
@@ -322,7 +338,8 @@ impl<'a> Network<'a> {
             let (rows, cols) = (self.layers[i], self.layers[i + 1]);
             q_w.push(kernels::quantize_i8(w, bits));
             let qa = &q_in[i];
-            let qw = q_w.last().unwrap();
+            // mel-lint: allow(R1) — `q_w` received a push two lines above
+            let qw = q_w.last().expect("quantized weights pushed above");
             let mut acc = vec![0i32; self.batch * cols];
             kernels::par_matmul_q8(pool, &qa.q, &qw.q, self.batch, rows, cols, &mut acc);
             let s = qa.scale as f64 * qw.scale as f64;
@@ -351,7 +368,7 @@ impl<'a> Network<'a> {
     /// Masked sum softmax-CE over the logits plus d(loss)/d(logits).
     /// Rows with `mask = 0` contribute exactly nothing.
     fn loss_and_dlogits(&self, logits: &[f32]) -> (f64, Vec<f32>) {
-        let classes = *self.layers.last().unwrap();
+        let classes = self.classes();
         let mut loss = 0.0f64;
         let mut g = vec![0.0f32; self.batch * classes];
         for r in 0..self.batch {
@@ -379,7 +396,7 @@ impl<'a> Network<'a> {
     /// cotangent masked by relu'(z) from the stored activations.
     fn backward(&self, pool: &ComputePool, fwd: &Forward) -> (Vec<(Vec<f32>, Vec<f32>)>, f64) {
         let n_layers = self.layers.len() - 1;
-        let (loss, mut g) = self.loss_and_dlogits(fwd.acts.last().unwrap());
+        let (loss, mut g) = self.loss_and_dlogits(fwd.logits());
         let mut grads: Vec<(Vec<f32>, Vec<f32>)> = Vec::with_capacity(n_layers);
         for i in (0..n_layers).rev() {
             let (rows, cols) = (self.layers[i], self.layers[i + 1]);
@@ -470,7 +487,7 @@ impl<'a> Network<'a> {
     /// fixed-order reduction whose every operation matches the old
     /// serial loop bit for bit.
     fn eval_rows(&self, pool: &ComputePool, logits: &[f32]) -> (f64, f64) {
-        let classes = *self.layers.last().unwrap();
+        let classes = self.classes();
         let mut row_loss = vec![0.0f64; self.batch];
         let mut row_pred = vec![0u32; self.batch];
         // MAC-equivalent work estimate: the stable lse costs an exp and
@@ -569,6 +586,7 @@ impl<'a> Network<'a> {
     /// grads never leave the backend and the zero/accumulate/apply
     /// passes disappear.
     fn fused_step(&self, pool: &ComputePool) -> Result<Vec<Tensor>, String> {
+        // mel-lint: allow(R1) — unpack() always populates lr for FusedStep calls before dispatching here
         let lr = self.lr.expect("fused_step call carries lr");
         let fwd = self.forward(pool);
         let (grads, loss) = self.backward(pool, &fwd);
@@ -593,7 +611,7 @@ impl<'a> Network<'a> {
     /// `[loss_sum, correct_sum, weight_sum]`.
     fn eval_batch(&self, pool: &ComputePool) -> Result<Vec<Tensor>, String> {
         let fwd = self.forward(pool);
-        let logits = fwd.acts.last().unwrap();
+        let logits = fwd.logits();
         let (loss, correct) = self.eval_rows(pool, logits);
         Ok(vec![
             Tensor::scalar_f32(loss as f32),

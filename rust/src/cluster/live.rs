@@ -180,12 +180,13 @@ pub(crate) fn serve(
             applied_cut = cut;
             ps.flush(&mut la, cut)?;
         }
-        if opts.checkpoint_every > 0
-            && opts.journal_dir.is_some()
-            && la.applies() - last_ck_applies >= opts.checkpoint_every
-        {
-            last_ck_applies = la.applies();
-            write_checkpoint(ps, &la, opts.journal_dir.as_deref().unwrap())?;
+        if let Some(journal_dir) = opts.journal_dir.as_deref() {
+            if opts.checkpoint_every > 0
+                && la.applies() - last_ck_applies >= opts.checkpoint_every
+            {
+                last_ck_applies = la.applies();
+                write_checkpoint(ps, &la, journal_dir)?;
+            }
         }
         if let Some(halt) = opts.halt_after_applies {
             if la.applies() >= halt {

@@ -420,6 +420,7 @@ fn run_shard(
     skip_n: u64,
 ) -> Result<ShardReport, AllocError> {
     if cfg.inject_panic_shard == Some(shard) {
+        // mel-lint: allow(R1) — deliberate panic: the crash-resume suite injects it to prove shard panics join cleanly
         panic!("injected shard panic (test hook)");
     }
     let shard_seed = shard_seed(cfg.seed, spec.seed_offset, shard);
@@ -665,6 +666,7 @@ fn run_churn_shard(
                 if active[learner].is_none() || t != expected_upload[learner] {
                     continue;
                 }
+                // mel-lint: allow(R1) — the stale-upload guard two lines above returns early when the slot is empty
                 let lease = active[learner].take().expect("checked above");
                 let missed = t > lease.deadline + TIME_EPS;
                 let staleness = applied - snapshot[learner];
@@ -749,6 +751,7 @@ fn run_churn_shard(
                         skip_left -= 1;
                     } else {
                         let mi = inflight_floor(&active, &dispatched_at);
+                        // mel-lint: allow(R1) — `updates` received a push earlier in this same event arm
                         let rec = updates.last().expect("just pushed").clone();
                         let _ = tx.send((shard, ShardMsg::Update { rec, min_inflight: mi }));
                         last_floor = last_floor.max(t.min(mi));

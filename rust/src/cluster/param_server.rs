@@ -46,7 +46,7 @@
 //! the 1-shard replay reproduce [`crate::coordinator::Trainer`]'s
 //! parameters bit-for-bit.
 
-use std::collections::{BTreeMap, BTreeSet, HashMap};
+use std::collections::{BTreeMap, BTreeSet};
 use std::sync::Arc;
 
 use crate::backend::Call;
@@ -337,7 +337,7 @@ impl ParamServer {
             AggregationMode::PerUpdate => ApplyState::PerUpdate {
                 cohorts: BTreeMap::new(),
                 events: BTreeSet::new(),
-                open: HashMap::new(),
+                open: BTreeMap::new(),
             },
             AggregationMode::Rounds => ApplyState::Rounds { pending: BTreeMap::new() },
         };
@@ -371,7 +371,12 @@ impl ParamServer {
                         u.learner,
                         f64::from_bits(disp)
                     );
-                    let old_apply = members.iter().map(|m| time_bits(m.uploaded_at)).max().unwrap();
+                    let old_apply = members
+                        .iter()
+                        .map(|m| time_bits(m.uploaded_at))
+                        .max()
+                        // mel-lint: allow(R1) — `members` is non-empty in this branch, so max() exists
+                        .expect("non-empty");
                     // keep members learner-sorted: the cohort's batch
                     // draws align to this order at dispatch time
                     let pos = members.partition_point(|m| m.learner < u.learner);
@@ -580,6 +585,7 @@ impl ParamServer {
             if time_bits((r + 1) as f64 * period) > cut {
                 break;
             }
+            // mel-lint: allow(R1) — `r` was just peeked from this very map
             let mut recs = pending.remove(&r).expect("peeked key");
             recs.sort_by_key(|(s, u)| {
                 (*s, u.learner, time_bits(u.uploaded_at), time_bits(u.dispatched_at))
@@ -702,8 +708,10 @@ enum ApplyState {
         /// walk order (apply before dispatch at equal instants).
         events: BTreeSet<(u64, u8, usize, u64)>,
         /// Dispatched-but-unapplied cohorts: the global snapshot they
-        /// trained from plus their drawn batch index sets.
-        open: HashMap<(usize, u64), (ParamSet, Vec<Vec<usize>>)>,
+        /// trained from plus their drawn batch index sets. Keyed
+        /// `(shard, dispatch_bits)` in a `BTreeMap` so every walk over
+        /// the open set is in canonical order.
+        open: BTreeMap<(usize, u64), (ParamSet, Vec<Vec<usize>>)>,
     },
     Rounds {
         /// Round index → buffered `(shard, record)` members.
@@ -751,7 +759,9 @@ pub(crate) struct OpenCohort {
 impl ParamServer {
     /// Snapshot the stream + server state for crash recovery.
     pub(crate) fn capture_checkpoint(&self, la: &LiveApply) -> ServerCheckpoint {
-        let mut open: Vec<OpenCohort> = match &la.state {
+        // the BTreeMap walks `(shard, disp_bits)` in canonical order, so
+        // the serialized form is diffable and bit-stable for free
+        let open: Vec<OpenCohort> = match &la.state {
             ApplyState::PerUpdate { open, .. } => open
                 .iter()
                 .map(|(&(shard, disp_bits), (snapshot, idx))| OpenCohort {
@@ -763,8 +773,6 @@ impl ParamServer {
                 .collect(),
             ApplyState::Rounds { .. } => Vec::new(),
         };
-        // HashMap iteration order is nondeterministic — canonicalize
-        open.sort_by_key(|o| (o.shard, o.disp_bits));
         ServerCheckpoint {
             cut_bits: la.cut_bits,
             applies: la.acc.applies,

@@ -45,6 +45,13 @@ use std::thread::JoinHandle;
 /// or validates against this.
 pub const MAX_THREADS: usize = 1024;
 
+/// Poison-tolerant lock. A panicking task already flags its run through
+/// the [`DoneGuard`], so a poisoned mutex carries no information the
+/// pool does not have — recover the guard and keep the pool alive.
+fn locked<T>(m: &Mutex<T>) -> std::sync::MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(std::sync::PoisonError::into_inner)
+}
+
 /// A queued unit of work. The `'static` here is a lie told only inside
 /// this module: jobs are lifetime-erased scoped closures, and `run`
 /// never returns while one is alive.
@@ -82,7 +89,7 @@ impl Latch {
     }
 
     fn count_down(&self, panicked: bool) {
-        let mut s = self.state.lock().unwrap();
+        let mut s = locked(&self.state);
         s.pending -= 1;
         if panicked {
             s.panicked = true;
@@ -94,9 +101,9 @@ impl Latch {
 
     /// Block until every task settled; returns whether any panicked.
     fn wait(&self) -> bool {
-        let mut s = self.state.lock().unwrap();
+        let mut s = locked(&self.state);
         while s.pending > 0 {
-            s = self.done_cv.wait(s).unwrap();
+            s = self.done_cv.wait(s).unwrap_or_else(std::sync::PoisonError::into_inner);
         }
         s.panicked
     }
@@ -150,6 +157,7 @@ impl ComputePool {
                         crate::trace::set_worker(i as u32);
                         worker_main(&q)
                     })
+                    // mel-lint: allow(R1) — thread-spawn failure this early is unrecoverable; MAX_THREADS caps the count
                     .expect("spawn compute worker")
             })
             .collect();
@@ -186,7 +194,7 @@ impl ComputePool {
         );
         let latch = Arc::new(Latch::new(tasks.len()));
         {
-            let mut q = self.queue.state.lock().unwrap();
+            let mut q = locked(&self.queue.state);
             for task in tasks {
                 let mut guard = DoneGuard { latch: Arc::clone(&latch), completed: false };
                 let job: Box<dyn FnOnce() + Send + 'scope> = Box::new(move || {
@@ -213,6 +221,7 @@ impl ComputePool {
         }
         self.queue.work_cv.notify_all();
         if latch.wait() {
+            // mel-lint: allow(R1) — deliberate re-raise: a task panic must propagate to the submitter
             panic!("compute pool task panicked");
         }
     }
@@ -220,7 +229,7 @@ impl ComputePool {
 
 impl Drop for ComputePool {
     fn drop(&mut self) {
-        self.queue.state.lock().unwrap().shutdown = true;
+        locked(&self.queue.state).shutdown = true;
         self.queue.work_cv.notify_all();
         for w in self.workers.drain(..) {
             let _ = w.join();
@@ -231,7 +240,7 @@ impl Drop for ComputePool {
 fn worker_main(queue: &Queue) {
     loop {
         let job = {
-            let mut s = queue.state.lock().unwrap();
+            let mut s = locked(&queue.state);
             loop {
                 if let Some(job) = s.jobs.pop_front() {
                     break Some(job);
@@ -239,7 +248,7 @@ fn worker_main(queue: &Queue) {
                 if s.shutdown {
                     break None;
                 }
-                s = queue.work_cv.wait(s).unwrap();
+                s = queue.work_cv.wait(s).unwrap_or_else(std::sync::PoisonError::into_inner);
             }
         };
         match job {

@@ -238,7 +238,8 @@ pub fn chunk_plan(
 ) -> Vec<(usize, usize, usize)> {
     let buckets = man.buckets_for(arch, function, layers);
     assert!(!buckets.is_empty(), "no buckets for {arch}/{function} with layers {layers:?}");
-    let largest = *buckets.last().unwrap();
+    // mel-lint: allow(R1) — the assert one line above guarantees a non-empty bucket list
+    let largest = *buckets.last().expect("non-empty buckets");
     let mut plan = Vec::new();
     let mut lo = 0;
     while lo < n {

@@ -252,6 +252,7 @@ impl Trainer {
         // ---- local learning (real compute, fanned out over threads);
         // each learner runs its own lease count τ_k (uniform in barrier
         // mode, per-learner under an async-capable planner)
+        // mel-lint: allow(D3) — wall-clock compute measurement for the report only; sim time comes from the core
         let wall0 = std::time::Instant::now();
         let handle = self.engine.handle();
         let grad_call = Call::grad_step(&self.core.scenario.model);
@@ -260,6 +261,7 @@ impl Trainer {
         let global = &self.global;
         let train_set = &self.train_set;
 
+        // mel-lint: allow(D4) — scoped learner fan-out, bounded by the cycle's learner count; compute inside still routes through the shared pool
         let results: Vec<anyhow::Result<(f64, ParamSet)>> = std::thread::scope(|s| {
             let mut joins = Vec::new();
             for (k, idx) in batches.iter().enumerate() {
@@ -275,7 +277,13 @@ impl Trainer {
                     Ok((idx.len() as f64, local))
                 }));
             }
-            joins.into_iter().map(|j| j.join().expect("learner thread panicked")).collect()
+            joins
+                .into_iter()
+                .map(|j| match j.join() {
+                    Ok(r) => r,
+                    Err(_) => Err(anyhow::anyhow!("learner thread panicked")),
+                })
+                .collect()
         });
         let mut weighted = Vec::new();
         for r in results {

@@ -50,6 +50,7 @@
 //! ```
 
 pub mod util;
+pub mod analysis;
 pub mod trace;
 pub mod testkit;
 pub mod benchkit;

@@ -11,6 +11,7 @@
 //!              [--churners N] --out results/trace [--format chrome|prom|csv|all]
 //!              [--live] [--journal DIR] [--checkpoint-every N] [--plane-capacity N]
 //! mel resume   --journal DIR
+//! mel lint     [--format human|json] [--baseline FILE] [PATHS…]
 //! mel info
 //! ```
 
@@ -60,6 +61,7 @@ fn main() {
         Some("bench") => cmd_bench(&args),
         Some("trace") => cmd_trace(&args),
         Some("resume") => cmd_resume(&args),
+        Some("lint") => cmd_lint(&args),
         Some("info") => cmd_info(),
         _ => {
             print_help();
@@ -118,6 +120,11 @@ fn print_help() {
             name: "resume",
             about: "resume a killed --live run from its journal + last checkpoint, bit-for-bit",
             usage: "--journal results/journal",
+        },
+        Command {
+            name: "lint",
+            about: "self-hosted determinism & robustness analyzer (D1-D4 R1 C1 C2; see README)",
+            usage: "--format json --baseline results/lint-baseline.json rust/src",
         },
         Command { name: "info", about: "build/runtime information", usage: "" },
     ];
@@ -189,6 +196,7 @@ fn cmd_solve(args: &Args) -> i32 {
     ])
     .align(0, mel::util::table::Align::Left);
     for policy in policies {
+        // mel-lint: allow(D3) — CLI solve-latency display only; never feeds sim state
         let t0 = std::time::Instant::now();
         match policy.allocator().allocate(&problem) {
             Ok(a) => {
@@ -1099,4 +1107,55 @@ fn cmd_sweep(args: &Args) -> i32 {
         println!("wrote {path}");
     }
     0
+}
+
+// ---------------------------------------------------------------------
+// self-hosted static analysis (rust/src/analysis/)
+// ---------------------------------------------------------------------
+
+fn cmd_lint(args: &Args) -> i32 {
+    use mel::analysis;
+    let format = args.get_str("format", "human");
+    if format != "human" && format != "json" {
+        eprintln!("mel: usage error: --format must be human|json, got {format:?}");
+        return 2;
+    }
+    let baseline = match args.opt_str("baseline") {
+        None => None,
+        Some(path) => {
+            let text = match std::fs::read_to_string(path) {
+                Ok(t) => t,
+                Err(e) => {
+                    eprintln!("mel: usage error: cannot read --baseline {path}: {e}");
+                    return 2;
+                }
+            };
+            match analysis::load_baseline(&text) {
+                Ok(b) => Some(b),
+                Err(e) => {
+                    eprintln!("mel: usage error: bad --baseline {path}: {e}");
+                    return 2;
+                }
+            }
+        }
+    };
+    let paths: Vec<std::path::PathBuf> =
+        args.positionals().iter().skip(1).map(std::path::PathBuf::from).collect();
+    let cfg = analysis::LintConfig::default();
+    let mut report = match analysis::lint_tree(std::path::Path::new("."), &paths, &cfg) {
+        Ok(r) => r,
+        Err(e) => {
+            eprintln!("mel: usage error: {e}");
+            return 2;
+        }
+    };
+    if let Some(b) = &baseline {
+        analysis::apply_baseline(&mut report, b);
+    }
+    if format == "json" {
+        println!("{}", report.to_json().to_pretty());
+    } else {
+        print!("{}", report.render_human());
+    }
+    report.exit_code()
 }

@@ -42,7 +42,7 @@ impl Poly {
     }
 
     fn trim(&mut self) {
-        while self.c.len() > 1 && *self.c.last().unwrap() == 0.0 {
+        while self.c.len() > 1 && self.c.last() == Some(&0.0) {
             self.c.pop();
         }
     }
@@ -121,7 +121,7 @@ impl Poly {
             return vec![];
         }
         // normalize to monic
-        let lead = *self.c.last().unwrap();
+        let lead = self.c.last().copied().unwrap_or(0.0);
         assert!(lead != 0.0);
         let monic: Vec<f64> = self.c.iter().map(|&ci| ci / lead).collect();
         let poly = Poly { c: monic };
@@ -168,7 +168,7 @@ impl Poly {
             .filter(|z| z.im.abs() < imag_tol * (1.0 + z.re.abs()))
             .map(|z| z.re)
             .collect();
-        rs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        rs.sort_by(|a, b| a.total_cmp(b));
         rs.dedup_by(|a, b| (*a - *b).abs() < 1e-9 * (1.0 + a.abs()));
         rs
     }
@@ -299,7 +299,7 @@ mod tests {
         let tau = rs
             .into_iter()
             .filter(|&t| t > 0.0)
-            .min_by(|x, y| x.partial_cmp(y).unwrap())
+            .min_by(|x, y| x.total_cmp(y))
             .expect("positive root exists");
         let g: f64 = a.iter().zip(&b).map(|(&ai, &bi)| ai / (tau + bi)).sum();
         assert!((g - d).abs() < 1e-6 * d, "g={g}");

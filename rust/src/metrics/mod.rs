@@ -106,22 +106,29 @@ impl Metrics {
         Self::default()
     }
 
+    /// Poison-tolerant guard: every writer completes its map mutation
+    /// before releasing the lock, so a poisoned mutex only means some
+    /// *other* thread panicked mid-unrelated-work — recover and go on.
+    fn lock(&self) -> std::sync::MutexGuard<'_, Inner> {
+        self.inner.lock().unwrap_or_else(std::sync::PoisonError::into_inner)
+    }
+
     pub fn inc(&self, name: &str, by: u64) {
-        let mut g = self.inner.lock().unwrap();
+        let mut g = self.lock();
         *g.counters.entry(name.into()).or_default() += by;
     }
 
     pub fn gauge(&self, name: &str, v: f64) {
-        self.inner.lock().unwrap().gauges.insert(name.into(), v);
+        self.lock().gauges.insert(name.into(), v);
     }
 
     pub fn observe(&self, name: &str, v: f64) {
-        let mut g = self.inner.lock().unwrap();
+        let mut g = self.lock();
         g.summaries.entry(name.into()).or_default().push(v);
     }
 
     pub fn record(&self, series: &str, x: f64, y: f64) {
-        let mut g = self.inner.lock().unwrap();
+        let mut g = self.lock();
         g.series.entry(series.into()).or_default().push((x, y));
     }
 
@@ -130,7 +137,7 @@ impl Metrics {
     /// for event-driven (staggered, per-learner) orchestration, where
     /// "cycle number" is no longer a shared clock. Returns the new total.
     pub fn inc_series(&self, counter: &str, series: &str, t: f64, by: u64) -> u64 {
-        let mut g = self.inner.lock().unwrap();
+        let mut g = self.lock();
         let c = g.counters.entry(counter.into()).or_default();
         *c += by;
         let total = *c;
@@ -139,31 +146,31 @@ impl Metrics {
     }
 
     pub fn counter(&self, name: &str) -> u64 {
-        self.inner.lock().unwrap().counters.get(name).copied().unwrap_or(0)
+        self.lock().counters.get(name).copied().unwrap_or(0)
     }
 
     pub fn gauge_value(&self, name: &str) -> Option<f64> {
-        self.inner.lock().unwrap().gauges.get(name).copied()
+        self.lock().gauges.get(name).copied()
     }
 
     pub fn summary_mean(&self, name: &str) -> Option<f64> {
-        let g = self.inner.lock().unwrap();
+        let g = self.lock();
         g.summaries.get(name).filter(|s| s.count() > 0).map(|s| s.mean())
     }
 
     pub fn series(&self, name: &str) -> Vec<(f64, f64)> {
-        self.inner.lock().unwrap().series.get(name).cloned().unwrap_or_default()
+        self.lock().series.get(name).cloned().unwrap_or_default()
     }
 
     /// Last point of a named series, if any — the final value of a
     /// time-keyed curve (e.g. a run's closing global accuracy).
     pub fn series_last(&self, name: &str) -> Option<(f64, f64)> {
-        self.inner.lock().unwrap().series.get(name).and_then(|s| s.last().copied())
+        self.lock().series.get(name).and_then(|s| s.last().copied())
     }
 
     /// Export everything as JSON (deterministic key order).
     pub fn to_json(&self) -> Json {
-        let g = self.inner.lock().unwrap();
+        let g = self.lock();
         Json::obj(vec![
             (
                 "counters",
@@ -213,7 +220,7 @@ impl Metrics {
                 .map(|c| if c.is_ascii_alphanumeric() || c == '_' || c == ':' { c } else { '_' })
                 .collect()
         }
-        let g = self.inner.lock().unwrap();
+        let g = self.lock();
         let mut out = String::new();
         for (k, &v) in &g.counters {
             let n = sanitize(k);
@@ -266,7 +273,7 @@ impl Metrics {
     /// as [`merge_sorted`], so permuting imports cannot change the
     /// stored series.
     pub fn import_series(&self, name: &str, pts: &[(f64, f64)]) {
-        let mut g = self.inner.lock().unwrap();
+        let mut g = self.lock();
         let s = g.series.entry(name.into()).or_default();
         s.extend_from_slice(pts);
         s.sort_by(|a, b| a.0.total_cmp(&b.0).then(a.1.total_cmp(&b.1)));
@@ -276,7 +283,7 @@ impl Metrics {
     /// rebuild the registry per run (e.g. `cluster::Cluster::run`) call
     /// this so repeated runs do not accumulate stale totals.
     pub fn clear(&self) {
-        let mut g = self.inner.lock().unwrap();
+        let mut g = self.lock();
         g.counters.clear();
         g.gauges.clear();
         g.summaries.clear();

@@ -76,6 +76,7 @@ impl ModelSpec {
     /// training fast.
     pub fn with_hidden(mut self, hidden: &[usize]) -> Self {
         assert!(hidden.iter().all(|&w| w > 0), "hidden widths must be positive");
+        // mel-lint: allow(R1) — every constructor builds at least [features, classes]
         let classes = *self.layers.last().expect("model has layers");
         let mut layers = Vec::with_capacity(hidden.len() + 2);
         layers.push(self.features);

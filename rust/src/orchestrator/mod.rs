@@ -308,6 +308,7 @@ impl Orchestrator {
                 return Ok((a.clone(), leases));
             }
         }
+        // mel-lint: allow(D3) — solver wall-latency metric only; simulated time never reads this clock
         let t0 = std::time::Instant::now();
         let solve_span = crate::trace::wall_span(
             "alloc",

@@ -199,6 +199,7 @@ impl Engine {
         spawn(BackendKind::Native, None, || {
             Ok(Box::new(NativeBackend::new()) as Box<dyn Backend>)
         })
+        // mel-lint: allow(R1) — the factory above is infallible, so spawn can only report Ok
         .expect("native backend construction cannot fail")
     }
 
@@ -209,6 +210,7 @@ impl Engine {
         spawn(BackendKind::Native, None, move || {
             Ok(Box::new(NativeBackend::with_pool(pool)) as Box<dyn Backend>)
         })
+        // mel-lint: allow(R1) — the factory above is infallible, so spawn can only report Ok
         .expect("native backend construction cannot fail")
     }
 
@@ -278,6 +280,7 @@ where
 {
     let (tx, rx) = mpsc::channel::<Request>();
     let (ready_tx, ready_rx) = mpsc::channel::<Result<(), String>>();
+    // mel-lint: allow(D4) — one engine thread per backend, not compute fan-out; tiles still go through the pool
     let join = std::thread::Builder::new()
         .name(format!("mel-engine-{}", kind.label()))
         .spawn(move || match factory() {
@@ -290,6 +293,7 @@ where
                 fail_all(rx, &e);
             }
         })
+        // mel-lint: allow(R1) — thread-spawn failure this early is unrecoverable for the process
         .expect("spawn engine thread");
     match ready_rx.recv() {
         Ok(Ok(())) => Ok(Engine { handle: EngineHandle { tx }, join: Some(join), kind, manifest }),

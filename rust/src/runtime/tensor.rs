@@ -66,6 +66,7 @@ impl Tensor {
     pub fn as_f32(&self) -> &[f32] {
         match &self.data {
             TensorData::F32(v) => v,
+            // mel-lint: allow(R1) — dtype mismatch is a caller programming error; the Call layer fixes dtypes at construction
             _ => panic!("tensor is {} not float32", self.dtype()),
         }
     }
@@ -73,6 +74,7 @@ impl Tensor {
     pub fn as_f32_mut(&mut self) -> &mut [f32] {
         match &mut self.data {
             TensorData::F32(v) => v,
+            // mel-lint: allow(R1) — dtype mismatch is a caller programming error; the Call layer fixes dtypes at construction
             TensorData::I32(_) => panic!("tensor is int32 not float32"),
         }
     }
@@ -80,6 +82,7 @@ impl Tensor {
     pub fn as_i32(&self) -> &[i32] {
         match &self.data {
             TensorData::I32(v) => v,
+            // mel-lint: allow(R1) — dtype mismatch is a caller programming error; the Call layer fixes dtypes at construction
             _ => panic!("tensor is {} not int32", self.dtype()),
         }
     }

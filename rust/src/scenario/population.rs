@@ -198,6 +198,7 @@ impl PopulationSpec {
             }
             offset += g.count;
         }
+        // mel-lint: allow(R1) — out-of-range member index is an API-contract violation, documented on this method
         panic!("member index {i} out of population of {}", offset);
     }
 

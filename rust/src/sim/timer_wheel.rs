@@ -114,6 +114,7 @@ impl<E> TimerWheel<E> {
         if self.pending.is_empty() && !self.advance() {
             return None;
         }
+        // mel-lint: allow(R1) — the guard above returned unless advance() refilled `pending`
         let item = self.pending.pop().expect("advance() refills pending");
         self.len -= 1;
         Some((item.time, item.event))

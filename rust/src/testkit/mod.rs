@@ -53,7 +53,8 @@ pub fn zero_param_mlp_inputs(
         inputs.push(Tensor::zeros_f32(vec![w[1]]));
     }
     let f = layers[0];
-    let classes = *layers.last().unwrap();
+    // mel-lint: allow(R1) — the assert above requires at least two layers
+    let classes = *layers.last().expect("layers checked non-empty");
     let x: Vec<f32> = (0..batch * f).map(|i| ((i % 7) as f32) / 7.0).collect();
     let y: Vec<i32> = (0..batch).map(|i| (i % classes) as i32).collect();
     let mut mask = vec![1.0f32; real];
@@ -99,6 +100,7 @@ pub fn forall<T: std::fmt::Debug, G: Gen<T>>(name: &str, g: &G, prop: impl Fn(&T
         let v = g.gen(&mut rng);
         if !prop(&v) {
             let min = shrink_loop(g, v, &prop);
+            // mel-lint: allow(R1) — a failed property must abort the test run with its counterexample
             panic!(
                 "property {name:?} failed (case {case}, seed {seed}).\n\
                  minimal counterexample: {min:#?}"

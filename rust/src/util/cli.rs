@@ -63,12 +63,7 @@ impl Args {
                 }
                 if let Some((k, v)) = body.split_once('=') {
                     out.options.insert(k.to_string(), v.to_string());
-                } else if it
-                    .peek()
-                    .map(|n| !n.starts_with("--"))
-                    .unwrap_or(false)
-                {
-                    let v = it.next().unwrap();
+                } else if let Some(v) = it.next_if(|n| !n.starts_with("--")) {
                     out.options.insert(body.to_string(), v);
                 } else {
                     out.flags.push(body.to_string());

@@ -26,7 +26,7 @@ fn mel_code(args: &[&str]) -> (String, String, Option<i32>) {
 fn help_lists_commands() {
     let (stdout, _, ok) = mel(&[]);
     assert!(ok);
-    for cmd in ["solve", "figure", "train", "scenario", "trace", "resume", "info"] {
+    for cmd in ["solve", "figure", "train", "scenario", "trace", "resume", "lint", "info"] {
         assert!(stdout.contains(cmd), "missing {cmd} in help:\n{stdout}");
     }
 }
@@ -513,6 +513,73 @@ fn trace_live_writes_journal_artifacts_and_resume_replays_them() {
     assert_eq!(code, Some(0), "stderr: {stderr}");
     assert!(stdout.contains("resumed from"), "{stdout}");
     let _ = std::fs::remove_dir_all(&base);
+}
+
+#[test]
+fn lint_clean_tree_and_json_output() {
+    // the tree lints itself clean (exit 0); JSON output parses and has
+    // the baseline-file shape
+    let (stdout, stderr, code) = mel_code(&["lint", "--format", "json"]);
+    assert_eq!(code, Some(0), "stderr: {stderr}\nstdout: {stdout}");
+    let v = mel::util::json::Json::parse(&stdout).expect("lint JSON parses");
+    assert_eq!(v.get("format").unwrap().as_u64().unwrap(), 1);
+    assert!(v.get("files_scanned").unwrap().as_u64().unwrap() > 50, "{stdout}");
+    assert!(v.get("findings").unwrap().as_arr().unwrap().is_empty(), "{stdout}");
+    // human mode agrees
+    let (stdout, _, code) = mel_code(&["lint"]);
+    assert_eq!(code, Some(0));
+    assert!(stdout.contains("mel lint: clean"), "{stdout}");
+}
+
+#[test]
+fn lint_usage_errors_exit_2() {
+    let (_, stderr, code) = mel_code(&["lint", "--format", "bogus"]);
+    assert_eq!(code, Some(2), "stderr: {stderr}");
+    assert!(stderr.contains("--format must be human|json"), "{stderr}");
+    // unreadable baseline path
+    let (_, stderr, code) = mel_code(&["lint", "--baseline", "/no/such/baseline.json"]);
+    assert_eq!(code, Some(2), "stderr: {stderr}");
+    assert!(stderr.contains("--baseline"), "{stderr}");
+    // malformed baseline content
+    let dir = std::env::temp_dir().join(format!("mel-lint-base-{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let bad = dir.join("bad.json");
+    std::fs::write(&bad, "not json").unwrap();
+    let (_, stderr, code) = mel_code(&["lint", "--baseline", bad.to_str().unwrap()]);
+    assert_eq!(code, Some(2), "stderr: {stderr}");
+    assert!(stderr.contains("bad --baseline"), "{stderr}");
+    // nonexistent explicit path
+    let (_, stderr, code) = mel_code(&["lint", "rust/src/no_such_file.rs"]);
+    assert_eq!(code, Some(2), "stderr: {stderr}");
+    assert!(stderr.contains("no such file or directory"), "{stderr}");
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn lint_findings_exit_1_and_baseline_silences_them() {
+    let dir = std::env::temp_dir().join(format!("mel-lint-fixture-{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let bad = dir.join("bad_fixture.rs");
+    std::fs::write(
+        &bad,
+        "pub fn f(v: &mut Vec<f64>) {\n    v.sort_by(|a, b| a.partial_cmp(b).unwrap());\n}\n",
+    )
+    .unwrap();
+    let (stdout, stderr, code) = mel_code(&["lint", bad.to_str().unwrap()]);
+    assert_eq!(code, Some(1), "stderr: {stderr}\nstdout: {stdout}");
+    assert!(stdout.contains("D1"), "{stdout}");
+    assert!(stdout.contains("bad_fixture.rs:2"), "{stdout}");
+    // a failing run's JSON output doubles as a baseline that silences
+    // exactly those findings
+    let (json, _, code) = mel_code(&["lint", "--format", "json", bad.to_str().unwrap()]);
+    assert_eq!(code, Some(1));
+    let base = dir.join("baseline.json");
+    std::fs::write(&base, &json).unwrap();
+    let (stdout, _, code) =
+        mel_code(&["lint", "--baseline", base.to_str().unwrap(), bad.to_str().unwrap()]);
+    assert_eq!(code, Some(0), "{stdout}");
+    assert!(stdout.contains("baselined"), "{stdout}");
+    let _ = std::fs::remove_dir_all(&dir);
 }
 
 #[test]

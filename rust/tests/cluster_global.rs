@@ -115,7 +115,7 @@ fn one_shard_per_update_replay_matches_trainer_bit_for_bit() {
     );
     let single = orch.run().expect("feasible orchestrator run");
     let mut ref_sorted = single.updates.clone();
-    ref_sorted.sort_by(|a, b| a.uploaded_at.partial_cmp(&b.uploaded_at).unwrap());
+    ref_sorted.sort_by(|a, b| a.uploaded_at.total_cmp(&b.uploaded_at));
     assert_eq!(report.updates.len(), ref_sorted.len());
     for ((shard, a), b) in report.updates.iter().zip(&ref_sorted) {
         assert_eq!(*shard, 0);

@@ -1,0 +1,314 @@
+//! Fixture tests for the `mel lint` analyzer (`rust/src/analysis/`):
+//! every rule fires on a seeded violation at the exact `file:line`
+//! anchor, rules never fire inside strings or comments, suppression
+//! pragmas work (and malformed ones are unsuppressible findings), the
+//! Cargo target cross-check catches orphans and ghosts, and — the
+//! self-hosting payoff — the real tree scans clean.
+
+use mel::analysis::project::{check_cargo_targets, check_env_registry, parse_cargo_targets};
+use mel::analysis::rules::string_literals;
+use mel::analysis::{lint_source, lint_tree, Finding, LintConfig, RuleId};
+use std::path::Path;
+
+fn cfg() -> LintConfig {
+    LintConfig::default()
+}
+
+fn lines_for(findings: &[Finding], rule: RuleId) -> Vec<usize> {
+    findings.iter().filter(|f| f.rule == rule).map(|f| f.line).collect()
+}
+
+// ---------------------------------------------------------------- D1
+
+#[test]
+fn d1_flags_partial_cmp_unwrap_and_expect_at_exact_lines() {
+    let src = "fn f(v: &mut Vec<f64>) {\n\
+               \x20   v.sort_by(|a, b| a.partial_cmp(b).unwrap());\n\
+               \x20   v.sort_by(|a, b| a.partial_cmp(b).expect(\"cmp\"));\n\
+               }\n";
+    let lint = lint_source("rust/src/alloc/x.rs", src, &cfg());
+    assert_eq!(lines_for(&lint.findings, RuleId::D1), vec![2, 3]);
+}
+
+#[test]
+fn d1_accepts_total_cmp_and_bare_partial_cmp() {
+    let src = "fn f(v: &mut Vec<f64>) -> Option<std::cmp::Ordering> {\n\
+               \x20   v.sort_by(|a, b| a.total_cmp(b));\n\
+               \x20   v[0].partial_cmp(&v[1])\n\
+               }\n";
+    let lint = lint_source("rust/src/alloc/x.rs", src, &cfg());
+    assert!(lines_for(&lint.findings, RuleId::D1).is_empty(), "{:?}", lint.findings);
+}
+
+// ---------------------------------------------------------------- D2
+
+#[test]
+fn d2_flags_for_loop_and_method_iteration_over_hashmap() {
+    let src = "use std::collections::HashMap;\n\
+               fn f(m: HashMap<u32, u32>) -> u32 {\n\
+               \x20   let mut s = 0;\n\
+               \x20   for (_k, v) in &m {\n\
+               \x20       s += *v;\n\
+               \x20   }\n\
+               \x20   s\n\
+               }\n\
+               fn g(m: HashMap<String, u32>) -> usize {\n\
+               \x20   m.keys().count()\n\
+               }\n";
+    let lint = lint_source("rust/src/cluster/x.rs", src, &cfg());
+    assert_eq!(lines_for(&lint.findings, RuleId::D2), vec![4, 10]);
+}
+
+#[test]
+fn d2_accepts_lookups_and_btreemap_iteration() {
+    let src = "use std::collections::{BTreeMap, HashMap};\n\
+               fn f(h: HashMap<u32, u32>, b: BTreeMap<u32, u32>) -> u32 {\n\
+               \x20   let mut s = h.get(&3).copied().unwrap_or(0);\n\
+               \x20   s += h.len() as u32;\n\
+               \x20   for (_k, v) in &b {\n\
+               \x20       s += *v;\n\
+               \x20   }\n\
+               \x20   s\n\
+               }\n";
+    let lint = lint_source("rust/src/cluster/x.rs", src, &cfg());
+    assert!(lines_for(&lint.findings, RuleId::D2).is_empty(), "{:?}", lint.findings);
+}
+
+// ---------------------------------------------------------------- D3
+
+#[test]
+fn d3_confines_wall_clock_reads_to_sanctioned_modules() {
+    let src = "pub fn f() -> f64 {\n\
+               \x20   let t0 = std::time::Instant::now();\n\
+               \x20   t0.elapsed().as_secs_f64()\n\
+               }\n\
+               pub fn g() -> std::time::SystemTime {\n\
+               \x20   std::time::SystemTime::now()\n\
+               }\n";
+    let lint = lint_source("rust/src/sim/x.rs", src, &cfg());
+    assert_eq!(lines_for(&lint.findings, RuleId::D3), vec![2, 6]);
+    // the same source is sanctioned inside the tracing plane
+    let lint = lint_source("rust/src/trace/x.rs", src, &cfg());
+    assert!(lines_for(&lint.findings, RuleId::D3).is_empty());
+}
+
+// ---------------------------------------------------------------- D4
+
+#[test]
+fn d4_confines_thread_creation_to_sanctioned_modules() {
+    let src = "pub fn f() {\n\
+               \x20   std::thread::spawn(|| {}).join().ok();\n\
+               }\n";
+    let lint = lint_source("rust/src/alloc/x.rs", src, &cfg());
+    assert_eq!(lines_for(&lint.findings, RuleId::D4), vec![2]);
+    let lint = lint_source("rust/src/compute/pool.rs", src, &cfg());
+    assert!(lines_for(&lint.findings, RuleId::D4).is_empty());
+}
+
+// ---------------------------------------------------------------- R1
+
+#[test]
+fn r1_flags_unwrap_expect_panic_in_library_code() {
+    let src = "pub fn f(v: &[u32]) -> u32 {\n\
+               \x20   let a = v.first().unwrap();\n\
+               \x20   let b = v.last().expect(\"non-empty\");\n\
+               \x20   if *a > *b { panic!(\"bad\"); }\n\
+               \x20   a + b\n\
+               }\n";
+    let lint = lint_source("rust/src/models/x.rs", src, &cfg());
+    assert_eq!(lines_for(&lint.findings, RuleId::R1), vec![2, 3, 4]);
+}
+
+#[test]
+fn r1_accepts_fallible_variants() {
+    let src = "pub fn f(v: &[u32]) -> u32 {\n\
+               \x20   let a = v.first().copied().unwrap_or(0);\n\
+               \x20   let b = v.last().copied().unwrap_or_else(|| 0);\n\
+               \x20   let c: u32 = v.iter().sum::<u32>().checked_div(2).unwrap_or_default();\n\
+               \x20   a + b + c\n\
+               }\n";
+    let lint = lint_source("rust/src/models/x.rs", src, &cfg());
+    assert!(lines_for(&lint.findings, RuleId::R1).is_empty(), "{:?}", lint.findings);
+}
+
+#[test]
+fn r1_exempts_main_rs_and_cfg_test_regions() {
+    let src = "pub fn f(v: &[u32]) -> u32 {\n\
+               \x20   *v.first().unwrap()\n\
+               }\n";
+    let lint = lint_source("rust/src/main.rs", src, &cfg());
+    assert!(lint.findings.is_empty(), "{:?}", lint.findings);
+
+    let src = "pub fn lib_fn() -> u32 { 1 }\n\
+               #[cfg(test)]\n\
+               mod tests {\n\
+               \x20   #[test]\n\
+               \x20   fn t() {\n\
+               \x20       let v = vec![1u32];\n\
+               \x20       assert_eq!(*v.first().unwrap(), 1);\n\
+               \x20   }\n\
+               }\n";
+    let lint = lint_source("rust/src/models/x.rs", src, &cfg());
+    assert!(lint.findings.is_empty(), "{:?}", lint.findings);
+}
+
+// ------------------------------------------------- strings & comments
+
+#[test]
+fn rules_never_fire_inside_strings_or_comments() {
+    let src = "pub fn f() -> &'static str {\n\
+               \x20   // a doc note may say partial_cmp(x).unwrap() freely\n\
+               \x20   /* or panic!(\"...\") or std::thread::spawn */\n\
+               \x20   \"partial_cmp(a).unwrap() panic! Instant::now thread::spawn\"\n\
+               }\n";
+    let lint = lint_source("rust/src/alloc/x.rs", src, &cfg());
+    assert!(lint.findings.is_empty(), "{:?}", lint.findings);
+}
+
+// ---------------------------------------------------------- pragmas
+
+#[test]
+fn justified_pragmas_suppress_line_and_file_wide() {
+    // full-line pragma covers the next code line
+    let src = "pub fn f(v: &[u32]) -> u32 {\n\
+               \x20   // mel-lint: allow(R1) — fixture invariant, always non-empty\n\
+               \x20   *v.first().unwrap()\n\
+               }\n";
+    let lint = lint_source("rust/src/models/x.rs", src, &cfg());
+    assert!(lint.findings.is_empty(), "{:?}", lint.findings);
+    assert_eq!(lint.suppressed, 1);
+
+    // trailing pragma covers its own line
+    let src = "pub fn f(v: &[u32]) -> u32 {\n\
+               \x20   *v.first().unwrap() // mel-lint: allow(R1) — fixture invariant\n\
+               }\n";
+    let lint = lint_source("rust/src/models/x.rs", src, &cfg());
+    assert!(lint.findings.is_empty(), "{:?}", lint.findings);
+    assert_eq!(lint.suppressed, 1);
+
+    // allow-file exempts the whole file for the named rule only
+    let src = "// mel-lint: allow-file(R1) — generated fixture\n\
+               pub fn f(v: &mut Vec<f64>) -> f64 {\n\
+               \x20   v.sort_by(|a, b| a.partial_cmp(b).unwrap());\n\
+               \x20   *v.first().unwrap()\n\
+               }\n";
+    let lint = lint_source("rust/src/models/x.rs", src, &cfg());
+    assert_eq!(lines_for(&lint.findings, RuleId::D1), vec![3], "D1 must survive allow-file(R1)");
+    assert_eq!(lint.suppressed, 2, "both unwraps suppressed by allow-file(R1)");
+}
+
+#[test]
+fn pragma_without_justification_or_with_unknown_rule_is_a_finding() {
+    let src = "pub fn f(v: &[u32]) -> u32 {\n\
+               \x20   // mel-lint: allow(R1)\n\
+               \x20   *v.first().unwrap()\n\
+               }\n";
+    let lint = lint_source("rust/src/models/x.rs", src, &cfg());
+    // the pragma is rejected, so the unwrap still fires AND the pragma
+    // itself is reported
+    assert_eq!(lines_for(&lint.findings, RuleId::R1), vec![3]);
+    assert_eq!(lines_for(&lint.findings, RuleId::Pragma), vec![2]);
+
+    let src = "pub fn f() {\n\
+               \x20   // mel-lint: allow(Z9) — no such rule\n\
+               }\n";
+    let lint = lint_source("rust/src/models/x.rs", src, &cfg());
+    assert_eq!(lines_for(&lint.findings, RuleId::Pragma), vec![2]);
+}
+
+// ---------------------------------------------------------------- C1
+
+#[test]
+fn c1_cross_check_catches_orphans_and_ghosts() {
+    let cargo = "[package]\n\
+                 name = \"x\"\n\
+                 \n\
+                 [[test]]\n\
+                 name = \"a\"\n\
+                 path = \"rust/tests/a.rs\"\n\
+                 \n\
+                 [[test]]\n\
+                 name = \"ghost\"\n\
+                 path = \"rust/tests/ghost.rs\"\n\
+                 \n\
+                 [[bench]]\n\
+                 name = \"b\"\n\
+                 path = \"benches/b.rs\"\n";
+    let targets = parse_cargo_targets(cargo);
+    assert_eq!(targets.len(), 3);
+
+    let tests = vec!["rust/tests/a.rs".to_string(), "rust/tests/orphan.rs".to_string()];
+    let benches = vec!["benches/b.rs".to_string()];
+    let findings = check_cargo_targets("Cargo.toml", cargo, &tests, &benches);
+    assert_eq!(findings.len(), 2, "{findings:?}");
+    // the orphan test file anchors at its own first line
+    let orphan = findings.iter().find(|f| f.path == "rust/tests/orphan.rs").expect("orphan");
+    assert_eq!((orphan.rule, orphan.line), (RuleId::C1, 1));
+    // the ghost registration anchors at its Cargo.toml path line
+    let ghost = findings.iter().find(|f| f.path == "Cargo.toml").expect("ghost");
+    assert_eq!((ghost.rule, ghost.line), (RuleId::C1, 10));
+    assert!(ghost.message.contains("ghost.rs"), "{}", ghost.message);
+}
+
+// ---------------------------------------------------------------- C2
+
+#[test]
+fn c2_flags_undocumented_mel_vars_only() {
+    let src = "pub fn f() {\n\
+               \x20   let _ = std::env::var(\"MEL_SECRET_KNOB\");\n\
+               \x20   let _ = std::env::var(\"MEL_DOCUMENTED\");\n\
+               \x20   let _ = std::env::var(\"OTHER_VAR\");\n\
+               \x20   let _ = \"MEL_\";\n\
+               }\n";
+    let readme = "docs mention MEL_DOCUMENTED here";
+    let files = vec![("rust/src/x.rs".to_string(), string_literals(src))];
+    let findings = check_env_registry(&files, readme);
+    assert_eq!(findings.len(), 1, "{findings:?}");
+    assert_eq!(findings[0].rule, RuleId::C2);
+    assert_eq!(findings[0].line, 2);
+    assert!(findings[0].message.contains("MEL_SECRET_KNOB"));
+}
+
+// ------------------------------------------------------- self-scan
+
+#[test]
+fn the_real_tree_is_self_clean() {
+    let root = Path::new(env!("CARGO_MANIFEST_DIR"));
+    let report = lint_tree(root, &[], &LintConfig::default()).expect("tree scan");
+    assert!(report.files_scanned > 50, "scanned only {} files", report.files_scanned);
+    assert!(
+        report.findings.is_empty(),
+        "the tree must lint clean; found:\n{}",
+        report.render_human()
+    );
+    assert_eq!(report.exit_code(), 0);
+}
+
+#[test]
+fn tree_reports_are_deterministic() {
+    let root = Path::new(env!("CARGO_MANIFEST_DIR"));
+    let a = lint_tree(root, &[], &LintConfig::default()).expect("scan a");
+    let b = lint_tree(root, &[], &LintConfig::default()).expect("scan b");
+    assert_eq!(a.to_json().to_pretty(), b.to_json().to_pretty());
+    let sorted = {
+        let mut s = a.findings.clone();
+        s.sort();
+        s
+    };
+    assert_eq!(a.findings, sorted, "findings must come out sorted");
+}
+
+#[test]
+fn explicit_path_mode_scans_only_the_given_files() {
+    let root = Path::new(env!("CARGO_MANIFEST_DIR"));
+    let report = lint_tree(
+        root,
+        &["rust/src/analysis/rules.rs".into()],
+        &LintConfig::default(),
+    )
+    .expect("single-file scan");
+    assert_eq!(report.files_scanned, 1);
+    assert_eq!(report.exit_code(), 0, "{}", report.render_human());
+    let err = lint_tree(root, &["rust/src/does_not_exist.rs".into()], &LintConfig::default());
+    assert!(err.is_err());
+}

@@ -135,7 +135,7 @@ fn single_shard_zero_churn_cluster_matches_sync_planner_bit_for_bit() {
         // the cluster merges updates by upload time (stable); apply the
         // same ordering to the reference stream before comparing
         let mut ref_sorted: Vec<_> = reference.updates.clone();
-        ref_sorted.sort_by(|a, b| a.uploaded_at.partial_cmp(&b.uploaded_at).unwrap());
+        ref_sorted.sort_by(|a, b| a.uploaded_at.total_cmp(&b.uploaded_at));
         for ((_, a), b) in cluster.updates.iter().zip(&ref_sorted) {
             assert_eq!(a.learner, b.learner);
             assert_eq!(a.uploaded_at, b.uploaded_at, "seed {seed}");
